@@ -1,0 +1,83 @@
+//! Numerical-solver example — the paper's §VII future work, implemented:
+//! blocked LU factorization and Newton–Schulz inversion whose O(n³)
+//! work runs as systolic-engine GEMMs.
+//!
+//! Prints, for growing problem sizes, the share of FLOPs that lands on
+//! the (simulated) accelerator and the simulated FPGA time of the GEMM
+//! stream — the quantitative case for "solvers entirely in FPGA logic".
+//!
+//! ```sh
+//! cargo run --release --example lu_solver
+//! ```
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign};
+use systo3d::gemm::{matmul_blocked, Matrix};
+use systo3d::memory::layout::transpose_f32;
+use systo3d::solver::{blocked_lu, invert};
+use systo3d::systolic::ArraySize;
+
+fn dd_matrix(n: usize, seed: u64) -> Matrix {
+    let mut m = Matrix::random(n, n, seed);
+    for i in 0..n {
+        let v = m.at(i, i);
+        m.set(i, i, v + n as f32);
+    }
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    // A scaled design with the G-geometry so small trailing blocks
+    // conform to the blocking (the full design needs d1=512 multiples).
+    let design = OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(16, 16, 4, 2), 64, 64),
+        fmax_mhz: 398.0,
+        controller_efficiency: 0.97,
+    };
+
+    println!("=== blocked LU (panel on host, trailing update on accelerator) ===");
+    println!(
+        "{:>6} {:>5} | {:>12} {:>12} {:>8} | {:>10} {:>12}",
+        "n", "nb", "GEMM FLOPs", "host FLOPs", "accel%", "recon err", "sim FPGA (s)"
+    );
+    for n in [64usize, 128, 256, 512] {
+        let a = dd_matrix(n, n as u64);
+        let rep = blocked_lu(&a, 64.min(n / 2), Some(design));
+        let err = rep.reconstruct().rel_fro_error(&a);
+        anyhow::ensure!(err < 1e-3, "LU reconstruction failed at n={n}: {err}");
+        println!(
+            "{:>6} {:>5} | {:>12} {:>12} {:>7.1}% | {:>10.2e} {:>12.6}",
+            n,
+            rep.nb,
+            rep.gemm_flops,
+            rep.host_flops,
+            rep.accel_share() * 100.0,
+            err,
+            rep.sim_fpga_seconds
+        );
+    }
+
+    println!("\n=== Newton–Schulz inversion (pure chained GEMMs) ===");
+    println!(
+        "{:>6} | {:>5} {:>12} {:>12} {:>12}",
+        "n", "iters", "residual", "GEMM FLOPs", "sim FPGA (s)"
+    );
+    for n in [64usize, 128, 256] {
+        // SPD + n·I: safely inside the convergence region.
+        let m = Matrix::random(n, n, 7 + n as u64);
+        let mt = Matrix::from_vec(n, n, transpose_f32(&m.data, n, n));
+        let mut a = matmul_blocked(&m, &mt);
+        for i in 0..n {
+            let v = a.at(i, i) + n as f32;
+            a.set(i, i, v);
+        }
+        let rep = invert(&a, 1e-5, 80, Some(design));
+        anyhow::ensure!(rep.residual < 1e-4, "inversion stalled at n={n}");
+        println!(
+            "{:>6} | {:>5} {:>12.2e} {:>12} {:>12.6}",
+            n, rep.iterations, rep.residual, rep.gemm_flops, rep.sim_fpga_seconds
+        );
+    }
+
+    println!("\nlu_solver OK — the O(n³) work rides the systolic engine, as §VII envisions");
+    Ok(())
+}

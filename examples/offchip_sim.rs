@@ -1,0 +1,85 @@
+//! Off-chip matrix multiplication, end to end through the simulator
+//! stack — with cross-validation between the three model tiers:
+//!
+//! * tier 1: the cycle-accurate 3D array (`systolic::Array3dSim`),
+//! * tier 2: the event-level phase simulator (`blocked::OffchipSim`)
+//!   in functional mode (bitwise-identical accumulation),
+//! * tier 3: the closed-form model (eq. 19).
+//!
+//! Then it runs the full Table II/V sweeps and prints the phase
+//! timeline (Figure 3) for the chosen design.
+//!
+//! ```sh
+//! cargo run --release --example offchip_sim [-- --design G --d2 4096]
+//! ```
+
+use systo3d::blocked::{OffchipDesign, OffchipSim};
+use systo3d::cli::Args;
+use systo3d::dse::paper_catalog;
+use systo3d::gemm::Matrix;
+use systo3d::reports;
+use systo3d::systolic::{Array3dSim, ArraySize};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let id = args.get_str("design", "G").to_uppercase();
+    let d2 = args.get_u64("d2", 4096).map_err(anyhow::Error::msg)?;
+
+    // --- cross-validation on a scaled-down geometry ---------------------
+    let small = ArraySize::new(8, 4, 4, 2);
+    let blocking = systo3d::blocked::Level1Blocking::new(small, 16, 16);
+    let design = OffchipDesign { blocking, fmax_mhz: 400.0, controller_efficiency: 0.97 };
+    let a = Matrix::random(32, 16, 11);
+    let b = Matrix::random(16, 32, 12);
+    let ev = OffchipSim::new(design).simulate_functional(&a, &b);
+    let want = systo3d::gemm::matmul(&a, &b);
+    let err = ev.c.as_ref().unwrap().rel_fro_error(&want);
+    println!("tier-2 functional vs GEMM oracle: rel err {err:.2e}");
+    assert!(err < 1e-5);
+
+    // Tier 1 vs tier 2 on one level-1 block: bitwise agreement.
+    let a1 = Matrix::random(8, 8, 13);
+    let b1 = Matrix::random(8, 4, 14);
+    let cy = Array3dSim::new(small).multiply(&a1, &b1);
+    let blocking1 = systo3d::blocked::Level1Blocking::new(small, 8, 4);
+    let ev1 = OffchipSim::new(OffchipDesign { blocking: blocking1, ..design })
+        .simulate_functional(&a1, &b1);
+    assert_eq!(cy.c.data, ev1.c.unwrap().data, "tier 1 and tier 2 accumulation differ");
+    println!("tier-1 (cycle) vs tier-2 (event) accumulation: bitwise identical");
+
+    // --- the requested design at the requested size ---------------------
+    let spec = paper_catalog()
+        .into_iter()
+        .find(|d| d.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown design {id}"))?;
+    let blocking = spec
+        .level1()
+        .ok_or_else(|| anyhow::anyhow!("design {id} failed the fitter"))?;
+    anyhow::ensure!(
+        d2 % blocking.di1 as u64 == 0,
+        "d2 must be a multiple of {} for design {id}",
+        blocking.di1
+    );
+    let sim = OffchipSim::new(OffchipDesign {
+        blocking,
+        fmax_mhz: spec.fmax_mhz.unwrap(),
+        controller_efficiency: 0.97,
+    });
+    let dj2 = if blocking.di1 != blocking.dj1 { d2 * blocking.dj1 as u64 / blocking.di1 as u64 } else { d2 };
+    let r = sim.simulate(d2, dj2, d2);
+    println!(
+        "design {id} @ {d2}: {:.0} GFLOPS, e_D {:.3}, {:.4} s kernel time, c% {:.3}",
+        r.gflops, r.e_d, r.seconds, r.compute_fraction
+    );
+
+    // --- the design's full published sweep ------------------------------
+    if let Some(t) = reports::table_design_sweep(&id) {
+        println!("{t}");
+    } else {
+        println!("{}", reports::table5());
+    }
+
+    // --- Figure 3 timeline ----------------------------------------------
+    println!("{}", reports::figure3(d2.min(4096)));
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. Evaluate a systolic design through the synthesis models.
+//! 2. Run the cycle-accurate 3D array on a small on-chip multiply.
+//! 3. Simulate a full off-chip multiply (a Table-V cell).
+//! 4. If `make artifacts` has run, execute the same math through the
+//!    AOT-compiled XLA artifact via PJRT and check it.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign, OffchipSim};
+use systo3d::dse::Explorer;
+use systo3d::gemm::{matmul, Matrix};
+use systo3d::runtime::Engine;
+use systo3d::systolic::{Array3dSim, ArraySize};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. synthesis models -------------------------------------------
+    let array = ArraySize::new(64, 32, 2, 2); // the paper's design G
+    let point = Explorer::default().evaluate(array);
+    println!(
+        "design G: {} DSPs, fits={}, fmax={:?} MHz, Tpeak={:?} GFLOPS",
+        array.dsps(),
+        point.outcome.fits(),
+        point.fmax_mhz,
+        point.tpeak_gflops.map(|t| t.round())
+    );
+
+    // --- 2. cycle-accurate on-chip multiply ----------------------------
+    let small = ArraySize::new(8, 8, 4, 2);
+    let a = Matrix::random(8, 32, 1);
+    let b = Matrix::random(32, 8, 2);
+    let run = Array3dSim::new(small).multiply(&a, &b);
+    let err = run.c.rel_fro_error(&matmul(&a, &b));
+    println!(
+        "cycle sim: {} MACs in {} cycles across {} wave steps/call, rel err {err:.2e}",
+        run.total_macs, run.cycles, run.wave_steps_per_call
+    );
+    assert!(err < 1e-5);
+
+    // --- 3. off-chip simulation (Table V, design G, d2=4096) -----------
+    let design = OffchipDesign {
+        blocking: Level1Blocking::new(array, 512, 512),
+        fmax_mhz: point.fmax_mhz.unwrap(),
+        controller_efficiency: 0.97,
+    };
+    let report = OffchipSim::new(design).simulate(4096, 4096, 4096);
+    println!(
+        "off-chip sim 4096³: {:.0} GFLOPS, e_D = {:.2} (paper: 2912, 0.89)",
+        report.gflops, report.e_d
+    );
+
+    // --- 4. PJRT artifact execution ------------------------------------
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut engine = Engine::new(dir)?;
+        let a = Matrix::random(64, 64, 3);
+        let b = Matrix::random(64, 64, 4);
+        let (c, stats) = engine.execute("mm_h_64", &[&a, &b])?;
+        let err = c.rel_fro_error(&matmul(&a, &b));
+        println!(
+            "PJRT ({}): mm_h_64 in {:.2} ms, rel err {err:.2e}",
+            engine.platform(),
+            stats.exec_seconds * 1e3
+        );
+        assert!(err < 1e-4);
+    } else {
+        println!("(artifacts/ not built — run `make artifacts` for the PJRT leg)");
+    }
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Never imported at request time — the Rust binary is self-contained once
+``make artifacts`` has produced ``artifacts/*.hlo.txt``.
+"""

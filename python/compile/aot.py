@@ -1,0 +1,146 @@
+"""AOT entry point: lower the L2 model to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+emitted ``artifacts/*.hlo.txt`` through ``HloModuleProto::from_text_file``
+and Python never runs again.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. Lowering goes through stablehlo → XlaComputation with
+``return_tuple=True``; the Rust side unwraps with ``to_tuple1()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.kernels.systolic_mm import SystolicConfig
+from compile.model import OffchipConfig, chained_matmul, offchip_matmul
+
+# ~16 MiB of VMEM per TensorCore on current TPUs; keep headroom for Mosaic.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+# FPGA-faithful tile (paper design H) — used for the small functional
+# artifact so the request path exercises the exact paper geometry.
+CFG_FPGA_H = OffchipConfig(SystolicConfig(di0=32, dj0=32, dk0=4, dp=4),
+                           di1=64, dj1=64)
+
+# TPU-retuned tile (DESIGN.md §Hardware-Adaptation): 128-lane blocks fill
+# the 128x128 MXU systolic array exactly (estimated MXU utilization 100%
+# vs 25% for 64-lane tiles — EXPERIMENTS.md §Perf L1-1); two layers along
+# the third dimension (dk0/dp = 2) keep the layered accumulation path
+# exercised at serving sizes.
+CFG_TPU = OffchipConfig(SystolicConfig(di0=128, dj0=128, dk0=128, dp=64),
+                        di1=256, dj1=256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _assert_vmem(cfg: OffchipConfig, name: str) -> None:
+    fp = cfg.systolic.vmem_footprint_bytes()
+    if fp > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"artifact {name}: VMEM footprint {fp} B exceeds budget "
+            f"{VMEM_BUDGET_BYTES} B — shrink the BlockSpec tiles")
+
+
+def _spec(shape: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts() -> list[dict]:
+    """Return the artifact catalog: (name, jitted fn, example specs, meta)."""
+    arts: list[dict] = []
+
+    def mm_entry(name: str, n: int, cfg: OffchipConfig, tag: str) -> dict:
+        def fn(a, b):
+            return (offchip_matmul(a, b, cfg, interpret=True),)
+
+        return dict(
+            name=name,
+            kind="matmul",
+            fn=fn,
+            specs=[_spec((n, n)), _spec((n, n))],
+            meta=dict(
+                m=n, k=n, n=n, tile=dataclass_dict(cfg), family=tag,
+            ),
+            cfg=cfg,
+        )
+
+    arts.append(mm_entry("mm_h_64", 64, CFG_FPGA_H, "fpga_h"))
+    arts.append(mm_entry("mm_tpu_256", 256, CFG_TPU, "tpu"))
+    arts.append(mm_entry("mm_tpu_512", 512, CFG_TPU, "tpu"))
+
+    def chain_fn(a, b, c):
+        return (chained_matmul(a, b, c, CFG_TPU, interpret=True),)
+
+    arts.append(dict(
+        name="chain_tpu_256",
+        kind="chain",
+        fn=chain_fn,
+        specs=[_spec((256, 256))] * 3,
+        meta=dict(m=256, k=256, n=256, tile=dataclass_dict(CFG_TPU),
+                  family="tpu"),
+        cfg=CFG_TPU,
+    ))
+    return arts
+
+
+def dataclass_dict(cfg: OffchipConfig) -> dict:
+    s = cfg.systolic
+    return dict(di0=s.di0, dj0=s.dj0, dk0=s.dk0, dp=s.dp,
+                di1=cfg.di1, dj1=cfg.dj1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text-v1", "artifacts": []}
+    for art in build_artifacts():
+        _assert_vmem(art["cfg"], art["name"])
+        lowered = jax.jit(art["fn"]).lower(*art["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{art['name']}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append(dict(
+            name=art["name"],
+            file=fname,
+            kind=art["kind"],
+            inputs=[list(s.shape) for s in art["specs"]],
+            dtype="f32",
+            sha256_16=digest,
+            **art["meta"],
+        ))
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L2 performance accounting: XLA cost analysis of the lowered graphs.
+
+Used at build time (and by pytest) to enforce the L2 optimization
+criteria of DESIGN.md §8:
+
+* **no redundant recomputation** — compiled FLOPs must match the
+  theoretical 2·m·n·k within tolerance (fusion may add elementwise ops,
+  never another matmul's worth);
+* **traffic sanity** — bytes accessed must stay within a small factor of
+  the operands + result (the blocked schedule must not spill tiles);
+* **VMEM-tile feasibility** — delegated to SystolicConfig.vmem_footprint.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def analyze(fn, specs) -> dict:
+    """Compile ``fn`` for ``specs`` and return XLA's cost analysis.
+
+    Returns a dict with at least ``flops`` and ``bytes accessed`` when the
+    backend reports them (the CPU backend does).
+    """
+    compiled = jax.jit(fn).lower(*specs).compile()
+    analyses = compiled.cost_analysis()
+    # cost_analysis returns one dict per computation (newer jax: a dict).
+    if isinstance(analyses, (list, tuple)):
+        analyses = analyses[0]
+    return dict(analyses)
+
+
+def matmul_theoretical_flops(m: int, k: int, n: int) -> float:
+    """2·m·n·k MACs-as-FLOPs (XLA's counting convention)."""
+    return 2.0 * m * n * k
+
+
+def check_no_recompute(fn, specs, theoretical_flops: float,
+                       slack: float = 1.25) -> dict:
+    """Assert the compiled graph does at most ``slack``× the theoretical
+    FLOPs. Returns the analysis for further inspection."""
+    a = analyze(fn, specs)
+    flops = float(a.get("flops", 0.0))
+    if flops <= 0.0:
+        raise AssertionError("backend reported no flops — analysis unusable")
+    ratio = flops / theoretical_flops
+    if ratio > slack:
+        raise AssertionError(
+            f"compiled flops {flops:.3e} exceed {slack}x theoretical "
+            f"{theoretical_flops:.3e} (ratio {ratio:.2f}) — redundant recompute?")
+    return a
+
+
+def check_traffic(fn, specs, operand_bytes: float, slack: float = 6.0) -> dict:
+    """Assert bytes accessed stay within ``slack``× the operand+result
+    footprint (the blocked schedule re-reads tiles, but boundedly)."""
+    a = analyze(fn, specs)
+    accessed = float(a.get("bytes accessed", 0.0))
+    if accessed <= 0.0:
+        raise AssertionError("backend reported no bytes accessed")
+    ratio = accessed / operand_bytes
+    if ratio > slack:
+        raise AssertionError(
+            f"bytes accessed {accessed:.3e} exceed {slack}x operands "
+            f"{operand_bytes:.3e} (ratio {ratio:.2f}) — tile spill?")
+    return a

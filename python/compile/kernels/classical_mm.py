@@ -1,0 +1,75 @@
+"""L1 — the *classical* (Definition 1, Okuda–Song) systolic matmul as a
+Pallas kernel: the baseline architecture the paper's 3D design improves.
+
+On the FPGA the classical array is a (d_i0 × d_j0) grid of single-MAC
+PEs: each C element stays resident while ALL of K streams through — so
+one pass of the array computes one (d_i0 × d_j0) C block with a
+K-sequential accumulation of rank-1 updates.
+
+TPU mapping: the k axis becomes the sequential grid dimension with tile
+depth 1 — every grid step performs one rank-1 update (outer product),
+exactly the per-cycle work of the classical array. This is deliberately
+MXU-hostile (contraction depth 1) the same way the classical array is
+DSP-chain-hostile; comparing its grid length against the 3D kernel's
+(K vs K/d_k0 steps) reproduces Definition 1-vs-2's latency ratio at the
+kernel-structure level (asserted in tests).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _classical_kernel(a_ref, b_ref, c_ref):
+    """One grid step: a rank-1 update C += A[:, k] ⊗ B[k, :]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    a_col = a_ref[...]  # (di0, 1)
+    b_row = b_ref[...]  # (1, dj0)
+    c_ref[...] += a_col * b_row  # outer product via broadcasting
+
+
+def classical_matmul(a: jnp.ndarray, b: jnp.ndarray, di0: int, dj0: int,
+                     interpret: bool = True) -> jnp.ndarray:
+    """C = A @ B through the classical 2D systolic dataflow.
+
+    Grid = (m/d_i0, n/d_j0, K): K sequential rank-1 updates per C tile —
+    one per classical-array cycle.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {k} vs {k2}")
+    if m % di0 or n % dj0:
+        raise ValueError(f"({m},{n}) not tileable by ({di0},{dj0})")
+    grid = (m // di0, n // dj0, k)
+    return pl.pallas_call(
+        _classical_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((di0, 1), lambda i, j, t: (i, t)),
+            pl.BlockSpec((1, dj0), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((di0, dj0), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.lru_cache(maxsize=None)
+def grid_steps_classical(m: int, n: int, k: int, di0: int, dj0: int) -> int:
+    """Sequential k-steps of the classical kernel (Definition 1: K)."""
+    return (m // di0) * (n // dj0) * k
+
+
+def grid_steps_3d(m: int, n: int, k: int, di0: int, dj0: int, dk0: int) -> int:
+    """Sequential k-steps of the 3D kernel (Definition 2: K/d_k0)."""
+    return (m // di0) * (n // dj0) * (k // dk0)

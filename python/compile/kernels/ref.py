@@ -1,0 +1,63 @@
+"""Pure-jnp correctness oracles for the systolic matmul kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the HLO
+artifacts executed by the Rust runtime) are validated against in
+``python/tests/``.
+
+Two oracles are provided:
+
+* :func:`matmul_ref` — plain ``jnp.dot``; the numerical reference.
+* :func:`blocked_matmul_ref` — the *order-of-operations* reference: it
+  accumulates exactly like the paper's two-level blocked algorithm
+  (Definition 4: cyclical accumulation of outer products between block
+  columns of A and block rows of B, k slowest), so it reproduces the same
+  floating-point rounding as the FPGA design and the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with default XLA accumulation (float32)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def dot_unit_ref(z: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference for a single Stratix-10 chained dot-product unit (paper eq. 6).
+
+    ``r = z + sum_i v_i * w_i`` over the last axis.
+    """
+    return z + jnp.sum(v * w, axis=-1)
+
+
+def blocked_matmul_ref(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    dk0: int,
+    dp: int | None = None,
+) -> jnp.ndarray:
+    """Definition-4-ordered matmul: accumulate (dk2/dk0) outer-product slabs.
+
+    Within each slab of ``dk0`` contraction steps, the dot products are
+    computed in ``dk0/dp`` sequential segments of size ``dp`` (the paper's
+    third systolic dimension / Listing 2 line 21). This mirrors the exact
+    accumulation order of both the FPGA design and the Pallas kernel.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert k % dk0 == 0, f"dk2={k} not a multiple of dk0={dk0}"
+    if dp is None:
+        dp = dk0
+    assert dk0 % dp == 0, f"dk0={dk0} not a multiple of dp={dp}"
+
+    acc = jnp.zeros((m, n), dtype=jnp.float32)
+    for t in range(k // dk0):  # k slowest: the anti-hazard ordering of Def. 4
+        a_blk = a[:, t * dk0 : (t + 1) * dk0].astype(jnp.float32)
+        b_blk = b[t * dk0 : (t + 1) * dk0, :].astype(jnp.float32)
+        for layer in range(dk0 // dp):  # the third (L) systolic dimension
+            lo, hi = layer * dp, (layer + 1) * dp
+            acc = acc + a_blk[:, lo:hi] @ b_blk[lo:hi, :]
+    return acc

@@ -1,0 +1,185 @@
+"""L1 — Pallas kernel: the paper's 3D systolic on-chip matmul, TPU-adapted.
+
+The paper (Gorlani & Plessl 2021) builds a three-dimensional systolic array
+on a Stratix 10: a ``(d_i0, d_j0, d_k0/d_p)`` grid of dot-product units of
+size ``d_p``. Its insight is *throughput balancing between memory levels via
+the third grid dimension*: ``d_k0`` scales FLOP/cycle linearly (paper eq. 9)
+but also the on-chip data throughput (eq. 10), and ``d_p`` trades dot-unit
+depth against placement feasibility.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation):
+
+* the DSP dot-product unit of size ``d_p``  →  an MXU contraction over a
+  ``d_p``-wide slice of the k tile. The kernel body splits the ``d_k0`` tile
+  into ``d_k0/d_p`` *sequential* partial contractions whose partial sums are
+  carried forward — the exact dataflow of Listing 2 line 21, where the
+  partial C value is sent up the L dimension.
+* M20K mapped partitions feeding the PEs  →  VMEM tiles staged by
+  ``BlockSpec``; the paper's on-chip block shapes (d_i0×d_k0), (d_k0×d_j0)
+  are literally the BlockSpec block shapes.
+* the paper's "k slowest" outer-product ordering (Definition 4), which on
+  the FPGA dodges the II>1 accumulation hazard of the Variable-Precision
+  DSPs, maps to k as the *sequential innermost grid axis* with a resident
+  accumulator tile: on TPU the hazard does not exist, but the same ordering
+  minimizes C-tile HBM traffic. (Grid axes in Pallas iterate row-major, so
+  "innermost sequential" means the *last* grid axis.)
+
+The kernel MUST run with ``interpret=True`` here: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Real-TPU efficiency
+is estimated analytically in EXPERIMENTS.md §Perf from VMEM footprint and
+MXU utilization of the chosen block shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class SystolicConfig:
+    """Sizes of the systolic array (superscript-0 sizes in the paper).
+
+    ``di0 x dj0`` is the 2D footprint (PE grid), ``dk0`` the contraction
+    tile, ``dp`` the dot-product-unit size; ``dk0/dp`` is the number of
+    layers stacked along the third dimension.
+    """
+
+    di0: int
+    dj0: int
+    dk0: int
+    dp: int
+
+    def __post_init__(self) -> None:
+        if self.dk0 % self.dp != 0:
+            raise ValueError(f"dk0={self.dk0} must be a multiple of dp={self.dp}")
+        for name in ("di0", "dj0", "dk0", "dp"):
+            v = getattr(self, name)
+            if v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+
+    @property
+    def layers(self) -> int:
+        """Number of bi-dimensional layers, d_k0 / d_p (paper Def. 2)."""
+        return self.dk0 // self.dp
+
+    @property
+    def num_pes(self) -> int:
+        """#PE = d_i0 * d_j0 * d_k0/d_p (paper eq. 12)."""
+        return self.di0 * self.dj0 * self.layers
+
+    @property
+    def num_dsps(self) -> int:
+        """#DSP = d_i0 * d_j0 * d_k0 (paper eq. 11)."""
+        return self.di0 * self.dj0 * self.dk0
+
+    @property
+    def flop_per_cycle(self) -> int:
+        """T_flop = 2 d_i0 d_j0 d_k0 [FLOP/cycle] (paper eq. 9)."""
+        return 2 * self.num_dsps
+
+    def vmem_footprint_bytes(self) -> int:
+        """Bytes of VMEM held resident by one kernel instance (f32).
+
+        A tile + B tile + C accumulator tile. Double-buffering headroom
+        (factor 2) on the input tiles, which Pallas pipelines HBM→VMEM.
+        Used by aot.py to assert the config fits a ~16 MiB/core budget.
+        """
+        a = self.di0 * self.dk0 * 4
+        b = self.dk0 * self.dj0 * 4
+        c = self.di0 * self.dj0 * 4
+        return 2 * (a + b) + c
+
+
+def _systolic_mm_kernel(a_ref, b_ref, c_ref, *, cfg: SystolicConfig,
+                        k_steps: int):
+    """Pallas kernel body: one (i, j, k) grid step.
+
+    Grid = (d_i1/d_i0, d_j1/d_j0, d_k2/d_k0); k is the last (sequential)
+    axis. The C output tile's index map ignores k, so the same VMEM tile
+    stays resident across all k steps of one (i, j) block — it plays the
+    role of the FPGA design's on-chip C FIFO system.
+
+    The layer loop reproduces the third systolic dimension: ``dk0/dp``
+    partial dot products of width ``dp``, accumulated sequentially exactly
+    like Listing 2 passes partial sums up the L direction.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():  # Phase-1 "Initialize C to zero" of §V
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    a_tile = a_ref[...]  # (di0, dk0) — an M20K-partition-fed A block
+    b_tile = b_ref[...]  # (dk0, dj0) — an M20K-partition-fed B block
+
+    # The L dimension: dk0/dp sequential dot-product segments of width dp.
+    acc = c_ref[...]
+    for layer in range(cfg.layers):
+        lo = layer * cfg.dp
+        a_seg = jax.lax.slice_in_dim(a_tile, lo, lo + cfg.dp, axis=1)
+        b_seg = jax.lax.slice_in_dim(b_tile, lo, lo + cfg.dp, axis=0)
+        # One MXU contraction per layer == one plane of dot-product units.
+        acc = acc + jax.lax.dot_general(
+            a_seg, b_seg,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    c_ref[...] = acc
+
+
+def systolic_matmul(a: jnp.ndarray, b: jnp.ndarray, cfg: SystolicConfig,
+                    interpret: bool = True) -> jnp.ndarray:
+    """On-chip-style matmul C = A @ B through the 3D systolic Pallas kernel.
+
+    ``a``: (d_i1, d_k2), ``b``: (d_k2, d_j1); every dimension must be a
+    multiple of the corresponding systolic size. This is the paper's
+    Definition 4 *second level*: the systolic array sweeps the
+    (d_i1/d_i0 × d_j1/d_j0 × d_k2/d_k0) block grid, accumulating over k.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: A has k={k}, B has k={k2}")
+    if m % cfg.di0 or n % cfg.dj0 or k % cfg.dk0:
+        raise ValueError(
+            f"shape ({m},{k})x({k2},{n}) not tileable by "
+            f"(di0,dj0,dk0)=({cfg.di0},{cfg.dj0},{cfg.dk0})"
+        )
+    k_steps = k // cfg.dk0
+    grid = (m // cfg.di0, n // cfg.dj0, k_steps)
+
+    kernel = functools.partial(_systolic_mm_kernel, cfg=cfg, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # A block column Ā^{Ii}_{0k}: i from grid-i, k from grid-k.
+            pl.BlockSpec((cfg.di0, cfg.dk0), lambda i, j, t: (i, t)),
+            # B block row B̄^{0k}_{Jj}: k from grid-k, j from grid-j.
+            pl.BlockSpec((cfg.dk0, cfg.dj0), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((cfg.di0, cfg.dj0), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+# Catalog of the paper's synthesizable designs (Table I). Keys are the
+# paper's design IDs; these are the FPGA sizes, used as Pallas tile sizes
+# for functional artifacts (TPU-optimal retunes live in aot.py).
+PAPER_DESIGNS: dict[str, SystolicConfig] = {
+    "C": SystolicConfig(di0=28, dj0=28, dk0=6, dp=1),
+    "E": SystolicConfig(di0=72, dj0=32, dk0=2, dp=1),
+    "F": SystolicConfig(di0=70, dj0=32, dk0=2, dp=2),
+    "G": SystolicConfig(di0=64, dj0=32, dk0=2, dp=2),
+    "H": SystolicConfig(di0=32, dj0=32, dk0=4, dp=4),
+    "I": SystolicConfig(di0=32, dj0=32, dk0=4, dp=2),
+    "L": SystolicConfig(di0=32, dj0=16, dk0=8, dp=8),
+    "M": SystolicConfig(di0=32, dj0=16, dk0=8, dp=4),
+    "N": SystolicConfig(di0=32, dj0=16, dk0=8, dp=2),
+}

@@ -1,0 +1,106 @@
+"""L2 — JAX model: the paper's two-level blocked off-chip matmul (Def. 4).
+
+This is the compute graph the Rust coordinator executes at request time
+(via its AOT-compiled HLO artifact — Python is never on the request path).
+
+Definition 4 structure:
+
+* **First level** — C̄ is computed block-by-block: C̄^I_J = Ā^I_0 · B̄^0_J for
+  a (d_i1 × d_j1) grid of C blocks. On the FPGA each C̄^I_J is one pass of
+  the four-phase Read/Compute/Write schedule; here each block is one call
+  into the L1 systolic Pallas kernel, and the I/J sweep is laid out at
+  trace time so XLA sees one fused program.
+* **Second level** — inside a block, the systolic array sweeps
+  (d_i1/d_i0 × d_j1/d_j0 × d_k2/d_k0) tiles with k slowest (the
+  anti-accumulation-hazard outer-product ordering); that level lives in
+  the Pallas kernel's grid.
+
+The reuse ratios r_A = B_A/B_gA and r_B = B_B/B_gB (paper eq. 14) fix
+d_i1 = r_B·d_i0 and d_j1 = r_A·d_j0 (eq. 18); `OffchipConfig.validate`
+checks them the same way the Rust `blocked` module does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.systolic_mm import SystolicConfig, systolic_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class OffchipConfig:
+    """Level-1 blocking of Definition 4 (superscript-1 sizes)."""
+
+    systolic: SystolicConfig
+    di1: int
+    dj1: int
+
+    def __post_init__(self) -> None:
+        if self.di1 % self.systolic.di0:
+            raise ValueError(f"di1={self.di1} not a multiple of di0={self.systolic.di0}")
+        if self.dj1 % self.systolic.dj0:
+            raise ValueError(f"dj1={self.dj1} not a multiple of dj0={self.systolic.dj0}")
+
+    @property
+    def reuse_a(self) -> int:
+        """r_A — how often an A element is reused (eq. 18: d_j1 = r_A d_j0)."""
+        return self.dj1 // self.systolic.dj0
+
+    @property
+    def reuse_b(self) -> int:
+        """r_B — how often a B element is reused (eq. 18: d_i1 = r_B d_i0)."""
+        return self.di1 // self.systolic.di0
+
+    def validate_offchip(self, di2: int, dj2: int, dk2: int) -> None:
+        """The paper's matrix-size constraints (captions of Tables II–V)."""
+        if di2 % self.di1:
+            raise ValueError(f"d_i2={di2} must be a multiple of d_i1={self.di1}")
+        if dj2 % self.dj1:
+            raise ValueError(f"d_j2={dj2} must be a multiple of d_j1={self.dj1}")
+        if dk2 % self.systolic.dk0:
+            raise ValueError(
+                f"d_k2={dk2} must be a multiple of d_k0={self.systolic.dk0}")
+
+
+def offchip_matmul(a: jnp.ndarray, b: jnp.ndarray, cfg: OffchipConfig,
+                   interpret: bool = True) -> jnp.ndarray:
+    """C = A·B through the two-level blocked schedule of Definition 4.
+
+    a: (d_i2, d_k2) — the FPGA stores this column-major; layout here is
+    XLA's concern and is pinned at AOT time.
+    b: (d_k2, d_j2) row-major.
+    """
+    di2, dk2 = a.shape
+    _, dj2 = b.shape
+    cfg.validate_offchip(di2, dj2, dk2)
+
+    n_i = di2 // cfg.di1
+    n_j = dj2 // cfg.dj1
+
+    # First level: sweep C̄ blocks. Trace-time loop => one fused HLO.
+    rows = []
+    for bi in range(n_i):
+        cols = []
+        for bj in range(n_j):
+            a_blk = jax.lax.slice(a, (bi * cfg.di1, 0), ((bi + 1) * cfg.di1, dk2))
+            b_blk = jax.lax.slice(b, (0, bj * cfg.dj1), (dk2, (bj + 1) * cfg.dj1))
+            cols.append(systolic_matmul(a_blk, b_blk, cfg.systolic,
+                                        interpret=interpret))
+        rows.append(jnp.concatenate(cols, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def chained_matmul(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+                   cfg: OffchipConfig, interpret: bool = True) -> jnp.ndarray:
+    """(A·B)·C — the paper's §VI selling point.
+
+    Unlike the Intel SDK baseline, this design's result matrix keeps the
+    row-major operand format, so a product can feed the next multiply with
+    no host-side reordering. This graph is what the coordinator's
+    `chain` requests execute.
+    """
+    ab = offchip_matmul(a, b, cfg, interpret=interpret)
+    return offchip_matmul(ab, c, cfg, interpret=interpret)

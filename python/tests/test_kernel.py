@@ -1,0 +1,238 @@
+"""L1 kernel correctness: Pallas systolic kernel vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute path: everything the
+Rust runtime executes was lowered from these kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import blocked_matmul_ref, dot_unit_ref, matmul_ref
+from compile.kernels.systolic_mm import (
+    PAPER_DESIGNS,
+    SystolicConfig,
+    systolic_matmul,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Config invariants (paper equations 9, 11, 12)
+# ---------------------------------------------------------------------------
+
+class TestSystolicConfig:
+    def test_dsp_count_eq11(self):
+        cfg = SystolicConfig(28, 28, 6, 3)
+        assert cfg.num_dsps == 28 * 28 * 6 == 4704
+
+    def test_pe_count_eq12(self):
+        # Table I rows: same DSPs, different PE granularity.
+        assert SystolicConfig(28, 28, 6, 3).num_pes == 1568
+        assert SystolicConfig(28, 28, 6, 2).num_pes == 2352
+        assert SystolicConfig(28, 28, 6, 1).num_pes == 4704
+
+    def test_flop_per_cycle_eq9(self):
+        cfg = SystolicConfig(64, 32, 2, 2)
+        assert cfg.flop_per_cycle == 2 * 64 * 32 * 2
+
+    def test_layers(self):
+        assert SystolicConfig(32, 16, 8, 2).layers == 4
+
+    def test_dp_must_divide_dk0(self):
+        with pytest.raises(ValueError):
+            SystolicConfig(8, 8, 6, 4)
+
+    def test_positive_dims(self):
+        with pytest.raises(ValueError):
+            SystolicConfig(0, 8, 4, 4)
+
+    def test_vmem_footprint_monotone_in_tiles(self):
+        small = SystolicConfig(32, 32, 32, 32).vmem_footprint_bytes()
+        big = SystolicConfig(64, 64, 64, 32).vmem_footprint_bytes()
+        assert big > small
+
+    @pytest.mark.parametrize("name,cfg", sorted(PAPER_DESIGNS.items()))
+    def test_paper_catalog_dsps_match_table1(self, name, cfg):
+        expected = {
+            "C": 4704, "E": 4608, "F": 4480, "G": 4096, "H": 4096,
+            "I": 4096, "L": 4096, "M": 4096, "N": 4096,
+        }
+        assert cfg.num_dsps == expected[name]
+
+    @pytest.mark.parametrize("name,cfg", sorted(PAPER_DESIGNS.items()))
+    def test_paper_catalog_pes_match_table1(self, name, cfg):
+        expected = {
+            "C": 4704, "E": 4608, "F": 2240, "G": 2048, "H": 1024,
+            "I": 2048, "L": 512, "M": 1024, "N": 2048,
+        }
+        assert cfg.num_pes == expected[name]
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency
+# ---------------------------------------------------------------------------
+
+class TestOracles:
+    def test_blocked_ref_matches_dot(self):
+        a, b = _rand(0, (48, 24)), _rand(1, (24, 36))
+        got = blocked_matmul_ref(a, b, dk0=8, dp=4)
+        np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_dot_unit_ref(self):
+        z = jnp.float32(2.0)
+        v = jnp.arange(4, dtype=jnp.float32)
+        w = jnp.ones(4, dtype=jnp.float32)
+        assert float(dot_unit_ref(z, v, w)) == pytest.approx(8.0)
+
+    def test_blocked_ref_dp_independent_result(self):
+        a, b = _rand(2, (32, 16)), _rand(3, (16, 32))
+        r1 = blocked_matmul_ref(a, b, dk0=8, dp=8)
+        r2 = blocked_matmul_ref(a, b, dk0=8, dp=2)
+        np.testing.assert_allclose(r1, r2, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle — fixed design points
+# ---------------------------------------------------------------------------
+
+KERNEL_CASES = [
+    # (cfg, m, k, n)
+    (SystolicConfig(8, 8, 4, 4), 16, 8, 16),
+    (SystolicConfig(8, 8, 4, 2), 16, 16, 24),
+    (SystolicConfig(16, 8, 8, 4), 32, 24, 16),
+    (SystolicConfig(32, 32, 4, 4), 64, 64, 64),   # design-H geometry
+    (SystolicConfig(32, 16, 8, 2), 64, 32, 48),   # design-N geometry
+    (SystolicConfig(64, 64, 64, 32), 128, 128, 128),  # TPU-retuned tile
+]
+
+
+class TestKernelVsRef:
+    @pytest.mark.parametrize("cfg,m,k,n", KERNEL_CASES)
+    def test_allclose_to_dot(self, cfg, m, k, n):
+        a, b = _rand(m * 7 + k, (m, k)), _rand(n * 13 + k, (k, n))
+        got = systolic_matmul(a, b, cfg)
+        np.testing.assert_allclose(got, matmul_ref(a, b), rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("cfg,m,k,n", KERNEL_CASES)
+    def test_bit_identical_to_blocked_ref(self, cfg, m, k, n):
+        """The kernel must reproduce Definition 4's accumulation order
+        exactly — same slab order, same layer segmentation. Bitwise
+        equality is asserted for multi-layer configs (where the explicit
+        dp-segmentation pins the order); single-layer dots may be
+        re-bracketed by XLA codegen and get a 1-ulp tolerance."""
+        a, b = _rand(m, (m, k)), _rand(n, (k, n))
+        got = systolic_matmul(a, b, cfg)
+        want = blocked_matmul_ref(a, b, cfg.dk0, cfg.dp)
+        if cfg.dp > 1 and cfg.dk0 > cfg.dp:
+            assert jnp.array_equal(got, want), "accumulation order diverged"
+        else:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_identity(self):
+        cfg = SystolicConfig(8, 8, 8, 4)
+        eye = jnp.eye(16, dtype=jnp.float32)
+        a = _rand(5, (16, 16))
+        np.testing.assert_allclose(systolic_matmul(a, eye, cfg), a,
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_zeros(self):
+        cfg = SystolicConfig(8, 8, 4, 2)
+        a = _rand(6, (8, 8))
+        z = jnp.zeros((8, 8), jnp.float32)
+        assert float(jnp.abs(systolic_matmul(a, z, cfg)).max()) == 0.0
+
+    def test_shape_mismatch_raises(self):
+        cfg = SystolicConfig(8, 8, 4, 2)
+        with pytest.raises(ValueError, match="contraction mismatch"):
+            systolic_matmul(jnp.zeros((8, 8)), jnp.zeros((12, 8)), cfg)
+
+    def test_untileable_raises(self):
+        cfg = SystolicConfig(8, 8, 4, 2)
+        with pytest.raises(ValueError, match="not tileable"):
+            systolic_matmul(jnp.zeros((12, 8)), jnp.zeros((8, 8)), cfg)
+
+    def test_special_values_inf(self):
+        cfg = SystolicConfig(8, 8, 4, 4)
+        a = jnp.full((8, 8), jnp.inf, jnp.float32)
+        b = jnp.eye(8, dtype=jnp.float32)
+        out = systolic_matmul(a, b, cfg)
+        # inf * 1 + 0*inf => nan on off-diagonal contributions? No: b is
+        # identity so each dot is inf*1 + inf*0 = nan (inf*0). Just check
+        # the kernel matches the oracle on non-finite inputs.
+        want = blocked_matmul_ref(a, b, cfg.dk0, cfg.dp)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Property-based sweep (hypothesis): shapes, dtypes, dp splits
+# ---------------------------------------------------------------------------
+
+@st.composite
+def kernel_problem(draw):
+    di0 = draw(st.sampled_from([4, 8, 16]))
+    dj0 = draw(st.sampled_from([4, 8, 16]))
+    dp = draw(st.sampled_from([1, 2, 4]))
+    layers = draw(st.integers(1, 3))
+    dk0 = dp * layers
+    m = di0 * draw(st.integers(1, 3))
+    n = dj0 * draw(st.integers(1, 3))
+    k = dk0 * draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return SystolicConfig(di0, dj0, dk0, dp), m, k, n, seed
+
+
+class TestKernelProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(kernel_problem())
+    def test_matches_oracle_over_random_geometry(self, prob):
+        cfg, m, k, n, seed = prob
+        a = jax.random.normal(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n), jnp.float32)
+        got = systolic_matmul(a, b, cfg)
+        want = blocked_matmul_ref(a, b, cfg.dk0, cfg.dp)
+        # Bitwise equality with the eager oracle is NOT a stable property
+        # over arbitrary shapes: XLA re-brackets small dot reductions
+        # (unrolled tree vs loop) and FMA-fuses k=1 contractions, both
+        # context-dependent. The deterministic fixed-shape cases in
+        # TestKernelVsRef assert bitwise identity where it is stable;
+        # here we assert the near-ulp bound that is shape-independent.
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(kernel_problem(), st.sampled_from([jnp.bfloat16, jnp.float32]))
+    def test_dtype_sweep(self, prob, dtype):
+        """bf16 inputs must still accumulate in f32 (MXU semantics)."""
+        cfg, m, k, n, seed = prob
+        a = jax.random.normal(jax.random.PRNGKey(seed), (m, k)).astype(dtype)
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n)).astype(dtype)
+        got = systolic_matmul(a.astype(jnp.float32), b.astype(jnp.float32), cfg)
+        assert got.dtype == jnp.float32
+        want = matmul_ref(a.astype(jnp.float32), b.astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=5e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_dp_split_invariance_bitwise(self, seed):
+        """Splitting dk0 into more layers changes only the accumulation
+        bracketing; with matching oracle bracketing the result is bitwise
+        stable for every dp."""
+        a = jax.random.normal(jax.random.PRNGKey(seed), (16, 8), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, 16), jnp.float32)
+        for dp in (2, 4, 8):  # dp=1 is FMA-fused by XLA, see test above
+            cfg = SystolicConfig(8, 8, 8, dp)
+            got = systolic_matmul(a, b, cfg)
+            want = blocked_matmul_ref(a, b, 8, dp)
+            assert jnp.array_equal(got, want), f"dp={dp}"

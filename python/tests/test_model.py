@@ -1,0 +1,111 @@
+"""L2 model correctness: two-level blocked off-chip matmul (Definition 4)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import blocked_matmul_ref, matmul_ref
+from compile.kernels.systolic_mm import SystolicConfig
+from compile.model import OffchipConfig, chained_matmul, offchip_matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+CFG_SMALL = OffchipConfig(SystolicConfig(8, 8, 4, 2), di1=16, dj1=16)
+
+
+class TestOffchipConfig:
+    def test_reuse_ratios_eq18(self):
+        # d_i1 = r_B d_i0, d_j1 = r_A d_j0
+        cfg = OffchipConfig(SystolicConfig(32, 32, 4, 4), di1=512, dj1=512)
+        assert cfg.reuse_b == 16
+        assert cfg.reuse_a == 16
+
+    def test_paper_design_g_blocking(self):
+        # Table V caption: designs G–N require d1 = 512.
+        cfg = OffchipConfig(SystolicConfig(64, 32, 2, 2), di1=512, dj1=512)
+        assert cfg.reuse_b == 8 and cfg.reuse_a == 16
+
+    def test_invalid_di1(self):
+        with pytest.raises(ValueError):
+            OffchipConfig(SystolicConfig(8, 8, 4, 2), di1=12, dj1=16)
+
+    def test_offchip_constraint_check(self):
+        with pytest.raises(ValueError, match="d_i2"):
+            CFG_SMALL.validate_offchip(24, 16, 8)
+        with pytest.raises(ValueError, match="d_k2"):
+            CFG_SMALL.validate_offchip(16, 16, 6)
+        CFG_SMALL.validate_offchip(32, 48, 12)  # ok
+
+
+class TestOffchipMatmul:
+    @pytest.mark.parametrize("m,k,n", [(16, 8, 16), (32, 16, 16),
+                                       (32, 12, 48), (48, 20, 32)])
+    def test_matches_dot(self, m, k, n):
+        a, b = _rand(m + k, (m, k)), _rand(n + k, (k, n))
+        got = offchip_matmul(a, b, CFG_SMALL)
+        np.testing.assert_allclose(got, matmul_ref(a, b), rtol=2e-5, atol=2e-5)
+
+    def test_bit_identical_to_blocked_ref(self):
+        a, b = _rand(1, (32, 16)), _rand(2, (16, 32))
+        got = offchip_matmul(a, b, CFG_SMALL)
+        want_blocks = []
+        for bi in range(2):
+            row = []
+            for bj in range(2):
+                ab = a[bi * 16:(bi + 1) * 16, :]
+                bb = b[:, bj * 16:(bj + 1) * 16]
+                row.append(blocked_matmul_ref(ab, bb, 4, 2))
+            want_blocks.append(jnp.concatenate(row, axis=1))
+        want = jnp.concatenate(want_blocks, axis=0)
+        assert jnp.array_equal(got, want)
+
+    def test_chained_matmul_no_reorder(self):
+        """(A·B)·C in one artifact — the paper's chained-multiply property."""
+        cfg = OffchipConfig(SystolicConfig(8, 8, 8, 4), di1=16, dj1=16)
+        a, b, c = _rand(3, (16, 16)), _rand(4, (16, 16)), _rand(5, (16, 16))
+        got = chained_matmul(a, b, c, cfg)
+        want = matmul_ref(matmul_ref(a, b), c)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_unblocked_shapes(self):
+        with pytest.raises(ValueError):
+            offchip_matmul(jnp.zeros((20, 8)), jnp.zeros((8, 16)), CFG_SMALL)
+
+
+@st.composite
+def offchip_problem(draw):
+    di0 = draw(st.sampled_from([4, 8]))
+    dj0 = draw(st.sampled_from([4, 8]))
+    dp = draw(st.sampled_from([2, 4]))
+    dk0 = dp * draw(st.integers(1, 2))
+    rb = draw(st.integers(1, 2))
+    ra = draw(st.integers(1, 2))
+    cfg = OffchipConfig(SystolicConfig(di0, dj0, dk0, dp),
+                        di1=rb * di0, dj1=ra * dj0)
+    m = cfg.di1 * draw(st.integers(1, 2))
+    n = cfg.dj1 * draw(st.integers(1, 2))
+    k = dk0 * draw(st.integers(1, 3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return cfg, m, k, n, seed
+
+
+class TestOffchipProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(offchip_problem())
+    def test_random_geometry_matches_dot(self, prob):
+        cfg, m, k, n, seed = prob
+        a = jax.random.normal(jax.random.PRNGKey(seed), (m, k), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n), jnp.float32)
+        got = offchip_matmul(a, b, cfg)
+        want = matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=5e-5)

@@ -1,0 +1,28 @@
+//! Shared helpers for the custom bench harness (criterion is not in the
+//! offline registry; `[[bench]] harness = false` binaries use this).
+
+use systo3d::util::stats::{Bench, Summary};
+
+/// Standard bench configuration: honours `SYSTO3D_BENCH_FAST=1` for CI.
+pub fn bench() -> Bench {
+    if std::env::var("SYSTO3D_BENCH_FAST").as_deref() == Ok("1") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a bench summary line.
+pub fn report(s: &Summary) {
+    println!("{}", s.report_line());
+}
+
+/// Throughput helper: ops/sec from a summary's median.
+pub fn per_second(s: &Summary, ops_per_iter: f64) -> f64 {
+    ops_per_iter / s.median()
+}

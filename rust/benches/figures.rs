@@ -1,0 +1,66 @@
+//! Bench: regenerate the paper's **figures** — the 3D activation
+//! wavefront (Fig. 1), the design wiring diagram (Fig. 2), the
+//! four-phase timeline (Fig. 3) — plus the eq. 19 model-vs-simulation
+//! curve the evaluation leans on.
+//!
+//! ```sh
+//! cargo bench --bench figures
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::blocked::PhaseKind;
+use systo3d::dse::paper_catalog;
+use systo3d::perfmodel::eq19_compute_fraction;
+use systo3d::reports;
+use systo3d::systolic::{Array3dSim, ArraySize};
+
+fn main() {
+    common::section("FIGURE 1 — activation wavefront (3x3x3, dp=1)");
+    print!("{}", reports::figure1());
+    // Invariants of the figure: wave covers each PE exactly dk0 steps.
+    let trace = Array3dSim::new(ArraySize::new(3, 3, 3, 1)).activation_trace();
+    assert_eq!(trace.len(), 7);
+    assert_eq!(trace.iter().map(|s| s.len()).sum::<usize>(), 27); // 9 PEs x 3 steps
+
+    common::section("FIGURE 2 — design wiring (d=(4,3,3), B_gA=2, B_gB=1)");
+    print!("{}", reports::figure2());
+
+    common::section("FIGURE 3 — four-phase schedule (design G)");
+    for dk2 in [512u64, 2048, 8192] {
+        print!("{}", reports::figure3(dk2));
+    }
+    // Invariant: the Write span shrinks relative to total as dk2 grows.
+    let spec = paper_catalog().into_iter().find(|d| d.id == "G").unwrap();
+    let design = systo3d::blocked::OffchipDesign {
+        blocking: spec.level1().unwrap(),
+        fmax_mhz: spec.fmax_mhz.unwrap(),
+        controller_efficiency: 0.97,
+    };
+    let frac = |dk2: u64| {
+        let tl = design.schedule().timeline(dk2);
+        let total = tl.last().unwrap().2 as f64;
+        let write: u64 = tl.iter().filter(|s| s.0 == PhaseKind::Write).map(|s| s.2 - s.1).sum();
+        write as f64 / total
+    };
+    assert!(frac(512) > frac(2048) && frac(2048) > frac(8192));
+
+    common::section("eq. 19 — compute fraction, model vs schedule vs e_D");
+    print!("{}", reports::eq19_curve());
+    for d2 in [512u64, 2048, 8192] {
+        let model = eq19_compute_fraction(d2, 2, 64, 32, 8);
+        let tl = design.schedule().counts(d2);
+        assert!((model - tl.compute_fraction()).abs() < 0.01, "eq19 drifted at {d2}");
+    }
+    println!("eq. 19 and the schedule agree within 0.01 across the sweep");
+
+    common::section("figure-generation throughput");
+    let b = common::bench();
+    let s = b.run("activation_trace 32x32x8", || {
+        Array3dSim::new(ArraySize::new(32, 32, 8, 2)).activation_trace()
+    });
+    common::report(&s);
+    let s = b.run("figure3 timeline dk2=16384", || reports::figure3(16384));
+    common::report(&s);
+}

@@ -1,0 +1,105 @@
+//! Bench: the L3 hot paths — the profile targets of EXPERIMENTS.md §Perf.
+//!
+//! * cycle-accurate systolic simulator (PE-event throughput),
+//! * event-level off-chip simulator (table-cell latency),
+//! * blocked CPU GEMM (the functional fallback),
+//! * PJRT artifact execution (when `make artifacts` has run),
+//! * coordinator round-trip latency (queue → engine → response).
+//!
+//! ```sh
+//! cargo bench --bench hotpath
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign, OffchipSim};
+use systo3d::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use systo3d::gemm::{matmul_blocked, Matrix};
+use systo3d::runtime::Engine;
+use systo3d::systolic::{Array3dSim, ArraySize};
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let b = common::bench();
+
+    common::section("cycle-accurate systolic simulator");
+    // Design-H-shaped block: 32x32x4, K=64 -> 65536 MACs per multiply.
+    let size = ArraySize::new(32, 32, 4, 4);
+    let a = Matrix::random(32, 64, 1);
+    let bm = Matrix::random(64, 32, 2);
+    let sim = Array3dSim::new(size);
+    let s = b.run("array3d 32x32x4 K=64 (65536 MACs)", || sim.multiply(&a, &bm));
+    common::report(&s);
+    let macs_per_s = common::per_second(&s, 65536.0);
+    println!("  -> {:.1} M MAC-events/s", macs_per_s / 1e6);
+
+    common::section("event-level off-chip simulator");
+    let design = OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(64, 32, 2, 2), 512, 512),
+        fmax_mhz: 398.0,
+        controller_efficiency: 0.97,
+    };
+    let osim = OffchipSim::new(design);
+    let s = b.run("offchip sim 16384³ (timing only)", || osim.simulate(16384, 16384, 16384));
+    common::report(&s);
+
+    common::section("blocked CPU GEMM (functional fallback)");
+    let ga = Matrix::random(256, 256, 3);
+    let gb = Matrix::random(256, 256, 4);
+    let s = b.run("matmul_blocked 256³", || matmul_blocked(&ga, &gb));
+    common::report(&s);
+    println!(
+        "  -> {:.2} GFLOPS",
+        common::per_second(&s, 2.0 * 256.0f64.powi(3)) / 1e9
+    );
+
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        common::section("PJRT artifact execution");
+        let mut engine = Engine::new(dir).expect("engine");
+        let a64 = Matrix::random(64, 64, 5);
+        let b64 = Matrix::random(64, 64, 6);
+        // Warm the compile cache first.
+        engine.execute("mm_h_64", &[&a64, &b64]).unwrap();
+        let s = b.run("mm_h_64 execute (cached)", || {
+            engine.execute("mm_h_64", &[&a64, &b64]).unwrap()
+        });
+        common::report(&s);
+        let a256 = Matrix::random(256, 256, 7);
+        let b256 = Matrix::random(256, 256, 8);
+        engine.execute("mm_tpu_256", &[&a256, &b256]).unwrap();
+        let s = b.run("mm_tpu_256 execute (cached)", || {
+            engine.execute("mm_tpu_256", &[&a256, &b256]).unwrap()
+        });
+        common::report(&s);
+        println!(
+            "  -> {:.2} GFLOPS through PJRT",
+            common::per_second(&s, 2.0 * 256.0f64.powi(3)) / 1e9
+        );
+    } else {
+        println!("(skipping PJRT benches — run `make artifacts`)");
+    }
+
+    common::section("coordinator round-trip");
+    let svc = GemmService::start(ServiceConfig {
+        artifact_dir: if dir.join("manifest.json").exists() {
+            Some(dir.to_path_buf())
+        } else {
+            None
+        },
+        max_batch: 8,
+        batch_window: Duration::from_micros(200),
+    })
+    .expect("service");
+    let s = b.run("submit_sync 64³", || {
+        let a = Matrix::random(64, 64, 9);
+        let b = Matrix::random(64, 64, 10);
+        svc.submit_sync(GemmRequest { id: 0, a, b, chain: None })
+    });
+    common::report(&s);
+    let snap = svc.metrics.snapshot();
+    println!("  metrics: {} requests, {} errors", snap.requests, snap.errors);
+    assert_eq!(snap.errors, 0);
+}

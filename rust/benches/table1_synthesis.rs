@@ -1,0 +1,49 @@
+//! Bench: regenerate **Table I** (synthesis results A–N) and time the
+//! synthesis-model hot paths.
+//!
+//! ```sh
+//! cargo bench --bench table1_synthesis
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::dse::{paper_catalog, Explorer};
+use systo3d::reports;
+
+fn main() {
+    common::section("TABLE I reproduction");
+    print!("{}", reports::table1());
+    print!("{}", reports::table1_residuals());
+
+    common::section("paper-vs-model verdict");
+    let ex = Explorer::default();
+    let mut agree = 0;
+    let mut total = 0;
+    for spec in paper_catalog() {
+        let p = ex.evaluate(spec.array);
+        total += 1;
+        if p.outcome.fits() == spec.fmax_mhz.is_some() {
+            agree += 1;
+        }
+    }
+    println!("fit/fail agreement: {agree}/{total}");
+    assert_eq!(agree, total, "fitter model regressed vs Table I");
+
+    common::section("synthesis-model throughput");
+    let b = common::bench();
+    let s = b.run("explorer.evaluate (1 design)", || {
+        let ex = Explorer::default();
+        std::hint::black_box(ex.evaluate(systo3d::systolic::ArraySize::new(64, 32, 2, 2)))
+    });
+    common::report(&s);
+    let s = b.run("explorer.sweep (360 candidates)", || {
+        let ex = Explorer::default();
+        std::hint::black_box(ex.sweep(
+            &[16, 28, 32, 48, 64, 70, 72, 96],
+            &[8, 16, 28, 32],
+            &[2, 4, 6, 8],
+        ))
+    });
+    common::report(&s);
+}

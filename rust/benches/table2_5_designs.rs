@@ -1,0 +1,126 @@
+//! Bench: regenerate **Tables II–V** — the per-design d² sweeps with
+//! CPU and GPU reference rows.
+//!
+//! For every fitted design (C, E, F, G–N) and every published d², the
+//! event-level simulator produces (GFLOPS, e_D); alongside we print the
+//! paper's measured value, the deviation, the paper's CPU/GPU rows, our
+//! GPU roofline model, and a **measured CPU** column (this testbed's
+//! blocked SGEMM, sizes ≤ 1344 to keep bench time bounded).
+//!
+//! ```sh
+//! cargo bench --bench table2_5_designs
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::baselines::cpu::measure_blocked_sgemm;
+use systo3d::baselines::gpu::GpuRoofline;
+use systo3d::baselines::published::{lookup, CPU_ROWS, GPU_ROWS};
+use systo3d::blocked::{OffchipDesign, OffchipSim};
+use systo3d::dse::paper_catalog;
+
+/// The paper's measured (T_flops, e_D) per design per sweep index.
+fn paper_rows(id: &str) -> Option<&'static [(f64, f64)]> {
+    Some(match id {
+        "C" => &[(1789.0, 0.51), (2333.0, 0.67), (2715.0, 0.78), (2907.0, 0.84), (3019.0, 0.87), (3083.0, 0.89)],
+        "E" => &[(1622.0, 0.47), (2409.0, 0.71), (2787.0, 0.82), (3043.0, 0.90), (3221.0, 0.95), (3301.0, 0.97)],
+        "F" => &[(1704.0, 0.46), (2513.0, 0.68), (3003.0, 0.81), (3270.0, 0.89), (3445.0, 0.94), (3536.0, 0.96)],
+        "G" => &[(1486.0, 0.45), (2150.0, 0.65), (2625.0, 0.80), (2912.0, 0.89), (3070.0, 0.94), (3159.0, 0.97)],
+        "H" => &[(1588.0, 0.47), (2192.0, 0.65), (2687.0, 0.80), (2954.0, 0.88), (3157.0, 0.94), (3248.0, 0.97)],
+        "I" => &[(1560.0, 0.48), (2160.0, 0.66), (2622.0, 0.80), (2904.0, 0.89), (3065.0, 0.94), (3152.0, 0.97)],
+        "L" => &[(1513.0, 0.47), (2105.0, 0.65), (2579.0, 0.80), (2830.0, 0.88), (3015.0, 0.94), (3104.0, 0.97)],
+        "M" => &[(1469.0, 0.49), (2015.0, 0.67), (2427.0, 0.81), (2649.0, 0.89), (2815.0, 0.94), (2890.0, 0.97)],
+        "N" => &[(1552.0, 0.49), (2078.0, 0.66), (2533.0, 0.81), (2801.0, 0.89), (2951.0, 0.94), (3036.0, 0.97)],
+        _ => return None,
+    })
+}
+
+fn main() {
+    let gpu = GpuRoofline::rtx_2080_ti();
+    let fast = std::env::var("SYSTO3D_BENCH_FAST").as_deref() == Ok("1");
+    let cpu_cap = if fast { 512 } else { 1344 };
+
+    let mut worst_rel: f64 = 0.0;
+    let mut worst_ed: f64 = 0.0;
+    for spec in paper_catalog() {
+        let (Some(blocking), Some(fmax)) = (spec.level1(), spec.fmax_mhz) else { continue };
+        let table_no = match spec.id {
+            "C" => "II",
+            "E" => "III",
+            "F" => "IV",
+            _ => "V",
+        };
+        common::section(&format!(
+            "TABLE {table_no} — design {} ({},{},{},dp={}) @ {fmax} MHz",
+            spec.id, spec.array.di0, spec.array.dj0, spec.array.dk0, spec.array.dp
+        ));
+        println!(
+            "{:>7} | {:>8} {:>6} | {:>8} {:>6} | {:>8} | {:>9} {:>9} | {:>9} {:>9}",
+            "d2", "sim", "e_D", "paper", "e_D", "dev%", "paperCPU", "measCPU", "paperGPU", "modelGPU"
+        );
+        let sim = OffchipSim::new(OffchipDesign {
+            blocking,
+            fmax_mhz: fmax,
+            controller_efficiency: 0.97,
+        });
+        let cpu_key = if ["G", "H", "I", "L", "M", "N"].contains(&spec.id) { "G-N" } else { spec.id };
+        let rows = paper_rows(spec.id).unwrap();
+        let dj2s = spec.sweep_dj2();
+        for (i, &d2) in spec.sweep.iter().enumerate() {
+            let dj2 = dj2s[i];
+            let r = sim.simulate(d2, dj2, d2);
+            let (paper_g, paper_e) = rows[i];
+            let dev = (r.gflops - paper_g) / paper_g * 100.0;
+            worst_rel = worst_rel.max(dev.abs());
+            worst_ed = worst_ed.max((r.e_d - paper_e).abs());
+            let meas_cpu = if d2 <= cpu_cap {
+                format!("{:>9.1}", measure_blocked_sgemm(d2, 42 + d2).gflops)
+            } else {
+                format!("{:>9}", "-")
+            };
+            let pc = lookup(CPU_ROWS, cpu_key, d2).map(|g| format!("{g:>9.0}")).unwrap_or_else(|| format!("{:>9}", "-"));
+            let pg = lookup(GPU_ROWS, cpu_key, d2).map(|g| format!("{g:>9.0}")).unwrap_or_else(|| format!("{:>9}", "-"));
+            println!(
+                "{:>7} | {:>8.0} {:>6.2} | {:>8.0} {:>6.2} | {:>+7.1}% | {} {} | {} {:>9.0}",
+                d2, r.gflops, r.e_d, paper_g, paper_e, dev, pc, meas_cpu, pg,
+                gpu.gflops(d2, d2, dj2)
+            );
+        }
+    }
+
+    common::section("verdict");
+    println!("worst |deviation| vs paper GFLOPS: {worst_rel:.1}%");
+    println!("worst |e_D error| vs paper:        {worst_ed:.3}");
+    println!(
+        "note: the worst residual is design C's large-d² tail (sim 0.97 vs paper 0.89).\n\
+         eq. 19 — the PAPER'S OWN model — also predicts 0.97 there, so the residual is\n\
+         internal to the paper (§VI text vs Table II); see EXPERIMENTS.md."
+    );
+    assert!(worst_rel < 12.0, "simulator drifted from the paper's shape");
+    assert!(worst_ed < 0.09, "efficiency curve drifted");
+
+    common::section("event-simulator throughput");
+    let b = common::bench();
+    let spec = paper_catalog().into_iter().find(|d| d.id == "G").unwrap();
+    let sim = OffchipSim::new(OffchipDesign {
+        blocking: spec.level1().unwrap(),
+        fmax_mhz: 398.0,
+        controller_efficiency: 0.97,
+    });
+    let s = b.run("all Tables II–V cells (54 sims)", || {
+        let mut acc = 0.0;
+        for spec in paper_catalog() {
+            let (Some(bl), Some(f)) = (spec.level1(), spec.fmax_mhz) else { continue };
+            let sim = OffchipSim::new(OffchipDesign { blocking: bl, fmax_mhz: f, controller_efficiency: 0.97 });
+            let djs = spec.sweep_dj2();
+            for (i, &d2) in spec.sweep.iter().enumerate() {
+                acc += sim.simulate(d2, djs[i], d2).gflops;
+            }
+        }
+        acc
+    });
+    common::report(&s);
+    let s = b.run("single 21504³ cell", || sim.simulate(16384, 16384, 16384).gflops);
+    common::report(&s);
+}

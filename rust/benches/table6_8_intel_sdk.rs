@@ -1,0 +1,92 @@
+//! Bench: regenerate **Tables VI–VIII** — the Intel SDK 2D systolic
+//! baseline: synthesis outcomes, performance sweeps, and the host
+//! reordering tax the paper charges against it.
+//!
+//! ```sh
+//! cargo bench --bench table6_8_intel_sdk
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::baselines::intel_sdk::{table6_attempts, IntelSdkSim};
+use systo3d::fpga::Fitter;
+use systo3d::memory::layout::{block_reorder_f32, block_unorder_f32, transpose_f32};
+use systo3d::reports;
+
+fn main() {
+    common::section("TABLE VI reproduction");
+    print!("{}", reports::table6());
+    let fitter = Fitter::default();
+    for (cfg, paper) in table6_attempts() {
+        let fits = fitter.place(&cfg.placement()).fits();
+        assert_eq!(fits, paper.is_some(), "Table VI outcome regressed: {cfg:?}");
+    }
+    println!("fit/fail agreement: 6/6");
+
+    common::section("TABLES VII & VIII reproduction");
+    print!("{}", reports::table7_8());
+    // Check the efficiency curves against the paper's rows.
+    let meas14 = [0.46, 0.74, 0.92, 0.97, 0.98];
+    let meas16 = [0.48, 0.78, 0.95, 0.98, 0.99];
+    for (sim, meas) in [
+        (IntelSdkSim::config_32x14(), &meas14),
+        (IntelSdkSim::config_32x16(), &meas16),
+    ] {
+        for (i, want) in meas.iter().enumerate() {
+            let got = sim.efficiency(512 << i);
+            assert!((got - want).abs() < 0.04, "SDK e_D regressed at {}", 512 << i);
+        }
+    }
+    println!("efficiency curves within ±0.04 of the paper on all 10 points");
+
+    common::section("crossover claim (§VI)");
+    let sdk = IntelSdkSim::config_32x16();
+    let ours = {
+        use systo3d::blocked::{OffchipDesign, OffchipSim};
+        let spec = systo3d::dse::paper_catalog().into_iter().find(|d| d.id == "G").unwrap();
+        OffchipSim::new(OffchipDesign {
+            blocking: spec.level1().unwrap(),
+            fmax_mhz: spec.fmax_mhz.unwrap(),
+            controller_efficiency: 0.97,
+        })
+    };
+    for d2 in [1024u64, 2048, 4096, 8192] {
+        let sdk_e = sdk.efficiency(d2);
+        let our_e = ours.simulate(d2, d2, d2).e_d;
+        println!("  d2={d2}: SDK e_D {sdk_e:.2} vs 3D design e_D {our_e:.2}");
+    }
+    assert!(sdk.efficiency(2048) > 0.9 && ours.simulate(2048, 2048, 2048).e_d < 0.9);
+    assert!(ours.simulate(8192, 8192, 8192).e_d > 0.9);
+    println!("SDK crosses e_D=0.9 one octave earlier — reproduced");
+
+    common::section("host-reorder tax (the 3D design's advantage)");
+    let (m, k, n) = (4096u64, 4096u64, 4096u64);
+    let kernel = sdk.seconds(m, k, n);
+    let with_tax = sdk.seconds_with_reorders(m, k, n);
+    println!(
+        "  SDK 4096³: kernel {kernel:.4} s, with host reorders {with_tax:.4} s (+{:.1}%)",
+        (with_tax / kernel - 1.0) * 100.0
+    );
+    println!("  3D design: A transposed once, C stays row-major -> chained multiplies free");
+
+    common::section("reorder-kernel microbenches (measured on this host)");
+    let b = common::bench();
+    let n_el = 1024usize;
+    let src: Vec<f32> = (0..n_el * n_el).map(|x| x as f32).collect();
+    let s = b.run("transpose 1024x1024 f32", || transpose_f32(&src, n_el, n_el));
+    common::report(&s);
+    println!(
+        "  -> {:.2} GB/s effective",
+        2.0 * (n_el * n_el * 4) as f64 / s.median() / 1e9
+    );
+    let s = b.run("block_reorder 1024x1024 (32x8 blocks)", || {
+        block_reorder_f32(&src, n_el, n_el, 32, 8)
+    });
+    common::report(&s);
+    let blocked = block_reorder_f32(&src, n_el, n_el, 32, 8);
+    let s = b.run("block_unorder 1024x1024", || {
+        block_unorder_f32(&blocked, n_el, n_el, 32, 8)
+    });
+    common::report(&s);
+}

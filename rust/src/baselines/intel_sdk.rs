@@ -1,0 +1,264 @@
+//! The Intel FPGA SDK for OpenCL matrix-multiplication example — the
+//! paper's principal baseline (§VI, Tables VI–VIII).
+//!
+//! A bi-dimensional PE_ROWS × PE_COLS systolic array of dot-product
+//! units (size 4, 8 or 16; optionally split into two size-4 units),
+//! built from multiple kernels connected by channels. Differences from
+//! the paper's 3D design that the model captures:
+//!
+//! * **Broadcast-style interconnect** → the per-PE routing pressure term
+//!   in the fitter model (`InterconnectStyle::Broadcast`), which is what
+//!   makes its 4096-DSP dot-8 configurations fail where the 3D design's
+//!   fit.
+//! * **Fully overlapped writes** → efficiency rises one octave earlier
+//!   (e_D > 0.9 from d_k2 ≥ 2048 vs 4096); modelled with a fill/drain
+//!   overhead calibrated on the published rows.
+//! * **Host-side reordering tax** → A block-reordered, B transposed +
+//!   block-reordered, C two-level reverse-reordered; the end-to-end
+//!   comparison in the coordinator charges these through
+//!   [`crate::memory::layout`].
+
+use crate::fpga::{InterconnectStyle, PlacementRequest};
+use crate::memory::layout::{HostReorder, Layout};
+use crate::perfmodel::{eq5_peak_flops, flop_count};
+
+/// One synthesis configuration of the SDK example.
+#[derive(Clone, Copy, Debug)]
+pub struct IntelSdkConfig {
+    pub pe_rows: u32,
+    pub pe_cols: u32,
+    /// DOT_PROD_VECTOR_SIZE (4, 8 or 16).
+    pub dot_size: u32,
+    /// FORCE_DOT_4: split into two size-4 units per PE.
+    pub force_dot_4: bool,
+}
+
+impl IntelSdkConfig {
+    /// DSPs per PE (dot units × size).
+    pub fn dsps_per_pe(&self) -> u32 {
+        self.dot_size // splitting doesn't change the DSP count
+    }
+
+    pub fn pes(&self) -> u32 {
+        self.pe_rows * self.pe_cols
+    }
+
+    pub fn dsps(&self) -> u32 {
+        self.pes() * self.dsps_per_pe()
+    }
+
+    /// Effective dot-unit size for placement (4 when split).
+    pub fn placement_dot(&self) -> u32 {
+        if self.force_dot_4 {
+            4
+        } else {
+            self.dot_size
+        }
+    }
+
+    /// Matrix-size constraints (§VI): d_i2 multiple of 1024; d_j2
+    /// multiple of 32·PE_COLS (448 for 32×14, 512 for 32×16).
+    pub fn di2_multiple(&self) -> u64 {
+        1024
+    }
+
+    pub fn dj2_multiple(&self) -> u64 {
+        32 * self.pe_cols as u64
+    }
+
+    /// Placement request for the fitter model.
+    pub fn placement(&self) -> PlacementRequest {
+        PlacementRequest {
+            dsps: self.dsps(),
+            dp: self.placement_dot(),
+            pes: self.pes(),
+            style: InterconnectStyle::Broadcast,
+        }
+    }
+
+    /// Host reorders needed before/after one multiplication (§VI).
+    pub fn host_reorders(&self, m: u64, k: u64, n: u64) -> Vec<HostReorder> {
+        let blk = Layout::Blocked { bi: self.pe_rows, bj: self.dot_size };
+        vec![
+            // A: block-wise reorder.
+            HostReorder { from: Layout::RowMajor, to: blk, m, n: k },
+            // B: transpose + block-wise reorder.
+            HostReorder { from: Layout::RowMajor, to: Layout::ColMajor, m: k, n },
+            HostReorder { from: Layout::ColMajor, to: blk, m: k, n },
+            // C: two-level reverse reorder back to row-major.
+            HostReorder {
+                from: Layout::TwoLevelBlocked { bi: self.pe_rows, bj: self.pe_cols },
+                to: Layout::RowMajor,
+                m,
+                n,
+            },
+        ]
+    }
+}
+
+/// The calibrated performance model of the SDK design.
+#[derive(Clone, Debug)]
+pub struct IntelSdkSim {
+    pub config: IntelSdkConfig,
+    pub fmax_mhz: f64,
+    /// Fill/drain overhead constant: e_D = d_k2² / (d_k2² + c_fill).
+    /// Calibrated on the d²=512 row of Tables VII/VIII.
+    pub c_fill: f64,
+}
+
+impl IntelSdkSim {
+    /// The 32×14 dot-8 configuration (README-optimal; Table VII).
+    pub fn config_32x14() -> Self {
+        Self {
+            config: IntelSdkConfig { pe_rows: 32, pe_cols: 14, dot_size: 8, force_dot_4: false },
+            fmax_mhz: 412.0,
+            c_fill: 3.07e5,
+        }
+    }
+
+    /// The 32×16 2×dot-4 configuration (best found; Table VIII).
+    pub fn config_32x16() -> Self {
+        Self {
+            config: IntelSdkConfig { pe_rows: 32, pe_cols: 16, dot_size: 8, force_dot_4: true },
+            fmax_mhz: 407.0,
+            c_fill: 2.84e5,
+        }
+    }
+
+    pub fn peak_gflops(&self) -> f64 {
+        eq5_peak_flops(self.config.dsps(), self.fmax_mhz) / 1e9
+    }
+
+    /// DSP efficiency at contraction size d_k2.
+    ///
+    /// The SDK design overlaps Read, Compute and Write completely; what
+    /// remains is the per-block pipeline fill/drain of its channel-
+    /// connected kernel chain, amortized quadratically in d_k2 (fill is
+    /// linear in d_k2 per block row while work grows as d_k2²).
+    pub fn efficiency(&self, dk2: u64) -> f64 {
+        let k2 = (dk2 * dk2) as f64;
+        k2 / (k2 + self.c_fill)
+    }
+
+    /// Sustained GFLOPS for an (m, k, n) problem (kernel time only, like
+    /// the paper's measurement).
+    pub fn gflops(&self, m: u64, k: u64, n: u64) -> f64 {
+        self.peak_gflops() * self.efficiency(k) * flop_count(m, n, k) as f64
+            / (2.0 * m as f64 * n as f64 * k as f64)
+    }
+
+    /// Kernel seconds for an (m, k, n) problem.
+    pub fn seconds(&self, m: u64, k: u64, n: u64) -> f64 {
+        flop_count(m, n, k) as f64 / (self.gflops(m, k, n) * 1e9)
+    }
+
+    /// End-to-end seconds including the host reorder tax — the cost the
+    /// paper argues makes the SDK design unusable for chained multiplies.
+    pub fn seconds_with_reorders(&self, m: u64, k: u64, n: u64) -> f64 {
+        let reorder: f64 =
+            self.config.host_reorders(m, k, n).iter().map(|r| r.seconds()).sum();
+        self.seconds(m, k, n) + reorder
+    }
+}
+
+/// All Table VI synthesis attempts with their published outcomes.
+pub fn table6_attempts() -> Vec<(IntelSdkConfig, Option<f64>)> {
+    let cfg = |r, c, d, f4| IntelSdkConfig { pe_rows: r, pe_cols: c, dot_size: d, force_dot_4: f4 };
+    vec![
+        (cfg(32, 18, 8, false), None),
+        (cfg(32, 18, 8, true), None),
+        (cfg(32, 16, 8, false), None),
+        (cfg(32, 16, 8, true), Some(407.0)),
+        (cfg(32, 32, 4, false), None),
+        (cfg(32, 14, 8, false), Some(412.0)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_fit_outcomes_via_fitter() {
+        let fitter = crate::fpga::Fitter::default();
+        for (cfg, fmax) in table6_attempts() {
+            let fits = fitter.place(&cfg.placement()).fits();
+            assert_eq!(fits, fmax.is_some(), "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn table6_dsp_counts() {
+        let s14 = IntelSdkSim::config_32x14();
+        assert_eq!(s14.config.dsps(), 3584);
+        let s16 = IntelSdkSim::config_32x16();
+        assert_eq!(s16.config.dsps(), 4096);
+    }
+
+    #[test]
+    fn table6_peak_gflops() {
+        assert!((IntelSdkSim::config_32x14().peak_gflops() - 2953.0).abs() < 1.0);
+        assert!((IntelSdkSim::config_32x16().peak_gflops() - 3334.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table7_efficiency_curve() {
+        // Table VII: e_D = .46 .74 .92 .97 .98 at d2=512..8192.
+        let s = IntelSdkSim::config_32x14();
+        let meas = [0.46, 0.74, 0.92, 0.97, 0.98];
+        for (i, d2) in [512u64, 1024, 2048, 4096, 8192].iter().enumerate() {
+            let e = s.efficiency(*d2);
+            assert!((e - meas[i]).abs() < 0.04, "d2={d2}: {e:.3} vs {}", meas[i]);
+        }
+    }
+
+    #[test]
+    fn table8_efficiency_curve() {
+        // Table VIII: e_D = .48 .78 .95 .98 .99.
+        let s = IntelSdkSim::config_32x16();
+        let meas = [0.48, 0.78, 0.95, 0.98, 0.99];
+        for (i, d2) in [512u64, 1024, 2048, 4096, 8192].iter().enumerate() {
+            let e = s.efficiency(*d2);
+            assert!((e - meas[i]).abs() < 0.04, "d2={d2}: {e:.3} vs {}", meas[i]);
+        }
+    }
+
+    #[test]
+    fn crossover_one_octave_before_3d_design() {
+        // §VI: SDK reaches e_D > 0.9 at d_k2 >= 2048; the 3D designs only
+        // at d_k2 > 4096 (checked in blocked::offchip tests).
+        let s = IntelSdkSim::config_32x16();
+        assert!(s.efficiency(2048) > 0.9);
+        assert!(s.efficiency(1024) < 0.9);
+    }
+
+    #[test]
+    fn matrix_constraints() {
+        let s14 = IntelSdkSim::config_32x14().config;
+        assert_eq!(s14.dj2_multiple(), 448);
+        let s16 = IntelSdkSim::config_32x16().config;
+        assert_eq!(s16.dj2_multiple(), 512);
+    }
+
+    #[test]
+    fn reorder_tax_positive_and_chargeable() {
+        let s = IntelSdkSim::config_32x16();
+        let (m, k, n) = (4096, 4096, 4096);
+        let with = s.seconds_with_reorders(m, k, n);
+        let without = s.seconds(m, k, n);
+        assert!(with > without);
+        // Four full-matrix permutation passes: a visible, not dominant, tax.
+        let tax = (with - without) / without;
+        assert!(tax > 0.05, "tax {tax}");
+    }
+
+    #[test]
+    fn gflops_accounts_paper_flop_convention() {
+        // gflops uses (2k-1) FLOP like the paper: slightly below
+        // peak·e_D which assumes 2k.
+        let s = IntelSdkSim::config_32x14();
+        let g = s.gflops(1024, 512, 448);
+        assert!(g < s.peak_gflops() * s.efficiency(512));
+        assert!(g > s.peak_gflops() * s.efficiency(512) * 0.99);
+    }
+}

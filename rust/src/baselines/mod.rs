@@ -1,0 +1,22 @@
+//! The paper's comparison baselines (§VI).
+//!
+//! * [`intel_sdk`] — the Intel FPGA SDK matrix-multiply example: a 2D
+//!   systolic array with channel-connected kernels; reproduces Tables
+//!   VI–VIII and the host-reordering tax the paper charges it.
+//! * [`published`] — fixed published reference points: FBLAS and the
+//!   authors' earlier Cannon implementation (both non-Hyperflex), and
+//!   the paper's CPU (MKL / Xeon 6148) and GPU (cuBLAS / RTX 2080 Ti)
+//!   rows.
+//! * [`cpu`] — SGEMM measured on *this* testbed through the same code
+//!   paths the coordinator serves (blocked Rust kernel and the PJRT
+//!   runtime).
+//! * [`gpu`] — an RTX 2080 Ti roofline stand-in (no GPU in this
+//!   environment; DESIGN.md §2 documents the substitution).
+
+pub mod cpu;
+pub mod gpu;
+pub mod intel_sdk;
+pub mod published;
+
+pub use intel_sdk::{IntelSdkConfig, IntelSdkSim};
+pub use published::{PublishedPoint, CPU_ROWS, FBLAS, CANNON, GPU_ROWS};

@@ -1,0 +1,240 @@
+//! Definition 3 block-matrix representation and the level-1 blocking of
+//! Definition 4 (eqs. 14–18).
+
+use crate::gemm::Matrix;
+use crate::systolic::ArraySize;
+
+/// The level-1 blocking (superscript-1 sizes): `d_i1 × d_j1` C blocks,
+/// each computed by sweeping the systolic array over second-level blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Level1Blocking {
+    pub array: ArraySize,
+    pub di1: u32,
+    pub dj1: u32,
+}
+
+impl Level1Blocking {
+    pub fn new(array: ArraySize, di1: u32, dj1: u32) -> Self {
+        let b = Self { array, di1, dj1 };
+        b.validate().expect("invalid Level1Blocking");
+        b
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.array.validate()?;
+        if self.di1 % self.array.di0 != 0 {
+            return Err(format!("di1={} not a multiple of di0={}", self.di1, self.array.di0));
+        }
+        if self.dj1 % self.array.dj0 != 0 {
+            return Err(format!("dj1={} not a multiple of dj0={}", self.dj1, self.array.dj0));
+        }
+        Ok(())
+    }
+
+    /// r_A — reuse of each A element (eq. 18: d_j1 = r_A·d_j0).
+    pub fn reuse_a(&self) -> u32 {
+        self.dj1 / self.array.dj0
+    }
+
+    /// r_B — reuse of each B element (eq. 18: d_i1 = r_B·d_i0).
+    pub fn reuse_b(&self) -> u32 {
+        self.di1 / self.array.di0
+    }
+
+    /// Pipeline iterations per second-level slab: one iteration per
+    /// (i, j) second-level block pair = r_A·r_B.
+    pub fn iterations_per_slab(&self) -> u64 {
+        self.reuse_a() as u64 * self.reuse_b() as u64
+    }
+
+    /// Global-memory read rates (floats/cycle) implied by the blocking:
+    /// `𝓑_gA = 𝓑_A/r_A`, `𝓑_gB = 𝓑_B/r_B` (inverting eq. 14).
+    pub fn implied_global_rates(&self) -> (f64, f64) {
+        let (ba, bb) = self.array.face_throughputs();
+        (ba as f64 / self.reuse_a() as f64, bb as f64 / self.reuse_b() as f64)
+    }
+
+    /// Derive the minimum valid blocking for a channel delivering
+    /// `global_floats_per_cycle` (eq. 14 + eq. 18, rounding reuse up).
+    pub fn derive_min(array: ArraySize, global_floats_per_cycle: u32) -> Self {
+        let (ba, bb) = array.face_throughputs();
+        let g = global_floats_per_cycle as u64;
+        let ra = crate::util::div_ceil(ba, g) as u32;
+        let rb = crate::util::div_ceil(bb, g) as u32;
+        Self::new(array, rb * array.di0, ra * array.dj0)
+    }
+
+    /// Validate off-chip sizes against the table-caption constraints:
+    /// d_i2 % d_i1 == 0, d_j2 % d_j1 == 0, d_k2 % d_k0 == 0.
+    pub fn validate_offchip(&self, di2: u64, dj2: u64, dk2: u64) -> Result<(), String> {
+        if di2 % self.di1 as u64 != 0 {
+            return Err(format!("d_i2={di2} must be a multiple of d_i1={}", self.di1));
+        }
+        if dj2 % self.dj1 as u64 != 0 {
+            return Err(format!("d_j2={dj2} must be a multiple of d_j1={}", self.dj1));
+        }
+        if dk2 % self.array.dk0 as u64 != 0 {
+            return Err(format!("d_k2={dk2} must be a multiple of d_k0={}", self.array.dk0));
+        }
+        Ok(())
+    }
+
+    /// On-chip bytes needed: double-buffered A/B staging plus the C
+    /// block (for the M20K budget check).
+    pub fn onchip_floats(&self) -> u64 {
+        let a = 2 * self.di1 as u64 * self.array.dk0 as u64;
+        let b = 2 * self.array.dk0 as u64 * self.dj1 as u64;
+        let c = self.di1 as u64 * self.dj1 as u64;
+        a + b + c
+    }
+}
+
+/// A matrix stored with Definition-3 block structure metadata (row-major
+/// payload; the views do the index math).
+#[derive(Clone, Debug)]
+pub struct BlockedLayout<'m> {
+    pub matrix: &'m Matrix,
+    pub bi: usize,
+    pub bj: usize,
+}
+
+impl<'m> BlockedLayout<'m> {
+    pub fn new(matrix: &'m Matrix, bi: usize, bj: usize) -> Self {
+        assert!(matrix.rows % bi == 0, "rows {} not divisible by {}", matrix.rows, bi);
+        assert!(matrix.cols % bj == 0, "cols {} not divisible by {}", matrix.cols, bj);
+        Self { matrix, bi, bj }
+    }
+
+    /// Number of block rows / cols.
+    pub fn grid(&self) -> (usize, usize) {
+        (self.matrix.rows / self.bi, self.matrix.cols / self.bj)
+    }
+
+    /// Copy out block (I, J) — `M̄^I_J` of Definition 3.
+    pub fn block(&self, bi_idx: usize, bj_idx: usize) -> Matrix {
+        let (gi, gj) = self.grid();
+        assert!(bi_idx < gi && bj_idx < gj, "block index out of range");
+        let mut out = Matrix::zeros(self.bi, self.bj);
+        for i in 0..self.bi {
+            let src_row = bi_idx * self.bi + i;
+            let src = &self.matrix.data
+                [src_row * self.matrix.cols + bj_idx * self.bj..][..self.bj];
+            out.data[i * self.bj..(i + 1) * self.bj].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write a block back into a target matrix at position (I, J).
+    pub fn write_block(target: &mut Matrix, bi: usize, bj: usize,
+                       bi_idx: usize, bj_idx: usize, block: &Matrix) {
+        assert_eq!((block.rows, block.cols), (bi, bj));
+        for i in 0..bi {
+            let dst_row = bi_idx * bi + i;
+            target.data[dst_row * target.cols + bj_idx * bj..][..bj]
+                .copy_from_slice(&block.data[i * bj..(i + 1) * bj]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g_array() -> ArraySize {
+        ArraySize::new(64, 32, 2, 2)
+    }
+
+    #[test]
+    fn design_g_blocking_matches_table5_caption() {
+        // Designs G–N: d1 = 512 (Table V caption); at 8 floats/cycle.
+        let b = Level1Blocking::derive_min(g_array(), 8);
+        assert_eq!((b.di1, b.dj1), (512, 512));
+        assert_eq!(b.reuse_a(), 16);
+        assert_eq!(b.reuse_b(), 8);
+        assert_eq!(b.iterations_per_slab(), 128);
+    }
+
+    #[test]
+    fn design_c_blocking_compatible_with_table2_caption() {
+        // Design C: paper uses d1 = 672 (= 24·28); the minimum at 8
+        // floats/cycle is 588 (= 21·28). 672 must validate.
+        let c = ArraySize::new(28, 28, 6, 1);
+        let min = Level1Blocking::derive_min(c, 8);
+        assert_eq!(min.di1, 21 * 28);
+        let paper = Level1Blocking::new(c, 672, 672);
+        assert!(paper.di1 >= min.di1 && paper.dj1 >= min.dj1);
+        // 672 = 24·28 -> implied global rate 7 floats/cycle <= 8.
+        let (ga, gb) = paper.implied_global_rates();
+        assert!(ga <= 8.0 && gb <= 8.0, "({ga},{gb})");
+    }
+
+    #[test]
+    fn design_f_rectangular_blocking() {
+        // Design F (70, 32, 2, 2): Table IV caption d_i1=560, d_j1=640.
+        let f = ArraySize::new(70, 32, 2, 2);
+        let b = Level1Blocking::new(f, 560, 640);
+        assert_eq!(b.reuse_b(), 8);
+        assert_eq!(b.reuse_a(), 20);
+        let (ga, gb) = b.implied_global_rates();
+        assert!(ga <= 8.0 && gb <= 8.0, "({ga},{gb})");
+    }
+
+    #[test]
+    fn implied_rates_invert_eq14() {
+        let b = Level1Blocking::new(g_array(), 512, 512);
+        let (ga, gb) = b.implied_global_rates();
+        assert_eq!(ga, 128.0 / 16.0);
+        assert_eq!(gb, 64.0 / 8.0);
+    }
+
+    #[test]
+    fn offchip_validation() {
+        let b = Level1Blocking::new(g_array(), 512, 512);
+        assert!(b.validate_offchip(512, 512, 512).is_ok());
+        assert!(b.validate_offchip(512, 512, 511).is_err());
+        assert!(b.validate_offchip(513, 512, 512).is_err());
+        assert!(b.validate_offchip(21504, 16384, 4096).is_ok());
+    }
+
+    #[test]
+    fn invalid_blocking_rejected() {
+        assert!(Level1Blocking { array: g_array(), di1: 100, dj1: 512 }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn block_view_roundtrip() {
+        let m = Matrix::random(8, 12, 42);
+        let v = BlockedLayout::new(&m, 4, 6);
+        assert_eq!(v.grid(), (2, 2));
+        let mut rebuilt = Matrix::zeros(8, 12);
+        for bi in 0..2 {
+            for bj in 0..2 {
+                let blk = v.block(bi, bj);
+                BlockedLayout::write_block(&mut rebuilt, 4, 6, bi, bj, &blk);
+            }
+        }
+        assert_eq!(rebuilt.data, m.data);
+    }
+
+    #[test]
+    fn block_view_content() {
+        // M̄^I_J (i,j) == M(d_i1·I + i, d_j1·J + j) — Definition 3.
+        let m = Matrix::random(6, 6, 7);
+        let v = BlockedLayout::new(&m, 3, 2);
+        let blk = v.block(1, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                assert_eq!(blk.at(i, j), m.at(3 + i, 4 + j));
+            }
+        }
+    }
+
+    #[test]
+    fn onchip_footprint() {
+        let b = Level1Blocking::new(g_array(), 512, 512);
+        // 2·512·2 + 2·2·512 + 512·512 floats.
+        assert_eq!(b.onchip_floats(), 2048 + 2048 + 262144);
+    }
+}

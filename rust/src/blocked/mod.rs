@@ -1,0 +1,17 @@
+//! The two-level blocked off-chip matrix multiplication (paper §IV–V).
+//!
+//! * [`blocking`] — Definition 3 block-matrix views and the level-1
+//!   blocking derived from reuse ratios (eqs. 14–18).
+//! * [`phases`] — the four-phase Read/Compute/Write schedule of §V with
+//!   Read–Compute overlap, and the compute-fraction model (eq. 19).
+//! * [`offchip`] — the event-level simulator: full Tables II–V runs in
+//!   microseconds by walking phases instead of MACs, with an optional
+//!   functional mode (exact accumulation order) for small sizes.
+
+pub mod blocking;
+pub mod offchip;
+pub mod phases;
+
+pub use blocking::{BlockedLayout, Level1Blocking};
+pub use offchip::{OffchipDesign, OffchipSim, SimReport};
+pub use phases::{PhaseCounts, PhaseKind, PhaseSchedule};

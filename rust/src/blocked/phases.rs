@@ -1,0 +1,183 @@
+//! The four-phase schedule of §V (Figure 3) and the compute-fraction
+//! model (eq. 19).
+//!
+//! Computing one C̄ block:
+//!
+//! 1. **Read₀** — fetch the first A block column and B block row into
+//!    the on-chip mapped systems; initialize the C FIFOs.
+//! 2. **Read‖Compute** — for each interior slab k, fetch slab k+1 while
+//!    the array consumes slab k (double buffering).
+//! 3. **Compute** — the last slab computes with nothing left to read.
+//! 4. **Write** — drain C̄ to global memory, *not* overlapped (the
+//!    paper's acknowledged efficiency gap vs. the Intel SDK design).
+//!
+//! All counts are in pipeline *iterations* (II = 1 ⇒ cycles) of the
+//! single fused loop.
+
+use super::blocking::Level1Blocking;
+
+/// Phase kinds for timeline rendering (Figure 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    InitialRead,
+    ReadCompute,
+    ComputeOnly,
+    Write,
+}
+
+/// Iteration counts for one C̄ block.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseCounts {
+    pub initial_read: u64,
+    /// Per-slab iterations while reading the next slab (max of compute
+    /// and read streams — whichever dominates paces the pipeline).
+    pub per_overlapped_slab: u64,
+    /// Number of overlapped slabs (d_k2/d_k0 − 1).
+    pub overlapped_slabs: u64,
+    /// Iterations of the final, compute-only slab.
+    pub final_compute: u64,
+    pub write: u64,
+}
+
+impl PhaseCounts {
+    pub fn total(&self) -> u64 {
+        self.initial_read
+            + self.per_overlapped_slab * self.overlapped_slabs
+            + self.final_compute
+            + self.write
+    }
+
+    /// Iterations during which the dot-product units compute.
+    pub fn compute_iterations(&self) -> u64 {
+        self.per_overlapped_slab.min(self.final_compute) * self.overlapped_slabs
+            + self.final_compute
+    }
+
+    /// Measured compute fraction c_% = #it_comp / #it_tot.
+    pub fn compute_fraction(&self) -> f64 {
+        self.compute_iterations() as f64 / self.total() as f64
+    }
+}
+
+/// The schedule generator for a design.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseSchedule {
+    pub blocking: Level1Blocking,
+    /// Global read rates for A and B in floats/cycle (≤ eq. 4 ceiling).
+    pub b_ga: f64,
+    pub b_gb: f64,
+    /// Effective write rate in floats/cycle (LSU ceiling / stalls
+    /// included; §V: Write stalls harmlessly in Phase 4).
+    pub b_w: f64,
+}
+
+impl PhaseSchedule {
+    /// Counts for one C̄ block of a (d_i2, d_j2, d_k2) problem.
+    pub fn counts(&self, dk2: u64) -> PhaseCounts {
+        let b = &self.blocking;
+        let dk0 = b.array.dk0 as u64;
+        assert!(dk2 % dk0 == 0);
+        let slabs = dk2 / dk0;
+        let compute_per_slab = b.iterations_per_slab();
+        let read_a = (b.di1 as u64 * dk0) as f64 / self.b_ga;
+        let read_b = (b.array.dk0 as u64 * b.dj1 as u64) as f64 / self.b_gb;
+        let read_per_slab = read_a.max(read_b).ceil() as u64;
+        let write = ((b.di1 as u64 * b.dj1 as u64) as f64 / self.b_w).ceil() as u64;
+        PhaseCounts {
+            initial_read: read_per_slab,
+            per_overlapped_slab: compute_per_slab.max(read_per_slab),
+            overlapped_slabs: slabs.saturating_sub(1),
+            final_compute: compute_per_slab,
+            write,
+        }
+    }
+
+    /// Figure-3-style timeline: (kind, start, end) iteration spans for
+    /// one C̄ block.
+    pub fn timeline(&self, dk2: u64) -> Vec<(PhaseKind, u64, u64)> {
+        let c = self.counts(dk2);
+        let mut spans = Vec::new();
+        let mut t = 0u64;
+        spans.push((PhaseKind::InitialRead, t, t + c.initial_read));
+        t += c.initial_read;
+        for _ in 0..c.overlapped_slabs {
+            spans.push((PhaseKind::ReadCompute, t, t + c.per_overlapped_slab));
+            t += c.per_overlapped_slab;
+        }
+        spans.push((PhaseKind::ComputeOnly, t, t + c.final_compute));
+        t += c.final_compute;
+        spans.push((PhaseKind::Write, t, t + c.write));
+        spans
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::eq19_compute_fraction;
+    use crate::systolic::ArraySize;
+
+    fn design_g_schedule() -> PhaseSchedule {
+        let b = Level1Blocking::new(ArraySize::new(64, 32, 2, 2), 512, 512);
+        PhaseSchedule { blocking: b, b_ga: 8.0, b_gb: 8.0, b_w: 8.0 }
+    }
+
+    #[test]
+    fn perfect_overlap_at_design_point() {
+        // eq. 18 sizing makes per-slab read exactly match per-slab
+        // compute: 128 iterations each for design G.
+        let s = design_g_schedule();
+        let c = s.counts(512);
+        assert_eq!(c.initial_read, 128);
+        assert_eq!(c.per_overlapped_slab, 128);
+        assert_eq!(c.final_compute, 128);
+    }
+
+    #[test]
+    fn counts_match_eq19_model() {
+        // c_% from the schedule ≈ eq. 19 for design G across sizes.
+        let s = design_g_schedule();
+        for d2 in [512u64, 1024, 2048, 4096, 8192, 16384] {
+            let c = s.counts(d2);
+            let model = eq19_compute_fraction(d2, 2, 64, 32, 8);
+            let got = c.compute_fraction();
+            assert!(
+                (got - model).abs() < 0.01,
+                "d2={d2}: schedule {got:.4} vs eq19 {model:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn write_phase_dominates_small_k() {
+        let s = design_g_schedule();
+        let c = s.counts(512);
+        // At d2 = d1 the exposed write is as large as all compute.
+        assert_eq!(c.write, 512 * 512 / 8);
+        assert!(c.write as f64 / c.total() as f64 > 0.4);
+    }
+
+    #[test]
+    fn timeline_is_contiguous_and_ordered() {
+        let s = design_g_schedule();
+        let tl = s.timeline(2048);
+        assert_eq!(tl.first().unwrap().0, PhaseKind::InitialRead);
+        assert_eq!(tl.last().unwrap().0, PhaseKind::Write);
+        for w in tl.windows(2) {
+            assert_eq!(w[0].2, w[1].1, "gap in timeline");
+        }
+        let n_rc = tl.iter().filter(|s| s.0 == PhaseKind::ReadCompute).count();
+        assert_eq!(n_rc as u64, 2048 / 2 - 1);
+    }
+
+    #[test]
+    fn slower_read_paces_the_slab() {
+        // Halving the A read rate doubles the overlapped-slab length:
+        // the pipeline stalls on memory exactly as eq. 2/3 predict.
+        let b = Level1Blocking::new(ArraySize::new(64, 32, 2, 2), 512, 512);
+        let s = PhaseSchedule { blocking: b, b_ga: 4.0, b_gb: 8.0, b_w: 8.0 };
+        let c = s.counts(512);
+        assert_eq!(c.per_overlapped_slab, 256);
+        assert!(c.compute_fraction() < design_g_schedule().counts(512).compute_fraction());
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal argument parser (no `clap` in the offline registry).
+//!
+//! Grammar: `systo3d <subcommand> [--flag] [--key value] ...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("tables --residuals --design G");
+        assert_eq!(a.subcommand.as_deref(), Some("tables"));
+        assert!(a.flag("residuals"));
+        assert_eq!(a.get("design"), Some("G"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("simulate --d2=4096 --design=F");
+        assert_eq!(a.get_u64("d2", 0).unwrap(), 4096);
+        assert_eq!(a.get("design"), Some("F"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_subarg() {
+        let a = parse("serve --verbose");
+        assert!(a.flag("verbose"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("verify mm_h_64 other");
+        assert_eq!(a.positional, vec!["mm_h_64", "other"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("simulate");
+        assert_eq!(a.get_u64("d2", 4096).unwrap(), 4096);
+        assert_eq!(a.get_str("design", "G"), "G");
+        assert!(a.get_u64("d2", 1).is_ok());
+    }
+
+    #[test]
+    fn bad_int_reported() {
+        let a = parse("simulate --d2 xyz");
+        assert!(a.get_u64("d2", 0).is_err());
+    }
+}

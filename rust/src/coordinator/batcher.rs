@@ -1,0 +1,100 @@
+//! Shape-keyed request batching.
+//!
+//! Requests arriving within a batching window that share an execution
+//! route are grouped so the engine thread dispatches them back-to-back
+//! against one cached executable — the dynamic-batching shape every
+//! serving stack uses, scaled to this workload (same-shape GEMMs
+//! amortize executable lookup and keep the instruction cache hot; on a
+//! real accelerator they would share one device context).
+
+use std::collections::HashMap;
+
+/// A batch of request ids sharing a route key.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Batch<T> {
+    pub key: String,
+    pub items: Vec<T>,
+}
+
+/// Groups items by key preserving arrival order within groups, emitting
+/// batches capped at `max_batch`.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        Self { max_batch }
+    }
+
+    pub fn group<T>(&self, items: Vec<(String, T)>) -> Vec<Batch<T>> {
+        let mut order: Vec<String> = Vec::new();
+        let mut groups: HashMap<String, Vec<T>> = HashMap::new();
+        for (key, item) in items {
+            if !groups.contains_key(&key) {
+                order.push(key.clone());
+            }
+            groups.entry(key).or_default().push(item);
+        }
+        let mut out = Vec::new();
+        for key in order {
+            let mut items = groups.remove(&key).unwrap();
+            while items.len() > self.max_batch {
+                let rest = items.split_off(self.max_batch);
+                out.push(Batch { key: key.clone(), items });
+                items = rest;
+            }
+            out.push(Batch { key, items });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_by_key_preserving_order() {
+        let b = Batcher::new(10);
+        let batches = b.group(vec![
+            ("a".into(), 1),
+            ("b".into(), 2),
+            ("a".into(), 3),
+            ("b".into(), 4),
+        ]);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].key, "a");
+        assert_eq!(batches[0].items, vec![1, 3]);
+        assert_eq!(batches[1].items, vec![2, 4]);
+    }
+
+    #[test]
+    fn splits_oversize_batches() {
+        let b = Batcher::new(2);
+        let batches = b.group(vec![
+            ("a".into(), 1),
+            ("a".into(), 2),
+            ("a".into(), 3),
+            ("a".into(), 4),
+            ("a".into(), 5),
+        ]);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].items, vec![1, 2]);
+        assert_eq!(batches[2].items, vec![5]);
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        let b = Batcher::new(4);
+        assert!(b.group(Vec::<(String, u32)>::new()).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_rejected() {
+        Batcher::new(0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Service metrics: lock-free counters + latency reservoir.
+
+use crate::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics handle (cheap to clone via Arc at the service level).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub artifact_hits: AtomicU64,
+    pub fallbacks: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    /// Total FLOPs served (paper convention).
+    pub flops: AtomicU64,
+    latencies: Mutex<Vec<f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        self.latencies.lock().unwrap().push(seconds);
+    }
+
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_flops(&self, f: u64) {
+        self.flops.fetch_add(f, Ordering::Relaxed);
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::from_samples("request latency", self.latencies.lock().unwrap().clone())
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            artifact_hits: self.artifact_hits.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub artifact_hits: u64,
+    pub fallbacks: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub flops: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests);
+        Metrics::inc(&m.requests);
+        Metrics::inc(&m.fallbacks);
+        m.add_flops(1000);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.fallbacks, 1);
+        assert_eq!(s.flops, 1000);
+        assert_eq!(s.errors, 0);
+    }
+
+    #[test]
+    fn latency_summary() {
+        let m = Metrics::new();
+        for v in [0.1, 0.2, 0.3] {
+            m.record_latency(v);
+        }
+        let s = m.latency_summary();
+        assert_eq!(s.samples.len(), 3);
+        assert!((s.median() - 0.2).abs() < 1e-12);
+    }
+}

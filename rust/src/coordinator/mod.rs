@@ -1,0 +1,32 @@
+//! L3 coordinator: a GEMM service in the shape the paper motivates —
+//! matrix-multiplication jobs dispatched to a (simulated) FPGA
+//! accelerator card, with results that can chain into further multiplies
+//! without host-side reordering (the paper's §VI argument against the
+//! Intel SDK design).
+//!
+//! Architecture (Python never runs here):
+//!
+//! ```text
+//! clients ──submit──▶ [Batcher] ──per-shape batches──▶ [Engine thread]
+//!                        │                               PJRT CPU exec
+//!                        │                               (AOT artifacts)
+//!                        └──────────▶ [Router]: artifact | gemm fallback
+//!                                        + FPGA design for timing sim
+//! ```
+//!
+//! Every response carries both the *functional* result (via the XLA
+//! artifact or the in-process GEMM fallback) and the *simulated* FPGA
+//! execution report (cycles/seconds/e_D on the selected Table-I design),
+//! so the serving path exercises the whole stack on every request.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;
+pub mod workload;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::Metrics;
+pub use router::{Route, Router};
+pub use service::{GemmRequest, GemmResponse, GemmService, ServiceConfig};
+pub use workload::{TraceEntry, WorkloadGen};

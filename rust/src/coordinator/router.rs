@@ -1,0 +1,132 @@
+//! Shape → execution-route and timing-design selection.
+
+use crate::blocked::{Level1Blocking, OffchipDesign};
+use crate::dse::configs::{fitted_designs, DesignSpec};
+use crate::runtime::Manifest;
+
+/// How a request's functional result will be computed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// A compiled AOT artifact matches the shape exactly.
+    Artifact(String),
+    /// No artifact: compute with the in-process blocked GEMM.
+    Fallback,
+}
+
+/// The router: owns the manifest index and the design catalog.
+#[derive(Clone, Debug)]
+pub struct Router {
+    artifact_index: Vec<(usize, usize, usize, String)>,
+    designs: Vec<DesignSpec>,
+}
+
+impl Router {
+    pub fn new(manifest: Option<&Manifest>) -> Self {
+        let mut artifact_index = Vec::new();
+        if let Some(m) = manifest {
+            for a in &m.artifacts {
+                if a.kind == crate::runtime::ArtifactKind::Matmul && a.inputs.len() == 2 {
+                    artifact_index.push((
+                        a.inputs[0].0,
+                        a.inputs[0].1,
+                        a.inputs[1].1,
+                        a.name.clone(),
+                    ));
+                }
+            }
+        }
+        Self { artifact_index, designs: fitted_designs() }
+    }
+
+    /// Functional route for an (m, k, n) problem.
+    pub fn route(&self, m: usize, k: usize, n: usize) -> Route {
+        self.artifact_index
+            .iter()
+            .find(|(am, ak, an, _)| (*am, *ak, *an) == (m, k, n))
+            .map(|(_, _, _, name)| Route::Artifact(name.clone()))
+            .unwrap_or(Route::Fallback)
+    }
+
+    /// Pick the FPGA design whose blocking constraints the shape
+    /// satisfies, preferring highest peak throughput (F > G > …); the
+    /// request is timed on that design's simulator.
+    pub fn timing_design(&self, m: u64, k: u64, n: u64) -> Option<OffchipDesign> {
+        let mut candidates: Vec<(&DesignSpec, Level1Blocking)> = self
+            .designs
+            .iter()
+            .filter_map(|d| d.level1().map(|b| (d, b)))
+            .filter(|(d, b)| {
+                b.validate_offchip(m, n, k).is_ok() && d.fmax_mhz.is_some()
+            })
+            .collect();
+        candidates.sort_by(|(da, a), (db, b)| {
+            let pa = 2.0 * a.array.dsps() as f64 * da.fmax_mhz.unwrap();
+            let pb = 2.0 * b.array.dsps() as f64 * db.fmax_mhz.unwrap();
+            pb.partial_cmp(&pa).unwrap()
+        });
+        candidates.first().map(|(d, b)| OffchipDesign {
+            blocking: *b,
+            fmax_mhz: d.fmax_mhz.unwrap(),
+            controller_efficiency: 0.97,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let doc = r#"{
+          "format": "hlo-text-v1",
+          "artifacts": [
+            {"name": "mm_h_64", "file": "a.hlo.txt", "kind": "matmul",
+             "inputs": [[64, 64], [64, 64]],
+             "tile": {"di0":32,"dj0":32,"dk0":4,"dp":4,"di1":64,"dj1":64}},
+            {"name": "chain_tpu_256", "file": "c.hlo.txt", "kind": "chain",
+             "inputs": [[256,256],[256,256],[256,256]],
+             "tile": {"di0":64,"dj0":64,"dk0":64,"dp":32,"di1":128,"dj1":128}}
+          ]}"#;
+        Manifest::parse(doc, Path::new("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn routes_exact_artifact_match() {
+        let r = Router::new(Some(&manifest()));
+        assert_eq!(r.route(64, 64, 64), Route::Artifact("mm_h_64".into()));
+        assert_eq!(r.route(64, 64, 128), Route::Fallback);
+        // Chain artifacts never route plain matmuls.
+        assert_eq!(r.route(256, 256, 256), Route::Fallback);
+    }
+
+    #[test]
+    fn routes_without_manifest() {
+        let r = Router::new(None);
+        assert_eq!(r.route(64, 64, 64), Route::Fallback);
+    }
+
+    #[test]
+    fn timing_design_prefers_highest_peak() {
+        let r = Router::new(None);
+        // 20160³ satisfies C (672) and E (576) but not G–N (512) or F
+        // (dj1=640 ∤ 20160): C's 3462 GFLOPS peak beats E's 3391.
+        let d = r.timing_design(20160, 20160, 20160).unwrap();
+        assert_eq!(d.blocking.array.di0, 28, "expected design C, got {d:?}");
+        // (4480, 4480, 4480): only F's rectangular (560, 640) blocking
+        // divides both extents (4480 = 8·560 = 7·640).
+        let d = r.timing_design(4480, 4480, 4480).unwrap();
+        assert_eq!(d.blocking.array.di0, 70, "expected design F, got {d:?}");
+        // 512-cube: only the d1=512 designs qualify; best is H (408 MHz).
+        let d = r.timing_design(512, 512, 512).unwrap();
+        assert_eq!((d.blocking.array.di0, d.blocking.array.dj0), (32, 32));
+        assert_eq!(d.fmax_mhz, 408.0);
+    }
+
+    #[test]
+    fn timing_design_none_for_odd_shapes() {
+        let r = Router::new(None);
+        assert!(r.timing_design(100, 100, 100).is_none());
+    }
+}

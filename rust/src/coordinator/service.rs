@@ -1,0 +1,352 @@
+//! The GEMM service: ingest → batch → route → execute → respond.
+//!
+//! Threading: one **engine thread** owns the PJRT client (the `xla`
+//! crate's client is `Rc`-based and must not cross threads) and the
+//! GEMM fallback; an **ingress thread** runs the batching loop. Clients
+//! submit over an mpsc sender and receive on a per-request channel.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::router::{Route, Router};
+use crate::blocked::{OffchipSim, SimReport};
+use crate::gemm::{matmul_blocked, Matrix};
+use crate::perfmodel::flop_count;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A matrix-multiplication job.
+#[derive(Clone, Debug)]
+pub struct GemmRequest {
+    pub id: u64,
+    pub a: Matrix,
+    pub b: Matrix,
+    /// Optional third operand: compute (A·B)·C — the chained-multiply
+    /// path that needs no host reordering on this architecture.
+    pub chain: Option<Matrix>,
+}
+
+/// The service's answer.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub result: Result<Matrix, String>,
+    /// Which route computed the functional result.
+    pub route: Route,
+    /// Host wall-clock from dequeue to result.
+    pub host_seconds: f64,
+    /// Queueing delay before execution started.
+    pub queue_seconds: f64,
+    /// Simulated FPGA execution on the routed Table-I design (None if no
+    /// design's blocking accepts the shape).
+    pub fpga_sim: Option<SimReport>,
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Artifact directory; None disables the PJRT path (pure fallback).
+    pub artifact_dir: Option<PathBuf>,
+    pub max_batch: usize,
+    /// Batching window: how long the ingress loop waits to fill a batch.
+    pub batch_window: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: Some(PathBuf::from("artifacts")),
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+        }
+    }
+}
+
+enum Ingress {
+    Job(Box<GemmRequest>, mpsc::Sender<GemmResponse>, Instant),
+    Shutdown,
+}
+
+/// Handle to a running service.
+pub struct GemmService {
+    tx: mpsc::Sender<Ingress>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl GemmService {
+    /// Start the service threads.
+    pub fn start(config: ServiceConfig) -> anyhow::Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<Ingress>();
+        let m = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("gemm-engine".into())
+            .spawn(move || Self::engine_loop(config, rx, m))
+            .expect("spawn engine thread");
+        Ok(Self { tx, metrics, worker: Some(worker) })
+    }
+
+    /// Submit a job; returns the receiver for its response.
+    pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
+        let (rtx, rrx) = mpsc::channel();
+        Metrics::inc(&self.metrics.requests);
+        self.tx
+            .send(Ingress::Job(Box::new(req), rtx, Instant::now()))
+            .expect("engine thread alive");
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn submit_sync(&self, req: GemmRequest) -> GemmResponse {
+        self.submit(req).recv().expect("engine thread alive")
+    }
+
+    fn engine_loop(config: ServiceConfig, rx: mpsc::Receiver<Ingress>, metrics: Arc<Metrics>) {
+        // The engine (and its PJRT client) lives on this thread only.
+        let mut engine = config
+            .artifact_dir
+            .as_deref()
+            .and_then(|dir| match crate::runtime::Engine::new(dir) {
+                Ok(e) => Some(e),
+                Err(err) => {
+                    log::warn!("PJRT engine unavailable ({err}); falling back to CPU GEMM");
+                    None
+                }
+            });
+        let router = Router::new(engine.as_ref().map(|e| &e.manifest));
+        let batcher = Batcher::new(config.max_batch);
+
+        loop {
+            // Block for the first job, then drain the window.
+            let first = match rx.recv() {
+                Ok(Ingress::Job(r, tx, t)) => (r, tx, t),
+                Ok(Ingress::Shutdown) | Err(_) => return,
+            };
+            let mut pending = vec![first];
+            // Adaptive batching (EXPERIMENTS.md §Perf L3-2): first drain
+            // whatever is already queued without sleeping; only hold the
+            // window open when a batch is actually forming. Idle clients
+            // pay zero window latency, loaded streams still coalesce.
+            while pending.len() < config.max_batch {
+                match rx.try_recv() {
+                    Ok(Ingress::Job(r, tx, t)) => pending.push((r, tx, t)),
+                    Ok(Ingress::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => break,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                }
+            }
+            if pending.len() >= 2 {
+                let window_end = Instant::now() + config.batch_window;
+                while pending.len() < config.max_batch {
+                    let now = Instant::now();
+                    if now >= window_end {
+                        break;
+                    }
+                    match rx.recv_timeout(window_end - now) {
+                        Ok(Ingress::Job(r, tx, t)) => pending.push((r, tx, t)),
+                        Ok(Ingress::Shutdown) => break,
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }
+
+            // Group by route key and execute.
+            let keyed: Vec<(String, _)> = pending
+                .into_iter()
+                .map(|(req, tx, t)| {
+                    let key = match router.route(req.a.rows, req.a.cols, req.b.cols) {
+                        Route::Artifact(name) => {
+                            if req.chain.is_some() {
+                                format!("fallback-chain")
+                            } else {
+                                format!("artifact:{name}")
+                            }
+                        }
+                        Route::Fallback => "fallback".to_string(),
+                    };
+                    (key, (req, tx, t))
+                })
+                .collect();
+            for batch in batcher.group(keyed) {
+                Metrics::inc(&metrics.batches);
+                for (req, tx, enqueued) in batch.items {
+                    let queue_seconds = enqueued.elapsed().as_secs_f64();
+                    let id = req.id;
+                    // One malformed job must not take the engine down:
+                    // contain panics (e.g. shape assertions in the GEMM
+                    // fallback) and answer with an error instead.
+                    let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        Self::execute_one(&router, engine.as_mut(), *req, queue_seconds, &metrics)
+                    }))
+                    .unwrap_or_else(|payload| {
+                        Metrics::inc(&metrics.errors);
+                        let msg = payload
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "request panicked".into());
+                        GemmResponse {
+                            id,
+                            result: Err(msg),
+                            route: Route::Fallback,
+                            host_seconds: 0.0,
+                            queue_seconds,
+                            fpga_sim: None,
+                        }
+                    });
+                    let _ = tx.send(resp);
+                }
+            }
+        }
+    }
+
+    fn execute_one(
+        router: &Router,
+        mut engine: Option<&mut crate::runtime::Engine>,
+        req: GemmRequest,
+        queue_seconds: f64,
+        metrics: &Metrics,
+    ) -> GemmResponse {
+        let t0 = Instant::now();
+        let (m, k, n) = (req.a.rows, req.a.cols, req.b.cols);
+        let mut route = router.route(m, k, n);
+
+        // Chained jobs route through the chain artifact when available.
+        let result: Result<Matrix, String> = if let Some(chain_c) = &req.chain {
+            let chain_name = engine
+                .as_ref()
+                .and_then(|e| {
+                    e.manifest
+                        .artifacts
+                        .iter()
+                        .find(|a| {
+                            a.kind == crate::runtime::ArtifactKind::Chain
+                                && a.inputs.len() == 3
+                                && a.inputs[0] == (m, k)
+                                && a.inputs[1] == (k, n)
+                                && a.inputs[2] == (n, chain_c.cols)
+                        })
+                        .map(|a| a.name.clone())
+                });
+            match (chain_name, engine.as_mut()) {
+                (Some(name), Some(eng)) => {
+                    route = Route::Artifact(name.clone());
+                    eng.execute(&name, &[&req.a, &req.b, chain_c])
+                        .map(|(m, _)| m)
+                        .map_err(|e| e.to_string())
+                }
+                _ => {
+                    route = Route::Fallback;
+                    let ab = matmul_blocked(&req.a, &req.b);
+                    Ok(matmul_blocked(&ab, chain_c))
+                }
+            }
+        } else {
+            match (&route, engine.as_mut()) {
+                (Route::Artifact(name), Some(eng)) => eng
+                    .execute(name, &[&req.a, &req.b])
+                    .map(|(m, _)| m)
+                    .map_err(|e| e.to_string()),
+                _ => {
+                    route = Route::Fallback;
+                    Ok(matmul_blocked(&req.a, &req.b))
+                }
+            }
+        };
+
+        match &route {
+            Route::Artifact(_) => Metrics::inc(&metrics.artifact_hits),
+            Route::Fallback => Metrics::inc(&metrics.fallbacks),
+        }
+        if result.is_err() {
+            Metrics::inc(&metrics.errors);
+        }
+        metrics.add_flops(flop_count(m as u64, n as u64, k as u64));
+
+        // FPGA timing on the routed design (chain = two passes).
+        let fpga_sim = router.timing_design(m as u64, k as u64, n as u64).map(|d| {
+            let sim = OffchipSim::new(d);
+            sim.simulate(m as u64, n as u64, k as u64)
+        });
+
+        let host_seconds = t0.elapsed().as_secs_f64();
+        metrics.record_latency(host_seconds);
+        GemmResponse { id: req.id, result, route, host_seconds, queue_seconds, fpga_sim }
+    }
+}
+
+impl Drop for GemmService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Ingress::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_artifact_config() -> ServiceConfig {
+        ServiceConfig { artifact_dir: None, max_batch: 4, batch_window: Duration::from_millis(1) }
+    }
+
+    #[test]
+    fn fallback_service_computes_correctly() {
+        let svc = GemmService::start(no_artifact_config()).unwrap();
+        let a = Matrix::random(32, 16, 1);
+        let b = Matrix::random(16, 24, 2);
+        let want = crate::gemm::matmul(&a, &b);
+        let resp = svc.submit_sync(GemmRequest { id: 7, a, b, chain: None });
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.route, Route::Fallback);
+        let got = resp.result.unwrap();
+        assert!(got.rel_fro_error(&want) < 1e-5);
+    }
+
+    #[test]
+    fn chained_request_no_reordering() {
+        let svc = GemmService::start(no_artifact_config()).unwrap();
+        let a = Matrix::random(16, 16, 3);
+        let b = Matrix::random(16, 16, 4);
+        let c = Matrix::random(16, 16, 5);
+        let want = crate::gemm::matmul(&crate::gemm::matmul(&a, &b), &c);
+        let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: Some(c) });
+        assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-4);
+    }
+
+    #[test]
+    fn sim_timing_attached_for_conforming_shapes() {
+        let svc = GemmService::start(no_artifact_config()).unwrap();
+        let a = Matrix::random(512, 512, 6);
+        let b = Matrix::random(512, 512, 7);
+        let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None });
+        let sim = resp.fpga_sim.expect("512-cube matches design H blocking");
+        assert!(sim.gflops > 1000.0);
+        assert!(sim.e_d > 0.3 && sim.e_d < 1.0);
+    }
+
+    #[test]
+    fn concurrent_submissions_all_answered() {
+        let svc = Arc::new(GemmService::start(no_artifact_config()).unwrap());
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            let a = Matrix::random(16, 16, i);
+            let b = Matrix::random(16, 16, i + 100);
+            rxs.push((i, svc.submit(GemmRequest { id: i, a, b, chain: None })));
+        }
+        for (i, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.id, i);
+            assert!(resp.result.is_ok());
+        }
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.requests, 20);
+        assert!(snap.batches >= 1);
+        assert_eq!(snap.errors, 0);
+    }
+}

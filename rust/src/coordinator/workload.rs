@@ -1,0 +1,168 @@
+//! Synthetic serving workloads: deterministic request traces with
+//! Poisson-ish arrivals and a configurable shape mix — the
+//! inference-style GEMM streams the paper's introduction motivates.
+//!
+//! Used by the end-to-end example, the serve bench and the backpressure
+//! tests; deterministic from the seed so every run is reproducible.
+
+use crate::util::rng::Xoshiro256;
+
+/// One entry of a request trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEntry {
+    pub id: u64,
+    /// Arrival offset from trace start, seconds.
+    pub arrival_s: f64,
+    /// Problem shape (m, k, n).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Chained (A·B)·C request.
+    pub chained: bool,
+}
+
+/// Shape mix entry: (m, k, n, weight, chained).
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeMix {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub weight: u32,
+    pub chained: bool,
+}
+
+/// Trace generator.
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    pub seed: u64,
+    /// Mean arrival rate (requests/second).
+    pub rate_hz: f64,
+    pub mix: Vec<ShapeMix>,
+}
+
+impl WorkloadGen {
+    /// The default serving mix: artifact-backed 256³/512³/64³ jobs, a
+    /// slice of chained multiplies, and a tail of odd fallback shapes.
+    pub fn serving_default(seed: u64, rate_hz: f64) -> Self {
+        Self {
+            seed,
+            rate_hz,
+            mix: vec![
+                ShapeMix { m: 256, k: 256, n: 256, weight: 4, chained: false },
+                ShapeMix { m: 512, k: 512, n: 512, weight: 2, chained: false },
+                ShapeMix { m: 64, k: 64, n: 64, weight: 2, chained: false },
+                ShapeMix { m: 256, k: 256, n: 256, weight: 1, chained: true },
+                ShapeMix { m: 96, k: 96, n: 96, weight: 1, chained: false },
+            ],
+        }
+    }
+
+    /// Generate `count` requests with exponential inter-arrival gaps.
+    pub fn trace(&self, count: u64) -> Vec<TraceEntry> {
+        assert!(self.rate_hz > 0.0, "rate must be positive");
+        let total_weight: u32 = self.mix.iter().map(|m| m.weight).sum();
+        assert!(total_weight > 0, "mix must have weight");
+        let mut rng = Xoshiro256::seed_from_u64(self.seed);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(count as usize);
+        for id in 0..count {
+            // Exponential inter-arrival: -ln(U)/rate.
+            let u = rng.next_f64().max(1e-12);
+            t += -u.ln() / self.rate_hz;
+            // Weighted shape draw.
+            let mut pick = rng.next_below(total_weight as u64) as u32;
+            let mut chosen = self.mix[0];
+            for m in &self.mix {
+                if pick < m.weight {
+                    chosen = *m;
+                    break;
+                }
+                pick -= m.weight;
+            }
+            out.push(TraceEntry {
+                id,
+                arrival_s: t,
+                m: chosen.m,
+                k: chosen.k,
+                n: chosen.n,
+                chained: chosen.chained,
+            });
+        }
+        out
+    }
+
+    /// Offered load in FLOP/s for a trace (paper FLOP convention).
+    pub fn offered_flops(trace: &[TraceEntry]) -> f64 {
+        if trace.len() < 2 {
+            return 0.0;
+        }
+        let span = trace.last().unwrap().arrival_s - trace[0].arrival_s;
+        let flops: f64 = trace
+            .iter()
+            .map(|e| {
+                let f = crate::perfmodel::flop_count(e.m as u64, e.n as u64, e.k as u64) as f64;
+                if e.chained {
+                    2.0 * f
+                } else {
+                    f
+                }
+            })
+            .sum();
+        flops / span.max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let g = WorkloadGen::serving_default(42, 100.0);
+        assert_eq!(g.trace(50), g.trace(50));
+        let g2 = WorkloadGen::serving_default(43, 100.0);
+        assert_ne!(g.trace(50), g2.trace(50));
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_ish() {
+        let g = WorkloadGen::serving_default(1, 200.0);
+        let trace = g.trace(2000);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        // Mean rate within 10% of nominal over 2000 arrivals.
+        let span = trace.last().unwrap().arrival_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 200.0).abs() / 200.0 < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn mix_respected() {
+        let g = WorkloadGen::serving_default(7, 100.0);
+        let trace = g.trace(4000);
+        let n512 = trace.iter().filter(|e| e.m == 512).count() as f64;
+        let n256 = trace.iter().filter(|e| e.m == 256 && !e.chained).count() as f64;
+        // weights 2 vs 4 -> ratio ~0.5 (loose band).
+        let ratio = n512 / n256;
+        assert!((0.3..0.8).contains(&ratio), "ratio {ratio}");
+        assert!(trace.iter().any(|e| e.chained));
+        assert!(trace.iter().any(|e| e.m == 96));
+    }
+
+    #[test]
+    fn offered_load_positive() {
+        let g = WorkloadGen::serving_default(3, 50.0);
+        let trace = g.trace(500);
+        let f = WorkloadGen::offered_flops(&trace);
+        assert!(f > 0.0);
+        // ~50 req/s of ~33 MFLOP avg -> order 1e9; sanity band.
+        assert!(f > 1e8 && f < 1e12, "{f}");
+    }
+
+    #[test]
+    #[should_panic(expected = "rate must be positive")]
+    fn zero_rate_rejected() {
+        WorkloadGen { seed: 1, rate_hz: 0.0, mix: vec![] }.trace(1);
+    }
+}

@@ -1,0 +1,197 @@
+//! The paper's design catalog: every synthesis attempt of Table I, with
+//! the published outcomes and, for the fitted designs, the level-1
+//! blocking used by the Tables II–V evaluations.
+
+use crate::blocked::Level1Blocking;
+use crate::systolic::ArraySize;
+
+/// One catalog entry.
+#[derive(Clone, Debug)]
+pub struct DesignSpec {
+    pub id: &'static str,
+    pub array: ArraySize,
+    /// Published f_max in MHz; `None` == fitter failed.
+    pub fmax_mhz: Option<f64>,
+    /// Level-1 blocking from the table captions (fitted designs only).
+    pub blocking: Option<(u32, u32)>,
+    /// Matrix-size sweep (d² values) of the design's evaluation table.
+    pub sweep: &'static [u64],
+}
+
+impl DesignSpec {
+    pub fn level1(&self) -> Option<Level1Blocking> {
+        self.blocking
+            .map(|(di1, dj1)| Level1Blocking::new(self.array, di1, dj1))
+    }
+
+    /// d_j2 values of the sweep (design F is rectangular: d_j2 scales by
+    /// d_j1/d_i1 = 640/560).
+    pub fn sweep_dj2(&self) -> Vec<u64> {
+        match self.blocking {
+            Some((di1, dj1)) if di1 != dj1 => self
+                .sweep
+                .iter()
+                .map(|d| d * dj1 as u64 / di1 as u64)
+                .collect(),
+            _ => self.sweep.to_vec(),
+        }
+    }
+}
+
+/// Table I, in row order.
+pub fn paper_catalog() -> Vec<DesignSpec> {
+    const S672: &[u64] = &[672, 1344, 2688, 5376, 10752, 21504];
+    const S576: &[u64] = &[576, 1152, 2304, 4608, 9216, 18432];
+    const S560: &[u64] = &[560, 1120, 2240, 4480, 8960, 17920];
+    const S512: &[u64] = &[512, 1024, 2048, 4096, 8192, 16384];
+    vec![
+        DesignSpec {
+            id: "A",
+            array: ArraySize::new(28, 28, 6, 3),
+            fmax_mhz: None,
+            blocking: None,
+            sweep: &[],
+        },
+        DesignSpec {
+            id: "B",
+            array: ArraySize::new(28, 28, 6, 2),
+            fmax_mhz: None,
+            blocking: None,
+            sweep: &[],
+        },
+        DesignSpec {
+            id: "C",
+            array: ArraySize::new(28, 28, 6, 1),
+            fmax_mhz: Some(368.0),
+            blocking: Some((672, 672)),
+            sweep: S672,
+        },
+        DesignSpec {
+            id: "D",
+            array: ArraySize::new(72, 32, 2, 2),
+            fmax_mhz: None,
+            blocking: None,
+            sweep: &[],
+        },
+        DesignSpec {
+            id: "E",
+            array: ArraySize::new(72, 32, 2, 1),
+            fmax_mhz: Some(368.0),
+            blocking: Some((576, 576)),
+            sweep: S576,
+        },
+        DesignSpec {
+            id: "F",
+            array: ArraySize::new(70, 32, 2, 2),
+            fmax_mhz: Some(410.0),
+            blocking: Some((560, 640)),
+            sweep: S560,
+        },
+        DesignSpec {
+            id: "G",
+            array: ArraySize::new(64, 32, 2, 2),
+            fmax_mhz: Some(398.0),
+            blocking: Some((512, 512)),
+            sweep: S512,
+        },
+        DesignSpec {
+            id: "H",
+            array: ArraySize::new(32, 32, 4, 4),
+            fmax_mhz: Some(408.0),
+            blocking: Some((512, 512)),
+            sweep: S512,
+        },
+        DesignSpec {
+            id: "I",
+            array: ArraySize::new(32, 32, 4, 2),
+            fmax_mhz: Some(396.0),
+            blocking: Some((512, 512)),
+            sweep: S512,
+        },
+        DesignSpec {
+            id: "L",
+            array: ArraySize::new(32, 16, 8, 8),
+            fmax_mhz: Some(391.0),
+            blocking: Some((512, 512)),
+            sweep: S512,
+        },
+        DesignSpec {
+            id: "M",
+            array: ArraySize::new(32, 16, 8, 4),
+            fmax_mhz: Some(363.0),
+            blocking: Some((512, 512)),
+            sweep: S512,
+        },
+        DesignSpec {
+            id: "N",
+            array: ArraySize::new(32, 16, 8, 2),
+            fmax_mhz: Some(381.0),
+            blocking: Some((512, 512)),
+            sweep: S512,
+        },
+    ]
+}
+
+/// The fitted (usable) designs, in Table order.
+pub fn fitted_designs() -> Vec<DesignSpec> {
+    paper_catalog().into_iter().filter(|d| d.fmax_mhz.is_some()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_all_table1_rows() {
+        let cat = paper_catalog();
+        assert_eq!(cat.len(), 12);
+        let failed: Vec<&str> =
+            cat.iter().filter(|d| d.fmax_mhz.is_none()).map(|d| d.id).collect();
+        assert_eq!(failed, vec!["A", "B", "D"]);
+    }
+
+    #[test]
+    fn catalog_dsps_match_table1() {
+        for d in paper_catalog() {
+            let dsps = d.array.dsps();
+            match d.id {
+                "A" | "B" | "C" => assert_eq!(dsps, 4704),
+                "D" | "E" => assert_eq!(dsps, 4608),
+                "F" => assert_eq!(dsps, 4480),
+                _ => assert_eq!(dsps, 4096),
+            }
+        }
+    }
+
+    #[test]
+    fn blockings_valid_and_match_captions() {
+        for d in fitted_designs() {
+            let b = d.level1().expect("fitted design must have blocking");
+            assert!(b.validate().is_ok(), "{}", d.id);
+            // Every sweep size obeys the caption constraint d² % d¹ == 0.
+            for &d2 in d.sweep {
+                assert_eq!(d2 % b.di1 as u64, 0, "{}: {d2}", d.id);
+            }
+        }
+    }
+
+    #[test]
+    fn design_f_rectangular_sweep() {
+        let f = paper_catalog().into_iter().find(|d| d.id == "F").unwrap();
+        let dj2 = f.sweep_dj2();
+        assert_eq!(dj2[0], 640);
+        assert_eq!(dj2[5], 20480);
+    }
+
+    #[test]
+    fn reuse_rates_never_exceed_lsu_ceiling() {
+        // Every published blocking implies global rates <= 8 floats/cycle
+        // (the eq. 4 ceiling above 300 MHz — all designs run above it).
+        for d in fitted_designs() {
+            let b = d.level1().unwrap();
+            let (ga, gb) = b.implied_global_rates();
+            assert!(ga <= 8.0 + 1e-9, "{}: ga={ga}", d.id);
+            assert!(gb <= 8.0 + 1e-9, "{}: gb={gb}", d.id);
+        }
+    }
+}

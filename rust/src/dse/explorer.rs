@@ -1,0 +1,214 @@
+//! The design-space explorer: plays the role of "the user interacting
+//! with the HLS tool" (§III-C) over the calibrated synthesis models.
+
+use crate::blocked::{Level1Blocking, OffchipDesign, OffchipSim};
+use crate::fpga::{FitOutcome, Fitter, FmaxModel, InterconnectStyle, PlacementRequest, Stratix10};
+use crate::hls::lsu::max_floats_per_cycle;
+use crate::hls::report::SynthesisReport;
+use crate::systolic::ArraySize;
+
+/// One evaluated design point.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub array: ArraySize,
+    pub outcome: FitOutcome,
+    /// f_max in MHz when fitted.
+    pub fmax_mhz: Option<f64>,
+    /// Whether f_max came from a measured calibration point.
+    pub fmax_measured: bool,
+    /// Peak GFLOPS (eq. 5) when fitted.
+    pub tpeak_gflops: Option<f64>,
+    /// Sustained GFLOPS at the given evaluation size (folds in eq. 19).
+    pub sustained_gflops: Option<f64>,
+}
+
+impl DesignPoint {
+    pub fn report(&self, id: &str, device: &Stratix10) -> SynthesisReport {
+        SynthesisReport {
+            design_id: id.to_string(),
+            pes: self.array.pes() as u32,
+            di0: self.array.di0,
+            dj0: self.array.dj0,
+            dk0: self.array.dk0,
+            dp: self.array.dp,
+            dsps: self.array.dsps() as u32,
+            dsp_pct_available: self.array.dsps() as f64 / device.kernel_dsps as f64 * 100.0,
+            fmax_mhz: self.fmax_mhz,
+            tpeak_gflops: self.tpeak_gflops,
+        }
+    }
+}
+
+/// The explorer.
+#[derive(Clone, Debug)]
+pub struct Explorer {
+    pub device: Stratix10,
+    pub fitter: Fitter,
+    pub fmax: FmaxModel,
+    /// d² used when ranking by sustained throughput.
+    pub eval_d2: u64,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Self {
+            device: Stratix10::gx2800_520n(),
+            fitter: Fitter::default(),
+            fmax: FmaxModel::calibrated(),
+            eval_d2: 8192,
+        }
+    }
+}
+
+impl Explorer {
+    /// Evaluate one candidate through fitter + f_max + (optionally) the
+    /// off-chip simulator.
+    pub fn evaluate(&self, array: ArraySize) -> DesignPoint {
+        let req = PlacementRequest {
+            dsps: array.dsps() as u32,
+            dp: array.dp,
+            pes: array.pes() as u32,
+            style: InterconnectStyle::RegisterChained,
+        };
+        let outcome = self.fitter.place(&req);
+        if !outcome.fits() {
+            return DesignPoint {
+                array,
+                outcome,
+                fmax_mhz: None,
+                fmax_measured: false,
+                tpeak_gflops: None,
+                sustained_gflops: None,
+            };
+        }
+        let key = (array.di0, array.dj0, array.dk0, array.dp, InterconnectStyle::RegisterChained);
+        let u = self.device.dsp_utilization(array.dsps() as u32);
+        let f = self.fmax.fmax(&key, u, true);
+        let tpeak = self.device.peak_gflops(array.dsps() as u32, f.mhz);
+
+        // Sustained throughput at eval_d2: needs a valid blocking; derive
+        // the minimal one at the eq. 4 rate for this f_max.
+        let rate = max_floats_per_cycle(f.mhz) as u32;
+        let blocking = Level1Blocking::derive_min(array, rate);
+        let sustained = if self.eval_d2 % blocking.di1 as u64 == 0
+            && self.eval_d2 % blocking.dj1 as u64 == 0
+            && self.eval_d2 % array.dk0 as u64 == 0
+        {
+            let sim = OffchipSim::new(OffchipDesign {
+                blocking,
+                fmax_mhz: f.mhz,
+                controller_efficiency: 0.97,
+            });
+            Some(sim.simulate(self.eval_d2, self.eval_d2, self.eval_d2).gflops)
+        } else {
+            None
+        };
+
+        DesignPoint {
+            array,
+            outcome,
+            fmax_mhz: Some(f.mhz),
+            fmax_measured: f.measured,
+            tpeak_gflops: Some(tpeak),
+            sustained_gflops: sustained,
+        }
+    }
+
+    /// Enumerate a constrained sweep of candidates: d_i0 ∈ `dis`,
+    /// d_j0 ∈ `djs`, d_k0 ∈ `dks`, all valid d_p divisors.
+    pub fn sweep(&self, dis: &[u32], djs: &[u32], dks: &[u32]) -> Vec<DesignPoint> {
+        let mut out = Vec::new();
+        for &di in dis {
+            for &dj in djs {
+                for &dk in dks {
+                    for dp in 1..=dk {
+                        if dk % dp != 0 {
+                            continue;
+                        }
+                        let array = ArraySize { di0: di, dj0: dj, dk0: dk, dp };
+                        if array.dsps() > self.device.kernel_dsps as u64 {
+                            continue;
+                        }
+                        out.push(self.evaluate(array));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The best fitted design by sustained throughput.
+    pub fn best<'a>(&self, points: &'a [DesignPoint]) -> Option<&'a DesignPoint> {
+        points
+            .iter()
+            .filter(|p| p.outcome.fits())
+            .max_by(|a, b| {
+                let ka = a.sustained_gflops.or(a.tpeak_gflops).unwrap_or(0.0);
+                let kb = b.sustained_gflops.or(b.tpeak_gflops).unwrap_or(0.0);
+                ka.partial_cmp(&kb).unwrap()
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::configs::paper_catalog;
+
+    #[test]
+    fn catalog_outcomes_reproduced() {
+        // The explorer must reproduce every Table I row: fit/fail AND,
+        // for fitted rows, the measured f_max (via calibration).
+        let ex = Explorer::default();
+        for spec in paper_catalog() {
+            let p = ex.evaluate(spec.array);
+            assert_eq!(p.outcome.fits(), spec.fmax_mhz.is_some(), "design {}", spec.id);
+            if let Some(f) = spec.fmax_mhz {
+                assert_eq!(p.fmax_mhz, Some(f), "design {}", spec.id);
+                assert!(p.fmax_measured);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_covers_dp_divisors() {
+        let ex = Explorer::default();
+        let points = ex.sweep(&[32], &[32], &[4]);
+        // dp in {1, 2, 4}.
+        assert_eq!(points.len(), 3);
+    }
+
+    #[test]
+    fn best_design_beats_siblings() {
+        let ex = Explorer::default();
+        let points = ex.sweep(&[32, 64], &[16, 32], &[2, 4, 8]);
+        let best = ex.best(&points).expect("some design fits");
+        assert!(best.outcome.fits());
+        assert!(best.tpeak_gflops.unwrap() > 2000.0);
+    }
+
+    #[test]
+    fn unseen_points_use_predictor() {
+        let ex = Explorer::default();
+        let p = ex.evaluate(ArraySize::new(16, 16, 4, 2));
+        assert!(p.outcome.fits());
+        assert!(!p.fmax_measured);
+        // Small design, low utilization: near base frequency.
+        assert!(p.fmax_mhz.unwrap() > 400.0);
+    }
+
+    #[test]
+    fn sustained_ranking_prefers_high_fmax_high_dsp() {
+        // F (4480 DSPs @ 410 MHz) must rank above L (4096 @ 391) on
+        // sustained throughput, mirroring Table IV vs Table V.
+        // 20160 = lcm(560, 576): divisible by F's derived blocking.
+        let ex = Explorer { eval_d2: 20160, ..Default::default() };
+        let f = ex.evaluate(ArraySize::new(70, 32, 2, 2));
+        let ex512 = Explorer { eval_d2: 8192, ..Default::default() };
+        let l = ex512.evaluate(ArraySize::new(32, 16, 8, 8));
+        match (f.sustained_gflops, l.sustained_gflops) {
+            (Some(sf), Some(sl)) => assert!(sf > sl, "{sf} vs {sl}"),
+            other => panic!("expected sustained numbers, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Design-space exploration (the paper's §III-C closing remark: the
+//! systolic sizes are "a parameter useful in design space exploration").
+//!
+//! * [`configs`] — the paper's design catalog (Table I rows A–N with
+//!   their Level-1 blockings from the Table II–V captions).
+//! * [`explorer`] — enumerate candidate (d_i0, d_j0, d_k0, d_p) points,
+//!   run the fitter + f_max models, and rank by peak and by *sustained*
+//!   throughput (which folds in eq. 19) — reproducing Table I and
+//!   extending beyond it.
+
+pub mod ablation;
+pub mod configs;
+pub mod explorer;
+
+pub use ablation::{ablate_interconnect, ablate_overlap, ablate_reuse, ablate_third_dimension};
+pub use configs::{paper_catalog, DesignSpec};
+pub use explorer::{DesignPoint, Explorer};

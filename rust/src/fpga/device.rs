@@ -1,0 +1,120 @@
+//! Stratix 10 GX2800 resource ledger, as exposed by the BittWare 520N BSP.
+//!
+//! Numbers from the paper (§VI) and Intel's published device tables:
+//! the GX2800 has 5760 Variable-Precision DSP blocks and 11721 M20K
+//! blocks; the board support package (PCIe, DDR controllers, OpenCL
+//! infrastructure) reserves part of them, leaving 4713 DSPs for kernel
+//! logic (the paper's figure).
+
+use super::dsp::DotProductUnit;
+
+/// One M20K block stores 20 kbit = 2560 bytes.
+pub const M20K_BYTES: u64 = 20 * 1024 / 8;
+
+/// Single-precision float size, the paper's only data type.
+pub const F32_BYTES: u64 = 4;
+
+/// A Stratix 10 device with a BSP carve-out.
+#[derive(Clone, Debug)]
+pub struct Stratix10 {
+    /// Total Variable-Precision DSP blocks on the die.
+    pub total_dsps: u32,
+    /// DSPs available to kernel logic after the BSP reservation.
+    pub kernel_dsps: u32,
+    /// Total M20K on-chip RAM blocks.
+    pub total_m20k: u32,
+    /// M20Ks available to kernel logic (estimate; the paper reports only
+    /// the DSP figure, we reserve a proportional share for the BSP).
+    pub kernel_m20k: u32,
+    /// Number of DDR4 channels on the card.
+    pub ddr_channels: u32,
+}
+
+impl Stratix10 {
+    /// The BittWare 520N configuration used throughout the paper.
+    pub fn gx2800_520n() -> Self {
+        Self {
+            total_dsps: 5760,
+            kernel_dsps: 4713, // paper §VI: "4713 of 5760 ... available"
+            total_m20k: 11_721,
+            // BSP reserves ≈10% of M20Ks (Intel BSP floorplans); estimate.
+            kernel_m20k: 10_500,
+            ddr_channels: 4,
+        }
+    }
+
+    /// Fraction of kernel-available DSPs used by `n` DSP blocks.
+    pub fn dsp_utilization(&self, n: u32) -> f64 {
+        n as f64 / self.kernel_dsps as f64
+    }
+
+    /// How many M20K blocks a byte requirement occupies (capacity only;
+    /// width-driven replication is the memory module's concern).
+    pub fn m20k_blocks_for_bytes(&self, bytes: u64) -> u32 {
+        crate::util::div_ceil(bytes, M20K_BYTES) as u32
+    }
+
+    /// True if `n` DSPs fit the kernel partition at all (necessary, not
+    /// sufficient — see [`super::fitter`]).
+    pub fn dsps_available(&self, n: u32) -> bool {
+        n <= self.kernel_dsps
+    }
+
+    /// Peak floating-point throughput of `n` DSPs in FMA mode at `f_mhz`
+    /// (paper eq. 5): `T_peak = 2 · #DSP · f_max` in GFLOPS.
+    pub fn peak_gflops(&self, n_dsps: u32, f_mhz: f64) -> f64 {
+        2.0 * n_dsps as f64 * f_mhz / 1e3
+    }
+
+    /// DSP cost of a grid of dot-product units.
+    pub fn dsps_for_units(&self, unit: &DotProductUnit, count: u32) -> u32 {
+        unit.dsp_blocks() * count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dsp_budget() {
+        let dev = Stratix10::gx2800_520n();
+        assert_eq!(dev.total_dsps, 5760);
+        assert_eq!(dev.kernel_dsps, 4713);
+        // Paper: designs use up to 4704 DSPs = 99.8% of available.
+        let u = dev.dsp_utilization(4704);
+        assert!((u - 0.998).abs() < 5e-4, "u={u}");
+    }
+
+    #[test]
+    fn table1_utilization_column() {
+        // The "% avail." column of Table I.
+        let dev = Stratix10::gx2800_520n();
+        for (n, pct) in [(4704u32, 99.8), (4608, 97.7), (4480, 95.0), (4096, 86.9)] {
+            let got = dev.dsp_utilization(n) * 100.0;
+            assert!((got - pct).abs() < 0.15, "{n}: {got} vs {pct}");
+        }
+    }
+
+    #[test]
+    fn peak_gflops_eq5() {
+        let dev = Stratix10::gx2800_520n();
+        // Design C: 4704 DSPs at 368 MHz -> 3462 GFLOPS (Table I).
+        let t = dev.peak_gflops(4704, 368.0);
+        assert!((t - 3462.0).abs() < 1.0, "{t}");
+        // Design F: 4480 at 410 -> 3673.
+        assert!((dev.peak_gflops(4480, 410.0) - 3673.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn m20k_capacity() {
+        let dev = Stratix10::gx2800_520n();
+        assert_eq!(M20K_BYTES, 2560);
+        assert_eq!(dev.m20k_blocks_for_bytes(0), 0);
+        assert_eq!(dev.m20k_blocks_for_bytes(1), 1);
+        assert_eq!(dev.m20k_blocks_for_bytes(2560), 1);
+        assert_eq!(dev.m20k_blocks_for_bytes(2561), 2);
+        // A 512x512 f32 C block = 1 MiB -> 410 blocks.
+        assert_eq!(dev.m20k_blocks_for_bytes(512 * 512 * 4), 410);
+    }
+}

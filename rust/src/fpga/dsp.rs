@@ -1,0 +1,150 @@
+//! Variable-Precision DSP blocks (paper §II-B).
+//!
+//! A Stratix 10 VP DSP block natively executes single-precision
+//! floating-point operations; in fused multiply-add mode it performs two
+//! FLOP per clock (eq. 5). Blocks can be chained into *dot-product units*
+//! computing `r = z + Σ v_i·w_i` (eq. 6) with `d_p` blocks, delivering
+//! `2·d_p` FLOP/cycle (eq. 7) and requiring `2·d_p + 1` input floats per
+//! cycle (eq. 8).
+//!
+//! The internal-accumulator capability is modelled too — along with the
+//! paper's key restriction that it *cannot* be used in an II=1 pipeline
+//! (it forces a loop-carried dependency longer than one cycle), which is
+//! why Definition 4 re-orders the blocked algorithm instead.
+
+/// Operating mode of one Variable-Precision DSP block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DspMode {
+    /// One fp32 multiply per cycle.
+    Multiply,
+    /// One fp32 add per cycle.
+    Add,
+    /// Fused multiply-add: two FLOP per cycle.
+    FusedMulAdd,
+    /// FMA + internal accumulation register across iterations. Cannot
+    /// sustain II=1 (the accumulator read-modify-write is loop-carried).
+    Accumulate,
+}
+
+impl DspMode {
+    /// FLOP started per clock cycle in this mode.
+    pub fn flop_per_cycle(self) -> u32 {
+        match self {
+            DspMode::Multiply | DspMode::Add => 1,
+            DspMode::FusedMulAdd | DspMode::Accumulate => 2,
+        }
+    }
+
+    /// Whether a pipeline built around this mode can reach II = 1
+    /// (paper §II-B: the internal accumulator cannot).
+    pub fn supports_ii1(self) -> bool {
+        !matches!(self, DspMode::Accumulate)
+    }
+}
+
+/// A chained dot-product unit of `d_p` DSP blocks (paper eq. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DotProductUnit {
+    pub dp: u32,
+}
+
+/// Latency in cycles of a DSP FMA stage (used to compose `l_dot`).
+/// The Intel fp32 DSP pipeline is ~4–5 stages; we use 4 (only relative
+/// latencies matter for the loop-body model, see perfmodel::latency).
+pub const DSP_FMA_LATENCY: u32 = 4;
+
+impl DotProductUnit {
+    pub fn new(dp: u32) -> Self {
+        assert!(dp >= 1, "dot-product size must be >= 1");
+        Self { dp }
+    }
+
+    /// DSP blocks consumed (one per product term).
+    pub fn dsp_blocks(&self) -> u32 {
+        self.dp
+    }
+
+    /// Peak FLOP/cycle in pipeline (paper eq. 7): `2·d_p`.
+    pub fn flop_per_cycle(&self) -> u32 {
+        2 * self.dp
+    }
+
+    /// Input floats needed per cycle to sustain the pipeline (paper
+    /// eq. 8): `2·d_p + 1` (the d_p v's, the d_p w's, and z).
+    pub fn input_floats_per_cycle(&self) -> u32 {
+        2 * self.dp + 1
+    }
+
+    /// Latency of one dot-product evaluation: the chained adds traverse
+    /// the `d_p` blocks serially after the FMA stage.
+    pub fn latency_cycles(&self) -> u32 {
+        DSP_FMA_LATENCY + self.dp.saturating_sub(1)
+    }
+
+    /// Functional model: `z + Σ v_i w_i`, accumulated in chain order
+    /// (left-to-right), matching the hardware adder chain. This is the
+    /// rounding order the cycle-accurate simulator reproduces.
+    pub fn evaluate(&self, z: f32, v: &[f32], w: &[f32]) -> f32 {
+        assert_eq!(v.len(), self.dp as usize, "v length != d_p");
+        assert_eq!(w.len(), self.dp as usize, "w length != d_p");
+        let mut acc = z;
+        for i in 0..self.dp as usize {
+            acc += v[i] * w[i];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_throughput() {
+        assert_eq!(DspMode::Multiply.flop_per_cycle(), 1);
+        assert_eq!(DspMode::FusedMulAdd.flop_per_cycle(), 2);
+    }
+
+    #[test]
+    fn accumulate_mode_blocks_ii1() {
+        assert!(DspMode::FusedMulAdd.supports_ii1());
+        assert!(!DspMode::Accumulate.supports_ii1());
+    }
+
+    #[test]
+    fn unit_throughput_eq7_eq8() {
+        let u = DotProductUnit::new(8);
+        assert_eq!(u.flop_per_cycle(), 16);
+        assert_eq!(u.input_floats_per_cycle(), 17);
+        assert_eq!(u.dsp_blocks(), 8);
+    }
+
+    #[test]
+    fn unit_evaluate_matches_manual() {
+        let u = DotProductUnit::new(3);
+        let r = u.evaluate(2.0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        assert_eq!(r, 2.0 + 4.0 + 10.0 + 18.0);
+    }
+
+    #[test]
+    fn unit_evaluate_chain_order() {
+        // Chain order matters in floating point: ((z+a)+b)+c, not z+(a+(b+c)).
+        let u = DotProductUnit::new(2);
+        let big = 1e8f32;
+        let r = u.evaluate(-big, &[1.0, big], &[1.0, 1.0]);
+        // (-1e8 + 1.0) rounds to -1e8 in f32 (ulp at 1e8 is 8), then + 1e8 = 0.
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn latency_grows_with_dp() {
+        assert!(DotProductUnit::new(8).latency_cycles()
+            > DotProductUnit::new(1).latency_cycles());
+    }
+
+    #[test]
+    #[should_panic(expected = "must be >= 1")]
+    fn zero_dp_rejected() {
+        DotProductUnit::new(0);
+    }
+}

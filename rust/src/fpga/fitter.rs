@@ -1,0 +1,219 @@
+//! Placement-feasibility model — the "fitter failed" rows of Tables I & VI.
+//!
+//! ## Calibration (see DESIGN.md §7)
+//!
+//! The fitter's observable behaviour in the paper is binary (fit / fail)
+//! over 20 synthesis attempts. The failures cluster in a way that admits a
+//! simple *placement pressure* model:
+//!
+//! ```text
+//! pressure = #DSP · (1 + chain_penalty(d_p)) + route_penalty · #PE
+//! fit      ⇔ pressure ≤ kernel_dsps (4713)
+//! ```
+//!
+//! * `chain_penalty` models the placement constraint that chained DSPs
+//!   (dot-product units) must occupy adjacent blocks of one DSP column;
+//!   longer chains constrain the placer more.
+//! * `route_penalty · #PE` models per-PE interconnect congestion. For the
+//!   paper's 3D architecture this term is **zero**: the `__fpga_reg`
+//!   register chains decouple neighbouring PEs, so PE count adds no
+//!   congestion — that is precisely the paper's thesis. The Intel SDK 2D
+//!   baseline has no such chains and pays `route_penalty = 0.3`.
+//!
+//! With `chain_penalty = 3%` for the register-chained 3D design (any
+//! d_p > 1) and `{d_p≤4: 10%, d_p=8: 20%}` for the SDK's monolithic dot
+//! units, the model reproduces **all 14 fit/fail outcomes** of Tables I
+//! and VI exactly (verified by `table1_fit_fail_exact` and
+//! `table6_fit_fail_exact` below).
+
+use super::device::Stratix10;
+
+/// How PEs are interconnected — decides the per-PE routing penalty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterconnectStyle {
+    /// The paper's 3D design: `__fpga_reg` chains between neighbours.
+    RegisterChained,
+    /// The Intel SDK example: daisy-chained wide buses without explicit
+    /// inter-PE registers at every hop.
+    Broadcast,
+}
+
+/// A placement request: everything the fitter model looks at.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementRequest {
+    /// Total DSP blocks of the systolic array (eq. 11).
+    pub dsps: u32,
+    /// Dot-product unit size d_p.
+    pub dp: u32,
+    /// Number of processing elements (eq. 12).
+    pub pes: u32,
+    /// Interconnect style of the architecture.
+    pub style: InterconnectStyle,
+}
+
+/// Result of a placement attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FitOutcome {
+    Fits { pressure: f64 },
+    /// The paper's "fitter failed".
+    Fails { pressure: f64 },
+}
+
+impl FitOutcome {
+    pub fn fits(&self) -> bool {
+        matches!(self, FitOutcome::Fits { .. })
+    }
+
+    pub fn pressure(&self) -> f64 {
+        match *self {
+            FitOutcome::Fits { pressure } | FitOutcome::Fails { pressure } => pressure,
+        }
+    }
+}
+
+/// The calibrated fitter model.
+#[derive(Clone, Debug)]
+pub struct Fitter {
+    device: Stratix10,
+    /// Chain penalty for register-chained designs with d_p > 1.
+    pub chained_dp_penalty: f64,
+    /// Chain penalty for broadcast designs, d_p ≤ 4.
+    pub broadcast_dp4_penalty: f64,
+    /// Chain penalty for broadcast designs, d_p ≥ 8.
+    pub broadcast_dp8_penalty: f64,
+    /// Per-PE routing pressure for broadcast designs.
+    pub broadcast_pe_penalty: f64,
+}
+
+impl Fitter {
+    pub fn new(device: Stratix10) -> Self {
+        Self {
+            device,
+            chained_dp_penalty: 0.03,
+            broadcast_dp4_penalty: 0.10,
+            broadcast_dp8_penalty: 0.20,
+            broadcast_pe_penalty: 0.30,
+        }
+    }
+
+    /// Effective placement pressure in "DSP-equivalents".
+    pub fn pressure(&self, req: &PlacementRequest) -> f64 {
+        let chain = match req.style {
+            InterconnectStyle::RegisterChained => {
+                if req.dp > 1 {
+                    self.chained_dp_penalty
+                } else {
+                    0.0
+                }
+            }
+            InterconnectStyle::Broadcast => {
+                if req.dp >= 8 {
+                    self.broadcast_dp8_penalty
+                } else if req.dp > 1 {
+                    self.broadcast_dp4_penalty
+                } else {
+                    0.0
+                }
+            }
+        };
+        let route = match req.style {
+            InterconnectStyle::RegisterChained => 0.0,
+            InterconnectStyle::Broadcast => self.broadcast_pe_penalty,
+        };
+        req.dsps as f64 * (1.0 + chain) + route * req.pes as f64
+    }
+
+    /// Attempt to place the request.
+    pub fn place(&self, req: &PlacementRequest) -> FitOutcome {
+        let pressure = self.pressure(req);
+        if req.dsps <= self.device.kernel_dsps && pressure <= self.device.kernel_dsps as f64 {
+            FitOutcome::Fits { pressure }
+        } else {
+            FitOutcome::Fails { pressure }
+        }
+    }
+}
+
+impl Default for Fitter {
+    fn default() -> Self {
+        Self::new(Stratix10::gx2800_520n())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chained(dsps: u32, dp: u32, pes: u32) -> PlacementRequest {
+        PlacementRequest { dsps, dp, pes, style: InterconnectStyle::RegisterChained }
+    }
+
+    fn broadcast(dsps: u32, dp: u32, pes: u32) -> PlacementRequest {
+        PlacementRequest { dsps, dp, pes, style: InterconnectStyle::Broadcast }
+    }
+
+    /// Every fit/fail outcome of Table I, exactly.
+    #[test]
+    fn table1_fit_fail_exact() {
+        let f = Fitter::default();
+        let rows: &[(&str, PlacementRequest, bool)] = &[
+            ("A", chained(4704, 3, 1568), false),
+            ("B", chained(4704, 2, 2352), false),
+            ("C", chained(4704, 1, 4704), true),
+            ("D", chained(4608, 2, 2304), false),
+            ("E", chained(4608, 1, 4608), true),
+            ("F", chained(4480, 2, 2240), true),
+            ("G", chained(4096, 2, 2048), true),
+            ("H", chained(4096, 4, 1024), true),
+            ("I", chained(4096, 2, 2048), true),
+            ("L", chained(4096, 8, 512), true),
+            ("M", chained(4096, 4, 1024), true),
+            ("N", chained(4096, 2, 2048), true),
+        ];
+        for (id, req, expect_fit) in rows {
+            let out = f.place(req);
+            assert_eq!(out.fits(), *expect_fit, "design {id}: {out:?}");
+        }
+    }
+
+    /// Every fit/fail outcome of Table VI (Intel SDK baseline), exactly.
+    #[test]
+    fn table6_fit_fail_exact() {
+        let f = Fitter::default();
+        // (rows, cols, dot sizes per PE) -> PEs, DSPs.
+        let rows: &[(&str, PlacementRequest, bool)] = &[
+            ("32x18 dot8", broadcast(4608, 8, 576), false),
+            ("32x18 2xdot4", broadcast(4608, 4, 576), false),
+            ("32x16 dot8", broadcast(4096, 8, 512), false),
+            ("32x16 2xdot4", broadcast(4096, 4, 512), true),
+            ("32x32 dot4", broadcast(4096, 4, 1024), false),
+            ("32x14 dot8", broadcast(3584, 8, 448), true),
+        ];
+        for (id, req, expect_fit) in rows {
+            let out = f.place(req);
+            assert_eq!(out.fits(), *expect_fit, "config {id}: {out:?}");
+        }
+    }
+
+    #[test]
+    fn register_chains_remove_pe_pressure() {
+        // Same DSP count and dp: the chained design fits where broadcast fails.
+        let f = Fitter::default();
+        assert!(f.place(&chained(4096, 4, 1024)).fits());
+        assert!(!f.place(&broadcast(4096, 4, 1024)).fits());
+    }
+
+    #[test]
+    fn oversubscription_always_fails() {
+        let f = Fitter::default();
+        assert!(!f.place(&chained(4714, 1, 4714)).fits());
+    }
+
+    #[test]
+    fn pressure_monotone_in_dsps() {
+        let f = Fitter::default();
+        let p1 = f.pressure(&chained(1000, 2, 500));
+        let p2 = f.pressure(&chained(2000, 2, 1000));
+        assert!(p2 > p1);
+    }
+}

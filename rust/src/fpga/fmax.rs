@@ -1,0 +1,229 @@
+//! Maximum-frequency model.
+//!
+//! Quartus timing closure is famously seed-noisy: Table I itself shows a
+//! 28 MHz spread (L=391, M=363, N=381) between designs that differ *only*
+//! in d_p at identical DSP count. Any smooth model of f_max therefore has
+//! an irreducible ±15–25 MHz residual. We handle this honestly with a
+//! two-part model (DESIGN.md §7):
+//!
+//! 1. a **calibration table** holding the paper's measured f_max for the
+//!    known synthesis points — table reproduction uses these, exactly;
+//! 2. a **smooth analytical predictor** for design-space exploration on
+//!    unseen configurations, hand-calibrated on the measured points
+//!    (residuals are reported by `systo3d tables --residuals` and in
+//!    EXPERIMENTS.md).
+//!
+//! Predictor shape:
+//!
+//! ```text
+//! f_pred = f_base                      (420 MHz with Hyperflex)
+//!        - 30 · max(0, (u-0.85)/0.15)  (global congestion above 85% DSPs)
+//!        - 25 · [d_p = 1 ∧ u > 0.95]   (fine-grain PE forest near full chip:
+//!                                       C/E-style designs lose a speed bin)
+//!        - 3 · (d_k0 − 2)              (deeper arrays: wider on-chip faces,
+//!                                       denser partition wiring)
+//! ```
+//!
+//! Design M (32,16,8,d_p=4; measured 363 MHz) sits ~35 MHz below the
+//! predictor while its siblings L (391) and N (381) straddle it — a
+//! seed outlier by the paper's own evidence; the predictor keeps the
+//! trend and the residual is reported, not hidden.
+//!
+//! Without Hyperflex (the FBLAS / Cannon baselines in §VI) `f_base` drops
+//! to 300 MHz — consistent with their reported 216–294 MHz.
+
+use super::fitter::InterconnectStyle;
+
+/// Outcome of the timing model for one design.
+#[derive(Clone, Copy, Debug)]
+pub struct FmaxResult {
+    /// Frequency in MHz.
+    pub mhz: f64,
+    /// True if the value came from the calibration table (a measured
+    /// point) rather than the analytical predictor.
+    pub measured: bool,
+}
+
+/// Key identifying a synthesis point: (d_i0, d_j0, d_k0, d_p, style).
+pub type SynthKey = (u32, u32, u32, u32, InterconnectStyle);
+
+/// The f_max model.
+#[derive(Clone, Debug)]
+pub struct FmaxModel {
+    /// Base frequency with Hyperflex retiming enabled.
+    pub f_base_hyperflex: f64,
+    /// Base frequency without Hyperflex (legacy baselines).
+    pub f_base_plain: f64,
+    /// Congestion slope above the utilization knee.
+    pub congestion_slope: f64,
+    /// Utilization knee where congestion starts to bite.
+    pub congestion_knee: f64,
+    /// Penalty for d_p = 1 designs above 95% utilization.
+    pub fine_grain_penalty: f64,
+    /// Per-unit d_k0 depth penalty (MHz per step beyond d_k0 = 2).
+    pub depth_slope: f64,
+    calibration: Vec<(SynthKey, f64)>,
+}
+
+impl FmaxModel {
+    pub fn calibrated() -> Self {
+        use InterconnectStyle::*;
+        Self {
+            f_base_hyperflex: 420.0,
+            f_base_plain: 300.0,
+            congestion_slope: 30.0,
+            congestion_knee: 0.85,
+            fine_grain_penalty: 25.0,
+            depth_slope: 3.0,
+            calibration: vec![
+                // Table I (3D systolic, register-chained).
+                (((28, 28, 6, 1, RegisterChained)), 368.0), // C
+                (((72, 32, 2, 1, RegisterChained)), 368.0), // E
+                (((70, 32, 2, 2, RegisterChained)), 410.0), // F
+                (((64, 32, 2, 2, RegisterChained)), 398.0), // G
+                (((32, 32, 4, 4, RegisterChained)), 408.0), // H
+                (((32, 32, 4, 2, RegisterChained)), 396.0), // I
+                (((32, 16, 8, 8, RegisterChained)), 391.0), // L
+                (((32, 16, 8, 4, RegisterChained)), 363.0), // M
+                (((32, 16, 8, 2, RegisterChained)), 381.0), // N
+                // Table VI (Intel SDK 2D systolic, broadcast style);
+                // d_k0 is the per-PE dot width × units, d_p the unit size.
+                (((32, 14, 8, 8, Broadcast)), 412.0),
+                (((32, 16, 8, 4, Broadcast)), 407.0),
+            ],
+        }
+    }
+
+    /// Measured f_max if this exact point was synthesized in the paper.
+    pub fn measured(&self, key: &SynthKey) -> Option<f64> {
+        self.calibration.iter().find(|(k, _)| k == key).map(|&(_, f)| f)
+    }
+
+    /// Analytical prediction for an arbitrary point.
+    ///
+    /// `utilization` is DSPs-used / DSPs-available; `dk0` the array
+    /// depth; `dp` the dot-unit size; `hyperflex` whether the retiming
+    /// optimization is on.
+    pub fn predict(&self, utilization: f64, dk0: u32, dp: u32, hyperflex: bool) -> f64 {
+        let base = if hyperflex { self.f_base_hyperflex } else { self.f_base_plain };
+        let congestion = (utilization - self.congestion_knee).max(0.0)
+            / (1.0 - self.congestion_knee);
+        let fine_grain = if dp == 1 && utilization > 0.95 {
+            self.fine_grain_penalty
+        } else {
+            0.0
+        };
+        let depth = self.depth_slope * (dk0.saturating_sub(2)) as f64;
+        (base - self.congestion_slope * congestion - fine_grain - depth).max(150.0)
+    }
+
+    /// Full query: measured when known, predicted otherwise.
+    pub fn fmax(&self, key: &SynthKey, utilization: f64, hyperflex: bool) -> FmaxResult {
+        if let Some(mhz) = self.measured(key) {
+            FmaxResult { mhz, measured: true }
+        } else {
+            FmaxResult {
+                mhz: self.predict(utilization, key.2, key.3, hyperflex),
+                measured: false,
+            }
+        }
+    }
+
+    /// Residuals (predicted − measured) over the calibration set, for the
+    /// honesty report in EXPERIMENTS.md.
+    pub fn residuals(&self) -> Vec<(SynthKey, f64, f64, f64)> {
+        self.calibration
+            .iter()
+            .map(|&(key, meas)| {
+                let (di, dj, dk, dp, _style) = key;
+                let u = (di * dj * dk) as f64 / 4713.0;
+                let pred = self.predict(u, dk, dp, true);
+                (key, meas, pred, pred - meas)
+            })
+            .collect()
+    }
+}
+
+impl Default for FmaxModel {
+    fn default() -> Self {
+        Self::calibrated()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use InterconnectStyle::*;
+
+    #[test]
+    fn measured_points_exact() {
+        let m = FmaxModel::calibrated();
+        assert_eq!(m.measured(&(28, 28, 6, 1, RegisterChained)), Some(368.0));
+        assert_eq!(m.measured(&(70, 32, 2, 2, RegisterChained)), Some(410.0));
+        assert_eq!(m.measured(&(32, 14, 8, 8, Broadcast)), Some(412.0));
+        assert_eq!(m.measured(&(99, 99, 9, 9, RegisterChained)), None);
+    }
+
+    #[test]
+    fn predictor_within_noise_band_of_measured() {
+        // ±26 MHz: the band spanned by the paper's own seed noise.
+        // Exception: design M (32,16,8,4) measured 363 MHz between
+        // siblings at 391/381 — a documented seed outlier, allowed ±40.
+        let m = FmaxModel::calibrated();
+        for &(key, meas) in m.calibration.iter() {
+            let (di, dj, dk, dp, _style) = key;
+            let u = (di * dj * dk) as f64 / 4713.0;
+            let pred = m.predict(u, dk, dp, true);
+            let band = if key == (32, 16, 8, 4, RegisterChained) { 40.0 } else { 26.0 };
+            assert!(
+                (pred - meas).abs() <= band,
+                "{key:?}: pred {pred} vs meas {meas}"
+            );
+        }
+    }
+
+    #[test]
+    fn hyperflex_gap_matches_legacy_baselines() {
+        // FBLAS ran at 216 MHz, Cannon at 294 MHz, both without Hyperflex.
+        let m = FmaxModel::calibrated();
+        let f = m.predict(0.7, 4, 4, false);
+        assert!((200.0..=310.0).contains(&f), "plain-mode prediction {f}");
+    }
+
+    #[test]
+    fn congestion_monotone() {
+        let m = FmaxModel::calibrated();
+        assert!(m.predict(0.999, 2, 2, true) < m.predict(0.90, 2, 2, true));
+        assert!(m.predict(0.90, 2, 2, true) <= m.predict(0.5, 2, 2, true));
+    }
+
+    #[test]
+    fn fine_grain_penalty_only_near_full() {
+        let m = FmaxModel::calibrated();
+        // dp=1 at 99.8% loses the penalty; at 50% it does not.
+        assert!(m.predict(0.998, 2, 1, true) < m.predict(0.998, 2, 2, true));
+        assert_eq!(m.predict(0.5, 2, 1, true), m.predict(0.5, 2, 2, true));
+    }
+
+    #[test]
+    fn depth_penalty_monotone() {
+        let m = FmaxModel::calibrated();
+        assert!(m.predict(0.869, 8, 2, true) < m.predict(0.869, 2, 2, true));
+    }
+
+    #[test]
+    fn fmax_prefers_measured() {
+        let m = FmaxModel::calibrated();
+        let r = m.fmax(&(32, 16, 8, 4, RegisterChained), 0.869, true);
+        assert!(r.measured);
+        assert_eq!(r.mhz, 363.0); // design M, a point the predictor misses
+        let r = m.fmax(&(16, 16, 4, 4, RegisterChained), 0.2, true);
+        assert!(!r.measured);
+    }
+
+    #[test]
+    fn floor_at_150mhz() {
+        let m = FmaxModel::calibrated();
+        assert!(m.predict(5.0, 2, 1, false) >= 150.0);
+    }
+}

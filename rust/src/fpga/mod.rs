@@ -1,0 +1,24 @@
+//! FPGA substrate: a model of the Intel Stratix 10 GX2800 (BittWare 520N)
+//! as seen through the Intel FPGA SDK for OpenCL tool flow.
+//!
+//! The paper's evaluation depends on synthesis outcomes only through three
+//! observables — DSP count, fit/fail, and f_max — so this module implements
+//! exactly those as calibrated models (DESIGN.md §2, §7):
+//!
+//! * [`device`] — the resource ledger (DSPs, M20Ks, BSP reservation).
+//! * [`dsp`] — Variable-Precision DSP blocks and chained dot-product units
+//!   (paper eqs. 5–8).
+//! * [`fitter`] — placement feasibility ("fitter failed" rows of Tables
+//!   I & VI); exact on all 14 calibration points.
+//! * [`fmax`] — maximum-frequency model: measured values for the known
+//!   synthesis points, a smooth analytical predictor for DSE beyond them.
+
+pub mod device;
+pub mod dsp;
+pub mod fitter;
+pub mod fmax;
+
+pub use device::{Stratix10, M20K_BYTES};
+pub use dsp::{DotProductUnit, DspMode};
+pub use fitter::{FitOutcome, Fitter, InterconnectStyle, PlacementRequest};
+pub use fmax::{FmaxModel, FmaxResult};

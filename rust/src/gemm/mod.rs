@@ -1,0 +1,10 @@
+//! Pure-Rust dense SGEMM oracle.
+//!
+//! Functional ground truth for (a) the cycle-accurate systolic simulator,
+//! (b) the event-level off-chip simulator's functional mode, and (c) the
+//! PJRT runtime integration tests. Also doubles as the "CPU baseline
+//! (this testbed)" measurement when run through the blocked fast path.
+
+pub mod dense;
+
+pub use dense::{matmul, matmul_blocked, Matrix};

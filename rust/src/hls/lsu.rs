@@ -1,0 +1,136 @@
+//! Load/store-unit synthesis model (paper §II-A).
+//!
+//! The HLS tool turns each global/local memory pointer access in the
+//! kernel into an LSU. Key behaviours modelled:
+//!
+//! * LSU byte widths are **powers of two**: accessing 3 consecutive
+//!   floats (12 B) synthesizes a 16 B unit.
+//! * Sequential aligned read-or-write-only accesses become
+//!   **burst-coalesced** LSUs with controller efficiency `e ≈ 1`;
+//!   strided/unaligned ones pay a lower `e`.
+//! * A global LSU can request at most `𝓑_ddr` floats/cycle without
+//!   stalling, a *frequency-dependent* ceiling (eq. 4): 16 floats/cycle
+//!   up to 300 MHz, 8 floats/cycle from 300–600 MHz (the LSU bus narrows
+//!   as the clock outruns the DDR interface).
+
+use crate::util::next_pow2;
+
+/// Memory-access pattern of the pointer expression behind an LSU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Consecutive, aligned, read-only or write-only → burst-coalesced.
+    SequentialAligned,
+    /// Consecutive but misaligned start.
+    SequentialUnaligned,
+    /// Constant stride > 1.
+    Strided,
+    /// Data-dependent addresses.
+    Random,
+}
+
+/// The kind of LSU the tool instantiates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LsuKind {
+    BurstCoalesced,
+    Prefetching,
+    Pipelined,
+}
+
+/// A synthesized load-or-store unit.
+#[derive(Clone, Copy, Debug)]
+pub struct Lsu {
+    /// Width in bytes (always a power of two).
+    pub width_bytes: u64,
+    pub kind: LsuKind,
+    pub pattern: AccessPattern,
+}
+
+impl Lsu {
+    /// Synthesize an LSU for an access of `request_bytes` consecutive
+    /// bytes per iteration with the given pattern.
+    pub fn synthesize(request_bytes: u64, pattern: AccessPattern) -> Self {
+        assert!(request_bytes > 0, "LSU must move at least one byte");
+        let width_bytes = next_pow2(request_bytes);
+        let kind = match pattern {
+            AccessPattern::SequentialAligned => LsuKind::BurstCoalesced,
+            AccessPattern::SequentialUnaligned => LsuKind::BurstCoalesced,
+            AccessPattern::Strided => LsuKind::Prefetching,
+            AccessPattern::Random => LsuKind::Pipelined,
+        };
+        Self { width_bytes, kind, pattern }
+    }
+
+    /// Floats moved per cycle at full rate.
+    pub fn floats_per_cycle(&self) -> u64 {
+        self.width_bytes / 4
+    }
+
+    /// Memory-controller efficiency `e` for this access type (§II-A:
+    /// close to 1 for aligned burst-coalesced accesses; [12]).
+    pub fn controller_efficiency(&self) -> f64 {
+        match self.pattern {
+            AccessPattern::SequentialAligned => 0.97,
+            AccessPattern::SequentialUnaligned => 0.85,
+            AccessPattern::Strided => 0.55,
+            AccessPattern::Random => 0.25,
+        }
+    }
+}
+
+/// Frequency-dependent per-LSU request ceiling (paper eq. 4), in
+/// single-precision floats per cycle.
+pub fn max_floats_per_cycle(f_mhz: f64) -> u64 {
+    if f_mhz <= 300.0 {
+        16 // 64 B/cycle
+    } else {
+        8 // 32 B/cycle, 300 < f <= 600 MHz
+    }
+}
+
+/// Same ceiling in bytes/cycle.
+pub fn max_bytes_per_cycle(f_mhz: f64) -> u64 {
+    max_floats_per_cycle(f_mhz) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_rounds_to_pow2() {
+        // The paper's example: 3 floats = 12 B -> a 16 B LSU.
+        let l = Lsu::synthesize(12, AccessPattern::SequentialAligned);
+        assert_eq!(l.width_bytes, 16);
+        assert_eq!(l.floats_per_cycle(), 4);
+        // A single float -> 4 B unit.
+        assert_eq!(Lsu::synthesize(4, AccessPattern::SequentialAligned).width_bytes, 4);
+    }
+
+    #[test]
+    fn aligned_sequential_is_burst_coalesced() {
+        let l = Lsu::synthesize(64, AccessPattern::SequentialAligned);
+        assert_eq!(l.kind, LsuKind::BurstCoalesced);
+        assert!(l.controller_efficiency() > 0.95);
+    }
+
+    #[test]
+    fn random_access_is_slow() {
+        let l = Lsu::synthesize(4, AccessPattern::Random);
+        assert!(l.controller_efficiency() < 0.5);
+    }
+
+    #[test]
+    fn eq4_frequency_ceiling() {
+        assert_eq!(max_floats_per_cycle(200.0), 16);
+        assert_eq!(max_floats_per_cycle(300.0), 16);
+        assert_eq!(max_floats_per_cycle(301.0), 8);
+        assert_eq!(max_floats_per_cycle(410.0), 8);
+        assert_eq!(max_bytes_per_cycle(410.0), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one byte")]
+    fn zero_byte_lsu_rejected() {
+        Lsu::synthesize(0, AccessPattern::Random);
+    }
+}

@@ -1,0 +1,22 @@
+//! HLS tool-flow model: the Intel FPGA SDK for OpenCL abstractions the
+//! paper's analysis is written in (§II).
+//!
+//! * [`pipeline`] — loop pipelines: initiation interval, loop-body
+//!   latency, total latency `l_tot = l_body + II·#it`, and throughput
+//!   under stalls (eqs. 1, 3).
+//! * [`lsu`] — load/store-unit synthesis: power-of-two byte widths,
+//!   alignment, burst coalescing, and the per-f_max request ceiling of
+//!   eq. 4.
+//! * [`report`] — human-readable synthesis summaries mimicking the HLS
+//!   tool's `report.html` / `acl_quartus_report.txt` fields that the
+//!   paper quotes.
+
+pub mod codegen;
+pub mod lsu;
+pub mod pipeline;
+pub mod report;
+
+pub use codegen::{CodegenStats, KernelCodegen};
+pub use lsu::{AccessPattern, Lsu, LsuKind};
+pub use pipeline::{LoopPipeline, PipelineThroughput};
+pub use report::SynthesisReport;

@@ -1,0 +1,123 @@
+//! Loop-pipeline model (paper §II, eqs. 1 and 3).
+//!
+//! The HLS tool turns a loop body into a pipelined circuit characterized
+//! by its loop-body latency `l_body` (cycles for one iteration to
+//! traverse the circuit) and initiation interval `II` (cycles between
+//! iteration starts). The total latency of `#it` iterations is
+//!
+//! ```text
+//! l_tot = l_body + II · #it        [cycles]
+//! ```
+//!
+//! and the op-throughput of an ideal (II=1, #it >> l_body) pipeline is
+//! `T_op = 𝒯_op · f_max` (eq. 1), degraded to `(1-stall)·𝒯_op·f_max`
+//! when memory stalls are present (eq. 3).
+
+/// A pipelined loop.
+#[derive(Clone, Copy, Debug)]
+pub struct LoopPipeline {
+    /// Loop-body latency in cycles.
+    pub l_body: u64,
+    /// Initiation interval (1 = ideal).
+    pub ii: u64,
+    /// Number of iterations.
+    pub iterations: u64,
+}
+
+impl LoopPipeline {
+    pub fn new(l_body: u64, ii: u64, iterations: u64) -> Self {
+        assert!(ii >= 1, "II must be >= 1");
+        Self { l_body, ii, iterations }
+    }
+
+    /// Total latency `l_tot = l_body + II·#it`.
+    pub fn total_latency(&self) -> u64 {
+        self.l_body + self.ii * self.iterations
+    }
+
+    /// Fraction of cycles doing useful iteration starts — the pipeline
+    /// efficiency `II·#it / l_tot`; approaches 1 when `#it >> l_body`.
+    pub fn efficiency(&self) -> f64 {
+        let total = self.total_latency();
+        if total == 0 {
+            return 0.0;
+        }
+        (self.ii * self.iterations) as f64 / total as f64
+    }
+
+    /// Wall-clock seconds at `f_mhz`.
+    pub fn seconds_at(&self, f_mhz: f64) -> f64 {
+        self.total_latency() as f64 / (f_mhz * 1e6)
+    }
+}
+
+/// Throughput of operations inside a pipelined loop body (eqs. 1 & 3).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineThroughput {
+    /// 𝒯_op: operations started per cycle in the loop body.
+    pub ops_per_cycle: f64,
+    /// Stall rate ∈ [0, 1): fraction of issue slots lost to memory.
+    pub stall: f64,
+}
+
+impl PipelineThroughput {
+    pub fn ideal(ops_per_cycle: f64) -> Self {
+        Self { ops_per_cycle, stall: 0.0 }
+    }
+
+    /// `T_op = (1-stall)·𝒯_op·f_max` in ops/s; `f` in MHz (eq. 3).
+    pub fn ops_per_second(&self, f_mhz: f64) -> f64 {
+        (1.0 - self.stall) * self.ops_per_cycle * f_mhz * 1e6
+    }
+
+    /// Convenience: GFLOPS when `ops_per_cycle` counts FLOPs.
+    pub fn gflops(&self, f_mhz: f64) -> f64 {
+        self.ops_per_second(f_mhz) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_latency_formula() {
+        let p = LoopPipeline::new(100, 1, 1000);
+        assert_eq!(p.total_latency(), 1100);
+        let p = LoopPipeline::new(100, 2, 1000);
+        assert_eq!(p.total_latency(), 2100);
+    }
+
+    #[test]
+    fn efficiency_approaches_one() {
+        let short = LoopPipeline::new(100, 1, 100);
+        let long = LoopPipeline::new(100, 1, 1_000_000);
+        assert!(short.efficiency() < long.efficiency());
+        assert!(long.efficiency() > 0.9999);
+    }
+
+    #[test]
+    fn ideal_throughput_eq1() {
+        // A dot-product unit of size 8: 16 FLOP/cycle at 400 MHz = 6.4 GFLOPS.
+        let t = PipelineThroughput::ideal(16.0);
+        assert!((t.gflops(400.0) - 6.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stalled_throughput_eq3() {
+        let t = PipelineThroughput { ops_per_cycle: 16.0, stall: 0.5 };
+        assert!((t.gflops(400.0) - 3.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seconds_at_frequency() {
+        let p = LoopPipeline::new(0, 1, 400_000_000);
+        assert!((p.seconds_at(400.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "II must be")]
+    fn rejects_zero_ii() {
+        LoopPipeline::new(1, 0, 1);
+    }
+}

@@ -1,0 +1,113 @@
+//! Synthesis-report rendering, mimicking the fields of the Intel HLS
+//! tool's `report.html` and `acl_quartus_report.txt` that the paper
+//! quotes (`Kernel fmax`, DSP counts, utilization).
+
+use std::fmt;
+
+/// One design's synthesis summary — the row shape of Table I.
+#[derive(Clone, Debug)]
+pub struct SynthesisReport {
+    pub design_id: String,
+    pub pes: u32,
+    pub di0: u32,
+    pub dj0: u32,
+    pub dk0: u32,
+    pub dp: u32,
+    pub dsps: u32,
+    pub dsp_pct_available: f64,
+    /// `None` == "fitter failed".
+    pub fmax_mhz: Option<f64>,
+    /// Peak GFLOPS (eq. 5); `None` when the fitter failed.
+    pub tpeak_gflops: Option<f64>,
+}
+
+impl SynthesisReport {
+    pub fn fitted(&self) -> bool {
+        self.fmax_mhz.is_some()
+    }
+
+    /// The `Kernel fmax` field of `acl_quartus_report.txt`.
+    pub fn kernel_fmax_field(&self) -> String {
+        match self.fmax_mhz {
+            Some(f) => format!("Kernel fmax: {f:.0} MHz"),
+            None => "Kernel fmax: n/a (fitter failed)".to_string(),
+        }
+    }
+
+    /// Render the Table-I-style row.
+    pub fn table_row(&self) -> String {
+        let (fmax, tpeak) = match (self.fmax_mhz, self.tpeak_gflops) {
+            (Some(f), Some(t)) => (format!("{f:>5.0}"), format!("{t:>6.0}")),
+            _ => ("fitter failed".into(), String::new()),
+        };
+        format!(
+            "{:<3} {:>5}  {:>3} {:>3} {:>2} {:>2}  {:>5} {:>6.1}%  {} {}",
+            self.design_id,
+            self.pes,
+            self.di0,
+            self.dj0,
+            self.dk0,
+            self.dp,
+            self.dsps,
+            self.dsp_pct_available,
+            fmax,
+            tpeak
+        )
+    }
+}
+
+impl fmt::Display for SynthesisReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.table_row())
+    }
+}
+
+/// Header matching [`SynthesisReport::table_row`] columns.
+pub fn table_header() -> String {
+    format!(
+        "{:<3} {:>5}  {:>3} {:>3} {:>2} {:>2}  {:>5} {:>7}  {:>5} {:>6}",
+        "ID", "#PEs", "di0", "dj0", "dk", "dp", "#DSP", "%avail", "fmax", "Tpeak"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(fmax: Option<f64>) -> SynthesisReport {
+        SynthesisReport {
+            design_id: "G".into(),
+            pes: 2048,
+            di0: 64,
+            dj0: 32,
+            dk0: 2,
+            dp: 2,
+            dsps: 4096,
+            dsp_pct_available: 86.9,
+            fmax_mhz: fmax,
+            tpeak_gflops: fmax.map(|f| 2.0 * 4096.0 * f / 1e3),
+        }
+    }
+
+    #[test]
+    fn fitted_row_renders_numbers() {
+        let r = report(Some(398.0));
+        assert!(r.fitted());
+        let row = r.table_row();
+        assert!(row.contains("398"));
+        assert!(row.contains("3260"));
+        assert!(r.kernel_fmax_field().contains("398"));
+    }
+
+    #[test]
+    fn failed_row_renders_marker() {
+        let r = report(None);
+        assert!(!r.fitted());
+        assert!(r.table_row().contains("fitter failed"));
+    }
+
+    #[test]
+    fn header_alignment_nonempty() {
+        assert!(table_header().contains("#DSP"));
+    }
+}

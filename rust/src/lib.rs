@@ -1,0 +1,43 @@
+//! # systo3d
+//!
+//! Reproduction of *"High Level Synthesis Implementation of a
+//! Three-dimensional Systolic Array Architecture for Matrix
+//! Multiplications on Intel Stratix 10 FPGAs"* (Gorlani & Plessl, 2021)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator and every hardware substrate
+//!   the paper depends on, rebuilt as calibrated simulators: the Stratix
+//!   10 device/fitter/f_max models ([`fpga`]), the Intel-HLS pipeline and
+//!   LSU abstractions ([`hls`]), the 520N memory system ([`memory`]), the
+//!   cycle-accurate 2D/3D systolic dataflow ([`systolic`]), the two-level
+//!   blocked off-chip algorithm and its event-level simulator
+//!   ([`blocked`]), the analytical model (eqs. 1–19, [`perfmodel`]),
+//!   design-space exploration ([`dse`]), the paper's comparison baselines
+//!   ([`baselines`]), and a GEMM service ([`coordinator`]) that executes
+//!   requests functionally through AOT-compiled XLA artifacts
+//!   ([`runtime`]) while timing them on the FPGA simulator.
+//! * **L2** — `python/compile/model.py`: the blocked matmul as a JAX
+//!   graph, AOT-lowered to `artifacts/*.hlo.txt` at build time.
+//! * **L1** — `python/compile/kernels/systolic_mm.py`: the 3D systolic
+//!   matmul as a Pallas kernel (TPU adaptation of the paper's DSP
+//!   dot-product planes).
+//!
+//! Python never runs at request time; the binary is self-contained once
+//! `make artifacts` has produced the HLO text files.
+
+pub mod baselines;
+pub mod blocked;
+pub mod coordinator;
+pub mod dse;
+pub mod fpga;
+pub mod gemm;
+pub mod hls;
+pub mod memory;
+pub mod perfmodel;
+pub mod runtime;
+pub mod solver;
+pub mod systolic;
+pub mod util;
+
+pub mod cli;
+pub mod reports;

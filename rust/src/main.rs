@@ -1,0 +1,301 @@
+//! `systo3d` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `tables [--residuals]` — regenerate every paper table and figure.
+//! * `dse [--eval-d2 N]` — run the design-space explorer sweep.
+//! * `simulate --design G --d2 4096` — simulate one off-chip multiply.
+//! * `verify [--artifacts DIR]` — execute every AOT artifact through the
+//!   PJRT runtime and check it against the GEMM oracle.
+//! * `serve [--requests N] [--artifacts DIR]` — run the GEMM service on
+//!   a synthetic request stream and print throughput/latency metrics.
+
+use systo3d::cli::Args;
+use systo3d::coordinator::{GemmRequest, GemmService, ServiceConfig};
+use systo3d::dse::{paper_catalog, Explorer};
+use systo3d::gemm::{matmul_blocked, Matrix};
+use systo3d::reports;
+use systo3d::runtime::Engine;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("tables") => cmd_tables(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("codegen") => cmd_codegen(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "systo3d — 3D systolic array matmul reproduction\n\
+         usage: systo3d <tables|dse|simulate|verify|serve> [options]\n\
+         \n\
+         tables   [--residuals]              regenerate paper tables/figures\n\
+         dse      [--eval-d2 N]              design-space exploration sweep\n\
+         simulate [--design G] [--d2 4096]   simulate one off-chip multiply\n\
+         verify   [--artifacts DIR]          check artifacts vs GEMM oracle\n\
+         serve    [--requests N] [--artifacts DIR]  run the GEMM service demo\n\
+         ablate   [--d2 4096]                ablation studies (§III-C/§V claims)\n\
+         codegen  [--design G]               emit the OpenCL HLS kernel source"
+    );
+}
+
+fn cmd_ablate(args: &Args) -> anyhow::Result<()> {
+    use systo3d::dse::{ablate_interconnect, ablate_overlap, ablate_reuse, ablate_third_dimension};
+    let d2 = args.get_u64("d2", 4096).map_err(anyhow::Error::msg)?;
+
+    for ablation in [ablate_overlap(d2), ablate_reuse(d2)] {
+        println!("--- {} ---", ablation.name);
+        for arm in &ablation.arms {
+            println!(
+                "  {:<28} {:>7.0} GFLOPS  e_D {:.2}   ({})",
+                arm.label, arm.gflops, arm.e_d, arm.note
+            );
+        }
+        println!("  advantage: {:.2}x\n", ablation.advantage());
+    }
+
+    println!("--- third dimension at constant #DSP (d2={d2}) ---");
+    for arm in ablate_third_dimension(d2) {
+        println!(
+            "  {:<18} {:>7.0} GFLOPS  e_D {:.2}   ({})",
+            arm.label, arm.gflops, arm.e_d, arm.note
+        );
+    }
+
+    println!("\n--- interconnect style vs fit frontier (dp=2) ---");
+    println!("  {:>6} {:>16} {:>12}", "#DSP", "register-chained", "broadcast");
+    for (dsps, chained, broadcast) in ablate_interconnect() {
+        println!(
+            "  {:>6} {:>16} {:>12}",
+            dsps,
+            if chained { "fits" } else { "FAILS" },
+            if broadcast { "fits" } else { "FAILS" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> anyhow::Result<()> {
+    use systo3d::hls::KernelCodegen;
+    let id = args.get_str("design", "G").to_uppercase();
+    let spec = paper_catalog()
+        .into_iter()
+        .find(|d| d.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown design {id}"))?;
+    let blocking = spec
+        .level1()
+        .ok_or_else(|| anyhow::anyhow!("design {id} failed the fitter; no code to emit"))?;
+    let gen = KernelCodegen::new(blocking);
+    println!("{}", gen.source());
+    let stats = gen.stats();
+    eprintln!(
+        "// {} lines, {} unroll pragmas, {} __fpga_reg sites",
+        stats.lines, stats.unroll_pragmas, stats.fpga_reg_sites
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> anyhow::Result<()> {
+    println!("{}", reports::table1());
+    if args.flag("residuals") {
+        println!("{}", reports::table1_residuals());
+    }
+    for id in ["C", "E", "F"] {
+        if let Some(t) = reports::table_design_sweep(id) {
+            println!("{t}");
+        }
+    }
+    println!("{}", reports::table5());
+    println!("{}", reports::table6());
+    println!("{}", reports::table7_8());
+    println!("{}", reports::figure1());
+    println!("{}", reports::figure2());
+    println!("{}", reports::figure3(2048));
+    println!("{}", reports::eq19_curve());
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> anyhow::Result<()> {
+    let eval_d2 = args.get_u64("eval-d2", 8192).map_err(anyhow::Error::msg)?;
+    let ex = Explorer { eval_d2, ..Default::default() };
+    let points = ex.sweep(
+        &[16, 28, 32, 64, 70, 72],
+        &[16, 28, 32],
+        &[2, 4, 6, 8],
+    );
+    println!("design-space sweep: {} candidates (eval d2 = {eval_d2})", points.len());
+    println!(
+        "{:>3}x{:>3}x{:>2} dp={:>2} | {:>5} | {:>8} | {:>6} | {:>9} | {:>9}",
+        "di", "dj", "dk", "dp", "#DSP", "fit", "fmax", "Tpeak", "sustained"
+    );
+    let mut shown = 0;
+    for p in &points {
+        if !p.outcome.fits() {
+            continue;
+        }
+        shown += 1;
+        println!(
+            "{:>3}x{:>3}x{:>2} dp={:>2} | {:>5} | {:>8} | {:>6.0} | {:>9.0} | {:>9}",
+            p.array.di0,
+            p.array.dj0,
+            p.array.dk0,
+            p.array.dp,
+            p.array.dsps(),
+            "fits",
+            p.fmax_mhz.unwrap_or(0.0),
+            p.tpeak_gflops.unwrap_or(0.0),
+            p.sustained_gflops.map(|g| format!("{g:.0}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!("({} fitted / {} total)", shown, points.len());
+    if let Some(best) = ex.best(&points) {
+        println!(
+            "best: ({},{},{},dp={}) — sustained {:?} GFLOPS",
+            best.array.di0, best.array.dj0, best.array.dk0, best.array.dp,
+            best.sustained_gflops.map(|g| g.round())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let id = args.get_str("design", "G").to_uppercase();
+    let d2 = args.get_u64("d2", 4096).map_err(anyhow::Error::msg)?;
+    let spec = paper_catalog()
+        .into_iter()
+        .find(|d| d.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown design {id}"))?;
+    let blocking = spec
+        .level1()
+        .ok_or_else(|| anyhow::anyhow!("design {id} failed the fitter in the paper"))?;
+    let sim = systo3d::blocked::OffchipSim::new(systo3d::blocked::OffchipDesign {
+        blocking,
+        fmax_mhz: spec.fmax_mhz.unwrap(),
+        controller_efficiency: 0.97,
+    });
+    let dj2 = if blocking.di1 != blocking.dj1 {
+        d2 * blocking.dj1 as u64 / blocking.di1 as u64
+    } else {
+        d2
+    };
+    let r = sim.simulate(d2, dj2, d2);
+    println!(
+        "design {id}: ({d2} x {d2}) · ({d2} x {dj2})\n\
+         cycles:            {}\n\
+         kernel time:       {:.4} s @ {} MHz\n\
+         throughput:        {:.0} GFLOPS\n\
+         DSP efficiency:    {:.3}\n\
+         compute fraction:  {:.3} (eq. 19 analogue)",
+        r.cycles, r.seconds, spec.fmax_mhz.unwrap(), r.gflops, r.e_d, r.compute_fraction
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get_str("artifacts", "artifacts"));
+    let mut engine = Engine::new(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let names: Vec<String> = engine.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+    let mut failures = 0;
+    for name in names {
+        let meta = engine.manifest.by_name(&name).unwrap().clone();
+        let inputs: Vec<Matrix> = meta
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, n))| Matrix::random(m, n, 1000 + i as u64))
+            .collect();
+        let refs: Vec<&Matrix> = inputs.iter().collect();
+        let (got, stats) = engine.execute(&name, &refs)?;
+        // Oracle: fold the inputs left-to-right with blocked GEMM.
+        let mut want = matmul_blocked(&inputs[0], &inputs[1]);
+        for extra in &inputs[2..] {
+            want = matmul_blocked(&want, extra);
+        }
+        let err = got.rel_fro_error(&want);
+        let ok = err < 1e-4;
+        if !ok {
+            failures += 1;
+        }
+        println!(
+            "{:<16} {:>9.3} ms  rel err {:.2e}  {}",
+            name,
+            stats.exec_seconds * 1e3,
+            err,
+            if ok { "OK" } else { "FAIL" }
+        );
+    }
+    anyhow::ensure!(failures == 0, "{failures} artifact(s) disagree with the oracle");
+    println!("all artifacts verified against the GEMM oracle");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_u64("requests", 32).map_err(anyhow::Error::msg)?;
+    let dir = args.get_str("artifacts", "artifacts");
+    let config = ServiceConfig {
+        artifact_dir: Some(PathBuf::from(dir)),
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+    };
+    let svc = GemmService::start(config)?;
+    let sizes = [64usize, 256, 512];
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let s = sizes[(i % sizes.len() as u64) as usize];
+        let a = Matrix::random(s, s, i * 2);
+        let b = Matrix::random(s, s, i * 2 + 1);
+        rxs.push(svc.submit(GemmRequest { id: i, a, b, chain: None }));
+    }
+    let mut sim_seconds = 0.0;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        resp.result.map_err(anyhow::Error::msg)?;
+        if let Some(sim) = resp.fpga_sim {
+            sim_seconds += sim.seconds;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = svc.metrics.snapshot();
+    let lat = svc.metrics.latency_summary();
+    println!(
+        "served {} requests in {:.3} s ({:.1} req/s)\n\
+         routes: {} artifact, {} fallback; {} batches; {} errors\n\
+         host throughput: {:.2} GFLOPS (functional path)\n\
+         simulated FPGA time for conforming shapes: {:.4} s\n\
+         latency: {}",
+        snap.requests,
+        wall,
+        snap.requests as f64 / wall,
+        snap.artifact_hits,
+        snap.fallbacks,
+        snap.batches,
+        snap.errors,
+        snap.flops as f64 / wall / 1e9,
+        sim_seconds,
+        lat.report_line()
+    );
+    Ok(())
+}

@@ -1,0 +1,264 @@
+//! Cycle-level DDR4 channel simulator.
+//!
+//! The analytical model (eqs. 2–4) assumes a memory-controller
+//! efficiency `e` per access pattern. This simulator derives efficiency
+//! from first principles — bank state machines, row activate/precharge
+//! penalties, the four-activate window (tFAW), burst granularity and
+//! burst *utilization* — and is used to validate the constant the
+//! paper's designs actually rely on: `e ≈ 1` for aligned burst-coalesced
+//! sequential streams (§II-A, [12]). For strided/random patterns the
+//! test asserts the strict ordering the LSU model encodes rather than
+//! exact constants (real controllers vary widely there).
+//!
+//! Model (DDR4-2400, per channel): 64-bit bus, burst length 8 (64 B per
+//! burst), 16 banks, FR-FCFS-lite (row hits before misses), tFAW
+//! limiting activate bursts.
+
+/// Timing parameters in memory-controller cycles (1200 MHz for
+/// DDR4-2400; data moves on both edges).
+#[derive(Clone, Copy, Debug)]
+pub struct DdrTiming {
+    /// Row-to-column delay.
+    pub t_rcd: u32,
+    /// Row precharge.
+    pub t_rp: u32,
+    /// Cycles of data transfer per burst (BL8 on a DDR bus: 4).
+    pub t_burst: u32,
+    /// Four-activate window: at most 4 row activations per t_faw.
+    pub t_faw: u32,
+    pub banks: u32,
+    /// Row size in bytes (determines row-hit span).
+    pub row_bytes: u64,
+}
+
+impl DdrTiming {
+    pub fn ddr4_2400() -> Self {
+        Self { t_rcd: 16, t_rp: 16, t_burst: 4, t_faw: 128, banks: 16, row_bytes: 8192 }
+    }
+}
+
+/// A single read request for `bytes` useful bytes at `addr`.
+#[derive(Clone, Copy, Debug)]
+pub struct Access {
+    pub addr: u64,
+    pub bytes: u32,
+}
+
+/// Result of simulating an access stream.
+#[derive(Clone, Copy, Debug)]
+pub struct DdrSimResult {
+    pub total_cycles: u64,
+    pub data_cycles: u64,
+    pub useful_bytes: u64,
+    pub transferred_bytes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+}
+
+impl DdrSimResult {
+    /// Bus timing efficiency: data cycles / total cycles.
+    pub fn timing_efficiency(&self) -> f64 {
+        if self.total_cycles == 0 {
+            return 0.0;
+        }
+        self.data_cycles as f64 / self.total_cycles as f64
+    }
+
+    /// Burst utilization: useful bytes / transferred bytes.
+    pub fn utilization(&self) -> f64 {
+        if self.transferred_bytes == 0 {
+            return 0.0;
+        }
+        self.useful_bytes as f64 / self.transferred_bytes as f64
+    }
+
+    /// End-to-end efficiency — the `e` of eq. 2: timing × utilization.
+    pub fn efficiency(&self) -> f64 {
+        self.timing_efficiency() * self.utilization()
+    }
+}
+
+/// The channel simulator.
+#[derive(Clone, Debug)]
+pub struct DdrChannelSim {
+    pub timing: DdrTiming,
+    open_rows: Vec<Option<u64>>,
+}
+
+impl DdrChannelSim {
+    pub fn new(timing: DdrTiming) -> Self {
+        let banks = timing.banks as usize;
+        Self { timing, open_rows: vec![None; banks] }
+    }
+
+    fn bank_and_row(&self, addr: u64) -> (usize, u64) {
+        let row_global = addr / self.timing.row_bytes;
+        // Bank-interleaved rows: consecutive rows land in different
+        // banks (the standard mapping for streaming throughput).
+        let bank = (row_global % self.timing.banks as u64) as usize;
+        (bank, row_global)
+    }
+
+    /// Simulate a stream; each access transfers whole 64 B bursts
+    /// covering `[addr, addr + bytes)`.
+    pub fn run(&mut self, accesses: &[Access]) -> DdrSimResult {
+        let t = self.timing;
+        let mut total = 0u64;
+        let mut data = 0u64;
+        let mut useful = 0u64;
+        let mut transferred = 0u64;
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut bank_free = vec![0u64; t.banks as usize];
+        let mut bus_free = 0u64;
+        // Sliding window of the last 4 activate times (tFAW).
+        let mut activates: [u64; 4] = [0; 4];
+        let mut act_idx = 0usize;
+        let mut act_count = 0u64;
+        for acc in accesses {
+            useful += acc.bytes as u64;
+            let first_burst = acc.addr / 64;
+            let last_burst = (acc.addr + acc.bytes as u64 - 1) / 64;
+            for burst in first_burst..=last_burst {
+                let addr = burst * 64;
+                let (bank, row) = self.bank_and_row(addr);
+                let hit = self.open_rows[bank] == Some(row);
+                let ready = if hit {
+                    hits += 1;
+                    bank_free[bank]
+                } else {
+                    misses += 1;
+                    let penalty = if self.open_rows[bank].is_some() {
+                        t.t_rp + t.t_rcd
+                    } else {
+                        t.t_rcd
+                    };
+                    self.open_rows[bank] = Some(row);
+                    // tFAW: a new activate waits until 4 activates back
+                    // is at least t_faw old.
+                    let faw_gate = if act_count >= 4 {
+                        activates[act_idx] + t.t_faw as u64
+                    } else {
+                        0
+                    };
+                    let act_time = bank_free[bank].max(faw_gate);
+                    activates[act_idx] = act_time;
+                    act_idx = (act_idx + 1) % 4;
+                    act_count += 1;
+                    act_time + penalty as u64
+                };
+                let start = ready.max(bus_free);
+                let end = start + t.t_burst as u64;
+                bank_free[bank] = end;
+                bus_free = end;
+                total = total.max(end);
+                data += t.t_burst as u64;
+                transferred += 64;
+            }
+        }
+        DdrSimResult {
+            total_cycles: total,
+            data_cycles: data,
+            useful_bytes: useful,
+            transferred_bytes: transferred,
+            row_hits: hits,
+            row_misses: misses,
+        }
+    }
+}
+
+/// Sequential burst-coalesced stream: 4 KiB requests.
+pub fn sequential_stream(base: u64, total_bytes: u64) -> Vec<Access> {
+    let req = 4096u64;
+    (0..total_bytes / req)
+        .map(|i| Access { addr: base + i * req, bytes: req as u32 })
+        .collect()
+}
+
+/// Strided stream: `count` reads of `bytes` every `stride` bytes — the
+/// column-walk of a row-major matrix when `bytes` < 64.
+pub fn strided_stream(base: u64, stride: u64, bytes: u32, count: u64) -> Vec<Access> {
+    (0..count).map(|i| Access { addr: base + i * stride, bytes }).collect()
+}
+
+/// Pseudo-random 4-byte gathers over `span` bytes.
+pub fn random_stream(seed: u64, span: u64, bytes: u32, count: u64) -> Vec<Access> {
+    let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed);
+    (0..count)
+        .map(|_| Access { addr: (rng.next_below(span / 4)) * 4, bytes })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::lsu::{AccessPattern, Lsu};
+
+    fn run(accs: &[Access]) -> DdrSimResult {
+        DdrChannelSim::new(DdrTiming::ddr4_2400()).run(accs)
+    }
+
+    #[test]
+    fn sequential_is_near_peak() {
+        let r = run(&sequential_stream(0, 16 << 20));
+        assert!(r.efficiency() > 0.95, "sequential e = {}", r.efficiency());
+        assert!(r.row_hits > r.row_misses * 50);
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+    }
+
+    /// The constant the paper's designs rely on: burst-coalesced
+    /// sequential access with e ≈ 1 (here: matches the LSU model's 0.97
+    /// within 0.05).
+    #[test]
+    fn sequential_constant_validated() {
+        let sim = run(&sequential_stream(0, 32 << 20)).efficiency();
+        let model = Lsu::synthesize(64, AccessPattern::SequentialAligned).controller_efficiency();
+        assert!((sim - model).abs() < 0.05, "sim {sim:.3} vs model {model}");
+    }
+
+    #[test]
+    fn strided_wastes_bursts() {
+        // Column walk: 4 useful bytes per 64 B burst -> utilization 1/16.
+        let r = run(&strided_stream(0, 4096, 4, 8192));
+        assert!((r.utilization() - 1.0 / 16.0).abs() < 1e-9);
+        assert!(r.efficiency() < 0.1, "strided e = {}", r.efficiency());
+    }
+
+    #[test]
+    fn wide_strided_is_half_useful() {
+        // 64 B useful every 128 B: utilization 1, but every other burst
+        // skipped -> efficiency equals timing efficiency with gaps.
+        let r = run(&strided_stream(0, 128, 64, 8192));
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+        assert!(r.efficiency() > 0.8, "{}", r.efficiency());
+    }
+
+    #[test]
+    fn random_pays_activates() {
+        let r = run(&random_stream(7, 1 << 30, 4, 8192));
+        // Every gather is a row miss paying tRCD/tFAW and wasting 60/64
+        // of the burst.
+        assert!(r.row_misses > r.row_hits);
+        assert!(r.efficiency() < 0.1, "random e = {}", r.efficiency());
+    }
+
+    /// Ordering of the LSU model's pattern constants is reproduced by
+    /// the first-principles simulator.
+    #[test]
+    fn pattern_ordering_validated() {
+        let seq = run(&sequential_stream(0, 32 << 20)).efficiency();
+        let strided = run(&strided_stream(0, 4096, 4, 8192)).efficiency();
+        let rand = run(&random_stream(7, 1 << 30, 4, 8192)).efficiency();
+        assert!(seq > strided && strided >= rand, "{seq} {strided} {rand}");
+        let e = |p| Lsu::synthesize(4, p).controller_efficiency();
+        assert!(e(AccessPattern::SequentialAligned) > e(AccessPattern::Strided));
+        assert!(e(AccessPattern::Strided) > e(AccessPattern::Random));
+    }
+
+    #[test]
+    fn stream_generators() {
+        assert_eq!(sequential_stream(0, 8192).len(), 2);
+        assert_eq!(strided_stream(0, 128, 64, 10).len(), 10);
+        assert_eq!(random_stream(1, 1 << 20, 64, 10).len(), 10);
+    }
+}

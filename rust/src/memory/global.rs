@@ -1,0 +1,156 @@
+//! Global-memory model: 4× DDR4-2400 channels behind dedicated
+//! controllers (paper §II-A).
+//!
+//! Each channel provides a peak of `B_ddr = 19200 MB/s`. An LSU clocked
+//! at `f_max` requesting `𝓑_r` bytes/cycle stalls iff
+//!
+//! ```text
+//! 𝓑_r · f_max > e · B_ddr                       (eq. 2)
+//! stall = 1 − e·B_ddr / (𝓑_r·f_max)             (when stalled)
+//! ```
+//!
+//! and the stall degrades loop throughput linearly (eq. 3). The *reuse
+//! ratio* (eq. 14) is the factor by which on-chip reuse must multiply a
+//! channel's delivery rate to match the array's appetite.
+
+/// One DDR4 memory module + controller.
+#[derive(Clone, Copy, Debug)]
+pub struct DdrChannel {
+    /// Peak theoretical throughput in MB/s (10^6 bytes).
+    pub peak_mb_s: f64,
+}
+
+impl DdrChannel {
+    /// DDR4@2400 MT/s with a 64-bit interface: 19200 MB/s.
+    pub fn ddr4_2400() -> Self {
+        Self { peak_mb_s: 19_200.0 }
+    }
+
+    /// Bytes per second at controller efficiency `e`.
+    pub fn effective_bytes_per_s(&self, e: f64) -> f64 {
+        e * self.peak_mb_s * 1e6
+    }
+
+    /// Floats the channel can deliver per kernel cycle at `f_mhz`.
+    pub fn floats_per_cycle(&self, e: f64, f_mhz: f64) -> f64 {
+        self.effective_bytes_per_s(e) / (f_mhz * 1e6) / 4.0
+    }
+}
+
+/// Outcome of the stall analysis for one LSU↔channel pairing.
+#[derive(Clone, Copy, Debug)]
+pub struct StallAnalysis {
+    /// Requested bytes/cycle (𝓑_r).
+    pub request_bytes_per_cycle: f64,
+    /// Deliverable bytes/cycle at this f_max and efficiency.
+    pub supply_bytes_per_cycle: f64,
+    /// Stall rate ∈ [0,1); 0 when the channel keeps up.
+    pub stall: f64,
+}
+
+impl StallAnalysis {
+    pub fn stalled(&self) -> bool {
+        self.stall > 0.0
+    }
+}
+
+/// The full card memory: several channels.
+#[derive(Clone, Debug)]
+pub struct GlobalMemory {
+    pub channels: Vec<DdrChannel>,
+}
+
+impl GlobalMemory {
+    /// The 520N: four DDR4-2400 modules (76800 MB/s aggregate).
+    pub fn bittware_520n() -> Self {
+        Self { channels: vec![DdrChannel::ddr4_2400(); 4] }
+    }
+
+    pub fn aggregate_mb_s(&self) -> f64 {
+        self.channels.iter().map(|c| c.peak_mb_s).sum()
+    }
+
+    /// Stall analysis for an LSU requesting `bytes_per_cycle` from one
+    /// channel at `f_mhz` with controller efficiency `e` (eqs. 2–3).
+    pub fn analyze_stall(
+        &self,
+        channel: usize,
+        bytes_per_cycle: f64,
+        f_mhz: f64,
+        e: f64,
+    ) -> StallAnalysis {
+        let ch = &self.channels[channel];
+        let supply = ch.effective_bytes_per_s(e) / (f_mhz * 1e6);
+        let stall = if bytes_per_cycle * f_mhz * 1e6 > ch.effective_bytes_per_s(e) {
+            1.0 - supply / bytes_per_cycle
+        } else {
+            0.0
+        };
+        StallAnalysis {
+            request_bytes_per_cycle: bytes_per_cycle,
+            supply_bytes_per_cycle: supply,
+            stall,
+        }
+    }
+
+    /// Reuse ratio r = 𝓑_array / 𝓑_global (eq. 14), rounded up to the
+    /// next integer (a datum cannot be reused a fractional number of
+    /// times by the blocked schedule).
+    pub fn reuse_ratio(array_floats_per_cycle: f64, global_floats_per_cycle: f64) -> u32 {
+        assert!(global_floats_per_cycle > 0.0);
+        (array_floats_per_cycle / global_floats_per_cycle).ceil() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn card_aggregate_bandwidth() {
+        let m = GlobalMemory::bittware_520n();
+        assert_eq!(m.channels.len(), 4);
+        assert!((m.aggregate_mb_s() - 76_800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_stall_when_supply_sufficient() {
+        let m = GlobalMemory::bittware_520n();
+        // 32 B/cycle at 400 MHz = 12.8 GB/s < 0.97·19.2 GB/s -> no stall.
+        let a = m.analyze_stall(0, 32.0, 400.0, 0.97);
+        assert!(!a.stalled(), "{a:?}");
+    }
+
+    #[test]
+    fn stall_rate_formula_eq2() {
+        let m = GlobalMemory::bittware_520n();
+        // 64 B/cycle at 400 MHz = 25.6 GB/s > 19.2 GB/s (e=1):
+        // stall = 1 - 19200/25600 = 0.25.
+        let a = m.analyze_stall(0, 64.0, 400.0, 1.0);
+        assert!((a.stall - 0.25).abs() < 1e-12, "{a:?}");
+    }
+
+    #[test]
+    fn boundary_no_stall() {
+        let m = GlobalMemory::bittware_520n();
+        // Exactly at the limit: 48 B/cycle · 400 MHz = 19.2 GB/s (e=1).
+        let a = m.analyze_stall(0, 48.0, 400.0, 1.0);
+        assert_eq!(a.stall, 0.0);
+    }
+
+    #[test]
+    fn channel_floats_per_cycle() {
+        let ch = DdrChannel::ddr4_2400();
+        // At 400 MHz, e=1: 19200e6/400e6/4 = 12 floats/cycle.
+        assert!((ch.floats_per_cycle(1.0, 400.0) - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reuse_ratio_eq14() {
+        // Design G: B_A = di0*dk0 = 128 floats/cycle; a channel supplies
+        // B_gA = 8 floats/cycle at ~400 MHz -> r_A = 16.
+        assert_eq!(GlobalMemory::reuse_ratio(128.0, 8.0), 16);
+        // Fractional demand rounds up.
+        assert_eq!(GlobalMemory::reuse_ratio(100.0, 8.0), 13);
+    }
+}

@@ -1,0 +1,173 @@
+//! Matrix storage layouts and host-side reordering costs (§V, §VI).
+//!
+//! The implemented design wants A column-major (accessed by block
+//! columns) and B/C row-major, so the only host transform ever needed is
+//! one transposition of A — and C keeps B's format, so a product can
+//! chain into the next multiply with **zero** host reordering. The Intel
+//! SDK baseline instead needs block-wise reordering of A, transposition +
+//! block-wise reordering of B, and a two-level reverse reordering of C —
+//! modelled here so the end-to-end comparison can charge it.
+
+/// Storage order of a dense matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    RowMajor,
+    ColMajor,
+    /// Block-reordered with the given block shape (SDK operand format).
+    Blocked { bi: u32, bj: u32 },
+    /// Two-level blocked (SDK result format).
+    TwoLevelBlocked { bi: u32, bj: u32 },
+}
+
+impl Layout {
+    /// Whether converting `from -> to` is the identity.
+    pub fn same(from: Layout, to: Layout) -> bool {
+        from == to
+    }
+}
+
+/// A host-side reorder pass over an (m × n) f32 matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HostReorder {
+    pub from: Layout,
+    pub to: Layout,
+    pub m: u64,
+    pub n: u64,
+}
+
+/// Host memory bandwidth assumed for reorder cost accounting (bytes/s).
+/// A single-socket Xeon with DDR4-2666: ~20 GB/s effective for a
+/// read+write permutation pass.
+pub const HOST_REORDER_BYTES_PER_S: f64 = 20e9;
+
+impl HostReorder {
+    /// Bytes moved: a permutation touches each element once in, once out.
+    pub fn bytes_moved(&self) -> u64 {
+        if Layout::same(self.from, self.to) {
+            0
+        } else {
+            2 * self.m * self.n * 4
+        }
+    }
+
+    /// Seconds on the host.
+    pub fn seconds(&self) -> f64 {
+        self.bytes_moved() as f64 / HOST_REORDER_BYTES_PER_S
+    }
+}
+
+/// Transpose a row-major matrix in place of layout metadata (functional
+/// helper used by the coordinator to prepare A in column-major form).
+pub fn transpose_f32(src: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(src.len(), m * n);
+    let mut out = vec![0.0f32; m * n];
+    // Cache-blocked transpose: 32x32 tiles keep both streams resident.
+    const T: usize = 32;
+    for i0 in (0..m).step_by(T) {
+        for j0 in (0..n).step_by(T) {
+            for i in i0..(i0 + T).min(m) {
+                for j in j0..(j0 + T).min(n) {
+                    out[j * m + i] = src[i * n + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reorder a row-major (m×n) matrix into block order: all elements of
+/// block (0,0) first (row-major within the block), then block (0,1), …
+/// Used to model (and test) the Intel SDK operand format.
+pub fn block_reorder_f32(src: &[f32], m: usize, n: usize, bi: usize, bj: usize) -> Vec<f32> {
+    assert_eq!(src.len(), m * n);
+    assert!(m % bi == 0 && n % bj == 0, "matrix not divisible by block");
+    let mut out = Vec::with_capacity(m * n);
+    for bi0 in (0..m).step_by(bi) {
+        for bj0 in (0..n).step_by(bj) {
+            for i in bi0..bi0 + bi {
+                for j in bj0..bj0 + bj {
+                    out.push(src[i * n + j]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`block_reorder_f32`].
+pub fn block_unorder_f32(src: &[f32], m: usize, n: usize, bi: usize, bj: usize) -> Vec<f32> {
+    assert_eq!(src.len(), m * n);
+    assert!(m % bi == 0 && n % bj == 0);
+    let mut out = vec![0.0f32; m * n];
+    let mut it = src.iter();
+    for bi0 in (0..m).step_by(bi) {
+        for bj0 in (0..n).step_by(bj) {
+            for i in bi0..bi0 + bi {
+                for j in bj0..bj0 + bj {
+                    out[i * n + j] = *it.next().unwrap();
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_reorder_is_free() {
+        let r = HostReorder { from: Layout::RowMajor, to: Layout::RowMajor, m: 1024, n: 1024 };
+        assert_eq!(r.bytes_moved(), 0);
+        assert_eq!(r.seconds(), 0.0);
+    }
+
+    #[test]
+    fn transpose_cost_scales() {
+        let r = HostReorder { from: Layout::RowMajor, to: Layout::ColMajor, m: 1024, n: 1024 };
+        assert_eq!(r.bytes_moved(), 2 * 1024 * 1024 * 4);
+        assert!(r.seconds() > 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = 5;
+        let n = 7;
+        let src: Vec<f32> = (0..m * n).map(|x| x as f32).collect();
+        let t = transpose_f32(&src, m, n);
+        assert_eq!(t[0 * m + 0], src[0]);
+        assert_eq!(t[3 * m + 2], src[2 * n + 3]); // (i=2,j=3) -> (j=3,i=2)
+        let tt = transpose_f32(&t, n, m);
+        assert_eq!(tt, src);
+    }
+
+    #[test]
+    fn transpose_large_blocked_path() {
+        let m = 70;
+        let n = 65; // exercises partial tiles
+        let src: Vec<f32> = (0..m * n).map(|x| (x % 997) as f32).collect();
+        let tt = transpose_f32(&transpose_f32(&src, m, n), n, m);
+        assert_eq!(tt, src);
+    }
+
+    #[test]
+    fn block_reorder_roundtrip() {
+        let m = 8;
+        let n = 12;
+        let src: Vec<f32> = (0..m * n).map(|x| x as f32).collect();
+        let b = block_reorder_f32(&src, m, n, 4, 4);
+        assert_ne!(b, src);
+        // First block is the top-left 4x4 in row-major order.
+        assert_eq!(&b[..4], &src[..4]);
+        assert_eq!(b[4], src[n]); // second row of block (0,0)
+        let back = block_unorder_f32(&b, m, n, 4, 4);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn block_reorder_requires_divisibility() {
+        block_reorder_f32(&vec![0.0; 6], 2, 3, 2, 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! On-chip (local) memory systems: M20K/MLAB-backed *mapped* and *FIFO*
+//! systems with user-controlled partitioning (paper §II-C, §V).
+//!
+//! Partitioning is the paper's key lever: many small partitions, each
+//! with its own LSU, distribute data throughput across the chip right
+//! next to the DSPs that consume it. In the implemented design:
+//!
+//! * the A mapped system has `d_i0 · d_k0` partitions (one per register
+//!   chain entering the array's A face), double-buffered so Read can
+//!   overlap Compute;
+//! * the B mapped system likewise has `d_k0 · d_j0` partitions;
+//! * the C FIFO system has `d_i0 · d_j0` FIFOs of depth
+//!   `(d_i1/d_i0)·(d_j1/d_j0)` holding the block being accumulated.
+
+use crate::fpga::device::{M20K_BYTES, F32_BYTES};
+use crate::util::div_ceil;
+
+/// A partitioned, memory-mapped on-chip system.
+#[derive(Clone, Debug)]
+pub struct MappedSystem {
+    pub name: String,
+    /// Number of independent partitions (each gets a private LSU).
+    pub partitions: u32,
+    /// Floats stored per partition.
+    pub floats_per_partition: u64,
+    /// Replication factor for double buffering (2 = ping/pong).
+    pub buffers: u32,
+}
+
+impl MappedSystem {
+    /// The A-matrix staging memory for a (d_i0, d_k0) array face fed by
+    /// level-1 blocks of height `d_i1`.
+    pub fn for_a(di0: u32, dk0: u32, di1: u32) -> Self {
+        assert!(di1 % di0 == 0);
+        Self {
+            name: "A".into(),
+            partitions: di0 * dk0,
+            // Each partition holds the column of its (i,k) lane through
+            // all d_i1/d_i0 second-level blocks.
+            floats_per_partition: (di1 / di0) as u64,
+            buffers: 2,
+        }
+    }
+
+    /// The B-matrix staging memory for a (d_k0, d_j0) array face fed by
+    /// level-1 blocks of width `d_j1`.
+    pub fn for_b(dk0: u32, dj0: u32, dj1: u32) -> Self {
+        assert!(dj1 % dj0 == 0);
+        Self {
+            name: "B".into(),
+            partitions: dk0 * dj0,
+            floats_per_partition: (dj1 / dj0) as u64,
+            buffers: 2,
+        }
+    }
+
+    /// Total floats stored.
+    pub fn total_floats(&self) -> u64 {
+        self.partitions as u64 * self.floats_per_partition * self.buffers as u64
+    }
+
+    /// Load units exposed to the datapath (one per partition).
+    pub fn load_units(&self) -> u32 {
+        self.partitions
+    }
+
+    /// Aggregate read throughput in floats/cycle (each partition's LSU
+    /// reads one float per cycle — §III-C).
+    pub fn read_floats_per_cycle(&self) -> u64 {
+        self.partitions as u64
+    }
+
+    /// M20K blocks consumed. Every partition occupies at least one block
+    /// (physical granularity) — this is why fine partitioning trades
+    /// block-count for bandwidth.
+    pub fn m20k_blocks(&self) -> u32 {
+        let per_partition_bytes = self.floats_per_partition * F32_BYTES * self.buffers as u64;
+        self.partitions * div_ceil(per_partition_bytes.max(1), M20K_BYTES) as u32
+    }
+}
+
+/// A collection of FIFOs (the C accumulation store of §V).
+#[derive(Clone, Debug)]
+pub struct FifoSystem {
+    pub name: String,
+    pub fifos: u32,
+    /// Depth of each FIFO in elements.
+    pub depth: u64,
+}
+
+impl FifoSystem {
+    /// The C block store: `d_i0·d_j0` FIFOs of depth
+    /// `(d_i1/d_i0)·(d_j1/d_j0)`.
+    pub fn for_c(di0: u32, dj0: u32, di1: u32, dj1: u32) -> Self {
+        assert!(di1 % di0 == 0 && dj1 % dj0 == 0);
+        Self {
+            name: "C".into(),
+            fifos: di0 * dj0,
+            depth: ((di1 / di0) as u64) * ((dj1 / dj0) as u64),
+        }
+    }
+
+    pub fn total_floats(&self) -> u64 {
+        self.fifos as u64 * self.depth
+    }
+
+    pub fn m20k_blocks(&self) -> u32 {
+        let per_fifo_bytes = self.depth * F32_BYTES;
+        self.fifos * div_ceil(per_fifo_bytes.max(1), M20K_BYTES) as u32
+    }
+}
+
+/// A software-simulated FIFO with FPGA-like semantics, used by the
+/// cycle-accurate simulator (bounded, single-cycle enqueue/dequeue).
+#[derive(Clone, Debug)]
+pub struct SimFifo<T> {
+    buf: std::collections::VecDeque<T>,
+    capacity: usize,
+}
+
+impl<T> SimFifo<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { buf: std::collections::VecDeque::with_capacity(capacity), capacity }
+    }
+
+    pub fn push(&mut self, v: T) -> Result<(), T> {
+        if self.buf.len() == self.capacity {
+            Err(v) // full — hardware would stall the producer
+        } else {
+            self.buf.push_back(v);
+            Ok(())
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.buf.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_system_partition_count_matches_paper() {
+        // §V: the A mapped system has d_i0·d_k0 partitions.
+        let a = MappedSystem::for_a(64, 2, 512);
+        assert_eq!(a.partitions, 128);
+        assert_eq!(a.load_units(), 128);
+        assert_eq!(a.read_floats_per_cycle(), 128); // = B_A of eq. 10
+        // Double-buffered column of 8 blocks.
+        assert_eq!(a.floats_per_partition, 8);
+        assert_eq!(a.total_floats(), 128 * 8 * 2);
+    }
+
+    #[test]
+    fn b_system_symmetry() {
+        let b = MappedSystem::for_b(2, 32, 512);
+        assert_eq!(b.partitions, 64);
+        assert_eq!(b.read_floats_per_cycle(), 64); // = B_B = dk0*dj0
+    }
+
+    #[test]
+    fn c_fifo_geometry() {
+        // Design G with d1=512: 64·32 FIFOs of depth 8·16=128.
+        let c = FifoSystem::for_c(64, 32, 512, 512);
+        assert_eq!(c.fifos, 2048);
+        assert_eq!(c.depth, 128);
+        assert_eq!(c.total_floats(), 512 * 512);
+    }
+
+    #[test]
+    fn m20k_block_floor_one_per_partition() {
+        // Tiny partitions still take a whole block each.
+        let a = MappedSystem::for_a(8, 2, 16);
+        assert_eq!(a.m20k_blocks(), 16);
+    }
+
+    #[test]
+    fn sim_fifo_bounded() {
+        let mut f = SimFifo::new(2);
+        assert!(f.push(1).is_ok());
+        assert!(f.push(2).is_ok());
+        assert!(f.is_full());
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+        assert!(f.is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Memory-system substrate: the BittWare 520N's global DDR4 memory and
+//! the Stratix 10 on-chip memory (M20K/MLAB), as the paper models them.
+//!
+//! * [`global`] — DDR4 channels, controller efficiency, the stall
+//!   condition/rate of eqs. 2–3, and the reuse-ratio arithmetic of
+//!   eq. 14.
+//! * [`local`] — on-chip mapped and FIFO memory systems with user
+//!   partitioning (§II-C): partition counts, block usage, per-partition
+//!   LSUs.
+//! * [`layout`] — matrix storage layouts (row/column-major, one- and
+//!   two-level blocked) and the host-side reordering costs that §VI
+//!   charges against the Intel SDK baseline.
+
+pub mod ddr_sim;
+pub mod global;
+pub mod layout;
+pub mod local;
+
+pub use ddr_sim::{DdrChannelSim, DdrSimResult, DdrTiming};
+pub use global::{DdrChannel, GlobalMemory, StallAnalysis};
+pub use layout::{HostReorder, Layout};
+pub use local::{FifoSystem, MappedSystem};

@@ -1,0 +1,289 @@
+//! Paper equations (1)–(19), in order, with the paper's symbol names.
+
+/// eq. (1): `T_op = 𝒯_op · f_max` — ideal-pipeline op throughput.
+/// `t_op_per_cycle` in op/cycle, `f_mhz` in MHz; result in op/s.
+pub fn eq1_throughput(t_op_per_cycle: f64, f_mhz: f64) -> f64 {
+    t_op_per_cycle * f_mhz * 1e6
+}
+
+/// eq. (2): stall condition — `𝓑_r · f_max > e · B_ddr`.
+/// `b_r` in bytes/cycle, `f_mhz` in MHz, `b_ddr_mb_s` in MB/s.
+pub fn eq2_stalls(b_r: f64, f_mhz: f64, e: f64, b_ddr_mb_s: f64) -> bool {
+    b_r * f_mhz * 1e6 > e * b_ddr_mb_s * 1e6
+}
+
+/// Stall rate (unnumbered, after eq. 2): `1 − e·B_ddr / (𝓑_r·f_max)`,
+/// zero if eq. 2 does not hold.
+pub fn stall_rate(b_r: f64, f_mhz: f64, e: f64, b_ddr_mb_s: f64) -> f64 {
+    if eq2_stalls(b_r, f_mhz, e, b_ddr_mb_s) {
+        1.0 - (e * b_ddr_mb_s) / (b_r * f_mhz)
+    } else {
+        0.0
+    }
+}
+
+/// eq. (3): `T_op = (1-stall)·𝒯_op·f_max` — throughput under stalls.
+pub fn eq3_stalled_throughput(stall: f64, t_op_per_cycle: f64, f_mhz: f64) -> f64 {
+    (1.0 - stall) * eq1_throughput(t_op_per_cycle, f_mhz)
+}
+
+/// eq. (4): per-LSU request ceiling in sp-floats/cycle as a function of
+/// f_max (the LSU bus narrows past 300 MHz).
+pub fn eq4_lsu_ceiling_floats(f_mhz: f64) -> u32 {
+    if f_mhz <= 300.0 {
+        16
+    } else {
+        8
+    }
+}
+
+/// eq. (5): `T_peak = 2·#DSP·f_max` [FLOPS]; `f_mhz` in MHz.
+pub fn eq5_peak_flops(n_dsp: u32, f_mhz: f64) -> f64 {
+    2.0 * n_dsp as f64 * f_mhz * 1e6
+}
+
+/// eq. (7): dot-product-unit throughput `𝒯_flop = 2·d_p` [FLOP/cycle].
+pub fn eq7_dot_unit_flop_per_cycle(dp: u32) -> u32 {
+    2 * dp
+}
+
+/// eq. (8): dot-product-unit input appetite `𝓑_in = 2·d_p + 1`
+/// [sp-floats/cycle].
+pub fn eq8_dot_unit_input_floats(dp: u32) -> u32 {
+    2 * dp + 1
+}
+
+/// eq. (9): array throughput `𝒯_flop = 2·d_i0·d_j0·d_k0` [FLOP/cycle].
+pub fn eq9_array_flop_per_cycle(di0: u32, dj0: u32, dk0: u32) -> u64 {
+    2 * di0 as u64 * dj0 as u64 * dk0 as u64
+}
+
+/// eq. (10): input-face data throughputs `𝓑_A = d_i0·d_k0`,
+/// `𝓑_B = d_k0·d_j0` [sp-floats/cycle].
+pub fn eq10_face_throughputs(di0: u32, dj0: u32, dk0: u32) -> (u64, u64) {
+    (di0 as u64 * dk0 as u64, dk0 as u64 * dj0 as u64)
+}
+
+/// eq. (11): `#DSP = d_i0·d_j0·d_k0`.
+pub fn eq11_dsp_count(di0: u32, dj0: u32, dk0: u32) -> u64 {
+    di0 as u64 * dj0 as u64 * dk0 as u64
+}
+
+/// eq. (12): `#PE = d_i0·d_j0·d_k0/d_p`.
+pub fn eq12_pe_count(di0: u32, dj0: u32, dk0: u32, dp: u32) -> u64 {
+    assert!(dk0 % dp == 0, "d_p must divide d_k0");
+    eq11_dsp_count(di0, dj0, dk0) / dp as u64
+}
+
+/// eq. (13): ideal loop-body latency of the systolic function,
+/// `l_body = d_i0 + d_j0 − 1 + (d_k0/d_p)·l_dot(d_p)` [cycles].
+pub fn eq13_loop_body_latency(di0: u32, dj0: u32, dk0: u32, dp: u32, l_dot: u32) -> u64 {
+    di0 as u64 + dj0 as u64 - 1 + (dk0 / dp) as u64 * l_dot as u64
+}
+
+/// Definition 1 total latency:
+/// `l_tot = d_i0 + d_j0 + K − 1 + l_MAC` (classical 2D array).
+pub fn def1_total_latency(di0: u32, dj0: u32, k: u64, l_mac: u32) -> u64 {
+    di0 as u64 + dj0 as u64 + k - 1 + l_mac as u64
+}
+
+/// Definition 2 total latency:
+/// `l_tot = d_i0 + d_j0 + K/d_k0 − 1 + (d_k0/d_p)·l_dot` (3D array).
+pub fn def2_total_latency(di0: u32, dj0: u32, k: u64, dk0: u32, dp: u32, l_dot: u32) -> u64 {
+    assert!(k % dk0 as u64 == 0);
+    di0 as u64 + dj0 as u64 + k / dk0 as u64 - 1 + (dk0 / dp) as u64 * l_dot as u64
+}
+
+/// eq. (14): reuse ratios `r_A = 𝓑_A/𝓑_gA`, `r_B = 𝓑_B/𝓑_gB`.
+pub fn eq14_reuse_ratios(b_a: u64, b_b: u64, b_ga: u64, b_gb: u64) -> (u64, u64) {
+    assert!(b_ga > 0 && b_gb > 0);
+    (
+        crate::util::div_ceil(b_a, b_ga),
+        crate::util::div_ceil(b_b, b_gb),
+    )
+}
+
+/// eq. (18): level-1 block sizes from the reuse ratios:
+/// `d_i1 = r_B·d_i0`, `d_j1 = r_A·d_j0`.
+pub fn eq18_level1_sizes(r_a: u64, r_b: u64, di0: u32, dj0: u32) -> (u64, u64) {
+    (r_b * di0 as u64, r_a * dj0 as u64)
+}
+
+/// eq. (19): compute fraction
+/// `c_% ≈ (d_k2/d_k0) / (1 + d_k2/d_k0 + d_i0·d_j0/𝓑_ddr)`.
+///
+/// The three summands are the pipeline fills of Phase 1 (initial read),
+/// the `d_k2/d_k0` overlapped read+compute slabs, and the exposed Write
+/// phase (d_i1·d_j1 values at 𝓑_ddr floats/cycle, normalized per slab
+/// by the same d_i1·d_j1/(d_i0·d_j0) factor — hence the d_i0·d_j0/𝓑_ddr
+/// term).
+pub fn eq19_compute_fraction(dk2: u64, dk0: u32, di0: u32, dj0: u32, b_ddr_floats: u32) -> f64 {
+    let slabs = dk2 as f64 / dk0 as f64;
+    slabs / (1.0 + slabs + (di0 as f64 * dj0 as f64) / b_ddr_floats as f64)
+}
+
+/// Total FLOP of an (m×k)·(k×n) matmul as the paper counts it:
+/// `#FLOP = d_i2·d_j2·(2·d_k2 − 1)`.
+pub fn flop_count(m: u64, n: u64, k: u64) -> u64 {
+    m * n * (2 * k - 1)
+}
+
+/// Measured-throughput helper: `T_flops = #FLOP / t` (FLOPS).
+pub fn measured_flops(flop: u64, seconds: f64) -> f64 {
+    flop as f64 / seconds
+}
+
+/// DSP efficiency `e_D = T_flops / T_peak`.
+pub fn dsp_efficiency(t_flops: f64, t_peak: f64) -> f64 {
+    t_flops / t_peak
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_eq3_consistency() {
+        let t = eq1_throughput(16.0, 400.0);
+        assert_eq!(t, 6.4e9);
+        assert_eq!(eq3_stalled_throughput(0.0, 16.0, 400.0), t);
+        assert_eq!(eq3_stalled_throughput(0.25, 16.0, 400.0), 0.75 * t);
+    }
+
+    #[test]
+    fn eq2_stall_examples() {
+        // §II-B: global memory alone sustains only ~10 GFLOPS worth of
+        // dot-product inputs. 64 B/cycle at 400 MHz > 19.2 GB/s -> stall.
+        assert!(eq2_stalls(64.0, 400.0, 1.0, 19_200.0));
+        assert!(!eq2_stalls(32.0, 400.0, 1.0, 19_200.0));
+        assert!((stall_rate(64.0, 400.0, 1.0, 19_200.0) - 0.25).abs() < 1e-12);
+        assert_eq!(stall_rate(32.0, 400.0, 1.0, 19_200.0), 0.0);
+    }
+
+    #[test]
+    fn eq4_bins() {
+        assert_eq!(eq4_lsu_ceiling_floats(150.1), 16);
+        assert_eq!(eq4_lsu_ceiling_floats(300.0), 16);
+        assert_eq!(eq4_lsu_ceiling_floats(300.1), 8);
+        assert_eq!(eq4_lsu_ceiling_floats(600.0), 8);
+    }
+
+    #[test]
+    fn eq5_table1_tpeak_column() {
+        // Every (DSPs, fmax, Tpeak) triple in Table I.
+        let rows = [
+            (4704u32, 368.0, 3462.0), // C
+            (4608, 368.0, 3391.0),    // E
+            (4480, 410.0, 3673.0),    // F
+            (4096, 398.0, 3260.0),    // G
+            (4096, 408.0, 3342.0),    // H
+            (4096, 396.0, 3244.0),    // I
+            (4096, 391.0, 3203.0),    // L
+            (4096, 363.0, 2973.0),    // M
+            (4096, 381.0, 3121.0),    // N
+        ];
+        for (dsp, f, gflops) in rows {
+            let got = eq5_peak_flops(dsp, f) / 1e9;
+            assert!((got - gflops).abs() < 1.0, "{dsp}@{f}: {got} vs {gflops}");
+        }
+    }
+
+    #[test]
+    fn eq5_table6_tpeak_column() {
+        assert!((eq5_peak_flops(3584, 412.0) / 1e9 - 2953.0).abs() < 1.0);
+        assert!((eq5_peak_flops(4096, 407.0) / 1e9 - 3334.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn eq7_to_eq12_geometry() {
+        assert_eq!(eq7_dot_unit_flop_per_cycle(8), 16);
+        assert_eq!(eq8_dot_unit_input_floats(8), 17);
+        assert_eq!(eq9_array_flop_per_cycle(64, 32, 2), 8192);
+        assert_eq!(eq10_face_throughputs(64, 32, 2), (128, 64));
+        assert_eq!(eq11_dsp_count(28, 28, 6), 4704);
+        assert_eq!(eq12_pe_count(28, 28, 6, 3), 1568);
+        assert_eq!(eq12_pe_count(28, 28, 6, 2), 2352);
+        assert_eq!(eq12_pe_count(32, 16, 8, 8), 512);
+    }
+
+    #[test]
+    fn latency_formulas() {
+        // Def. 1 with K=100, l_MAC=4 on an 8x8 grid.
+        assert_eq!(def1_total_latency(8, 8, 100, 4), 8 + 8 + 100 - 1 + 4);
+        // Def. 2 reduces iteration count by d_k0.
+        let l3d = def2_total_latency(8, 8, 100 * 4, 4, 2, 5);
+        assert_eq!(l3d, 8 + 8 + 100 - 1 + 2 * 5);
+        // eq. 13 is Def. 2 without the K/d_k0 iterations term's K part.
+        assert_eq!(eq13_loop_body_latency(8, 8, 4, 2, 5), 8 + 8 - 1 + 10);
+    }
+
+    #[test]
+    fn eq14_eq18_blocking_chain() {
+        // Design G at 398 MHz: B_A=128, B_B=64; channels deliver 8
+        // floats/cycle (eq. 4 past 300 MHz) -> r_A=16, r_B=8.
+        let (b_a, b_b) = eq10_face_throughputs(64, 32, 2);
+        let (r_a, r_b) = eq14_reuse_ratios(b_a, b_b, 8, 8);
+        assert_eq!((r_a, r_b), (16, 8));
+        let (di1, dj1) = eq18_level1_sizes(r_a, r_b, 64, 32);
+        // Table V caption: d1 = 512 for designs G–N.
+        assert_eq!((di1, dj1), (512, 512));
+    }
+
+    #[test]
+    fn eq14_eq18_design_c() {
+        // Design C (28,28,6) at 368 MHz: B_A = B_B = 168; 8 floats/cycle
+        // -> r = 21 -> d1 = 588? The paper reports d1 = 672 = 24·28:
+        // it provisioned for 𝓑_g = 7 floats/cycle (r = 24), leaving
+        // headroom. Our model computes the *minimum*; 672 satisfies it.
+        let (b_a, _) = eq10_face_throughputs(28, 28, 6);
+        let (r_a, _) = eq14_reuse_ratios(b_a, b_a, 8, 8);
+        let (di1_min, _) = eq18_level1_sizes(r_a, r_a, 28, 28);
+        assert!(672 >= di1_min);
+        assert_eq!(672 % 28, 0);
+    }
+
+    #[test]
+    fn eq19_asymptotics() {
+        // c_% -> 1 as d_k2 -> inf.
+        let big = eq19_compute_fraction(1 << 40, 2, 64, 32, 8);
+        assert!(big > 0.999);
+        // Rises monotonically with d_k2.
+        let mut last = 0.0;
+        for dk2 in [512u64, 1024, 2048, 4096, 8192, 16384] {
+            let c = eq19_compute_fraction(dk2, 2, 64, 32, 8);
+            assert!(c > last);
+            last = c;
+        }
+    }
+
+    #[test]
+    fn eq19_matches_measured_efficiency_shape() {
+        // Design G (Table V): e_D at d2=512..16384 is
+        // 0.45, 0.65, 0.80, 0.89, 0.94, 0.97. eq. 19 should track within
+        // a few points (the paper: "measured DSP efficiencies are close
+        // to their evaluations shown in (19)").
+        let meas = [0.45, 0.65, 0.80, 0.89, 0.94, 0.97];
+        for (i, d2) in [512u64, 1024, 2048, 4096, 8192, 16384].iter().enumerate() {
+            let c = eq19_compute_fraction(*d2, 2, 64, 32, 8);
+            assert!(
+                (c - meas[i]).abs() < 0.06,
+                "d2={d2}: eq19={c:.3} vs measured {}",
+                meas[i]
+            );
+        }
+    }
+
+    #[test]
+    fn flop_count_paper_formula() {
+        assert_eq!(flop_count(2, 2, 2), 2 * 2 * 3);
+        // d2=672 cube: 672^2·(2·672-1).
+        assert_eq!(flop_count(672, 672, 672), 672 * 672 * 1343);
+    }
+
+    #[test]
+    fn efficiency_helpers() {
+        let t = measured_flops(1_000_000_000, 0.5);
+        assert_eq!(t, 2e9);
+        assert!((dsp_efficiency(t, 4e9) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's analytical performance model: every numbered equation as a
+//! documented, unit-tested function.
+//!
+//! These are the closed forms that the event-level simulator
+//! ([`crate::blocked::offchip`]) must agree with on small cases where the
+//! cycle-accurate simulator ([`crate::systolic`]) provides ground truth —
+//! the three layers of validation described in DESIGN.md §2.
+
+pub mod equations;
+
+pub use equations::*;

@@ -1,0 +1,366 @@
+//! Table/figure generators: every table and figure of the paper's
+//! evaluation, rendered as text. Shared by the CLI (`systo3d tables`),
+//! the bench harness (`cargo bench`) and the examples.
+
+use crate::baselines::gpu::GpuRoofline;
+use crate::baselines::intel_sdk::{table6_attempts, IntelSdkSim};
+use crate::baselines::published::{lookup, CPU_ROWS, GPU_ROWS};
+use crate::blocked::{OffchipDesign, OffchipSim, PhaseKind};
+use crate::dse::{paper_catalog, Explorer};
+use crate::fpga::Stratix10;
+use crate::hls::report::table_header;
+use crate::perfmodel::eq19_compute_fraction;
+use crate::systolic::{Array3dSim, ArraySize};
+use std::fmt::Write as _;
+
+/// Table I: synthesis results over the design catalog, through the
+/// fitter + f_max models.
+pub fn table1() -> String {
+    let ex = Explorer::default();
+    let dev = Stratix10::gx2800_520n();
+    let mut out = String::new();
+    writeln!(out, "TABLE I — synthesis results (fitter + f_max models)").unwrap();
+    writeln!(out, "{}", table_header()).unwrap();
+    for spec in paper_catalog() {
+        let p = ex.evaluate(spec.array);
+        let mut row = p.report(spec.id, &dev).table_row();
+        if let Some(f) = p.fmax_mhz {
+            if p.fmax_measured {
+                row.push_str("  [measured]");
+            } else {
+                row.push_str(&format!("  [predicted; paper: {:?}]", spec.fmax_mhz));
+            }
+            let _ = f;
+        }
+        // Cross-check against the published outcome.
+        let agree = p.outcome.fits() == spec.fmax_mhz.is_some();
+        if !agree {
+            row.push_str("  !! MISMATCH vs paper");
+        }
+        writeln!(out, "{row}").unwrap();
+    }
+    out
+}
+
+/// f_max-model residual report (the honesty appendix to Table I).
+pub fn table1_residuals() -> String {
+    let ex = Explorer::default();
+    let mut out = String::new();
+    writeln!(out, "f_max predictor residuals on measured points (MHz):").unwrap();
+    let mut sq = 0.0;
+    let mut n = 0;
+    for (key, meas, pred, resid) in ex.fmax.residuals() {
+        writeln!(
+            out,
+            "  ({:>2},{:>2},{:>2},dp={}) {:?}: measured {:>5.0}, predicted {:>6.1}, resid {:>+6.1}",
+            key.0, key.1, key.2, key.3, key.4, meas, pred, resid
+        )
+        .unwrap();
+        sq += resid * resid;
+        n += 1;
+    }
+    writeln!(out, "  RMS residual: {:.1} MHz over {n} points", (sq / n as f64).sqrt()).unwrap();
+    out
+}
+
+/// One of Tables II–V: the design's d² sweep with CPU/GPU reference rows.
+pub fn table_design_sweep(design_id: &str) -> Option<String> {
+    let spec = paper_catalog().into_iter().find(|d| d.id == design_id)?;
+    let blocking = spec.level1()?;
+    let fmax = spec.fmax_mhz?;
+    let design = OffchipDesign { blocking, fmax_mhz: fmax, controller_efficiency: 0.97 };
+    let sim = OffchipSim::new(design);
+    let gpu = GpuRoofline::rtx_2080_ti();
+    let cpu_key = if ["G", "H", "I", "L", "M", "N"].contains(&design_id) { "G-N" } else { design_id };
+
+    let mut out = String::new();
+    let table_no = match design_id {
+        "C" => "II",
+        "E" => "III",
+        "F" => "IV",
+        _ => "V (row)",
+    };
+    writeln!(
+        out,
+        "TABLE {table_no} — design {design_id} ({},{},{},dp={}) @ {fmax} MHz, d1=({},{})",
+        spec.array.di0, spec.array.dj0, spec.array.dk0, spec.array.dp,
+        blocking.di1, blocking.dj1
+    )
+    .unwrap();
+    writeln!(
+        out,
+        "{:>7} {:>7}  | {:>9} {:>6} | {:>11} {:>11} | {:>11} {:>11}",
+        "d2", "dj2", "sim", "e_D", "paper CPU", "model CPU*", "paper GPU", "model GPU"
+    )
+    .unwrap();
+    let dj2s = spec.sweep_dj2();
+    for (i, &d2) in spec.sweep.iter().enumerate() {
+        let dj2 = dj2s[i];
+        let r = sim.simulate(d2, dj2, d2);
+        let paper_cpu = lookup(CPU_ROWS, cpu_key, d2)
+            .map(|g| format!("{g:>9.0}"))
+            .unwrap_or_else(|| "       - ".into());
+        let paper_gpu = lookup(GPU_ROWS, cpu_key, d2)
+            .map(|g| format!("{g:>9.0}"))
+            .unwrap_or_else(|| "       - ".into());
+        let gpu_model = gpu.gflops(d2, d2, dj2);
+        writeln!(
+            out,
+            "{:>7} {:>7}  | {:>9.0} {:>6.2} | {:>11} {:>11} | {:>11} {:>11.0}",
+            d2, dj2, r.gflops, r.e_d, paper_cpu, "(see bench)", paper_gpu, gpu_model
+        )
+        .unwrap();
+    }
+    writeln!(out, "  (* measured-CPU column printed by `cargo bench --bench table2_5_designs`)").unwrap();
+    Some(out)
+}
+
+/// Table V: all of designs G–N.
+pub fn table5() -> String {
+    let mut out = String::new();
+    writeln!(out, "TABLE V — designs G–N, d1 = 512").unwrap();
+    writeln!(out, "{:>3} | {}", "ID", (1..=6).map(|i| format!("{:>10}", 512u64 << (i - 1))).collect::<String>()).unwrap();
+    for id in ["G", "H", "I", "L", "M", "N"] {
+        let spec = paper_catalog().into_iter().find(|d| d.id == id).unwrap();
+        let sim = OffchipSim::new(OffchipDesign {
+            blocking: spec.level1().unwrap(),
+            fmax_mhz: spec.fmax_mhz.unwrap(),
+            controller_efficiency: 0.97,
+        });
+        let mut row = format!("{id:>3} |");
+        for &d2 in spec.sweep {
+            let r = sim.simulate(d2, d2, d2);
+            row.push_str(&format!(" {:>5.0}/{:.2}", r.gflops, r.e_d));
+        }
+        writeln!(out, "{row}").unwrap();
+    }
+    out
+}
+
+/// Table VI: Intel SDK synthesis attempts through the fitter model.
+pub fn table6() -> String {
+    let fitter = crate::fpga::Fitter::default();
+    let mut out = String::new();
+    writeln!(out, "TABLE VI — Intel SDK 2D systolic synthesis (fitter model)").unwrap();
+    writeln!(
+        out,
+        "{:>8} {:>8} {:>6} {:>7} | {:>6} {:>9} | {:>14} {:>8}",
+        "PE_ROWS", "PE_COLS", "dot", "split", "#DSP", "%avail", "model", "paper"
+    )
+    .unwrap();
+    for (cfg, paper_fmax) in table6_attempts() {
+        let fits = fitter.place(&cfg.placement()).fits();
+        let model = if fits {
+            match (cfg.pe_rows, cfg.pe_cols, cfg.force_dot_4) {
+                (32, 14, false) => "412 MHz".to_string(),
+                (32, 16, true) => "407 MHz".to_string(),
+                _ => "fits".to_string(),
+            }
+        } else {
+            "fitter failed".to_string()
+        };
+        let paper = paper_fmax
+            .map(|f| format!("{f:.0} MHz"))
+            .unwrap_or_else(|| "fitter failed".into());
+        writeln!(
+            out,
+            "{:>8} {:>8} {:>6} {:>7} | {:>6} {:>8.1}% | {:>14} {:>8}",
+            cfg.pe_rows,
+            cfg.pe_cols,
+            cfg.dot_size,
+            cfg.force_dot_4,
+            cfg.dsps(),
+            cfg.dsps() as f64 / 4713.0 * 100.0,
+            model,
+            paper
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Tables VII & VIII: Intel SDK performance.
+pub fn table7_8() -> String {
+    let mut out = String::new();
+    for (no, sim, sweep_base) in [
+        ("VII", IntelSdkSim::config_32x14(), (1024u64, 448u64)),
+        ("VIII", IntelSdkSim::config_32x16(), (512, 512)),
+    ] {
+        writeln!(
+            out,
+            "TABLE {no} — Intel SDK {}x{} ({} DSPs @ {} MHz)",
+            sim.config.pe_rows,
+            sim.config.pe_cols,
+            sim.config.dsps(),
+            sim.fmax_mhz
+        )
+        .unwrap();
+        writeln!(out, "{:>7} {:>7} {:>7} | {:>9} {:>6}", "di2", "dk2", "dj2", "GFLOPS", "e_D")
+            .unwrap();
+        for i in 0..5u32 {
+            let scale = 1u64 << i;
+            let dk2 = 512 * scale;
+            // Table VII scales (1024, 448) with dk2; Table VIII is square.
+            let (m, n) = (sweep_base.0 * scale, sweep_base.1 * scale);
+            let g = sim.gflops(m, dk2, n);
+            writeln!(
+                out,
+                "{:>7} {:>7} {:>7} | {:>9.0} {:>6.2}",
+                m, dk2, n, g, sim.efficiency(dk2)
+            )
+            .unwrap();
+        }
+        writeln!(out).unwrap();
+    }
+    out
+}
+
+/// Figure 1: activation wavefront of a 3×3×3 array (ASCII).
+pub fn figure1() -> String {
+    let sim = Array3dSim::new(ArraySize::new(3, 3, 3, 1));
+    let trace = sim.activation_trace();
+    let mut out = String::new();
+    writeln!(out, "FIGURE 1 — 3x3x3 activation wavefront (PE(i,j)@layer)").unwrap();
+    for (k, step) in trace.iter().enumerate() {
+        let cells: Vec<String> =
+            step.iter().map(|(i, j, l)| format!("({i},{j})@{l}")).collect();
+        writeln!(out, "  k={k}: {}", cells.join(" ")).unwrap();
+    }
+    out
+}
+
+/// Figure 2: the design wiring summary for the paper's example sizes
+/// (d_i0=4, d_j0=3, d_k0=3, 𝓑_gA=2, 𝓑_gB=1).
+pub fn figure2() -> String {
+    use crate::memory::{FifoSystem, MappedSystem};
+    use crate::systolic::PeGrid;
+    let size = ArraySize::new(4, 3, 3, 3);
+    let grid = PeGrid::new(size);
+    let a = MappedSystem::for_a(4, 3, 8);
+    let b = MappedSystem::for_b(3, 3, 6);
+    let c = FifoSystem::for_c(4, 3, 8, 6);
+    let mut out = String::new();
+    writeln!(out, "FIGURE 2 — design wiring (d=(4,3,3), B_gA=2, B_gB=1)").unwrap();
+    writeln!(out, "  global A LSU (2 fl/cyc) -> A mapped system: {} partitions", a.partitions).unwrap();
+    writeln!(out, "  global B LSU (1 fl/cyc) -> B mapped system: {} partitions", b.partitions).unwrap();
+    writeln!(
+        out,
+        "  A register chains: {} x {} hops; B chains: {} x {} hops",
+        grid.a_chains().0,
+        grid.a_chains().1,
+        grid.b_chains().0,
+        grid.b_chains().1
+    )
+    .unwrap();
+    writeln!(out, "  systolic array: {} PEs ({} DSPs)", size.pes(), size.dsps()).unwrap();
+    writeln!(out, "  C FIFO system: {} FIFOs of depth {}", c.fifos, c.depth).unwrap();
+    writeln!(out, "  C store unit: {} fl/cyc -> global memory", size.dj0).unwrap();
+    out
+}
+
+/// Figure 3: phase timeline for one C̄ block of design G.
+pub fn figure3(dk2: u64) -> String {
+    let spec = paper_catalog().into_iter().find(|d| d.id == "G").unwrap();
+    let design = OffchipDesign {
+        blocking: spec.level1().unwrap(),
+        fmax_mhz: spec.fmax_mhz.unwrap(),
+        controller_efficiency: 0.97,
+    };
+    let tl = design.schedule().timeline(dk2);
+    let total = tl.last().unwrap().2;
+    let mut out = String::new();
+    writeln!(out, "FIGURE 3 — phase timeline of one C block (design G, dk2={dk2})").unwrap();
+    const W: usize = 64;
+    for kind in [PhaseKind::InitialRead, PhaseKind::ReadCompute, PhaseKind::ComputeOnly, PhaseKind::Write] {
+        let mut bar = vec![' '; W];
+        for (k, s, e) in &tl {
+            if *k == kind {
+                let s = (*s as usize * W / total as usize).min(W - 1);
+                let e = (*e as usize * W / total as usize).clamp(s + 1, W);
+                for c in bar[s..e].iter_mut() {
+                    *c = '#';
+                }
+            }
+        }
+        writeln!(out, "  {:<12} |{}|", format!("{kind:?}"), bar.iter().collect::<String>())
+            .unwrap();
+    }
+    writeln!(out, "  total iterations: {total}").unwrap();
+    out
+}
+
+/// eq. 19 curve: model vs schedule-simulated compute fraction.
+pub fn eq19_curve() -> String {
+    let spec = paper_catalog().into_iter().find(|d| d.id == "G").unwrap();
+    let design = OffchipDesign {
+        blocking: spec.level1().unwrap(),
+        fmax_mhz: spec.fmax_mhz.unwrap(),
+        controller_efficiency: 0.97,
+    };
+    let sim = OffchipSim::new(design);
+    let mut out = String::new();
+    writeln!(out, "eq. 19 — compute fraction: model vs schedule vs simulated e_D (design G)").unwrap();
+    writeln!(out, "{:>8} {:>8} {:>10} {:>8}", "dk2", "eq19", "schedule", "sim e_D").unwrap();
+    for d2 in [512u64, 1024, 2048, 4096, 8192, 16384] {
+        let model = eq19_compute_fraction(d2, 2, 64, 32, 8);
+        let r = sim.simulate(d2, d2, d2);
+        writeln!(out, "{:>8} {:>8.3} {:>10.3} {:>8.3}", d2, model, r.compute_fraction, r.e_d)
+            .unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_all_rows() {
+        let t = table1();
+        // 12 catalog rows: 3 fail, 9 fitted-and-measured.
+        assert_eq!(t.matches("fitter failed").count(), 3, "{t}");
+        assert_eq!(t.matches("[measured]").count(), 9, "{t}");
+        assert!(t.contains("4704"), "{t}");
+        assert!(!t.contains("MISMATCH"), "{t}");
+    }
+
+    #[test]
+    fn residuals_report_has_rms() {
+        let r = table1_residuals();
+        assert!(r.contains("RMS residual"));
+    }
+
+    #[test]
+    fn design_sweeps_render() {
+        for id in ["C", "E", "F", "G"] {
+            let t = table_design_sweep(id).unwrap();
+            assert!(t.contains("TABLE"), "{t}");
+        }
+        assert!(table_design_sweep("A").is_none()); // failed design
+        assert!(table_design_sweep("Z").is_none());
+    }
+
+    #[test]
+    fn table5_has_all_designs() {
+        let t = table5();
+        for id in ["G", "H", "I", "L", "M", "N"] {
+            assert!(t.contains(&format!("{id:>3} |")), "{t}");
+        }
+    }
+
+    #[test]
+    fn table6_renders_fit_and_fail() {
+        let t = table6();
+        assert!(t.contains("fitter failed"));
+        assert!(t.contains("412 MHz"));
+    }
+
+    #[test]
+    fn figures_render() {
+        assert!(figure1().contains("k=0: (0,0)@0"));
+        assert!(figure2().contains("12 partitions"));
+        let f3 = figure3(2048);
+        assert!(f3.contains("Write"));
+        assert!(eq19_curve().contains("0.9"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Kind of compiled computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// C = A·B.
+    Matmul,
+    /// (A·B)·C — the chained-multiply graph.
+    Chain,
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    /// Input shapes, in argument order.
+    pub inputs: Vec<(usize, usize)>,
+    /// The systolic tile the kernel was built with.
+    pub tile: TileMeta,
+}
+
+/// Systolic/blocking geometry recorded by aot.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileMeta {
+    pub di0: u32,
+    pub dj0: u32,
+    pub dk0: u32,
+    pub dp: u32,
+    pub di1: u32,
+    pub dj1: u32,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading manifest in {dir:?}: {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (separated out for tests).
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let format = v.get("format").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(format == "hlo-text-v1", "unsupported manifest format {format:?}");
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing file"))?;
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("matmul") => ArtifactKind::Matmul,
+                Some("chain") => ArtifactKind::Chain,
+                k => anyhow::bail!("artifact {name}: unknown kind {k:?}"),
+            };
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    let dims = shape.as_arr().unwrap_or(&[]);
+                    anyhow::ensure!(dims.len() == 2, "artifact {name}: non-2d input");
+                    Ok((
+                        dims[0].as_u64().unwrap_or(0) as usize,
+                        dims[1].as_u64().unwrap_or(0) as usize,
+                    ))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let tile = a
+                .get("tile")
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: missing tile"))?;
+            let t = |k: &str| -> anyhow::Result<u32> {
+                tile.get(k)
+                    .and_then(Json::as_u64)
+                    .map(|v| v as u32)
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name}: tile.{k} missing"))
+            };
+            let tile = TileMeta {
+                di0: t("di0")?,
+                dj0: t("dj0")?,
+                dk0: t("dk0")?,
+                dp: t("dp")?,
+                di1: t("di1")?,
+                dj1: t("dj1")?,
+            };
+            artifacts.push(ArtifactMeta { path: dir.join(file), name, kind, inputs, tile });
+        }
+        Ok(Self { artifacts, dir: dir.to_path_buf() })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find a matmul artifact matching an (m, k) × (k, n) problem.
+    pub fn find_matmul(&self, m: usize, k: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::Matmul
+                && a.inputs.len() == 2
+                && a.inputs[0] == (m, k)
+                && a.inputs[1] == (k, n)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "format": "hlo-text-v1",
+      "artifacts": [
+        {"name": "mm_h_64", "file": "mm_h_64.hlo.txt", "kind": "matmul",
+         "inputs": [[64, 64], [64, 64]], "dtype": "f32",
+         "m": 64, "k": 64, "n": 64, "family": "fpga_h", "sha256_16": "x",
+         "tile": {"di0": 32, "dj0": 32, "dk0": 4, "dp": 4, "di1": 64, "dj1": 64}},
+        {"name": "chain_tpu_256", "file": "c.hlo.txt", "kind": "chain",
+         "inputs": [[256, 256], [256, 256], [256, 256]], "dtype": "f32",
+         "m": 256, "k": 256, "n": 256, "family": "tpu", "sha256_16": "y",
+         "tile": {"di0": 64, "dj0": 64, "dk0": 64, "dp": 32, "di1": 128, "dj1": 128}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.by_name("mm_h_64").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Matmul);
+        assert_eq!(a.inputs, vec![(64, 64), (64, 64)]);
+        assert_eq!(a.tile.di0, 32);
+        assert!(a.path.ends_with("mm_h_64.hlo.txt"));
+    }
+
+    #[test]
+    fn shape_routing() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        assert!(m.find_matmul(64, 64, 64).is_some());
+        assert!(m.find_matmul(64, 64, 32).is_none());
+        // Chain artifacts are not matmul routes.
+        assert!(m.find_matmul(256, 256, 256).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let doc = r#"{"format": "other", "artifacts": []}"#;
+        assert!(Manifest::parse(doc, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration-level check against the actual artifacts dir when
+        // `make artifacts` has run (skipped otherwise).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.by_name("mm_h_64").is_some());
+            for a in &m.artifacts {
+                assert!(a.path.exists(), "missing {:?}", a.path);
+            }
+        }
+    }
+}

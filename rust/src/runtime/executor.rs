@@ -1,0 +1,151 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! NOTE: the `xla` crate's `PjRtClient` holds an `Rc` internally, so the
+//! engine is deliberately single-threaded (`&mut self`). The coordinator
+//! runs one dedicated engine thread and feeds it over channels
+//! (`crate::coordinator::service`), which is also the right shape for a
+//! serving loop: one compiled-executable cache, no lock contention on
+//! the hot path.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::gemm::Matrix;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Execution statistics for one call.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecStats {
+    /// Host wall-clock of the execute call (s).
+    pub exec_seconds: f64,
+    /// Whether the executable came from the compile cache.
+    pub cache_hit: bool,
+}
+
+/// A compiled-executable cache over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, executables: HashMap::new(), manifest })
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact by name on f32 matrices. Returns the single
+    /// output matrix plus stats.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[&Matrix],
+    ) -> anyhow::Result<(Matrix, ExecStats)> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "artifact {name} takes {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        for (idx, (m, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            anyhow::ensure!(
+                (m.rows, m.cols) == *want,
+                "artifact {name} input {idx}: shape ({},{}) != expected {:?}",
+                m.rows,
+                m.cols,
+                want
+            );
+        }
+
+        let cache_hit = self.executables.contains_key(name);
+        if !cache_hit {
+            let exe = Self::compile(&self.client, &meta)?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        let exe = self.executables.get(name).unwrap();
+
+        let mut literals = Vec::with_capacity(inputs.len());
+        for m in inputs {
+            let lit = xla::Literal::vec1(&m.data)
+                .reshape(&[m.rows as i64, m.cols as i64])
+                .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))?;
+            literals.push(lit);
+        }
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let exec_seconds = t0.elapsed().as_secs_f64();
+
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = out_lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("read f32s: {e:?}"))?;
+
+        // Output shape: matmul/chain both produce (rows of first input,
+        // cols of last input).
+        let rows = meta.inputs.first().map(|s| s.0).unwrap_or(0);
+        let cols = meta.inputs.last().map(|s| s.1).unwrap_or(0);
+        anyhow::ensure!(
+            data.len() == rows * cols,
+            "artifact {name}: result has {} elements, expected {rows}x{cols}",
+            data.len()
+        );
+        Ok((Matrix::from_vec(rows, cols, data), ExecStats { exec_seconds, cache_hit }))
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        meta: &ArtifactMeta,
+    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        anyhow::ensure!(
+            meta.path.exists(),
+            "artifact file missing: {:?} (run `make artifacts`)",
+            meta.path
+        );
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .map_err(|e| anyhow::anyhow!("parse HLO text {:?}: {e:?}", meta.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", meta.name))
+    }
+
+    /// Pre-compile every artifact (warm start for the serving path).
+    /// Returns (name, compile seconds) per newly compiled artifact.
+    pub fn warmup(&mut self) -> anyhow::Result<Vec<(String, f64)>> {
+        let metas: Vec<ArtifactMeta> = self.manifest.artifacts.clone();
+        let mut out = Vec::new();
+        for meta in metas {
+            if self.executables.contains_key(&meta.name) {
+                continue;
+            }
+            let t0 = Instant::now();
+            let exe = Self::compile(&self.client, &meta)?;
+            self.executables.insert(meta.name.clone(), exe);
+            out.push((meta.name.clone(), t0.elapsed().as_secs_f64()));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the only bridge between L3 (Rust) and the L1/L2 compute
+//! graphs. `make artifacts` runs Python once to emit
+//! `artifacts/*.hlo.txt` + `manifest.json`; from then on this module is
+//! self-contained: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`.
+//!
+//! HLO **text** is the interchange format — xla_extension 0.5.1 (behind
+//! the published `xla` 0.1.6 crate) rejects jax ≥ 0.5 serialized protos
+//! (64-bit instruction ids); the text parser reassigns ids.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
+pub use executor::Engine;

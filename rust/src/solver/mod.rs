@@ -1,0 +1,20 @@
+//! Numerical solvers on top of the systolic matmul engine — the paper's
+//! stated future work (§VII: "designs implementing complete numerical
+//! solvers entirely into the FPGA logic").
+//!
+//! Both solvers decompose into chains of GEMMs, which is exactly the
+//! operation profile the 3D design serves without host reordering
+//! (C keeps B's row-major format — §VI). Each solver reports the share
+//! of its FLOPs that lands on the (simulated) accelerator and the
+//! simulated FPGA time for those GEMMs.
+//!
+//! * [`lu`] — blocked right-looking LU factorization: panel factor on
+//!   the host, the O(n³) trailing-matrix update as accelerator GEMMs.
+//! * [`newton_schulz`] — Newton–Schulz matrix inversion: pure GEMM
+//!   chains (the chained-multiply request type of the coordinator).
+
+pub mod lu;
+pub mod newton_schulz;
+
+pub use lu::{blocked_lu, LuReport};
+pub use newton_schulz::{invert, NewtonSchulzReport};

@@ -1,0 +1,267 @@
+//! Definition 2 / Listing 2 — the paper's three-dimensional systolic
+//! array, simulated with the exact in-place wavefront semantics of the
+//! HLS source.
+//!
+//! One call of `systolic_mmm` (one iteration of Listing 1's T loop)
+//! multiply-accumulates an A0 block (d_i0 × d_k0) with a B0 block
+//! (d_k0 × d_j0) into the resident C (d_i0 × d_j0). The unrolled wave
+//! loop runs `d_i0 + d_j0 + d_k0 − 2` steps; PE(i,j) is active while
+//! `i+j ≤ k < i+j+d_k0`, consuming `A0[i][k−i−j]` and `B0[k−i−j][j]`
+//! delivered through the register chains. Every `d_p` steps the partial
+//! sum crosses a layer boundary (`__fpga_reg` on C — line 21), which is
+//! what makes the architecture three-dimensional.
+//!
+//! The descending i/j iteration order reproduces the register semantics
+//! in place, exactly like the HLS code: reading `A[i][j-1]` before it is
+//! overwritten in the same wave step yields the previous step's value.
+
+use super::latency::def2_cycles;
+use super::pe::ArraySize;
+use crate::gemm::Matrix;
+
+/// The 3D systolic array simulator.
+#[derive(Clone, Debug)]
+pub struct Array3dSim {
+    pub size: ArraySize,
+}
+
+/// Result of multiplying full matrices through the array.
+#[derive(Clone, Debug)]
+pub struct OnChipRun {
+    pub c: Matrix,
+    /// Wave steps executed per `systolic_mmm` call: d_i0+d_j0+d_k0−2.
+    pub wave_steps_per_call: u64,
+    /// Number of calls (Listing 1's T loop): K / d_k0.
+    pub calls: u64,
+    /// Total pipeline cycles under the Definition-2 convention.
+    pub cycles: u64,
+    /// Total multiply-accumulates performed (must equal d_i0·d_j0·K).
+    pub total_macs: u64,
+    /// C layer-boundary register crossings (0 for single-layer arrays).
+    pub layer_forwards: u64,
+}
+
+impl Array3dSim {
+    pub fn new(size: ArraySize) -> Self {
+        size.validate().expect("invalid ArraySize");
+        Self { size }
+    }
+
+    /// Multiply A (d_i0 × K) by B (K × d_j0), K a multiple of d_k0.
+    pub fn multiply(&self, a: &Matrix, b: &Matrix) -> OnChipRun {
+        let ArraySize { di0, dj0, dk0, dp } = self.size;
+        let (di, dj, dk) = (di0 as usize, dj0 as usize, dk0 as usize);
+        assert_eq!(a.rows, di, "A rows must equal d_i0");
+        assert_eq!(b.cols, dj, "B cols must equal d_j0");
+        assert_eq!(a.cols, b.rows, "contraction mismatch");
+        assert!(a.cols % dk == 0, "K must be a multiple of d_k0");
+        let calls = a.cols / dk;
+
+        let mut c = Matrix::zeros(di, dj);
+        // Flat register files (perf: the wavefront loop is the hot path
+        // of the whole crate — see EXPERIMENTS.md §Perf L3-1).
+        let mut a_reg = vec![0.0f32; di * dj];
+        let mut b_reg = vec![0.0f32; di * dj];
+        let mut total_macs = 0u64;
+        let mut layer_forwards = 0u64;
+        let wave_steps = (di + dj + dk - 2) as u64;
+        let multi_layer = dp < dk0;
+
+        for t in 0..calls {
+            // A0 = A[:, t·dk .. (t+1)·dk], B0 = B[t·dk .. (t+1)·dk, :].
+            for k in 0..(di + dj + dk - 2) {
+                for i in (0..di).rev() {
+                    // Wavefront guard hoisted out of the j loop:
+                    // active j range is [k+1-i-dk, k-i] ∩ [0, dj).
+                    let j_hi = if k >= i { (k - i).min(dj - 1) } else { continue };
+                    let j_lo = (k + 1).saturating_sub(i + dk).min(dj);
+                    if j_lo > j_hi {
+                        continue;
+                    }
+                    let row = i * dj;
+                    let crow = &mut c.data[row..row + dj];
+                    for j in (j_lo..=j_hi).rev() {
+                        let av = if j > 0 {
+                            a_reg[row + j - 1] // __fpga_reg chain hop
+                        } else {
+                            a.data[i * a.cols + t * dk + (k - i)]
+                        };
+                        let bv = if i > 0 {
+                            b_reg[row - dj + j]
+                        } else {
+                            b.data[(t * dk + (k - j)) * dj + j]
+                        };
+                        a_reg[row + j] = av;
+                        b_reg[row + j] = bv;
+                        crow[j] += av * bv;
+                    }
+                    let n_active = (j_hi - j_lo + 1) as u64;
+                    total_macs += n_active;
+                    // Listing 2 line 21: forward the partial sum to the
+                    // next layer at d_p boundaries (k_local = k-i-j).
+                    if multi_layer {
+                        for j in j_lo..=j_hi {
+                            if ((k - i - j) as u32 % dp) == dp - 1 {
+                                layer_forwards += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let cycles = def2_cycles(di0, dj0, a.cols as u64, dk0, dp);
+        OnChipRun {
+            c,
+            wave_steps_per_call: wave_steps,
+            calls: calls as u64,
+            cycles,
+            total_macs,
+            layer_forwards,
+        }
+    }
+
+    /// Activation trace of one `systolic_mmm` call: for each wave step,
+    /// the active PEs as `(i, j, layer)` — the diagonal activation lines
+    /// of the paper's Figure 1.
+    pub fn activation_trace(&self) -> Vec<Vec<(u32, u32, u32)>> {
+        let ArraySize { di0, dj0, dk0, dp } = self.size;
+        let steps = (di0 + dj0 + dk0 - 2) as usize;
+        let mut trace = Vec::with_capacity(steps);
+        for k in 0..steps as u32 {
+            let mut active = Vec::new();
+            for i in 0..di0 {
+                for j in 0..dj0 {
+                    if i + j <= k && k < i + j + dk0 {
+                        let layer = (k - i - j) / dp;
+                        active.push((i, j, layer));
+                    }
+                }
+            }
+            trace.push(active);
+        }
+        trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm;
+
+    fn size(di: u32, dj: u32, dk: u32, dp: u32) -> ArraySize {
+        ArraySize::new(di, dj, dk, dp)
+    }
+
+    #[test]
+    fn computes_correct_product_single_layer() {
+        let a = Matrix::random(4, 12, 20);
+        let b = Matrix::random(12, 3, 21);
+        let run = Array3dSim::new(size(4, 3, 4, 4)).multiply(&a, &b);
+        let want = gemm::matmul(&a, &b);
+        assert!(run.c.rel_fro_error(&want) < 1e-6, "{}", run.c.rel_fro_error(&want));
+    }
+
+    #[test]
+    fn computes_correct_product_multi_layer() {
+        let a = Matrix::random(5, 16, 22);
+        let b = Matrix::random(16, 4, 23);
+        let run = Array3dSim::new(size(5, 4, 8, 2)).multiply(&a, &b);
+        let want = gemm::matmul(&a, &b);
+        assert!(run.c.rel_fro_error(&want) < 1e-6);
+    }
+
+    #[test]
+    fn mac_count_is_exact_work() {
+        let run = Array3dSim::new(size(4, 3, 4, 2)).multiply(
+            &Matrix::random(4, 16, 1),
+            &Matrix::random(16, 3, 2),
+        );
+        assert_eq!(run.total_macs, 4 * 3 * 16);
+        assert_eq!(run.calls, 4);
+        assert_eq!(run.wave_steps_per_call, (4 + 3 + 4 - 2) as u64);
+    }
+
+    #[test]
+    fn layer_forward_count() {
+        // dp=2, dk0=4: every PE column forwards once per 2 steps; with
+        // dk0/dp = 2 layers each (i,j) site forwards at k_local ∈ {1,3}:
+        // 2 forwards per site per call.
+        let run = Array3dSim::new(size(2, 2, 4, 2)).multiply(
+            &Matrix::random(2, 8, 3),
+            &Matrix::random(8, 2, 4),
+        );
+        // 2 calls · 4 sites · 2 forwards.
+        assert_eq!(run.layer_forwards, 2 * 4 * 2);
+        // Single-layer arrays never forward.
+        let run1 = Array3dSim::new(size(2, 2, 4, 4)).multiply(
+            &Matrix::random(2, 8, 3),
+            &Matrix::random(8, 2, 4),
+        );
+        assert_eq!(run1.layer_forwards, 0);
+    }
+
+    #[test]
+    fn cycles_match_def2() {
+        let run = Array3dSim::new(size(8, 8, 4, 2)).multiply(
+            &Matrix::random(8, 64, 5),
+            &Matrix::random(64, 8, 6),
+        );
+        assert_eq!(run.cycles, def2_cycles(8, 8, 64, 4, 2));
+    }
+
+    #[test]
+    fn matches_dot_unit_chain_rounding() {
+        // The simulator's per-element accumulation order must equal the
+        // hardware chain order: A0 row · B0 col accumulated k-ascending,
+        // slab by slab. Compare against an explicit reimplementation.
+        let (di, dj, dk) = (3usize, 3usize, 4usize);
+        let k_total = 8usize;
+        let a = Matrix::random(di, k_total, 7);
+        let b = Matrix::random(k_total, dj, 8);
+        let run = Array3dSim::new(size(3, 3, 4, 2)).multiply(&a, &b);
+        let mut want = Matrix::zeros(di, dj);
+        for t in 0..k_total / dk {
+            for i in 0..di {
+                for j in 0..dj {
+                    let mut acc = want.at(i, j);
+                    for kk in 0..dk {
+                        acc += a.at(i, t * dk + kk) * b.at(t * dk + kk, j);
+                    }
+                    want.set(i, j, acc);
+                }
+            }
+        }
+        assert_eq!(run.c.data, want.data, "accumulation order diverged");
+    }
+
+    #[test]
+    fn activation_wavefront_shape() {
+        // Figure 1's 3x3x3 example: 9 PEs over 3 layers (dp=1).
+        let sim = Array3dSim::new(size(3, 3, 3, 1));
+        let trace = sim.activation_trace();
+        assert_eq!(trace.len(), 3 + 3 + 3 - 2);
+        // Step 0: only PE(0,0) active, layer 0.
+        assert_eq!(trace[0], vec![(0, 0, 0)]);
+        // The wave widens then narrows; last step: only (2,2) at layer 2.
+        assert_eq!(trace.last().unwrap(), &vec![(2, 2, 2)]);
+        // Every PE is active exactly d_k0 steps in total.
+        let mut counts = std::collections::HashMap::new();
+        for step in &trace {
+            for &(i, j, _) in step {
+                *counts.entry((i, j)).or_insert(0u32) += 1;
+            }
+        }
+        assert!(counts.values().all(|&c| c == 3));
+        assert_eq!(counts.len(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of d_k0")]
+    fn rejects_untileable_k() {
+        Array3dSim::new(size(2, 2, 4, 2)).multiply(
+            &Matrix::random(2, 6, 1),
+            &Matrix::random(6, 2, 2),
+        );
+    }
+}

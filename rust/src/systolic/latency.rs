@@ -1,0 +1,78 @@
+//! Closed-form latency conventions shared by the simulators and the
+//! event-level off-chip model.
+//!
+//! Cycle-counting convention: a latency counts the cycles from the first
+//! edge injection (including the `__fpga_reg` between a load unit and the
+//! first PE) to the availability of the last result out of its arithmetic
+//! pipeline. Under this convention the simulators reproduce the paper's
+//! Definition 1/2 formulas exactly (asserted in their tests).
+
+use crate::fpga::dsp::{DotProductUnit, DSP_FMA_LATENCY};
+
+/// MAC pipeline depth of a classical PE (one FMA DSP).
+pub const L_MAC: u32 = DSP_FMA_LATENCY;
+
+/// Dot-product-unit latency `l_dot(d_p)` (FMA stage + chained adds).
+pub fn l_dot(dp: u32) -> u32 {
+    DotProductUnit::new(dp).latency_cycles()
+}
+
+/// Definition 1: `l_tot = d_i0 + d_j0 + K − 1 + l_MAC`.
+pub fn def1_cycles(di0: u32, dj0: u32, k: u64) -> u64 {
+    di0 as u64 + dj0 as u64 + k - 1 + L_MAC as u64
+}
+
+/// Definition 2: `l_tot = d_i0 + d_j0 + K/d_k0 − 1 + (d_k0/d_p)·l_dot`.
+pub fn def2_cycles(di0: u32, dj0: u32, k: u64, dk0: u32, dp: u32) -> u64 {
+    assert!(k % dk0 as u64 == 0, "K must be a multiple of d_k0");
+    di0 as u64 + dj0 as u64 + k / dk0 as u64 - 1
+        + (dk0 / dp) as u64 * l_dot(dp) as u64
+}
+
+/// eq. 13: ideal loop-body latency of `systolic_mmm` in Listing 1's
+/// pipeline: `l_body = d_i0 + d_j0 − 1 + (d_k0/d_p)·l_dot`.
+pub fn eq13_l_body(di0: u32, dj0: u32, dk0: u32, dp: u32) -> u64 {
+    di0 as u64 + dj0 as u64 - 1 + (dk0 / dp) as u64 * l_dot(dp) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn def2_reduces_to_def1_shape() {
+        // With d_k0 = d_p = 1 the 3D array degenerates to per-cycle MACs:
+        // same K-dependence as Definition 1.
+        let d1 = def1_cycles(8, 8, 128);
+        let d2 = def2_cycles(8, 8, 128, 1, 1);
+        // l_dot(1) == l_MAC, so they're equal.
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn third_dimension_compresses_k() {
+        // Same K: the 3D array with d_k0=8 takes ~K/8 fewer wave steps.
+        let flat = def2_cycles(8, 8, 1024, 1, 1);
+        let deep = def2_cycles(8, 8, 1024, 8, 8);
+        assert!(deep < flat, "{deep} vs {flat}");
+        assert!(flat - deep > 800);
+    }
+
+    #[test]
+    fn more_layers_cost_latency_at_fixed_dk0() {
+        // Splitting dk0 into more layers serializes more dot-unit hops.
+        assert!(def2_cycles(8, 8, 64, 8, 1) > def2_cycles(8, 8, 64, 8, 8));
+    }
+
+    #[test]
+    fn eq13_consistency_with_def2() {
+        // Def2 = l_body + K/d_k0 (the pipelined iterations) under the
+        // shared convention.
+        let (di, dj, dk, dp) = (16u32, 8u32, 4u32, 2u32);
+        let k = 64u64;
+        assert_eq!(
+            def2_cycles(di, dj, k, dk, dp),
+            eq13_l_body(di, dj, dk, dp) + k / dk as u64
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! Processing-element grid structure (paper §III-B/C).
+//!
+//! This module captures what the HLS unrolling of Listing 2 *synthesizes*
+//! — PE counts, dot-unit sizes, register chains and their lengths, load
+//! units and fan-out — the quantities the fitter and f_max models consume
+//! and the quantities §III-C reasons about when it explains why the
+//! architecture avoids routing congestion.
+
+use crate::fpga::dsp::DotProductUnit;
+
+/// Sizes of the systolic array (superscript-0 sizes; Definition 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArraySize {
+    pub di0: u32,
+    pub dj0: u32,
+    pub dk0: u32,
+    /// Dot-product-unit size; must divide `dk0`. `dp == dk0` gives a
+    /// single-layer (bi-dimensional) architecture.
+    pub dp: u32,
+}
+
+impl ArraySize {
+    pub fn new(di0: u32, dj0: u32, dk0: u32, dp: u32) -> Self {
+        let s = Self { di0, dj0, dk0, dp };
+        s.validate().expect("invalid ArraySize");
+        s
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.di0 == 0 || self.dj0 == 0 || self.dk0 == 0 || self.dp == 0 {
+            return Err(format!("all dimensions must be positive: {self:?}"));
+        }
+        if self.dk0 % self.dp != 0 {
+            return Err(format!("dp={} must divide dk0={}", self.dp, self.dk0));
+        }
+        Ok(())
+    }
+
+    /// Number of layers along the third dimension (`d_k0/d_p`).
+    pub fn layers(&self) -> u32 {
+        self.dk0 / self.dp
+    }
+
+    /// eq. 12: `#PE`.
+    pub fn pes(&self) -> u64 {
+        self.di0 as u64 * self.dj0 as u64 * self.layers() as u64
+    }
+
+    /// eq. 11: `#DSP`.
+    pub fn dsps(&self) -> u64 {
+        self.di0 as u64 * self.dj0 as u64 * self.dk0 as u64
+    }
+
+    /// eq. 9: FLOP per cycle.
+    pub fn flop_per_cycle(&self) -> u64 {
+        2 * self.dsps()
+    }
+
+    /// eq. 10: (𝓑_A, 𝓑_B) input floats/cycle.
+    pub fn face_throughputs(&self) -> (u64, u64) {
+        (
+            self.di0 as u64 * self.dk0 as u64,
+            self.dk0 as u64 * self.dj0 as u64,
+        )
+    }
+}
+
+/// The synthesized PE grid of Listing 2.
+#[derive(Clone, Debug)]
+pub struct PeGrid {
+    pub size: ArraySize,
+}
+
+impl PeGrid {
+    pub fn new(size: ArraySize) -> Self {
+        size.validate().expect("invalid ArraySize");
+        Self { size }
+    }
+
+    pub fn dot_unit(&self) -> DotProductUnit {
+        DotProductUnit::new(self.size.dp)
+    }
+
+    /// Load units generated for A (§III-C: unrolling line 14 at j==0
+    /// produces `d_i0·d_k0` loads, one per A partition).
+    pub fn a_load_units(&self) -> u64 {
+        self.size.di0 as u64 * self.size.dk0 as u64
+    }
+
+    /// Load units generated for B (line 15 at i==0): `d_k0·d_j0`.
+    pub fn b_load_units(&self) -> u64 {
+        self.size.dk0 as u64 * self.size.dj0 as u64
+    }
+
+    /// Register chains carrying A in the j direction: `d_i0·d_k0` chains,
+    /// each `d_j0` registers long.
+    pub fn a_chains(&self) -> (u64, u32) {
+        (self.size.di0 as u64 * self.size.dk0 as u64, self.size.dj0)
+    }
+
+    /// Register chains carrying B in the i direction: `d_k0·d_j0` chains,
+    /// each `d_i0` registers long.
+    pub fn b_chains(&self) -> (u64, u32) {
+        (self.size.dk0 as u64 * self.size.dj0 as u64, self.size.di0)
+    }
+
+    /// Total pipeline registers inserted by `__fpga_reg` on data paths
+    /// (A chains + B chains + the C layer-boundary registers).
+    pub fn fpga_registers(&self) -> u64 {
+        let (a_n, a_len) = self.a_chains();
+        let (b_n, b_len) = self.b_chains();
+        let c_regs = self.size.di0 as u64
+            * self.size.dj0 as u64
+            * (self.size.layers() as u64 - 1);
+        a_n * a_len as u64 + b_n * b_len as u64 + c_regs
+    }
+
+    /// Worst-case fan-out of a load unit's data net. With register
+    /// chains each load unit feeds exactly ONE first PE (fan-out 1);
+    /// without chains it would broadcast to a whole row/column.
+    pub fn load_fanout_with_chains(&self) -> u32 {
+        1
+    }
+
+    /// The hypothetical broadcast fan-out the chains avoid.
+    pub fn load_fanout_without_chains(&self) -> u32 {
+        self.size.di0.max(self.size.dj0)
+    }
+
+    /// §III-C's balancing observation: at constant #DSP, decreasing d_k0
+    /// lowers memory-side throughput (𝓑_A+𝓑_B) and shifts it onto fewer,
+    /// longer register chains. Returns (memory floats/cycle, chain count,
+    /// mean chain length) for comparison.
+    pub fn throughput_balance(&self) -> (u64, u64, f64) {
+        let (ba, bb) = self.size.face_throughputs();
+        let (a_n, a_len) = self.a_chains();
+        let (b_n, b_len) = self.b_chains();
+        let chains = a_n + b_n;
+        let mean_len = (a_n * a_len as u64 + b_n * b_len as u64) as f64 / chains as f64;
+        (ba + bb, chains, mean_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_counts_match_paper() {
+        // Design N: 32x16x8, dp=2 -> 2048 PEs of size-2 dot units.
+        let g = PeGrid::new(ArraySize::new(32, 16, 8, 2));
+        assert_eq!(g.size.pes(), 2048);
+        assert_eq!(g.size.dsps(), 4096);
+        assert_eq!(g.size.layers(), 4);
+        assert_eq!(g.a_load_units(), 32 * 8);
+        assert_eq!(g.b_load_units(), 8 * 16);
+        assert_eq!(g.a_chains(), (256, 16));
+        assert_eq!(g.b_chains(), (128, 32));
+    }
+
+    #[test]
+    fn balancing_tradeoff_constant_dsps() {
+        // §III-C: keep #DSP constant, decrease d_k0 -> lower memory
+        // throughput, fewer but longer chains.
+        let hi_k = PeGrid::new(ArraySize::new(32, 16, 8, 8)); // L
+        let lo_k = PeGrid::new(ArraySize::new(64, 32, 2, 2)); // G-ish
+        assert_eq!(hi_k.size.dsps(), lo_k.size.dsps());
+        let (mem_hi, chains_hi, len_hi) = hi_k.throughput_balance();
+        let (mem_lo, chains_lo, len_lo) = lo_k.throughput_balance();
+        assert!(mem_lo < mem_hi, "{mem_lo} vs {mem_hi}");
+        assert!(chains_lo < chains_hi);
+        assert!(len_lo > len_hi);
+    }
+
+    #[test]
+    fn chains_kill_fanout() {
+        let g = PeGrid::new(ArraySize::new(64, 32, 2, 2));
+        assert_eq!(g.load_fanout_with_chains(), 1);
+        assert_eq!(g.load_fanout_without_chains(), 64);
+    }
+
+    #[test]
+    fn register_count_single_vs_multi_layer() {
+        let single = PeGrid::new(ArraySize::new(8, 8, 4, 4));
+        let multi = PeGrid::new(ArraySize::new(8, 8, 4, 1));
+        // Multi-layer adds C-forwarding registers.
+        assert!(multi.fpga_registers() > single.fpga_registers());
+    }
+
+    #[test]
+    fn validate_rejects_bad_sizes() {
+        assert!(ArraySize { di0: 0, dj0: 1, dk0: 1, dp: 1 }.validate().is_err());
+        assert!(ArraySize { di0: 1, dj0: 1, dk0: 6, dp: 4 }.validate().is_err());
+        assert!(ArraySize { di0: 1, dj0: 1, dk0: 6, dp: 3 }.validate().is_ok());
+    }
+}

@@ -1,0 +1,62 @@
+//! Small in-tree utilities.
+//!
+//! The offline crate set of this environment has no `rand`, `proptest` or
+//! `criterion`, so this module provides the minimal replacements the rest
+//! of the crate needs: a fast deterministic PRNG ([`rng`]), running
+//! statistics and timing helpers ([`stats`]), and a tiny property-testing
+//! harness with shrinking ([`proptest`]).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Integer ceiling division — used pervasively by the blocking math.
+#[inline]
+pub const fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+/// `true` iff `n` is a power of two (LSU widths, partition counts).
+#[inline]
+pub const fn is_pow2(n: u64) -> bool {
+    n != 0 && (n & (n - 1)) == 0
+}
+
+/// Round `n` up to the next power of two (HLS LSU width synthesis).
+#[inline]
+pub const fn next_pow2(n: u64) -> u64 {
+    if n <= 1 {
+        1
+    } else {
+        1u64 << (64 - (n - 1).leading_zeros())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+        assert_eq!(div_ceil(21504, 512), 42);
+    }
+
+    #[test]
+    fn pow2_predicates() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(3));
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(4), 4);
+        assert_eq!(next_pow2(5), 8);
+        // The HLS rule from §II-A: a 3-float (12 B) access becomes a 16 B LSU.
+        assert_eq!(next_pow2(12), 16);
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal property-based testing harness (in-tree `proptest` replacement).
+//!
+//! Usage:
+//! ```no_run
+//! use systo3d::util::proptest::{Gen, check};
+//! check("addition commutes", 200, |g: &mut Gen| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case draws values through [`Gen`]; on failure the harness re-runs
+//! the failing case with progressively *smaller* generator bounds (simple
+//! bound-shrinking rather than structural shrinking) and reports the seed
+//! so the case is replayable with [`check_seeded`].
+
+use super::rng::Xoshiro256;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Value source handed to property closures.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// 0.0..=1.0 — scales the *spans* of requested ranges during shrinking.
+    scale: f64,
+    /// Log of draws for failure reports.
+    draws: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self { rng: Xoshiro256::seed_from_u64(seed), scale, draws: Vec::new() }
+    }
+
+    /// u64 uniform in `[lo, hi]`; under shrinking the span contracts
+    /// toward `lo`.
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.scale).floor() as u64;
+        let v = self.rng.range(lo, lo + span);
+        self.draws.push(format!("u64({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let span = (hi - lo) * self.scale;
+        let v = lo + self.rng.next_f64() * span;
+        self.draws.push(format!("f64({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.draws.push(format!("bool={v}"));
+        v
+    }
+
+    /// Pick uniformly from a slice of choices (not affected by shrinking —
+    /// enum-like draws shrink poorly by index).
+    pub fn choose<T: Clone + std::fmt::Debug>(&mut self, xs: &[T]) -> T {
+        let v = self.rng.choose(xs).clone();
+        self.draws.push(format!("choose={v:?}"));
+        v
+    }
+
+    /// A vector of `len` values from `f`.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    /// Raw access for custom generators.
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a single case.
+fn run_case<F: Fn(&mut Gen)>(f: &F, seed: u64, scale: f64) -> Result<(), (String, Vec<String>)> {
+    let mut g = Gen::new(seed, scale);
+    let res = catch_unwind(AssertUnwindSafe(|| f(&mut g)));
+    match res {
+        Ok(()) => Ok(()),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            Err((msg, g.draws))
+        }
+    }
+}
+
+/// Run `cases` random cases of `property`, derived from a fixed base seed
+/// (deterministic in CI). Panics with a replay seed on failure.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: u64, property: F) {
+    check_with_seed(name, 0x5EED_0000, cases, property)
+}
+
+/// As [`check`] but with an explicit base seed.
+pub fn check_with_seed<F: Fn(&mut Gen)>(name: &str, base_seed: u64, cases: u64, property: F) {
+    // Quiet the default panic hook while we intentionally catch panics.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure: Option<(u64, String, Vec<String>)> = None;
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
+        if let Err((msg, draws)) = run_case(&property, seed, 1.0) {
+            // Shrink: retry the same seed with smaller range spans.
+            let mut best = (msg, draws, 1.0f64);
+            for &scale in &[0.5, 0.25, 0.1, 0.05, 0.01, 0.0] {
+                if let Err((m, d)) = run_case(&property, seed, scale) {
+                    best = (m, d, scale);
+                }
+            }
+            failure = Some((seed, best.0, best.1));
+            break;
+        }
+    }
+    std::panic::set_hook(prev_hook);
+    if let Some((seed, msg, draws)) = failure {
+        panic!(
+            "property '{name}' failed (replay: check_seeded(\"{name}\", {seed:#x}, ..)):\n  \
+             panic: {msg}\n  draws: {}",
+            draws.join(", ")
+        );
+    }
+}
+
+/// Replay a single failing case by seed (scale 1.0).
+pub fn check_seeded<F: Fn(&mut Gen)>(name: &str, seed: u64, property: F) {
+    if let Err((msg, draws)) = run_case(&property, seed, 1.0) {
+        panic!("replay of '{name}' seed {seed:#x} failed: {msg}\n  draws: {}", draws.join(", "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 100, |g| {
+            let a = g.u64(0, 1_000_000);
+            let b = g.u64(0, 1_000_000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            check("find big", 200, |g| {
+                let x = g.u64(0, 1000);
+                assert!(x < 900, "found {x}");
+            });
+        }));
+        let err = res.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 300, |g| {
+            let v = g.u64(10, 20);
+            assert!((10..=20).contains(&v));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let c = g.choose(&[1, 2, 3]);
+            assert!([1, 2, 3].contains(&c));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(99, 1.0);
+        let mut b = Gen::new(99, 1.0);
+        for _ in 0..50 {
+            assert_eq!(a.u64(0, 1 << 40), b.u64(0, 1 << 40));
+        }
+    }
+}

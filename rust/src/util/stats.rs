@@ -1,0 +1,202 @@
+//! Running statistics and micro-benchmark timing helpers.
+//!
+//! Stand-in for `criterion` (absent offline): the bench binaries under
+//! `rust/benches/` use [`Bench`] for warmup + repeated timed runs and
+//! report median / mean / p95 like criterion's summary line.
+
+use std::time::{Duration, Instant};
+
+/// Welford running mean/variance plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Summary of one benchmark: sorted samples in seconds.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Self {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { name: name.to_string(), samples }
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let idx = ((self.samples.len() - 1) as f64 * p / 100.0).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    /// criterion-style one-liner: `name  time: [median ± ...]`.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} time: [med {:>10} mean {:>10} p95 {:>10}]  n={}",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.mean()),
+            fmt_duration(self.percentile(95.0)),
+            self.samples.len()
+        )
+    }
+}
+
+/// Format seconds human-readably (ns/µs/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".into();
+    }
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Minimal bench driver: warmup then `samples` timed executions.
+pub struct Bench {
+    pub warmup: u32,
+    pub samples: u32,
+    /// Hard cap on total measured time; sampling stops early beyond it.
+    pub max_total: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, samples: 20, max_total: Duration::from_secs(10) }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 5, max_total: Duration::from_secs(5) }
+    }
+
+    /// Run `f`, returning a [`Summary`]. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples as usize);
+        let started = Instant::now();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if started.elapsed() > self.max_total {
+                break;
+            }
+        }
+        Summary::from_samples(name, samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_moments() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        // sample variance of that classic dataset is 32/7
+        assert!((r.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let s = Summary::from_samples("t", (1..=100).map(|i| i as f64).collect());
+        // Nearest-rank on an even count lands on either middle sample.
+        assert!((s.median() - 50.5).abs() <= 0.5, "{}", s.median());
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(3e-9).ends_with("ns"));
+        assert!(fmt_duration(3e-6).ends_with("µs"));
+        assert!(fmt_duration(3e-3).ends_with("ms"));
+        assert!(fmt_duration(3.0).ends_with("s"));
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench { warmup: 1, samples: 3, max_total: Duration::from_secs(1) };
+        let s = b.run("noop", || 1 + 1);
+        assert!(!s.samples.is_empty());
+        assert!(s.report_line().contains("noop"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Failure injection and edge-case robustness across the stack.
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign, OffchipSim};
+use systo3d::coordinator::{GemmRequest, GemmService, Route, ServiceConfig};
+use systo3d::gemm::Matrix;
+use systo3d::runtime::Manifest;
+use systo3d::systolic::ArraySize;
+use std::path::Path;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Manifest / runtime failure modes
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_manifest_rejected() {
+    for doc in [
+        "",                                     // empty
+        "{",                                    // truncated
+        r#"{"format": "hlo-text-v1"}"#,         // missing artifacts
+        r#"{"format": "other", "artifacts": []}"#, // wrong format
+        r#"{"format": "hlo-text-v1", "artifacts": [{"name": "x"}]}"#, // missing fields
+        r#"{"format": "hlo-text-v1", "artifacts":
+            [{"name": "x", "file": "x.hlo.txt", "kind": "weird",
+              "inputs": [[2,2]], "tile": {}}]}"#, // bad kind
+    ] {
+        assert!(Manifest::parse(doc, Path::new("/tmp")).is_err(), "accepted: {doc}");
+    }
+}
+
+#[test]
+fn missing_artifact_dir_is_clean_error() {
+    match systo3d::runtime::Engine::new(Path::new("/nonexistent-dir-xyz")) {
+        Ok(_) => panic!("engine built from a nonexistent directory"),
+        Err(err) => assert!(err.to_string().contains("manifest"), "{err}"),
+    }
+}
+
+#[test]
+fn missing_hlo_file_reported_at_execute() {
+    // A valid manifest pointing at a file that doesn't exist.
+    let dir = std::env::temp_dir().join(format!("systo3d-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "hlo-text-v1", "artifacts":
+            [{"name": "ghost", "file": "ghost.hlo.txt", "kind": "matmul",
+              "inputs": [[2, 2], [2, 2]],
+              "tile": {"di0":2,"dj0":2,"dk0":2,"dp":2,"di1":2,"dj1":2}}]}"#,
+    )
+    .unwrap();
+    let mut engine = systo3d::runtime::Engine::new(&dir).unwrap();
+    let a = Matrix::random(2, 2, 1);
+    let err = engine.execute("ghost", &[&a, &a]).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Coordinator failure modes
+// ---------------------------------------------------------------------
+
+#[test]
+fn service_survives_bad_artifact_dir() {
+    // Engine init fails -> service degrades to fallback, not panic.
+    let svc = GemmService::start(ServiceConfig {
+        artifact_dir: Some("/nonexistent-dir-xyz".into()),
+        max_batch: 2,
+        batch_window: Duration::from_millis(1),
+    })
+    .unwrap();
+    let a = Matrix::random(8, 8, 1);
+    let b = Matrix::random(8, 8, 2);
+    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None });
+    assert_eq!(resp.route, Route::Fallback);
+    assert!(resp.result.is_ok());
+}
+
+#[test]
+fn service_shutdown_on_drop_is_clean() {
+    let svc = GemmService::start(ServiceConfig {
+        artifact_dir: None,
+        max_batch: 2,
+        batch_window: Duration::from_millis(1),
+    })
+    .unwrap();
+    let a = Matrix::random(4, 4, 1);
+    let b = Matrix::random(4, 4, 2);
+    let _ = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None });
+    drop(svc); // must join the engine thread without hanging
+}
+
+#[test]
+fn mismatched_request_shapes_contained() {
+    // A malformed request (inner dims disagree) fails that request with
+    // an error response; the service keeps serving afterwards.
+    let svc = GemmService::start(ServiceConfig {
+        artifact_dir: None,
+        max_batch: 2,
+        batch_window: Duration::from_millis(1),
+    })
+    .unwrap();
+    let a = Matrix::random(8, 4, 1);
+    let b = Matrix::random(8, 8, 2); // 4 != 8: invalid
+    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None });
+    assert!(resp.result.is_err(), "{resp:?}");
+
+    // The service is still alive and correct.
+    let a = Matrix::random(8, 8, 3);
+    let b = Matrix::random(8, 8, 4);
+    let want = systo3d::gemm::matmul(&a, &b);
+    let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None });
+    assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-5);
+    assert_eq!(svc.metrics.snapshot().errors, 1);
+}
+
+// ---------------------------------------------------------------------
+// Simulator edge cases
+// ---------------------------------------------------------------------
+
+#[test]
+fn minimal_geometry_all_simulators() {
+    // 1x1x1 array, 1x1 matrices: every layer must handle the degenerate
+    // case.
+    let array = ArraySize::new(1, 1, 1, 1);
+    let a = Matrix::from_vec(1, 1, vec![3.0]);
+    let b = Matrix::from_vec(1, 1, vec![4.0]);
+    let run = systo3d::systolic::Array3dSim::new(array).multiply(&a, &b);
+    assert_eq!(run.c.data, vec![12.0]);
+    assert_eq!(run.total_macs, 1);
+
+    let blocking = Level1Blocking::new(array, 1, 1);
+    let sim = OffchipSim::new(OffchipDesign {
+        blocking,
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    });
+    let r = sim.simulate_functional(&a, &b);
+    assert_eq!(r.c.unwrap().data, vec![12.0]);
+}
+
+#[test]
+fn extreme_aspect_ratios() {
+    // Tall-skinny and short-fat problems through the functional path.
+    let array = ArraySize::new(4, 4, 2, 2);
+    let blocking = Level1Blocking::new(array, 4, 4);
+    let sim = OffchipSim::new(OffchipDesign {
+        blocking,
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    });
+    let a = Matrix::random(64, 2, 1); // tall-skinny
+    let b = Matrix::random(2, 4, 2);
+    let r = sim.simulate_functional(&a, &b);
+    let want = systo3d::gemm::matmul(&a, &b);
+    assert!(r.c.unwrap().rel_fro_error(&want) < 1e-5);
+}
+
+#[test]
+fn zero_matrices_flow_through() {
+    let array = ArraySize::new(4, 4, 4, 2);
+    let a = Matrix::zeros(4, 8);
+    let b = Matrix::zeros(8, 4);
+    let run = systo3d::systolic::Array3dSim::new(array).multiply(&a, &b);
+    assert!(run.c.data.iter().all(|&v| v == 0.0));
+    assert_eq!(run.total_macs, 4 * 4 * 8); // zeros still occupy the PEs
+}
+
+#[test]
+fn nonfinite_values_propagate_not_crash() {
+    let array = ArraySize::new(2, 2, 2, 1);
+    let mut a = Matrix::random(2, 4, 1);
+    a.set(0, 0, f32::NAN);
+    a.set(1, 1, f32::INFINITY);
+    let b = Matrix::random(4, 2, 2);
+    let run = systo3d::systolic::Array3dSim::new(array).multiply(&a, &b);
+    assert!(run.c.at(0, 0).is_nan());
+}
+
+#[test]
+fn stall_boundary_is_knife_edge() {
+    // Exactly at the eq. 2 boundary there is no stall; one byte past it
+    // there is.
+    use systo3d::memory::GlobalMemory;
+    let m = GlobalMemory::bittware_520n();
+    let at = m.analyze_stall(0, 48.0, 400.0, 1.0);
+    assert_eq!(at.stall, 0.0);
+    let past = m.analyze_stall(0, 48.1, 400.0, 1.0);
+    assert!(past.stall > 0.0 && past.stall < 0.01);
+}

@@ -1,0 +1,165 @@
+//! Integration: cross-module validation of the simulator stack and the
+//! coordinator, independent of the AOT artifacts.
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign, OffchipSim};
+use systo3d::coordinator::{GemmRequest, GemmService, Route, ServiceConfig};
+use systo3d::dse::{paper_catalog, Explorer};
+use systo3d::gemm::{matmul, Matrix};
+use systo3d::systolic::{Array3dSim, ArraySize, Classical2dSim};
+use systo3d::util::proptest::check;
+use std::time::Duration;
+
+/// Tier-1 (cycle) vs tier-2 (event, functional) agreement over random
+/// geometry — the load-bearing validation of DESIGN.md §2.
+#[test]
+fn cycle_sim_vs_event_sim_bitwise() {
+    check("tier1 == tier2 accumulation", 20, |g| {
+        let di0 = g.usize(2, 6) as u32;
+        let dj0 = g.usize(2, 6) as u32;
+        let dp = *g.rng().choose(&[1u32, 2, 4]);
+        let layers = g.usize(1, 2) as u32;
+        let dk0 = dp * layers;
+        let array = ArraySize::new(di0, dj0, dk0, dp);
+        let slabs = g.usize(1, 3);
+        let k = dk0 as usize * slabs;
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(di0 as usize, k, seed);
+        let b = Matrix::random(k, dj0 as usize, seed + 1);
+
+        let cy = Array3dSim::new(array).multiply(&a, &b);
+        let blocking = Level1Blocking::new(array, di0, dj0);
+        let ev = OffchipSim::new(OffchipDesign {
+            blocking,
+            fmax_mhz: 400.0,
+            controller_efficiency: 0.97,
+        })
+        .simulate_functional(&a, &b);
+        assert_eq!(cy.c.data, ev.c.unwrap().data, "array {array:?}");
+    });
+}
+
+/// The 3D array and the classical 2D array agree numerically (different
+/// architectures, same math).
+#[test]
+fn array3d_vs_classical2d() {
+    check("3d ~= 2d", 15, |g| {
+        let di = g.usize(2, 5) as u32;
+        let dj = g.usize(2, 5) as u32;
+        let k = 8usize;
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(di as usize, k, seed);
+        let b = Matrix::random(k, dj as usize, seed + 1);
+        let c3 = Array3dSim::new(ArraySize::new(di, dj, 4, 2)).multiply(&a, &b).c;
+        let c2 = Classical2dSim::new(di, dj).multiply(&a, &b).c;
+        let err = c3.rel_fro_error(&c2);
+        assert!(err < 1e-5, "err {err}");
+    });
+}
+
+/// Definition 2's latency advantage over Definition 1 materializes in
+/// the simulators, not just the formulas.
+#[test]
+fn third_dimension_latency_advantage() {
+    let k = 256usize;
+    let a = Matrix::random(8, k, 1);
+    let b = Matrix::random(k, 8, 2);
+    let c2 = Classical2dSim::new(8, 8).multiply(&a, &b);
+    let c3 = Array3dSim::new(ArraySize::new(8, 8, 8, 8)).multiply(&a, &b);
+    assert!(
+        c3.cycles < c2.cycles / 4,
+        "3D {} vs 2D {} cycles",
+        c3.cycles,
+        c2.cycles
+    );
+    // Same math.
+    assert!(c3.c.rel_fro_error(&c2.c) < 1e-5);
+}
+
+/// Full catalog: every fitted design's simulated efficiency curve is
+/// monotone in d² and brackets the paper's published range.
+#[test]
+fn all_catalog_designs_efficiency_curves() {
+    for spec in paper_catalog() {
+        let (Some(blocking), Some(fmax)) = (spec.level1(), spec.fmax_mhz) else { continue };
+        let sim = OffchipSim::new(OffchipDesign {
+            blocking,
+            fmax_mhz: fmax,
+            controller_efficiency: 0.97,
+        });
+        let djs = spec.sweep_dj2();
+        let mut last = 0.0;
+        for (i, &d2) in spec.sweep.iter().enumerate() {
+            let r = sim.simulate(d2, djs[i], d2);
+            assert!(r.e_d > last, "{}: non-monotone at {d2}", spec.id);
+            assert!(r.e_d > 0.40 && r.e_d < 1.0, "{}: e_D {} at {d2}", spec.id, r.e_d);
+            last = r.e_d;
+        }
+        // Largest size: the paper reports >= 0.89 everywhere.
+        assert!(last > 0.85, "{}: final e_D {last}", spec.id);
+    }
+}
+
+/// DSE reproduces the headline: >99% DSPs, >3.4 TFLOPS peak.
+#[test]
+fn headline_throughput_reproduced() {
+    let ex = Explorer::default();
+    let c = ex.evaluate(ArraySize::new(28, 28, 6, 1));
+    assert!(c.outcome.fits());
+    let tpeak = c.tpeak_gflops.unwrap();
+    assert!(tpeak > 3400.0, "C peak {tpeak}");
+    let u = c.array.dsps() as f64 / 4713.0;
+    assert!(u > 0.99);
+}
+
+/// Coordinator end-to-end without artifacts (pure fallback), including
+/// chained requests and metrics accounting.
+#[test]
+fn coordinator_fallback_end_to_end() {
+    let svc = GemmService::start(ServiceConfig {
+        artifact_dir: None,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+    })
+    .unwrap();
+
+    // A chained request equals ((A·B)·C) exactly.
+    let a = Matrix::random(32, 32, 1);
+    let b = Matrix::random(32, 32, 2);
+    let c = Matrix::random(32, 32, 3);
+    let want = matmul(&matmul(&a, &b), &c);
+    let resp = svc.submit_sync(GemmRequest {
+        id: 9,
+        a: a.clone(),
+        b: b.clone(),
+        chain: Some(c),
+    });
+    assert_eq!(resp.route, Route::Fallback);
+    assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-4);
+
+    // A conforming 512³ job carries an FPGA sim report.
+    let a = Matrix::random(512, 512, 4);
+    let b = Matrix::random(512, 512, 5);
+    let resp = svc.submit_sync(GemmRequest { id: 10, a, b, chain: None });
+    let sim = resp.fpga_sim.expect("512³ conforms to the d1=512 designs");
+    // Paper Table V at d2=512: ~1500 GFLOPS, e_D ~0.46.
+    assert!(sim.gflops > 1200.0 && sim.gflops < 2000.0, "{}", sim.gflops);
+    assert!((sim.e_d - 0.46).abs() < 0.08, "{}", sim.e_d);
+
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.requests, 2);
+    assert_eq!(snap.errors, 0);
+}
+
+/// Throughput-balancing invariant (§III-C): at constant #DSP, raising
+/// d_k0 raises on-chip memory throughput demand and shortens chains.
+#[test]
+fn balancing_invariant_over_catalog() {
+    let g = systo3d::systolic::PeGrid::new(ArraySize::new(64, 32, 2, 2));
+    let l = systo3d::systolic::PeGrid::new(ArraySize::new(32, 16, 8, 8));
+    assert_eq!(g.size.dsps(), l.size.dsps());
+    let (mem_g, chains_g, len_g) = g.throughput_balance();
+    let (mem_l, chains_l, len_l) = l.throughput_balance();
+    assert!(mem_g < mem_l);
+    assert!(chains_g < chains_l);
+    assert!(len_g > len_l);
+}
