@@ -1,0 +1,107 @@
+//! Cluster scaling sweep: one d=21504 GEMM (the paper's largest
+//! problem) sharded over N = 1..8 simulated 520N cards.
+//!
+//! For each fleet size the auto-planner picks the best of the 1D-row,
+//! 2D-grid and 2.5D/SUMMA partitioners by simulated makespan; the table
+//! reports effective TFLOPS, scaling efficiency vs. the N=1 run, bytes
+//! moved, and the per-device utilization band. A second section shows
+//! the communication bill per strategy at N=8, and a third runs a
+//! deliberately heterogeneous fleet to exercise work-stealing.
+//!
+//! ```sh
+//! cargo run --release --example cluster_scaling [-- --d2 21504 --design G]
+//! ```
+
+use systo3d::cli::Args;
+use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::perfmodel::scaling_efficiency;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
+    let id = args.get_str("design", "G").to_uppercase();
+
+    println!("=== cluster scaling: {d2}^3 GEMM over N x design-{id} 520N cards ===\n");
+    println!(
+        "{:>2} {:>11} {:>10} {:>9} {:>10} {:>9} {:>13} {:>7}",
+        "N", "strategy", "makespan", "TFLOPS", "eff vs N=1", "GB moved", "util min-max", "steals"
+    );
+
+    let mut t1 = None;
+    let mut n2_speedup = None;
+    for n in 1..=8usize {
+        let sim = ClusterSim::new(Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?);
+        let (plan, r) = sim
+            .plan_and_report(d2, d2, d2)
+            .ok_or_else(|| anyhow::anyhow!("no plan for {d2} on {n} device(s)"))?;
+        let t1_s = *t1.get_or_insert(r.makespan_seconds);
+        let eff = scaling_efficiency(n as u64, t1_s, r.makespan_seconds);
+        if n == 2 {
+            n2_speedup = Some(t1_s / r.makespan_seconds);
+        }
+        let (umin, umax) = r
+            .per_device
+            .iter()
+            .map(|d| d.utilization)
+            .fold((1.0f64, 0.0f64), |(lo, hi), u| (lo.min(u), hi.max(u)));
+        println!(
+            "{:>2} {:>11} {:>9.3}s {:>9.2} {:>10.3} {:>9.2} {:>6.1}%-{:>5.1}% {:>7}",
+            n,
+            r.strategy,
+            r.makespan_seconds,
+            r.effective_gflops / 1e3,
+            eff,
+            plan.total_bytes_moved() as f64 / 1e9,
+            umin * 100.0,
+            umax * 100.0,
+            r.steals,
+        );
+    }
+
+    let speedup = n2_speedup.expect("N=2 ran");
+    println!("\nN=2 speedup over N=1: {speedup:.2}x");
+    anyhow::ensure!(speedup > 1.8, "expected >1.8x at N=2, measured {speedup:.2}x");
+
+    // --- communication bill per strategy at N=8 -------------------------
+    println!("\n=== bytes moved per strategy (N=8, d2={d2}) ===");
+    let strategies = [
+        PartitionStrategy::Row1D { devices: 8 },
+        PartitionStrategy::auto_grid2d(8),
+        PartitionStrategy::auto_summa25d(8),
+    ];
+    let mut volumes = Vec::new();
+    for s in strategies {
+        let plan = PartitionPlan::new(s, d2, d2, d2).map_err(anyhow::Error::msg)?;
+        println!(
+            "{:>11}: {:>7.2} GB host->dev, {:>6.2} GB dev<->dev, {:>6.2} GB dev->host \
+             ({:.2} FLOP/byte)",
+            s.name(),
+            plan.host_to_device_bytes as f64 / 1e9,
+            plan.device_to_device_bytes as f64 / 1e9,
+            plan.device_to_host_bytes as f64 / 1e9,
+            plan.flops_per_byte(),
+        );
+        volumes.push((s.name(), plan.total_bytes_moved()));
+    }
+    let row1d = volumes[0].1;
+    let summa = volumes[2].1;
+    anyhow::ensure!(
+        summa < row1d,
+        "2.5D should move fewer bytes than 1D-row ({summa} vs {row1d})"
+    );
+    println!(
+        "2.5D moves {:.1}% of 1D-row's traffic",
+        100.0 * summa as f64 / row1d as f64
+    );
+
+    // --- heterogeneous rack: work-stealing in action --------------------
+    println!("\n=== mixed Table-I fleet (N=4, work-stealing) ===");
+    let sim = ClusterSim::new(Fleet::mixed_table1(4));
+    let (_, report) = sim
+        .plan_and_report(d2, d2, d2)
+        .ok_or_else(|| anyhow::anyhow!("no plan for the mixed fleet"))?;
+    println!("{}", report.render());
+
+    println!("cluster_scaling OK");
+    Ok(())
+}

@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         artifact_dir: Some(artifact_dir),
         max_batch: 8,
         batch_window: Duration::from_millis(2),
+        ..Default::default()
     })?;
 
     // Workload: the default serving trace — artifact-backed 256³/512³/64³
@@ -62,6 +63,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut artifact_jobs = 0u64;
     let mut fallback_jobs = 0u64;
+    let mut sharded_jobs = 0u64;
     let mut sim_fpga_seconds = 0.0;
     let mut sim_fpga_flops = 0u64;
     let mut checked = 0u64;
@@ -71,6 +73,7 @@ fn main() -> anyhow::Result<()> {
         match resp.route {
             Route::Artifact(_) => artifact_jobs += 1,
             Route::Fallback => fallback_jobs += 1,
+            Route::Sharded => sharded_jobs += 1,
         }
         // Verify every result against the oracle.
         let mut want = matmul_blocked(&va, &vb);
@@ -93,7 +96,10 @@ fn main() -> anyhow::Result<()> {
     println!("requests:           {n_requests} ({checked} verified against oracle)");
     println!("offered load:       {offered:.2} GFLOPS at the trace's 50 req/s arrival rate");
     println!("wall time:          {wall:.3} s  ({:.1} req/s)", n_requests as f64 / wall);
-    println!("routes:             {artifact_jobs} artifact (PJRT), {fallback_jobs} fallback (CPU GEMM)");
+    println!(
+        "routes:             {artifact_jobs} artifact (PJRT), {fallback_jobs} fallback (CPU GEMM), \
+         {sharded_jobs} sharded (cluster)"
+    );
     println!("batches:            {}", snap.batches);
     println!("host throughput:    {:.2} GFLOPS functional", snap.flops as f64 / wall / 1e9);
     println!("latency:            {}", lat.report_line());

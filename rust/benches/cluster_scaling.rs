@@ -1,0 +1,59 @@
+//! Bench: the cluster layer on a d=21504-class problem.
+//!
+//! Times the planner + event-level cluster simulation for N = 1, 2, 4, 8
+//! devices (host-side cost of the sharded route's timing path) and
+//! reports the *simulated* TFLOPS and scaling efficiency each fleet
+//! achieves — the numbers the ROADMAP's multi-device story is judged by.
+//!
+//! ```sh
+//! cargo bench --bench cluster_scaling
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::perfmodel::scaling_efficiency;
+
+fn main() {
+    let b = common::bench();
+    let d2 = 21504u64;
+
+    common::section("cluster: planner + event simulation host cost");
+    for n in [1usize, 2, 4, 8] {
+        let sim = ClusterSim::new(Fleet::homogeneous(n, "G").expect("design G"));
+        let s = b.run(&format!("plan_and_report n={n} d2={d2}"), || {
+            sim.plan_and_report(d2, d2, d2).expect("plan").1.makespan_seconds
+        });
+        common::report(&s);
+    }
+
+    common::section("cluster: simulated TFLOPS and scaling efficiency");
+    let mut t1 = None;
+    for n in [1usize, 2, 4, 8] {
+        let sim = ClusterSim::new(Fleet::homogeneous(n, "G").expect("design G"));
+        let (_, r) = sim.plan_and_report(d2, d2, d2).expect("plan");
+        let t1_s = *t1.get_or_insert(r.makespan_seconds);
+        println!(
+            "n={n}: {:>9} {:.3} s makespan, {:.2} simulated TFLOPS, \
+             scaling eff {:.3}, {} steals",
+            r.strategy,
+            r.makespan_seconds,
+            r.effective_gflops / 1e3,
+            scaling_efficiency(n as u64, t1_s, r.makespan_seconds),
+            r.steals,
+        );
+    }
+
+    common::section("cluster: partitioner cost per strategy (n=8)");
+    for strategy in [
+        PartitionStrategy::Row1D { devices: 8 },
+        PartitionStrategy::auto_grid2d(8),
+        PartitionStrategy::auto_summa25d(8),
+    ] {
+        let s = b.run(&format!("partition {} d2={d2}", strategy.name()), || {
+            PartitionPlan::new(strategy, d2, d2, d2).expect("plan").total_bytes_moved()
+        });
+        common::report(&s);
+    }
+}

@@ -91,6 +91,7 @@ fn main() {
         },
         max_batch: 8,
         batch_window: Duration::from_micros(200),
+        ..Default::default()
     })
     .expect("service");
     let s = b.run("submit_sync 64³", || {

@@ -79,6 +79,19 @@ impl Level1Blocking {
         Ok(())
     }
 
+    /// Round off-chip extents *up* to the nearest sizes this blocking
+    /// accepts (multiples of d_i1, d_j1, d_k0). The cluster scheduler
+    /// times irregular shards as if zero-padded to the padded extents —
+    /// exactly what the HLS kernel would do with a partial edge block.
+    pub fn pad_offchip(&self, di2: u64, dj2: u64, dk2: u64) -> (u64, u64, u64) {
+        let up = |v: u64, m: u64| crate::util::div_ceil(v.max(1), m) * m;
+        (
+            up(di2, self.di1 as u64),
+            up(dj2, self.dj1 as u64),
+            up(dk2, self.array.dk0 as u64),
+        )
+    }
+
     /// On-chip bytes needed: double-buffered A/B staging plus the C
     /// block (for the M20K budget check).
     pub fn onchip_floats(&self) -> u64 {

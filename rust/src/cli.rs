@@ -55,6 +55,10 @@ impl Args {
         }
     }
 
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
@@ -108,5 +112,15 @@ mod tests {
     fn bad_int_reported() {
         let a = parse("simulate --d2 xyz");
         assert!(a.get_u64("d2", 0).is_err());
+    }
+
+    #[test]
+    fn cluster_subcommand_options() {
+        let a = parse("cluster --devices 8 --d2 21504 --strategy 2.5d --mix");
+        assert_eq!(a.subcommand.as_deref(), Some("cluster"));
+        assert_eq!(a.get_usize("devices", 4).unwrap(), 8);
+        assert_eq!(a.get_u64("d2", 0).unwrap(), 21504);
+        assert_eq!(a.get_str("strategy", "auto"), "2.5d");
+        assert!(a.flag("mix"));
     }
 }

@@ -1,0 +1,425 @@
+//! A fleet of simulated 520N cards and the cluster-level simulator.
+//!
+//! Each device is one [`OffchipDesign`] — fleets may mix Table-I
+//! designs (a heterogeneous rack), and the scheduler's work-stealing
+//! naturally shifts shards toward the faster cards. Shard timing runs
+//! through the same [`OffchipSim`] event model as single-card requests,
+//! on extents padded up to the device's blocking (a partial edge shard
+//! is timed as its zero-padded block, like the HLS kernel would run it).
+
+use super::interconnect::Interconnect;
+use super::partition::{PartitionPlan, PartitionStrategy, Shard};
+use super::scheduler::{run_schedule, ScheduleOutcome};
+use crate::blocked::{OffchipDesign, OffchipSim};
+use crate::dse::configs::fitted_designs;
+use crate::gemm::Matrix;
+use crate::perfmodel::flop_count;
+
+/// One card of the fleet.
+#[derive(Clone, Debug)]
+pub struct ClusterDevice {
+    pub id: String,
+    pub design: OffchipDesign,
+}
+
+/// The rack: N simulated 520N cards.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub devices: Vec<ClusterDevice>,
+}
+
+impl Fleet {
+    /// N identical cards running one Table-I design (by catalog id).
+    pub fn homogeneous(n: usize, design_id: &str) -> Result<Self, String> {
+        let spec = fitted_designs()
+            .into_iter()
+            .find(|d| d.id == design_id)
+            .ok_or_else(|| format!("unknown or unfitted design {design_id}"))?;
+        let design = OffchipDesign {
+            blocking: spec.level1().ok_or_else(|| format!("design {design_id} has no blocking"))?,
+            fmax_mhz: spec.fmax_mhz.unwrap(),
+            controller_efficiency: 0.97,
+        };
+        Ok(Self::uniform(n, design_id, design))
+    }
+
+    /// N identical cards from an explicit design.
+    pub fn uniform(n: usize, tag: &str, design: OffchipDesign) -> Self {
+        let devices = (0..n)
+            .map(|i| ClusterDevice { id: format!("{tag}{i}"), design })
+            .collect();
+        Self { devices }
+    }
+
+    /// N cards cycling through the fitted Table-I designs, highest peak
+    /// first — a deliberately heterogeneous rack.
+    pub fn mixed_table1(n: usize) -> Self {
+        let mut specs: Vec<(&'static str, OffchipDesign)> = fitted_designs()
+            .into_iter()
+            .filter_map(|d| {
+                let design = OffchipDesign {
+                    blocking: d.level1()?,
+                    fmax_mhz: d.fmax_mhz?,
+                    controller_efficiency: 0.97,
+                };
+                Some((d.id, design))
+            })
+            .collect();
+        specs.sort_by(|a, b| b.1.peak_gflops().partial_cmp(&a.1.peak_gflops()).unwrap());
+        let devices = (0..n)
+            .map(|i| {
+                let (id, design) = specs[i % specs.len()];
+                ClusterDevice { id: format!("{id}{i}"), design }
+            })
+            .collect();
+        Self { devices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Sum of eq. 5 peaks over the rack, in GFLOPS.
+    pub fn aggregate_peak_gflops(&self) -> f64 {
+        self.devices.iter().map(|d| d.design.peak_gflops()).sum()
+    }
+}
+
+/// Per-device slice of a [`ClusterReport`].
+#[derive(Clone, Debug)]
+pub struct DeviceReport {
+    pub id: String,
+    pub shards: usize,
+    pub stolen: usize,
+    pub transfer_seconds: f64,
+    pub compute_seconds: f64,
+    pub card_seconds: f64,
+    pub finish_seconds: f64,
+    /// Compute-busy fraction of the makespan.
+    pub utilization: f64,
+    pub peak_gflops: f64,
+}
+
+/// Aggregate outcome of one sharded GEMM.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub strategy: &'static str,
+    pub devices: usize,
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    pub shards: usize,
+    pub steals: usize,
+    pub makespan_seconds: f64,
+    /// Paper-convention throughput over the whole problem.
+    pub effective_gflops: f64,
+    /// N·single-card peak for this rack.
+    pub aggregate_peak_gflops: f64,
+    /// effective / aggregate peak — the cluster analogue of e_D.
+    pub cluster_efficiency: f64,
+    pub host_to_device_bytes: u64,
+    pub device_to_device_bytes: u64,
+    pub device_to_host_bytes: u64,
+    /// Device bounding the critical path.
+    pub critical_device: usize,
+    pub per_device: Vec<DeviceReport>,
+}
+
+impl ClusterReport {
+    /// Multi-line human-readable summary (CLI / examples).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "cluster {} on {} device(s): ({} x {}) * ({} x {})\n\
+             shards: {} ({} stolen)  makespan: {:.4} s\n\
+             effective: {:.0} GFLOPS of {:.0} aggregate peak (e_C = {:.3})\n\
+             bytes: {:.1} MB host->dev, {:.1} MB dev<->dev, {:.1} MB dev->host\n",
+            self.strategy,
+            self.devices,
+            self.m,
+            self.k,
+            self.k,
+            self.n,
+            self.shards,
+            self.steals,
+            self.makespan_seconds,
+            self.effective_gflops,
+            self.aggregate_peak_gflops,
+            self.cluster_efficiency,
+            self.host_to_device_bytes as f64 / 1e6,
+            self.device_to_device_bytes as f64 / 1e6,
+            self.device_to_host_bytes as f64 / 1e6,
+        );
+        for (i, d) in self.per_device.iter().enumerate() {
+            out.push_str(&format!(
+                "  {:<4} {:>2} shard(s) {:>2} stolen  xfer {:>8.4} s  compute {:>8.4} s  \
+                 util {:>5.1}%{}\n",
+                d.id,
+                d.shards,
+                d.stolen,
+                d.transfer_seconds,
+                d.compute_seconds,
+                d.utilization * 100.0,
+                if i == self.critical_device { "  <- critical path" } else { "" },
+            ));
+        }
+        out
+    }
+}
+
+/// The cluster simulator: a fleet plus its fabric.
+#[derive(Clone, Debug)]
+pub struct ClusterSim {
+    pub fleet: Fleet,
+    pub interconnect: Interconnect,
+}
+
+impl ClusterSim {
+    pub fn new(fleet: Fleet) -> Self {
+        Self { fleet, interconnect: Interconnect::pcie_cluster() }
+    }
+
+    /// Seconds for `shard` on fleet device `d`: the shard's extents are
+    /// padded up to the device's blocking and run through the same
+    /// event-level simulator as single-card requests.
+    pub fn shard_seconds(&self, d: usize, shard: &Shard) -> f64 {
+        let design = self.fleet.devices[d].design;
+        let (pi, pj, pk) = design.blocking.pad_offchip(shard.rows, shard.cols, shard.ks);
+        OffchipSim::new(design).simulate(pi, pj, pk).seconds
+    }
+
+    /// Timing-only run of a plan.
+    pub fn simulate(&self, plan: &PartitionPlan) -> ClusterReport {
+        assert!(!self.fleet.is_empty(), "empty fleet");
+        let outcome = run_schedule(plan, self.fleet.len(), &self.interconnect, |d, s| {
+            self.shard_seconds(d, s)
+        });
+        self.report(plan, outcome)
+    }
+
+    /// Timing + functional run (small sizes only).
+    pub fn simulate_functional(
+        &self,
+        plan: &PartitionPlan,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> (ClusterReport, Matrix) {
+        let report = self.simulate(plan);
+        let c = plan.execute_functional(a, b);
+        (report, c)
+    }
+
+    /// Candidate plans for this fleet size, one per strategy family,
+    /// dropping candidates whose shard set duplicates an earlier one
+    /// (e.g. `Summa25D { c: 1 }` degenerates to the 2D grid).
+    pub fn candidate_plans(&self, m: u64, k: u64, n: u64) -> Vec<PartitionPlan> {
+        let n_dev = self.fleet.len() as u64;
+        let strategies = [
+            PartitionStrategy::Row1D { devices: n_dev },
+            PartitionStrategy::auto_grid2d(n_dev),
+            PartitionStrategy::auto_summa25d(n_dev),
+        ];
+        let mut plans: Vec<PartitionPlan> = Vec::new();
+        for s in strategies {
+            if let Ok(p) = PartitionPlan::new(s, m, k, n) {
+                if !plans.iter().any(|q| q.shards == p.shards) {
+                    plans.push(p);
+                }
+            }
+        }
+        plans
+    }
+
+    /// Simulate every candidate once and return the plan with the
+    /// smallest makespan (ties go to fewer bytes moved) together with
+    /// its report, so callers need not re-run the schedule.
+    pub fn plan_and_report(
+        &self,
+        m: u64,
+        k: u64,
+        n: u64,
+    ) -> Option<(PartitionPlan, ClusterReport)> {
+        self.candidate_plans(m, k, n)
+            .into_iter()
+            .map(|p| {
+                let r = self.simulate(&p);
+                (p, r)
+            })
+            .min_by(|(pa, ra), (pb, rb)| {
+                ra.makespan_seconds
+                    .total_cmp(&rb.makespan_seconds)
+                    .then(pa.total_bytes_moved().cmp(&pb.total_bytes_moved()))
+            })
+    }
+
+    /// The best plan by simulated makespan (see [`Self::plan_and_report`]).
+    pub fn auto_plan(&self, m: u64, k: u64, n: u64) -> Option<PartitionPlan> {
+        self.plan_and_report(m, k, n).map(|(p, _)| p)
+    }
+
+    fn report(&self, plan: &PartitionPlan, outcome: ScheduleOutcome) -> ClusterReport {
+        let makespan = outcome.makespan_seconds;
+        let per_device: Vec<DeviceReport> = outcome
+            .per_device
+            .iter()
+            .zip(&self.fleet.devices)
+            .map(|(t, dev)| DeviceReport {
+                id: dev.id.clone(),
+                shards: t.shards,
+                stolen: t.stolen,
+                transfer_seconds: t.transfer_seconds,
+                compute_seconds: t.compute_seconds,
+                card_seconds: t.card_seconds,
+                finish_seconds: t.finish_seconds,
+                utilization: if makespan > 0.0 { t.compute_seconds / makespan } else { 0.0 },
+                peak_gflops: dev.design.peak_gflops(),
+            })
+            .collect();
+        let effective_gflops =
+            flop_count(plan.m, plan.n, plan.k) as f64 / makespan.max(f64::MIN_POSITIVE) / 1e9;
+        let aggregate_peak_gflops = self.fleet.aggregate_peak_gflops();
+        ClusterReport {
+            strategy: plan.strategy.name(),
+            devices: self.fleet.len(),
+            m: plan.m,
+            k: plan.k,
+            n: plan.n,
+            shards: plan.shards.len(),
+            steals: outcome.steals,
+            makespan_seconds: makespan,
+            effective_gflops,
+            aggregate_peak_gflops,
+            cluster_efficiency: effective_gflops / aggregate_peak_gflops,
+            host_to_device_bytes: plan.host_to_device_bytes,
+            device_to_device_bytes: plan.device_to_device_bytes,
+            device_to_host_bytes: plan.device_to_host_bytes,
+            critical_device: outcome.critical_device(),
+            per_device,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul_blocked;
+
+    #[test]
+    fn homogeneous_fleet_peaks() {
+        let f = Fleet::homogeneous(4, "G").unwrap();
+        assert_eq!(f.len(), 4);
+        // Design G peak is 3260 GFLOPS (Table I).
+        assert!((f.aggregate_peak_gflops() - 4.0 * 3260.4).abs() < 4.0);
+        assert!(Fleet::homogeneous(2, "A").is_err(), "A failed the fitter");
+        assert!(Fleet::homogeneous(2, "Z").is_err());
+    }
+
+    #[test]
+    fn mixed_fleet_is_heterogeneous() {
+        let f = Fleet::mixed_table1(3);
+        assert_eq!(f.len(), 3);
+        // Highest-peak design first: F (3673 GFLOPS).
+        assert!(f.devices[0].id.starts_with('F'), "{}", f.devices[0].id);
+        let d0 = f.devices[0].design.blocking.array;
+        let d1 = f.devices[1].design.blocking.array;
+        assert_ne!(d0, d1, "fleet should mix designs");
+    }
+
+    #[test]
+    fn single_device_matches_offchip_sim_magnitude() {
+        // One card, one shard: makespan = transfer + compute + writeback,
+        // so effective GFLOPS sits below but near the single-card sim.
+        let sim = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+        let d = 8192;
+        let plan = PartitionPlan::new(PartitionStrategy::Row1D { devices: 1 }, d, d, d).unwrap();
+        let report = sim.simulate(&plan);
+        let solo = OffchipSim::new(sim.fleet.devices[0].design).simulate(d, d, d);
+        assert!(report.makespan_seconds > solo.seconds);
+        assert!(report.effective_gflops < solo.gflops);
+        assert!(report.effective_gflops > 0.5 * solo.gflops, "{}", report.effective_gflops);
+    }
+
+    #[test]
+    fn two_cards_scale_past_1_8x() {
+        let d = 21504;
+        let t1 = {
+            let sim = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+            let plan =
+                PartitionPlan::new(PartitionStrategy::Row1D { devices: 1 }, d, d, d).unwrap();
+            sim.simulate(&plan).makespan_seconds
+        };
+        let sim = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+        let t2 = sim.plan_and_report(d, d, d).unwrap().1.makespan_seconds;
+        assert!(t1 / t2 > 1.8, "2-card speedup {:.2}", t1 / t2);
+    }
+
+    #[test]
+    fn utilization_and_critical_path_reported() {
+        let sim = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+        let (_, r) = sim.plan_and_report(21504, 21504, 21504).unwrap();
+        assert_eq!(r.per_device.len(), 4);
+        assert!(r.critical_device < 4);
+        for d in &r.per_device {
+            assert!(d.utilization > 0.5 && d.utilization <= 1.0, "{d:?}");
+        }
+        assert!(r.cluster_efficiency > 0.4 && r.cluster_efficiency < 1.0);
+        let text = r.render();
+        assert!(text.contains("critical path"));
+    }
+
+    #[test]
+    fn candidate_plans_dedupe_degenerate_strategies() {
+        // 2 devices: Row1D{2}, Grid2D{2,1} and Summa{2,1,1} all carve
+        // the same two row bands -> one candidate survives.
+        let sim2 = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+        assert_eq!(sim2.candidate_plans(4096, 4096, 4096).len(), 1);
+        // 4 devices: Summa{2,2,1} duplicates Grid2D{2,2} -> two.
+        let sim4 = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+        assert_eq!(sim4.candidate_plans(4096, 4096, 4096).len(), 2);
+        // 8 devices: all three families are genuinely distinct.
+        let sim8 = ClusterSim::new(Fleet::homogeneous(8, "G").unwrap());
+        assert_eq!(sim8.candidate_plans(4096, 4096, 4096).len(), 3);
+    }
+
+    #[test]
+    fn plan_and_report_returns_winning_report() {
+        let sim = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+        let (plan, report) = sim.plan_and_report(21504, 21504, 21504).unwrap();
+        let direct = sim.simulate(&plan);
+        assert_eq!(report.makespan_seconds, direct.makespan_seconds);
+        assert_eq!(report.strategy, direct.strategy);
+    }
+
+    #[test]
+    fn functional_path_bit_exact() {
+        let design = OffchipDesign {
+            blocking: crate::blocked::Level1Blocking::new(
+                crate::systolic::ArraySize::new(4, 4, 2, 2),
+                8,
+                8,
+            ),
+            fmax_mhz: 400.0,
+            controller_efficiency: 0.97,
+        };
+        let sim = ClusterSim::new(Fleet::uniform(3, "mini", design));
+        let a = Matrix::random(19, 23, 1);
+        let b = Matrix::random(23, 17, 2);
+        let plan = sim.auto_plan(19, 23, 17).unwrap();
+        let (report, c) = sim.simulate_functional(&plan, &a, &b);
+        assert!(report.makespan_seconds > 0.0);
+        assert_eq!(c.data, matmul_blocked(&a, &b).data);
+    }
+
+    #[test]
+    fn shard_padding_times_irregular_extents() {
+        let sim = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+        let shard = Shard { device: 0, row0: 0, rows: 700, col0: 0, cols: 900, k0: 0, ks: 333 };
+        // Pads to (1024, 1024, 334) for design G's (512, 512, 2) grid.
+        let t = sim.shard_seconds(0, &shard);
+        let padded = OffchipSim::new(sim.fleet.devices[0].design).simulate(1024, 1024, 334);
+        assert_eq!(t, padded.seconds);
+    }
+}

@@ -1,0 +1,117 @@
+//! Cluster interconnect: the links that move shards and partials.
+//!
+//! Two link classes, both modeled with the [`crate::memory::DdrChannel`]
+//! idiom (peak rate × controller/protocol efficiency):
+//!
+//! * **host link** — PCIe Gen3 x8, the 520N's host interface: 8 GT/s ×
+//!   8 lanes × 128b/130b ≈ 7.88 GB/s raw, derated by a protocol
+//!   efficiency for TLP/flow-control overhead.
+//! * **card link** — one QSFP28 100 Gb serial port (the 520N carries
+//!   four); partial-C reductions ride it without a host round trip.
+//!
+//! Each device owns one host link and one card link; transfers on
+//! different devices proceed in parallel, transfers on one link
+//! serialize.
+
+use crate::memory::DdrChannel;
+
+/// A point-to-point link: peak throughput derated by efficiency.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// Peak theoretical throughput in MB/s (10^6 bytes).
+    pub peak_mb_s: f64,
+    /// Protocol efficiency in (0, 1].
+    pub efficiency: f64,
+}
+
+impl Link {
+    /// PCIe Gen3 x8: 7880 MB/s raw, ~85% effective after TLP overhead.
+    pub fn pcie_gen3_x8() -> Self {
+        Self { peak_mb_s: 7_880.0, efficiency: 0.85 }
+    }
+
+    /// One QSFP28 100 Gb port: 12500 MB/s raw, ~90% after framing.
+    pub fn qsfp28_100g() -> Self {
+        Self { peak_mb_s: 12_500.0, efficiency: 0.90 }
+    }
+
+    pub fn effective_bytes_per_s(&self) -> f64 {
+        // Reuse the DDR channel arithmetic so every link in the stack
+        // derates identically.
+        DdrChannel { peak_mb_s: self.peak_mb_s }.effective_bytes_per_s(self.efficiency)
+    }
+
+    /// Seconds to move `bytes` over this link.
+    pub fn seconds_for_bytes(&self, bytes: u64) -> f64 {
+        DdrChannel { peak_mb_s: self.peak_mb_s }.seconds_for_bytes(self.efficiency, bytes)
+    }
+}
+
+/// The fleet fabric: per-device host and card links (symmetric).
+#[derive(Clone, Copy, Debug)]
+pub struct Interconnect {
+    pub host: Link,
+    pub card: Link,
+}
+
+impl Interconnect {
+    /// The default 520N cluster fabric: PCIe host links, one QSFP28
+    /// card↔card link per device.
+    pub fn pcie_cluster() -> Self {
+        Self { host: Link::pcie_gen3_x8(), card: Link::qsfp28_100g() }
+    }
+
+    pub fn host_seconds(&self, bytes: u64) -> f64 {
+        self.host.seconds_for_bytes(bytes)
+    }
+
+    pub fn card_seconds(&self, bytes: u64) -> f64 {
+        self.card.seconds_for_bytes(bytes)
+    }
+}
+
+impl Default for Interconnect {
+    fn default() -> Self {
+        Self::pcie_cluster()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcie_rates() {
+        let l = Link::pcie_gen3_x8();
+        // ~6.7 GB/s effective.
+        let gb_s = l.effective_bytes_per_s() / 1e9;
+        assert!((gb_s - 6.698).abs() < 0.01, "{gb_s}");
+        // A 1 GiB transfer takes ~0.16 s.
+        let t = l.seconds_for_bytes(1 << 30);
+        assert!(t > 0.15 && t < 0.17, "{t}");
+    }
+
+    #[test]
+    fn card_link_faster_than_host() {
+        let ic = Interconnect::pcie_cluster();
+        let bytes = 256u64 << 20;
+        assert!(ic.card_seconds(bytes) < ic.host_seconds(bytes));
+    }
+
+    #[test]
+    fn host_link_slower_than_one_ddr_channel() {
+        // The ordering the whole cluster layer leans on: PCIe feeds at
+        // less than half a DDR4 channel, so shard transfers matter.
+        let pcie = Link::pcie_gen3_x8().effective_bytes_per_s();
+        let ddr = DdrChannel::ddr4_2400().effective_bytes_per_s(0.97);
+        assert!(pcie < ddr / 2.0, "pcie {pcie} vs ddr {ddr}");
+    }
+
+    #[test]
+    fn seconds_scale_linearly() {
+        let l = Link::qsfp28_100g();
+        let one = l.seconds_for_bytes(1_000_000);
+        let ten = l.seconds_for_bytes(10_000_000);
+        assert!((ten / one - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,36 @@
+//! Multi-FPGA cluster layer: shard one large GEMM across a fleet of
+//! simulated 520N cards.
+//!
+//! One Stratix 10 saturates at ~3 TFLOPS (Table I); serving
+//! production-scale traffic means going multi-device. This subsystem
+//! models that next level of the hierarchy with the same
+//! simulate-first discipline as the single-card stack:
+//!
+//! * [`partition`] — 1D-row, 2D-grid and communication-avoiding
+//!   2.5D/SUMMA partitioners (Shen et al.; de Fine Licht et al.) that
+//!   emit per-device sub-GEMM [`Shard`]s plus the host↔device and
+//!   device↔device transfer volumes each plan implies.
+//! * [`interconnect`] — PCIe Gen3 x8 host links and a QSFP28 card↔card
+//!   link, in the [`crate::memory::DdrChannel`] peak-times-efficiency
+//!   idiom.
+//! * [`scheduler`] — per-device work queues with work-stealing and
+//!   double-buffered overlap of shard DMA with compute; every shard is
+//!   timed by the device's [`crate::blocked::OffchipSim`].
+//! * [`fleet`] — N (possibly heterogeneous Table-I) designs and the
+//!   [`ClusterSim`] front door producing a [`ClusterReport`]
+//!   (per-device utilization, critical path, effective TFLOPS vs.
+//!   N·single-card peak).
+//!
+//! Functional mode reduces k-split partial C tiles by *continuing* the
+//! blocked accumulation in ascending-k order, so sharded results are
+//! bit-exact against [`crate::gemm::matmul_blocked`].
+
+pub mod fleet;
+pub mod interconnect;
+pub mod partition;
+pub mod scheduler;
+
+pub use fleet::{ClusterDevice, ClusterReport, ClusterSim, DeviceReport, Fleet};
+pub use interconnect::{Interconnect, Link};
+pub use partition::{PartitionPlan, PartitionStrategy, Shard};
+pub use scheduler::{run_schedule, DeviceTrace, ScheduleOutcome};

@@ -1,0 +1,495 @@
+//! GEMM partitioners: split one (m × k) · (k × n) problem into
+//! per-device sub-GEMM shards, plus the transfer volumes each plan
+//! implies.
+//!
+//! Three families, in increasing communication sophistication:
+//!
+//! * **1D row** — each device owns a band of C rows; B is broadcast to
+//!   every device. Trivially correct, but the broadcast makes
+//!   host↔device traffic grow linearly with the device count.
+//! * **2D grid** — a p × q device grid; device (i, j) owns C tile
+//!   (i, j), receiving one A row-band (replicated across its grid row)
+//!   and one B column-band (replicated down its grid column). This is
+//!   the classical SUMMA owner-computes layout.
+//! * **2.5D / SUMMA-c** — additionally splits the contraction dimension
+//!   into c slices (the "replication depth" of communication-avoiding
+//!   GEMM, de Fine Licht et al.): device (i, j, l) computes a *partial*
+//!   C tile over k slice l, and the c partials per tile are reduced over
+//!   the card↔card link. Replication trades a smaller host broadcast
+//!   for device↔device reduction traffic — the communication lower
+//!   bound favours it once the fleet outgrows a near-square grid.
+//!
+//! Every partitioner handles extents that do not divide evenly: the
+//! remainder is spread one row/column/slice at a time over the leading
+//! parts, and empty parts are dropped.
+//!
+//! Functional semantics: [`PartitionPlan::execute_functional`] reduces
+//! k-split partials by *continuing* the blocked accumulation
+//! ([`crate::gemm::matmul_blocked_into`]) in ascending-k order, so the
+//! sharded result is **bit-exact** against the dense
+//! [`crate::gemm::matmul_blocked`] for every strategy and shape.
+
+use crate::gemm::{matmul_blocked_into, Matrix};
+
+const F32_BYTES: u64 = 4;
+
+/// How to carve the iteration space over the fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Split C rows over all devices; broadcast B.
+    Row1D { devices: u64 },
+    /// p × q owner-computes grid.
+    Grid2D { p: u64, q: u64 },
+    /// p × q grid with the contraction split into c slices.
+    Summa25D { p: u64, q: u64, c: u64 },
+}
+
+impl PartitionStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Row1D { .. } => "1d-row",
+            PartitionStrategy::Grid2D { .. } => "2d-grid",
+            PartitionStrategy::Summa25D { .. } => "2.5d-summa",
+        }
+    }
+
+    /// Devices the strategy wants (actual plans may use fewer when an
+    /// extent is smaller than the grid).
+    pub fn device_count(&self) -> u64 {
+        match *self {
+            PartitionStrategy::Row1D { devices } => devices,
+            PartitionStrategy::Grid2D { p, q } => p * q,
+            PartitionStrategy::Summa25D { p, q, c } => p * q * c,
+        }
+    }
+
+    /// Near-square p × q factorization of `devices`.
+    pub fn auto_grid2d(devices: u64) -> Self {
+        let (p, q) = near_square(devices);
+        PartitionStrategy::Grid2D { p, q }
+    }
+
+    /// 2.5D with the replication depth c chosen as the divisor of
+    /// `devices` closest to (but not above) its cube root, the grid
+    /// near-square over the rest.
+    pub fn auto_summa25d(devices: u64) -> Self {
+        // f64::cbrt is not correctly rounded; nudge up so perfect
+        // cubes (8 -> 2, 27 -> 3) never floor one short.
+        let mut cbrt = (devices as f64).cbrt().floor() as u64;
+        while (cbrt + 1).pow(3) <= devices {
+            cbrt += 1;
+        }
+        let c = (1..=cbrt.max(1)).rev().find(|c| devices % c == 0).unwrap_or(1);
+        let (p, q) = near_square(devices / c);
+        PartitionStrategy::Summa25D { p, q, c }
+    }
+}
+
+/// Factor n as p·q with p ≥ q and p − q minimal.
+fn near_square(n: u64) -> (u64, u64) {
+    let n = n.max(1);
+    let root = (n as f64).sqrt().floor() as u64;
+    let q = (1..=root.max(1)).rev().find(|d| n % d == 0).unwrap_or(1);
+    (n / q, q)
+}
+
+/// Split `extent` into at most `parts` contiguous nonempty (offset, len)
+/// ranges, spreading the remainder over the leading parts.
+pub fn split_extent(extent: u64, parts: u64) -> Vec<(u64, u64)> {
+    let parts = parts.max(1).min(extent.max(1));
+    let base = extent / parts;
+    let rem = extent % parts;
+    let mut out = Vec::with_capacity(parts as usize);
+    let mut off = 0;
+    for i in 0..parts {
+        let len = base + u64::from(i < rem);
+        if len == 0 {
+            break;
+        }
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
+/// One device's sub-GEMM: C tile rows × cols over k range
+/// [k0, k0 + ks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Initial device assignment (the scheduler may steal it away).
+    pub device: usize,
+    pub row0: u64,
+    pub rows: u64,
+    pub col0: u64,
+    pub cols: u64,
+    pub k0: u64,
+    pub ks: u64,
+}
+
+impl Shard {
+    /// MAC-based FLOP count of the sub-GEMM (2mnk convention — partial
+    /// products count multiply+add even for the paper's 2k−1 formula,
+    /// which only applies to a full contraction).
+    pub fn flops(&self) -> u64 {
+        2 * self.rows * self.cols * self.ks
+    }
+
+    pub fn a_bytes(&self) -> u64 {
+        self.rows * self.ks * F32_BYTES
+    }
+
+    pub fn b_bytes(&self) -> u64 {
+        self.ks * self.cols * F32_BYTES
+    }
+
+    pub fn c_bytes(&self) -> u64 {
+        self.rows * self.cols * F32_BYTES
+    }
+
+    /// Host→device bytes this shard pulls before computing.
+    pub fn input_bytes(&self) -> u64 {
+        self.a_bytes() + self.b_bytes()
+    }
+
+    /// C-tile identity (shards of one tile share it; k-split plans have
+    /// several shards per tile).
+    pub fn tile(&self) -> (u64, u64) {
+        (self.row0, self.col0)
+    }
+}
+
+/// A complete sharding of one GEMM, with its communication bill.
+#[derive(Clone, Debug)]
+pub struct PartitionPlan {
+    pub strategy: PartitionStrategy,
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    /// Distinct devices actually used.
+    pub devices: usize,
+    pub shards: Vec<Shard>,
+    /// A and B traffic into the fleet (replication included).
+    pub host_to_device_bytes: u64,
+    /// Partial-C reduction traffic over the card↔card link.
+    pub device_to_device_bytes: u64,
+    /// C written back to the host.
+    pub device_to_host_bytes: u64,
+}
+
+impl PartitionPlan {
+    pub fn new(strategy: PartitionStrategy, m: u64, k: u64, n: u64) -> Result<Self, String> {
+        if m == 0 || k == 0 || n == 0 {
+            return Err(format!("degenerate GEMM ({m} x {k}) * ({k} x {n})"));
+        }
+        let shards = match strategy {
+            PartitionStrategy::Row1D { devices } => {
+                if devices == 0 {
+                    return Err("Row1D needs at least one device".into());
+                }
+                split_extent(m, devices)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(d, (row0, rows))| Shard {
+                        device: d,
+                        row0,
+                        rows,
+                        col0: 0,
+                        cols: n,
+                        k0: 0,
+                        ks: k,
+                    })
+                    .collect::<Vec<_>>()
+            }
+            PartitionStrategy::Grid2D { p, q } => {
+                if p == 0 || q == 0 {
+                    return Err("Grid2D needs a nonempty grid".into());
+                }
+                let rows = split_extent(m, p);
+                let cols = split_extent(n, q);
+                let q_used = cols.len();
+                let mut out = Vec::with_capacity(rows.len() * cols.len());
+                for (i, &(row0, r)) in rows.iter().enumerate() {
+                    for (j, &(col0, cl)) in cols.iter().enumerate() {
+                        out.push(Shard {
+                            device: i * q_used + j,
+                            row0,
+                            rows: r,
+                            col0,
+                            cols: cl,
+                            k0: 0,
+                            ks: k,
+                        });
+                    }
+                }
+                out
+            }
+            PartitionStrategy::Summa25D { p, q, c } => {
+                if p == 0 || q == 0 || c == 0 {
+                    return Err("Summa25D needs a nonempty grid".into());
+                }
+                let rows = split_extent(m, p);
+                let cols = split_extent(n, q);
+                let slices = split_extent(k, c);
+                let (q_used, c_used) = (cols.len(), slices.len());
+                let mut out = Vec::with_capacity(rows.len() * q_used * c_used);
+                for (i, &(row0, r)) in rows.iter().enumerate() {
+                    for (j, &(col0, cl)) in cols.iter().enumerate() {
+                        for (l, &(k0, ks)) in slices.iter().enumerate() {
+                            out.push(Shard {
+                                device: (i * q_used + j) * c_used + l,
+                                row0,
+                                rows: r,
+                                col0,
+                                cols: cl,
+                                k0,
+                                ks,
+                            });
+                        }
+                    }
+                }
+                out
+            }
+        };
+
+        let devices = shards.iter().map(|s| s.device).max().map_or(0, |d| d + 1);
+        let host_to_device_bytes = shards.iter().map(Shard::input_bytes).sum();
+        // Reduction traffic: every non-first shard of a k-split tile
+        // ships one partial C tile over the card link.
+        let mut tiles: std::collections::BTreeMap<(u64, u64), (u64, u64)> =
+            std::collections::BTreeMap::new();
+        for s in &shards {
+            let e = tiles.entry(s.tile()).or_insert((0, s.c_bytes()));
+            e.0 += 1;
+        }
+        let device_to_device_bytes = tiles.values().map(|&(cnt, bytes)| (cnt - 1) * bytes).sum();
+        let device_to_host_bytes = m * n * F32_BYTES;
+
+        let plan = Self {
+            strategy,
+            m,
+            k,
+            n,
+            devices,
+            shards,
+            host_to_device_bytes,
+            device_to_device_bytes,
+            device_to_host_bytes,
+        };
+        plan.validate_cover()?;
+        Ok(plan)
+    }
+
+    /// All bytes the plan moves across any link.
+    pub fn total_bytes_moved(&self) -> u64 {
+        self.host_to_device_bytes + self.device_to_device_bytes + self.device_to_host_bytes
+    }
+
+    /// Total FLOP over all shards (2mnk convention).
+    pub fn total_flops(&self) -> u64 {
+        self.shards.iter().map(Shard::flops).sum()
+    }
+
+    /// Arithmetic intensity of the plan in FLOP per byte moved — the
+    /// figure of merit communication-avoiding blocking maximizes.
+    pub fn flops_per_byte(&self) -> f64 {
+        self.total_flops() as f64 / self.total_bytes_moved() as f64
+    }
+
+    /// Check the shards tile the m × n × k iteration space exactly:
+    /// every C tile's k ranges are contiguous [0, k), the tiles cover
+    /// the C plane without overlap, and the FLOP total matches.
+    pub fn validate_cover(&self) -> Result<(), String> {
+        let mut tiles: std::collections::BTreeMap<(u64, u64), Vec<&Shard>> = Default::default();
+        for s in &self.shards {
+            if s.row0 + s.rows > self.m || s.col0 + s.cols > self.n || s.k0 + s.ks > self.k {
+                return Err(format!("shard out of bounds: {s:?}"));
+            }
+            if s.rows == 0 || s.cols == 0 || s.ks == 0 {
+                return Err(format!("empty shard: {s:?}"));
+            }
+            tiles.entry(s.tile()).or_default().push(s);
+        }
+        let mut area = 0u64;
+        for ((row0, col0), group) in &tiles {
+            let (rows, cols) = (group[0].rows, group[0].cols);
+            if group.iter().any(|s| s.rows != rows || s.cols != cols) {
+                return Err(format!("tile ({row0},{col0}) has inconsistent extents"));
+            }
+            area += rows * cols;
+            let mut ranges: Vec<(u64, u64)> = group.iter().map(|s| (s.k0, s.ks)).collect();
+            ranges.sort_unstable();
+            let mut next = 0;
+            for (k0, ks) in ranges {
+                if k0 != next {
+                    return Err(format!(
+                        "tile ({row0},{col0}): k gap/overlap at {next} (saw k0={k0})"
+                    ));
+                }
+                next = k0 + ks;
+            }
+            if next != self.k {
+                return Err(format!("tile ({row0},{col0}): k covered to {next} of {}", self.k));
+            }
+        }
+        if area != self.m * self.n {
+            return Err(format!("tiles cover {area} of {} C elements", self.m * self.n));
+        }
+        if self.total_flops() != 2 * self.m * self.n * self.k {
+            return Err("shard FLOP total does not match the dense problem".into());
+        }
+        Ok(())
+    }
+
+    /// Execute the plan functionally: per C tile, fold its k-shards in
+    /// ascending-k order through the accumulating blocked GEMM. The
+    /// result is bit-exact against `matmul_blocked(a, b)` because every
+    /// output element sees the same scalar addition chain (k strictly
+    /// ascending) regardless of how the plan carved the space.
+    pub fn execute_functional(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        assert_eq!((a.rows as u64, a.cols as u64), (self.m, self.k), "A shape");
+        assert_eq!((b.rows as u64, b.cols as u64), (self.k, self.n), "B shape");
+        let mut tiles: std::collections::BTreeMap<(u64, u64), Vec<&Shard>> = Default::default();
+        for s in &self.shards {
+            tiles.entry(s.tile()).or_default().push(s);
+        }
+        let mut c = Matrix::zeros(self.m as usize, self.n as usize);
+        for ((row0, col0), mut group) in tiles {
+            group.sort_by_key(|s| s.k0);
+            let (rows, cols) = (group[0].rows as usize, group[0].cols as usize);
+            let mut acc = Matrix::zeros(rows, cols);
+            for s in group {
+                let a_blk = a.submatrix(s.row0 as usize, s.k0 as usize, rows, s.ks as usize);
+                let b_blk = b.submatrix(s.k0 as usize, s.col0 as usize, s.ks as usize, cols);
+                matmul_blocked_into(&mut acc, &a_blk, &b_blk);
+            }
+            c.write_submatrix(row0 as usize, col0 as usize, &acc);
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{matmul_blocked, Matrix};
+
+    #[test]
+    fn split_extent_spreads_remainder() {
+        assert_eq!(split_extent(10, 3), vec![(0, 4), (4, 3), (7, 3)]);
+        assert_eq!(split_extent(4, 4), vec![(0, 1), (1, 1), (2, 1), (3, 1)]);
+        // More parts than extent: empty parts dropped.
+        assert_eq!(split_extent(2, 5), vec![(0, 1), (1, 1)]);
+        assert_eq!(split_extent(7, 1), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn near_square_factorizations() {
+        assert_eq!(near_square(8), (4, 2));
+        assert_eq!(near_square(16), (4, 4));
+        assert_eq!(near_square(7), (7, 1));
+        assert_eq!(near_square(12), (4, 3));
+        assert_eq!(near_square(1), (1, 1));
+    }
+
+    #[test]
+    fn auto_strategies() {
+        assert_eq!(PartitionStrategy::auto_grid2d(6), PartitionStrategy::Grid2D { p: 3, q: 2 });
+        assert_eq!(
+            PartitionStrategy::auto_summa25d(8),
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }
+        );
+        assert_eq!(
+            PartitionStrategy::auto_summa25d(4),
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 1 }
+        );
+    }
+
+    #[test]
+    fn row1d_byte_accounting() {
+        // 8 devices, square d: A once + B broadcast 8x.
+        let d = 1024u64;
+        let plan = PartitionPlan::new(PartitionStrategy::Row1D { devices: 8 }, d, d, d).unwrap();
+        assert_eq!(plan.devices, 8);
+        assert_eq!(plan.host_to_device_bytes, (d * d + 8 * d * d) * 4);
+        assert_eq!(plan.device_to_device_bytes, 0);
+        assert_eq!(plan.device_to_host_bytes, d * d * 4);
+    }
+
+    #[test]
+    fn summa25d_moves_fewer_bytes_than_row1d_at_scale() {
+        // The acceptance-criterion comparison, at the paper's largest
+        // problem: a d=21504 square GEMM on 8 cards.
+        let d = 21504u64;
+        let row = PartitionPlan::new(PartitionStrategy::Row1D { devices: 8 }, d, d, d).unwrap();
+        let summa =
+            PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
+        // 1D moves (1+8+1)·d² floats; 2.5D (2+2+1+1)·d².
+        assert_eq!(row.total_bytes_moved(), 10 * d * d * 4);
+        assert_eq!(summa.total_bytes_moved(), 6 * d * d * 4);
+        assert!(summa.flops_per_byte() > 1.6 * row.flops_per_byte());
+    }
+
+    #[test]
+    fn grid2d_replication_volumes() {
+        let (m, k, n) = (100u64, 60, 80);
+        let plan =
+            PartitionPlan::new(PartitionStrategy::Grid2D { p: 2, q: 3 }, m, k, n).unwrap();
+        assert_eq!(plan.devices, 6);
+        // A replicated q times, B replicated p times.
+        assert_eq!(plan.host_to_device_bytes, (3 * m * k + 2 * k * n) * 4);
+        assert_eq!(plan.device_to_device_bytes, 0);
+    }
+
+    #[test]
+    fn summa_reduction_traffic() {
+        let (m, k, n) = (64u64, 90, 32);
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 3 },
+            m,
+            k,
+            n,
+        )
+        .unwrap();
+        assert_eq!(plan.devices, 12);
+        // Each of the 4 tiles has 3 partials -> 2 sends of its C bytes.
+        assert_eq!(plan.device_to_device_bytes, 2 * m * n * 4);
+    }
+
+    #[test]
+    fn uneven_shapes_cover_exactly() {
+        for strategy in [
+            PartitionStrategy::Row1D { devices: 3 },
+            PartitionStrategy::Grid2D { p: 3, q: 2 },
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 3 },
+        ] {
+            let plan = PartitionPlan::new(strategy, 17, 23, 11).unwrap();
+            plan.validate_cover().unwrap();
+        }
+    }
+
+    #[test]
+    fn more_devices_than_rows_degrades_gracefully() {
+        let plan = PartitionPlan::new(PartitionStrategy::Row1D { devices: 16 }, 5, 8, 8).unwrap();
+        assert_eq!(plan.shards.len(), 5);
+        assert_eq!(plan.devices, 5);
+        plan.validate_cover().unwrap();
+    }
+
+    #[test]
+    fn functional_bit_exact_all_strategies() {
+        let (m, k, n) = (33usize, 57, 21);
+        let a = Matrix::random(m, k, 91);
+        let b = Matrix::random(k, n, 92);
+        let dense = matmul_blocked(&a, &b);
+        for strategy in [
+            PartitionStrategy::Row1D { devices: 4 },
+            PartitionStrategy::Grid2D { p: 2, q: 3 },
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 4 },
+        ] {
+            let plan =
+                PartitionPlan::new(strategy, m as u64, k as u64, n as u64).unwrap();
+            let got = plan.execute_functional(&a, &b);
+            assert_eq!(got.data, dense.data, "{}", strategy.name());
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Per-device work queues, work-stealing, and transfer/compute overlap.
+//!
+//! The scheduler replays a [`super::partition::PartitionPlan`] against a
+//! fleet at event granularity (one event per shard), tracking four
+//! resources per device:
+//!
+//! * the **host link, inbound** (shard DMA in) and **outbound** (C
+//!   tiles back to the host) — PCIe is full duplex, so the two
+//!   directions are independent resources,
+//! * the **compute engine** (the device's `OffchipSim` timing),
+//! * the **card link** (partial-C reduction sends, 2.5D plans only).
+//!
+//! Transfers are double-buffered: the DMA for a device's task *i* may
+//! start as soon as the link is free and task *i−2*'s compute has
+//! drained its staging buffer — so transfer of the next shard overlaps
+//! compute of the current one, exactly like the on-chip Phase-2 overlap
+//! of §V one level up the hierarchy.
+//!
+//! Work-stealing: a device with an empty queue takes a shard from the
+//! back of the longest remaining queue. With heterogeneous fleets this
+//! lets a fast Table-I design finish its band and absorb a slow
+//! neighbour's tail instead of idling.
+
+use super::interconnect::Interconnect;
+use super::partition::{PartitionPlan, Shard};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Per-device accounting after a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceTrace {
+    /// Shards this device computed.
+    pub shards: usize,
+    /// Of those, how many it stole from another queue.
+    pub stolen: usize,
+    /// Host-link busy seconds, both directions (shard DMA + C writeback).
+    pub transfer_seconds: f64,
+    /// Compute-engine busy seconds.
+    pub compute_seconds: f64,
+    /// Card-link busy seconds (partial reductions).
+    pub card_seconds: f64,
+    /// When this device went fully idle.
+    pub finish_seconds: f64,
+}
+
+/// The schedule of one plan over one fleet.
+#[derive(Clone, Debug)]
+pub struct ScheduleOutcome {
+    pub per_device: Vec<DeviceTrace>,
+    /// End-to-end latency: last resource to go idle.
+    pub makespan_seconds: f64,
+    /// Total steals across the fleet.
+    pub steals: usize,
+}
+
+impl ScheduleOutcome {
+    /// The device bounding the critical path.
+    pub fn critical_device(&self) -> usize {
+        self.per_device
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| a.finish_seconds.total_cmp(&b.finish_seconds))
+            .map_or(0, |(i, _)| i)
+    }
+}
+
+#[derive(Default)]
+struct TileState {
+    remaining: usize,
+    /// Device that computed the k-first shard (owns the reduction).
+    home: Option<usize>,
+    min_k0: u64,
+    /// When all partials (and the home compute) are in place.
+    ready: f64,
+    c_bytes: u64,
+}
+
+/// Run `plan` over `ndev` devices whose per-shard compute time is given
+/// by `compute_seconds(device, shard)`.
+pub fn run_schedule(
+    plan: &PartitionPlan,
+    ndev: usize,
+    interconnect: &Interconnect,
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> ScheduleOutcome {
+    assert!(ndev > 0, "empty fleet");
+    let mut queues: Vec<VecDeque<Shard>> = vec![VecDeque::new(); ndev];
+    for s in &plan.shards {
+        queues[s.device % ndev].push_back(*s);
+    }
+
+    let mut link_free = vec![0.0f64; ndev];
+    let mut out_free = vec![0.0f64; ndev];
+    let mut card_free = vec![0.0f64; ndev];
+    let mut compute_free = vec![0.0f64; ndev];
+    let mut compute_ends: Vec<Vec<f64>> = vec![Vec::new(); ndev];
+    let mut traces = vec![DeviceTrace::default(); ndev];
+    let mut steals = 0usize;
+
+    let mut tiles: BTreeMap<(u64, u64), TileState> = BTreeMap::new();
+    for s in &plan.shards {
+        let t = tiles.entry(s.tile()).or_default();
+        t.remaining += 1;
+        t.c_bytes = s.c_bytes();
+        if t.remaining == 1 || s.k0 < t.min_k0 {
+            t.min_k0 = s.k0;
+        }
+    }
+
+    let mut pending: usize = plan.shards.len();
+    while pending > 0 {
+        // The device whose host link frees first starts the next DMA.
+        let d = (0..ndev)
+            .min_by(|a, b| link_free[*a].total_cmp(&link_free[*b]))
+            .unwrap();
+        // Own queue first; otherwise steal from the longest queue.
+        let (shard, stolen) = match queues[d].pop_front() {
+            Some(s) => (s, false),
+            None => {
+                let victim = (0..ndev)
+                    .filter(|&v| !queues[v].is_empty())
+                    .max_by_key(|&v| queues[v].len())
+                    .expect("pending > 0 implies a nonempty queue");
+                (queues[victim].pop_back().unwrap(), true)
+            }
+        };
+        pending -= 1;
+        if stolen {
+            steals += 1;
+            traces[d].stolen += 1;
+        }
+
+        // Double-buffered staging: task i waits for task i-2's compute.
+        let i = traces[d].shards;
+        let gate = if i >= 2 { compute_ends[d][i - 2] } else { 0.0 };
+        let xfer = interconnect.host_seconds(shard.input_bytes());
+        let t_start = link_free[d].max(gate);
+        let t_end = t_start + xfer;
+        link_free[d] = t_end;
+        traces[d].transfer_seconds += xfer;
+
+        let comp = compute_seconds(d, &shard);
+        let c_start = compute_free[d].max(t_end);
+        let c_end = c_start + comp;
+        compute_free[d] = c_end;
+        compute_ends[d].push(c_end);
+        traces[d].compute_seconds += comp;
+        traces[d].shards += 1;
+
+        // Tile bookkeeping: reductions and the final writeback.
+        let tile = tiles.get_mut(&shard.tile()).unwrap();
+        tile.remaining -= 1;
+        if shard.k0 == tile.min_k0 {
+            tile.home = Some(d);
+            tile.ready = tile.ready.max(c_end);
+        } else {
+            // Ship the partial to the home device over the card link.
+            let send = interconnect.card_seconds(tile.c_bytes);
+            let s_end = card_free[d].max(c_end) + send;
+            card_free[d] = s_end;
+            traces[d].card_seconds += send;
+            tile.ready = tile.ready.max(s_end);
+        }
+        if tile.remaining == 0 {
+            let home = tile.home.expect("k-first shard completed before the tile drained");
+            let wb = interconnect.host_seconds(tile.c_bytes);
+            let wb_start = out_free[home].max(tile.ready);
+            out_free[home] = wb_start + wb;
+            traces[home].transfer_seconds += wb;
+        }
+    }
+
+    let mut makespan = 0.0f64;
+    for d in 0..ndev {
+        let finish =
+            link_free[d].max(out_free[d]).max(compute_free[d]).max(card_free[d]);
+        traces[d].finish_seconds = finish;
+        makespan = makespan.max(finish);
+    }
+    ScheduleOutcome { per_device: traces, makespan_seconds: makespan, steals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::PartitionStrategy;
+
+    fn plan(strategy: PartitionStrategy, d: u64) -> PartitionPlan {
+        PartitionPlan::new(strategy, d, d, d).unwrap()
+    }
+
+    /// Fixed compute rate: seconds proportional to shard FLOPs.
+    fn flat_rate(_: usize, s: &Shard) -> f64 {
+        s.flops() as f64 / 3.0e12
+    }
+
+    #[test]
+    fn two_devices_nearly_halve_makespan() {
+        let ic = Interconnect::pcie_cluster();
+        let p1 = plan(PartitionStrategy::Row1D { devices: 1 }, 8192);
+        let p2 = plan(PartitionStrategy::Row1D { devices: 2 }, 8192);
+        let t1 = run_schedule(&p1, 1, &ic, flat_rate).makespan_seconds;
+        let t2 = run_schedule(&p2, 2, &ic, flat_rate).makespan_seconds;
+        assert!(t1 / t2 > 1.8, "speedup {}", t1 / t2);
+    }
+
+    #[test]
+    fn transfer_overlaps_compute() {
+        // With many shards per device, the makespan must sit well below
+        // the serial sum of transfer + compute.
+        let ic = Interconnect::pcie_cluster();
+        let p = plan(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192);
+        let out = run_schedule(&p, 2, &ic, flat_rate);
+        for t in &out.per_device {
+            let serial = t.transfer_seconds + t.compute_seconds + t.card_seconds;
+            assert!(t.finish_seconds < serial, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn idle_device_steals() {
+        // 4 shards all pre-assigned to device 0 of a 2-device fleet:
+        // device 1 must steal some of them.
+        let mut p = plan(PartitionStrategy::Row1D { devices: 4 }, 4096);
+        for s in &mut p.shards {
+            s.device = 0;
+        }
+        let ic = Interconnect::pcie_cluster();
+        let out = run_schedule(&p, 2, &ic, flat_rate);
+        assert!(out.steals > 0);
+        assert!(out.per_device[1].shards > 0);
+        assert_eq!(out.per_device[0].shards + out.per_device[1].shards, 4);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_balances_by_stealing() {
+        // Device 1 computes 3x faster and compute dominates transfers:
+        // the double-buffer gate throttles the slow device's DMA, the
+        // fast device drains its own queue and then steals the tail.
+        let p = plan(PartitionStrategy::Row1D { devices: 8 }, 8192);
+        let ic = Interconnect::pcie_cluster();
+        let out = run_schedule(&p, 2, &ic, |d, s| {
+            let slow = s.flops() as f64 / 1.0e12;
+            if d == 1 {
+                slow / 3.0
+            } else {
+                slow
+            }
+        });
+        assert!(
+            out.per_device[1].shards > out.per_device[0].shards,
+            "fast {} vs slow {}",
+            out.per_device[1].shards,
+            out.per_device[0].shards
+        );
+    }
+
+    #[test]
+    fn makespan_includes_reduction_and_writeback() {
+        let ic = Interconnect::pcie_cluster();
+        let p = plan(PartitionStrategy::Summa25D { p: 1, q: 1, c: 2 }, 2048);
+        let out = run_schedule(&p, 2, &ic, flat_rate);
+        // The non-home device must have shipped one partial.
+        let card: f64 = out.per_device.iter().map(|t| t.card_seconds).sum();
+        assert!(card > 0.0);
+        // Makespan covers the home device's final writeback.
+        let crit = out.critical_device();
+        assert!(out.makespan_seconds >= out.per_device[crit].finish_seconds);
+    }
+}

@@ -14,6 +14,17 @@ pub struct Metrics {
     pub errors: AtomicU64,
     /// Total FLOPs served (paper convention).
     pub flops: AtomicU64,
+    /// Requests routed to the multi-FPGA cluster.
+    pub sharded_jobs: AtomicU64,
+    /// Sub-GEMM shards executed across the fleet.
+    pub shards_executed: AtomicU64,
+    /// Shards migrated between devices by work-stealing.
+    pub cluster_steals: AtomicU64,
+    /// Simulated fleet compute-busy time, in microseconds (gauge base
+    /// for cluster utilization).
+    pub cluster_busy_us: AtomicU64,
+    /// Simulated cluster makespan total, in microseconds.
+    pub cluster_makespan_us: AtomicU64,
     latencies: Mutex<Vec<f64>>,
 }
 
@@ -34,6 +45,29 @@ impl Metrics {
         self.flops.fetch_add(f, Ordering::Relaxed);
     }
 
+    /// Record one cluster run's gauges from its report. Does not touch
+    /// `sharded_jobs` — a chained request runs two cluster legs but is
+    /// one job; the service increments the job counter per request.
+    pub fn record_cluster(&self, report: &crate::cluster::ClusterReport) {
+        self.shards_executed.fetch_add(report.shards as u64, Ordering::Relaxed);
+        self.cluster_steals.fetch_add(report.steals as u64, Ordering::Relaxed);
+        let busy: f64 = report.per_device.iter().map(|d| d.compute_seconds).sum();
+        self.cluster_busy_us.fetch_add((busy * 1e6) as u64, Ordering::Relaxed);
+        self.cluster_makespan_us
+            .fetch_add((report.makespan_seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Mean fleet utilization across all recorded cluster runs
+    /// (compute-busy seconds over device-seconds of makespan).
+    pub fn cluster_utilization(&self, fleet_size: u64) -> f64 {
+        let busy = self.cluster_busy_us.load(Ordering::Relaxed) as f64;
+        let span = self.cluster_makespan_us.load(Ordering::Relaxed) as f64;
+        if span == 0.0 || fleet_size == 0 {
+            return 0.0;
+        }
+        busy / (span * fleet_size as f64)
+    }
+
     pub fn latency_summary(&self) -> Summary {
         Summary::from_samples("request latency", self.latencies.lock().unwrap().clone())
     }
@@ -46,6 +80,11 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             flops: self.flops.load(Ordering::Relaxed),
+            sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
+            shards_executed: self.shards_executed.load(Ordering::Relaxed),
+            cluster_steals: self.cluster_steals.load(Ordering::Relaxed),
+            cluster_busy_us: self.cluster_busy_us.load(Ordering::Relaxed),
+            cluster_makespan_us: self.cluster_makespan_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -59,6 +98,11 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub errors: u64,
     pub flops: u64,
+    pub sharded_jobs: u64,
+    pub shards_executed: u64,
+    pub cluster_steals: u64,
+    pub cluster_busy_us: u64,
+    pub cluster_makespan_us: u64,
 }
 
 #[cfg(test)]
@@ -77,6 +121,25 @@ mod tests {
         assert_eq!(s.fallbacks, 1);
         assert_eq!(s.flops, 1000);
         assert_eq!(s.errors, 0);
+    }
+
+    #[test]
+    fn cluster_gauges() {
+        use crate::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+        let m = Metrics::new();
+        let sim = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+        let plan =
+            PartitionPlan::new(PartitionStrategy::Row1D { devices: 2 }, 4096, 4096, 4096)
+                .unwrap();
+        let report = sim.simulate(&plan);
+        Metrics::inc(&m.sharded_jobs);
+        m.record_cluster(&report);
+        let s = m.snapshot();
+        assert_eq!(s.sharded_jobs, 1);
+        assert_eq!(s.shards_executed, 2);
+        assert!(s.cluster_makespan_us > 0);
+        let u = m.cluster_utilization(2);
+        assert!(u > 0.0 && u <= 1.0, "{u}");
     }
 
     #[test]

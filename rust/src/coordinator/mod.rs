@@ -10,8 +10,10 @@
 //! clients ──submit──▶ [Batcher] ──per-shape batches──▶ [Engine thread]
 //!                        │                               PJRT CPU exec
 //!                        │                               (AOT artifacts)
-//!                        └──────────▶ [Router]: artifact | gemm fallback
+//!                        └──────────▶ [Router]: artifact | fallback | sharded
 //!                                        + FPGA design for timing sim
+//!                                        + multi-FPGA cluster for jobs
+//!                                          too large for one card
 //! ```
 //!
 //! Every response carries both the *functional* result (via the XLA

@@ -2,7 +2,12 @@
 
 use crate::blocked::{Level1Blocking, OffchipDesign};
 use crate::dse::configs::{fitted_designs, DesignSpec};
+use crate::fpga::device::Stratix10;
 use crate::runtime::Manifest;
+
+/// Smallest dimension at which a blocking-incompatible shape is worth
+/// sharding over the cluster instead of the CPU fallback.
+const MIN_SHARD_DIM: u64 = 1024;
 
 /// How a request's functional result will be computed.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -11,40 +16,104 @@ pub enum Route {
     Artifact(String),
     /// No artifact: compute with the in-process blocked GEMM.
     Fallback,
+    /// Too large for one card (DDR capacity, or no Table-I blocking at
+    /// cluster-worthy size): shard over the multi-FPGA cluster.
+    Sharded,
 }
 
 /// The router: owns the manifest index and the design catalog.
 #[derive(Clone, Debug)]
 pub struct Router {
+    /// (m, k, n) → 2-input matmul artifact.
     artifact_index: Vec<(usize, usize, usize, String)>,
+    /// (m, k, n, p) → 3-input chained artifact ((A·B)·C).
+    chain_index: Vec<(usize, usize, usize, usize, String)>,
     designs: Vec<DesignSpec>,
+    /// Single-card DDR capacity in bytes (routing bound).
+    card_ddr_bytes: u64,
 }
 
 impl Router {
     pub fn new(manifest: Option<&Manifest>) -> Self {
         let mut artifact_index = Vec::new();
+        let mut chain_index = Vec::new();
         if let Some(m) = manifest {
             for a in &m.artifacts {
-                if a.kind == crate::runtime::ArtifactKind::Matmul && a.inputs.len() == 2 {
-                    artifact_index.push((
-                        a.inputs[0].0,
-                        a.inputs[0].1,
-                        a.inputs[1].1,
-                        a.name.clone(),
-                    ));
+                match a.kind {
+                    crate::runtime::ArtifactKind::Matmul if a.inputs.len() == 2 => {
+                        artifact_index.push((
+                            a.inputs[0].0,
+                            a.inputs[0].1,
+                            a.inputs[1].1,
+                            a.name.clone(),
+                        ));
+                    }
+                    crate::runtime::ArtifactKind::Chain if a.inputs.len() == 3 => {
+                        chain_index.push((
+                            a.inputs[0].0,
+                            a.inputs[0].1,
+                            a.inputs[1].1,
+                            a.inputs[2].1,
+                            a.name.clone(),
+                        ));
+                    }
+                    _ => {}
                 }
             }
         }
-        Self { artifact_index, designs: fitted_designs() }
+        Self {
+            artifact_index,
+            chain_index,
+            designs: fitted_designs(),
+            card_ddr_bytes: Stratix10::gx2800_520n().ddr_capacity_bytes(),
+        }
     }
 
     /// Functional route for an (m, k, n) problem.
     pub fn route(&self, m: usize, k: usize, n: usize) -> Route {
-        self.artifact_index
+        if let Some((_, _, _, name)) =
+            self.artifact_index.iter().find(|(am, ak, an, _)| (*am, *ak, *an) == (m, k, n))
+        {
+            return Route::Artifact(name.clone());
+        }
+        if self.should_shard(m as u64, k as u64, n as u64) {
+            return Route::Sharded;
+        }
+        Route::Fallback
+    }
+
+    /// Functional route for a chained (A·B)·C problem with shapes
+    /// (m × k)·(k × n)·(n × p).
+    pub fn route_chain(&self, m: usize, k: usize, n: usize, p: usize) -> Route {
+        if let Some((.., name)) = self
+            .chain_index
             .iter()
-            .find(|(am, ak, an, _)| (*am, *ak, *an) == (m, k, n))
-            .map(|(_, _, _, name)| Route::Artifact(name.clone()))
-            .unwrap_or(Route::Fallback)
+            .find(|(am, ak, an, ap, _)| (*am, *ak, *an, *ap) == (m, k, n, p))
+        {
+            return Route::Artifact(name.clone());
+        }
+        // Chains shard leg by leg; either leg exceeding one card — the
+        // first (m × k)·(k × n) or the second (m × n)·(n × p) — sends
+        // the whole chain to the cluster.
+        if self.should_shard(m as u64, k as u64, n as u64)
+            || self.should_shard(m as u64, n as u64, p as u64)
+        {
+            return Route::Sharded;
+        }
+        Route::Fallback
+    }
+
+    /// A problem leaves the single-card path when its working set
+    /// exceeds the 520N's DDR, or when no Table-I blocking accepts the
+    /// shape and it is big enough that the blocked-CPU fallback would be
+    /// the bottleneck.
+    pub fn should_shard(&self, m: u64, k: u64, n: u64) -> bool {
+        let footprint = (m * k + k * n + m * n) * 4;
+        if footprint > self.card_ddr_bytes {
+            return true;
+        }
+        self.timing_design(m, k, n).is_none()
+            && m.min(k).min(n) >= MIN_SHARD_DIM
     }
 
     /// Pick the FPGA design whose blocking constraints the shape
@@ -102,9 +171,46 @@ mod tests {
     }
 
     #[test]
+    fn routes_chain_artifacts() {
+        let r = Router::new(Some(&manifest()));
+        assert_eq!(
+            r.route_chain(256, 256, 256, 256),
+            Route::Artifact("chain_tpu_256".into())
+        );
+        assert_eq!(r.route_chain(256, 256, 256, 128), Route::Fallback);
+        assert_eq!(r.route_chain(64, 64, 64, 64), Route::Fallback);
+        // A chain whose *second* leg is cluster-worthy shards even when
+        // the first leg fits a single card: (2048³ fits design G, but
+        // the (2048 × 2048)·(2048 × 1100) leg matches no blocking).
+        assert_eq!(r.route_chain(1100, 1100, 1100, 1100), Route::Sharded);
+        assert_eq!(r.route_chain(2048, 2048, 2048, 1100), Route::Sharded);
+    }
+
+    #[test]
     fn routes_without_manifest() {
         let r = Router::new(None);
         assert_eq!(r.route(64, 64, 64), Route::Fallback);
+        assert_eq!(r.route_chain(256, 256, 256, 256), Route::Fallback);
+    }
+
+    #[test]
+    fn large_blocking_incompatible_shapes_shard() {
+        let r = Router::new(None);
+        // No Table-I blocking divides 1100, and it's cluster-worthy.
+        assert!(r.timing_design(1100, 1100, 1100).is_none());
+        assert_eq!(r.route(1100, 1100, 1100), Route::Sharded);
+        // Small incompatible shapes stay on the CPU fallback.
+        assert_eq!(r.route(100, 100, 100), Route::Fallback);
+    }
+
+    #[test]
+    fn capacity_overflow_shards_even_when_blocking_fits() {
+        let r = Router::new(None);
+        // 65536³ divides design G's blocking but needs 48 GiB > 32 GiB.
+        assert!(r.timing_design(65536, 65536, 65536).is_some());
+        assert_eq!(r.route(65536, 65536, 65536), Route::Sharded);
+        // The paper's largest problem (21504³, 5.5 GB) stays single-card.
+        assert_eq!(r.route(21504, 21504, 21504), Route::Fallback);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::router::{Route, Router};
 use crate::blocked::{OffchipSim, SimReport};
+use crate::cluster::{ClusterReport, ClusterSim, Fleet};
 use crate::gemm::{matmul_blocked, Matrix};
 use crate::perfmodel::flop_count;
 use std::path::PathBuf;
@@ -42,6 +43,9 @@ pub struct GemmResponse {
     /// Simulated FPGA execution on the routed Table-I design (None if no
     /// design's blocking accepts the shape).
     pub fpga_sim: Option<SimReport>,
+    /// Simulated multi-FPGA execution, one report per sharded GEMM leg
+    /// (two for a chained request; empty unless the route is Sharded).
+    pub cluster: Vec<ClusterReport>,
 }
 
 /// Service configuration.
@@ -52,6 +56,8 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Batching window: how long the ingress loop waits to fill a batch.
     pub batch_window: Duration,
+    /// Cards in the sharded route's simulated fleet (design G).
+    pub cluster_devices: usize,
 }
 
 impl Default for ServiceConfig {
@@ -60,6 +66,7 @@ impl Default for ServiceConfig {
             artifact_dir: Some(PathBuf::from("artifacts")),
             max_batch: 8,
             batch_window: Duration::from_millis(2),
+            cluster_devices: 4,
         }
     }
 }
@@ -73,6 +80,9 @@ enum Ingress {
 pub struct GemmService {
     tx: mpsc::Sender<Ingress>,
     pub metrics: Arc<Metrics>,
+    /// Fleet size of the sharded route (pairs with
+    /// [`Metrics::cluster_utilization`]).
+    pub cluster_devices: usize,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -80,13 +90,14 @@ impl GemmService {
     /// Start the service threads.
     pub fn start(config: ServiceConfig) -> anyhow::Result<Self> {
         let metrics = Arc::new(Metrics::new());
+        let cluster_devices = config.cluster_devices.max(1);
         let (tx, rx) = mpsc::channel::<Ingress>();
         let m = Arc::clone(&metrics);
         let worker = std::thread::Builder::new()
             .name("gemm-engine".into())
             .spawn(move || Self::engine_loop(config, rx, m))
             .expect("spawn engine thread");
-        Ok(Self { tx, metrics, worker: Some(worker) })
+        Ok(Self { tx, metrics, cluster_devices, worker: Some(worker) })
     }
 
     /// Submit a job; returns the receiver for its response.
@@ -112,12 +123,18 @@ impl GemmService {
             .and_then(|dir| match crate::runtime::Engine::new(dir) {
                 Ok(e) => Some(e),
                 Err(err) => {
-                    log::warn!("PJRT engine unavailable ({err}); falling back to CPU GEMM");
+                    eprintln!("warning: artifact engine unavailable ({err}); falling back to CPU GEMM");
                     None
                 }
             });
         let router = Router::new(engine.as_ref().map(|e| &e.manifest));
         let batcher = Batcher::new(config.max_batch);
+        // The sharded route's fleet: design-G cards (design G is always
+        // fitted, so this cannot fail).
+        let cluster = ClusterSim::new(
+            Fleet::homogeneous(config.cluster_devices.max(1), "G")
+                .expect("design G in the fitted catalog"),
+        );
 
         loop {
             // Block for the first job, then drain the window.
@@ -157,15 +174,20 @@ impl GemmService {
             let keyed: Vec<(String, _)> = pending
                 .into_iter()
                 .map(|(req, tx, t)| {
-                    let key = match router.route(req.a.rows, req.a.cols, req.b.cols) {
-                        Route::Artifact(name) => {
-                            if req.chain.is_some() {
-                                format!("fallback-chain")
-                            } else {
-                                format!("artifact:{name}")
-                            }
+                    // Key by the same routing decision execute_one makes.
+                    let route = match &req.chain {
+                        Some(c) => {
+                            router.route_chain(req.a.rows, req.a.cols, req.b.cols, c.cols)
                         }
-                        Route::Fallback => "fallback".to_string(),
+                        None => router.route(req.a.rows, req.a.cols, req.b.cols),
+                    };
+                    let key = match route {
+                        Route::Artifact(name) => format!("artifact:{name}"),
+                        Route::Fallback => {
+                            if req.chain.is_some() { "fallback-chain" } else { "fallback" }
+                                .to_string()
+                        }
+                        Route::Sharded => "sharded".to_string(),
                     };
                     (key, (req, tx, t))
                 })
@@ -179,7 +201,14 @@ impl GemmService {
                     // contain panics (e.g. shape assertions in the GEMM
                     // fallback) and answer with an error instead.
                     let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        Self::execute_one(&router, engine.as_mut(), *req, queue_seconds, &metrics)
+                        Self::execute_one(
+                            &router,
+                            engine.as_mut(),
+                            &cluster,
+                            *req,
+                            queue_seconds,
+                            &metrics,
+                        )
                     }))
                     .unwrap_or_else(|payload| {
                         Metrics::inc(&metrics.errors);
@@ -195,6 +224,7 @@ impl GemmService {
                             host_seconds: 0.0,
                             queue_seconds,
                             fpga_sim: None,
+                            cluster: Vec::new(),
                         }
                     });
                     let _ = tx.send(resp);
@@ -203,78 +233,125 @@ impl GemmService {
         }
     }
 
+    /// One A·B leg through the cluster: auto-plan (reusing the planner's
+    /// own timing run), functional execute, record gauges. Falls back to
+    /// the blocked GEMM when the fleet cannot produce a plan (degenerate
+    /// extents).
+    fn cluster_leg(
+        cluster: &ClusterSim,
+        a: &Matrix,
+        b: &Matrix,
+        metrics: &Metrics,
+    ) -> (Matrix, Option<ClusterReport>) {
+        match cluster.plan_and_report(a.rows as u64, a.cols as u64, b.cols as u64) {
+            Some((plan, report)) => {
+                let c = plan.execute_functional(a, b);
+                metrics.record_cluster(&report);
+                (c, Some(report))
+            }
+            None => (matmul_blocked(a, b), None),
+        }
+    }
+
     fn execute_one(
         router: &Router,
         mut engine: Option<&mut crate::runtime::Engine>,
+        cluster: &ClusterSim,
         req: GemmRequest,
         queue_seconds: f64,
         metrics: &Metrics,
     ) -> GemmResponse {
         let t0 = Instant::now();
         let (m, k, n) = (req.a.rows, req.a.cols, req.b.cols);
-        let mut route = router.route(m, k, n);
+        let mut cluster_reports = Vec::new();
 
-        // Chained jobs route through the chain artifact when available.
-        let result: Result<Matrix, String> = if let Some(chain_c) = &req.chain {
-            let chain_name = engine
-                .as_ref()
-                .and_then(|e| {
-                    e.manifest
-                        .artifacts
-                        .iter()
-                        .find(|a| {
-                            a.kind == crate::runtime::ArtifactKind::Chain
-                                && a.inputs.len() == 3
-                                && a.inputs[0] == (m, k)
-                                && a.inputs[1] == (k, n)
-                                && a.inputs[2] == (n, chain_c.cols)
-                        })
-                        .map(|a| a.name.clone())
-                });
-            match (chain_name, engine.as_mut()) {
-                (Some(name), Some(eng)) => {
-                    route = Route::Artifact(name.clone());
-                    eng.execute(&name, &[&req.a, &req.b, chain_c])
-                        .map(|(m, _)| m)
-                        .map_err(|e| e.to_string())
+        // Chained jobs route through the chain-artifact index.
+        let (mut route, result): (Route, Result<Matrix, String>) =
+            if let Some(chain_c) = &req.chain {
+                let route = router.route_chain(m, k, n, chain_c.cols);
+                match (&route, engine.as_mut()) {
+                    (Route::Artifact(name), Some(eng)) => {
+                        let r = eng
+                            .execute(name, &[&req.a, &req.b, chain_c])
+                            .map(|(m, _)| m)
+                            .map_err(|e| e.to_string());
+                        (route, r)
+                    }
+                    (Route::Sharded, _) => {
+                        // Shard leg by leg; no host reordering between
+                        // legs (the §VI argument, one level up).
+                        let (ab, rep1) = Self::cluster_leg(cluster, &req.a, &req.b, metrics);
+                        let (abc, rep2) = Self::cluster_leg(cluster, &ab, chain_c, metrics);
+                        cluster_reports.extend(rep1);
+                        cluster_reports.extend(rep2);
+                        (Route::Sharded, Ok(abc))
+                    }
+                    _ => {
+                        let ab = matmul_blocked(&req.a, &req.b);
+                        (Route::Fallback, Ok(matmul_blocked(&ab, chain_c)))
+                    }
                 }
-                _ => {
-                    route = Route::Fallback;
-                    let ab = matmul_blocked(&req.a, &req.b);
-                    Ok(matmul_blocked(&ab, chain_c))
+            } else {
+                let route = router.route(m, k, n);
+                match (&route, engine.as_mut()) {
+                    (Route::Artifact(name), Some(eng)) => {
+                        let r = eng
+                            .execute(name, &[&req.a, &req.b])
+                            .map(|(m, _)| m)
+                            .map_err(|e| e.to_string());
+                        (route, r)
+                    }
+                    (Route::Sharded, _) => {
+                        let (c, rep) = Self::cluster_leg(cluster, &req.a, &req.b, metrics);
+                        cluster_reports.extend(rep);
+                        (Route::Sharded, Ok(c))
+                    }
+                    _ => (Route::Fallback, Ok(matmul_blocked(&req.a, &req.b))),
                 }
-            }
-        } else {
-            match (&route, engine.as_mut()) {
-                (Route::Artifact(name), Some(eng)) => eng
-                    .execute(name, &[&req.a, &req.b])
-                    .map(|(m, _)| m)
-                    .map_err(|e| e.to_string()),
-                _ => {
-                    route = Route::Fallback;
-                    Ok(matmul_blocked(&req.a, &req.b))
-                }
-            }
-        };
+            };
+        // A sharded request whose fleet produced no plan for any leg
+        // fell back entirely.
+        if route == Route::Sharded && cluster_reports.is_empty() {
+            route = Route::Fallback;
+        }
 
         match &route {
             Route::Artifact(_) => Metrics::inc(&metrics.artifact_hits),
             Route::Fallback => Metrics::inc(&metrics.fallbacks),
+            Route::Sharded => Metrics::inc(&metrics.sharded_jobs),
         }
         if result.is_err() {
             Metrics::inc(&metrics.errors);
         }
         metrics.add_flops(flop_count(m as u64, n as u64, k as u64));
+        if let Some(chain_c) = &req.chain {
+            // Second leg of the chain: (m × n)·(n × p).
+            metrics.add_flops(flop_count(m as u64, chain_c.cols as u64, n as u64));
+        }
 
-        // FPGA timing on the routed design (chain = two passes).
-        let fpga_sim = router.timing_design(m as u64, k as u64, n as u64).map(|d| {
-            let sim = OffchipSim::new(d);
-            sim.simulate(m as u64, n as u64, k as u64)
-        });
+        // FPGA timing on the routed design (chain = two passes). Sharded
+        // requests carry the cluster report instead — a single-card
+        // SimReport would be fiction for a problem that left one card.
+        let fpga_sim = if route == Route::Sharded {
+            None
+        } else {
+            router.timing_design(m as u64, k as u64, n as u64).map(|d| {
+                let sim = OffchipSim::new(d);
+                sim.simulate(m as u64, n as u64, k as u64)
+            })
+        };
 
         let host_seconds = t0.elapsed().as_secs_f64();
         metrics.record_latency(host_seconds);
-        GemmResponse { id: req.id, result, route, host_seconds, queue_seconds, fpga_sim }
+        GemmResponse {
+            id: req.id,
+            result,
+            route,
+            host_seconds,
+            queue_seconds,
+            fpga_sim,
+            cluster: cluster_reports,
+        }
     }
 }
 
@@ -292,7 +369,12 @@ mod tests {
     use super::*;
 
     fn no_artifact_config() -> ServiceConfig {
-        ServiceConfig { artifact_dir: None, max_batch: 4, batch_window: Duration::from_millis(1) }
+        ServiceConfig {
+            artifact_dir: None,
+            max_batch: 4,
+            batch_window: Duration::from_millis(1),
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -328,6 +410,29 @@ mod tests {
         let sim = resp.fpga_sim.expect("512-cube matches design H blocking");
         assert!(sim.gflops > 1000.0);
         assert!(sim.e_d > 0.3 && sim.e_d < 1.0);
+    }
+
+    #[test]
+    fn sharded_route_end_to_end() {
+        let svc = GemmService::start(no_artifact_config()).unwrap();
+        // 1025³: no Table-I blocking divides it, and every dimension is
+        // cluster-worthy -> Route::Sharded over the 4-card fleet.
+        let a = Matrix::random(1025, 1025, 8);
+        let b = Matrix::random(1025, 1025, 9);
+        let want = matmul_blocked(&a, &b);
+        let resp = svc.submit_sync(GemmRequest { id: 3, a, b, chain: None });
+        assert_eq!(resp.route, Route::Sharded);
+        assert_eq!(resp.cluster.len(), 1, "one report per sharded leg");
+        let rep = &resp.cluster[0];
+        assert_eq!(rep.devices, 4);
+        assert!(rep.makespan_seconds > 0.0);
+        assert!(resp.fpga_sim.is_none(), "no single-card design fits 1025");
+        // Bit-exact against the dense blocked GEMM.
+        assert_eq!(resp.result.unwrap().data, want.data);
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.sharded_jobs, 1);
+        assert!(snap.shards_executed >= 4);
+        assert!(svc.metrics.cluster_utilization(svc.cluster_devices as u64) > 0.0);
     }
 
     #[test]

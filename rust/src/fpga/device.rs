@@ -28,6 +28,11 @@ pub struct Stratix10 {
     pub kernel_m20k: u32,
     /// Number of DDR4 channels on the card.
     pub ddr_channels: u32,
+    /// DDR4 capacity per channel in bytes (520N: 8 GiB modules).
+    pub ddr_bytes_per_channel: u64,
+    /// QSFP28 network ports on the card (the 520N exposes four 100 Gb
+    /// serial links — the cluster layer's card↔card fabric).
+    pub serial_links: u32,
 }
 
 impl Stratix10 {
@@ -40,7 +45,15 @@ impl Stratix10 {
             // BSP reserves ≈10% of M20Ks (Intel BSP floorplans); estimate.
             kernel_m20k: 10_500,
             ddr_channels: 4,
+            ddr_bytes_per_channel: 8 << 30,
+            serial_links: 4,
         }
+    }
+
+    /// Total card DDR4 capacity in bytes (32 GiB on the 520N) — the
+    /// bound the router uses to decide a GEMM no longer fits one card.
+    pub fn ddr_capacity_bytes(&self) -> u64 {
+        self.ddr_channels as u64 * self.ddr_bytes_per_channel
     }
 
     /// Fraction of kernel-available DSPs used by `n` DSP blocks.
@@ -104,6 +117,13 @@ mod tests {
         assert!((t - 3462.0).abs() < 1.0, "{t}");
         // Design F: 4480 at 410 -> 3673.
         assert!((dev.peak_gflops(4480, 410.0) - 3673.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn card_capacity_and_links() {
+        let dev = Stratix10::gx2800_520n();
+        assert_eq!(dev.ddr_capacity_bytes(), 32 << 30);
+        assert_eq!(dev.serial_links, 4);
     }
 
     #[test]

@@ -46,6 +46,29 @@ impl Matrix {
         self.data[i * self.cols + j] = v;
     }
 
+    /// Copy out the `rows × cols` submatrix anchored at `(r0, c0)`.
+    pub fn submatrix(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Matrix {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "submatrix out of range");
+        let mut out = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            let src = &self.data[(r0 + i) * self.cols + c0..][..cols];
+            out.data[i * cols..(i + 1) * cols].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Paste `block` into this matrix with its top-left at `(r0, c0)`.
+    pub fn write_submatrix(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        assert!(
+            r0 + block.rows <= self.rows && c0 + block.cols <= self.cols,
+            "write_submatrix out of range"
+        );
+        for i in 0..block.rows {
+            self.data[(r0 + i) * self.cols + c0..][..block.cols]
+                .copy_from_slice(&block.data[i * block.cols..(i + 1) * block.cols]);
+        }
+    }
+
     /// Max |a - b| over all elements.
     pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -102,12 +125,24 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// CPU code on this testbed" measurement path. Block sizes sized for a
 /// ~1 MiB L2.
 pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_blocked_into(&mut c, a, b);
+    c
+}
+
+/// Accumulating variant: `c += a·b`, with the per-element accumulation
+/// running over k in strictly ascending order (continuing from whatever
+/// `c` already holds). This is the primitive the cluster layer uses to
+/// reduce k-split partial C tiles *bit-exactly*: folding a k range into
+/// an existing partial is the same scalar addition chain the dense call
+/// performs over the full k extent.
+pub fn matmul_blocked_into(c: &mut Matrix, a: &Matrix, b: &Matrix) {
     assert_eq!(a.cols, b.rows, "contraction mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "accumulator shape mismatch");
     const MB: usize = 64;
     const KB: usize = 256;
     const NB: usize = 256;
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Matrix::zeros(m, n);
     for k0 in (0..k).step_by(KB) {
         let kmax = (k0 + KB).min(k);
         for i0 in (0..m).step_by(MB) {
@@ -132,7 +167,6 @@ pub fn matmul_blocked(a: &Matrix, b: &Matrix) -> Matrix {
             }
         }
     }
-    c
 }
 
 #[cfg(test)]
@@ -177,6 +211,40 @@ mod tests {
             let blocked = matmul_blocked(&a, &b);
             let err = blocked.rel_fro_error(&naive);
             assert!(err < 1e-5, "({m},{k},{n}): rel err {err}");
+        }
+    }
+
+    #[test]
+    fn submatrix_roundtrip() {
+        let m = Matrix::random(7, 9, 5);
+        let s = m.submatrix(2, 3, 4, 5);
+        assert_eq!((s.rows, s.cols), (4, 5));
+        assert_eq!(s.at(0, 0), m.at(2, 3));
+        assert_eq!(s.at(3, 4), m.at(5, 7));
+        let mut back = Matrix::zeros(7, 9);
+        back.write_submatrix(2, 3, &s);
+        assert_eq!(back.at(5, 7), m.at(5, 7));
+        assert_eq!(back.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn k_split_accumulation_is_bit_exact() {
+        // Folding a split k range through matmul_blocked_into reproduces
+        // the dense result bitwise — the invariant the cluster reduction
+        // relies on.
+        let (m, k, n) = (13, 97, 11);
+        let a = Matrix::random(m, k, 41);
+        let b = Matrix::random(k, n, 42);
+        let dense = matmul_blocked(&a, &b);
+        for split in [1usize, 31, 64, 96] {
+            let mut c = Matrix::zeros(m, n);
+            matmul_blocked_into(&mut c, &a.submatrix(0, 0, m, split), &b.submatrix(0, 0, split, n));
+            matmul_blocked_into(
+                &mut c,
+                &a.submatrix(0, split, m, k - split),
+                &b.submatrix(split, 0, k - split, n),
+            );
+            assert_eq!(c.data, dense.data, "split at {split}");
         }
     }
 

@@ -7,4 +7,4 @@
 
 pub mod dense;
 
-pub use dense::{matmul, matmul_blocked, Matrix};
+pub use dense::{matmul, matmul_blocked, matmul_blocked_into, Matrix};

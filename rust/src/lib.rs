@@ -13,9 +13,20 @@
 //!   blocked off-chip algorithm and its event-level simulator
 //!   ([`blocked`]), the analytical model (eqs. 1–19, [`perfmodel`]),
 //!   design-space exploration ([`dse`]), the paper's comparison baselines
-//!   ([`baselines`]), and a GEMM service ([`coordinator`]) that executes
-//!   requests functionally through AOT-compiled XLA artifacts
-//!   ([`runtime`]) while timing them on the FPGA simulator.
+//!   ([`baselines`]), a GEMM service ([`coordinator`]) that executes
+//!   requests functionally through AOT-compiled artifacts ([`runtime`])
+//!   while timing them on the FPGA simulator, and a **multi-FPGA cluster
+//!   layer** ([`cluster`]) that shards GEMMs too large for one card over
+//!   a fleet of simulated 520Ns — 1D/2D/2.5D partitioners, PCIe/QSFP
+//!   interconnect models, and a work-stealing scheduler that overlaps
+//!   shard transfer with compute. Requests that exceed a single card's
+//!   DDR capacity (or fit no Table-I blocking) route to the cluster
+//!   (`Route::Sharded`).
+//!
+//! The [`runtime`] engine has two builds: the real PJRT/XLA executor
+//! behind the `pjrt` feature, and a default interpreter that replays
+//! each artifact's recorded tile through the functional off-chip
+//! simulator — same accumulation order, no XLA toolchain needed.
 //! * **L2** — `python/compile/model.py`: the blocked matmul as a JAX
 //!   graph, AOT-lowered to `artifacts/*.hlo.txt` at build time.
 //! * **L1** — `python/compile/kernels/systolic_mm.py`: the 3D systolic
@@ -27,6 +38,7 @@
 
 pub mod baselines;
 pub mod blocked;
+pub mod cluster;
 pub mod coordinator;
 pub mod dse;
 pub mod fpga;

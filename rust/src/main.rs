@@ -34,6 +34,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("codegen") => cmd_codegen(&args),
+        Some("cluster") => cmd_cluster(&args),
         _ => {
             print_usage();
             Ok(())
@@ -56,7 +57,9 @@ fn print_usage() {
          verify   [--artifacts DIR]          check artifacts vs GEMM oracle\n\
          serve    [--requests N] [--artifacts DIR]  run the GEMM service demo\n\
          ablate   [--d2 4096]                ablation studies (§III-C/§V claims)\n\
-         codegen  [--design G]               emit the OpenCL HLS kernel source"
+         codegen  [--design G]               emit the OpenCL HLS kernel source\n\
+         cluster  [--devices 4] [--d2 21504] [--design G] [--strategy auto|1d|2d|2.5d|all]\n\
+                  [--mix]                    shard one GEMM over a simulated fleet"
     );
 }
 
@@ -91,6 +94,59 @@ fn cmd_ablate(args: &Args) -> anyhow::Result<()> {
             dsps,
             if chained { "fits" } else { "FAILS" },
             if broadcast { "fits" } else { "FAILS" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+
+    let devices = args.get_usize("devices", 4).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(devices >= 1, "--devices must be at least 1");
+    let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
+    let id = args.get_str("design", "G").to_uppercase();
+    let strategy = args.get_str("strategy", "auto").to_lowercase();
+
+    let fleet = if args.flag("mix") {
+        Fleet::mixed_table1(devices)
+    } else {
+        Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?
+    };
+    let sim = ClusterSim::new(fleet);
+
+    let n = devices as u64;
+    let runs: Vec<(PartitionPlan, systo3d::cluster::ClusterReport)> = if strategy == "auto" {
+        // The planner simulates every candidate; reuse its winning report.
+        vec![sim
+            .plan_and_report(d2, d2, d2)
+            .ok_or_else(|| anyhow::anyhow!("no partition plan for d2={d2}"))?]
+    } else {
+        let plans = match strategy.as_str() {
+            "1d" => vec![PartitionPlan::new(PartitionStrategy::Row1D { devices: n }, d2, d2, d2)
+                .map_err(anyhow::Error::msg)?],
+            "2d" => vec![PartitionPlan::new(PartitionStrategy::auto_grid2d(n), d2, d2, d2)
+                .map_err(anyhow::Error::msg)?],
+            "2.5d" => vec![PartitionPlan::new(PartitionStrategy::auto_summa25d(n), d2, d2, d2)
+                .map_err(anyhow::Error::msg)?],
+            "all" => sim.candidate_plans(d2, d2, d2),
+            other => anyhow::bail!("unknown --strategy {other} (auto|1d|2d|2.5d|all)"),
+        };
+        plans
+            .into_iter()
+            .map(|p| {
+                let r = sim.simulate(&p);
+                (p, r)
+            })
+            .collect()
+    };
+
+    for (plan, report) in &runs {
+        println!("{}", report.render());
+        println!(
+            "  plan moves {:.2} GB total ({:.2} FLOP/byte)\n",
+            plan.total_bytes_moved() as f64 / 1e9,
+            plan.flops_per_byte()
         );
     }
     Ok(())
@@ -258,6 +314,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         artifact_dir: Some(PathBuf::from(dir)),
         max_batch: 8,
         batch_window: Duration::from_millis(2),
+        ..Default::default()
     };
     let svc = GemmService::start(config)?;
     let sizes = [64usize, 256, 512];

@@ -35,6 +35,12 @@ impl DdrChannel {
     pub fn floats_per_cycle(&self, e: f64, f_mhz: f64) -> f64 {
         self.effective_bytes_per_s(e) / (f_mhz * 1e6) / 4.0
     }
+
+    /// Seconds to move `bytes` at controller efficiency `e` — the
+    /// transfer-time primitive the cluster interconnect reuses.
+    pub fn seconds_for_bytes(&self, e: f64, bytes: u64) -> f64 {
+        bytes as f64 / self.effective_bytes_per_s(e)
+    }
 }
 
 /// Outcome of the stall analysis for one LSU↔channel pairing.

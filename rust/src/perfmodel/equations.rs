@@ -138,6 +138,13 @@ pub fn dsp_efficiency(t_flops: f64, t_peak: f64) -> f64 {
     t_flops / t_peak
 }
 
+/// Multi-device scaling efficiency: `(t_1 / t_n) / n` — 1.0 is perfect
+/// linear scaling of an n-card cluster over the single-card time `t_1`.
+pub fn scaling_efficiency(n: u64, t1_seconds: f64, tn_seconds: f64) -> f64 {
+    assert!(n > 0 && t1_seconds > 0.0 && tn_seconds > 0.0);
+    (t1_seconds / tn_seconds) / n as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,5 +292,13 @@ mod tests {
         let t = measured_flops(1_000_000_000, 0.5);
         assert_eq!(t, 2e9);
         assert!((dsp_efficiency(t, 4e9) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_efficiency_bounds() {
+        // Perfect halving at n=2 is 1.0; no speedup at n=2 is 0.5.
+        assert!((scaling_efficiency(2, 1.0, 0.5) - 1.0).abs() < 1e-12);
+        assert!((scaling_efficiency(2, 1.0, 1.0) - 0.5).abs() < 1e-12);
+        assert!((scaling_efficiency(4, 1.0, 0.3) - 1.0 / 1.2).abs() < 1e-12);
     }
 }

@@ -1,0 +1,234 @@
+//! Interpreter engine: the default, XLA-free implementation of the
+//! runtime API.
+//!
+//! Each artifact records the systolic tile it was compiled with
+//! (`manifest.json` → [`super::artifact::TileMeta`]); executing an
+//! artifact here replays that blocked schedule through the functional
+//! mode of [`crate::blocked::OffchipSim`], which accumulates in the
+//! exact slab order of the Pallas kernel. The functional results are
+//! therefore bit-compatible with the cycle-accurate simulator, and the
+//! engine satisfies the same contracts as the PJRT executor (shape
+//! checks, compile caching, missing-file diagnostics) so every caller —
+//! the coordinator, the CLI `verify`, the integration tests — runs
+//! unchanged without the `pjrt` feature.
+
+use super::artifact::{ArtifactMeta, Manifest, TileMeta};
+use crate::blocked::{Level1Blocking, OffchipDesign, OffchipSim};
+use crate::gemm::{matmul_blocked, Matrix};
+use crate::systolic::ArraySize;
+use std::collections::HashSet;
+use std::path::Path;
+use std::time::Instant;
+
+/// Execution statistics for one call.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecStats {
+    /// Host wall-clock of the execute call (s).
+    pub exec_seconds: f64,
+    /// Whether the executable came from the compile cache.
+    pub cache_hit: bool,
+}
+
+/// The interpreter engine: same surface as the PJRT executor, math via
+/// the functional simulator.
+pub struct Engine {
+    /// Artifacts "compiled" so far (cache-hit accounting parity).
+    compiled: HashSet<String>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Create an engine over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Self { compiled: HashSet::new(), manifest })
+    }
+
+    /// Platform string (parity with `PjRtClient::platform_name`).
+    pub fn platform(&self) -> String {
+        "interpreter".to_string()
+    }
+
+    /// Execute an artifact by name on f32 matrices. Returns the single
+    /// output matrix plus stats.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[&Matrix],
+    ) -> anyhow::Result<(Matrix, ExecStats)> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "artifact {name} takes {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        anyhow::ensure!(
+            inputs.len() >= 2,
+            "artifact {name} declares {} input(s); a matmul needs at least 2",
+            inputs.len()
+        );
+        for (idx, (m, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            anyhow::ensure!(
+                (m.rows, m.cols) == *want,
+                "artifact {name} input {idx}: shape ({},{}) != expected {:?}",
+                m.rows,
+                m.cols,
+                want
+            );
+        }
+
+        let cache_hit = self.compiled.contains(name);
+        if !cache_hit {
+            Self::compile_check(&meta)?;
+            self.compiled.insert(name.to_string());
+        }
+
+        let t0 = Instant::now();
+        // Fold the inputs left-to-right; matmul and chain artifacts both
+        // produce (rows of first input, cols of last input).
+        let sim = tile_sim(&meta.tile);
+        let mut out = Self::one_multiply(sim.as_ref(), inputs[0], inputs[1]);
+        for extra in &inputs[2..] {
+            out = Self::one_multiply(sim.as_ref(), &out, extra);
+        }
+        let exec_seconds = t0.elapsed().as_secs_f64();
+        Ok((out, ExecStats { exec_seconds, cache_hit }))
+    }
+
+    /// One A·B with the artifact's tile schedule when the shapes conform
+    /// to its blocking, the plain blocked GEMM otherwise.
+    fn one_multiply(sim: Option<&OffchipSim>, a: &Matrix, b: &Matrix) -> Matrix {
+        if let Some(sim) = sim {
+            let ok = sim
+                .design
+                .blocking
+                .validate_offchip(a.rows as u64, b.cols as u64, a.cols as u64)
+                .is_ok();
+            if ok {
+                return sim.simulate_functional(a, b).c.expect("functional mode returns C");
+            }
+        }
+        matmul_blocked(a, b)
+    }
+
+    /// The stand-in for PJRT compilation: the artifact file must exist
+    /// (same diagnostic as the real executor).
+    fn compile_check(meta: &ArtifactMeta) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            meta.path.exists(),
+            "artifact file missing: {:?} (run `make artifacts`)",
+            meta.path
+        );
+        Ok(())
+    }
+
+    /// Pre-compile every artifact (warm start for the serving path).
+    /// Returns (name, compile seconds) per newly compiled artifact.
+    pub fn warmup(&mut self) -> anyhow::Result<Vec<(String, f64)>> {
+        let metas: Vec<ArtifactMeta> = self.manifest.artifacts.clone();
+        let mut out = Vec::new();
+        for meta in metas {
+            if self.compiled.contains(&meta.name) {
+                continue;
+            }
+            let t0 = Instant::now();
+            Self::compile_check(&meta)?;
+            self.compiled.insert(meta.name.clone());
+            out.push((meta.name.clone(), t0.elapsed().as_secs_f64()));
+        }
+        Ok(out)
+    }
+}
+
+/// Build the functional simulator for an artifact's recorded tile, if
+/// the tile is a valid array/blocking combination.
+fn tile_sim(tile: &TileMeta) -> Option<OffchipSim> {
+    let array = ArraySize { di0: tile.di0, dj0: tile.dj0, dk0: tile.dk0, dp: tile.dp };
+    array.validate().ok()?;
+    let blocking = Level1Blocking { array, di1: tile.di1, dj1: tile.dj1 };
+    blocking.validate().ok()?;
+    Some(OffchipSim::new(OffchipDesign {
+        blocking,
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul;
+
+    fn write_manifest(dir: &Path, with_file: bool) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": "hlo-text-v1", "artifacts":
+                [{"name": "mm_h_64", "file": "mm_h_64.hlo.txt", "kind": "matmul",
+                  "inputs": [[64, 64], [64, 64]],
+                  "tile": {"di0":32,"dj0":32,"dk0":4,"dp":4,"di1":64,"dj1":64}}]}"#,
+        )
+        .unwrap();
+        if with_file {
+            std::fs::write(dir.join("mm_h_64.hlo.txt"), "HloModule interp_stub\n").unwrap();
+        }
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("systo3d-interp-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn executes_with_kernel_accumulation_order() {
+        let dir = temp_dir("exec");
+        write_manifest(&dir, true);
+        let mut engine = Engine::new(&dir).unwrap();
+        let a = Matrix::random(64, 64, 21);
+        let b = Matrix::random(64, 64, 22);
+        let (got, s1) = engine.execute("mm_h_64", &[&a, &b]).unwrap();
+        // Bitwise identical to the functional simulator on the same tile.
+        let array = ArraySize::new(32, 32, 4, 4);
+        let sim = OffchipSim::new(OffchipDesign {
+            blocking: Level1Blocking::new(array, 64, 64),
+            fmax_mhz: 400.0,
+            controller_efficiency: 0.97,
+        });
+        let want = sim.simulate_functional(&a, &b).c.unwrap();
+        assert_eq!(got.data, want.data);
+        // And allclose to the dense oracle.
+        assert!(got.rel_fro_error(&matmul(&a, &b)) < 1e-5);
+        // Cache accounting parity with the PJRT engine.
+        let (_, s2) = engine.execute("mm_h_64", &[&a, &b]).unwrap();
+        assert!(!s1.cache_hit);
+        assert!(s2.cache_hit);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_reported_like_pjrt() {
+        let dir = temp_dir("ghost");
+        write_manifest(&dir, false);
+        let mut engine = Engine::new(&dir).unwrap();
+        let a = Matrix::random(64, 64, 1);
+        let err = engine.execute("mm_h_64", &[&a, &a]).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = temp_dir("shape");
+        write_manifest(&dir, true);
+        let mut engine = Engine::new(&dir).unwrap();
+        let a = Matrix::random(32, 64, 1);
+        let b = Matrix::random(64, 64, 2);
+        let err = engine.execute("mm_h_64", &[&a, &b]).unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

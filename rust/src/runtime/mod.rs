@@ -1,17 +1,33 @@
-//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//! Runtime: load and execute the AOT-compiled HLO artifacts.
 //!
 //! This is the only bridge between L3 (Rust) and the L1/L2 compute
 //! graphs. `make artifacts` runs Python once to emit
 //! `artifacts/*.hlo.txt` + `manifest.json`; from then on this module is
-//! self-contained: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
-//! → `compile` → `execute`.
+//! self-contained.
 //!
-//! HLO **text** is the interchange format — xla_extension 0.5.1 (behind
-//! the published `xla` 0.1.6 crate) rejects jax ≥ 0.5 serialized protos
-//! (64-bit instruction ids); the text parser reassigns ids.
+//! Two interchangeable engines sit behind the same API:
+//!
+//! * **`pjrt` feature** — the real XLA path:
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile`
+//!   → `execute`. HLO **text** is the interchange format —
+//!   xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate)
+//!   rejects jax ≥ 0.5 serialized protos (64-bit instruction ids); the
+//!   text parser reassigns ids. Requires adding `xla = "0.1.6"` to
+//!   Cargo.toml (not in the offline registry).
+//! * **default** — an interpreter [`Engine`] that executes each
+//!   artifact's math through the functional off-chip simulator
+//!   configured with the artifact's recorded tile, so the whole serving
+//!   and verification stack runs (with the *same accumulation order* as
+//!   the compiled kernel) on a machine without the XLA toolchain.
 
 pub mod artifact;
+
+#[cfg(feature = "pjrt")]
+pub mod executor;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "interp.rs"]
 pub mod executor;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
-pub use executor::Engine;
+pub use executor::{Engine, ExecStats};

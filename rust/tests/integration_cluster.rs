@@ -1,0 +1,160 @@
+//! Integration: the multi-FPGA cluster layer against the dense GEMM
+//! oracle and the single-card simulator stack.
+
+use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::coordinator::{Route, Router};
+use systo3d::gemm::{matmul, matmul_blocked, Matrix};
+use systo3d::perfmodel::scaling_efficiency;
+use systo3d::util::proptest::check;
+
+/// Every partitioner's shards reassemble to exactly the dense result,
+/// over random non-square shapes including ones that don't divide
+/// evenly by the grid.
+#[test]
+fn shards_reassemble_bit_exact_over_random_geometry() {
+    check("sharded == dense matmul_blocked", 40, |g| {
+        let m = g.u64(1, 96);
+        let k = g.u64(1, 96);
+        let n = g.u64(1, 96);
+        let strategy = match g.usize(0, 2) {
+            0 => PartitionStrategy::Row1D { devices: g.u64(1, 9) },
+            1 => PartitionStrategy::Grid2D { p: g.u64(1, 4), q: g.u64(1, 4) },
+            _ => PartitionStrategy::Summa25D {
+                p: g.u64(1, 3),
+                q: g.u64(1, 3),
+                c: g.u64(1, 5),
+            },
+        };
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(m as usize, k as usize, seed);
+        let b = Matrix::random(k as usize, n as usize, seed + 1);
+        let plan = PartitionPlan::new(strategy, m, k, n)
+            .unwrap_or_else(|e| panic!("{strategy:?} on ({m},{k},{n}): {e}"));
+        plan.validate_cover().unwrap();
+        let got = plan.execute_functional(&a, &b);
+        let dense = matmul_blocked(&a, &b);
+        assert_eq!(got.data, dense.data, "{strategy:?} on ({m},{k},{n})");
+        // And allclose to the naive oracle (different fold shape).
+        assert!(got.rel_fro_error(&matmul(&a, &b)) < 1e-4);
+    });
+}
+
+/// The full sharded pipeline (plan → schedule → reduce) is bit-exact
+/// too, fleet size independent of the plan's device count.
+#[test]
+fn cluster_functional_bit_exact_over_random_fleets() {
+    let design = systo3d::blocked::OffchipDesign {
+        blocking: systo3d::blocked::Level1Blocking::new(
+            systo3d::systolic::ArraySize::new(4, 4, 2, 2),
+            8,
+            8,
+        ),
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    };
+    check("cluster functional == dense", 15, |g| {
+        let m = g.u64(1, 64);
+        let k = g.u64(1, 64);
+        let n = g.u64(1, 64);
+        let fleet_n = g.usize(1, 5);
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(m as usize, k as usize, seed);
+        let b = Matrix::random(k as usize, n as usize, seed + 1);
+        let sim = ClusterSim::new(Fleet::uniform(fleet_n, "mini", design));
+        let plan = sim.auto_plan(m, k, n).expect("plan");
+        let (report, c) = sim.simulate_functional(&plan, &a, &b);
+        assert!(report.makespan_seconds > 0.0);
+        assert_eq!(c.data, matmul_blocked(&a, &b).data, "({m},{k},{n}) x{fleet_n}");
+    });
+}
+
+/// Acceptance: >1.8x simulated speedup at N=2 with per-device
+/// utilization reported, on the paper's largest problem.
+#[test]
+fn n2_speedup_and_utilization() {
+    let d = 21504u64;
+    let sim1 = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+    let t1 = sim1.plan_and_report(d, d, d).unwrap().1.makespan_seconds;
+
+    let sim2 = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+    let (_, r2) = sim2.plan_and_report(d, d, d).unwrap();
+    let speedup = t1 / r2.makespan_seconds;
+    assert!(speedup > 1.8, "N=2 speedup {speedup:.2}");
+    assert_eq!(r2.per_device.len(), 2);
+    for dev in &r2.per_device {
+        assert!(dev.utilization > 0.0 && dev.utilization <= 1.0, "{dev:?}");
+        assert!(dev.compute_seconds > 0.0);
+    }
+    assert!(scaling_efficiency(2, t1, r2.makespan_seconds) > 0.9);
+}
+
+/// Effective throughput keeps rising through N=8 (no scaling collapse
+/// from the transfer model at this problem size).
+#[test]
+fn throughput_monotone_to_n8() {
+    let d = 21504u64;
+    let mut last = 0.0;
+    for n in [1usize, 2, 4, 8] {
+        let sim = ClusterSim::new(Fleet::homogeneous(n, "G").unwrap());
+        let (_, r) = sim.plan_and_report(d, d, d).unwrap();
+        assert!(
+            r.effective_gflops > last,
+            "n={n}: {} after {last}",
+            r.effective_gflops
+        );
+        last = r.effective_gflops;
+    }
+    // 8 cards of ~3 TFLOPS: well past 10 simulated TFLOPS.
+    assert!(last > 10_000.0, "N=8 effective {last} GFLOPS");
+}
+
+/// Acceptance: the 2.5D partitioner moves measurably fewer bytes than
+/// 1D-row on a square d=21504 problem.
+#[test]
+fn summa25d_communication_advantage() {
+    let d = 21504u64;
+    let row = PartitionPlan::new(PartitionStrategy::Row1D { devices: 8 }, d, d, d).unwrap();
+    let summa = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
+    assert!(
+        (summa.total_bytes_moved() as f64) < 0.7 * row.total_bytes_moved() as f64,
+        "2.5D {} vs 1D {}",
+        summa.total_bytes_moved(),
+        row.total_bytes_moved()
+    );
+    // And it pays off end to end: lower makespan on the same fleet.
+    let sim = ClusterSim::new(Fleet::homogeneous(8, "G").unwrap());
+    let t_row = sim.simulate(&row).makespan_seconds;
+    let t_summa = sim.simulate(&summa).makespan_seconds;
+    assert!(t_summa < t_row, "2.5D {t_summa} vs 1D {t_row}");
+}
+
+/// A heterogeneous Table-I rack completes correctly and work-stealing
+/// keeps every card busy.
+#[test]
+fn mixed_fleet_work_stealing() {
+    let d = 21504u64;
+    let sim = ClusterSim::new(Fleet::mixed_table1(4));
+    // Force many more shards than devices so stealing has material.
+    let plan = PartitionPlan::new(PartitionStrategy::Summa25D { p: 4, q: 2, c: 2 }, d, d, d)
+        .unwrap();
+    let r = sim.simulate(&plan);
+    assert_eq!(r.per_device.len(), 4);
+    for dev in &r.per_device {
+        assert!(dev.shards > 0, "{dev:?} never worked");
+    }
+    // The fleet mixes designs with different peaks.
+    let peaks: std::collections::BTreeSet<u64> =
+        r.per_device.iter().map(|d| d.peak_gflops as u64).collect();
+    assert!(peaks.len() > 1, "fleet should be heterogeneous: {peaks:?}");
+}
+
+/// The router sends cluster-worthy shapes to the sharded route and
+/// leaves paper-size problems on the single card.
+#[test]
+fn router_sharding_decisions() {
+    let r = Router::new(None);
+    assert_eq!(r.route(21504, 21504, 21504), Route::Fallback);
+    assert_eq!(r.route(1100, 1100, 1100), Route::Sharded);
+    assert_eq!(r.route(65536, 65536, 65536), Route::Sharded);
+    assert_eq!(r.route(96, 96, 96), Route::Fallback);
+}

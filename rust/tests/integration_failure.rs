@@ -67,6 +67,7 @@ fn service_survives_bad_artifact_dir() {
         artifact_dir: Some("/nonexistent-dir-xyz".into()),
         max_batch: 2,
         batch_window: Duration::from_millis(1),
+        ..Default::default()
     })
     .unwrap();
     let a = Matrix::random(8, 8, 1);
@@ -82,6 +83,7 @@ fn service_shutdown_on_drop_is_clean() {
         artifact_dir: None,
         max_batch: 2,
         batch_window: Duration::from_millis(1),
+        ..Default::default()
     })
     .unwrap();
     let a = Matrix::random(4, 4, 1);
@@ -98,6 +100,7 @@ fn mismatched_request_shapes_contained() {
         artifact_dir: None,
         max_batch: 2,
         batch_window: Duration::from_millis(1),
+        ..Default::default()
     })
     .unwrap();
     let a = Matrix::random(8, 4, 1);

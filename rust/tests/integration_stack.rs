@@ -119,6 +119,7 @@ fn coordinator_fallback_end_to_end() {
         artifact_dir: None,
         max_batch: 4,
         batch_window: Duration::from_millis(1),
+        ..Default::default()
     })
     .unwrap();
 
