@@ -57,13 +57,14 @@ fn main() -> anyhow::Result<()> {
         let c = e.chained.then(|| Matrix::random(e.n, e.n, id * 3 + 3));
         // Keep copies for verification.
         let (va, vb, vc) = (a.clone(), b.clone(), c.clone());
-        let rx = svc.submit(GemmRequest { id, a, b, chain: c });
+        let rx = svc.submit(GemmRequest { id, a, b, chain: c, error_budget: None });
         inflight.push((id, rx, va, vb, vc));
     }
 
     let mut artifact_jobs = 0u64;
     let mut fallback_jobs = 0u64;
     let mut sharded_jobs = 0u64;
+    let mut strassen_jobs = 0u64;
     let mut sim_fpga_seconds = 0.0;
     let mut sim_fpga_flops = 0u64;
     let mut checked = 0u64;
@@ -74,6 +75,7 @@ fn main() -> anyhow::Result<()> {
             Route::Artifact(_) => artifact_jobs += 1,
             Route::Fallback => fallback_jobs += 1,
             Route::Sharded => sharded_jobs += 1,
+            Route::Strassen => strassen_jobs += 1,
         }
         // Verify every result against the oracle.
         let mut want = matmul_blocked(&va, &vb);
@@ -98,7 +100,7 @@ fn main() -> anyhow::Result<()> {
     println!("wall time:          {wall:.3} s  ({:.1} req/s)", n_requests as f64 / wall);
     println!(
         "routes:             {artifact_jobs} artifact (PJRT), {fallback_jobs} fallback (CPU GEMM), \
-         {sharded_jobs} sharded (cluster)"
+         {sharded_jobs} sharded (cluster), {strassen_jobs} strassen"
     );
     println!("batches:            {}", snap.batches);
     println!("host throughput:    {:.2} GFLOPS functional", snap.flops as f64 / wall / 1e9);

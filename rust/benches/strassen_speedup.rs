@@ -1,0 +1,61 @@
+//! Bench: the Strassen layer — planner host cost, functional recursion
+//! vs the blocked GEMM on the host CPU, and the simulated effective
+//! throughput the subsystem is judged by.
+//!
+//! ```sh
+//! cargo bench --bench strassen_speedup
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign};
+use systo3d::gemm::{matmul_blocked, Matrix};
+use systo3d::strassen::{self, strassen_matmul, StrassenConfig};
+use systo3d::systolic::ArraySize;
+
+fn design_g() -> OffchipDesign {
+    OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(64, 32, 2, 2), 512, 512),
+        fmax_mhz: 398.0,
+        controller_efficiency: 0.97,
+    }
+}
+
+fn main() {
+    let b = common::bench();
+    let config = StrassenConfig::default();
+
+    common::section("strassen: planner host cost (pure arithmetic, 4 depths)");
+    let s = b.run("plan d2=21504 design G", || {
+        strassen::plan(design_g(), 21504, 21504, 21504, &config).depth
+    });
+    common::report(&s);
+
+    common::section("strassen: functional recursion vs blocked GEMM (768^3, host CPU)");
+    let a = Matrix::random(768, 768, 1);
+    let m = Matrix::random(768, 768, 2);
+    let s0 = b.run("matmul_blocked", || matmul_blocked(&a, &m).at(0, 0));
+    common::report(&s0);
+    for depth in [1u32, 2] {
+        let s1 = b.run(&format!("strassen depth {depth}"), || {
+            strassen_matmul(&a, &m, depth).at(0, 0)
+        });
+        common::report(&s1);
+        println!("  host time vs blocked: {:.2}x", s0.median() / s1.median());
+    }
+
+    common::section("strassen: simulated effective GFLOPS vs eq. 5 peak (design G)");
+    let peak = design_g().peak_gflops();
+    for d2 in [8192u64, 16384, 21504, 32768] {
+        let p = strassen::plan(design_g(), d2, d2, d2, &config);
+        println!(
+            "d2={d2:>6}: depth {} -> {:.0} effective GFLOPS of {peak:.0} peak \
+             ({:.3}x, speedup {:.3}x vs classical)",
+            p.depth,
+            p.chosen().effective_gflops,
+            p.effective_vs_peak(),
+            p.speedup_vs_classical(),
+        );
+    }
+}

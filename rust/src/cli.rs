@@ -115,6 +115,16 @@ mod tests {
     }
 
     #[test]
+    fn strassen_subcommand_options() {
+        let a = parse("strassen --design G --d2 32768 --depth 2 --budget 1e-4 --devices 7");
+        assert_eq!(a.subcommand.as_deref(), Some("strassen"));
+        assert_eq!(a.get_u64("d2", 0).unwrap(), 32768);
+        assert_eq!(a.get_str("depth", "auto"), "2");
+        assert_eq!(a.get("budget"), Some("1e-4"));
+        assert_eq!(a.get_usize("devices", 1).unwrap(), 7);
+    }
+
+    #[test]
     fn cluster_subcommand_options() {
         let a = parse("cluster --devices 8 --d2 21504 --strategy 2.5d --mix");
         assert_eq!(a.subcommand.as_deref(), Some("cluster"));

@@ -9,7 +9,7 @@
 
 use super::interconnect::Interconnect;
 use super::partition::{PartitionPlan, PartitionStrategy, Shard};
-use super::scheduler::{run_schedule, ScheduleOutcome};
+use super::scheduler::{run_schedule, run_schedule_with_failures, ScheduleOutcome};
 use crate::blocked::{OffchipDesign, OffchipSim};
 use crate::dse::configs::fitted_designs;
 use crate::gemm::Matrix;
@@ -95,6 +95,8 @@ pub struct DeviceReport {
     pub id: String,
     pub shards: usize,
     pub stolen: usize,
+    /// Shards lost in flight when this device died.
+    pub lost: usize,
     pub transfer_seconds: f64,
     pub compute_seconds: f64,
     pub card_seconds: f64,
@@ -114,6 +116,9 @@ pub struct ClusterReport {
     pub n: u64,
     pub shards: usize,
     pub steals: usize,
+    /// Shard attempts lost to device deaths and re-executed on
+    /// survivors (0 on a healthy fleet).
+    pub retries: usize,
     pub makespan_seconds: f64,
     /// Paper-convention throughput over the whole problem.
     pub effective_gflops: f64,
@@ -134,7 +139,7 @@ impl ClusterReport {
     pub fn render(&self) -> String {
         let mut out = format!(
             "cluster {} on {} device(s): ({} x {}) * ({} x {})\n\
-             shards: {} ({} stolen)  makespan: {:.4} s\n\
+             shards: {} ({} stolen, {} retried)  makespan: {:.4} s\n\
              effective: {:.0} GFLOPS of {:.0} aggregate peak (e_C = {:.3})\n\
              bytes: {:.1} MB host->dev, {:.1} MB dev<->dev, {:.1} MB dev->host\n",
             self.strategy,
@@ -145,6 +150,7 @@ impl ClusterReport {
             self.n,
             self.shards,
             self.steals,
+            self.retries,
             self.makespan_seconds,
             self.effective_gflops,
             self.aggregate_peak_gflops,
@@ -198,6 +204,27 @@ impl ClusterSim {
             self.shard_seconds(d, s)
         });
         self.report(plan, outcome)
+    }
+
+    /// Timing run with injected device deaths: `deaths[d]` is the time
+    /// at which fleet device `d` dies (missing / `None` = healthy). A
+    /// dying card's in-flight shard requeues on a survivor and its
+    /// queued shards drain via work-stealing; the run errors only when
+    /// every card is dead with shards outstanding.
+    pub fn simulate_with_failures(
+        &self,
+        plan: &PartitionPlan,
+        deaths: &[Option<f64>],
+    ) -> Result<ClusterReport, String> {
+        assert!(!self.fleet.is_empty(), "empty fleet");
+        let outcome = run_schedule_with_failures(
+            plan,
+            self.fleet.len(),
+            &self.interconnect,
+            deaths,
+            |d, s| self.shard_seconds(d, s),
+        )?;
+        Ok(self.report(plan, outcome))
     }
 
     /// Timing + functional run (small sizes only).
@@ -270,6 +297,7 @@ impl ClusterSim {
                 id: dev.id.clone(),
                 shards: t.shards,
                 stolen: t.stolen,
+                lost: t.lost,
                 transfer_seconds: t.transfer_seconds,
                 compute_seconds: t.compute_seconds,
                 card_seconds: t.card_seconds,
@@ -289,6 +317,7 @@ impl ClusterSim {
             n: plan.n,
             shards: plan.shards.len(),
             steals: outcome.steals,
+            retries: outcome.retries,
             makespan_seconds: makespan,
             effective_gflops,
             aggregate_peak_gflops,

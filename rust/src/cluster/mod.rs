@@ -15,7 +15,11 @@
 //!   idiom.
 //! * [`scheduler`] — per-device work queues with work-stealing and
 //!   double-buffered overlap of shard DMA with compute; every shard is
-//!   timed by the device's [`crate::blocked::OffchipSim`].
+//!   timed by the device's [`crate::blocked::OffchipSim`]. Device
+//!   deaths are survivable: an in-flight shard bumps its attempt
+//!   counter and requeues on a surviving card, and a dead card's queue
+//!   drains through the stealing path
+//!   ([`scheduler::run_schedule_with_failures`]).
 //! * [`fleet`] — N (possibly heterogeneous Table-I) designs and the
 //!   [`ClusterSim`] front door producing a [`ClusterReport`]
 //!   (per-device utilization, critical path, effective TFLOPS vs.
@@ -33,4 +37,4 @@ pub mod scheduler;
 pub use fleet::{ClusterDevice, ClusterReport, ClusterSim, DeviceReport, Fleet};
 pub use interconnect::{Interconnect, Link};
 pub use partition::{PartitionPlan, PartitionStrategy, Shard};
-pub use scheduler::{run_schedule, DeviceTrace, ScheduleOutcome};
+pub use scheduler::{run_schedule, run_schedule_with_failures, DeviceTrace, ScheduleOutcome};

@@ -20,6 +20,16 @@
 //! back of the longest remaining queue. With heterogeneous fleets this
 //! lets a fast Table-I design finish its band and absorb a slow
 //! neighbour's tail instead of idling.
+//!
+//! Failure/retry: [`run_schedule_with_failures`] takes a per-device
+//! death time. A dying card loses whatever shard is in flight (DMA or
+//! compute crossing the death instant); the shard's attempt counter is
+//! bumped and it requeues on the least-loaded survivor, while the dead
+//! card's still-queued shards drain through the normal stealing path.
+//! Completed results are treated as checkpointed (they already reached
+//! DDR/host), and a drained tile whose reduction home died is re-homed
+//! onto the device that completed its last shard. Only when *every*
+//! device is dead with shards outstanding does the schedule fail.
 
 use super::interconnect::Interconnect;
 use super::partition::{PartitionPlan, Shard};
@@ -32,6 +42,9 @@ pub struct DeviceTrace {
     pub shards: usize,
     /// Of those, how many it stole from another queue.
     pub stolen: usize,
+    /// Shards lost in flight when this device died (each one retried
+    /// elsewhere).
+    pub lost: usize,
     /// Host-link busy seconds, both directions (shard DMA + C writeback).
     pub transfer_seconds: f64,
     /// Compute-engine busy seconds.
@@ -50,6 +63,8 @@ pub struct ScheduleOutcome {
     pub makespan_seconds: f64,
     /// Total steals across the fleet.
     pub steals: usize,
+    /// Shard attempts lost to device deaths and re-executed elsewhere.
+    pub retries: usize,
 }
 
 impl ScheduleOutcome {
@@ -74,15 +89,33 @@ struct TileState {
     c_bytes: u64,
 }
 
-/// Run `plan` over `ndev` devices whose per-shard compute time is given
-/// by `compute_seconds(device, shard)`.
+/// Run `plan` over `ndev` healthy devices whose per-shard compute time
+/// is given by `compute_seconds(device, shard)`.
 pub fn run_schedule(
     plan: &PartitionPlan,
     ndev: usize,
     interconnect: &Interconnect,
     compute_seconds: impl Fn(usize, &Shard) -> f64,
 ) -> ScheduleOutcome {
+    run_schedule_with_failures(plan, ndev, interconnect, &[], compute_seconds)
+        .expect("a healthy fleet cannot run out of devices")
+}
+
+/// As [`run_schedule`], with injected device deaths: `deaths[d]` is the
+/// simulated time at which device `d` dies (missing / `None` = healthy).
+/// A dying device loses its in-flight shard — the shard's attempt
+/// counter is bumped and it requeues on the least-loaded survivor —
+/// and takes no further work; its queued shards migrate via stealing.
+/// Errors only when every device is dead with shards outstanding.
+pub fn run_schedule_with_failures(
+    plan: &PartitionPlan,
+    ndev: usize,
+    interconnect: &Interconnect,
+    deaths: &[Option<f64>],
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> Result<ScheduleOutcome, String> {
     assert!(ndev > 0, "empty fleet");
+    let death = |d: usize| deaths.get(d).copied().flatten();
     let mut queues: Vec<VecDeque<Shard>> = vec![VecDeque::new(); ndev];
     for s in &plan.shards {
         queues[s.device % ndev].push_back(*s);
@@ -94,7 +127,12 @@ pub fn run_schedule(
     let mut compute_free = vec![0.0f64; ndev];
     let mut compute_ends: Vec<Vec<f64>> = vec![Vec::new(); ndev];
     let mut traces = vec![DeviceTrace::default(); ndev];
+    let mut dead = vec![false; ndev];
     let mut steals = 0usize;
+    let mut retries = 0usize;
+    // Per-shard attempt counters, keyed by the shard's unique
+    // (tile, k-range) identity within the plan.
+    let mut attempts: BTreeMap<(u64, u64, u64), usize> = BTreeMap::new();
 
     let mut tiles: BTreeMap<(u64, u64), TileState> = BTreeMap::new();
     for s in &plan.shards {
@@ -108,10 +146,16 @@ pub fn run_schedule(
 
     let mut pending: usize = plan.shards.len();
     while pending > 0 {
-        // The device whose host link frees first starts the next DMA.
+        // The live device whose host link frees first (strictly before
+        // its death) starts the next DMA.
         let d = (0..ndev)
-            .min_by(|a, b| link_free[*a].total_cmp(&link_free[*b]))
-            .unwrap();
+            .filter(|&d| !dead[d] && death(d).map_or(true, |td| link_free[d] < td))
+            .min_by(|a, b| link_free[*a].total_cmp(&link_free[*b]));
+        let Some(d) = d else {
+            return Err(format!(
+                "all {ndev} device(s) dead with {pending} shard(s) outstanding"
+            ));
+        };
         // Own queue first; otherwise steal from the longest queue.
         let (shard, stolen) = match queues[d].pop_front() {
             Some(s) => (s, false),
@@ -135,12 +179,50 @@ pub fn run_schedule(
         let xfer = interconnect.host_seconds(shard.input_bytes());
         let t_start = link_free[d].max(gate);
         let t_end = t_start + xfer;
-        link_free[d] = t_end;
-        traces[d].transfer_seconds += xfer;
 
         let comp = compute_seconds(d, &shard);
         let c_start = compute_free[d].max(t_end);
         let c_end = c_start + comp;
+
+        if let Some(td) = death(d) {
+            if c_end > td {
+                // The device dies with this shard in flight: charge the
+                // busy time actually spent, freeze the device at its
+                // death instant, and retry the shard on a survivor.
+                dead[d] = true;
+                traces[d].lost += 1;
+                traces[d].transfer_seconds += (td.min(t_end) - t_start).max(0.0);
+                traces[d].compute_seconds += (td - c_start).clamp(0.0, comp);
+                link_free[d] = td;
+                compute_free[d] = compute_free[d].min(td);
+                retries += 1;
+                let key = (shard.row0, shard.col0, shard.k0);
+                let tries = attempts.entry(key).or_insert(1);
+                *tries += 1;
+                if *tries > ndev + 1 {
+                    return Err(format!("shard {key:?} failed {tries} times"));
+                }
+                let survivor = (0..ndev)
+                    .filter(|&v| !dead[v] && death(v).map_or(true, |tv| link_free[v] < tv))
+                    .min_by_key(|&v| queues[v].len());
+                match survivor {
+                    Some(v) => {
+                        queues[v].push_back(shard);
+                        pending += 1;
+                    }
+                    None => {
+                        return Err(format!(
+                            "all {ndev} device(s) dead with {} shard(s) outstanding",
+                            pending + 1
+                        ))
+                    }
+                }
+                continue;
+            }
+        }
+
+        link_free[d] = t_end;
+        traces[d].transfer_seconds += xfer;
         compute_free[d] = c_end;
         compute_ends[d].push(c_end);
         traces[d].compute_seconds += comp;
@@ -161,8 +243,18 @@ pub fn run_schedule(
             tile.ready = tile.ready.max(s_end);
         }
         if tile.remaining == 0 {
-            let home = tile.home.expect("k-first shard completed before the tile drained");
+            let mut home = tile.home.expect("k-first shard completed before the tile drained");
             let wb = interconnect.host_seconds(tile.c_bytes);
+            // The reduction home may already be dead, or would die with
+            // this writeback in flight: completed partials are
+            // checkpointed, so the device finishing the tile inherits
+            // the writeback instead (keeping dead cards frozen at their
+            // death instant).
+            let doomed = dead[home]
+                || death(home).map_or(false, |td| out_free[home].max(tile.ready) + wb > td);
+            if home != d && doomed {
+                home = d;
+            }
             let wb_start = out_free[home].max(tile.ready);
             out_free[home] = wb_start + wb;
             traces[home].transfer_seconds += wb;
@@ -176,7 +268,7 @@ pub fn run_schedule(
         traces[d].finish_seconds = finish;
         makespan = makespan.max(finish);
     }
-    ScheduleOutcome { per_device: traces, makespan_seconds: makespan, steals }
+    Ok(ScheduleOutcome { per_device: traces, makespan_seconds: makespan, steals, retries })
 }
 
 #[cfg(test)]
@@ -252,6 +344,62 @@ mod tests {
             out.per_device[1].shards,
             out.per_device[0].shards
         );
+    }
+
+    #[test]
+    fn failed_shard_retries_on_survivor() {
+        // 2 shards, one per device. Device 0 dies mid-compute of its
+        // shard: the shard must re-execute on device 1.
+        let ic = Interconnect::pcie_cluster();
+        let p = plan(PartitionStrategy::Row1D { devices: 2 }, 4096);
+        let dma = ic.host_seconds(p.shards[0].input_bytes());
+        let deaths = [Some(dma + 0.5), None];
+        let out = run_schedule_with_failures(&p, 2, &ic, &deaths, |_, _| 1.0).unwrap();
+        assert_eq!(out.retries, 1);
+        assert_eq!(out.per_device[0].shards, 0);
+        assert_eq!(out.per_device[0].lost, 1);
+        assert_eq!(out.per_device[1].shards, 2);
+        assert_eq!(out.per_device[1].lost, 0);
+        // The dead device's busy time is truncated at its death.
+        assert!(out.per_device[0].finish_seconds <= dma + 0.5 + 1e-12);
+        // Healthy baseline is faster than the single-survivor rerun.
+        let healthy = run_schedule(&p, 2, &ic, |_, _| 1.0);
+        assert_eq!(healthy.retries, 0);
+        assert!(out.makespan_seconds > healthy.makespan_seconds);
+    }
+
+    #[test]
+    fn dead_device_queue_drains_via_stealing() {
+        // Device 0 dead from t=0 never starts work; its whole queue is
+        // stolen by device 1 with zero lost attempts.
+        let ic = Interconnect::pcie_cluster();
+        let p = plan(PartitionStrategy::Row1D { devices: 4 }, 4096);
+        let out =
+            run_schedule_with_failures(&p, 2, &ic, &[Some(0.0), None], flat_rate).unwrap();
+        assert_eq!(out.retries, 0);
+        assert_eq!(out.per_device[0].shards, 0);
+        assert_eq!(out.per_device[1].shards, 4);
+        assert!(out.per_device[1].stolen >= 2, "{out:?}");
+    }
+
+    #[test]
+    fn all_devices_dead_is_a_clean_error() {
+        let ic = Interconnect::pcie_cluster();
+        let p = plan(PartitionStrategy::Row1D { devices: 2 }, 2048);
+        let err = run_schedule_with_failures(&p, 2, &ic, &[Some(0.0), Some(0.0)], flat_rate)
+            .unwrap_err();
+        assert!(err.contains("dead"), "{err}");
+    }
+
+    #[test]
+    fn no_deaths_matches_plain_schedule() {
+        let ic = Interconnect::pcie_cluster();
+        let p = plan(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192);
+        let a = run_schedule(&p, 4, &ic, flat_rate);
+        let b = run_schedule_with_failures(&p, 4, &ic, &[None; 4], flat_rate).unwrap();
+        assert_eq!(a.makespan_seconds, b.makespan_seconds);
+        assert_eq!(a.steals, b.steals);
+        assert_eq!(b.retries, 0);
     }
 
     #[test]

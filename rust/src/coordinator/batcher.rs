@@ -6,7 +6,15 @@
 //! serving stack uses, scaled to this workload (same-shape GEMMs
 //! amortize executable lookup and keep the instruction cache hot; on a
 //! real accelerator they would share one device context).
+//!
+//! Optional padding-based bucketing ([`Batcher::with_bucketing`],
+//! toggled by `ServiceConfig::bucket_shapes`): instead of exact-shape
+//! keys, shapes bucket up to the next blocking-compatible padded
+//! extents (multiples of d_i1/d_j1/d_k0). On the accelerator a 500³ and
+//! a 512³ job run the *same* padded kernel launch, so splitting them
+//! into separate batches only fragments the stream.
 
+use crate::blocked::Level1Blocking;
 use std::collections::HashMap;
 
 /// A batch of request ids sharing a route key.
@@ -21,12 +29,34 @@ pub struct Batch<T> {
 #[derive(Clone, Debug)]
 pub struct Batcher {
     pub max_batch: usize,
+    /// When set, [`Self::shape_key`] buckets shapes to this blocking's
+    /// padded extents instead of exact extents.
+    pub bucket: Option<Level1Blocking>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize) -> Self {
         assert!(max_batch >= 1);
-        Self { max_batch }
+        Self { max_batch, bucket: None }
+    }
+
+    /// Exact-shape grouping replaced by padded-extent bucketing.
+    pub fn with_bucketing(max_batch: usize, blocking: Level1Blocking) -> Self {
+        assert!(max_batch >= 1);
+        Self { max_batch, bucket: Some(blocking) }
+    }
+
+    /// Shape component of a route key for an (m × k)·(k × n) job:
+    /// exact extents, or the blocking-padded bucket when bucketing is
+    /// enabled.
+    pub fn shape_key(&self, m: usize, k: usize, n: usize) -> String {
+        match &self.bucket {
+            Some(b) => {
+                let (pi, pj, pk) = b.pad_offchip(m as u64, n as u64, k as u64);
+                format!("{pi}x{pk}x{pj}")
+            }
+            None => format!("{m}x{k}x{n}"),
+        }
     }
 
     pub fn group<T>(&self, items: Vec<(String, T)>) -> Vec<Batch<T>> {
@@ -96,5 +126,32 @@ mod tests {
     #[should_panic]
     fn zero_batch_rejected() {
         Batcher::new(0);
+    }
+
+    fn g_blocking() -> crate::blocked::Level1Blocking {
+        crate::blocked::Level1Blocking::new(
+            crate::systolic::ArraySize::new(64, 32, 2, 2),
+            512,
+            512,
+        )
+    }
+
+    #[test]
+    fn exact_shape_keys_without_bucketing() {
+        let b = Batcher::new(4);
+        assert_eq!(b.shape_key(100, 200, 300), "100x200x300");
+        assert_ne!(b.shape_key(100, 200, 300), b.shape_key(101, 200, 300));
+    }
+
+    #[test]
+    fn bucketing_groups_blocking_compatible_shapes() {
+        let b = Batcher::with_bucketing(4, g_blocking());
+        // 100³ and 500³ both pad to the 512-multiple bucket (k pads to
+        // the d_k0 = 2 grid).
+        assert_eq!(b.shape_key(100, 100, 100), "512x100x512");
+        assert_eq!(b.shape_key(500, 99, 500), b.shape_key(100, 99, 300));
+        assert_eq!(b.shape_key(512, 512, 512), "512x512x512");
+        // Shapes a blocking period apart stay distinct.
+        assert_ne!(b.shape_key(512, 512, 512), b.shape_key(513, 512, 512));
     }
 }

@@ -25,6 +25,15 @@ pub struct Metrics {
     pub cluster_busy_us: AtomicU64,
     /// Simulated cluster makespan total, in microseconds.
     pub cluster_makespan_us: AtomicU64,
+    /// Requests served by the Strassen route.
+    pub strassen_jobs: AtomicU64,
+    /// Histogram of chosen recursion depths: bucket i counts depth-i
+    /// jobs, the last bucket absorbing anything deeper.
+    pub strassen_depths: [AtomicU64; 4],
+    /// Accumulated effective-vs-peak throughput ratio across Strassen
+    /// jobs, in parts-per-million (divide by `strassen_jobs · 1e6` for
+    /// the mean; > 1.0 means the DSP-bound eq. 5 peak was beaten).
+    pub strassen_eff_vs_peak_ppm: AtomicU64,
     latencies: Mutex<Vec<f64>>,
 }
 
@@ -57,6 +66,28 @@ impl Metrics {
             .fetch_add((report.makespan_seconds * 1e6) as u64, Ordering::Relaxed);
     }
 
+    /// Record one Strassen-routed job: depth histogram bucket plus the
+    /// effective-vs-peak gauge. Also counts the job itself (the route
+    /// match in the service does not double-increment).
+    pub fn record_strassen(&self, report: &crate::strassen::StrassenReport) {
+        Self::inc(&self.strassen_jobs);
+        let bucket = (report.depth as usize).min(self.strassen_depths.len() - 1);
+        Self::inc(&self.strassen_depths[bucket]);
+        self.strassen_eff_vs_peak_ppm
+            .fetch_add((report.effective_vs_peak() * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Mean effective-vs-peak ratio over all Strassen jobs (0.0 before
+    /// the first one). Values above 1.0 are the subsystem's point:
+    /// effective throughput past the DSP-bound peak.
+    pub fn strassen_mean_eff_vs_peak(&self) -> f64 {
+        let jobs = self.strassen_jobs.load(Ordering::Relaxed);
+        if jobs == 0 {
+            return 0.0;
+        }
+        self.strassen_eff_vs_peak_ppm.load(Ordering::Relaxed) as f64 / jobs as f64 / 1e6
+    }
+
     /// Mean fleet utilization across all recorded cluster runs
     /// (compute-busy seconds over device-seconds of makespan).
     pub fn cluster_utilization(&self, fleet_size: u64) -> f64 {
@@ -85,6 +116,11 @@ impl Metrics {
             cluster_steals: self.cluster_steals.load(Ordering::Relaxed),
             cluster_busy_us: self.cluster_busy_us.load(Ordering::Relaxed),
             cluster_makespan_us: self.cluster_makespan_us.load(Ordering::Relaxed),
+            strassen_jobs: self.strassen_jobs.load(Ordering::Relaxed),
+            strassen_depths: std::array::from_fn(|i| {
+                self.strassen_depths[i].load(Ordering::Relaxed)
+            }),
+            strassen_eff_vs_peak_ppm: self.strassen_eff_vs_peak_ppm.load(Ordering::Relaxed),
         }
     }
 }
@@ -103,6 +139,9 @@ pub struct MetricsSnapshot {
     pub cluster_steals: u64,
     pub cluster_busy_us: u64,
     pub cluster_makespan_us: u64,
+    pub strassen_jobs: u64,
+    pub strassen_depths: [u64; 4],
+    pub strassen_eff_vs_peak_ppm: u64,
 }
 
 #[cfg(test)]
@@ -140,6 +179,31 @@ mod tests {
         assert!(s.cluster_makespan_us > 0);
         let u = m.cluster_utilization(2);
         assert!(u > 0.0 && u <= 1.0, "{u}");
+    }
+
+    #[test]
+    fn strassen_gauges() {
+        let m = Metrics::new();
+        assert_eq!(m.strassen_mean_eff_vs_peak(), 0.0);
+        let report = crate::strassen::StrassenReport {
+            depth: 1,
+            leaves: 7,
+            simulated_seconds: 1.0,
+            effective_gflops: 3300.0,
+            peak_gflops: 3260.0,
+            speedup_vs_classical: 1.05,
+            rel_fro_error: None,
+        };
+        m.record_strassen(&report);
+        m.record_strassen(&crate::strassen::StrassenReport { depth: 2, ..report.clone() });
+        // Depths past the histogram clamp into the last bucket.
+        m.record_strassen(&crate::strassen::StrassenReport { depth: 9, ..report });
+        let s = m.snapshot();
+        assert_eq!(s.strassen_jobs, 3);
+        assert_eq!(s.strassen_depths, [0, 1, 1, 1]);
+        let mean = m.strassen_mean_eff_vs_peak();
+        assert!((mean - 3300.0 / 3260.0).abs() < 1e-3, "{mean}");
+        assert!(mean > 1.0, "the gauge must be able to sit above peak");
     }
 
     #[test]

@@ -8,12 +8,18 @@
 //!
 //! ```text
 //! clients ──submit──▶ [Batcher] ──per-shape batches──▶ [Engine thread]
+//!                        │        (exact or padded-bucketed keys)
 //!                        │                               PJRT CPU exec
 //!                        │                               (AOT artifacts)
-//!                        └──────────▶ [Router]: artifact | fallback | sharded
+//!                        └──────────▶ [Router]: artifact | fallback |
+//!                                              sharded | strassen
 //!                                        + FPGA design for timing sim
 //!                                        + multi-FPGA cluster for jobs
 //!                                          too large for one card
+//!                                        + Strassen planner for shapes
+//!                                          past the crossover (depth
+//!                                          capped by the request's
+//!                                          error budget)
 //! ```
 //!
 //! Every response carries both the *functional* result (via the XLA

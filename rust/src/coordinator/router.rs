@@ -4,10 +4,18 @@ use crate::blocked::{Level1Blocking, OffchipDesign};
 use crate::dse::configs::{fitted_designs, DesignSpec};
 use crate::fpga::device::Stratix10;
 use crate::runtime::Manifest;
+use crate::strassen::{self, StrassenConfig, StrassenMode, StrassenPlan};
 
 /// Smallest dimension at which a blocking-incompatible shape is worth
 /// sharding over the cluster instead of the CPU fallback.
 const MIN_SHARD_DIM: u64 = 1024;
+
+/// Smallest dimension at which the Auto-mode Strassen planner is even
+/// consulted. The crossover sits at ≥16384 for every Table-I design
+/// (see `examples/strassen_crossover.rs`), so below this bound the
+/// sweep is guaranteed wasted work — routing small requests must stay
+/// an index lookup, not four cost-model evaluations.
+const MIN_STRASSEN_AUTO_DIM: u64 = 4096;
 
 /// How a request's functional result will be computed.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -19,6 +27,9 @@ pub enum Route {
     /// Too large for one card (DDR capacity, or no Table-I blocking at
     /// cluster-worthy size): shard over the multi-FPGA cluster.
     Sharded,
+    /// The Strassen planner predicts a win within the error budget:
+    /// recurse instead of running the classical schedule.
+    Strassen,
 }
 
 /// The router: owns the manifest index and the design catalog.
@@ -31,6 +42,8 @@ pub struct Router {
     designs: Vec<DesignSpec>,
     /// Single-card DDR capacity in bytes (routing bound).
     card_ddr_bytes: u64,
+    /// Strassen planner knobs (mode, max depth, default error budget).
+    strassen: StrassenConfig,
 }
 
 impl Router {
@@ -66,10 +79,19 @@ impl Router {
             chain_index,
             designs: fitted_designs(),
             card_ddr_bytes: Stratix10::gx2800_520n().ddr_capacity_bytes(),
+            strassen: StrassenConfig::default(),
         }
     }
 
-    /// Functional route for an (m, k, n) problem.
+    /// Replace the Strassen planner configuration (service wiring).
+    pub fn with_strassen(mut self, config: StrassenConfig) -> Self {
+        self.strassen = config;
+        self
+    }
+
+    /// Functional route for an (m, k, n) problem. Capacity overflow
+    /// wins (the cluster is the only place the problem fits); then the
+    /// Strassen planner gets a look; classical fallback last.
     pub fn route(&self, m: usize, k: usize, n: usize) -> Route {
         if let Some((_, _, _, name)) =
             self.artifact_index.iter().find(|(am, ak, an, _)| (*am, *ak, *an) == (m, k, n))
@@ -79,7 +101,57 @@ impl Router {
         if self.should_shard(m as u64, k as u64, n as u64) {
             return Route::Sharded;
         }
+        if self.strassen_plan(m as u64, k as u64, n as u64, None).is_some() {
+            return Route::Strassen;
+        }
         Route::Fallback
+    }
+
+    /// Strassen plan for the shape, with an optional per-request error
+    /// budget overriding the configured default. `Some` only when the
+    /// planner settles on a depth ≥ 1 — i.e. the recursion is predicted
+    /// to win (or is forced) *and* the budget admits it.
+    pub fn strassen_plan(
+        &self,
+        m: u64,
+        k: u64,
+        n: u64,
+        budget: Option<f64>,
+    ) -> Option<StrassenPlan> {
+        if self.strassen.mode == StrassenMode::Off {
+            return None;
+        }
+        // Auto mode never wins below the crossover scale: skip the
+        // sweep entirely so small-request routing stays cheap. Force
+        // mode (a test/benchmark hook) still plans any shape.
+        if self.strassen.mode == StrassenMode::Auto
+            && m.min(k).min(n) < MIN_STRASSEN_AUTO_DIM
+        {
+            return None;
+        }
+        let mut config = self.strassen;
+        if let Some(b) = budget {
+            config.error_budget = b;
+        }
+        let design = self.timing_design(m, k, n).or_else(|| self.best_padded_design())?;
+        let plan = strassen::plan(design, m, k, n, &config);
+        (plan.depth >= 1).then_some(plan)
+    }
+
+    /// Highest-peak fitted design, for shapes no blocking accepts
+    /// exactly: Strassen pads its leaves up to the blocking anyway, so
+    /// the planner just needs *a* calibrated design to price against.
+    fn best_padded_design(&self) -> Option<OffchipDesign> {
+        self.designs
+            .iter()
+            .filter_map(|d| {
+                Some(OffchipDesign {
+                    blocking: d.level1()?,
+                    fmax_mhz: d.fmax_mhz?,
+                    controller_efficiency: 0.97,
+                })
+            })
+            .max_by(|a, b| a.peak_gflops().partial_cmp(&b.peak_gflops()).unwrap())
     }
 
     /// Functional route for a chained (A·B)·C problem with shapes
@@ -209,8 +281,44 @@ mod tests {
         // 65536³ divides design G's blocking but needs 48 GiB > 32 GiB.
         assert!(r.timing_design(65536, 65536, 65536).is_some());
         assert_eq!(r.route(65536, 65536, 65536), Route::Sharded);
-        // The paper's largest problem (21504³, 5.5 GB) stays single-card.
-        assert_eq!(r.route(21504, 21504, 21504), Route::Fallback);
+        // The paper's largest problem (21504³, 5.5 GB) stays single-card
+        // — past the Strassen crossover, so the algorithmic route wins.
+        assert_eq!(r.route(21504, 21504, 21504), Route::Strassen);
+    }
+
+    #[test]
+    fn strassen_routing_decisions() {
+        let r = Router::new(None);
+        // Past the crossover the planner predicts a win (depth >= 1).
+        let plan = r.strassen_plan(21504, 21504, 21504, None).expect("plan");
+        assert!(plan.depth >= 1);
+        assert!(plan.speedup_vs_classical() > 1.0);
+        assert_eq!(r.route(16384, 16384, 16384), Route::Strassen);
+        // Below the crossover the classical schedule stays faster.
+        assert!(r.strassen_plan(8192, 8192, 8192, None).is_none());
+        assert_eq!(r.route(8192, 8192, 8192), Route::Fallback);
+        assert_eq!(r.route(512, 512, 512), Route::Fallback);
+        // Sharding (capacity / no blocking at scale) still wins first.
+        assert_eq!(r.route(65536, 65536, 65536), Route::Sharded);
+        assert_eq!(r.route(1100, 1100, 1100), Route::Sharded);
+        // A hopeless per-request budget disables the plan.
+        assert!(r.strassen_plan(21504, 21504, 21504, Some(1e-12)).is_none());
+    }
+
+    #[test]
+    fn strassen_mode_off_and_force() {
+        use crate::strassen::{StrassenConfig, StrassenMode};
+        let off = Router::new(None)
+            .with_strassen(StrassenConfig { mode: StrassenMode::Off, ..Default::default() });
+        assert_eq!(off.route(21504, 21504, 21504), Route::Fallback);
+        // Force routes even tiny blocking-incompatible shapes (the
+        // planner prices them on the highest-peak design, padded).
+        let force = Router::new(None)
+            .with_strassen(StrassenConfig { mode: StrassenMode::Force(2), ..Default::default() });
+        assert_eq!(force.route(96, 96, 96), Route::Strassen);
+        let p = force.strassen_plan(96, 96, 96, None).unwrap();
+        assert_eq!(p.depth, 2);
+        assert_eq!(p.chosen().leaves, 49);
     }
 
     #[test]

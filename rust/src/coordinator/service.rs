@@ -12,11 +12,18 @@ use crate::blocked::{OffchipSim, SimReport};
 use crate::cluster::{ClusterReport, ClusterSim, Fleet};
 use crate::gemm::{matmul_blocked, Matrix};
 use crate::perfmodel::flop_count;
+use crate::strassen::{strassen_matmul, StrassenConfig, StrassenReport};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Largest m·k·n (MAC count) for which a Strassen-routed request also
+/// runs the dense blocked GEMM to *measure* `rel_fro_error`; larger
+/// problems report only the planner's a-priori bound (the dense check
+/// would double their functional cost).
+const STRASSEN_VERIFY_MACS: u64 = 1 << 26;
 
 /// A matrix-multiplication job.
 #[derive(Clone, Debug)]
@@ -27,6 +34,12 @@ pub struct GemmRequest {
     /// Optional third operand: compute (A·B)·C — the chained-multiply
     /// path that needs no host reordering on this architecture.
     pub chain: Option<Matrix>,
+    /// Per-request relative-Frobenius error budget for the Strassen
+    /// route (None = the service default). The planner caps recursion
+    /// depth so its predicted error stays inside the budget; a budget
+    /// no depth satisfies downgrades the request to the exact
+    /// classical path.
+    pub error_budget: Option<f64>,
 }
 
 /// The service's answer.
@@ -46,6 +59,9 @@ pub struct GemmResponse {
     /// Simulated multi-FPGA execution, one report per sharded GEMM leg
     /// (two for a chained request; empty unless the route is Sharded).
     pub cluster: Vec<ClusterReport>,
+    /// Strassen execution report (depth, effective-vs-peak throughput,
+    /// numerics); Some exactly when the route is Strassen.
+    pub strassen: Option<StrassenReport>,
 }
 
 /// Service configuration.
@@ -58,6 +74,11 @@ pub struct ServiceConfig {
     pub batch_window: Duration,
     /// Cards in the sharded route's simulated fleet (design G).
     pub cluster_devices: usize,
+    /// Strassen planner knobs (mode, max depth, default error budget).
+    pub strassen: StrassenConfig,
+    /// Bucket fallback/Strassen batches by blocking-padded shape
+    /// instead of exact shape (see [`Batcher::with_bucketing`]).
+    pub bucket_shapes: bool,
 }
 
 impl Default for ServiceConfig {
@@ -67,6 +88,8 @@ impl Default for ServiceConfig {
             max_batch: 8,
             batch_window: Duration::from_millis(2),
             cluster_devices: 4,
+            strassen: StrassenConfig::default(),
+            bucket_shapes: false,
         }
     }
 }
@@ -127,14 +150,20 @@ impl GemmService {
                     None
                 }
             });
-        let router = Router::new(engine.as_ref().map(|e| &e.manifest));
-        let batcher = Batcher::new(config.max_batch);
+        let router =
+            Router::new(engine.as_ref().map(|e| &e.manifest)).with_strassen(config.strassen);
         // The sharded route's fleet: design-G cards (design G is always
         // fitted, so this cannot fail).
         let cluster = ClusterSim::new(
             Fleet::homogeneous(config.cluster_devices.max(1), "G")
                 .expect("design G in the fitted catalog"),
         );
+        let batcher = if config.bucket_shapes {
+            // Bucket to the fleet design's blocking-padded extents.
+            Batcher::with_bucketing(config.max_batch, cluster.fleet.devices[0].design.blocking)
+        } else {
+            Batcher::new(config.max_batch)
+        };
 
         loop {
             // Block for the first job, then drain the window.
@@ -184,10 +213,22 @@ impl GemmService {
                     let key = match route {
                         Route::Artifact(name) => format!("artifact:{name}"),
                         Route::Fallback => {
-                            if req.chain.is_some() { "fallback-chain" } else { "fallback" }
-                                .to_string()
+                            if req.chain.is_some() {
+                                "fallback-chain".to_string()
+                            } else {
+                                // Shape-keyed (exact or padded-bucketed):
+                                // same-shape jobs share one kernel launch.
+                                format!(
+                                    "fallback:{}",
+                                    batcher.shape_key(req.a.rows, req.a.cols, req.b.cols)
+                                )
+                            }
                         }
                         Route::Sharded => "sharded".to_string(),
+                        Route::Strassen => format!(
+                            "strassen:{}",
+                            batcher.shape_key(req.a.rows, req.a.cols, req.b.cols)
+                        ),
                     };
                     (key, (req, tx, t))
                 })
@@ -225,6 +266,7 @@ impl GemmService {
                             queue_seconds,
                             fpga_sim: None,
                             cluster: Vec::new(),
+                            strassen: None,
                         }
                     });
                     let _ = tx.send(resp);
@@ -264,6 +306,7 @@ impl GemmService {
         let t0 = Instant::now();
         let (m, k, n) = (req.a.rows, req.a.cols, req.b.cols);
         let mut cluster_reports = Vec::new();
+        let mut strassen_report: Option<StrassenReport> = None;
 
         // Chained jobs route through the chain-artifact index.
         let (mut route, result): (Route, Result<Matrix, String>) =
@@ -306,11 +349,43 @@ impl GemmService {
                         cluster_reports.extend(rep);
                         (Route::Sharded, Ok(c))
                     }
+                    (Route::Strassen, _) => {
+                        // Re-plan under the request's own error budget
+                        // (the routing pass used the service default).
+                        match router.strassen_plan(m as u64, k as u64, n as u64, req.error_budget)
+                        {
+                            Some(plan) => {
+                                let c = strassen_matmul(&req.a, &req.b, plan.depth);
+                                // Numerics tracking: measure against the
+                                // dense blocked result when that is cheap.
+                                let rel_fro_error = ((m as u64) * (k as u64) * (n as u64)
+                                    <= STRASSEN_VERIFY_MACS)
+                                    .then(|| c.rel_fro_error(&matmul_blocked(&req.a, &req.b)));
+                                let chosen = plan.chosen();
+                                let report = StrassenReport {
+                                    depth: plan.depth,
+                                    leaves: chosen.leaves,
+                                    simulated_seconds: chosen.seconds,
+                                    effective_gflops: chosen.effective_gflops,
+                                    peak_gflops: plan.peak_gflops,
+                                    speedup_vs_classical: plan.speedup_vs_classical(),
+                                    rel_fro_error,
+                                };
+                                metrics.record_strassen(&report);
+                                strassen_report = Some(report);
+                                (Route::Strassen, Ok(c))
+                            }
+                            // The request's budget admits no depth: run
+                            // the exact classical path instead.
+                            None => (Route::Fallback, Ok(matmul_blocked(&req.a, &req.b))),
+                        }
+                    }
                     _ => (Route::Fallback, Ok(matmul_blocked(&req.a, &req.b))),
                 }
             };
         // A sharded request whose fleet produced no plan for any leg
-        // fell back entirely.
+        // fell back entirely. (A Strassen request whose budget admitted
+        // no depth was already downgraded inside its match arm.)
         if route == Route::Sharded && cluster_reports.is_empty() {
             route = Route::Fallback;
         }
@@ -319,6 +394,8 @@ impl GemmService {
             Route::Artifact(_) => Metrics::inc(&metrics.artifact_hits),
             Route::Fallback => Metrics::inc(&metrics.fallbacks),
             Route::Sharded => Metrics::inc(&metrics.sharded_jobs),
+            // record_strassen already counted the job.
+            Route::Strassen => {}
         }
         if result.is_err() {
             Metrics::inc(&metrics.errors);
@@ -331,8 +408,10 @@ impl GemmService {
 
         // FPGA timing on the routed design (chain = two passes). Sharded
         // requests carry the cluster report instead — a single-card
-        // SimReport would be fiction for a problem that left one card.
-        let fpga_sim = if route == Route::Sharded {
+        // SimReport would be fiction for a problem that left one card —
+        // and Strassen requests carry their own report (the classical
+        // single-card schedule is exactly what the recursion replaced).
+        let fpga_sim = if route == Route::Sharded || route == Route::Strassen {
             None
         } else {
             router.timing_design(m as u64, k as u64, n as u64).map(|d| {
@@ -351,6 +430,7 @@ impl GemmService {
             queue_seconds,
             fpga_sim,
             cluster: cluster_reports,
+            strassen: strassen_report,
         }
     }
 }
@@ -383,7 +463,7 @@ mod tests {
         let a = Matrix::random(32, 16, 1);
         let b = Matrix::random(16, 24, 2);
         let want = crate::gemm::matmul(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 7, a, b, chain: None });
+        let resp = svc.submit_sync(GemmRequest { id: 7, a, b, chain: None, error_budget: None });
         assert_eq!(resp.id, 7);
         assert_eq!(resp.route, Route::Fallback);
         let got = resp.result.unwrap();
@@ -397,7 +477,7 @@ mod tests {
         let b = Matrix::random(16, 16, 4);
         let c = Matrix::random(16, 16, 5);
         let want = crate::gemm::matmul(&crate::gemm::matmul(&a, &b), &c);
-        let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: Some(c) });
+        let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: Some(c), error_budget: None });
         assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-4);
     }
 
@@ -406,7 +486,7 @@ mod tests {
         let svc = GemmService::start(no_artifact_config()).unwrap();
         let a = Matrix::random(512, 512, 6);
         let b = Matrix::random(512, 512, 7);
-        let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None });
+        let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None, error_budget: None });
         let sim = resp.fpga_sim.expect("512-cube matches design H blocking");
         assert!(sim.gflops > 1000.0);
         assert!(sim.e_d > 0.3 && sim.e_d < 1.0);
@@ -420,7 +500,7 @@ mod tests {
         let a = Matrix::random(1025, 1025, 8);
         let b = Matrix::random(1025, 1025, 9);
         let want = matmul_blocked(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 3, a, b, chain: None });
+        let resp = svc.submit_sync(GemmRequest { id: 3, a, b, chain: None, error_budget: None });
         assert_eq!(resp.route, Route::Sharded);
         assert_eq!(resp.cluster.len(), 1, "one report per sharded leg");
         let rep = &resp.cluster[0];
@@ -436,13 +516,98 @@ mod tests {
     }
 
     #[test]
+    fn strassen_route_end_to_end() {
+        use crate::strassen::{StrassenConfig, StrassenMode};
+        // Force depth 2 so a test-sized job exercises the full path.
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            strassen: StrassenConfig { mode: StrassenMode::Force(2), ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(96, 64, 11);
+        let b = Matrix::random(64, 80, 12);
+        let want = matmul_blocked(&a, &b);
+        let resp = svc.submit_sync(GemmRequest { id: 4, a, b, chain: None, error_budget: None });
+        assert_eq!(resp.route, Route::Strassen);
+        assert!(resp.fpga_sim.is_none(), "Strassen carries its own report");
+        let rep = resp.strassen.expect("Strassen report");
+        assert_eq!(rep.depth, 2);
+        assert_eq!(rep.leaves, 49);
+        assert!(rep.peak_gflops > 0.0 && rep.simulated_seconds > 0.0);
+        let measured = rep.rel_fro_error.expect("small problem is verified");
+        assert!(measured < 1e-5, "rel err {measured}");
+        assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-5);
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.strassen_jobs, 1);
+        assert_eq!(snap.strassen_depths, [0, 0, 1, 0]);
+        assert!(svc.metrics.strassen_mean_eff_vs_peak() > 0.0);
+    }
+
+    #[test]
+    fn request_error_budget_downgrades_to_exact_path() {
+        use crate::strassen::{StrassenConfig, StrassenMode};
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            strassen: StrassenConfig { mode: StrassenMode::Force(2), ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(64, 64, 13);
+        let b = Matrix::random(64, 64, 14);
+        let want = matmul_blocked(&a, &b);
+        // A budget no recursion depth can promise: exact classical path.
+        let resp = svc.submit_sync(GemmRequest {
+            id: 5,
+            a,
+            b,
+            chain: None,
+            error_budget: Some(1e-12),
+        });
+        assert_eq!(resp.route, Route::Fallback);
+        assert!(resp.strassen.is_none());
+        // Bit-exact: the downgrade ran the dense blocked GEMM.
+        assert_eq!(resp.result.unwrap().data, want.data);
+        assert_eq!(svc.metrics.snapshot().strassen_jobs, 0);
+    }
+
+    #[test]
+    fn bucketed_batching_serves_odd_shapes() {
+        // The toggle must not change results — only batch keys.
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            bucket_shapes: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rxs = Vec::new();
+        for (i, (m, k, n)) in [(100, 60, 90), (97, 60, 85), (512, 60, 512)].iter().enumerate() {
+            let a = Matrix::random(*m, *k, i as u64);
+            let b = Matrix::random(*k, *n, 100 + i as u64);
+            let want = matmul_blocked(&a, &b);
+            rxs.push((want, svc.submit(GemmRequest {
+                id: i as u64,
+                a,
+                b,
+                chain: None,
+                error_budget: None,
+            })));
+        }
+        for (want, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.result.unwrap().data, want.data);
+        }
+        assert_eq!(svc.metrics.snapshot().errors, 0);
+    }
+
+    #[test]
     fn concurrent_submissions_all_answered() {
         let svc = Arc::new(GemmService::start(no_artifact_config()).unwrap());
         let mut rxs = Vec::new();
         for i in 0..20 {
             let a = Matrix::random(16, 16, i);
             let b = Matrix::random(16, 16, i + 100);
-            rxs.push((i, svc.submit(GemmRequest { id: i, a, b, chain: None })));
+            rxs.push((i, svc.submit(GemmRequest { id: i, a, b, chain: None, error_budget: None })));
         }
         for (i, rx) in rxs {
             let resp = rx.recv().unwrap();

@@ -69,6 +69,31 @@ impl Matrix {
         }
     }
 
+    /// Elementwise sum (Strassen S/T operand formation and C-quadrant
+    /// combination).
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "add shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise difference.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "sub shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Zero-pad to `rows × cols` with this matrix in the top-left corner
+    /// (Strassen odd-extent padding; the blocked simulators pad the same
+    /// way for partial edge blocks).
+    pub fn padded(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "padded extents must not shrink");
+        let mut out = Matrix::zeros(rows, cols);
+        out.write_submatrix(0, 0, self);
+        out
+    }
+
     /// Max |a - b| over all elements.
     pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -246,6 +271,19 @@ mod tests {
             );
             assert_eq!(c.data, dense.data, "split at {split}");
         }
+    }
+
+    #[test]
+    fn add_sub_padded() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.add(&b).data, vec![5.0; 4]);
+        assert_eq!(a.sub(&b).data, vec![-3.0, -1.0, 1.0, 3.0]);
+        let p = a.padded(3, 4);
+        assert_eq!((p.rows, p.cols), (3, 4));
+        assert_eq!(p.at(1, 1), 4.0);
+        assert_eq!(p.at(2, 3), 0.0);
+        assert_eq!(p.submatrix(0, 0, 2, 2).data, a.data);
     }
 
     #[test]

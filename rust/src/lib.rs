@@ -21,7 +21,12 @@
 //!   interconnect models, and a work-stealing scheduler that overlaps
 //!   shard transfer with compute. Requests that exceed a single card's
 //!   DDR capacity (or fit no Table-I blocking) route to the cluster
-//!   (`Route::Sharded`).
+//!   (`Route::Sharded`). A **Strassen recursion layer** ([`strassen`])
+//!   sits above both: a planner prices 7^d-leaf recursions against the
+//!   classical schedule and an error budget, and winning shapes route
+//!   to `Route::Strassen`, pushing *effective* throughput past the
+//!   DSP-bound eq. 5 peak (the leaves also map onto the cluster's work
+//!   queues, so Strassen and sharding compose).
 //!
 //! The [`runtime`] engine has two builds: the real PJRT/XLA executor
 //! behind the `pjrt` feature, and a default interpreter that replays
@@ -48,6 +53,7 @@ pub mod memory;
 pub mod perfmodel;
 pub mod runtime;
 pub mod solver;
+pub mod strassen;
 pub mod systolic;
 pub mod util;
 

@@ -35,6 +35,7 @@ fn main() {
         Some("ablate") => cmd_ablate(&args),
         Some("codegen") => cmd_codegen(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("strassen") => cmd_strassen(&args),
         _ => {
             print_usage();
             Ok(())
@@ -59,7 +60,9 @@ fn print_usage() {
          ablate   [--d2 4096]                ablation studies (§III-C/§V claims)\n\
          codegen  [--design G]               emit the OpenCL HLS kernel source\n\
          cluster  [--devices 4] [--d2 21504] [--design G] [--strategy auto|1d|2d|2.5d|all]\n\
-                  [--mix]                    shard one GEMM over a simulated fleet"
+                  [--mix]                    shard one GEMM over a simulated fleet\n\
+         strassen [--design G] [--d2 21504] [--depth auto|0..3] [--budget 1e-3]\n\
+                  [--devices 1]              plan/price Strassen recursion vs classical"
     );
 }
 
@@ -148,6 +151,66 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             plan.total_bytes_moved() as f64 / 1e9,
             plan.flops_per_byte()
         );
+    }
+    Ok(())
+}
+
+fn cmd_strassen(args: &Args) -> anyhow::Result<()> {
+    use systo3d::blocked::OffchipDesign;
+    use systo3d::cluster::{ClusterSim, Fleet};
+    use systo3d::strassen::{self, StrassenConfig, StrassenMode, TaskDag};
+
+    let id = args.get_str("design", "G").to_uppercase();
+    let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
+    let devices = args.get_usize("devices", 1).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(d2 >= 1, "--d2 must be at least 1");
+    let budget: f64 = match args.get("budget") {
+        None => StrassenConfig::default().error_budget,
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--budget expects a float, got {v:?}"))?,
+    };
+    let mode = match args.get_str("depth", "auto") {
+        "auto" => StrassenMode::Auto,
+        v => StrassenMode::Force(
+            v.parse().map_err(|_| anyhow::anyhow!("--depth expects auto or 0..3, got {v:?}"))?,
+        ),
+    };
+    let spec = paper_catalog()
+        .into_iter()
+        .find(|d| d.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown design {id}"))?;
+    let design = OffchipDesign {
+        blocking: spec
+            .level1()
+            .ok_or_else(|| anyhow::anyhow!("design {id} failed the fitter; nothing to plan"))?,
+        fmax_mhz: spec.fmax_mhz.unwrap(),
+        controller_efficiency: 0.97,
+    };
+
+    let config = StrassenConfig { mode, error_budget: budget, ..Default::default() };
+    let plan = strassen::plan(design, d2, d2, d2, &config);
+    println!("design {id}, error budget {budget:.1e}");
+    println!("{}", plan.render());
+
+    if devices > 1 {
+        // Compose with the cluster layer: the chosen depth's leaves on
+        // the fleet's work queues.
+        let dag = TaskDag::build(d2, d2, d2, plan.depth);
+        let sim =
+            ClusterSim::new(Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?);
+        let (report, total) = dag
+            .fleet_seconds(&sim)
+            .ok_or_else(|| anyhow::anyhow!("no leaf plan for d2={d2}"))?;
+        let flop = systo3d::perfmodel::flop_count(d2, d2, d2) as f64;
+        println!(
+            "depth-{} leaves over {} card(s): {:.4} s end-to-end \
+             ({:.0} effective GFLOPS, {:.2}x one card's eq. 5 peak)",
+            plan.depth,
+            devices,
+            total,
+            flop / total / 1e9,
+            flop / total / 1e9 / plan.peak_gflops,
+        );
+        println!("{}", report.render());
     }
     Ok(())
 }
@@ -324,7 +387,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let s = sizes[(i % sizes.len() as u64) as usize];
         let a = Matrix::random(s, s, i * 2);
         let b = Matrix::random(s, s, i * 2 + 1);
-        rxs.push(svc.submit(GemmRequest { id: i, a, b, chain: None }));
+        rxs.push(svc.submit(GemmRequest { id: i, a, b, chain: None, error_budget: None }));
     }
     let mut sim_seconds = 0.0;
     for rx in rxs {

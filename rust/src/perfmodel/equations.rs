@@ -145,6 +145,14 @@ pub fn scaling_efficiency(n: u64, t1_seconds: f64, tn_seconds: f64) -> f64 {
     (t1_seconds / tn_seconds) / n as f64
 }
 
+/// Strassen work ratio: a depth-d recursion performs `(7/8)^d` of the
+/// classical multiplications. Its inverse bounds how far *effective*
+/// throughput (classical `flop_count` over measured time) can exceed
+/// the eq. 5 DSP peak: `(8/7)^d` at zero add/sub overhead.
+pub fn strassen_flop_ratio(depth: u32) -> f64 {
+    (7.0f64 / 8.0).powi(depth as i32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -292,6 +300,16 @@ mod tests {
         let t = measured_flops(1_000_000_000, 0.5);
         assert_eq!(t, 2e9);
         assert!((dsp_efficiency(t, 4e9) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strassen_ratio_bounds_effective_throughput() {
+        assert_eq!(strassen_flop_ratio(0), 1.0);
+        assert!((strassen_flop_ratio(1) - 0.875).abs() < 1e-12);
+        // Depth 3 removes ~33% of the multiplications: the zero-overhead
+        // effective ceiling is ~1.49x the DSP peak.
+        let ceiling = 1.0 / strassen_flop_ratio(3);
+        assert!((ceiling - 1.4927).abs() < 1e-3, "{ceiling}");
     }
 
     #[test]

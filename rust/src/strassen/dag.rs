@@ -1,0 +1,237 @@
+//! The materialized Strassen task DAG: leaves, add passes, and the two
+//! simulated execution modes.
+//!
+//! A depth-`d` recursion over one (m × k)·(k × n) GEMM expands into
+//! `7^d` leaf sub-multiplications — every leaf the same
+//! `⌈m/2^d⌉ × ⌈k/2^d⌉ × ⌈n/2^d⌉` shape, odd extents rounding up — plus
+//! `18·7^(l−1)` add/sub passes at each level `l` (10 operand-forming
+//! passes and 8 C-combination passes per subproblem, see
+//! [`super::exec`]). The DAG records both so the planner can cost them
+//! and the executors can schedule them:
+//!
+//! * **serial mode** ([`TaskDag::serial_seconds`]) — leaves run
+//!   back-to-back on one card through the same event-level
+//!   [`OffchipSim`] that times classical requests (DDR-resident, like
+//!   every Table II–V number), adds stream at the 520N's aggregate
+//!   four-channel DDR bandwidth.
+//! * **fleet mode** ([`TaskDag::fleet_seconds`]) — the leaves are
+//!   independent sub-GEMMs, so they time exactly like the row bands of
+//!   a 1D partition of the stacked `(7^d·m̂ × k̂)·(k̂ × n̂)` problem; the
+//!   DAG hands that plan to the cluster scheduler and the 7-way fan-out
+//!   lands on the fleet's work queues (DMA/compute overlap and
+//!   work-stealing included) — Strassen and sharding compose.
+
+use crate::blocked::{OffchipDesign, OffchipSim};
+use crate::cluster::{ClusterReport, ClusterSim, PartitionPlan, PartitionStrategy};
+use crate::memory::GlobalMemory;
+use crate::util::div_ceil;
+
+/// One leaf sub-multiplication of the recursion tree.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LeafTask {
+    /// Position in the M1..M7 tree, outermost level first — e.g.
+    /// `"M3.M1"` is the M1 child of the level-1 M3 subproblem.
+    pub id: String,
+    pub index: usize,
+}
+
+/// The add/sub passes of one recursion level, aggregated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AddLevel {
+    /// Recursion level, 1-indexed from the root split.
+    pub level: u32,
+    /// Subproblems at this level: `7^(level−1)`.
+    pub subproblems: u64,
+    /// Add/sub passes: 18 per subproblem (5 A-shaped, 5 B-shaped,
+    /// 8 C-shaped).
+    pub passes: u64,
+    /// Bytes all passes move: 2 reads + 1 write per element, f32.
+    pub bytes: u64,
+}
+
+/// The expanded sub-multiplication graph of one Strassen invocation.
+#[derive(Clone, Debug)]
+pub struct TaskDag {
+    pub depth: u32,
+    /// Original (unpadded) problem extents.
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    /// Shared leaf extents (⌈·/2^depth⌉ of the originals).
+    pub leaf_m: u64,
+    pub leaf_k: u64,
+    pub leaf_n: u64,
+    pub leaves: Vec<LeafTask>,
+    pub add_levels: Vec<AddLevel>,
+}
+
+impl TaskDag {
+    /// Materialize the depth-`depth` graph for an (m × k)·(k × n) GEMM.
+    pub fn build(m: u64, k: u64, n: u64, depth: u32) -> Self {
+        assert!(m > 0 && k > 0 && n > 0, "degenerate GEMM ({m} x {k}) * ({k} x {n})");
+        let (mut lm, mut lk, mut ln) = (m, k, n);
+        let mut add_levels = Vec::with_capacity(depth as usize);
+        for level in 1..=depth {
+            lm = div_ceil(lm, 2);
+            lk = div_ceil(lk, 2);
+            ln = div_ceil(ln, 2);
+            let subproblems = 7u64.pow(level - 1);
+            let elems = 5 * lm * lk + 5 * lk * ln + 8 * lm * ln;
+            add_levels.push(AddLevel {
+                level,
+                subproblems,
+                passes: 18 * subproblems,
+                bytes: subproblems * elems * 3 * 4,
+            });
+        }
+        let count = 7usize.pow(depth);
+        let leaves = (0..count).map(|i| LeafTask { id: leaf_id(i, depth), index: i }).collect();
+        Self { depth, m, k, n, leaf_m: lm, leaf_k: lk, leaf_n: ln, leaves, add_levels }
+    }
+
+    /// Seconds for every add/sub pass, streamed at the 520N's aggregate
+    /// four-channel DDR bandwidth derated by `controller_efficiency`
+    /// (adds are long unit-stride bursts — the controller's best case).
+    pub fn add_seconds(&self, controller_efficiency: f64) -> f64 {
+        let bytes: u64 = self.add_levels.iter().map(|l| l.bytes).sum();
+        let bw = GlobalMemory::bittware_520n().aggregate_mb_s() * 1e6 * controller_efficiency;
+        bytes as f64 / bw
+    }
+
+    /// One leaf's kernel seconds on `design`, extents padded up to the
+    /// design's blocking like any irregular shard.
+    pub fn leaf_seconds(&self, design: &OffchipDesign) -> f64 {
+        let (pi, pj, pk) = design.blocking.pad_offchip(self.leaf_m, self.leaf_n, self.leaf_k);
+        OffchipSim::new(*design).simulate(pi, pj, pk).seconds
+    }
+
+    /// Single-card schedule: the `7^d` leaves back-to-back (DDR-resident,
+    /// the same convention as every classical [`OffchipSim`] number)
+    /// plus the add passes.
+    pub fn serial_seconds(&self, design: &OffchipDesign) -> f64 {
+        self.leaves.len() as f64 * self.leaf_seconds(design)
+            + self.add_seconds(design.controller_efficiency)
+    }
+
+    /// The leaves as a cluster partition plan: one 1D-row shard per
+    /// leaf over the stacked `(7^d·m̂ × k̂)·(k̂ × n̂)` problem. Each shard
+    /// moves one leaf's A and B operands in and its M product out —
+    /// byte-for-byte what dispatching the leaf itself would move.
+    pub fn leaf_plan(&self) -> Option<PartitionPlan> {
+        let leaves = self.leaves.len() as u64;
+        PartitionPlan::new(
+            PartitionStrategy::Row1D { devices: leaves },
+            leaves * self.leaf_m,
+            self.leaf_k,
+            self.leaf_n,
+        )
+        .ok()
+    }
+
+    /// Fleet schedule: leaves through the cluster scheduler's work
+    /// queues (shard DMA overlapping compute, work-stealing across
+    /// cards), add passes serialized host-side after the reduction.
+    /// Returns the cluster report for the leaf plan and the end-to-end
+    /// seconds including the adds.
+    pub fn fleet_seconds(&self, cluster: &ClusterSim) -> Option<(ClusterReport, f64)> {
+        let plan = self.leaf_plan()?;
+        let report = cluster.simulate(&plan);
+        let e = cluster.fleet.devices.first().map_or(0.97, |d| d.design.controller_efficiency);
+        let total = report.makespan_seconds + self.add_seconds(e);
+        Some((report, total))
+    }
+}
+
+/// Leaf `index` spelled as its path through the M1..M7 tree.
+fn leaf_id(index: usize, depth: u32) -> String {
+    if depth == 0 {
+        return "root".into();
+    }
+    let mut parts = Vec::with_capacity(depth as usize);
+    let mut i = index;
+    for _ in 0..depth {
+        parts.push(format!("M{}", i % 7 + 1));
+        i /= 7;
+    }
+    parts.reverse();
+    parts.join(".")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocked::Level1Blocking;
+    use crate::cluster::Fleet;
+    use crate::systolic::ArraySize;
+
+    fn design_g() -> OffchipDesign {
+        OffchipDesign {
+            blocking: Level1Blocking::new(ArraySize::new(64, 32, 2, 2), 512, 512),
+            fmax_mhz: 398.0,
+            controller_efficiency: 0.97,
+        }
+    }
+
+    #[test]
+    fn dag_materializes_m1_to_m7() {
+        let dag = TaskDag::build(100, 90, 80, 2);
+        assert_eq!(dag.leaves.len(), 49);
+        assert_eq!((dag.leaf_m, dag.leaf_k, dag.leaf_n), (25, 23, 20));
+        assert_eq!(dag.leaves[0].id, "M1.M1");
+        assert_eq!(dag.leaves[48].id, "M7.M7");
+        // Index arithmetic: leaf 8 = second subtree (M2), second child.
+        assert_eq!(dag.leaves[8].id, "M2.M2");
+        assert_eq!(dag.add_levels.len(), 2);
+        assert_eq!(dag.add_levels[0].subproblems, 1);
+        assert_eq!(dag.add_levels[0].passes, 18);
+        assert_eq!(dag.add_levels[1].subproblems, 7);
+        assert_eq!(dag.add_levels[1].passes, 126);
+    }
+
+    #[test]
+    fn depth0_is_the_bare_problem() {
+        let dag = TaskDag::build(512, 512, 512, 0);
+        assert_eq!(dag.leaves.len(), 1);
+        assert_eq!(dag.leaves[0].id, "root");
+        assert!(dag.add_levels.is_empty());
+        assert_eq!(dag.add_seconds(0.97), 0.0);
+        // Serial seconds == the classical event-level sim.
+        let d = design_g();
+        let direct = OffchipSim::new(d).simulate(512, 512, 512).seconds;
+        assert!((dag.serial_seconds(&d) - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_bytes_follow_the_18_pass_model() {
+        let dag = TaskDag::build(8, 8, 8, 1);
+        // Quadrants 4×4: (5 + 5 + 8)·16 elements · 3 accesses · 4 bytes.
+        assert_eq!(dag.add_levels[0].bytes, 18 * 16 * 12);
+        assert!(dag.add_seconds(0.97) > 0.0);
+    }
+
+    #[test]
+    fn leaf_plan_one_shard_per_leaf() {
+        let dag = TaskDag::build(64, 64, 64, 1);
+        let plan = dag.leaf_plan().unwrap();
+        assert_eq!(plan.shards.len(), 7);
+        for s in &plan.shards {
+            assert_eq!((s.rows, s.cols, s.ks), (32, 32, 32));
+        }
+    }
+
+    #[test]
+    fn fleet_mode_beats_serial_on_seven_cards() {
+        let mini = OffchipDesign {
+            blocking: Level1Blocking::new(ArraySize::new(4, 4, 2, 2), 8, 8),
+            fmax_mhz: 400.0,
+            controller_efficiency: 0.97,
+        };
+        let dag = TaskDag::build(64, 64, 64, 1);
+        let serial = dag.serial_seconds(&mini);
+        let sim = ClusterSim::new(Fleet::uniform(7, "mini", mini));
+        let (report, total) = dag.fleet_seconds(&sim).unwrap();
+        assert_eq!(report.shards, 7);
+        assert!(total > 0.0);
+        assert!(total < serial, "fleet {total} vs serial {serial}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Functional Strassen executor: the recursive M1..M7 evaluation.
+//!
+//! Depth 0 delegates straight to [`crate::gemm::matmul_blocked`] (whose
+//! accumulation runs through [`crate::gemm::matmul_blocked_into`]), so a
+//! depth-0 Strassen call is *bit-exact* with the dense blocked GEMM —
+//! the invariant the router's downgrade path and the property tests
+//! rely on. Depth ≥ 1 zero-pads odd extents to even at each level (a
+//! partial edge quadrant behaves exactly like the HLS kernel's padded
+//! edge block), evaluates the seven sub-products
+//!
+//! ```text
+//! M1 = (A11 + A22)(B11 + B22)      M5 = (A11 + A12) B22
+//! M2 = (A21 + A22) B11             M6 = (A21 − A11)(B11 + B12)
+//! M3 = A11 (B12 − B22)             M7 = (A12 − A22)(B21 + B22)
+//! M4 = A22 (B21 − B11)
+//! ```
+//!
+//! recursively, and combines them with the eight C-quadrant add passes
+//!
+//! ```text
+//! C11 = M1 + M4 − M5 + M7          C12 = M3 + M5
+//! C21 = M2 + M4                    C22 = M1 − M2 + M3 + M6
+//! ```
+//!
+//! — the 10 + 8 = 18 add/sub passes per level that the planner charges
+//! against DDR bandwidth. Extents too small to halve stop the recursion
+//! early, so any depth is safe on any shape.
+
+use crate::gemm::{matmul_blocked, Matrix};
+
+/// `C = A·B` with up to `depth` levels of Strassen recursion.
+pub fn strassen_matmul(a: &Matrix, b: &Matrix, depth: u32) -> Matrix {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if depth == 0 || m < 2 || k < 2 || n < 2 {
+        return matmul_blocked(a, b);
+    }
+    let (pm, pk, pn) = (m + m % 2, k + k % 2, n + n % 2);
+    let needs_pad = (pm, pk, pn) != (m, k, n);
+    let ap;
+    let bp;
+    let (a, b) = if needs_pad {
+        ap = a.padded(pm, pk);
+        bp = b.padded(pk, pn);
+        (&ap, &bp)
+    } else {
+        (a, b)
+    };
+    let (hm, hk, hn) = (pm / 2, pk / 2, pn / 2);
+    let a11 = a.submatrix(0, 0, hm, hk);
+    let a12 = a.submatrix(0, hk, hm, hk);
+    let a21 = a.submatrix(hm, 0, hm, hk);
+    let a22 = a.submatrix(hm, hk, hm, hk);
+    let b11 = b.submatrix(0, 0, hk, hn);
+    let b12 = b.submatrix(0, hn, hk, hn);
+    let b21 = b.submatrix(hk, 0, hk, hn);
+    let b22 = b.submatrix(hk, hn, hk, hn);
+
+    let m1 = strassen_matmul(&a11.add(&a22), &b11.add(&b22), depth - 1);
+    let m2 = strassen_matmul(&a21.add(&a22), &b11, depth - 1);
+    let m3 = strassen_matmul(&a11, &b12.sub(&b22), depth - 1);
+    let m4 = strassen_matmul(&a22, &b21.sub(&b11), depth - 1);
+    let m5 = strassen_matmul(&a11.add(&a12), &b22, depth - 1);
+    let m6 = strassen_matmul(&a21.sub(&a11), &b11.add(&b12), depth - 1);
+    let m7 = strassen_matmul(&a12.sub(&a22), &b21.add(&b22), depth - 1);
+
+    let c11 = m1.add(&m4).sub(&m5).add(&m7);
+    let c12 = m3.add(&m5);
+    let c21 = m2.add(&m4);
+    let c22 = m1.sub(&m2).add(&m3).add(&m6);
+
+    let mut c = Matrix::zeros(pm, pn);
+    c.write_submatrix(0, 0, &c11);
+    c.write_submatrix(0, hn, &c12);
+    c.write_submatrix(hm, 0, &c21);
+    c.write_submatrix(hm, hn, &c22);
+    if needs_pad {
+        c.submatrix(0, 0, m, n)
+    } else {
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::matmul;
+
+    #[test]
+    fn depth0_bit_exact_with_blocked() {
+        let a = Matrix::random(33, 57, 1);
+        let b = Matrix::random(57, 21, 2);
+        assert_eq!(strassen_matmul(&a, &b, 0).data, matmul_blocked(&a, &b).data);
+    }
+
+    #[test]
+    fn depth1_even_extents_close_to_oracle() {
+        let a = Matrix::random(64, 48, 3);
+        let b = Matrix::random(48, 32, 4);
+        let got = strassen_matmul(&a, &b, 1);
+        let want = matmul(&a, &b);
+        assert_eq!((got.rows, got.cols), (64, 32));
+        assert!(got.rel_fro_error(&want) < 1e-5);
+    }
+
+    #[test]
+    fn odd_extents_padded_and_cropped() {
+        let a = Matrix::random(17, 9, 5);
+        let b = Matrix::random(9, 13, 6);
+        for depth in 1..=3 {
+            let got = strassen_matmul(&a, &b, depth);
+            assert_eq!((got.rows, got.cols), (17, 13));
+            assert!(
+                got.rel_fro_error(&matmul_blocked(&a, &b)) < 1e-5,
+                "depth {depth}"
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_extents_stop_recursing() {
+        // A 1×k row times k×1 column cannot halve: any depth falls back
+        // to the blocked GEMM and stays exact.
+        let a = Matrix::random(1, 7, 7);
+        let b = Matrix::random(7, 1, 8);
+        let want = matmul_blocked(&a, &b);
+        assert_eq!(strassen_matmul(&a, &b, 3).data, want.data);
+        // 2×2 identity sanity at depth 1 (exact: products of 0/1 sums).
+        let i = Matrix::identity(2);
+        let x = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(strassen_matmul(&x, &i, 1).data, x.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn mismatched_shapes_panic() {
+        strassen_matmul(&Matrix::zeros(4, 4), &Matrix::zeros(5, 4), 1);
+    }
+}

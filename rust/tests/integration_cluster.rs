@@ -149,11 +149,13 @@ fn mixed_fleet_work_stealing() {
 }
 
 /// The router sends cluster-worthy shapes to the sharded route and
-/// leaves paper-size problems on the single card.
+/// leaves paper-size problems on a single card (the largest ones now
+/// via the single-card Strassen route rather than the classical
+/// schedule).
 #[test]
 fn router_sharding_decisions() {
     let r = Router::new(None);
-    assert_eq!(r.route(21504, 21504, 21504), Route::Fallback);
+    assert_eq!(r.route(21504, 21504, 21504), Route::Strassen);
     assert_eq!(r.route(1100, 1100, 1100), Route::Sharded);
     assert_eq!(r.route(65536, 65536, 65536), Route::Sharded);
     assert_eq!(r.route(96, 96, 96), Route::Fallback);

@@ -72,7 +72,7 @@ fn service_survives_bad_artifact_dir() {
     .unwrap();
     let a = Matrix::random(8, 8, 1);
     let b = Matrix::random(8, 8, 2);
-    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None });
+    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
     assert_eq!(resp.route, Route::Fallback);
     assert!(resp.result.is_ok());
 }
@@ -88,7 +88,7 @@ fn service_shutdown_on_drop_is_clean() {
     .unwrap();
     let a = Matrix::random(4, 4, 1);
     let b = Matrix::random(4, 4, 2);
-    let _ = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None });
+    let _ = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
     drop(svc); // must join the engine thread without hanging
 }
 
@@ -105,16 +105,68 @@ fn mismatched_request_shapes_contained() {
     .unwrap();
     let a = Matrix::random(8, 4, 1);
     let b = Matrix::random(8, 8, 2); // 4 != 8: invalid
-    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None });
+    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
     assert!(resp.result.is_err(), "{resp:?}");
 
     // The service is still alive and correct.
     let a = Matrix::random(8, 8, 3);
     let b = Matrix::random(8, 8, 4);
     let want = systo3d::gemm::matmul(&a, &b);
-    let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None });
+    let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None, error_budget: None });
     assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-5);
     assert_eq!(svc.metrics.snapshot().errors, 1);
+}
+
+// ---------------------------------------------------------------------
+// Cluster failure modes
+// ---------------------------------------------------------------------
+
+#[test]
+fn kill_one_card_shards_requeue_on_survivors() {
+    use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+    let d = 21504u64;
+    let sim = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, d, d, d).unwrap();
+    let healthy = sim.simulate(&plan);
+    assert_eq!(healthy.retries, 0);
+
+    // Kill card 0 in the middle of its first compute window: DMA ends at
+    // t_dma, compute runs [t_dma, t_dma + t_comp).
+    let first = plan.shards.iter().find(|s| s.device == 0).unwrap();
+    let t_dma = sim.interconnect.host_seconds(first.input_bytes());
+    let t_comp = sim.shard_seconds(0, first);
+    let deaths = [Some(t_dma + 0.5 * t_comp), None, None, None];
+    let r = sim.simulate_with_failures(&plan, &deaths).unwrap();
+
+    // The in-flight shard was lost and re-executed: every planned shard
+    // still completed exactly once, on a survivor.
+    assert!(r.retries >= 1, "{r:?}");
+    let done: usize = r.per_device.iter().map(|dev| dev.shards).sum();
+    assert_eq!(done, plan.shards.len());
+    assert_eq!(r.per_device[0].lost, 1);
+    assert!(r.per_device[0].shards < r.per_device[1].shards, "{r:?}");
+    // Losing a card costs time but not completion.
+    assert!(r.makespan_seconds > healthy.makespan_seconds);
+    assert!(r.render().contains("retried"));
+
+    // A whole-fleet outage is a clean error, not a hang.
+    let all_dead = [Some(0.0); 4];
+    let err = sim.simulate_with_failures(&plan, &all_dead).unwrap_err();
+    assert!(err.contains("dead"), "{err}");
+}
+
+#[test]
+fn dead_card_from_start_never_works() {
+    use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+    let sim = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Row1D { devices: 2 }, 8192, 8192, 8192).unwrap();
+    let r = sim.simulate_with_failures(&plan, &[Some(0.0), None]).unwrap();
+    assert_eq!(r.retries, 0, "nothing was in flight at t=0");
+    assert_eq!(r.per_device[0].shards, 0);
+    assert_eq!(r.per_device[1].shards, plan.shards.len());
+    assert!(r.per_device[1].stolen >= 1, "{r:?}");
 }
 
 // ---------------------------------------------------------------------

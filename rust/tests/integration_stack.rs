@@ -133,6 +133,7 @@ fn coordinator_fallback_end_to_end() {
         a: a.clone(),
         b: b.clone(),
         chain: Some(c),
+        error_budget: None,
     });
     assert_eq!(resp.route, Route::Fallback);
     assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-4);
@@ -140,7 +141,7 @@ fn coordinator_fallback_end_to_end() {
     // A conforming 512³ job carries an FPGA sim report.
     let a = Matrix::random(512, 512, 4);
     let b = Matrix::random(512, 512, 5);
-    let resp = svc.submit_sync(GemmRequest { id: 10, a, b, chain: None });
+    let resp = svc.submit_sync(GemmRequest { id: 10, a, b, chain: None, error_budget: None });
     let sim = resp.fpga_sim.expect("512³ conforms to the d1=512 designs");
     // Paper Table V at d2=512: ~1500 GFLOPS, e_D ~0.46.
     assert!(sim.gflops > 1200.0 && sim.gflops < 2000.0, "{}", sim.gflops);

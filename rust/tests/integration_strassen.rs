@@ -1,0 +1,157 @@
+//! Integration: the Strassen recursion layer against the dense GEMM
+//! oracle, the planner's crossover/peak claims, and the service route.
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign};
+use systo3d::coordinator::{GemmRequest, GemmService, Route, Router, ServiceConfig};
+use systo3d::gemm::{matmul_blocked, Matrix};
+use systo3d::perfmodel::strassen_flop_ratio;
+use systo3d::strassen::{self, strassen_matmul, StrassenConfig, StrassenMode, TaskDag};
+use systo3d::systolic::ArraySize;
+use systo3d::util::proptest::check;
+
+fn design_g() -> OffchipDesign {
+    OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(64, 32, 2, 2), 512, 512),
+        fmax_mhz: 398.0,
+        controller_efficiency: 0.97,
+    }
+}
+
+/// Satellite acceptance: depth 0 is bit-exact with the dense blocked
+/// GEMM over random shapes, including degenerate 1-extents.
+#[test]
+fn depth0_bit_exact_over_random_geometry() {
+    check("strassen depth 0 == matmul_blocked", 30, |g| {
+        let m = g.usize(1, 96);
+        let k = g.usize(1, 96);
+        let n = g.usize(1, 96);
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(m, k, seed);
+        let b = Matrix::random(k, n, seed + 1);
+        let got = strassen_matmul(&a, &b, 0);
+        assert_eq!(got.data, matmul_blocked(&a, &b).data, "({m},{k},{n})");
+    });
+}
+
+/// Satellite acceptance: depths 1–3 stay within a tight rel_fro_error
+/// tolerance across random non-square and odd-extent shapes. The 1e-5
+/// test budget sits two orders under the service default (1e-3) and
+/// well under the planner's a-priori bound.
+#[test]
+fn depths_1_to_3_within_error_budget_over_random_geometry() {
+    let budget = 1e-5;
+    check("strassen depth 1-3 error", 25, |g| {
+        let m = g.usize(2, 160);
+        let k = g.usize(2, 160);
+        let n = g.usize(2, 160);
+        let seed = g.u64(0, u64::MAX / 2);
+        let a = Matrix::random(m, k, seed);
+        let b = Matrix::random(k, n, seed + 1);
+        let dense = matmul_blocked(&a, &b);
+        for depth in 1..=3u32 {
+            let got = strassen_matmul(&a, &b, depth);
+            let err = got.rel_fro_error(&dense);
+            assert!(err < budget, "depth {depth} ({m},{k},{n}): rel err {err}");
+        }
+    });
+}
+
+/// Explicit odd / prime extents (the padding path at every level).
+#[test]
+fn odd_extent_regression_cases() {
+    for (m, k, n) in [(3, 3, 3), (127, 127, 127), (101, 53, 89), (64, 63, 62)] {
+        let a = Matrix::random(m, k, m as u64);
+        let b = Matrix::random(k, n, n as u64);
+        let dense = matmul_blocked(&a, &b);
+        for depth in 1..=3u32 {
+            let err = strassen_matmul(&a, &b, depth).rel_fro_error(&dense);
+            assert!(err < 1e-5, "({m},{k},{n}) depth {depth}: {err}");
+        }
+    }
+}
+
+/// Tentpole acceptance: the planner finds a crossover, and past it the
+/// simulated effective throughput exceeds the same design's eq. 5 peak.
+#[test]
+fn crossover_and_peak_exceeded_on_design_g() {
+    let config = StrassenConfig::default();
+    // Below the crossover: classical wins.
+    let small = strassen::plan(design_g(), 8192, 8192, 8192, &config);
+    assert_eq!(small.depth, 0);
+    // At 16384 the recursion starts winning.
+    let mid = strassen::plan(design_g(), 16384, 16384, 16384, &config);
+    assert!(mid.depth >= 1);
+    assert!(mid.speedup_vs_classical() > 1.0);
+    // Past the crossover the DSP-bound ceiling falls.
+    for d2 in [21504u64, 32768] {
+        let p = strassen::plan(design_g(), d2, d2, d2, &config);
+        assert!(
+            p.effective_vs_peak() > 1.0,
+            "d2={d2}: effective/peak {:.4}",
+            p.effective_vs_peak()
+        );
+        // Sanity: never past the zero-overhead algorithmic bound.
+        assert!(p.effective_vs_peak() < 1.0 / strassen_flop_ratio(p.depth));
+        // Deeper recursion keeps paying at 32768: depth 2 beats depth 1.
+        if d2 == 32768 {
+            assert!(p.estimates[2].seconds < p.estimates[1].seconds, "{}", p.render());
+        }
+    }
+}
+
+/// The router sends post-crossover shapes to Strassen, respects the
+/// sharding precedence, and honors budgets.
+#[test]
+fn router_strassen_decisions() {
+    let r = Router::new(None);
+    assert_eq!(r.route(21504, 21504, 21504), Route::Strassen);
+    assert_eq!(r.route(8192, 8192, 8192), Route::Fallback);
+    assert_eq!(r.route(65536, 65536, 65536), Route::Sharded);
+    assert!(r.strassen_plan(21504, 21504, 21504, Some(1e-12)).is_none());
+}
+
+/// Strassen leaves land on the cluster's work queues: 7 leaves over 7
+/// cards beat the serial single-card schedule (composition claim).
+#[test]
+fn strassen_composes_with_the_cluster_scheduler() {
+    use systo3d::cluster::{ClusterSim, Fleet};
+    let dag = TaskDag::build(21504, 21504, 21504, 1);
+    assert_eq!(dag.leaves.len(), 7);
+    let serial = dag.serial_seconds(&design_g());
+    let sim = ClusterSim::new(Fleet::homogeneous(7, "G").unwrap());
+    let (report, total) = dag.fleet_seconds(&sim).unwrap();
+    assert_eq!(report.shards, 7);
+    assert!(report.steals == 0, "one leaf per card needs no stealing");
+    assert!(total < serial, "fleet {total} vs serial {serial}");
+}
+
+/// Service end-to-end on the Strassen route (forced depth so the job is
+/// test-sized), with numerics inside the configured budget.
+#[test]
+fn service_strassen_numerics_within_budget() {
+    let budget = 1e-4;
+    let svc = GemmService::start(ServiceConfig {
+        artifact_dir: None,
+        strassen: StrassenConfig {
+            mode: StrassenMode::Force(3),
+            error_budget: budget,
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let a = Matrix::random(120, 88, 21);
+    let b = Matrix::random(88, 72, 22);
+    let want = matmul_blocked(&a, &b);
+    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
+    assert_eq!(resp.route, Route::Strassen);
+    let rep = resp.strassen.expect("report");
+    assert_eq!(rep.depth, 3);
+    assert_eq!(rep.leaves, 343);
+    let err = rep.rel_fro_error.expect("verified at this size");
+    assert!(err < budget, "measured {err} vs budget {budget}");
+    assert!(resp.result.unwrap().rel_fro_error(&want) < budget);
+    let snap = svc.metrics.snapshot();
+    assert_eq!(snap.strassen_jobs, 1);
+    assert_eq!(snap.strassen_depths[3], 1);
+}
