@@ -5,7 +5,8 @@
 //! 2D-grid and 2.5D/SUMMA partitioners by simulated makespan; the table
 //! reports effective TFLOPS, scaling efficiency vs. the N=1 run, bytes
 //! moved, and the per-device utilization band. A second section shows
-//! the communication bill per strategy at N=8, and a third runs a
+//! the communication bill per strategy at N=8, a third compares the
+//! ring and torus fabrics on the same 2.5D plan, and a fourth runs a
 //! deliberately heterogeneous fleet to exercise work-stealing.
 //!
 //! ```sh
@@ -14,6 +15,7 @@
 
 use systo3d::cli::Args;
 use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
 use systo3d::perfmodel::scaling_efficiency;
 
 fn main() -> anyhow::Result<()> {
@@ -92,6 +94,36 @@ fn main() -> anyhow::Result<()> {
     println!(
         "2.5D moves {:.1}% of 1D-row's traffic",
         100.0 * summa as f64 / row1d as f64
+    );
+
+    // --- fabric: ring vs torus at N=8 -----------------------------------
+    println!("\n=== fabric topology at N=8: ring vs torus (2.5D plan) ===");
+    let summa = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d2, d2, d2)
+        .map_err(anyhow::Error::msg)?;
+    let mut ring_vs_torus = Vec::new();
+    for topo in [Topology::ring(8), Topology::torus_near_square(8)] {
+        let sim = ClusterSim::with_topology(
+            Fleet::homogeneous(8, &id).map_err(anyhow::Error::msg)?,
+            topo,
+        );
+        let r = sim.simulate(&summa);
+        println!(
+            "{:>6}: makespan {:.4} s, link util {:.1}% mean / {:.1}% peak, \
+             reduction {:.4} s ({:.0}% overlapped)",
+            r.topology,
+            r.makespan_seconds,
+            r.link_utilization() * 100.0,
+            r.max_link_utilization() * 100.0,
+            r.reduction_seconds,
+            r.reduction_overlap() * 100.0,
+        );
+        ring_vs_torus.push(r.makespan_seconds);
+    }
+    anyhow::ensure!(
+        ring_vs_torus[1] <= ring_vs_torus[0],
+        "the torus must not lose to the ring at N=8 ({} vs {})",
+        ring_vs_torus[1],
+        ring_vs_torus[0]
     );
 
     // --- heterogeneous rack: work-stealing in action --------------------

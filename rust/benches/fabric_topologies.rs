@@ -1,0 +1,91 @@
+//! Bench: the card-fabric layer — route-table construction, congested
+//! collective pricing, and the full topology-aware cluster simulation.
+//!
+//! Times the host-side cost of the fabric machinery (the sharded
+//! route's planner now prices plans per topology) and prints the
+//! simulated numbers the fabric story is judged by: the same 2.5D plan
+//! on ring vs torus vs fat tree, and the overlap saving of the
+//! pipelined reduction.
+//!
+//! ```sh
+//! cargo bench --bench fabric_topologies
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::{CollectiveSchedule, FabricState, ReduceAlgo, RouteTable, Topology};
+
+fn main() {
+    let b = common::bench();
+    let d2 = 21504u64;
+
+    common::section("fabric: route-table construction (host cost)");
+    for n in [8usize, 16, 32] {
+        let topo = Topology::torus_near_square(n);
+        let s = b.run(&format!("route_table torus n={n}"), || {
+            RouteTable::new(&topo).hops(0, n - 1).unwrap() as u64
+        });
+        common::report(&s);
+    }
+
+    common::section("fabric: collective pricing on a congested ring (host cost)");
+    let ring = FabricState::new(Topology::ring(16));
+    let others: Vec<usize> = (1..16).collect();
+    for algo in [ReduceAlgo::Direct, ReduceAlgo::Tree, ReduceAlgo::Ring] {
+        let sched = CollectiveSchedule::build(algo, 0, &others, 256 << 20);
+        let s = b.run(&format!("price {} c=16", algo.name()), || {
+            sched.price(&ring, &[0.0; 16]).unwrap()
+        });
+        common::report(&s);
+    }
+
+    common::section("fabric: simulated 2.5D makespan per topology (n=16)");
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(16), d2, d2, d2)
+        .expect("plan");
+    for topo in [
+        Topology::ring(16),
+        Topology::torus_near_square(16),
+        Topology::fat_tree(16),
+    ] {
+        let name = topo.name();
+        let sim = ClusterSim::with_topology(Fleet::homogeneous(16, "G").expect("design G"), topo);
+        let s = b.run(&format!("simulate {} {} n=16", plan.strategy.name(), name), || {
+            sim.simulate(&plan).makespan_seconds
+        });
+        common::report(&s);
+        let r = sim.simulate(&plan);
+        println!(
+            "  {name}: {:.4} s makespan, link util {:.1}% mean / {:.1}% peak, \
+             reduction {:.4} s ({:.0}% overlapped)",
+            r.makespan_seconds,
+            r.link_utilization() * 100.0,
+            r.max_link_utilization() * 100.0,
+            r.reduction_seconds,
+            r.reduction_overlap() * 100.0,
+        );
+    }
+
+    common::section("fabric: overlapped vs barrier reduction (n=8, d=8192)");
+    let plan = PartitionPlan::new(
+        PartitionStrategy::Summa25D { p: 2, q: 2, c: 8 },
+        8192,
+        8192,
+        8192,
+    )
+    .expect("plan");
+    let sim =
+        ClusterSim::with_topology(Fleet::homogeneous(8, "G").expect("design G"), Topology::ring(8));
+    let s = b.run("overlap_report ring n=8", || {
+        sim.overlap_report(&plan, Some(ReduceAlgo::Direct)).saving_fraction()
+    });
+    common::report(&s);
+    let rep = sim.overlap_report(&plan, Some(ReduceAlgo::Direct));
+    println!(
+        "  overlapped {:.4} s vs barrier {:.4} s ({:.1}% saved)",
+        rep.overlapped_makespan_seconds,
+        rep.barrier_makespan_seconds,
+        rep.saving_fraction() * 100.0,
+    );
+}

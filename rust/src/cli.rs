@@ -125,6 +125,15 @@ mod tests {
     }
 
     #[test]
+    fn fabric_subcommand_options() {
+        let a = parse("fabric --devices 16 --topology torus --d2 21504 --overlap");
+        assert_eq!(a.subcommand.as_deref(), Some("fabric"));
+        assert_eq!(a.get_usize("devices", 8).unwrap(), 16);
+        assert_eq!(a.get_str("topology", "all"), "torus");
+        assert!(a.flag("overlap"));
+    }
+
+    #[test]
     fn cluster_subcommand_options() {
         let a = parse("cluster --devices 8 --d2 21504 --strategy 2.5d --mix");
         assert_eq!(a.subcommand.as_deref(), Some("cluster"));

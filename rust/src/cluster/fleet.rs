@@ -6,12 +6,19 @@
 //! through the same [`OffchipSim`] event model as single-card requests,
 //! on extents padded up to the device's blocking (a partial edge shard
 //! is timed as its zero-padded block, like the HLS kernel would run it).
+//!
+//! The fleet's card↔card wiring is an explicit
+//! [`crate::fabric::Topology`]: [`ClusterSim::new`] defaults to
+//! [`Topology::auto`], [`ClusterSim::with_topology`] pins a specific
+//! fabric, and the resulting [`ClusterReport`] carries link-utilization
+//! and reduction-overlap gauges alongside the compute numbers.
 
-use super::interconnect::Interconnect;
+use super::interconnect::Link;
 use super::partition::{PartitionPlan, PartitionStrategy, Shard};
 use super::scheduler::{run_schedule, run_schedule_with_failures, ScheduleOutcome};
 use crate::blocked::{OffchipDesign, OffchipSim};
 use crate::dse::configs::fitted_designs;
+use crate::fabric::{pipeline_schedule, OverlapReport, ReduceAlgo, Topology};
 use crate::gemm::Matrix;
 use crate::perfmodel::flop_count;
 
@@ -110,6 +117,8 @@ pub struct DeviceReport {
 #[derive(Clone, Debug)]
 pub struct ClusterReport {
     pub strategy: &'static str,
+    /// Fabric family the reductions routed over.
+    pub topology: &'static str,
     pub devices: usize,
     pub m: u64,
     pub k: u64,
@@ -119,6 +128,8 @@ pub struct ClusterReport {
     /// Shard attempts lost to device deaths and re-executed on
     /// survivors (0 on a healthy fleet).
     pub retries: usize,
+    /// Reduction steps that re-routed around a dying transit card.
+    pub reroutes: usize,
     pub makespan_seconds: f64,
     /// Paper-convention throughput over the whole problem.
     pub effective_gflops: f64,
@@ -129,19 +140,55 @@ pub struct ClusterReport {
     pub host_to_device_bytes: u64,
     pub device_to_device_bytes: u64,
     pub device_to_host_bytes: u64,
+    /// Circuit-hold seconds of the partial-C reduction steps.
+    pub reduction_seconds: f64,
+    /// Of those, seconds hidden under some device's compute.
+    pub reduction_overlap_seconds: f64,
+    /// Busy seconds summed over all directed fabric links.
+    pub link_busy_seconds: f64,
+    /// Busy seconds of the hottest directed fabric link.
+    pub max_link_busy_seconds: f64,
+    /// Directed fabric links (two per cable/trunk).
+    pub directed_links: usize,
     /// Device bounding the critical path.
     pub critical_device: usize,
     pub per_device: Vec<DeviceReport>,
 }
 
 impl ClusterReport {
+    /// Mean directed-link utilization over the makespan.
+    pub fn link_utilization(&self) -> f64 {
+        if self.makespan_seconds <= 0.0 || self.directed_links == 0 {
+            return 0.0;
+        }
+        self.link_busy_seconds / (self.makespan_seconds * self.directed_links as f64)
+    }
+
+    /// Utilization of the hottest directed link over the makespan.
+    pub fn max_link_utilization(&self) -> f64 {
+        if self.makespan_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.max_link_busy_seconds / self.makespan_seconds
+    }
+
+    /// Fraction of the reduction time hidden under compute.
+    pub fn reduction_overlap(&self) -> f64 {
+        if self.reduction_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.reduction_overlap_seconds / self.reduction_seconds
+    }
+
     /// Multi-line human-readable summary (CLI / examples).
     pub fn render(&self) -> String {
         let mut out = format!(
             "cluster {} on {} device(s): ({} x {}) * ({} x {})\n\
              shards: {} ({} stolen, {} retried)  makespan: {:.4} s\n\
              effective: {:.0} GFLOPS of {:.0} aggregate peak (e_C = {:.3})\n\
-             bytes: {:.1} MB host->dev, {:.1} MB dev<->dev, {:.1} MB dev->host\n",
+             bytes: {:.1} MB host->dev, {:.1} MB dev<->dev, {:.1} MB dev->host\n\
+             fabric {}: {} directed links, util {:.1}% mean / {:.1}% peak; \
+             reduction {:.4} s ({:.0}% overlapped, {} rerouted)\n",
             self.strategy,
             self.devices,
             self.m,
@@ -158,6 +205,13 @@ impl ClusterReport {
             self.host_to_device_bytes as f64 / 1e6,
             self.device_to_device_bytes as f64 / 1e6,
             self.device_to_host_bytes as f64 / 1e6,
+            self.topology,
+            self.directed_links,
+            self.link_utilization() * 100.0,
+            self.max_link_utilization() * 100.0,
+            self.reduction_seconds,
+            self.reduction_overlap() * 100.0,
+            self.reroutes,
         );
         for (i, d) in self.per_device.iter().enumerate() {
             out.push_str(&format!(
@@ -180,12 +234,29 @@ impl ClusterReport {
 #[derive(Clone, Debug)]
 pub struct ClusterSim {
     pub fleet: Fleet,
-    pub interconnect: Interconnect,
+    /// PCIe host link of each card.
+    pub host: Link,
+    /// The card↔card fabric the reductions route over.
+    pub topology: Topology,
 }
 
 impl ClusterSim {
+    /// Fleet on the default fabric ([`Topology::auto`]): a full mesh
+    /// while the 4-port budget lasts, a near-square torus beyond.
     pub fn new(fleet: Fleet) -> Self {
-        Self { fleet, interconnect: Interconnect::pcie_cluster() }
+        let topology = Topology::auto(fleet.len().max(1));
+        Self::with_topology(fleet, topology)
+    }
+
+    /// Fleet on an explicit fabric; the topology must wire exactly the
+    /// fleet's cards.
+    pub fn with_topology(fleet: Fleet, topology: Topology) -> Self {
+        assert_eq!(
+            topology.cards,
+            fleet.len().max(1),
+            "topology must wire exactly the fleet's cards"
+        );
+        Self { fleet, host: Link::pcie_gen3_x8(), topology }
     }
 
     /// Seconds for `shard` on fleet device `d`: the shard's extents are
@@ -200,10 +271,24 @@ impl ClusterSim {
     /// Timing-only run of a plan.
     pub fn simulate(&self, plan: &PartitionPlan) -> ClusterReport {
         assert!(!self.fleet.is_empty(), "empty fleet");
-        let outcome = run_schedule(plan, self.fleet.len(), &self.interconnect, |d, s| {
-            self.shard_seconds(d, s)
-        });
+        let outcome =
+            run_schedule(plan, self.fleet.len(), &self.host, &self.topology, |d, s| {
+                self.shard_seconds(d, s)
+            });
         self.report(plan, outcome)
+    }
+
+    /// Replay a plan's compute and reductions with and without the
+    /// compute-overlapped collective pipeline (see
+    /// [`crate::fabric::overlap`]); `algo` None picks the cheapest
+    /// collective per tile.
+    pub fn overlap_report(
+        &self,
+        plan: &PartitionPlan,
+        algo: Option<ReduceAlgo>,
+    ) -> OverlapReport {
+        assert!(!self.fleet.is_empty(), "empty fleet");
+        pipeline_schedule(plan, &self.topology, algo, |d, s| self.shard_seconds(d, s))
     }
 
     /// Timing run with injected device deaths: `deaths[d]` is the time
@@ -220,7 +305,8 @@ impl ClusterSim {
         let outcome = run_schedule_with_failures(
             plan,
             self.fleet.len(),
-            &self.interconnect,
+            &self.host,
+            &self.topology,
             deaths,
             |d, s| self.shard_seconds(d, s),
         )?;
@@ -311,6 +397,7 @@ impl ClusterSim {
         let aggregate_peak_gflops = self.fleet.aggregate_peak_gflops();
         ClusterReport {
             strategy: plan.strategy.name(),
+            topology: self.topology.name(),
             devices: self.fleet.len(),
             m: plan.m,
             k: plan.k,
@@ -318,6 +405,7 @@ impl ClusterSim {
             shards: plan.shards.len(),
             steals: outcome.steals,
             retries: outcome.retries,
+            reroutes: outcome.reroutes,
             makespan_seconds: makespan,
             effective_gflops,
             aggregate_peak_gflops,
@@ -325,6 +413,11 @@ impl ClusterSim {
             host_to_device_bytes: plan.host_to_device_bytes,
             device_to_device_bytes: plan.device_to_device_bytes,
             device_to_host_bytes: plan.device_to_host_bytes,
+            reduction_seconds: outcome.reduction_seconds,
+            reduction_overlap_seconds: outcome.reduction_overlap_seconds,
+            link_busy_seconds: outcome.link_busy_seconds,
+            max_link_busy_seconds: outcome.max_link_busy_seconds,
+            directed_links: outcome.directed_links,
             critical_device: outcome.critical_device(),
             per_device,
         }
@@ -440,6 +533,49 @@ mod tests {
         let (report, c) = sim.simulate_functional(&plan, &a, &b);
         assert!(report.makespan_seconds > 0.0);
         assert_eq!(c.data, matmul_blocked(&a, &b).data);
+    }
+
+    #[test]
+    fn topology_changes_the_simulated_makespan() {
+        // The same plane-major 2.5D plan: 4-hop congested reductions on
+        // a ring, disjoint 2-hop flows on the torus.
+        let d = 21504u64;
+        let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
+        let ring =
+            ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), Topology::ring(8));
+        let torus = ClusterSim::with_topology(
+            Fleet::homogeneous(8, "G").unwrap(),
+            Topology::torus2d(4, 2),
+        );
+        let rr = ring.simulate(&plan);
+        let rt = torus.simulate(&plan);
+        assert_eq!(rr.topology, "ring");
+        assert_eq!(rt.topology, "torus");
+        assert!(rr.makespan_seconds > rt.makespan_seconds, "{rr:?} vs {rt:?}");
+        // Multi-hop routing is visible in the link gauges.
+        assert!(rr.link_busy_seconds > rt.link_busy_seconds);
+        assert!(rr.link_utilization() > 0.0 && rr.link_utilization() <= 1.0);
+        assert!(rr.max_link_utilization() >= rr.link_utilization());
+        assert!(rr.render().contains("fabric ring"));
+    }
+
+    #[test]
+    fn overlap_report_from_the_sim() {
+        let sim = ClusterSim::with_topology(
+            Fleet::homogeneous(8, "G").unwrap(),
+            Topology::ring(8),
+        );
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 8 },
+            8192,
+            8192,
+            8192,
+        )
+        .unwrap();
+        let r = sim.overlap_report(&plan, Some(crate::fabric::ReduceAlgo::Direct));
+        assert!(r.overlapped_makespan_seconds <= r.barrier_makespan_seconds + 1e-9);
+        assert!(r.reduction_seconds > 0.0);
+        assert_eq!(r.timelines.len(), 8);
     }
 
     #[test]

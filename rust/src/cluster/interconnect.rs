@@ -9,9 +9,13 @@
 //! * **card link** — one QSFP28 100 Gb serial port (the 520N carries
 //!   four); partial-C reductions ride it without a host round trip.
 //!
-//! Each device owns one host link and one card link; transfers on
-//! different devices proceed in parallel, transfers on one link
-//! serialize.
+//! Each device owns one host link; transfers on different devices
+//! proceed in parallel, transfers on one link serialize. The card
+//! ports are wired into an explicit multi-hop
+//! [`crate::fabric::Topology`] — [`Link::qsfp28_100g`] is the lane
+//! model every fabric edge multiplies. The flat [`Interconnect`] pair
+//! survives as the legacy all-to-all view for callers that only need
+//! link rates.
 
 use crate::memory::DdrChannel;
 

@@ -10,15 +10,20 @@
 //!   2.5D/SUMMA partitioners (Shen et al.; de Fine Licht et al.) that
 //!   emit per-device sub-GEMM [`Shard`]s plus the host↔device and
 //!   device↔device transfer volumes each plan implies.
-//! * [`interconnect`] — PCIe Gen3 x8 host links and a QSFP28 card↔card
-//!   link, in the [`crate::memory::DdrChannel`] peak-times-efficiency
-//!   idiom.
+//! * [`interconnect`] — PCIe Gen3 x8 host links and the QSFP28 lane
+//!   model, in the [`crate::memory::DdrChannel`] peak-times-efficiency
+//!   idiom. The card↔card wiring itself is a
+//!   [`crate::fabric::Topology`] (ring / torus / mesh / fat-tree under
+//!   the 4-port budget) with congestion-aware multi-hop routing.
 //! * [`scheduler`] — per-device work queues with work-stealing and
 //!   double-buffered overlap of shard DMA with compute; every shard is
-//!   timed by the device's [`crate::blocked::OffchipSim`]. Device
-//!   deaths are survivable: an in-flight shard bumps its attempt
-//!   counter and requeues on a surviving card, and a dead card's queue
-//!   drains through the stealing path
+//!   timed by the device's [`crate::blocked::OffchipSim`], and the
+//!   partial-C reductions route over the fabric's shortest live paths
+//!   (the outcome reports link utilization and how much reduction time
+//!   hid under compute). Device deaths are survivable: an in-flight
+//!   shard bumps its attempt counter and requeues on a surviving card,
+//!   a dead card's queue drains through the stealing path, and the
+//!   fabric heals around its downed links
 //!   ([`scheduler::run_schedule_with_failures`]).
 //! * [`fleet`] — N (possibly heterogeneous Table-I) designs and the
 //!   [`ClusterSim`] front door producing a [`ClusterReport`]

@@ -15,9 +15,16 @@
 //!   into c slices (the "replication depth" of communication-avoiding
 //!   GEMM, de Fine Licht et al.): device (i, j, l) computes a *partial*
 //!   C tile over k slice l, and the c partials per tile are reduced over
-//!   the card↔card link. Replication trades a smaller host broadcast
+//!   the card↔card fabric. Replication trades a smaller host broadcast
 //!   for device↔device reduction traffic — the communication lower
 //!   bound favours it once the fleet outgrows a near-square grid.
+//!   Device placement is **plane-major**: the c replication layers map
+//!   to contiguous p × q planes of the fleet (the stacked-plane layout
+//!   of 2.5D algorithms), so the cross-plane reduction is real
+//!   multi-hop traffic on narrow fabrics — and
+//!   [`PartitionPlan::reduction_hop_bytes`] prices a plan against a
+//!   concrete [`crate::fabric::Topology`] (the same 2.5D plan scores
+//!   lower on a torus than on a ring).
 //!
 //! Every partitioner handles extents that do not divide evenly: the
 //! remainder is spread one row/column/slice at a time over the leading
@@ -230,13 +237,15 @@ impl PartitionPlan {
                 let rows = split_extent(m, p);
                 let cols = split_extent(n, q);
                 let slices = split_extent(k, c);
-                let (q_used, c_used) = (cols.len(), slices.len());
-                let mut out = Vec::with_capacity(rows.len() * q_used * c_used);
+                let (p_used, q_used) = (rows.len(), cols.len());
+                let mut out = Vec::with_capacity(p_used * q_used * slices.len());
                 for (i, &(row0, r)) in rows.iter().enumerate() {
                     for (j, &(col0, cl)) in cols.iter().enumerate() {
                         for (l, &(k0, ks)) in slices.iter().enumerate() {
                             out.push(Shard {
-                                device: (i * q_used + j) * c_used + l,
+                                // Plane-major: slice l owns the l-th
+                                // contiguous p × q plane of devices.
+                                device: (l * p_used + i) * q_used + j,
                                 row0,
                                 rows: r,
                                 col0,
@@ -293,6 +302,47 @@ impl PartitionPlan {
     /// figure of merit communication-avoiding blocking maximizes.
     pub fn flops_per_byte(&self) -> f64 {
         self.total_flops() as f64 / self.total_bytes_moved() as f64
+    }
+
+    /// Per tile, the k range start and planned device of its k-first
+    /// shard — the reduction home. Every consumer of home identity
+    /// (the scheduler's reduction bookkeeping, the overlap replay,
+    /// hop-aware pricing) derives it from this one map so they cannot
+    /// diverge.
+    pub fn tile_homes(&self) -> std::collections::BTreeMap<(u64, u64), (u64, usize)> {
+        let mut homes: std::collections::BTreeMap<(u64, u64), (u64, usize)> = Default::default();
+        for s in &self.shards {
+            let e = homes.entry(s.tile()).or_insert((s.k0, s.device));
+            if s.k0 < e.0 {
+                *e = (s.k0, s.device);
+            }
+        }
+        homes
+    }
+
+    /// Reduction traffic weighted by fabric distance: Σ over non-home
+    /// partials of `c_bytes · hops(sender, home)`, with plan devices
+    /// folded onto the fabric's cards the way the scheduler folds them
+    /// (`device % cards`). This is the hop-aware half of plan pricing:
+    /// `device_to_device_bytes` is topology-blind, this is not — the
+    /// same 2.5D plan scores lower on a torus than on a ring.
+    pub fn reduction_hop_bytes(&self, topology: &crate::fabric::Topology) -> u64 {
+        let cards = topology.cards.max(1);
+        let homes = self.tile_homes();
+        let mut total = 0u64;
+        for s in &self.shards {
+            let (min_k0, home) = homes[&s.tile()];
+            if s.k0 == min_k0 {
+                continue;
+            }
+            let (src, dst) = (s.device % cards, home % cards);
+            if src == dst {
+                continue;
+            }
+            let hops = u64::from(topology.hops(src, dst).unwrap_or(0));
+            total += s.c_bytes() * hops;
+        }
+        total
     }
 
     /// Check the shards tile the m × n × k iteration space exactly:
@@ -453,6 +503,35 @@ mod tests {
         assert_eq!(plan.devices, 12);
         // Each of the 4 tiles has 3 partials -> 2 sends of its C bytes.
         assert_eq!(plan.device_to_device_bytes, 2 * m * n * 4);
+    }
+
+    #[test]
+    fn summa_plane_major_and_hop_pricing() {
+        use crate::fabric::Topology;
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 },
+            64,
+            64,
+            64,
+        )
+        .unwrap();
+        // Plane-major: slice 0 occupies devices 0..4, slice 1 devices 4..8.
+        for s in &plan.shards {
+            if s.k0 == 0 {
+                assert!(s.device < 4, "{s:?}");
+            } else {
+                assert!(s.device >= 4, "{s:?}");
+            }
+        }
+        // The cross-plane combine is 2 hops on a (4,2) torus, 4 on a ring.
+        let ring = plan.reduction_hop_bytes(&Topology::ring(8));
+        let torus = plan.reduction_hop_bytes(&Topology::torus2d(4, 2));
+        assert!(torus < ring, "torus {torus} vs ring {ring}");
+        assert_eq!(torus * 2, ring);
+        // Plans without a k split ship nothing.
+        let grid =
+            PartitionPlan::new(PartitionStrategy::Grid2D { p: 2, q: 2 }, 64, 64, 64).unwrap();
+        assert_eq!(grid.reduction_hop_bytes(&Topology::ring(4)), 0);
     }
 
     #[test]

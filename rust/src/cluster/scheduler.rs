@@ -8,13 +8,21 @@
 //!   tiles back to the host) — PCIe is full duplex, so the two
 //!   directions are independent resources,
 //! * the **compute engine** (the device's `OffchipSim` timing),
-//! * the **card link** (partial-C reduction sends, 2.5D plans only).
+//! * the **card fabric** (partial-C reduction sends, 2.5D plans only):
+//!   every send routes over the [`crate::fabric::Topology`]'s shortest
+//!   live path under the circuit-style contention model of
+//!   [`crate::fabric::FabricState`] — multi-hop flows reserve every
+//!   link they cross, so reduction traffic congests on narrow
+//!   topologies and parallelizes on wide ones.
 //!
 //! Transfers are double-buffered: the DMA for a device's task *i* may
 //! start as soon as the link is free and task *i−2*'s compute has
 //! drained its staging buffer — so transfer of the next shard overlaps
 //! compute of the current one, exactly like the on-chip Phase-2 overlap
-//! of §V one level up the hierarchy.
+//! of §V one level up the hierarchy. Reduction sends ride the DMA
+//! engines, not the compute engine, so a tile whose partials are done
+//! reduces *while* the remaining shards compute; the outcome reports
+//! how much of the reduction time was hidden that way.
 //!
 //! Work-stealing: a device with an empty queue takes a shard from the
 //! back of the longest remaining queue. With heterogeneous fleets this
@@ -26,13 +34,19 @@
 //! compute crossing the death instant); the shard's attempt counter is
 //! bumped and it requeues on the least-loaded survivor, while the dead
 //! card's still-queued shards drain through the normal stealing path.
-//! Completed results are treated as checkpointed (they already reached
-//! DDR/host), and a drained tile whose reduction home died is re-homed
-//! onto the device that completed its last shard. Only when *every*
-//! device is dead with shards outstanding does the schedule fail.
+//! The fabric heals too: a dead card's links go down, its routes are
+//! invalidated, and reduction steps in flight across it re-route
+//! around the gap (a ring heals into a line). A tile whose reduction
+//! home died re-homes onto the next device that completes one of its
+//! partials; completed results are treated as checkpointed (they
+//! already reached DDR/host). If the death cuts the fabric between a
+//! sender and its home, the partial bounces via the host at 2× PCIe
+//! cost. Only when *every* device is dead with shards outstanding does
+//! the schedule fail.
 
-use super::interconnect::Interconnect;
+use super::interconnect::Link;
 use super::partition::{PartitionPlan, Shard};
+use crate::fabric::{FabricState, Topology};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Per-device accounting after a run.
@@ -49,7 +63,7 @@ pub struct DeviceTrace {
     pub transfer_seconds: f64,
     /// Compute-engine busy seconds.
     pub compute_seconds: f64,
-    /// Card-link busy seconds (partial reductions).
+    /// Fabric circuit-hold seconds of this device's reduction sends.
     pub card_seconds: f64,
     /// When this device went fully idle.
     pub finish_seconds: f64,
@@ -65,6 +79,20 @@ pub struct ScheduleOutcome {
     pub steals: usize,
     /// Shard attempts lost to device deaths and re-executed elsewhere.
     pub retries: usize,
+    /// Reduction steps that aborted on a dying transit card and took a
+    /// detour over the healed fabric.
+    pub reroutes: usize,
+    /// Total circuit-hold seconds of the partial-C reduction steps.
+    pub reduction_seconds: f64,
+    /// Of those, seconds during which at least one device was
+    /// computing — the overlap the DMA-engine pipelining buys.
+    pub reduction_overlap_seconds: f64,
+    /// Busy seconds summed over all directed fabric links.
+    pub link_busy_seconds: f64,
+    /// Busy seconds of the hottest directed fabric link.
+    pub max_link_busy_seconds: f64,
+    /// Directed fabric links (two per cable/trunk).
+    pub directed_links: usize,
 }
 
 impl ScheduleOutcome {
@@ -76,28 +104,56 @@ impl ScheduleOutcome {
             .max_by(|(_, a), (_, b)| a.finish_seconds.total_cmp(&b.finish_seconds))
             .map_or(0, |(i, _)| i)
     }
+
+    /// Fraction of the reduction time hidden under compute (0 when the
+    /// plan has no reduction traffic).
+    pub fn reduction_overlap_fraction(&self) -> f64 {
+        if self.reduction_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.reduction_overlap_seconds / self.reduction_seconds
+    }
 }
 
-#[derive(Default)]
 struct TileState {
     remaining: usize,
-    /// Device that computed the k-first shard (owns the reduction).
-    home: Option<usize>,
-    min_k0: u64,
+    /// Device holding the reduction state (the plan assigns the k-first
+    /// shard's device; deaths may re-home it).
+    home: usize,
     /// When all partials (and the home compute) are in place.
     ready: f64,
     c_bytes: u64,
 }
 
+/// Seconds of `sends` overlapping the union of `compute` intervals.
+fn overlap_seconds(mut compute: Vec<(f64, f64)>, sends: &[(f64, f64)]) -> f64 {
+    compute.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut merged: Vec<(f64, f64)> = Vec::new();
+    for (s, e) in compute {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    sends
+        .iter()
+        .map(|&(s, e)| {
+            merged.iter().map(|&(cs, ce)| (e.min(ce) - s.max(cs)).max(0.0)).sum::<f64>()
+        })
+        .sum()
+}
+
 /// Run `plan` over `ndev` healthy devices whose per-shard compute time
-/// is given by `compute_seconds(device, shard)`.
+/// is given by `compute_seconds(device, shard)`, with reductions routed
+/// over `topology`.
 pub fn run_schedule(
     plan: &PartitionPlan,
     ndev: usize,
-    interconnect: &Interconnect,
+    host: &Link,
+    topology: &Topology,
     compute_seconds: impl Fn(usize, &Shard) -> f64,
 ) -> ScheduleOutcome {
-    run_schedule_with_failures(plan, ndev, interconnect, &[], compute_seconds)
+    run_schedule_with_failures(plan, ndev, host, topology, &[], compute_seconds)
         .expect("a healthy fleet cannot run out of devices")
 }
 
@@ -105,22 +161,26 @@ pub fn run_schedule(
 /// simulated time at which device `d` dies (missing / `None` = healthy).
 /// A dying device loses its in-flight shard — the shard's attempt
 /// counter is bumped and it requeues on the least-loaded survivor —
-/// and takes no further work; its queued shards migrate via stealing.
-/// Errors only when every device is dead with shards outstanding.
+/// and takes no further work; its queued shards migrate via stealing
+/// and the fabric routes around its downed links. Errors only when
+/// every device is dead with shards outstanding.
 pub fn run_schedule_with_failures(
     plan: &PartitionPlan,
     ndev: usize,
-    interconnect: &Interconnect,
+    host: &Link,
+    topology: &Topology,
     deaths: &[Option<f64>],
     compute_seconds: impl Fn(usize, &Shard) -> f64,
 ) -> Result<ScheduleOutcome, String> {
     assert!(ndev > 0, "empty fleet");
+    assert_eq!(topology.cards, ndev, "fabric must wire exactly the fleet's cards");
     let death = |d: usize| deaths.get(d).copied().flatten();
     let mut queues: Vec<VecDeque<Shard>> = vec![VecDeque::new(); ndev];
     for s in &plan.shards {
         queues[s.device % ndev].push_back(*s);
     }
 
+    let mut fabric = FabricState::new(topology.clone());
     let mut link_free = vec![0.0f64; ndev];
     let mut out_free = vec![0.0f64; ndev];
     let mut card_free = vec![0.0f64; ndev];
@@ -130,18 +190,24 @@ pub fn run_schedule_with_failures(
     let mut dead = vec![false; ndev];
     let mut steals = 0usize;
     let mut retries = 0usize;
+    let mut compute_intervals: Vec<(f64, f64)> = Vec::with_capacity(plan.shards.len());
+    let mut send_intervals: Vec<(f64, f64)> = Vec::new();
     // Per-shard attempt counters, keyed by the shard's unique
     // (tile, k-range) identity within the plan.
     let mut attempts: BTreeMap<(u64, u64, u64), usize> = BTreeMap::new();
 
+    // The plan statically pins each tile's reduction home to the device
+    // assigned its k-first shard (see `PartitionPlan::tile_homes`).
+    let homes = plan.tile_homes();
     let mut tiles: BTreeMap<(u64, u64), TileState> = BTreeMap::new();
     for s in &plan.shards {
-        let t = tiles.entry(s.tile()).or_default();
+        let t = tiles.entry(s.tile()).or_insert_with(|| TileState {
+            remaining: 0,
+            home: homes[&s.tile()].1 % ndev,
+            ready: 0.0,
+            c_bytes: s.c_bytes(),
+        });
         t.remaining += 1;
-        t.c_bytes = s.c_bytes();
-        if t.remaining == 1 || s.k0 < t.min_k0 {
-            t.min_k0 = s.k0;
-        }
     }
 
     let mut pending: usize = plan.shards.len();
@@ -176,7 +242,7 @@ pub fn run_schedule_with_failures(
         // Double-buffered staging: task i waits for task i-2's compute.
         let i = traces[d].shards;
         let gate = if i >= 2 { compute_ends[d][i - 2] } else { 0.0 };
-        let xfer = interconnect.host_seconds(shard.input_bytes());
+        let xfer = host.seconds_for_bytes(shard.input_bytes());
         let t_start = link_free[d].max(gate);
         let t_end = t_start + xfer;
 
@@ -188,8 +254,10 @@ pub fn run_schedule_with_failures(
             if c_end > td {
                 // The device dies with this shard in flight: charge the
                 // busy time actually spent, freeze the device at its
-                // death instant, and retry the shard on a survivor.
+                // death instant, down its fabric links, and retry the
+                // shard on a survivor.
                 dead[d] = true;
+                fabric.kill(d);
                 traces[d].lost += 1;
                 traces[d].transfer_seconds += (td.min(t_end) - t_start).max(0.0);
                 traces[d].compute_seconds += (td - c_start).clamp(0.0, comp);
@@ -227,24 +295,48 @@ pub fn run_schedule_with_failures(
         compute_ends[d].push(c_end);
         traces[d].compute_seconds += comp;
         traces[d].shards += 1;
+        compute_intervals.push((c_start, c_end));
 
-        // Tile bookkeeping: reductions and the final writeback.
+        // Tile bookkeeping: fabric reductions and the final writeback.
         let tile = tiles.get_mut(&shard.tile()).unwrap();
         tile.remaining -= 1;
-        if shard.k0 == tile.min_k0 {
-            tile.home = Some(d);
+        let home_doomed =
+            dead[tile.home] || death(tile.home).map_or(false, |td| td <= c_end);
+        if home_doomed && tile.home != d {
+            // The reduction home died: re-home the tile to this device
+            // (its partial stays local; earlier arrivals are treated as
+            // checkpointed and re-served from the survivors' copies).
+            tile.home = d;
+        }
+        if d == tile.home {
             tile.ready = tile.ready.max(c_end);
         } else {
-            // Ship the partial to the home device over the card link.
-            let send = interconnect.card_seconds(tile.c_bytes);
-            let s_end = card_free[d].max(c_end) + send;
-            card_free[d] = s_end;
-            traces[d].card_seconds += send;
-            tile.ready = tile.ready.max(s_end);
+            match fabric.send_with_deaths(d, tile.home, tile.c_bytes, c_end, deaths) {
+                Some((s_start, s_end)) => {
+                    traces[d].card_seconds += s_end - s_start;
+                    card_free[d] = card_free[d].max(s_end);
+                    send_intervals.push((s_start, s_end));
+                    tile.ready = tile.ready.max(s_end);
+                }
+                None => {
+                    // Fabric partitioned between sender and home: the
+                    // partial bounces via the host (PCIe up + down),
+                    // serialized with this device's other reduction
+                    // sends so concurrent bounces cannot double-book
+                    // its DMA engine.
+                    let bounce = 2.0 * host.seconds_for_bytes(tile.c_bytes);
+                    let s_start = card_free[d].max(c_end);
+                    let s_end = s_start + bounce;
+                    traces[d].card_seconds += bounce;
+                    card_free[d] = s_end;
+                    send_intervals.push((s_start, s_end));
+                    tile.ready = tile.ready.max(s_end);
+                }
+            }
         }
         if tile.remaining == 0 {
-            let mut home = tile.home.expect("k-first shard completed before the tile drained");
-            let wb = interconnect.host_seconds(tile.c_bytes);
+            let mut home = tile.home;
+            let wb = host.seconds_for_bytes(tile.c_bytes);
             // The reduction home may already be dead, or would die with
             // this writeback in flight: completed partials are
             // checkpointed, so the device finishing the tile inherits
@@ -263,12 +355,24 @@ pub fn run_schedule_with_failures(
 
     let mut makespan = 0.0f64;
     for d in 0..ndev {
-        let finish =
-            link_free[d].max(out_free[d]).max(compute_free[d]).max(card_free[d]);
+        let finish = link_free[d].max(out_free[d]).max(compute_free[d]).max(card_free[d]);
         traces[d].finish_seconds = finish;
         makespan = makespan.max(finish);
     }
-    Ok(ScheduleOutcome { per_device: traces, makespan_seconds: makespan, steals, retries })
+    let reduction_seconds: f64 = send_intervals.iter().map(|&(s, e)| e - s).sum();
+    let reduction_overlap_seconds = overlap_seconds(compute_intervals, &send_intervals);
+    Ok(ScheduleOutcome {
+        per_device: traces,
+        makespan_seconds: makespan,
+        steals,
+        retries,
+        reroutes: fabric.reroutes,
+        reduction_seconds,
+        reduction_overlap_seconds,
+        link_busy_seconds: fabric.busy_seconds_total(),
+        max_link_busy_seconds: fabric.max_busy_seconds(),
+        directed_links: fabric.directed_links(),
+    })
 }
 
 #[cfg(test)]
@@ -280,6 +384,10 @@ mod tests {
         PartitionPlan::new(strategy, d, d, d).unwrap()
     }
 
+    fn host() -> Link {
+        Link::pcie_gen3_x8()
+    }
+
     /// Fixed compute rate: seconds proportional to shard FLOPs.
     fn flat_rate(_: usize, s: &Shard) -> f64 {
         s.flops() as f64 / 3.0e12
@@ -287,11 +395,12 @@ mod tests {
 
     #[test]
     fn two_devices_nearly_halve_makespan() {
-        let ic = Interconnect::pcie_cluster();
         let p1 = plan(PartitionStrategy::Row1D { devices: 1 }, 8192);
         let p2 = plan(PartitionStrategy::Row1D { devices: 2 }, 8192);
-        let t1 = run_schedule(&p1, 1, &ic, flat_rate).makespan_seconds;
-        let t2 = run_schedule(&p2, 2, &ic, flat_rate).makespan_seconds;
+        let t1 =
+            run_schedule(&p1, 1, &host(), &Topology::auto(1), flat_rate).makespan_seconds;
+        let t2 =
+            run_schedule(&p2, 2, &host(), &Topology::auto(2), flat_rate).makespan_seconds;
         assert!(t1 / t2 > 1.8, "speedup {}", t1 / t2);
     }
 
@@ -299,9 +408,8 @@ mod tests {
     fn transfer_overlaps_compute() {
         // With many shards per device, the makespan must sit well below
         // the serial sum of transfer + compute.
-        let ic = Interconnect::pcie_cluster();
         let p = plan(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192);
-        let out = run_schedule(&p, 2, &ic, flat_rate);
+        let out = run_schedule(&p, 2, &host(), &Topology::auto(2), flat_rate);
         for t in &out.per_device {
             let serial = t.transfer_seconds + t.compute_seconds + t.card_seconds;
             assert!(t.finish_seconds < serial, "{t:?}");
@@ -316,8 +424,7 @@ mod tests {
         for s in &mut p.shards {
             s.device = 0;
         }
-        let ic = Interconnect::pcie_cluster();
-        let out = run_schedule(&p, 2, &ic, flat_rate);
+        let out = run_schedule(&p, 2, &host(), &Topology::auto(2), flat_rate);
         assert!(out.steals > 0);
         assert!(out.per_device[1].shards > 0);
         assert_eq!(out.per_device[0].shards + out.per_device[1].shards, 4);
@@ -329,8 +436,7 @@ mod tests {
         // the double-buffer gate throttles the slow device's DMA, the
         // fast device drains its own queue and then steals the tail.
         let p = plan(PartitionStrategy::Row1D { devices: 8 }, 8192);
-        let ic = Interconnect::pcie_cluster();
-        let out = run_schedule(&p, 2, &ic, |d, s| {
+        let out = run_schedule(&p, 2, &host(), &Topology::auto(2), |d, s| {
             let slow = s.flops() as f64 / 1.0e12;
             if d == 1 {
                 slow / 3.0
@@ -350,11 +456,12 @@ mod tests {
     fn failed_shard_retries_on_survivor() {
         // 2 shards, one per device. Device 0 dies mid-compute of its
         // shard: the shard must re-execute on device 1.
-        let ic = Interconnect::pcie_cluster();
         let p = plan(PartitionStrategy::Row1D { devices: 2 }, 4096);
-        let dma = ic.host_seconds(p.shards[0].input_bytes());
+        let dma = host().seconds_for_bytes(p.shards[0].input_bytes());
         let deaths = [Some(dma + 0.5), None];
-        let out = run_schedule_with_failures(&p, 2, &ic, &deaths, |_, _| 1.0).unwrap();
+        let out =
+            run_schedule_with_failures(&p, 2, &host(), &Topology::auto(2), &deaths, |_, _| 1.0)
+                .unwrap();
         assert_eq!(out.retries, 1);
         assert_eq!(out.per_device[0].shards, 0);
         assert_eq!(out.per_device[0].lost, 1);
@@ -363,7 +470,7 @@ mod tests {
         // The dead device's busy time is truncated at its death.
         assert!(out.per_device[0].finish_seconds <= dma + 0.5 + 1e-12);
         // Healthy baseline is faster than the single-survivor rerun.
-        let healthy = run_schedule(&p, 2, &ic, |_, _| 1.0);
+        let healthy = run_schedule(&p, 2, &host(), &Topology::auto(2), |_, _| 1.0);
         assert_eq!(healthy.retries, 0);
         assert!(out.makespan_seconds > healthy.makespan_seconds);
     }
@@ -372,10 +479,16 @@ mod tests {
     fn dead_device_queue_drains_via_stealing() {
         // Device 0 dead from t=0 never starts work; its whole queue is
         // stolen by device 1 with zero lost attempts.
-        let ic = Interconnect::pcie_cluster();
         let p = plan(PartitionStrategy::Row1D { devices: 4 }, 4096);
-        let out =
-            run_schedule_with_failures(&p, 2, &ic, &[Some(0.0), None], flat_rate).unwrap();
+        let out = run_schedule_with_failures(
+            &p,
+            2,
+            &host(),
+            &Topology::auto(2),
+            &[Some(0.0), None],
+            flat_rate,
+        )
+        .unwrap();
         assert_eq!(out.retries, 0);
         assert_eq!(out.per_device[0].shards, 0);
         assert_eq!(out.per_device[1].shards, 4);
@@ -384,34 +497,79 @@ mod tests {
 
     #[test]
     fn all_devices_dead_is_a_clean_error() {
-        let ic = Interconnect::pcie_cluster();
         let p = plan(PartitionStrategy::Row1D { devices: 2 }, 2048);
-        let err = run_schedule_with_failures(&p, 2, &ic, &[Some(0.0), Some(0.0)], flat_rate)
-            .unwrap_err();
+        let err = run_schedule_with_failures(
+            &p,
+            2,
+            &host(),
+            &Topology::auto(2),
+            &[Some(0.0), Some(0.0)],
+            flat_rate,
+        )
+        .unwrap_err();
         assert!(err.contains("dead"), "{err}");
     }
 
     #[test]
     fn no_deaths_matches_plain_schedule() {
-        let ic = Interconnect::pcie_cluster();
         let p = plan(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192);
-        let a = run_schedule(&p, 4, &ic, flat_rate);
-        let b = run_schedule_with_failures(&p, 4, &ic, &[None; 4], flat_rate).unwrap();
+        let topo = Topology::auto(8);
+        let a = run_schedule(&p, 8, &host(), &topo, flat_rate);
+        let b =
+            run_schedule_with_failures(&p, 8, &host(), &topo, &[None; 8], flat_rate).unwrap();
         assert_eq!(a.makespan_seconds, b.makespan_seconds);
         assert_eq!(a.steals, b.steals);
         assert_eq!(b.retries, 0);
+        assert_eq!(b.reroutes, 0);
     }
 
     #[test]
     fn makespan_includes_reduction_and_writeback() {
-        let ic = Interconnect::pcie_cluster();
         let p = plan(PartitionStrategy::Summa25D { p: 1, q: 1, c: 2 }, 2048);
-        let out = run_schedule(&p, 2, &ic, flat_rate);
+        let out = run_schedule(&p, 2, &host(), &Topology::auto(2), flat_rate);
         // The non-home device must have shipped one partial.
         let card: f64 = out.per_device.iter().map(|t| t.card_seconds).sum();
         assert!(card > 0.0);
+        assert!(out.reduction_seconds > 0.0);
+        assert!(out.link_busy_seconds > 0.0);
         // Makespan covers the home device's final writeback.
         let crit = out.critical_device();
         assert!(out.makespan_seconds >= out.per_device[crit].finish_seconds);
+    }
+
+    #[test]
+    fn reductions_route_multi_hop_and_congest() {
+        // Plane-major 2.5D on a ring: the cross-plane partials are
+        // multi-hop flows, so the same plan finishes later than on the
+        // all-1-hop full mesh built from the same card count.
+        let p = plan(PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 }, 8192);
+        let ring = run_schedule(&p, 4, &host(), &Topology::ring(4), flat_rate);
+        let mesh = run_schedule(&p, 4, &host(), &Topology::full_mesh(4), flat_rate);
+        assert!(ring.reduction_seconds > mesh.reduction_seconds, "{ring:?}");
+        assert!(ring.makespan_seconds >= mesh.makespan_seconds);
+        // Both report link-utilization gauge bases.
+        assert!(ring.max_link_busy_seconds > 0.0);
+        assert!(ring.directed_links == 8 && mesh.directed_links == 12);
+        // Overlap gauge stays within [0, reduction_seconds].
+        assert!(ring.reduction_overlap_seconds >= 0.0);
+        assert!(ring.reduction_overlap_seconds <= ring.reduction_seconds + 1e-12);
+        assert!(ring.reduction_overlap_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn overlap_gauge_sees_hidden_reductions() {
+        // Two k-planes, two tiles per card: the first tile's partial
+        // ships while the second tile still computes.
+        let p = plan(PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 }, 8192);
+        let mut q = p.clone();
+        // Fold the 4 plan devices onto 2 cards block-wise: plane 0
+        // (devices 0, 1) -> card 0, plane 1 (devices 2, 3) -> card 1,
+        // so cross-plane partials still cross the fabric.
+        for s in &mut q.shards {
+            s.device /= 2;
+        }
+        let out = run_schedule(&q, 2, &host(), &Topology::auto(2), flat_rate);
+        assert!(out.reduction_seconds > 0.0);
+        assert!(out.reduction_overlap_fraction() > 0.0, "{out:?}");
     }
 }

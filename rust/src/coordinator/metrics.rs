@@ -25,6 +25,18 @@ pub struct Metrics {
     pub cluster_busy_us: AtomicU64,
     /// Simulated cluster makespan total, in microseconds.
     pub cluster_makespan_us: AtomicU64,
+    /// Circuit-hold time of partial-C reduction steps on the card
+    /// fabric, in microseconds.
+    pub fabric_reduction_us: AtomicU64,
+    /// Of that, time hidden under some device's compute (gauge pair:
+    /// divide by `fabric_reduction_us` for the overlap fraction).
+    pub fabric_reduction_overlap_us: AtomicU64,
+    /// Busy time summed over all directed fabric links, in
+    /// microseconds.
+    pub fabric_link_busy_us: AtomicU64,
+    /// Capacity base for link utilization: makespan × directed links,
+    /// in microseconds.
+    pub fabric_link_capacity_us: AtomicU64,
     /// Requests served by the Strassen route.
     pub strassen_jobs: AtomicU64,
     /// Histogram of chosen recursion depths: bucket i counts depth-i
@@ -64,6 +76,36 @@ impl Metrics {
         self.cluster_busy_us.fetch_add((busy * 1e6) as u64, Ordering::Relaxed);
         self.cluster_makespan_us
             .fetch_add((report.makespan_seconds * 1e6) as u64, Ordering::Relaxed);
+        self.fabric_reduction_us
+            .fetch_add((report.reduction_seconds * 1e6) as u64, Ordering::Relaxed);
+        self.fabric_reduction_overlap_us
+            .fetch_add((report.reduction_overlap_seconds * 1e6) as u64, Ordering::Relaxed);
+        self.fabric_link_busy_us
+            .fetch_add((report.link_busy_seconds * 1e6) as u64, Ordering::Relaxed);
+        let capacity = report.makespan_seconds * report.directed_links as f64;
+        self.fabric_link_capacity_us.fetch_add((capacity * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Mean directed-link utilization of the card fabric across all
+    /// recorded cluster runs (0.0 before the first one).
+    pub fn fabric_link_utilization(&self) -> f64 {
+        let busy = self.fabric_link_busy_us.load(Ordering::Relaxed) as f64;
+        let capacity = self.fabric_link_capacity_us.load(Ordering::Relaxed) as f64;
+        if capacity == 0.0 {
+            return 0.0;
+        }
+        busy / capacity
+    }
+
+    /// Fraction of recorded reduction time that was hidden under
+    /// compute (0.0 when no reduction traffic has been recorded).
+    pub fn reduction_overlap_fraction(&self) -> f64 {
+        let total = self.fabric_reduction_us.load(Ordering::Relaxed) as f64;
+        let overlapped = self.fabric_reduction_overlap_us.load(Ordering::Relaxed) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        overlapped / total
     }
 
     /// Record one Strassen-routed job: depth histogram bucket plus the
@@ -116,6 +158,12 @@ impl Metrics {
             cluster_steals: self.cluster_steals.load(Ordering::Relaxed),
             cluster_busy_us: self.cluster_busy_us.load(Ordering::Relaxed),
             cluster_makespan_us: self.cluster_makespan_us.load(Ordering::Relaxed),
+            fabric_reduction_us: self.fabric_reduction_us.load(Ordering::Relaxed),
+            fabric_reduction_overlap_us: self
+                .fabric_reduction_overlap_us
+                .load(Ordering::Relaxed),
+            fabric_link_busy_us: self.fabric_link_busy_us.load(Ordering::Relaxed),
+            fabric_link_capacity_us: self.fabric_link_capacity_us.load(Ordering::Relaxed),
             strassen_jobs: self.strassen_jobs.load(Ordering::Relaxed),
             strassen_depths: std::array::from_fn(|i| {
                 self.strassen_depths[i].load(Ordering::Relaxed)
@@ -139,6 +187,10 @@ pub struct MetricsSnapshot {
     pub cluster_steals: u64,
     pub cluster_busy_us: u64,
     pub cluster_makespan_us: u64,
+    pub fabric_reduction_us: u64,
+    pub fabric_reduction_overlap_us: u64,
+    pub fabric_link_busy_us: u64,
+    pub fabric_link_capacity_us: u64,
     pub strassen_jobs: u64,
     pub strassen_depths: [u64; 4],
     pub strassen_eff_vs_peak_ppm: u64,
@@ -179,6 +231,37 @@ mod tests {
         assert!(s.cluster_makespan_us > 0);
         let u = m.cluster_utilization(2);
         assert!(u > 0.0 && u <= 1.0, "{u}");
+        // A 1D plan has no reduction traffic, but the capacity base of
+        // the link-utilization gauge still accumulates.
+        assert_eq!(s.fabric_reduction_us, 0);
+        assert!(s.fabric_link_capacity_us > 0);
+        assert_eq!(m.reduction_overlap_fraction(), 0.0);
+        assert_eq!(m.fabric_link_utilization(), 0.0);
+    }
+
+    #[test]
+    fn fabric_gauges_accumulate_reductions() {
+        use crate::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+        use crate::fabric::Topology;
+        let m = Metrics::new();
+        let sim = ClusterSim::with_topology(
+            Fleet::homogeneous(4, "G").unwrap(),
+            Topology::ring(4),
+        );
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 },
+            8192,
+            8192,
+            8192,
+        )
+        .unwrap();
+        m.record_cluster(&sim.simulate(&plan));
+        let s = m.snapshot();
+        assert!(s.fabric_reduction_us > 0);
+        assert!(s.fabric_link_busy_us > 0);
+        let u = m.fabric_link_utilization();
+        assert!(u > 0.0 && u <= 1.0, "{u}");
+        assert!(m.reduction_overlap_fraction() <= 1.0);
     }
 
     #[test]

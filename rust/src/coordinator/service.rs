@@ -10,6 +10,7 @@ use super::metrics::Metrics;
 use super::router::{Route, Router};
 use crate::blocked::{OffchipSim, SimReport};
 use crate::cluster::{ClusterReport, ClusterSim, Fleet};
+use crate::fabric::Topology;
 use crate::gemm::{matmul_blocked, Matrix};
 use crate::perfmodel::flop_count;
 use crate::strassen::{strassen_matmul, StrassenConfig, StrassenReport};
@@ -74,6 +75,11 @@ pub struct ServiceConfig {
     pub batch_window: Duration,
     /// Cards in the sharded route's simulated fleet (design G).
     pub cluster_devices: usize,
+    /// Card fabric of the fleet; None = [`Topology::auto`] (full mesh
+    /// while the 4-port budget lasts, then a near-square torus). A
+    /// topology whose card count disagrees with `cluster_devices` is
+    /// rejected at start.
+    pub cluster_topology: Option<Topology>,
     /// Strassen planner knobs (mode, max depth, default error budget).
     pub strassen: StrassenConfig,
     /// Bucket fallback/Strassen batches by blocking-padded shape
@@ -88,6 +94,7 @@ impl Default for ServiceConfig {
             max_batch: 8,
             batch_window: Duration::from_millis(2),
             cluster_devices: 4,
+            cluster_topology: None,
             strassen: StrassenConfig::default(),
             bucket_shapes: false,
         }
@@ -114,6 +121,14 @@ impl GemmService {
     pub fn start(config: ServiceConfig) -> anyhow::Result<Self> {
         let metrics = Arc::new(Metrics::new());
         let cluster_devices = config.cluster_devices.max(1);
+        if let Some(t) = &config.cluster_topology {
+            anyhow::ensure!(
+                t.cards == cluster_devices,
+                "cluster_topology wires {} card(s) but cluster_devices is {}",
+                t.cards,
+                cluster_devices
+            );
+        }
         let (tx, rx) = mpsc::channel::<Ingress>();
         let m = Arc::clone(&metrics);
         let worker = std::thread::Builder::new()
@@ -153,11 +168,13 @@ impl GemmService {
         let router =
             Router::new(engine.as_ref().map(|e| &e.manifest)).with_strassen(config.strassen);
         // The sharded route's fleet: design-G cards (design G is always
-        // fitted, so this cannot fail).
-        let cluster = ClusterSim::new(
-            Fleet::homogeneous(config.cluster_devices.max(1), "G")
-                .expect("design G in the fitted catalog"),
-        );
+        // fitted, so this cannot fail) on the configured fabric.
+        let fleet = Fleet::homogeneous(config.cluster_devices.max(1), "G")
+            .expect("design G in the fitted catalog");
+        let cluster = match config.cluster_topology.clone() {
+            Some(t) => ClusterSim::with_topology(fleet, t),
+            None => ClusterSim::new(fleet),
+        };
         let batcher = if config.bucket_shapes {
             // Bucket to the fleet design's blocking-padded extents.
             Batcher::with_bucketing(config.max_batch, cluster.fleet.devices[0].design.blocking)
@@ -513,6 +530,30 @@ mod tests {
         assert_eq!(snap.sharded_jobs, 1);
         assert!(snap.shards_executed >= 4);
         assert!(svc.metrics.cluster_utilization(svc.cluster_devices as u64) > 0.0);
+    }
+
+    #[test]
+    fn sharded_route_on_explicit_topology() {
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            cluster_topology: Some(Topology::ring(4)),
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(1025, 1025, 21);
+        let b = Matrix::random(1025, 1025, 22);
+        let want = matmul_blocked(&a, &b);
+        let resp = svc.submit_sync(GemmRequest { id: 9, a, b, chain: None, error_budget: None });
+        assert_eq!(resp.route, Route::Sharded);
+        assert_eq!(resp.cluster[0].topology, "ring");
+        assert_eq!(resp.result.unwrap().data, want.data);
+        // A fabric that wires the wrong card count is rejected at start.
+        let bad = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            cluster_topology: Some(Topology::ring(3)),
+            ..Default::default()
+        });
+        assert!(bad.is_err());
     }
 
     #[test]

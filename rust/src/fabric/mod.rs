@@ -1,0 +1,55 @@
+//! Card-fabric layer: multi-hop 520N topologies, congestion-aware
+//! routing, and compute-overlapped collective reductions.
+//!
+//! The cluster layer's original interconnect put every card one QSFP
+//! hop from every other — fine for a handful of cards, fiction past
+//! that. This subsystem makes the fabric explicit:
+//!
+//! * [`topology`] — port-constrained graphs. **The port budget**: a
+//!   520N carries four QSFP28 ports ([`CARD_PORTS`]), so a card
+//!   terminates at most 4 point-to-point links. A ring spends 2, a 2D
+//!   torus all 4, a full mesh is only buildable up to 5 cards (beyond
+//!   that the constructor degrades to the densest 4-regular chordal
+//!   ring), and a fat tree spends 1 port per card on a leaf-switch
+//!   uplink, buying bisection from switch trunks instead of card
+//!   ports.
+//! * [`routing`] — BFS shortest-path route tables over the live
+//!   fabric, with a circuit-style contention model: a flow reserves
+//!   every directed link on its path for `B/(w·bw) + h·λ` seconds, so
+//!   concurrent flows on one link serialize while flows on disjoint
+//!   links proceed in parallel. Card deaths invalidate routes and
+//!   in-flight steps re-route around the gap.
+//! * [`collective`] — schedules for the 2.5D partial-C combine.
+//!   **The reduce-scatter cost formula**: a ring reduce over `c`
+//!   participants moves `c−1` rounds of `B/c`-byte slices, then
+//!   gathers `c−1` reduced slices into the home, so on uncongested
+//!   1-hop links
+//!
+//!   ```text
+//!   T_ring ≈ 2·(c−1)/c · B / bw_qsfp        (eq. RS)
+//!   ```
+//!
+//!   versus `(c−1)·B / bw_ingress` for direct sends — the ring wins
+//!   whenever the home's ingress degree is the bottleneck, which is
+//!   exactly the narrow-topology case
+//!   ([`crate::perfmodel::ring_reduce_seconds`] is the closed form).
+//! * [`overlap`] — pipelined schedules that launch a tile's reduction
+//!   the moment its last partial exists, hiding the combine under the
+//!   leaf compute still running on other cards, with per-card
+//!   busy/idle timelines.
+//!
+//! The cluster scheduler routes its reduction bookkeeping through
+//! [`FabricState`], `ClusterSim` carries a [`Topology`] instead of a
+//! flat interconnect, and the `fabric` CLI subcommand plus
+//! `examples/fabric_topology_sweep.rs` sweep fleet sizes across
+//! topologies.
+
+pub mod collective;
+pub mod overlap;
+pub mod routing;
+pub mod topology;
+
+pub use collective::{CollectiveSchedule, Flow, ReduceAlgo};
+pub use overlap::{pipeline_schedule, Activity, CardTimeline, OverlapReport, Segment};
+pub use routing::{FabricState, RouteTable, HOP_LATENCY_S};
+pub use topology::{FabricEdge, Topology, TopologyKind, CARD_PORTS};

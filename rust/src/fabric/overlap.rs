@@ -1,0 +1,307 @@
+//! Compute-overlapped collective reductions: pipeline the partial-C
+//! combine of finished k-slices under the leaf compute that is still
+//! running.
+//!
+//! [`pipeline_schedule`] replays a partition plan two ways over the
+//! same fabric and fleet timing:
+//!
+//! * **barrier** — every card computes all its shards, then the tile
+//!   reductions run after the last card drains (the naive
+//!   phase-ordered schedule).
+//! * **overlapped** — a tile's reduction launches the moment its last
+//!   partial exists, sharing fabric links with reductions of other
+//!   tiles while the remaining compute proceeds (card DMA engines own
+//!   the QSFP ports, so sends never block the compute engine).
+//!
+//! Plans with more shards than cards are folded block-wise
+//! (`card = device · cards / plan_devices`) so a k-replication plane
+//! keeps landing on a distinct card group and tiles finish in waves —
+//! the stagger the overlap exploits. The report carries both makespans
+//! plus per-card busy/idle timelines of the overlapped run.
+
+use super::collective::{CollectiveSchedule, ReduceAlgo};
+use super::routing::FabricState;
+use super::topology::Topology;
+use crate::cluster::partition::{PartitionPlan, Shard};
+
+/// What a timeline segment spent its wall-clock on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activity {
+    Compute,
+    Reduce,
+}
+
+/// One busy interval of a card.
+#[derive(Clone, Copy, Debug)]
+pub struct Segment {
+    pub start: f64,
+    pub end: f64,
+    pub activity: Activity,
+}
+
+/// Busy intervals of one card over the overlapped run.
+#[derive(Clone, Debug)]
+pub struct CardTimeline {
+    pub card: usize,
+    pub segments: Vec<Segment>,
+}
+
+impl CardTimeline {
+    pub fn busy_seconds(&self) -> f64 {
+        self.segments.iter().map(|s| s.end - s.start).sum()
+    }
+
+    /// ASCII busy/idle strip: '#' compute, 'r' reduce, '.' idle.
+    pub fn render(&self, makespan: f64, cols: usize) -> String {
+        let cols = cols.max(1);
+        let mut strip = vec!['.'; cols];
+        for s in &self.segments {
+            let lo = ((s.start / makespan) * cols as f64).floor() as usize;
+            let hi = ((s.end / makespan) * cols as f64).ceil() as usize;
+            let glyph = match s.activity {
+                Activity::Compute => '#',
+                Activity::Reduce => 'r',
+            };
+            for slot in strip.iter_mut().take(hi.min(cols)).skip(lo.min(cols)) {
+                if *slot == '.' || glyph == 'r' {
+                    *slot = glyph;
+                }
+            }
+        }
+        strip.into_iter().collect()
+    }
+}
+
+/// Outcome of the two replays.
+#[derive(Clone, Debug)]
+pub struct OverlapReport {
+    /// Collective the run used — the most frequently chosen one when
+    /// cheapest-per-tile selection mixed algorithms.
+    pub algo: ReduceAlgo,
+    pub overlapped_makespan_seconds: f64,
+    pub barrier_makespan_seconds: f64,
+    /// Fabric circuit-hold seconds of the overlapped run's reductions.
+    pub reduction_seconds: f64,
+    pub timelines: Vec<CardTimeline>,
+}
+
+impl OverlapReport {
+    /// Fraction of the barrier makespan the overlap removes.
+    pub fn saving_fraction(&self) -> f64 {
+        if self.barrier_makespan_seconds <= 0.0 {
+            return 0.0;
+        }
+        1.0 - self.overlapped_makespan_seconds / self.barrier_makespan_seconds
+    }
+
+    /// Timeline strips plus the makespan comparison.
+    pub fn render(&self) -> String {
+        let span = self.overlapped_makespan_seconds.max(f64::MIN_POSITIVE);
+        let mut out = format!(
+            "reduction overlap ({}): {:.4} s overlapped vs {:.4} s barrier ({:.1}% saved)\n",
+            self.algo.name(),
+            self.overlapped_makespan_seconds,
+            self.barrier_makespan_seconds,
+            self.saving_fraction() * 100.0,
+        );
+        for t in &self.timelines {
+            out.push_str(&format!("  card {:>2} |{}|\n", t.card, t.render(span, 64)));
+        }
+        out
+    }
+}
+
+struct TileJob {
+    home: usize,
+    /// (card, partial-ready time) per participating card.
+    parts: Vec<(usize, f64)>,
+    bytes: u64,
+}
+
+/// Replay `plan` on `topology` with per-shard compute times from
+/// `compute_seconds(card, shard)`, reducing each tile with `algo`
+/// (None = cheapest per tile). Host DMA is assumed double-buffered
+/// away, isolating the compute↔reduction interplay.
+pub fn pipeline_schedule(
+    plan: &PartitionPlan,
+    topology: &Topology,
+    algo: Option<ReduceAlgo>,
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> OverlapReport {
+    let cards = topology.cards;
+    assert!(cards > 0, "empty fabric");
+    let devices = plan.devices.max(1);
+    let fold = |dev: usize| if devices <= cards { dev } else { dev * cards / devices };
+
+    // Per-tile reduction home: the k-first shard's planned device,
+    // folded onto its card (same source of truth as the scheduler).
+    let homes = plan.tile_homes();
+
+    // Serial per-card compute in plan order.
+    let mut compute_free = vec![0.0f64; cards];
+    let mut timelines: Vec<CardTimeline> =
+        (0..cards).map(|card| CardTimeline { card, segments: Vec::new() }).collect();
+    let mut tiles: std::collections::BTreeMap<(u64, u64), TileJob> = Default::default();
+    for s in &plan.shards {
+        let card = fold(s.device);
+        let start = compute_free[card];
+        let end = start + compute_seconds(card, s);
+        compute_free[card] = end;
+        timelines[card].segments.push(Segment { start, end, activity: Activity::Compute });
+        let job = tiles.entry(s.tile()).or_insert_with(|| TileJob {
+            home: fold(homes[&s.tile()].1),
+            parts: Vec::new(),
+            bytes: s.c_bytes(),
+        });
+        match job.parts.iter_mut().find(|(c, _)| *c == card) {
+            Some(p) => p.1 = p.1.max(end),
+            None => job.parts.push((card, end)),
+        }
+    }
+    let compute_end = compute_free.iter().fold(0.0f64, |m, &t| m.max(t));
+
+    // Tiles reduce in the order their last partial lands.
+    let mut jobs: Vec<TileJob> = tiles.into_values().collect();
+    jobs.sort_by(|a, b| {
+        let ra = a.parts.iter().fold(0.0f64, |m, &(_, t)| m.max(t));
+        let rb = b.parts.iter().fold(0.0f64, |m, &(_, t)| m.max(t));
+        ra.total_cmp(&rb)
+    });
+
+    // Overlapped replay: reductions start at partial readiness.
+    let mut fabric = FabricState::new(topology.clone());
+    let mut overlapped_makespan = compute_end;
+    let mut chosen: Vec<CollectiveSchedule> = Vec::with_capacity(jobs.len());
+    for job in &jobs {
+        let others: Vec<usize> =
+            job.parts.iter().map(|&(c, _)| c).filter(|&c| c != job.home).collect();
+        let mut ready = vec![0.0f64; cards];
+        for &(c, t) in &job.parts {
+            ready[c] = t;
+        }
+        let sched = match algo {
+            Some(a) => CollectiveSchedule::build(a, job.home, &others, job.bytes),
+            None => CollectiveSchedule::cheapest(&fabric, job.home, &others, job.bytes, &ready),
+        };
+        let (finish, flows) =
+            sched.run_traced(&mut fabric, &mut ready).expect("healthy fabric is connected");
+        for (src, start, end) in flows {
+            timelines[src].segments.push(Segment { start, end, activity: Activity::Reduce });
+        }
+        overlapped_makespan = overlapped_makespan.max(finish);
+        chosen.push(sched);
+    }
+    let reduction_seconds = fabric.busy_seconds_total();
+    // Report the modal pick (cheapest-per-tile may mix collectives).
+    let report_algo = [ReduceAlgo::Direct, ReduceAlgo::Tree, ReduceAlgo::Ring]
+        .into_iter()
+        .max_by_key(|&a| chosen.iter().filter(|s| s.algo == a).count())
+        .filter(|_| !chosen.is_empty())
+        .unwrap_or_else(|| algo.unwrap_or(ReduceAlgo::Direct));
+
+    // Barrier replay: identical schedules, but nothing moves before the
+    // last card finishes computing.
+    let mut barrier_fabric = FabricState::new(topology.clone());
+    let mut barrier_makespan = compute_end;
+    for sched in &chosen {
+        let mut ready = vec![compute_end; cards];
+        let finish = sched
+            .run(&mut barrier_fabric, &mut ready)
+            .expect("healthy fabric is connected");
+        barrier_makespan = barrier_makespan.max(finish);
+    }
+
+    for t in &mut timelines {
+        t.segments.sort_by(|a, b| a.start.total_cmp(&b.start));
+    }
+    OverlapReport {
+        algo: report_algo,
+        overlapped_makespan_seconds: overlapped_makespan,
+        barrier_makespan_seconds: barrier_makespan,
+        reduction_seconds,
+        timelines,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::PartitionStrategy;
+
+    fn flat_rate(_: usize, s: &Shard) -> f64 {
+        s.flops() as f64 / 3.0e12
+    }
+
+    #[test]
+    fn overlap_never_loses_to_the_barrier() {
+        for strategy in [
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 4 },
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 8 },
+            PartitionStrategy::Grid2D { p: 2, q: 4 },
+        ] {
+            let plan = PartitionPlan::new(strategy, 8192, 8192, 8192).unwrap();
+            for topo in [Topology::ring(8), Topology::torus2d(4, 2)] {
+                let r = pipeline_schedule(&plan, &topo, Some(ReduceAlgo::Direct), flat_rate);
+                assert!(
+                    r.overlapped_makespan_seconds <= r.barrier_makespan_seconds + 1e-9,
+                    "{strategy:?} on {}: {r:?}",
+                    topo.name(),
+                );
+                assert!(r.saving_fraction() >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn staggered_waves_overlap_materially() {
+        // 32 shards folded onto 8 ring cards: tiles complete in four
+        // waves and the early waves' reductions hide under the
+        // remaining compute.
+        let plan =
+            PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 8 }, 8192, 8192, 8192)
+                .unwrap();
+        let topo = Topology::ring(8);
+        let r = pipeline_schedule(&plan, &topo, Some(ReduceAlgo::Direct), flat_rate);
+        assert!(r.reduction_seconds > 0.0);
+        assert!(
+            r.saving_fraction() > 0.05,
+            "expected material overlap, got {:.3} ({r:?})",
+            r.saving_fraction()
+        );
+    }
+
+    #[test]
+    fn grid_plan_has_nothing_to_reduce() {
+        let plan =
+            PartitionPlan::new(PartitionStrategy::Grid2D { p: 2, q: 2 }, 4096, 4096, 4096).unwrap();
+        let r = pipeline_schedule(&plan, &Topology::full_mesh(4), None, flat_rate);
+        assert_eq!(r.reduction_seconds, 0.0);
+        assert!((r.saving_fraction()).abs() < 1e-12);
+        assert_eq!(r.overlapped_makespan_seconds, r.barrier_makespan_seconds);
+    }
+
+    #[test]
+    fn timelines_cover_compute_and_reduce() {
+        let plan =
+            PartitionPlan::new(PartitionStrategy::Summa25D { p: 1, q: 2, c: 2 }, 2048, 2048, 2048)
+                .unwrap();
+        let topo = Topology::full_mesh(4);
+        let r = pipeline_schedule(&plan, &topo, Some(ReduceAlgo::Direct), flat_rate);
+        let compute: usize = r
+            .timelines
+            .iter()
+            .flat_map(|t| &t.segments)
+            .filter(|s| s.activity == Activity::Compute)
+            .count();
+        assert_eq!(compute, 4, "one compute segment per shard");
+        let reduce: usize = r
+            .timelines
+            .iter()
+            .flat_map(|t| &t.segments)
+            .filter(|s| s.activity == Activity::Reduce)
+            .count();
+        assert_eq!(reduce, 2, "one direct send per non-home partial");
+        let text = r.render();
+        assert!(text.contains("overlapped"));
+    }
+}

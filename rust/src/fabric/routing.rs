@@ -1,0 +1,335 @@
+//! Shortest-path route tables and the per-link contention model.
+//!
+//! Routes are BFS shortest paths with a deterministic tie-break (edge
+//! construction order), recomputed whenever a card dies so the
+//! surviving fabric heals — a ring with one dead card routes around
+//! the gap as a line instead of deadlocking.
+//!
+//! Transfers are circuit-style: a flow of B bytes over an h-hop path
+//! reserves every directed link on the path for
+//!
+//! ```text
+//! t = B / (w_min · bw_qsfp) + h · HOP_LATENCY_S
+//! ```
+//!
+//! where `w_min` is the narrowest trunk width on the path and
+//! `bw_qsfp` the derated QSFP28 rate (the [`Link`] peak × efficiency
+//! idiom from [`crate::cluster::interconnect`]). Concurrent flows on
+//! one directed link therefore serialize, while flows on disjoint
+//! links proceed in parallel — exactly the congestion the 2.5D
+//! reduction traffic has to negotiate on narrow topologies.
+
+use super::topology::Topology;
+use crate::cluster::interconnect::Link;
+
+/// Store-and-forward latency charged per link traversed.
+pub const HOP_LATENCY_S: f64 = 1.0e-6;
+
+/// All-pairs shortest-path predecessors over the live fabric.
+#[derive(Clone, Debug)]
+pub struct RouteTable {
+    /// prev[src][v]: predecessor of v on a shortest src→v path.
+    prev: Vec<Vec<Option<usize>>>,
+}
+
+impl RouteTable {
+    pub fn new(topology: &Topology) -> Self {
+        Self::avoiding(topology, &[])
+    }
+
+    /// Routes that detour around dead cards (switches never die;
+    /// `dead` may be shorter than the node count).
+    pub fn avoiding(topology: &Topology, dead: &[bool]) -> Self {
+        let n = topology.nodes;
+        let is_dead = |v: usize| dead.get(v).copied().unwrap_or(false);
+        let mut prev = vec![vec![None; n]; n];
+        for src in 0..n {
+            if is_dead(src) {
+                continue;
+            }
+            let mut seen = vec![false; n];
+            seen[src] = true;
+            let mut queue = std::collections::VecDeque::from([src]);
+            while let Some(v) = queue.pop_front() {
+                for &(w, _) in topology.neighbors(v) {
+                    if !seen[w] && !is_dead(w) {
+                        seen[w] = true;
+                        prev[src][w] = Some(v);
+                        queue.push_back(w);
+                    }
+                }
+            }
+        }
+        Self { prev }
+    }
+
+    /// Node sequence src..=dst of a shortest live path, None when
+    /// unreachable.
+    pub fn node_path(&self, src: usize, dst: usize) -> Option<Vec<usize>> {
+        if src == dst {
+            return Some(vec![src]);
+        }
+        let mut path = vec![dst];
+        let mut v = dst;
+        while v != src {
+            v = self.prev[src][v]?;
+            path.push(v);
+        }
+        path.reverse();
+        Some(path)
+    }
+
+    pub fn hops(&self, src: usize, dst: usize) -> Option<u32> {
+        self.node_path(src, dst).map(|p| (p.len() - 1) as u32)
+    }
+}
+
+/// Link occupancy of one fabric during one simulated schedule.
+#[derive(Clone, Debug)]
+pub struct FabricState {
+    pub topology: Topology,
+    routes: RouteTable,
+    dead: Vec<bool>,
+    /// Per undirected edge, free times for the a→b and b→a directions.
+    free: Vec<[f64; 2]>,
+    busy: Vec<[f64; 2]>,
+    lane: Link,
+    /// Sends that aborted mid-flight on a dying transit card and took a
+    /// detour.
+    pub reroutes: usize,
+}
+
+impl FabricState {
+    pub fn new(topology: Topology) -> Self {
+        let routes = RouteTable::new(&topology);
+        let edges = topology.edges.len();
+        Self {
+            dead: vec![false; topology.cards],
+            topology,
+            routes,
+            free: vec![[0.0; 2]; edges],
+            busy: vec![[0.0; 2]; edges],
+            lane: Link::qsfp28_100g(),
+            reroutes: 0,
+        }
+    }
+
+    /// One QSFP28 lane (the unit every edge width multiplies).
+    pub fn lane(&self) -> Link {
+        self.lane
+    }
+
+    pub fn is_dead(&self, card: usize) -> bool {
+        self.dead.get(card).copied().unwrap_or(false)
+    }
+
+    /// Kill a card: its links go down and every route table entry that
+    /// crossed it is rebuilt over the survivors.
+    pub fn kill(&mut self, card: usize) {
+        if card < self.dead.len() && !self.dead[card] {
+            self.dead[card] = true;
+            self.routes = RouteTable::avoiding(&self.topology, &self.dead);
+        }
+    }
+
+    /// Current live hop count between two cards.
+    pub fn hops(&self, src: usize, dst: usize) -> Option<u32> {
+        self.routes.hops(src, dst)
+    }
+
+    /// Price of an uncontended h-hop transfer at trunk width `w_min`.
+    pub fn transfer_seconds(&self, bytes: u64, hops: u32, w_min: u32) -> f64 {
+        self.lane.seconds_for_bytes(bytes) / w_min.max(1) as f64
+            + hops as f64 * HOP_LATENCY_S
+    }
+
+    fn sweep_deaths(&mut self, now: f64, deaths: &[Option<f64>]) {
+        for (card, d) in deaths.iter().enumerate() {
+            if let Some(td) = d {
+                if *td <= now && !self.is_dead(card) {
+                    self.kill(card);
+                }
+            }
+        }
+    }
+
+    /// Route `bytes` from card `src` to card `dst`, starting no earlier
+    /// than `ready`. Returns the (start, finish) the contention model
+    /// assigns, or None when no live path exists (fabric partitioned —
+    /// the caller decides whether to bounce via the host).
+    pub fn send(&mut self, src: usize, dst: usize, bytes: u64, ready: f64) -> Option<(f64, f64)> {
+        self.send_with_deaths(src, dst, bytes, ready, &[])
+    }
+
+    /// As [`Self::send`], re-routing around scheduled card deaths: a
+    /// transit card dying mid-flight aborts the step at its death
+    /// instant (the occupied links are released then) and the step
+    /// retries over the healed route table.
+    pub fn send_with_deaths(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+        ready: f64,
+        deaths: &[Option<f64>],
+    ) -> Option<(f64, f64)> {
+        if src == dst {
+            return Some((ready, ready));
+        }
+        let mut ready = ready;
+        loop {
+            self.sweep_deaths(ready, deaths);
+            let nodes = self.routes.node_path(src, dst)?;
+            // Directed links along the path, and the narrowest trunk.
+            let mut links: Vec<(usize, usize)> = Vec::with_capacity(nodes.len() - 1);
+            let mut w_min = u32::MAX;
+            for pair in nodes.windows(2) {
+                let e = self
+                    .topology
+                    .neighbors(pair[0])
+                    .iter()
+                    .find(|&&(w, _)| w == pair[1])
+                    .map(|&(_, e)| e)
+                    .expect("route table path follows edges");
+                let dir = usize::from(self.topology.edges[e].a != pair[0]);
+                w_min = w_min.min(self.topology.edges[e].width);
+                links.push((e, dir));
+            }
+            let start = links.iter().fold(ready, |t, &(e, d)| t.max(self.free[e][d]));
+            let dur = self.transfer_seconds(bytes, (nodes.len() - 1) as u32, w_min);
+            let end = start + dur;
+            // A transit card dying inside [ready, end) aborts the step.
+            let transit_death = nodes[1..nodes.len() - 1]
+                .iter()
+                .filter(|&&v| v < self.topology.cards)
+                .filter_map(|&v| deaths.get(v).copied().flatten())
+                .filter(|&td| td < end)
+                .fold(f64::INFINITY, f64::min);
+            if transit_death.is_finite() {
+                if transit_death > start {
+                    // Charge the progress lost with the dying card.
+                    for &(e, d) in &links {
+                        self.free[e][d] = self.free[e][d].max(transit_death);
+                        self.busy[e][d] += transit_death - start;
+                    }
+                }
+                self.reroutes += 1;
+                ready = ready.max(transit_death);
+                continue;
+            }
+            for &(e, d) in &links {
+                self.free[e][d] = end;
+                self.busy[e][d] += dur;
+            }
+            return Some((start, end));
+        }
+    }
+
+    /// Directed links in the fabric (two per undirected edge).
+    pub fn directed_links(&self) -> usize {
+        2 * self.topology.edges.len()
+    }
+
+    /// Total busy seconds over all directed links.
+    pub fn busy_seconds_total(&self) -> f64 {
+        self.busy.iter().map(|b| b[0] + b[1]).sum()
+    }
+
+    /// Busy seconds of the hottest directed link.
+    pub fn max_busy_seconds(&self) -> f64 {
+        self.busy.iter().flatten().fold(0.0f64, |m, &b| m.max(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shortest_paths_deterministic() {
+        let t = Topology::ring(8);
+        let r = RouteTable::new(&t);
+        assert_eq!(r.node_path(0, 0), Some(vec![0]));
+        assert_eq!(r.hops(0, 3), Some(3));
+        assert_eq!(r.hops(0, 5), Some(3));
+        // 8 nodes, distance 4 both ways: the tie-break is stable.
+        let p = r.node_path(0, 4).unwrap();
+        assert_eq!(p.len(), 5);
+        assert_eq!(r.node_path(0, 4).unwrap(), p);
+    }
+
+    #[test]
+    fn disjoint_flows_parallel_shared_flows_serialize() {
+        let mut f = FabricState::new(Topology::ring(4));
+        let bytes = 100_000_000;
+        let lone = f.transfer_seconds(bytes, 1, 1);
+        // 0→1 and 2→3 touch disjoint links: both finish in one step.
+        let (_, e1) = f.send(0, 1, bytes, 0.0).unwrap();
+        let (_, e2) = f.send(2, 3, bytes, 0.0).unwrap();
+        assert!((e1 - lone).abs() < 1e-12, "{e1} vs {lone}");
+        assert!((e2 - lone).abs() < 1e-12);
+        // A second 0→1 flow shares the directed link: it queues.
+        let (s3, e3) = f.send(0, 1, bytes, 0.0).unwrap();
+        assert!((s3 - e1).abs() < 1e-12);
+        assert!((e3 - 2.0 * lone).abs() < 1e-11);
+        // The reverse direction is an independent resource.
+        let (s4, _) = f.send(1, 0, bytes, 0.0).unwrap();
+        assert_eq!(s4, 0.0);
+    }
+
+    #[test]
+    fn multi_hop_reserves_every_link() {
+        let mut f = FabricState::new(Topology::ring(8));
+        let bytes = 50_000_000;
+        // 0→2 crosses 0→1→2; a later 1→2 flow waits for it.
+        let (_, e1) = f.send(0, 2, bytes, 0.0).unwrap();
+        let (s2, _) = f.send(1, 2, bytes, 0.0).unwrap();
+        assert!((s2 - e1).abs() < 1e-12, "{s2} vs {e1}");
+        // Hop latency is visible on top of the serialization time.
+        assert!(e1 > f.transfer_seconds(bytes, 1, 1));
+    }
+
+    #[test]
+    fn ring_heals_into_line() {
+        let mut f = FabricState::new(Topology::ring(4));
+        assert_eq!(f.hops(2, 0), Some(2));
+        f.kill(1);
+        // 2→0 detours over 3: still 2 hops on the surviving line.
+        let p = f.routes.node_path(2, 0).unwrap();
+        assert_eq!(p, vec![2, 3, 0]);
+        assert!(f.send(2, 0, 1000, 0.0).is_some());
+        // Killing 3 as well cuts 2 off from 0.
+        f.kill(3);
+        assert!(f.send(2, 0, 1000, 0.0).is_none());
+        assert_eq!(f.hops(2, 0), None);
+    }
+
+    #[test]
+    fn midflight_transit_death_reroutes() {
+        let mut f = FabricState::new(Topology::ring(4));
+        let bytes = 200_000_000u64;
+        let dur = f.transfer_seconds(bytes, 2, 1);
+        // Card 1 dies halfway through a 2→1→0 transfer.
+        let deaths = [None, Some(0.5 * dur), None, None];
+        let (start, end) = f.send_with_deaths(2, 0, bytes, 0.0, &deaths).unwrap();
+        assert_eq!(f.reroutes, 1);
+        assert!(f.is_dead(1));
+        // The retry starts at the death instant and pays the full cost
+        // again over the detour.
+        assert!((start - 0.5 * dur).abs() < 1e-12, "{start}");
+        assert!((end - (0.5 * dur + dur)).abs() < 1e-9, "{end}");
+    }
+
+    #[test]
+    fn trunk_width_speeds_fat_tree() {
+        let f = FabricState::new(Topology::fat_tree(8));
+        let bytes = 100_000_000;
+        // Cross-leaf: 4 hops, but the card uplink (width 1) governs.
+        let cross = f.transfer_seconds(bytes, 4, 1);
+        let lone = f.transfer_seconds(bytes, 1, 1);
+        assert!(cross > lone && cross < lone * 1.01);
+        // A pure trunk hop at width 4 moves the bytes 4x faster.
+        let trunk = f.transfer_seconds(bytes, 1, 4);
+        assert!((lone / trunk) > 3.9 && (lone / trunk) < 4.1);
+    }
+}

@@ -1,0 +1,403 @@
+//! Port-constrained card-fabric topologies.
+//!
+//! Every 520N carries four QSFP28 ports, so a card can terminate at
+//! most [`CARD_PORTS`] point-to-point links — the budget every
+//! constructor here respects. Switches (fat-tree only) are modeled as
+//! high-radix devices outside the budget; their uplinks trunk several
+//! QSFP lanes into one logical edge ([`FabricEdge::width`]).
+//!
+//! Four families:
+//!
+//! * [`Topology::ring`] — 2 ports/card, diameter ⌊n/2⌋.
+//! * [`Topology::torus2d`] — the full 4-port budget, diameter
+//!   ⌊p/2⌋ + ⌊q/2⌋; degenerates to a ring when one extent is 1.
+//! * [`Topology::full_mesh`] — complete graph while the port budget
+//!   lasts (n ≤ 5); beyond that the densest 4-regular fallback, a
+//!   chordal ring with offsets {1, 2}.
+//! * [`Topology::fat_tree`] — a 2-level switched tree: each card
+//!   spends one port on a leaf-switch uplink, leaves trunk 4 lanes to
+//!   a root, so bisection grows with the leaf count instead of being
+//!   pinned at the 2-link ring cut.
+//!
+//! Queries: per-card port usage, hop counts (BFS), diameter, and
+//! bisection bandwidth (max-flow between the two index halves of the
+//! card set, in QSFP-lane units).
+
+use crate::cluster::interconnect::Link;
+
+/// QSFP28 ports on one 520N card.
+pub const CARD_PORTS: usize = 4;
+
+/// Which constructor built the graph (and its shape parameters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    Ring,
+    Torus2D { p: usize, q: usize },
+    FullMesh,
+    FatTree { leaves: usize },
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Torus2D { .. } => "torus",
+            TopologyKind::FullMesh => "full-mesh",
+            TopologyKind::FatTree { .. } => "fat-tree",
+        }
+    }
+}
+
+/// One undirected fabric edge; `width` is the number of QSFP lanes
+/// trunked into it (1 for card links, 4 for switch uplinks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FabricEdge {
+    pub a: usize,
+    pub b: usize,
+    pub width: u32,
+}
+
+/// The card fabric: cards 0..cards, then switches up to `nodes`.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    /// Cards (the devices that compute). Card ids are 0..cards.
+    pub cards: usize,
+    /// Cards plus switches; switch ids start at `cards`.
+    pub nodes: usize,
+    pub edges: Vec<FabricEdge>,
+    /// Per node: (neighbor, edge index), in edge order (BFS tie-break).
+    adj: Vec<Vec<(usize, usize)>>,
+}
+
+/// Factor n as p·q with p ≥ q and p − q minimal.
+fn near_square(n: usize) -> (usize, usize) {
+    let n = n.max(1);
+    let root = (n as f64).sqrt().floor() as usize;
+    let q = (1..=root.max(1)).rev().find(|d| n % d == 0).unwrap_or(1);
+    (n / q, q)
+}
+
+impl Topology {
+    fn finish(kind: TopologyKind, cards: usize, nodes: usize, edges: Vec<FabricEdge>) -> Self {
+        let mut adj = vec![Vec::new(); nodes];
+        for (i, e) in edges.iter().enumerate() {
+            adj[e.a].push((e.b, i));
+            adj[e.b].push((e.a, i));
+        }
+        Self { kind, cards, nodes, edges, adj }
+    }
+
+    /// Bidirectional ring: card i ↔ card i+1 (mod n), each cable's two
+    /// directions independent resources. 2 ports/card.
+    pub fn ring(n: usize) -> Self {
+        assert!(n >= 1, "empty fabric");
+        let edges = match n {
+            1 => Vec::new(),
+            2 => vec![FabricEdge { a: 0, b: 1, width: 1 }],
+            _ => (0..n).map(|i| FabricEdge { a: i, b: (i + 1) % n, width: 1 }).collect(),
+        };
+        Self::finish(TopologyKind::Ring, n, n, edges)
+    }
+
+    /// p × q torus (wraparound grid), row-major card ids. Uses the full
+    /// 4-port budget; a 1-wide extent degenerates to a ring.
+    pub fn torus2d(p: usize, q: usize) -> Self {
+        assert!(p >= 1 && q >= 1, "empty torus");
+        let id = |r: usize, c: usize| r * q + c;
+        let mut set = std::collections::BTreeSet::new();
+        for r in 0..p {
+            for c in 0..q {
+                if p > 1 {
+                    let (x, y) = (id(r, c), id((r + 1) % p, c));
+                    set.insert((x.min(y), x.max(y)));
+                }
+                if q > 1 {
+                    let (x, y) = (id(r, c), id(r, (c + 1) % q));
+                    set.insert((x.min(y), x.max(y)));
+                }
+            }
+        }
+        let edges = set.into_iter().map(|(a, b)| FabricEdge { a, b, width: 1 }).collect();
+        Self::finish(TopologyKind::Torus2D { p, q }, p * q, p * q, edges)
+    }
+
+    /// Complete graph while the port budget lasts (n ≤ 5 with 4 ports);
+    /// past that, the densest 4-regular fallback — a chordal ring with
+    /// offsets {1, 2}.
+    pub fn full_mesh(n: usize) -> Self {
+        assert!(n >= 1, "empty fabric");
+        let mut set = std::collections::BTreeSet::new();
+        if n <= CARD_PORTS + 1 {
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    set.insert((a, b));
+                }
+            }
+        } else {
+            for i in 0..n {
+                for off in [1usize, 2] {
+                    let j = (i + off) % n;
+                    set.insert((i.min(j), i.max(j)));
+                }
+            }
+        }
+        let edges = set.into_iter().map(|(a, b)| FabricEdge { a, b, width: 1 }).collect();
+        Self::finish(TopologyKind::FullMesh, n, n, edges)
+    }
+
+    /// 2-level switched fat tree: each card spends one port on its leaf
+    /// switch (4 cards per leaf); leaves trunk 4 QSFP lanes up to one
+    /// root switch. Switch radix is outside the card port budget.
+    pub fn fat_tree(n: usize) -> Self {
+        assert!(n >= 1, "empty fabric");
+        let leaves = n.div_ceil(CARD_PORTS);
+        let mut nodes = n + leaves;
+        let mut edges: Vec<FabricEdge> = (0..n)
+            .map(|i| FabricEdge { a: i, b: n + i / CARD_PORTS, width: 1 })
+            .collect();
+        if leaves > 1 {
+            let root = nodes;
+            nodes += 1;
+            for l in 0..leaves {
+                edges.push(FabricEdge { a: n + l, b: root, width: CARD_PORTS as u32 });
+            }
+        }
+        Self::finish(TopologyKind::FatTree { leaves }, n, nodes, edges)
+    }
+
+    /// Near-square torus over n cards (degenerates to a ring when n is
+    /// prime).
+    pub fn torus_near_square(n: usize) -> Self {
+        let (p, q) = near_square(n);
+        Self::torus2d(p, q)
+    }
+
+    /// Default fabric for an n-card fleet: complete while the port
+    /// budget lasts, a near-square torus beyond that (a ring when n is
+    /// prime).
+    pub fn auto(n: usize) -> Self {
+        if n <= CARD_PORTS + 1 {
+            Self::full_mesh(n)
+        } else {
+            Self::torus_near_square(n)
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    /// (neighbor, edge index) pairs of `node`, in construction order.
+    pub fn neighbors(&self, node: usize) -> &[(usize, usize)] {
+        &self.adj[node]
+    }
+
+    /// QSFP ports `card` terminates (undirected incident edges).
+    pub fn card_ports(&self, card: usize) -> usize {
+        assert!(card < self.cards, "not a card: {card}");
+        self.adj[card].len()
+    }
+
+    /// BFS hop count between two nodes (links traversed), None when
+    /// disconnected.
+    pub fn hops(&self, from: usize, to: usize) -> Option<u32> {
+        if from == to {
+            return Some(0);
+        }
+        let mut dist = vec![u32::MAX; self.nodes];
+        dist[from] = 0;
+        let mut queue = std::collections::VecDeque::from([from]);
+        while let Some(v) = queue.pop_front() {
+            for &(w, _) in &self.adj[v] {
+                if dist[w] == u32::MAX {
+                    dist[w] = dist[v] + 1;
+                    if w == to {
+                        return Some(dist[w]);
+                    }
+                    queue.push_back(w);
+                }
+            }
+        }
+        None
+    }
+
+    /// Every node reachable from node 0 (true for a 1-node fabric).
+    pub fn is_connected(&self) -> bool {
+        if self.nodes <= 1 {
+            return true;
+        }
+        (1..self.nodes).all(|v| self.hops(0, v).is_some())
+    }
+
+    /// Largest card↔card hop count.
+    pub fn diameter_hops(&self) -> u32 {
+        let mut d = 0;
+        for a in 0..self.cards {
+            for b in (a + 1)..self.cards {
+                d = d.max(self.hops(a, b).unwrap_or(u32::MAX));
+            }
+        }
+        d
+    }
+
+    /// Bisection capacity in QSFP-lane units: the max-flow (= min cut)
+    /// between the index halves {0..⌊n/2⌋} and the rest of the cards,
+    /// each undirected edge carrying `width` lanes per direction.
+    pub fn bisection_lanes(&self) -> u64 {
+        let half = self.cards / 2;
+        if half == 0 {
+            return 0;
+        }
+        const INF: u64 = u64::MAX / 4;
+        let n = self.nodes + 2;
+        let (src, snk) = (self.nodes, self.nodes + 1);
+        let mut cap = vec![vec![0u64; n]; n];
+        for e in &self.edges {
+            cap[e.a][e.b] += e.width as u64;
+            cap[e.b][e.a] += e.width as u64;
+        }
+        for c in cap[src].iter_mut().take(half) {
+            *c = INF;
+        }
+        for row in cap.iter_mut().take(self.cards).skip(half) {
+            row[snk] = INF;
+        }
+        // Edmonds-Karp: BFS augmenting paths until none remain.
+        let mut flow = 0u64;
+        loop {
+            let mut prev = vec![usize::MAX; n];
+            prev[src] = src;
+            let mut queue = std::collections::VecDeque::from([src]);
+            while let Some(v) = queue.pop_front() {
+                for w in 0..n {
+                    if prev[w] == usize::MAX && cap[v][w] > 0 {
+                        prev[w] = v;
+                        queue.push_back(w);
+                    }
+                }
+            }
+            if prev[snk] == usize::MAX {
+                return flow;
+            }
+            let mut bottleneck = INF;
+            let mut v = snk;
+            while v != src {
+                bottleneck = bottleneck.min(cap[prev[v]][v]);
+                v = prev[v];
+            }
+            let mut v = snk;
+            while v != src {
+                cap[prev[v]][v] -= bottleneck;
+                cap[v][prev[v]] += bottleneck;
+                v = prev[v];
+            }
+            flow += bottleneck;
+        }
+    }
+
+    /// Bisection bandwidth in bytes/s over `lane` (one QSFP28 link).
+    pub fn bisection_bytes_per_s(&self, lane: &Link) -> f64 {
+        self.bisection_lanes() as f64 * lane.effective_bytes_per_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_shape() {
+        let t = Topology::ring(8);
+        assert_eq!(t.edges.len(), 8);
+        assert!(t.is_connected());
+        assert_eq!(t.hops(0, 4), Some(4));
+        assert_eq!(t.hops(0, 7), Some(1));
+        assert_eq!(t.diameter_hops(), 4);
+        assert_eq!(t.bisection_lanes(), 2);
+        for c in 0..8 {
+            assert_eq!(t.card_ports(c), 2);
+        }
+        // Tiny rings do not double their edges.
+        assert_eq!(Topology::ring(2).edges.len(), 1);
+        assert_eq!(Topology::ring(1).edges.len(), 0);
+    }
+
+    #[test]
+    fn torus_shape() {
+        let t = Topology::torus2d(4, 4);
+        assert_eq!(t.cards, 16);
+        assert_eq!(t.edges.len(), 32);
+        assert!(t.is_connected());
+        for c in 0..16 {
+            assert_eq!(t.card_ports(c), 4);
+        }
+        // (0,0) to (2,2): two wrapless hops each way.
+        assert_eq!(t.hops(0, 10), Some(4));
+        assert_eq!(t.diameter_hops(), 4);
+        // Row cut crosses q down-links + q wrap links.
+        assert_eq!(t.bisection_lanes(), 8);
+        // Degenerate extents collapse to a ring, not self-loops.
+        let line = Topology::torus2d(5, 1);
+        assert_eq!(line.edges.len(), 5);
+        assert!(line.edges.iter().all(|e| e.a != e.b));
+        // 2-wide extents do not duplicate wrap edges.
+        let t22 = Topology::torus2d(2, 2);
+        assert_eq!(t22.edges.len(), 4);
+    }
+
+    #[test]
+    fn full_mesh_respects_port_budget() {
+        let k5 = Topology::full_mesh(5);
+        assert_eq!(k5.edges.len(), 10);
+        assert_eq!(k5.diameter_hops(), 1);
+        let big = Topology::full_mesh(12);
+        assert!(big.is_connected());
+        for c in 0..12 {
+            assert!(big.card_ports(c) <= CARD_PORTS, "card {c}");
+        }
+        // Chordal ring halves the plain ring's diameter.
+        assert!(big.diameter_hops() <= Topology::ring(12).diameter_hops().div_ceil(2));
+    }
+
+    #[test]
+    fn fat_tree_switched() {
+        let t = Topology::fat_tree(8);
+        assert_eq!(t.cards, 8);
+        assert_eq!(t.nodes, 8 + 2 + 1);
+        assert!(t.is_connected());
+        for c in 0..8 {
+            assert_eq!(t.card_ports(c), 1);
+        }
+        // Same leaf: 2 hops; across the root: 4.
+        assert_eq!(t.hops(0, 3), Some(2));
+        assert_eq!(t.hops(0, 4), Some(4));
+        // The root trunk carries the bisection: one 4-lane uplink each way.
+        assert_eq!(t.bisection_lanes(), 4);
+        // Single-leaf tree has no root.
+        assert_eq!(Topology::fat_tree(4).nodes, 5);
+    }
+
+    #[test]
+    fn auto_picks_mesh_then_torus() {
+        assert_eq!(Topology::auto(4).kind, TopologyKind::FullMesh);
+        assert_eq!(Topology::auto(16).kind, TopologyKind::Torus2D { p: 4, q: 4 });
+        assert_eq!(Topology::auto(8).kind, TopologyKind::Torus2D { p: 4, q: 2 });
+    }
+
+    #[test]
+    fn bisection_orders_topologies() {
+        // At 16 cards the ring's 2-lane cut is the clear loser; the
+        // chordal mesh, the fat tree's root trunks, and the torus's
+        // 2·q wrap cut all widen it (tree and torus tie at 8 lanes).
+        let ring = Topology::ring(16).bisection_lanes();
+        let mesh = Topology::full_mesh(16).bisection_lanes();
+        let tree = Topology::fat_tree(16).bisection_lanes();
+        let torus = Topology::torus2d(4, 4).bisection_lanes();
+        assert_eq!(ring, 2);
+        assert_eq!(mesh, 6);
+        assert_eq!(tree, 8);
+        assert_eq!(torus, 8);
+        assert!(ring < mesh && mesh < tree && tree <= torus);
+    }
+}

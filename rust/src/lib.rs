@@ -19,7 +19,11 @@
 //!   layer** ([`cluster`]) that shards GEMMs too large for one card over
 //!   a fleet of simulated 520Ns — 1D/2D/2.5D partitioners, PCIe/QSFP
 //!   interconnect models, and a work-stealing scheduler that overlaps
-//!   shard transfer with compute. Requests that exceed a single card's
+//!   shard transfer with compute. The fleet's card↔card wiring is an
+//!   explicit **fabric** ([`fabric`]): port-constrained ring / torus /
+//!   mesh / fat-tree topologies, congestion-aware multi-hop routing,
+//!   and collective reduction schedules that overlap the 2.5D
+//!   partial-C combine with leaf compute. Requests that exceed a single card's
 //!   DDR capacity (or fit no Table-I blocking) route to the cluster
 //!   (`Route::Sharded`). A **Strassen recursion layer** ([`strassen`])
 //!   sits above both: a planner prices 7^d-leaf recursions against the
@@ -46,6 +50,7 @@ pub mod blocked;
 pub mod cluster;
 pub mod coordinator;
 pub mod dse;
+pub mod fabric;
 pub mod fpga;
 pub mod gemm;
 pub mod hls;

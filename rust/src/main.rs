@@ -35,6 +35,7 @@ fn main() {
         Some("ablate") => cmd_ablate(&args),
         Some("codegen") => cmd_codegen(&args),
         Some("cluster") => cmd_cluster(&args),
+        Some("fabric") => cmd_fabric(&args),
         Some("strassen") => cmd_strassen(&args),
         _ => {
             print_usage();
@@ -61,6 +62,9 @@ fn print_usage() {
          codegen  [--design G]               emit the OpenCL HLS kernel source\n\
          cluster  [--devices 4] [--d2 21504] [--design G] [--strategy auto|1d|2d|2.5d|all]\n\
                   [--mix]                    shard one GEMM over a simulated fleet\n\
+         fabric   [--devices 8] [--d2 21504] [--design G] [--topology all|auto|ring|torus|\n\
+                  full|fat-tree] [--overlap]  compare card fabrics: plan makespans,\n\
+                  \x20                         link utilization, reduction overlap\n\
          strassen [--design G] [--d2 21504] [--depth auto|0..3] [--budget 1e-3]\n\
                   [--devices 1]              plan/price Strassen recursion vs classical"
     );
@@ -151,6 +155,90 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             plan.total_bytes_moved() as f64 / 1e9,
             plan.flops_per_byte()
         );
+    }
+    Ok(())
+}
+
+fn cmd_fabric(args: &Args) -> anyhow::Result<()> {
+    use systo3d::cluster::{ClusterSim, Fleet, Link};
+    use systo3d::fabric::{ReduceAlgo, Topology};
+
+    let devices = args.get_usize("devices", 8).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(devices >= 1, "--devices must be at least 1");
+    let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
+    let id = args.get_str("design", "G").to_uppercase();
+    let wanted = args.get_str("topology", "all").to_lowercase();
+
+    let topologies: Vec<Topology> = match wanted.as_str() {
+        "all" => vec![
+            Topology::ring(devices),
+            Topology::torus_near_square(devices),
+            Topology::full_mesh(devices),
+            Topology::fat_tree(devices),
+        ],
+        "auto" => vec![Topology::auto(devices)],
+        "ring" => vec![Topology::ring(devices)],
+        "torus" => vec![Topology::torus_near_square(devices)],
+        "full" => vec![Topology::full_mesh(devices)],
+        "fat-tree" | "fat" => vec![Topology::fat_tree(devices)],
+        other => anyhow::bail!(
+            "unknown --topology {other} (all|auto|ring|torus|full|fat-tree)"
+        ),
+    };
+
+    let lane = Link::qsfp28_100g();
+    for topology in topologies {
+        let max_ports = (0..topology.cards).map(|c| topology.card_ports(c)).max().unwrap_or(0);
+        println!(
+            "--- {}: {} card(s), {} cable(s)/trunk(s), <= {} ports/card, \
+             diameter {} hop(s), bisection {:.1} GB/s ---",
+            topology.name(),
+            topology.cards,
+            topology.edges.len(),
+            max_ports,
+            topology.diameter_hops(),
+            topology.bisection_bytes_per_s(&lane) / 1e9,
+        );
+        let fleet = Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?;
+        let sim = ClusterSim::with_topology(fleet, topology);
+        for plan in sim.candidate_plans(d2, d2, d2) {
+            let r = sim.simulate(&plan);
+            println!(
+                "  {:>11}: {:.4} s makespan, {:>8.2} TFLOPS, link util {:>5.1}% mean \
+                 {:>5.1}% peak, reduction {:.4} s ({:.0}% overlapped)",
+                r.strategy,
+                r.makespan_seconds,
+                r.effective_gflops / 1e3,
+                r.link_utilization() * 100.0,
+                r.max_link_utilization() * 100.0,
+                r.reduction_seconds,
+                r.reduction_overlap() * 100.0,
+            );
+        }
+        // The overlap story on the 2.5D plan (the one with partials to
+        // combine), when the fleet admits one.
+        if let Ok(plan) = systo3d::cluster::PartitionPlan::new(
+            systo3d::cluster::PartitionStrategy::auto_summa25d(devices as u64),
+            d2,
+            d2,
+            d2,
+        ) {
+            if plan.device_to_device_bytes > 0 {
+                let rep = sim.overlap_report(&plan, Some(ReduceAlgo::Direct));
+                println!(
+                    "  2.5d reduction overlap: {:.4} s overlapped vs {:.4} s barrier \
+                     ({:.1}% saved); cheapest collective saves {:.1}%",
+                    rep.overlapped_makespan_seconds,
+                    rep.barrier_makespan_seconds,
+                    rep.saving_fraction() * 100.0,
+                    sim.overlap_report(&plan, None).saving_fraction() * 100.0,
+                );
+                if args.flag("overlap") {
+                    print!("{}", rep.render());
+                }
+            }
+        }
+        println!();
     }
     Ok(())
 }

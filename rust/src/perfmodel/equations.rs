@@ -153,6 +153,35 @@ pub fn strassen_flop_ratio(depth: u32) -> f64 {
     (7.0f64 / 8.0).powi(depth as i32)
 }
 
+/// Closed form of the ring reduce-to-one collective (reduce-scatter
+/// then gather, see [`crate::fabric::collective`]): `c` participants
+/// cycle `c−1` rounds of `B/c`-byte slices, then the home gathers the
+/// `c−1` reduced slices, so on uncongested 1-hop links
+///
+/// ```text
+/// T_ring = 2·(c−1)/c · B / bw
+/// ```
+///
+/// The routed schedule prices at or below this (gather arrivals can
+/// use several home ingress links), which is what the collective
+/// tests check.
+pub fn ring_reduce_seconds(participants: u64, bytes: u64, link_bytes_per_s: f64) -> f64 {
+    assert!(participants > 0 && link_bytes_per_s > 0.0);
+    if participants == 1 {
+        return 0.0;
+    }
+    let c = participants as f64;
+    2.0 * (c - 1.0) / c * bytes as f64 / link_bytes_per_s
+}
+
+/// Lower bound on any phase that moves `bytes` across the fabric's
+/// bisection: no schedule beats the cut's aggregate bandwidth
+/// ([`crate::fabric::Topology::bisection_bytes_per_s`]).
+pub fn bisection_bound_seconds(bytes: u64, bisection_bytes_per_s: f64) -> f64 {
+    assert!(bisection_bytes_per_s > 0.0);
+    bytes as f64 / bisection_bytes_per_s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -318,5 +347,24 @@ mod tests {
         assert!((scaling_efficiency(2, 1.0, 0.5) - 1.0).abs() < 1e-12);
         assert!((scaling_efficiency(2, 1.0, 1.0) - 0.5).abs() < 1e-12);
         assert!((scaling_efficiency(4, 1.0, 0.3) - 1.0 / 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_reduce_closed_form() {
+        // One participant: nothing to move.
+        assert_eq!(ring_reduce_seconds(1, 1 << 30, 1e9), 0.0);
+        // Two participants: the 2·(c−1)/c factor is exactly 1.
+        assert!((ring_reduce_seconds(2, 1_000_000_000, 1e9) - 1.0).abs() < 1e-12);
+        // The factor saturates toward 2B/bw as c grows.
+        let t4 = ring_reduce_seconds(4, 1_000_000_000, 1e9);
+        let t64 = ring_reduce_seconds(64, 1_000_000_000, 1e9);
+        assert!((t4 - 1.5).abs() < 1e-12);
+        assert!(t4 < t64 && t64 < 2.0);
+    }
+
+    #[test]
+    fn bisection_bound_scales() {
+        let t = bisection_bound_seconds(2_000_000_000, 1e9);
+        assert!((t - 2.0).abs() < 1e-12);
     }
 }

@@ -1,0 +1,152 @@
+//! Integration: the card-fabric layer — topology invariants, routed
+//! collectives, and the topology-aware cluster simulation.
+
+use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::{
+    CollectiveSchedule, FabricState, ReduceAlgo, Topology, CARD_PORTS,
+};
+use systo3d::util::proptest::check;
+
+/// Every topology constructor respects the 520N's 4-port budget and
+/// yields a connected fabric, for every fleet size 2..=32.
+#[test]
+fn constructors_respect_port_budget_and_connect() {
+    for n in 2..=32usize {
+        for topology in [
+            Topology::ring(n),
+            Topology::torus_near_square(n),
+            Topology::full_mesh(n),
+            Topology::fat_tree(n),
+            Topology::auto(n),
+        ] {
+            assert!(
+                topology.is_connected(),
+                "{} with {n} card(s) is disconnected",
+                topology.name()
+            );
+            for card in 0..topology.cards {
+                let ports = topology.card_ports(card);
+                assert!(
+                    ports <= CARD_PORTS,
+                    "{} with {n} card(s): card {card} uses {ports} ports",
+                    topology.name()
+                );
+            }
+        }
+    }
+}
+
+/// Arbitrary torus extents keep the invariants too (the constructor
+/// must dedupe 2-wide wraparounds and drop 1-wide self loops).
+#[test]
+fn torus_extents_property() {
+    check("torus invariants", 60, |g| {
+        let p = g.usize(1, 8);
+        let q = g.usize(1, 8);
+        let t = Topology::torus2d(p, q);
+        assert_eq!(t.cards, p * q);
+        assert!(t.is_connected());
+        for card in 0..t.cards {
+            assert!(t.card_ports(card) <= CARD_PORTS, "({p},{q}) card {card}");
+        }
+        assert!(t.edges.iter().all(|e| e.a != e.b), "self loop in ({p},{q})");
+    });
+}
+
+/// Killing any single card leaves every surviving pair routable on the
+/// multi-hop constructors (rings heal into lines, tori re-route around
+/// the hole).
+#[test]
+fn single_death_never_partitions_survivors() {
+    check("fabric heals around one death", 40, |g| {
+        let n = g.usize(3, 16);
+        let topology = match g.usize(0, 2) {
+            0 => Topology::ring(n),
+            1 => Topology::torus_near_square(n),
+            _ => Topology::full_mesh(n),
+        };
+        let victim = g.usize(0, n - 1);
+        let mut fabric = FabricState::new(topology);
+        fabric.kill(victim);
+        for a in 0..n {
+            for b in 0..n {
+                if a != b && a != victim && b != victim {
+                    assert!(
+                        fabric.hops(a, b).is_some(),
+                        "{} n={n}: {a}->{b} unroutable after killing {victim}",
+                        fabric.topology.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The collective schedules reduce correctly by construction (every
+/// partial reaches the home through some flow chain) and price lower
+/// on wider fabrics.
+#[test]
+fn collectives_price_lower_on_wider_fabrics() {
+    let bytes = 128 << 20;
+    let others: Vec<usize> = (1..12).collect();
+    let ready = [0.0; 12];
+    for algo in [ReduceAlgo::Direct, ReduceAlgo::Tree, ReduceAlgo::Ring] {
+        let sched = CollectiveSchedule::build(algo, 0, &others, bytes);
+        let ring = sched.price(&FabricState::new(Topology::ring(12)), &ready).unwrap();
+        let mesh = sched.price(&FabricState::new(Topology::full_mesh(12)), &ready).unwrap();
+        assert!(
+            mesh <= ring + 1e-12,
+            "{}: mesh {mesh} vs ring {ring}",
+            algo.name()
+        );
+    }
+}
+
+/// End to end: the same 2.5D plan simulates strictly faster on a torus
+/// than on a ring at N=16 (acceptance check (a), also asserted in
+/// examples/fabric_topology_sweep.rs).
+#[test]
+fn torus_beats_ring_for_25d_at_n16() {
+    let d = 21504u64;
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(16), d, d, d).unwrap();
+    let fleet = Fleet::homogeneous(16, "G").unwrap();
+    let ring = ClusterSim::with_topology(fleet.clone(), Topology::ring(16)).simulate(&plan);
+    let torus =
+        ClusterSim::with_topology(fleet, Topology::torus2d(4, 4)).simulate(&plan);
+    assert!(
+        torus.makespan_seconds < ring.makespan_seconds,
+        "torus {} vs ring {}",
+        torus.makespan_seconds,
+        ring.makespan_seconds
+    );
+    // The ring's pain is visible in the congestion gauges: its hottest
+    // link holds more traffic than the torus's.
+    assert!(torus.max_link_busy_seconds < ring.max_link_busy_seconds);
+}
+
+/// The functional path is untouched by topology: sharded results stay
+/// bit-exact whatever fabric the timing model routes over.
+#[test]
+fn functional_results_independent_of_topology() {
+    use systo3d::gemm::{matmul_blocked, Matrix};
+    let design = systo3d::blocked::OffchipDesign {
+        blocking: systo3d::blocked::Level1Blocking::new(
+            systo3d::systolic::ArraySize::new(4, 4, 2, 2),
+            8,
+            8,
+        ),
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    };
+    let (m, k, n) = (37usize, 29, 23);
+    let a = Matrix::random(m, k, 7);
+    let b = Matrix::random(k, n, 8);
+    let dense = matmul_blocked(&a, &b);
+    for topology in [Topology::ring(6), Topology::fat_tree(6), Topology::full_mesh(6)] {
+        let sim = ClusterSim::with_topology(Fleet::uniform(6, "mini", design), topology);
+        let plan = sim.auto_plan(m as u64, k as u64, n as u64).expect("plan");
+        let (report, c) = sim.simulate_functional(&plan, &a, &b);
+        assert!(report.makespan_seconds > 0.0);
+        assert_eq!(c.data, dense.data, "{}", report.topology);
+    }
+}

@@ -134,7 +134,7 @@ fn kill_one_card_shards_requeue_on_survivors() {
     // Kill card 0 in the middle of its first compute window: DMA ends at
     // t_dma, compute runs [t_dma, t_dma + t_comp).
     let first = plan.shards.iter().find(|s| s.device == 0).unwrap();
-    let t_dma = sim.interconnect.host_seconds(first.input_bytes());
+    let t_dma = sim.host.seconds_for_bytes(first.input_bytes());
     let t_comp = sim.shard_seconds(0, first);
     let deaths = [Some(t_dma + 0.5 * t_comp), None, None, None];
     let r = sim.simulate_with_failures(&plan, &deaths).unwrap();
@@ -154,6 +154,41 @@ fn kill_one_card_shards_requeue_on_survivors() {
     let all_dead = [Some(0.0); 4];
     let err = sim.simulate_with_failures(&plan, &all_dead).unwrap_err();
     assert!(err.contains("dead"), "{err}");
+}
+
+#[test]
+fn kill_one_card_on_a_ring_heals_into_a_line() {
+    // Plane-major 2.5D on a 4-card ring: tile (0,0)'s partial ships
+    // dev 2 -> dev 0 over the 2-hop path through card 1. Card 1 dies
+    // with that send in flight; the step must abort, the fabric heal
+    // into the 2-3-0 line, and the schedule complete without deadlock.
+    use systo3d::cluster::{run_schedule_with_failures, PartitionPlan, PartitionStrategy};
+    use systo3d::fabric::Topology;
+
+    let d = 8192u64;
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 }, d, d, d).unwrap();
+    let host = systo3d::cluster::Link::pcie_gen3_x8();
+    let topo = Topology::ring(4);
+    // Deterministic per-shard compute so the death instant is exact:
+    // every card's DMA starts at t=0 and compute ends at dma + 1.0.
+    let dma = host.seconds_for_bytes(plan.shards[0].input_bytes());
+    let healthy =
+        run_schedule_with_failures(&plan, 4, &host, &topo, &[], |_, _| 1.0).unwrap();
+    assert_eq!(healthy.reroutes, 0);
+
+    // Card 1 finishes its own shard at dma + 1.0, then dies 1 ms later
+    // — after its compute (no shard retry) but squarely inside the
+    // dev 2 -> dev 0 partial transfer that routes through it.
+    let deaths = [None, Some(dma + 1.0 + 1e-3), None, None];
+    let out = run_schedule_with_failures(&plan, 4, &host, &topo, &deaths, |_, _| 1.0).unwrap();
+    assert_eq!(out.retries, 0, "death is after card 1's compute: {out:?}");
+    assert!(out.reroutes >= 1, "the in-flight reduction must re-route: {out:?}");
+    // Every shard still completed exactly once and the run terminated —
+    // the ring healed into the 2-3-0 line instead of deadlocking.
+    let done: usize = out.per_device.iter().map(|t| t.shards).sum();
+    assert_eq!(done, plan.shards.len());
+    assert!(out.makespan_seconds.is_finite() && out.makespan_seconds > dma + 1.0);
 }
 
 #[test]
