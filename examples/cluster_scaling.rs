@@ -10,9 +10,14 @@
 //! deliberately heterogeneous fleet to exercise work-stealing.
 //!
 //! ```sh
-//! cargo run --release --example cluster_scaling [-- --d2 21504 --design G]
+//! cargo run --release --example cluster_scaling [-- --d2 21504 --design G --json OUT.json]
 //! ```
+//!
+//! `--json FILE` additionally writes the headline metrics (makespans at
+//! N ∈ {1, 2, 4, 8}, the N=2 speedup, N=8 TFLOPS) as a flat JSON
+//! object for the CI perf gate.
 
+use std::collections::BTreeMap;
 use systo3d::cli::Args;
 use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
 use systo3d::fabric::Topology;
@@ -22,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
     let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
     let id = args.get_str("design", "G").to_uppercase();
+    let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
 
     println!("=== cluster scaling: {d2}^3 GEMM over N x design-{id} 520N cards ===\n");
     println!(
@@ -40,6 +46,12 @@ fn main() -> anyhow::Result<()> {
         let eff = scaling_efficiency(n as u64, t1_s, r.makespan_seconds);
         if n == 2 {
             n2_speedup = Some(t1_s / r.makespan_seconds);
+        }
+        if matches!(n, 1 | 2 | 4 | 8) {
+            metrics.insert(format!("cluster_makespan_n{n}"), r.makespan_seconds);
+        }
+        if n == 8 {
+            metrics.insert("cluster_tflops_n8".into(), r.effective_gflops / 1e3);
         }
         let (umin, umax) = r
             .per_device
@@ -63,6 +75,7 @@ fn main() -> anyhow::Result<()> {
     let speedup = n2_speedup.expect("N=2 ran");
     println!("\nN=2 speedup over N=1: {speedup:.2}x");
     anyhow::ensure!(speedup > 1.8, "expected >1.8x at N=2, measured {speedup:.2}x");
+    metrics.insert("cluster_n2_speedup".into(), speedup);
 
     // --- communication bill per strategy at N=8 -------------------------
     println!("\n=== bytes moved per strategy (N=8, d2={d2}) ===");
@@ -133,6 +146,11 @@ fn main() -> anyhow::Result<()> {
         .plan_and_report(d2, d2, d2)
         .ok_or_else(|| anyhow::anyhow!("no plan for the mixed fleet"))?;
     println!("{}", report.render());
+
+    if let Some(path) = args.get("json") {
+        systo3d::util::json::write_metrics(path, &metrics)?;
+        println!("wrote {} metric(s) to {path}", metrics.len());
+    }
 
     println!("cluster_scaling OK");
     Ok(())

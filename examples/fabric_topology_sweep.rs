@@ -17,9 +17,14 @@
 //!     least one swept configuration.
 //!
 //! ```sh
-//! cargo run --release --example fabric_topology_sweep [-- --d2 21504 --design G]
+//! cargo run --release --example fabric_topology_sweep [-- --d2 21504 --design G --json OUT.json]
 //! ```
+//!
+//! `--json FILE` additionally writes the headline metrics (ring/torus
+//! makespans and win ratios at N ∈ {16, 32}, the best overlap saving)
+//! as a flat JSON object for the CI perf gate.
 
+use std::collections::BTreeMap;
 use systo3d::cli::Args;
 use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
 use systo3d::fabric::{ReduceAlgo, Topology};
@@ -28,6 +33,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
     let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
     let id = args.get_str("design", "G").to_uppercase();
+    let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
 
     println!("=== fabric sweep: {d2}^3 GEMM over N x design-{id} 520N cards ===\n");
     println!(
@@ -121,6 +127,12 @@ fn main() -> anyhow::Result<()> {
             torus.makespan_seconds,
             ring.makespan_seconds
         );
+        metrics.insert(format!("fabric_ring_makespan_n{n}"), ring.makespan_seconds);
+        metrics.insert(format!("fabric_torus_makespan_n{n}"), torus.makespan_seconds);
+        metrics.insert(
+            format!("fabric_torus_win_n{n}"),
+            ring.makespan_seconds / torus.makespan_seconds,
+        );
     }
 
     // --- (b) reduction overlap saves >= 10% somewhere -------------------
@@ -158,6 +170,12 @@ fn main() -> anyhow::Result<()> {
         "expected >= 10% makespan saving from reduction overlap, best {:.1}%",
         max_saving * 100.0
     );
+    metrics.insert("fabric_overlap_saving".into(), max_saving);
+
+    if let Some(path) = args.get("json") {
+        systo3d::util::json::write_metrics(path, &metrics)?;
+        println!("wrote {} metric(s) to {path}", metrics.len());
+    }
 
     println!("\nfabric_topology_sweep OK");
     Ok(())

@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         fmax_mhz: spec.fmax_mhz.unwrap(),
         controller_efficiency: 0.97,
     });
-    let dj2 = if blocking.di1 != blocking.dj1 { d2 * blocking.dj1 as u64 / blocking.di1 as u64 } else { d2 };
+    let dj2 = blocking.scale_dj2(d2);
     let r = sim.simulate(d2, dj2, d2);
     println!(
         "design {id} @ {d2}: {:.0} GFLOPS, e_D {:.3}, {:.4} s kernel time, c% {:.3}",

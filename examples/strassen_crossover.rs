@@ -13,9 +13,14 @@
 //! cluster scheduler.
 //!
 //! ```sh
-//! cargo run --release --example strassen_crossover [-- --design G]
+//! cargo run --release --example strassen_crossover [-- --design G --json OUT.json]
 //! ```
+//!
+//! `--json FILE` additionally writes the headline metrics (best
+//! effective-vs-peak ratio, crossover size, 7-card fleet GFLOPS) as a
+//! flat JSON object for the CI perf gate.
 
+use std::collections::BTreeMap;
 use systo3d::blocked::OffchipDesign;
 use systo3d::cli::Args;
 use systo3d::cluster::{ClusterSim, Fleet};
@@ -98,6 +103,15 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}", report.render());
     anyhow::ensure!(total < plan.chosen().seconds, "the fleet should beat one card");
+
+    if let Some(path) = args.get("json") {
+        let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+        metrics.insert("strassen_best_eff_vs_peak".into(), best_ratio);
+        metrics.insert("strassen_crossover_d".into(), crossover as f64);
+        metrics.insert("strassen_fleet7_gflops".into(), eff);
+        systo3d::util::json::write_metrics(path, &metrics)?;
+        println!("wrote {} metric(s) to {path}", metrics.len());
+    }
 
     println!("strassen_crossover OK");
     Ok(())

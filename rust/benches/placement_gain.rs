@@ -1,0 +1,65 @@
+//! Bench: the topology-aware placement optimizer — host-side search
+//! cost, and the contention-priced gain it buys over identity
+//! placement on ring and torus fabrics.
+//!
+//! The search replays the 2.5D plan's reduction sends under the
+//! link-contention model per candidate map, so its host cost scales
+//! with cards² × sends; this bench keeps that honest while printing
+//! the simulated numbers the optimizer is judged by.
+//!
+//! ```sh
+//! cargo bench --bench placement_gain
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
+use systo3d::placement::{optimize, PlacementStrategy};
+
+fn main() {
+    let b = common::bench();
+    let d2 = 21504u64;
+
+    for n in [16usize, 32] {
+        let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(n as u64), d2, d2, d2)
+            .expect("plan");
+        common::section(&format!("placement: local search over {n} cards (host cost)"));
+        for topo in [Topology::ring(n), Topology::torus_near_square(n)] {
+            let name = topo.name();
+            let s = b.run(&format!("optimize {name} n={n}"), || {
+                optimize(&plan, &topo, PlacementStrategy::default()).evaluations
+            });
+            common::report(&s);
+            let rep = optimize(&plan, &topo, PlacementStrategy::default());
+            println!(
+                "  {name}: reduction drain {:.4} s -> {:.4} s ({:.2}x), \
+                 hop-bytes -{:.0}%, {} candidate(s) priced",
+                rep.identity_cost_seconds,
+                rep.placed_cost_seconds,
+                rep.gain(),
+                rep.hop_byte_saving() * 100.0,
+                rep.evaluations,
+            );
+        }
+    }
+
+    common::section("placement: end-to-end makespan, identity vs placed (n=16, ring)");
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(16), d2, d2, d2)
+        .expect("plan");
+    let topo = Topology::ring(16);
+    let rep = optimize(&plan, &topo, PlacementStrategy::default());
+    let placed = rep.placement.apply_to(&plan);
+    let sim = ClusterSim::with_topology(Fleet::homogeneous(16, "G").expect("design G"), topo)
+        .with_placement(PlacementStrategy::Identity);
+    let s = b.run("simulate placed 2.5d ring n=16", || {
+        sim.simulate(&placed).makespan_seconds
+    });
+    common::report(&s);
+    println!(
+        "  identity {:.4} s vs placed {:.4} s",
+        sim.simulate(&plan).makespan_seconds,
+        sim.simulate(&placed).makespan_seconds,
+    );
+}

@@ -79,6 +79,18 @@ impl Level1Blocking {
         Ok(())
     }
 
+    /// The d_j2 that keeps a sweep aspect-true for this blocking:
+    /// rectangular blockings (d_i1 ≠ d_j1, design F) scale the column
+    /// extent by d_j1/d_i1, square ones keep it at `d2` — the idiom the
+    /// CLI `simulate`, `perfgate`, and the off-chip example all share.
+    pub fn scale_dj2(&self, d2: u64) -> u64 {
+        if self.di1 != self.dj1 {
+            d2 * self.dj1 as u64 / self.di1 as u64
+        } else {
+            d2
+        }
+    }
+
     /// Round off-chip extents *up* to the nearest sizes this blocking
     /// accepts (multiples of d_i1, d_j1, d_k0). The cluster scheduler
     /// times irregular shards as if zero-padded to the padded extents —
@@ -190,6 +202,12 @@ mod tests {
         assert_eq!(b.reuse_a(), 20);
         let (ga, gb) = b.implied_global_rates();
         assert!(ga <= 8.0 && gb <= 8.0, "({ga},{gb})");
+        // Aspect-true column extent: 8/7 of d2 for F, identity for
+        // square blockings.
+        assert_eq!(b.scale_dj2(560), 640);
+        assert_eq!(b.scale_dj2(17920), 20480);
+        let g = Level1Blocking::derive_min(g_array(), 8);
+        assert_eq!(g.scale_dj2(8192), 8192);
     }
 
     #[test]

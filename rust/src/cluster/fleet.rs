@@ -21,6 +21,7 @@ use crate::dse::configs::fitted_designs;
 use crate::fabric::{pipeline_schedule, OverlapReport, ReduceAlgo, Topology};
 use crate::gemm::Matrix;
 use crate::perfmodel::flop_count;
+use crate::placement::{optimize, PlacementReport, PlacementStrategy};
 
 /// One card of the fleet.
 #[derive(Clone, Debug)]
@@ -150,6 +151,21 @@ pub struct ClusterReport {
     pub max_link_busy_seconds: f64,
     /// Directed fabric links (two per cable/trunk).
     pub directed_links: usize,
+    /// Device→card placement strategy the run's plan came from
+    /// ("identity" when the plan was simulated exactly as given).
+    pub placement: &'static str,
+    /// Reduction hop-bytes the plan would pay under identity placement.
+    pub placement_identity_hop_bytes: u64,
+    /// Reduction hop-bytes of the plan as simulated (≤ identity when a
+    /// placement search ran).
+    pub placement_placed_hop_bytes: u64,
+    /// Contention-priced reduction drain under identity placement
+    /// (0 when no search ran).
+    pub placement_identity_cost_seconds: f64,
+    /// Same drain under the chosen placement (0 when no search ran).
+    pub placement_placed_cost_seconds: f64,
+    /// Host wall-clock the placement search spent (gauge only).
+    pub placement_search_seconds: f64,
     /// Device bounding the critical path.
     pub critical_device: usize,
     pub per_device: Vec<DeviceReport>,
@@ -178,6 +194,23 @@ impl ClusterReport {
             return 0.0;
         }
         self.reduction_overlap_seconds / self.reduction_seconds
+    }
+
+    /// identity/placed contention-priced reduction drain (1.0 when no
+    /// placement search ran or there was nothing to reduce).
+    pub fn placement_gain(&self) -> f64 {
+        if self.placement_placed_cost_seconds <= 0.0 {
+            return 1.0;
+        }
+        self.placement_identity_cost_seconds / self.placement_placed_cost_seconds
+    }
+
+    /// Fraction of identity hop-bytes the placement removed.
+    pub fn placement_hop_saving(&self) -> f64 {
+        if self.placement_identity_hop_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.placement_placed_hop_bytes as f64 / self.placement_identity_hop_bytes as f64
     }
 
     /// Multi-line human-readable summary (CLI / examples).
@@ -213,6 +246,20 @@ impl ClusterReport {
             self.reduction_overlap() * 100.0,
             self.reroutes,
         );
+        if self.placement != "identity" {
+            out.push_str(&format!(
+                "placement {}: hop-bytes {:.1} MB -> {:.1} MB (-{:.0}%), reduction drain \
+                 {:.4} s -> {:.4} s ({:.2}x), search {:.1} ms\n",
+                self.placement,
+                self.placement_identity_hop_bytes as f64 / 1e6,
+                self.placement_placed_hop_bytes as f64 / 1e6,
+                self.placement_hop_saving() * 100.0,
+                self.placement_identity_cost_seconds,
+                self.placement_placed_cost_seconds,
+                self.placement_gain(),
+                self.placement_search_seconds * 1e3,
+            ));
+        }
         for (i, d) in self.per_device.iter().enumerate() {
             out.push_str(&format!(
                 "  {:<4} {:>2} shard(s) {:>2} stolen  xfer {:>8.4} s  compute {:>8.4} s  \
@@ -238,6 +285,11 @@ pub struct ClusterSim {
     pub host: Link,
     /// The card↔card fabric the reductions route over.
     pub topology: Topology,
+    /// How the planner maps plan devices onto cards
+    /// ([`Self::plan_and_report`] places every candidate before
+    /// simulating it; [`Self::simulate`] prices a plan exactly as
+    /// given). Defaults to the seeded local search.
+    pub placement: PlacementStrategy,
 }
 
 impl ClusterSim {
@@ -256,7 +308,35 @@ impl ClusterSim {
             fleet.len().max(1),
             "topology must wire exactly the fleet's cards"
         );
-        Self { fleet, host: Link::pcie_gen3_x8(), topology }
+        Self {
+            fleet,
+            host: Link::pcie_gen3_x8(),
+            topology,
+            placement: PlacementStrategy::default(),
+        }
+    }
+
+    /// Same sim with a different placement strategy (builder style).
+    pub fn with_placement(mut self, placement: PlacementStrategy) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// Optimize the device→card placement of `plan` for this sim's
+    /// fabric under the sim's strategy. Returns the re-homed plan plus
+    /// the search report — or the plan untouched and `None` when the
+    /// strategy is identity or the plan has no reduction traffic to
+    /// optimize. Card deaths during a later run re-home reductions
+    /// through the scheduler's existing path, placed or not.
+    pub fn place_plan(&self, plan: &PartitionPlan) -> (PartitionPlan, Option<PlacementReport>) {
+        if matches!(self.placement, PlacementStrategy::Identity)
+            || plan.device_to_device_bytes == 0
+        {
+            return (plan.clone(), None);
+        }
+        let report = optimize(plan, &self.topology, self.placement);
+        let placed = report.placement.apply_to(plan);
+        (placed, Some(report))
     }
 
     /// Seconds for `shard` on fleet device `d`: the shard's extents are
@@ -268,14 +348,24 @@ impl ClusterSim {
         OffchipSim::new(design).simulate(pi, pj, pk).seconds
     }
 
-    /// Timing-only run of a plan.
+    /// Timing-only run of a plan, exactly as given (identity placement).
     pub fn simulate(&self, plan: &PartitionPlan) -> ClusterReport {
+        self.simulate_placed(plan, None)
+    }
+
+    /// Timing-only run of an (already placed) plan, carrying the
+    /// placement search's numbers into the report's gauges.
+    pub fn simulate_placed(
+        &self,
+        plan: &PartitionPlan,
+        placement: Option<&PlacementReport>,
+    ) -> ClusterReport {
         assert!(!self.fleet.is_empty(), "empty fleet");
         let outcome =
             run_schedule(plan, self.fleet.len(), &self.host, &self.topology, |d, s| {
                 self.shard_seconds(d, s)
             });
-        self.report(plan, outcome)
+        self.report(plan, outcome, placement)
     }
 
     /// Replay a plan's compute and reductions with and without the
@@ -310,7 +400,7 @@ impl ClusterSim {
             deaths,
             |d, s| self.shard_seconds(d, s),
         )?;
-        Ok(self.report(plan, outcome))
+        Ok(self.report(plan, outcome, None))
     }
 
     /// Timing + functional run (small sizes only).
@@ -346,9 +436,10 @@ impl ClusterSim {
         plans
     }
 
-    /// Simulate every candidate once and return the plan with the
-    /// smallest makespan (ties go to fewer bytes moved) together with
-    /// its report, so callers need not re-run the schedule.
+    /// Place (under the sim's [`PlacementStrategy`]) and simulate every
+    /// candidate once, returning the placed plan with the smallest
+    /// makespan (ties go to fewer bytes moved) together with its
+    /// report, so callers need not re-run the schedule.
     pub fn plan_and_report(
         &self,
         m: u64,
@@ -358,8 +449,9 @@ impl ClusterSim {
         self.candidate_plans(m, k, n)
             .into_iter()
             .map(|p| {
-                let r = self.simulate(&p);
-                (p, r)
+                let (placed, placement) = self.place_plan(&p);
+                let r = self.simulate_placed(&placed, placement.as_ref());
+                (placed, r)
             })
             .min_by(|(pa, ra), (pb, rb)| {
                 ra.makespan_seconds
@@ -373,7 +465,12 @@ impl ClusterSim {
         self.plan_and_report(m, k, n).map(|(p, _)| p)
     }
 
-    fn report(&self, plan: &PartitionPlan, outcome: ScheduleOutcome) -> ClusterReport {
+    fn report(
+        &self,
+        plan: &PartitionPlan,
+        outcome: ScheduleOutcome,
+        placement: Option<&PlacementReport>,
+    ) -> ClusterReport {
         let makespan = outcome.makespan_seconds;
         let per_device: Vec<DeviceReport> = outcome
             .per_device
@@ -395,6 +492,20 @@ impl ClusterSim {
         let effective_gflops =
             flop_count(plan.m, plan.n, plan.k) as f64 / makespan.max(f64::MIN_POSITIVE) / 1e9;
         let aggregate_peak_gflops = self.fleet.aggregate_peak_gflops();
+        // Hop-pricing the simulated plan is the placed side of the
+        // gauge pair; with no search the identity side equals it.
+        let placed_hop_bytes = plan.reduction_hop_bytes(&self.topology);
+        let (placement_name, identity_hop_bytes, identity_cost, placed_cost, search_seconds) =
+            match placement {
+                Some(p) => (
+                    p.strategy,
+                    p.identity_hop_bytes,
+                    p.identity_cost_seconds,
+                    p.placed_cost_seconds,
+                    p.search_seconds,
+                ),
+                None => ("identity", placed_hop_bytes, 0.0, 0.0, 0.0),
+            };
         ClusterReport {
             strategy: plan.strategy.name(),
             topology: self.topology.name(),
@@ -418,6 +529,12 @@ impl ClusterSim {
             link_busy_seconds: outcome.link_busy_seconds,
             max_link_busy_seconds: outcome.max_link_busy_seconds,
             directed_links: outcome.directed_links,
+            placement: placement_name,
+            placement_identity_hop_bytes: identity_hop_bytes,
+            placement_placed_hop_bytes: placed_hop_bytes,
+            placement_identity_cost_seconds: identity_cost,
+            placement_placed_cost_seconds: placed_cost,
+            placement_search_seconds: search_seconds,
             critical_device: outcome.critical_device(),
             per_device,
         }
@@ -557,6 +674,40 @@ mod tests {
         assert!(rr.link_utilization() > 0.0 && rr.link_utilization() <= 1.0);
         assert!(rr.max_link_utilization() >= rr.link_utilization());
         assert!(rr.render().contains("fabric ring"));
+    }
+
+    #[test]
+    fn plan_and_report_places_reduction_plans() {
+        let d = 8192u64;
+        let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
+        let sim =
+            ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), Topology::ring(8));
+        // place_plan optimizes reduction-heavy plans strictly on a ring.
+        let (placed, rep) = sim.place_plan(&plan);
+        let rep = rep.expect("2.5d plan has reduction traffic");
+        assert_eq!(rep.strategy, "local-search");
+        assert!(
+            rep.placed_cost_seconds < rep.identity_cost_seconds,
+            "placed {} vs identity {}",
+            rep.placed_cost_seconds,
+            rep.identity_cost_seconds
+        );
+        assert_eq!(placed.reduction_hop_bytes(&sim.topology), rep.placed_hop_bytes);
+        // The placed schedule's report carries the gauge pair.
+        let r = sim.simulate_placed(&placed, Some(&rep));
+        assert_eq!(r.placement, "local-search");
+        assert!(r.placement_placed_hop_bytes <= r.placement_identity_hop_bytes);
+        assert!(r.placement_gain() > 1.0);
+        assert!(r.render().contains("placement local-search"));
+        // Identity strategy and reduction-free plans skip the search.
+        let id_sim = sim.clone().with_placement(PlacementStrategy::Identity);
+        assert!(id_sim.place_plan(&plan).1.is_none());
+        let grid = PartitionPlan::new(PartitionStrategy::auto_grid2d(8), d, d, d).unwrap();
+        assert!(sim.place_plan(&grid).1.is_none());
+        // plan_and_report's winner keeps the gauges coherent whichever
+        // candidate wins.
+        let (_, win) = sim.plan_and_report(d, d, d).unwrap();
+        assert!(win.placement_placed_hop_bytes <= win.placement_identity_hop_bytes);
     }
 
     #[test]

@@ -28,7 +28,11 @@
 //! * [`fleet`] — N (possibly heterogeneous Table-I) designs and the
 //!   [`ClusterSim`] front door producing a [`ClusterReport`]
 //!   (per-device utilization, critical path, effective TFLOPS vs.
-//!   N·single-card peak).
+//!   N·single-card peak). The sim carries a
+//!   [`crate::placement::PlacementStrategy`]: `plan_and_report` maps
+//!   every candidate plan's devices onto cards with the topology-aware
+//!   placement optimizer before simulating it, so reduction-heavy 2.5D
+//!   plans stop paying identity-layout prices on narrow fabrics.
 //!
 //! Functional mode reduces k-split partial C tiles by *continuing* the
 //! blocked accumulation in ascending-k order, so sharded results are

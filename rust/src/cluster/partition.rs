@@ -320,6 +320,26 @@ impl PartitionPlan {
         homes
     }
 
+    /// The plan's partial-C reduction sends with devices folded onto
+    /// `cards` physical cards the way the scheduler folds them
+    /// (`device % cards`): one `(src, dst, bytes)` triple per non-home
+    /// partial, in plan order. Hop pricing and the placement optimizer
+    /// ([`crate::placement`]) both consume this list so their view of
+    /// the reduction traffic cannot diverge.
+    pub fn reduction_sends(&self, cards: usize) -> Vec<(usize, usize, u64)> {
+        let cards = cards.max(1);
+        let homes = self.tile_homes();
+        let mut sends = Vec::new();
+        for s in &self.shards {
+            let (min_k0, home) = homes[&s.tile()];
+            if s.k0 == min_k0 {
+                continue;
+            }
+            sends.push((s.device % cards, home % cards, s.c_bytes()));
+        }
+        sends
+    }
+
     /// Reduction traffic weighted by fabric distance: Σ over non-home
     /// partials of `c_bytes · hops(sender, home)`, with plan devices
     /// folded onto the fabric's cards the way the scheduler folds them
@@ -327,20 +347,12 @@ impl PartitionPlan {
     /// `device_to_device_bytes` is topology-blind, this is not — the
     /// same 2.5D plan scores lower on a torus than on a ring.
     pub fn reduction_hop_bytes(&self, topology: &crate::fabric::Topology) -> u64 {
-        let cards = topology.cards.max(1);
-        let homes = self.tile_homes();
         let mut total = 0u64;
-        for s in &self.shards {
-            let (min_k0, home) = homes[&s.tile()];
-            if s.k0 == min_k0 {
-                continue;
-            }
-            let (src, dst) = (s.device % cards, home % cards);
+        for (src, dst, bytes) in self.reduction_sends(topology.cards) {
             if src == dst {
                 continue;
             }
-            let hops = u64::from(topology.hops(src, dst).unwrap_or(0));
-            total += s.c_bytes() * hops;
+            total += bytes * u64::from(topology.hops(src, dst).unwrap_or(0));
         }
         total
     }
@@ -532,6 +544,29 @@ mod tests {
         let grid =
             PartitionPlan::new(PartitionStrategy::Grid2D { p: 2, q: 2 }, 64, 64, 64).unwrap();
         assert_eq!(grid.reduction_hop_bytes(&Topology::ring(4)), 0);
+    }
+
+    #[test]
+    fn reduction_sends_match_byte_accounting() {
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 3 },
+            64,
+            90,
+            32,
+        )
+        .unwrap();
+        // One send per non-home partial, summing to the plan's d2d bill.
+        let sends = plan.reduction_sends(plan.devices);
+        assert_eq!(sends.len(), 8, "4 tiles x 2 non-home partials");
+        let total: u64 = sends.iter().map(|&(_, _, b)| b).sum();
+        assert_eq!(total, plan.device_to_device_bytes);
+        // Folding onto fewer cards keeps the list (sends may become
+        // local, but the accounting stays per-partial).
+        assert_eq!(plan.reduction_sends(4).len(), 8);
+        // Plans without a k split ship nothing.
+        let grid =
+            PartitionPlan::new(PartitionStrategy::Grid2D { p: 2, q: 2 }, 64, 64, 64).unwrap();
+        assert!(grid.reduction_sends(4).is_empty());
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //! lets a fast Table-I design finish its band and absorb a slow
 //! neighbour's tail instead of idling.
 //!
+//! Determinism: every scheduling choice (next DMA device, steal
+//! victim, retry survivor) breaks ties explicitly on the device id,
+//! never on iterator order — so the same plan replays to a
+//! bit-identical [`ScheduleOutcome`], including plans relabeled by the
+//! placement optimizer ([`crate::placement`]) with a fixed seed.
+//!
 //! Failure/retry: [`run_schedule_with_failures`] takes a per-device
 //! death time. A dying card loses whatever shard is in flight (DMA or
 //! compute crossing the death instant); the shard's attempt counter is
@@ -213,22 +219,27 @@ pub fn run_schedule_with_failures(
     let mut pending: usize = plan.shards.len();
     while pending > 0 {
         // The live device whose host link frees first (strictly before
-        // its death) starts the next DMA.
+        // its death) starts the next DMA. Every tie here and below
+        // breaks on the device id explicitly, so identical inputs —
+        // including placement-permuted plans re-run with the same seed
+        // — replay to bit-identical outcomes instead of leaning on
+        // iterator tie-break accidents.
         let d = (0..ndev)
             .filter(|&d| !dead[d] && death(d).map_or(true, |td| link_free[d] < td))
-            .min_by(|a, b| link_free[*a].total_cmp(&link_free[*b]));
+            .min_by(|&a, &b| link_free[a].total_cmp(&link_free[b]).then(a.cmp(&b)));
         let Some(d) = d else {
             return Err(format!(
                 "all {ndev} device(s) dead with {pending} shard(s) outstanding"
             ));
         };
-        // Own queue first; otherwise steal from the longest queue.
+        // Own queue first; otherwise steal from the longest queue
+        // (ties toward the lowest device id).
         let (shard, stolen) = match queues[d].pop_front() {
             Some(s) => (s, false),
             None => {
                 let victim = (0..ndev)
                     .filter(|&v| !queues[v].is_empty())
-                    .max_by_key(|&v| queues[v].len())
+                    .max_by(|&a, &b| queues[a].len().cmp(&queues[b].len()).then(b.cmp(&a)))
                     .expect("pending > 0 implies a nonempty queue");
                 (queues[victim].pop_back().unwrap(), true)
             }
@@ -272,7 +283,7 @@ pub fn run_schedule_with_failures(
                 }
                 let survivor = (0..ndev)
                     .filter(|&v| !dead[v] && death(v).map_or(true, |tv| link_free[v] < tv))
-                    .min_by_key(|&v| queues[v].len());
+                    .min_by_key(|&v| (queues[v].len(), v));
                 match survivor {
                     Some(v) => {
                         queues[v].push_back(shard);
@@ -521,6 +532,27 @@ mod tests {
         assert_eq!(a.steals, b.steals);
         assert_eq!(b.retries, 0);
         assert_eq!(b.reroutes, 0);
+    }
+
+    #[test]
+    fn repeated_runs_are_bit_identical() {
+        // The tie-breaks are explicit (device id), so two replays of
+        // the same schedule agree to the last bit.
+        let p = plan(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192);
+        let topo = Topology::ring(8);
+        let a = run_schedule(&p, 8, &host(), &topo, flat_rate);
+        let b = run_schedule(&p, 8, &host(), &topo, flat_rate);
+        assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+        assert_eq!(a.steals, b.steals);
+        assert_eq!(a.reduction_seconds.to_bits(), b.reduction_seconds.to_bits());
+        assert_eq!(a.link_busy_seconds.to_bits(), b.link_busy_seconds.to_bits());
+        for (x, y) in a.per_device.iter().zip(&b.per_device) {
+            assert_eq!(x.shards, y.shards);
+            assert_eq!(x.stolen, y.stolen);
+            assert_eq!(x.transfer_seconds.to_bits(), y.transfer_seconds.to_bits());
+            assert_eq!(x.compute_seconds.to_bits(), y.compute_seconds.to_bits());
+            assert_eq!(x.finish_seconds.to_bits(), y.finish_seconds.to_bits());
+        }
     }
 
     #[test]

@@ -37,6 +37,16 @@ pub struct Metrics {
     /// Capacity base for link utilization: makespan × directed links,
     /// in microseconds.
     pub fabric_link_capacity_us: AtomicU64,
+    /// Reduction hop-bytes the recorded cluster plans would have paid
+    /// under identity placement (gauge pair with
+    /// `placement_placed_hop_bytes` — the saving the topology-aware
+    /// placement optimizer banked).
+    pub placement_identity_hop_bytes: AtomicU64,
+    /// Reduction hop-bytes the recorded cluster plans actually paid as
+    /// placed (≤ the identity gauge).
+    pub placement_placed_hop_bytes: AtomicU64,
+    /// Host time spent searching placements, in microseconds.
+    pub placement_search_us: AtomicU64,
     /// Requests served by the Strassen route.
     pub strassen_jobs: AtomicU64,
     /// Histogram of chosen recursion depths: bucket i counts depth-i
@@ -84,6 +94,24 @@ impl Metrics {
             .fetch_add((report.link_busy_seconds * 1e6) as u64, Ordering::Relaxed);
         let capacity = report.makespan_seconds * report.directed_links as f64;
         self.fabric_link_capacity_us.fetch_add((capacity * 1e6) as u64, Ordering::Relaxed);
+        self.placement_identity_hop_bytes
+            .fetch_add(report.placement_identity_hop_bytes, Ordering::Relaxed);
+        self.placement_placed_hop_bytes
+            .fetch_add(report.placement_placed_hop_bytes, Ordering::Relaxed);
+        self.placement_search_us
+            .fetch_add((report.placement_search_seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Fraction of identity-placement hop-bytes the placement
+    /// optimizer removed across recorded cluster runs (0.0 before the
+    /// first reduction-carrying plan).
+    pub fn placement_hop_saving(&self) -> f64 {
+        let identity = self.placement_identity_hop_bytes.load(Ordering::Relaxed) as f64;
+        let placed = self.placement_placed_hop_bytes.load(Ordering::Relaxed) as f64;
+        if identity == 0.0 {
+            return 0.0;
+        }
+        1.0 - placed / identity
     }
 
     /// Mean directed-link utilization of the card fabric across all
@@ -164,6 +192,11 @@ impl Metrics {
                 .load(Ordering::Relaxed),
             fabric_link_busy_us: self.fabric_link_busy_us.load(Ordering::Relaxed),
             fabric_link_capacity_us: self.fabric_link_capacity_us.load(Ordering::Relaxed),
+            placement_identity_hop_bytes: self
+                .placement_identity_hop_bytes
+                .load(Ordering::Relaxed),
+            placement_placed_hop_bytes: self.placement_placed_hop_bytes.load(Ordering::Relaxed),
+            placement_search_us: self.placement_search_us.load(Ordering::Relaxed),
             strassen_jobs: self.strassen_jobs.load(Ordering::Relaxed),
             strassen_depths: std::array::from_fn(|i| {
                 self.strassen_depths[i].load(Ordering::Relaxed)
@@ -191,6 +224,9 @@ pub struct MetricsSnapshot {
     pub fabric_reduction_overlap_us: u64,
     pub fabric_link_busy_us: u64,
     pub fabric_link_capacity_us: u64,
+    pub placement_identity_hop_bytes: u64,
+    pub placement_placed_hop_bytes: u64,
+    pub placement_search_us: u64,
     pub strassen_jobs: u64,
     pub strassen_depths: [u64; 4],
     pub strassen_eff_vs_peak_ppm: u64,
@@ -262,6 +298,33 @@ mod tests {
         let u = m.fabric_link_utilization();
         assert!(u > 0.0 && u <= 1.0, "{u}");
         assert!(m.reduction_overlap_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn placement_gauges_accumulate_savings() {
+        use crate::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+        use crate::fabric::Topology;
+        let m = Metrics::new();
+        assert_eq!(m.placement_hop_saving(), 0.0);
+        let sim = ClusterSim::with_topology(
+            Fleet::homogeneous(8, "G").unwrap(),
+            Topology::ring(8),
+        );
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 },
+            8192,
+            8192,
+            8192,
+        )
+        .unwrap();
+        let (placed, rep) = sim.place_plan(&plan);
+        let rep = rep.expect("2.5d plan has reduction traffic");
+        m.record_cluster(&sim.simulate_placed(&placed, Some(&rep)));
+        let s = m.snapshot();
+        assert!(s.placement_identity_hop_bytes > 0);
+        assert!(s.placement_placed_hop_bytes <= s.placement_identity_hop_bytes);
+        let saving = m.placement_hop_saving();
+        assert!(saving > 0.0 && saving < 1.0, "{saving}");
     }
 
     #[test]

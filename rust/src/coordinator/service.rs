@@ -13,6 +13,7 @@ use crate::cluster::{ClusterReport, ClusterSim, Fleet};
 use crate::fabric::Topology;
 use crate::gemm::{matmul_blocked, Matrix};
 use crate::perfmodel::flop_count;
+use crate::placement::PlacementStrategy;
 use crate::strassen::{strassen_matmul, StrassenConfig, StrassenReport};
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -80,6 +81,12 @@ pub struct ServiceConfig {
     /// topology whose card count disagrees with `cluster_devices` is
     /// rejected at start.
     pub cluster_topology: Option<Topology>,
+    /// Device→card placement the sharded route's planner applies to
+    /// reduction-carrying plans before simulating them (identity
+    /// disables the optimizer; the default is the seeded local
+    /// search). Functional results are placement-invariant — this only
+    /// moves where partials live on the fabric.
+    pub placement: PlacementStrategy,
     /// Strassen planner knobs (mode, max depth, default error budget).
     pub strassen: StrassenConfig,
     /// Bucket fallback/Strassen batches by blocking-padded shape
@@ -95,6 +102,7 @@ impl Default for ServiceConfig {
             batch_window: Duration::from_millis(2),
             cluster_devices: 4,
             cluster_topology: None,
+            placement: PlacementStrategy::default(),
             strassen: StrassenConfig::default(),
             bucket_shapes: false,
         }
@@ -174,7 +182,8 @@ impl GemmService {
         let cluster = match config.cluster_topology.clone() {
             Some(t) => ClusterSim::with_topology(fleet, t),
             None => ClusterSim::new(fleet),
-        };
+        }
+        .with_placement(config.placement);
         let batcher = if config.bucket_shapes {
             // Bucket to the fleet design's blocking-padded extents.
             Batcher::with_bucketing(config.max_batch, cluster.fleet.devices[0].design.blocking)
@@ -554,6 +563,31 @@ mod tests {
             ..Default::default()
         });
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn placement_knob_keeps_results_bit_exact() {
+        // The optimizer only relabels where partials live; the service
+        // answer must be bit-identical with it on or off, and the
+        // placed hop-byte gauge must never exceed the identity gauge.
+        for placement in [PlacementStrategy::Identity, PlacementStrategy::default()] {
+            let svc = GemmService::start(ServiceConfig {
+                artifact_dir: None,
+                cluster_devices: 8,
+                placement,
+                ..Default::default()
+            })
+            .unwrap();
+            let a = Matrix::random(1025, 1025, 41);
+            let b = Matrix::random(1025, 1025, 42);
+            let want = matmul_blocked(&a, &b);
+            let resp =
+                svc.submit_sync(GemmRequest { id: 6, a, b, chain: None, error_budget: None });
+            assert_eq!(resp.route, Route::Sharded);
+            assert_eq!(resp.result.unwrap().data, want.data);
+            let snap = svc.metrics.snapshot();
+            assert!(snap.placement_placed_hop_bytes <= snap.placement_identity_hop_bytes);
+        }
     }
 
     #[test]

@@ -137,6 +137,21 @@ impl FabricState {
         self.routes.hops(src, dst)
     }
 
+    /// Forget all link occupancy (free times, busy accounting, reroute
+    /// count) while keeping the topology, route tables, and dead-card
+    /// state. Lets a caller replay many what-if schedules — the
+    /// placement search prices thousands of candidate maps — on one
+    /// instance instead of cloning the n² route table per replay.
+    pub fn reset_occupancy(&mut self) {
+        for f in &mut self.free {
+            *f = [0.0; 2];
+        }
+        for b in &mut self.busy {
+            *b = [0.0; 2];
+        }
+        self.reroutes = 0;
+    }
+
     /// Price of an uncontended h-hop transfer at trunk width `w_min`.
     pub fn transfer_seconds(&self, bytes: u64, hops: u32, w_min: u32) -> f64 {
         self.lane.seconds_for_bytes(bytes) / w_min.max(1) as f64
@@ -287,6 +302,27 @@ mod tests {
         assert!((s2 - e1).abs() < 1e-12, "{s2} vs {e1}");
         // Hop latency is visible on top of the serialization time.
         assert!(e1 > f.transfer_seconds(bytes, 1, 1));
+    }
+
+    #[test]
+    fn reset_occupancy_forgets_traffic_not_topology() {
+        let mut f = FabricState::new(Topology::ring(4));
+        let bytes = 100_000_000;
+        let (_, first) = f.send(0, 1, bytes, 0.0).unwrap();
+        let (queued, _) = f.send(0, 1, bytes, 0.0).unwrap();
+        assert!(queued >= first, "second flow queued behind the first");
+        assert!(f.busy_seconds_total() > 0.0);
+        f.reset_occupancy();
+        assert_eq!(f.busy_seconds_total(), 0.0);
+        // A fresh replay starts at t=0 again, on the same routes.
+        let (start, end) = f.send(0, 1, bytes, 0.0).unwrap();
+        assert_eq!(start, 0.0);
+        assert!((end - first).abs() < 1e-12);
+        // Dead-card state survives the reset.
+        f.kill(1);
+        f.reset_occupancy();
+        assert!(f.is_dead(1));
+        assert_eq!(f.hops(0, 1), None);
     }
 
     #[test]

@@ -23,7 +23,11 @@
 //!   explicit **fabric** ([`fabric`]): port-constrained ring / torus /
 //!   mesh / fat-tree topologies, congestion-aware multi-hop routing,
 //!   and collective reduction schedules that overlap the 2.5D
-//!   partial-C combine with leaf compute. Requests that exceed a single card's
+//!   partial-C combine with leaf compute. A **topology-aware placement
+//!   optimizer** ([`placement`]) maps plan devices onto physical cards
+//!   (greedy plane-packing plus a seeded local search, scored under
+//!   the link-contention model) so the planner's reduction traffic
+//!   pays as little for the fabric as the wiring allows. Requests that exceed a single card's
 //!   DDR capacity (or fit no Table-I blocking) route to the cluster
 //!   (`Route::Sharded`). A **Strassen recursion layer** ([`strassen`])
 //!   sits above both: a planner prices 7^d-leaf recursions against the
@@ -56,6 +60,7 @@ pub mod gemm;
 pub mod hls;
 pub mod memory;
 pub mod perfmodel;
+pub mod placement;
 pub mod runtime;
 pub mod solver;
 pub mod strassen;

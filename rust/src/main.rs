@@ -37,6 +37,7 @@ fn main() {
         Some("cluster") => cmd_cluster(&args),
         Some("fabric") => cmd_fabric(&args),
         Some("strassen") => cmd_strassen(&args),
+        Some("perfgate") => cmd_perfgate(&args),
         _ => {
             print_usage();
             Ok(())
@@ -61,12 +62,23 @@ fn print_usage() {
          ablate   [--d2 4096]                ablation studies (§III-C/§V claims)\n\
          codegen  [--design G]               emit the OpenCL HLS kernel source\n\
          cluster  [--devices 4] [--d2 21504] [--design G] [--strategy auto|1d|2d|2.5d|all]\n\
-                  [--mix]                    shard one GEMM over a simulated fleet\n\
+                  [--mix] [--placement identity|plane|search]\n\
+                  \x20                         shard one GEMM over a simulated fleet\n\
          fabric   [--devices 8] [--d2 21504] [--design G] [--topology all|auto|ring|torus|\n\
-                  full|fat-tree] [--overlap]  compare card fabrics: plan makespans,\n\
+                  full|fat-tree] [--overlap] [--placement identity|plane|search]\n\
+                  \x20                         compare card fabrics: plan makespans,\n\
                   \x20                         link utilization, reduction overlap\n\
+                  \x20 placement maps plan devices onto cards before pricing: identity\n\
+                  \x20 keeps the plane-major layout, plane greedily packs each 2.5D\n\
+                  \x20 k-slice's grid onto fabric-adjacent cards, search (the default\n\
+                  \x20 planner setting) polishes it with seeded swaps scored under the\n\
+                  \x20 link-contention model\n\
          strassen [--design G] [--d2 21504] [--depth auto|0..3] [--budget 1e-3]\n\
-                  [--devices 1]              plan/price Strassen recursion vs classical"
+                  [--devices 1]              plan/price Strassen recursion vs classical\n\
+         perfgate [--out BENCH.json] [--baseline rust/benches/baseline.json]\n\
+                  [--merge a.json,b.json] [--tolerance 0.10] [--d2 8192]\n\
+                  \x20                         record headline metrics, write the bench\n\
+                  \x20                         trajectory, gate vs the checked-in baseline"
     );
 }
 
@@ -108,19 +120,22 @@ fn cmd_ablate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+    use systo3d::placement::PlacementStrategy;
 
     let devices = args.get_usize("devices", 4).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(devices >= 1, "--devices must be at least 1");
     let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
     let id = args.get_str("design", "G").to_uppercase();
     let strategy = args.get_str("strategy", "auto").to_lowercase();
+    let placement = PlacementStrategy::parse(args.get_str("placement", "search"))
+        .map_err(anyhow::Error::msg)?;
 
     let fleet = if args.flag("mix") {
         Fleet::mixed_table1(devices)
     } else {
         Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?
     };
-    let sim = ClusterSim::new(fleet);
+    let sim = ClusterSim::new(fleet).with_placement(placement);
 
     let n = devices as u64;
     let runs: Vec<(PartitionPlan, systo3d::cluster::ClusterReport)> = if strategy == "auto" {
@@ -142,8 +157,11 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         plans
             .into_iter()
             .map(|p| {
-                let r = sim.simulate(&p);
-                (p, r)
+                // Explicit strategies go through the same placement
+                // pass the auto planner applies.
+                let (placed, rep) = sim.place_plan(&p);
+                let r = sim.simulate_placed(&placed, rep.as_ref());
+                (placed, r)
             })
             .collect()
     };
@@ -162,12 +180,15 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
 fn cmd_fabric(args: &Args) -> anyhow::Result<()> {
     use systo3d::cluster::{ClusterSim, Fleet, Link};
     use systo3d::fabric::{ReduceAlgo, Topology};
+    use systo3d::placement::PlacementStrategy;
 
     let devices = args.get_usize("devices", 8).map_err(anyhow::Error::msg)?;
     anyhow::ensure!(devices >= 1, "--devices must be at least 1");
     let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
     let id = args.get_str("design", "G").to_uppercase();
     let wanted = args.get_str("topology", "all").to_lowercase();
+    let placement = PlacementStrategy::parse(args.get_str("placement", "search"))
+        .map_err(anyhow::Error::msg)?;
 
     let topologies: Vec<Topology> = match wanted.as_str() {
         "all" => vec![
@@ -200,9 +221,10 @@ fn cmd_fabric(args: &Args) -> anyhow::Result<()> {
             topology.bisection_bytes_per_s(&lane) / 1e9,
         );
         let fleet = Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?;
-        let sim = ClusterSim::with_topology(fleet, topology);
+        let sim = ClusterSim::with_topology(fleet, topology).with_placement(placement);
         for plan in sim.candidate_plans(d2, d2, d2) {
-            let r = sim.simulate(&plan);
+            let (placed, rep) = sim.place_plan(&plan);
+            let r = sim.simulate_placed(&placed, rep.as_ref());
             println!(
                 "  {:>11}: {:.4} s makespan, {:>8.2} TFLOPS, link util {:>5.1}% mean \
                  {:>5.1}% peak, reduction {:.4} s ({:.0}% overlapped)",
@@ -214,6 +236,17 @@ fn cmd_fabric(args: &Args) -> anyhow::Result<()> {
                 r.reduction_seconds,
                 r.reduction_overlap() * 100.0,
             );
+            if r.placement != "identity" {
+                println!(
+                    "               placement {}: reduction drain {:.4} s -> {:.4} s \
+                     ({:.2}x), hop-bytes -{:.0}%",
+                    r.placement,
+                    r.placement_identity_cost_seconds,
+                    r.placement_placed_cost_seconds,
+                    r.placement_gain(),
+                    r.placement_hop_saving() * 100.0,
+                );
+            }
         }
         // The overlap story on the 2.5D plan (the one with partials to
         // combine), when the fleet admits one.
@@ -401,11 +434,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         fmax_mhz: spec.fmax_mhz.unwrap(),
         controller_efficiency: 0.97,
     });
-    let dj2 = if blocking.di1 != blocking.dj1 {
-        d2 * blocking.dj1 as u64 / blocking.di1 as u64
-    } else {
-        d2
-    };
+    let dj2 = blocking.scale_dj2(d2);
     let r = sim.simulate(d2, dj2, d2);
     println!(
         "design {id}: ({d2} x {d2}) · ({d2} x {dj2})\n\
@@ -455,6 +484,130 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(failures == 0, "{failures} artifact(s) disagree with the oracle");
     println!("all artifacts verified against the GEMM oracle");
+    Ok(())
+}
+
+/// Record the headline simulated metrics, merge the example-emitted
+/// JSON files, write the bench-trajectory artifact, and gate against
+/// the checked-in baseline: a "higher" metric fails below
+/// `value · (1 − tolerance)`, a "lower" metric above
+/// `value · (1 + tolerance)`. Every metric lands in the output file;
+/// only keys present in the baseline are gated, so the artifact is the
+/// trajectory future PRs ratchet the baseline from.
+fn cmd_perfgate(args: &Args) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+    use systo3d::blocked::{OffchipDesign, OffchipSim};
+    use systo3d::dse::configs::fitted_designs;
+    use systo3d::util::json::{write_metrics, Json};
+
+    let out = args.get_str("out", "BENCH_pr4.json");
+    let baseline_path = args.get_str("baseline", "rust/benches/baseline.json");
+    let d2 = args.get_u64("d2", 8192).map_err(anyhow::Error::msg)?;
+    let tolerance: f64 = match args.get("tolerance") {
+        None => 0.10,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--tolerance expects a float, got {v:?}"))?,
+    };
+
+    // Per-design simulated throughput: deterministic, so it gates
+    // cleanly (wall-clock bench numbers go to the artifact logs only).
+    let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+    for spec in fitted_designs() {
+        let design = OffchipDesign {
+            blocking: spec.level1().expect("fitted design has a blocking"),
+            fmax_mhz: spec.fmax_mhz.unwrap(),
+            controller_efficiency: 0.97,
+        };
+        let dj2 = design.blocking.scale_dj2(d2);
+        let (pi, pj, pk) = design.blocking.pad_offchip(d2, dj2, d2);
+        let r = OffchipSim::new(design).simulate(pi, pj, pk);
+        metrics.insert(format!("design_{}_gflops", spec.id), r.gflops);
+        metrics.insert(format!("design_{}_e_d", spec.id), r.e_d);
+    }
+
+    // Fold in whatever the example sweeps emitted with --json.
+    if let Some(list) = args.get("merge") {
+        for path in list.split(',').filter(|p| !p.is_empty()) {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("read {path}: {e}"))?;
+            let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let obj = doc
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("{path}: expected a JSON object"))?;
+            for (key, value) in obj {
+                let n = value
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("{path}: {key} is not a number"))?;
+                metrics.insert(key.clone(), n);
+            }
+        }
+    }
+
+    write_metrics(out, &metrics)?;
+    println!("recorded {} metric(s) to {out}", metrics.len());
+
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| anyhow::anyhow!("read baseline {baseline_path}: {e}"))?;
+    let baseline =
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+    let entries = baseline
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("{baseline_path}: expected a JSON object"))?;
+    // Without --merge only the in-process design metrics exist; the
+    // example-emitted baseline keys are then reported as skipped
+    // instead of failing, so a bare `systo3d perfgate` stays useful
+    // for a quick local design-throughput check. CI always passes
+    // --merge, which makes a missing baseline metric a hard failure.
+    let strict = args.get("merge").is_some();
+    let mut failures: Vec<String> = Vec::new();
+    let mut gated = 0usize;
+    for (key, entry) in entries {
+        let value = entry
+            .get("value")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("{baseline_path}: {key} has no numeric value"))?;
+        let higher = match entry.get("direction").and_then(Json::as_str) {
+            Some("higher") | None => true,
+            Some("lower") => false,
+            Some(other) => {
+                anyhow::bail!("{baseline_path}: {key} direction {other:?} (higher|lower)")
+            }
+        };
+        match metrics.get(key.as_str()) {
+            None if strict => {
+                gated += 1;
+                failures.push(format!("{key}: baseline metric missing from this run"));
+            }
+            None => println!("SKIP {key}: not recorded in this run (no --merge)"),
+            Some(&cur) => {
+                gated += 1;
+                let (ok, bound) = if higher {
+                    (cur >= value * (1.0 - tolerance), value * (1.0 - tolerance))
+                } else {
+                    (cur <= value * (1.0 + tolerance), value * (1.0 + tolerance))
+                };
+                println!(
+                    "{} {key}: {cur:.4} vs baseline {value:.4} ({} bound {bound:.4})",
+                    if ok { "PASS" } else { "FAIL" },
+                    if higher { "lower" } else { "upper" },
+                );
+                if !ok {
+                    failures.push(format!(
+                        "{key}: {cur:.4} regressed past the {:.0}% band around {value:.4}",
+                        tolerance * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        failures.is_empty(),
+        "perf gate: {} regression(s):\n  {}",
+        failures.len(),
+        failures.join("\n  ")
+    );
+    println!("perf gate passed: {gated} gated of {} recorded metric(s)", metrics.len());
     Ok(())
 }
 

@@ -1,0 +1,123 @@
+//! The bijective device→card map and its application to a plan.
+
+use crate::cluster::partition::PartitionPlan;
+
+/// A bijective map from logical plan devices onto physical cards.
+///
+/// Devices beyond the card count fold modulo first, exactly like the
+/// scheduler's queue assignment (`device % cards`), so a placement for
+/// an N-card fabric is always a permutation of `0..N`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    map: Vec<usize>,
+}
+
+impl Placement {
+    /// The do-nothing baseline: device i runs on card i.
+    pub fn identity(cards: usize) -> Self {
+        Self { map: (0..cards.max(1)).collect() }
+    }
+
+    /// Wrap an explicit map; it must be a permutation of `0..map.len()`.
+    pub fn from_map(map: Vec<usize>) -> Result<Self, String> {
+        let n = map.len();
+        if n == 0 {
+            return Err("empty placement".into());
+        }
+        let mut seen = vec![false; n];
+        for &c in &map {
+            if c >= n {
+                return Err(format!("card {c} out of range for {n} card(s)"));
+            }
+            if seen[c] {
+                return Err(format!("card {c} assigned twice"));
+            }
+            seen[c] = true;
+        }
+        Ok(Self { map })
+    }
+
+    /// Cards the map covers.
+    pub fn cards(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Physical card of plan device `device`.
+    pub fn card(&self, device: usize) -> usize {
+        self.map[device % self.map.len()]
+    }
+
+    /// The raw device→card permutation.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.map
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.map.iter().enumerate().all(|(i, &c)| i == c)
+    }
+
+    /// Swap the cards of devices `a` and `b` — the local-search move.
+    pub fn swap(&mut self, a: usize, b: usize) {
+        self.map.swap(a, b);
+    }
+
+    /// Re-home a plan onto the placed cards: every shard's device folds
+    /// onto the card count and maps through the permutation. The tile
+    /// carve is untouched, so functional results stay bit-exact; only
+    /// where partials live — and therefore what the reduction traffic
+    /// costs on the fabric — changes. Each tile's reduction home (its
+    /// k-first shard) moves with its shard, so the scheduler's home
+    /// bookkeeping and death re-homing work unchanged on placed plans.
+    pub fn apply_to(&self, plan: &PartitionPlan) -> PartitionPlan {
+        let mut placed = plan.clone();
+        for s in &mut placed.shards {
+            s.device = self.card(s.device);
+        }
+        placed.devices = placed.shards.iter().map(|s| s.device).max().map_or(0, |d| d + 1);
+        placed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::PartitionStrategy;
+    use crate::fabric::Topology;
+    use crate::gemm::{matmul_blocked, Matrix};
+
+    #[test]
+    fn identity_and_validation() {
+        let id = Placement::identity(4);
+        assert!(id.is_identity());
+        assert_eq!(id.cards(), 4);
+        assert_eq!(id.card(6), 2, "devices fold modulo the card count");
+        assert!(Placement::from_map(vec![1, 0, 3, 2]).is_ok());
+        assert!(Placement::from_map(vec![]).is_err());
+        assert!(Placement::from_map(vec![0, 0, 1]).is_err());
+        assert!(Placement::from_map(vec![0, 3]).is_err());
+    }
+
+    #[test]
+    fn apply_preserves_carve_and_moves_homes() {
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 },
+            64,
+            64,
+            64,
+        )
+        .unwrap();
+        // Pair each plane-0 device with its plane-1 partner: 0<->4 etc.
+        let placement = Placement::from_map(vec![0, 2, 4, 6, 1, 3, 5, 7]).unwrap();
+        let placed = placement.apply_to(&plan);
+        placed.validate_cover().unwrap();
+        assert_eq!(placed.devices, 8);
+        assert_eq!(placed.device_to_device_bytes, plan.device_to_device_bytes);
+        // The cross-plane combine drops from 4 ring hops to 1.
+        let ring = Topology::ring(8);
+        assert!(placed.reduction_hop_bytes(&ring) < plan.reduction_hop_bytes(&ring));
+        // Functional results are untouched by the relabeling.
+        let a = Matrix::random(64, 64, 3);
+        let b = Matrix::random(64, 64, 4);
+        assert_eq!(placed.execute_functional(&a, &b).data, matmul_blocked(&a, &b).data);
+    }
+}

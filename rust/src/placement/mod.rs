@@ -1,0 +1,52 @@
+//! Topology-aware placement: map plan devices onto physical cards so
+//! the 2.5D partial-C reduction pays as little for the fabric as the
+//! wiring allows.
+//!
+//! The partitioners emit *logical* device ids (plane-major for 2.5D:
+//! slice `l` owns the `l`-th contiguous p × q plane), and until now the
+//! fleet ran plans with the identity device→card map. On a narrow
+//! fabric that is expensive: at N = 16 on a ring, every cross-plane
+//! partial crosses half the ring and every flow shares links with
+//! every other. PR 3's own sweep concluded a placement optimizer would
+//! buy more than another partitioner — the same communication-avoiding
+//! insight that drives de Fine Licht et al.'s HLS matmul
+//! (arXiv 1912.06526) and the multi-array scale-out of Shen et al.
+//! (arXiv 1803.03790): move the *layout*, not more bytes.
+//!
+//! Three strategies, all returning a bijective device→card
+//! [`Placement`]:
+//!
+//! * **identity** — the baseline every optimizer is scored against.
+//! * **plane-packed** — a greedy packer over the plan's reduction
+//!   demand graph: devices are placed one at a time, each onto the
+//!   free card minimizing demand-weighted hops to the devices already
+//!   placed. For plane-major 2.5D plans the dominant demands are the
+//!   cross-plane tile columns, so each k-slice's p × q plane lands on
+//!   fabric-adjacent cards.
+//! * **local-search** — seeded swap moves (deterministic
+//!   [`crate::util::rng::Xoshiro256`] draws, no wall-clock randomness)
+//!   polishing the better of identity and plane-packed.
+//!
+//! Candidates are scored by the plan's reduction sends **replayed
+//! under the PR-3 contention model** ([`crate::fabric::FabricState`]):
+//! every flow reserves each directed link on its path, so shared links
+//! serialize and disjoint links parallelize — the score is the instant
+//! the last partial drains, not a hop count. Plain hop-bytes
+//! ([`crate::cluster::PartitionPlan::reduction_hop_bytes`]) is the
+//! tie-break, and the optimizer never returns a map whose hop-bytes
+//! exceed identity's (the dominance property the integration tests
+//! check).
+//!
+//! Wiring: [`crate::cluster::ClusterSim`] carries a
+//! [`PlacementStrategy`] (`plan_and_report` places every candidate
+//! plan before simulating it; card deaths re-home reductions through
+//! the scheduler's existing path), `ServiceConfig::placement` exposes
+//! the knob to the service, the `cluster`/`fabric` CLI subcommands
+//! take `--placement`, and [`crate::coordinator::Metrics`] gains
+//! placed-vs-identity hop-byte and search-time gauges.
+
+pub mod map;
+pub mod search;
+
+pub use map::Placement;
+pub use search::{optimize, PlacementReport, PlacementStrategy, DEFAULT_SEED};

@@ -8,6 +8,13 @@
 //! the hot path.
 
 use super::artifact::{ArtifactMeta, Manifest};
+// Written against the `xla` crate's API. That crate is not in the
+// offline registry, so `xla` here aliases the in-tree compile-check
+// shim ([`super::xla_shim`]) — the executor typechecks (CI's feature
+// matrix runs `cargo check --features pjrt`) and `Engine::new` errors
+// at runtime, degrading to the CPU fallback. With the real crate in
+// Cargo.toml, delete this alias.
+use super::xla_shim as xla;
 use crate::gemm::Matrix;
 use std::collections::HashMap;
 use std::path::Path;

@@ -13,7 +13,10 @@
 //!   xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate)
 //!   rejects jax ≥ 0.5 serialized protos (64-bit instruction ids); the
 //!   text parser reassigns ids. Requires adding `xla = "0.1.6"` to
-//!   Cargo.toml (not in the offline registry).
+//!   Cargo.toml (not in the offline registry); without it the feature
+//!   still *compiles* against the `xla_shim` API stand-in (CI's
+//!   feature matrix checks it) and degrades to the CPU fallback at
+//!   runtime.
 //! * **default** — an interpreter [`Engine`] that executes each
 //!   artifact's math through the functional off-chip simulator
 //!   configured with the artifact's recorded tile, so the whole serving
@@ -21,6 +24,9 @@
 //!   the compiled kernel) on a machine without the XLA toolchain.
 
 pub mod artifact;
+
+#[cfg(feature = "pjrt")]
+pub mod xla_shim;
 
 #[cfg(feature = "pjrt")]
 pub mod executor;

@@ -1,8 +1,14 @@
-//! Minimal JSON parser (no `serde`/`serde_json` in the offline registry).
+//! Minimal JSON parser and writer (no `serde`/`serde_json` in the
+//! offline registry).
 //!
 //! Supports the full JSON grammar needed by `artifacts/manifest.json`:
 //! objects, arrays, strings (with escapes), numbers, booleans, null.
 //! Recursive descent, zero dependencies, strict about trailing garbage.
+//! The [`std::fmt::Display`] impl is the writer counterpart — objects
+//! serialize with stable (BTreeMap) key order, and non-finite numbers
+//! (which JSON cannot express) render as `null`. [`write_metrics`] is
+//! the flat name→value convenience the CI perf gate and the `--json`
+//! example flags share.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -66,6 +72,68 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            // JSON has no NaN/Infinity; emit null rather than garbage.
+            Json::Num(n) if !n.is_finite() => f.write_str("null"),
+            Json::Num(n) => write!(f, "{n}"),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(a) => {
+                f.write_str("[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(o) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(", ")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(": ")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for ch in s.chars() {
+        match ch {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+/// Write a flat name→value metrics object to `path` (sorted keys, one
+/// compact JSON object plus a trailing newline) — the interchange
+/// format between the `--json` example flags and the `perfgate` CLI.
+pub fn write_metrics(
+    path: impl AsRef<std::path::Path>,
+    metrics: &BTreeMap<String, f64>,
+) -> std::io::Result<()> {
+    let obj = Json::Obj(metrics.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect());
+    std::fs::write(path, format!("{obj}\n"))
 }
 
 /// Parse error with byte offset.
@@ -314,6 +382,43 @@ mod tests {
         assert_eq!(Json::parse("256").unwrap().as_u64(), Some(256));
         assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
         assert_eq!(Json::parse("-3").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for doc in [
+            "null",
+            "true",
+            "42",
+            "-1.5",
+            r#""a\n\"b\"""#,
+            r#"[1, 2, {"k": "v"}]"#,
+            r#"{"a": [1, 2], "b": null, "c": {"d": false}}"#,
+        ] {
+            let v = Json::parse(doc).unwrap();
+            let round = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(v, round, "{doc}");
+        }
+        // Non-finite numbers degrade to null instead of invalid JSON.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        // Control characters escape as \u sequences.
+        let s = Json::Str("a\u{0001}b".into()).to_string();
+        assert_eq!(s, "\"a\\u0001b\"");
+        assert_eq!(Json::parse(&s).unwrap().as_str(), Some("a\u{0001}b"));
+    }
+
+    #[test]
+    fn metrics_files_parse_back() {
+        let path = std::env::temp_dir().join("systo3d_metrics_test.json");
+        let mut metrics = BTreeMap::new();
+        metrics.insert("cluster_n2_speedup".to_string(), 1.93);
+        metrics.insert("design_G_gflops".to_string(), 2900.0);
+        write_metrics(&path, &metrics).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("cluster_n2_speedup").unwrap().as_f64(), Some(1.93));
+        assert_eq!(doc.get("design_G_gflops").unwrap().as_f64(), Some(2900.0));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -5,6 +5,7 @@ use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
 use systo3d::fabric::{
     CollectiveSchedule, FabricState, ReduceAlgo, Topology, CARD_PORTS,
 };
+use systo3d::placement::{optimize, PlacementStrategy};
 use systo3d::util::proptest::check;
 
 /// Every topology constructor respects the 520N's 4-port budget and
@@ -122,6 +123,43 @@ fn torus_beats_ring_for_25d_at_n16() {
     // The ring's pain is visible in the congestion gauges: its hottest
     // link holds more traffic than the torus's.
     assert!(torus.max_link_busy_seconds < ring.max_link_busy_seconds);
+}
+
+/// Same seed → identical placement → bit-identical `ScheduleOutcome`:
+/// the scheduler's tie-breaks are explicit (device id), so placement
+/// permutations replay deterministically instead of leaning on
+/// iterator-order accidents.
+#[test]
+fn schedules_deterministic_under_placement_permutations() {
+    let d = 8192u64;
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
+    let topology = Topology::ring(8);
+    let s1 = optimize(&plan, &topology, PlacementStrategy::LocalSearch { seed: 11 });
+    let s2 = optimize(&plan, &topology, PlacementStrategy::LocalSearch { seed: 11 });
+    assert_eq!(s1.placement, s2.placement, "same seed, same map");
+    assert_eq!(s1.placed_cost_seconds.to_bits(), s2.placed_cost_seconds.to_bits());
+    assert_eq!(s1.evaluations, s2.evaluations);
+
+    let placed = s1.placement.apply_to(&plan);
+    let sim = ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), topology);
+    let a = sim.simulate(&placed);
+    let b = sim.simulate(&placed);
+    assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
+    assert_eq!(a.steals, b.steals);
+    assert_eq!(a.reduction_seconds.to_bits(), b.reduction_seconds.to_bits());
+    assert_eq!(a.link_busy_seconds.to_bits(), b.link_busy_seconds.to_bits());
+    for (x, y) in a.per_device.iter().zip(&b.per_device) {
+        assert_eq!(x.shards, y.shards);
+        assert_eq!(x.stolen, y.stolen);
+        assert_eq!(x.compute_seconds.to_bits(), y.compute_seconds.to_bits());
+        assert_eq!(x.finish_seconds.to_bits(), y.finish_seconds.to_bits());
+    }
+
+    // A different seed may land on a different map, but never a worse
+    // one than identity.
+    let s3 = optimize(&plan, &topology, PlacementStrategy::LocalSearch { seed: 12 });
+    assert!(s3.placed_cost_seconds <= s3.identity_cost_seconds);
+    assert!(s3.placed_hop_bytes <= s3.identity_hop_bytes);
 }
 
 /// The functional path is untouched by topology: sharded results stay

@@ -1,0 +1,167 @@
+//! Integration: the topology-aware placement optimizer — bijectivity
+//! across every strategy and fabric family, hop-byte dominance over
+//! identity placement for generated 2.5D plans, functional invariance
+//! under arbitrary placements, and survival of the failure path on
+//! placed plans.
+
+use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
+use systo3d::gemm::{matmul_blocked, Matrix};
+use systo3d::placement::{optimize, Placement, PlacementStrategy};
+use systo3d::util::proptest::check;
+
+fn topologies(n: usize) -> [Topology; 4] {
+    [
+        Topology::ring(n),
+        Topology::torus_near_square(n),
+        Topology::full_mesh(n),
+        Topology::fat_tree(n),
+    ]
+}
+
+/// (a) Every strategy returns a bijective device→card map for every
+/// fleet size 2..=32 across all four topology families.
+#[test]
+fn every_strategy_returns_a_bijection() {
+    for n in 2..=32usize {
+        let plan =
+            PartitionPlan::new(PartitionStrategy::auto_summa25d(n as u64), 1024, 1024, 1024)
+                .unwrap();
+        for topology in topologies(n) {
+            for strategy in [
+                PlacementStrategy::Identity,
+                PlacementStrategy::PlanePacked,
+                PlacementStrategy::LocalSearch { seed: 7 },
+            ] {
+                let rep = optimize(&plan, &topology, strategy);
+                let map = rep.placement.as_slice();
+                assert_eq!(
+                    map.len(),
+                    n,
+                    "{} n={n} {}: map covers every card",
+                    topology.name(),
+                    strategy.name()
+                );
+                let mut seen = vec![false; n];
+                for &card in map {
+                    assert!(
+                        card < n && !seen[card],
+                        "{} n={n} {}: card {card} reused or out of range",
+                        topology.name(),
+                        strategy.name()
+                    );
+                    seen[card] = true;
+                }
+            }
+        }
+    }
+}
+
+/// (b) For every generated 2.5D plan, fabric, and optimizing strategy:
+/// the optimized map's `reduction_hop_bytes` never exceed identity's,
+/// and the contention-priced drain never regresses either.
+#[test]
+fn optimized_hop_bytes_never_exceed_identity() {
+    check("placement hop-byte dominance", 40, |g| {
+        let p = g.usize(1, 4) as u64;
+        let q = g.usize(1, 4) as u64;
+        let c = g.usize(2, 4) as u64;
+        let m = g.usize(8, 96) as u64;
+        let k = g.usize(8, 96) as u64;
+        let n = g.usize(8, 96) as u64;
+        let plan = match PartitionPlan::new(PartitionStrategy::Summa25D { p, q, c }, m, k, n) {
+            Ok(plan) => plan,
+            Err(_) => return,
+        };
+        let cards = g.usize(2, 16);
+        let topology = match g.usize(0, 3) {
+            0 => Topology::ring(cards),
+            1 => Topology::torus_near_square(cards),
+            2 => Topology::full_mesh(cards),
+            _ => Topology::fat_tree(cards),
+        };
+        let strategy = if g.bool() {
+            PlacementStrategy::PlanePacked
+        } else {
+            PlacementStrategy::LocalSearch { seed: g.u64(0, u64::MAX / 2) }
+        };
+        let rep = optimize(&plan, &topology, strategy);
+        assert!(
+            rep.placed_hop_bytes <= rep.identity_hop_bytes,
+            "{}: placed {} hop-bytes vs identity {}",
+            topology.name(),
+            rep.placed_hop_bytes,
+            rep.identity_hop_bytes
+        );
+        assert!(rep.placed_cost_seconds <= rep.identity_cost_seconds);
+        // The reported numbers agree with re-pricing the applied plan.
+        let placed = rep.placement.apply_to(&plan);
+        assert_eq!(placed.reduction_hop_bytes(&topology), rep.placed_hop_bytes);
+        assert_eq!(plan.reduction_hop_bytes(&topology), rep.identity_hop_bytes);
+        placed.validate_cover().unwrap();
+    });
+}
+
+/// (c) Functional results are bit-exact under any placement: an
+/// arbitrary permutation only relabels where partials live, never what
+/// gets summed in which order.
+#[test]
+fn functional_results_bit_exact_under_any_placement() {
+    check("placement functional invariance", 15, |g| {
+        let m = g.usize(5, 40);
+        let k = g.usize(5, 40);
+        let n = g.usize(5, 40);
+        let p = g.usize(1, 3) as u64;
+        let q = g.usize(1, 3) as u64;
+        let c = g.usize(1, 3) as u64;
+        let plan = match PartitionPlan::new(
+            PartitionStrategy::Summa25D { p, q, c },
+            m as u64,
+            k as u64,
+            n as u64,
+        ) {
+            Ok(plan) => plan,
+            Err(_) => return,
+        };
+        let cards = g.usize(2, 6);
+        // A seeded Fisher-Yates shuffle: any permutation is a legal map.
+        let mut map: Vec<usize> = (0..cards).collect();
+        for i in (1..cards).rev() {
+            let j = g.rng().next_below((i + 1) as u64) as usize;
+            map.swap(i, j);
+        }
+        let placement = Placement::from_map(map).unwrap();
+        let placed = placement.apply_to(&plan);
+        placed.validate_cover().unwrap();
+        let a = Matrix::random(m, k, 1000 + m as u64);
+        let b = Matrix::random(k, n, 2000 + n as u64);
+        assert_eq!(
+            placed.execute_functional(&a, &b).data,
+            matmul_blocked(&a, &b).data,
+            "placement must not change the scalar addition chains"
+        );
+    });
+}
+
+/// A placed plan goes through the failure machinery unchanged: killing
+/// a card mid-run retries its in-flight shard on a survivor and the
+/// run completes.
+#[test]
+fn placed_plan_survives_card_death() {
+    let d = 8192u64;
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
+    let topology = Topology::ring(8);
+    let rep = optimize(&plan, &topology, PlacementStrategy::default());
+    let placed = rep.placement.apply_to(&plan);
+    let sim = ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), topology);
+    let healthy = sim.simulate(&placed);
+    // Kill one card just after its first DMA launches, so its shard is
+    // guaranteed in flight and must retry on a survivor.
+    let victim = placed.shards[0].device;
+    let mut deaths: Vec<Option<f64>> = vec![None; 8];
+    deaths[victim] = Some(1e-6);
+    let wounded = sim.simulate_with_failures(&placed, &deaths).unwrap();
+    assert!(wounded.retries >= 1, "the dying card's shard must retry: {wounded:?}");
+    assert_eq!(wounded.per_device[victim].lost, 1);
+    assert!(wounded.makespan_seconds > healthy.makespan_seconds * 0.5);
+}
