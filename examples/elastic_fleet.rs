@@ -1,0 +1,154 @@
+//! Elastic-fleet acceptance sweep: drain-to-spare versus
+//! requeue-on-survivors, and watermark growth versus a fixed fleet.
+//!
+//! Scenario (the PR-5 acceptance criterion): a 2.5D plan over 16
+//! design-G cards on a 4 × 4 torus, with one hot spare spliced into
+//! the fabric (the 4-port budget holds). Card 0 dies halfway through
+//! its first compute window. Two recoveries are compared:
+//!
+//! * **drain-to-spare** — the elastic scheduler activates the spare,
+//!   drains the victim's queued and in-flight shards onto it (spare
+//!   choice scored by replaying the remaining reduction sends under
+//!   the link-contention model), and re-homes the victim's reduction
+//!   state there;
+//! * **requeue-on-survivors** — the PR-2 baseline: the same death on
+//!   the same torus with no spare, the lost shard requeued on the
+//!   least-loaded survivor.
+//!
+//! The example asserts the drain **strictly** beats the requeue
+//! makespan, that the spare activated exactly once, and that the
+//! `DrainCompleted` event fires before the final barrier. A second
+//! section overloads a 4-card fleet (8 shards per card against a 2.0
+//! watermark) and asserts watermark growth strictly shortens the
+//! makespan versus the fixed fleet.
+//!
+//! ```sh
+//! cargo run --release --example elastic_fleet [-- --d2 21504 --design G --json OUT.json]
+//! ```
+//!
+//! `--json FILE` additionally writes the gains as a flat JSON object
+//! for the CI perf gate.
+
+use std::collections::BTreeMap;
+use systo3d::cli::Args;
+use systo3d::cluster::{
+    ClusterSim, FaultPlan, Fleet, FleetEvent, PartitionPlan, PartitionStrategy,
+};
+use systo3d::fabric::Topology;
+use systo3d::placement::PlacementStrategy;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let d2 = args.get_u64("d2", 21504).map_err(anyhow::Error::msg)?;
+    let id = args.get_str("design", "G").to_uppercase();
+    let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+
+    println!("=== elastic fleet: drain-to-spare vs requeue-on-survivors ===\n");
+    let n = 16usize;
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(n as u64), d2, d2, d2)
+        .map_err(anyhow::Error::msg)?;
+
+    // 16 actives on a 4x4 torus, one hot spare spliced in.
+    let spared = ClusterSim::with_topology_and_spares(
+        Fleet::homogeneous(n + 1, &id).map_err(anyhow::Error::msg)?,
+        Topology::torus2d(4, 4),
+        1,
+    );
+    let first = plan
+        .shards
+        .iter()
+        .find(|s| s.device == 0)
+        .ok_or_else(|| anyhow::anyhow!("plan has no shard on card 0"))?;
+    let t_die = spared.host.seconds_for_bytes(first.input_bytes())
+        + 0.5 * spared.shard_seconds(0, first);
+    let drained = spared
+        .simulate_elastic(&plan, &FaultPlan::kill(0, t_die))
+        .map_err(anyhow::Error::msg)?;
+
+    // The PR-2 baseline: same torus, same death, no spare.
+    let fixed = ClusterSim::with_topology(
+        Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?,
+        Topology::torus2d(4, 4),
+    )
+    .with_placement(PlacementStrategy::Identity);
+    let requeue = fixed
+        .simulate_with_failures(&plan, &[Some(t_die)])
+        .map_err(anyhow::Error::msg)?;
+
+    let drain_makespan = drained.schedule.makespan_seconds;
+    let drain_gain = requeue.makespan_seconds / drain_makespan;
+    println!(
+        "{:>2} torus  kill card 0 at {t_die:.4} s:\n\
+         \x20  drain-to-spare       {drain_makespan:.4} s  ({} spare activated, \
+         drain {:.4} s)\n\
+         \x20  requeue-on-survivors {:.4} s\n\
+         \x20  gain {drain_gain:.3}x",
+        n, drained.spare_activations, drained.drain_seconds, requeue.makespan_seconds,
+    );
+    for e in &drained.events {
+        println!("    event: {e:?}");
+    }
+
+    // Acceptance: the drain strictly beats the requeue makespan.
+    anyhow::ensure!(
+        drain_makespan < requeue.makespan_seconds,
+        "drain-to-spare must strictly beat requeue-on-survivors: {} vs {}",
+        drain_makespan,
+        requeue.makespan_seconds
+    );
+    anyhow::ensure!(drained.spare_activations == 1, "exactly one spare activates");
+    anyhow::ensure!(drained.drains_completed == 1, "the drain completes");
+    for e in &drained.events {
+        anyhow::ensure!(
+            e.seconds() <= drain_makespan,
+            "event after the final barrier: {e:?}"
+        );
+    }
+    anyhow::ensure!(
+        drained
+            .events
+            .iter()
+            .any(|e| matches!(e, FleetEvent::DrainCompleted { .. })),
+        "DrainCompleted must fire"
+    );
+    metrics.insert("elastic_drain_gain_torus_n16".into(), drain_gain);
+    metrics.insert("elastic_drain_seconds_torus_n16".into(), drained.drain_seconds);
+
+    println!("\n=== elastic fleet: watermark growth vs fixed fleet ===\n");
+    // 32 row bands over 4 cards: 8 pending shards per card against a
+    // 2.0 watermark — the controller attaches its growth budget.
+    let load = PartitionPlan::new(PartitionStrategy::Row1D { devices: 32 }, d2, d2, d2)
+        .map_err(anyhow::Error::msg)?;
+    let small = ClusterSim::new(Fleet::homogeneous(4, &id).map_err(anyhow::Error::msg)?)
+        .with_watermark(Some(2.0));
+    let grown = small.simulate_elastic(&load, &FaultPlan::none()).map_err(anyhow::Error::msg)?;
+    let fixed4 = ClusterSim::new(Fleet::homogeneous(4, &id).map_err(anyhow::Error::msg)?)
+        .simulate(&load);
+    let grow_gain = fixed4.makespan_seconds / grown.schedule.makespan_seconds;
+    println!(
+        "4 cards + watermark 2.0: grew {} card(s), makespan {:.4} s vs fixed {:.4} s \
+         ({grow_gain:.3}x, queued hop-bytes {} -> {})",
+        grown.grown_cards,
+        grown.schedule.makespan_seconds,
+        fixed4.makespan_seconds,
+        grown.post_grow_identity_hop_bytes,
+        grown.post_grow_placed_hop_bytes,
+    );
+    anyhow::ensure!(grown.grown_cards > 0, "the watermark must trigger growth");
+    anyhow::ensure!(
+        grown.schedule.makespan_seconds < fixed4.makespan_seconds,
+        "growth must strictly shorten the makespan: {} vs {}",
+        grown.schedule.makespan_seconds,
+        fixed4.makespan_seconds
+    );
+    metrics.insert("elastic_grow_gain_n4".into(), grow_gain);
+    metrics.insert("elastic_grown_cards_n4".into(), grown.grown_cards as f64);
+
+    if let Some(path) = args.get("json") {
+        systo3d::util::json::write_metrics(path, &metrics)?;
+        println!("\nwrote {} metric(s) to {path}", metrics.len());
+    }
+
+    println!("\nelastic_fleet OK");
+    Ok(())
+}

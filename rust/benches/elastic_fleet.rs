@@ -1,0 +1,71 @@
+//! Bench: the elastic-fleet controller — host cost of a kill + drain
+//! replay (spare scoring included), and the post-growth makespan the
+//! watermark buys under backlog.
+//!
+//! The drain path re-prices the remaining reduction sends per
+//! candidate spare under the link-contention model, so its host cost
+//! scales with spares × queued sends; this bench keeps that honest
+//! while printing the simulated drain and growth numbers the
+//! controller is judged by.
+//!
+//! ```sh
+//! cargo bench --bench elastic_fleet
+//! ```
+
+#[path = "bench_common.rs"]
+mod common;
+
+use systo3d::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
+
+fn main() {
+    let b = common::bench();
+    let d2 = 21504u64;
+
+    common::section("elastic: drain-to-spare on a 4x4 torus + 1 spare (n=16)");
+    let plan =
+        PartitionPlan::new(PartitionStrategy::auto_summa25d(16), d2, d2, d2).expect("plan");
+    let sim = ClusterSim::with_topology_and_spares(
+        Fleet::homogeneous(17, "G").expect("design G"),
+        Topology::torus2d(4, 4),
+        1,
+    );
+    let first = plan.shards.iter().find(|s| s.device == 0).expect("shard on card 0");
+    let t_die =
+        sim.host.seconds_for_bytes(first.input_bytes()) + 0.5 * sim.shard_seconds(0, first);
+    let faults = FaultPlan::kill(0, t_die);
+    let s = b.run("simulate_elastic kill+drain n=16", || {
+        sim.simulate_elastic(&plan, &faults)
+            .expect("survivors remain")
+            .schedule
+            .makespan_seconds
+    });
+    common::report(&s);
+    let out = sim.simulate_elastic(&plan, &faults).expect("survivors remain");
+    println!(
+        "  drain {:.4} s over {} spare(s), makespan {:.4} s, spare-pick gain {:.2}x",
+        out.drain_seconds,
+        out.spare_activations,
+        out.schedule.makespan_seconds,
+        out.drain_placement_gain(),
+    );
+
+    common::section("elastic: watermark growth under backlog (4 cards, watermark 2.0)");
+    let load = PartitionPlan::new(PartitionStrategy::Row1D { devices: 32 }, d2, d2, d2)
+        .expect("plan");
+    let small = ClusterSim::new(Fleet::homogeneous(4, "G").expect("design G"))
+        .with_watermark(Some(2.0));
+    let s = b.run("simulate_elastic grow n=4", || {
+        small.simulate_elastic(&load, &FaultPlan::none()).expect("healthy").grown_cards
+    });
+    common::report(&s);
+    let grown = small.simulate_elastic(&load, &FaultPlan::none()).expect("healthy");
+    let fixed =
+        ClusterSim::new(Fleet::homogeneous(4, "G").expect("design G")).simulate(&load);
+    println!(
+        "  grew {} card(s): post-grow makespan {:.4} s vs fixed {:.4} s",
+        grown.grown_cards,
+        grown.schedule.makespan_seconds,
+        fixed.makespan_seconds,
+    );
+}

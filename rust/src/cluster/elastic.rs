@@ -1,0 +1,1206 @@
+//! Elastic fleets: hot-spare draining, load-triggered fabric growth,
+//! and the deterministic fault plans the chaos harness replays.
+//!
+//! The PR-1..4 fleet was fixed at service start: a dying card's queue
+//! could only drain onto survivors by work-stealing, and a backlog had
+//! nowhere to go. This module makes the fleet elastic along two axes:
+//!
+//! * **Hot spares.** [`FleetController`] keeps K spare cards wired
+//!   into the topology (attached with
+//!   [`crate::fabric::Topology::attach_card`], so the 4-port budget
+//!   holds) but excluded from placement — plan devices fold onto the
+//!   active cards only. When an active card dies, the controller
+//!   replays the PR-3 heal path (kill the card, reroute around it) and
+//!   then **drains** the victim's queued and in-flight shards onto a
+//!   spare instead of blindly requeueing on survivors: every live
+//!   spare is scored by replaying the remaining partial-C reduction
+//!   sends under the PR-4 link-contention model with the victim's
+//!   devices substituted by the candidate — a placement search over
+//!   the amended device→card map — and the cheapest spare wins (ties
+//!   toward the lowest id). The victim's reduction homes move to the
+//!   spare (checkpointed partials replay there), and a
+//!   [`FleetEvent::DrainCompleted`] fires when the last drained shard
+//!   has re-executed — always before the final barrier.
+//! * **Growth.** When the queue-depth watermark is crossed (pending
+//!   shards per live card above [`ElasticConfig::scale_watermark`]),
+//!   the fabric grows: `attach_card` splices a new card in (only
+//!   routes that crossed the spliced cable are invalidated), and the
+//!   queued work — exactly the k-slices that have not started — is
+//!   re-carved over the grown fleet, balancing queue depth first and
+//!   reduction hop-bytes second. [`PartitionPlan::recarve`] is the
+//!   same boundary for whole plans: jobs planned after a growth carve
+//!   to the new N.
+//!
+//! Faults are data, not randomness: a [`FaultPlan`] is an explicit
+//! list of kill / slow-link / spike-queue events at scheduled times,
+//! and [`FaultPlan::seeded`] derives one deterministically from a seed
+//! — the chaos harness in `rust/tests/chaos.rs` replays seeds 0..N
+//! across topologies and asserts no shard is lost, results stay
+//! bit-exact, and every drain completes.
+//!
+//! Determinism: every choice (DMA pick, steal victim, spare pick,
+//! rebalance target) breaks ties on explicit ids, and fault
+//! application order is fixed by (time, plan order) — the same plan
+//! and fault plan replay to a bit-identical [`ElasticOutcome`].
+
+use super::interconnect::Link;
+use super::partition::{PartitionPlan, Shard};
+use super::scheduler::{overlap_seconds, DeviceTrace, ScheduleOutcome};
+use crate::fabric::{FabricState, Topology};
+use crate::util::rng::Xoshiro256;
+use std::collections::{BTreeMap, VecDeque};
+
+/// One scheduled fault of a [`FaultPlan`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// Card `card` dies at `seconds` (in-flight work is lost, its
+    /// queue drains to a spare or survivors, the fabric heals).
+    Kill { card: usize, seconds: f64 },
+    /// The cable between `a` and `b` degrades by `factor` (≥ 1) from
+    /// `seconds` on — a flapping QSFP renegotiating a lower rate. A
+    /// pair with no cable is a no-op.
+    SlowLink { a: usize, b: usize, factor: f64, seconds: f64 },
+    /// Card `card`'s compute engine is held by a background tenant for
+    /// `busy_seconds` starting at `seconds` — a queue-latency spike
+    /// that can push the fleet over the growth watermark.
+    SpikeQueue { card: usize, busy_seconds: f64, seconds: f64 },
+}
+
+impl Fault {
+    /// When the fault fires.
+    pub fn seconds(&self) -> f64 {
+        match *self {
+            Fault::Kill { seconds, .. }
+            | Fault::SlowLink { seconds, .. }
+            | Fault::SpikeQueue { seconds, .. } => seconds,
+        }
+    }
+}
+
+/// A deterministic schedule of faults to replay against one elastic
+/// run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// No faults at all.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// A single card death.
+    pub fn kill(card: usize, seconds: f64) -> Self {
+        Self { faults: vec![Fault::Kill { card, seconds }] }
+    }
+
+    /// Derive a fault schedule from a seed: 1–2 kills on distinct
+    /// cards (never enough to take the whole fleet), up to 2 slow
+    /// links and up to 2 queue spikes, all inside `horizon_seconds`.
+    /// The same (seed, cards, horizon) always yields the same plan.
+    pub fn seeded(seed: u64, cards: usize, horizon_seconds: f64) -> Self {
+        assert!(cards >= 2, "chaos needs at least two cards");
+        assert!(horizon_seconds > 0.0, "empty horizon");
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut faults = Vec::new();
+        let kills = (1 + rng.next_below(2) as usize).min(cards - 1).min(2);
+        let mut victims: Vec<usize> = Vec::with_capacity(kills);
+        while victims.len() < kills {
+            let c = rng.next_below(cards as u64) as usize;
+            if !victims.contains(&c) {
+                victims.push(c);
+            }
+        }
+        for card in victims {
+            let seconds = (0.05 + 0.90 * rng.next_f64()) * horizon_seconds;
+            faults.push(Fault::Kill { card, seconds });
+        }
+        for _ in 0..rng.next_below(3) {
+            let a = rng.next_below(cards as u64) as usize;
+            faults.push(Fault::SlowLink {
+                a,
+                b: (a + 1) % cards,
+                factor: 1.5 + 3.0 * rng.next_f64(),
+                seconds: 0.8 * horizon_seconds * rng.next_f64(),
+            });
+        }
+        for _ in 0..rng.next_below(3) {
+            faults.push(Fault::SpikeQueue {
+                card: rng.next_below(cards as u64) as usize,
+                busy_seconds: (0.2 + rng.next_f64()) * horizon_seconds,
+                seconds: 0.8 * horizon_seconds * rng.next_f64(),
+            });
+        }
+        Self { faults }
+    }
+
+    /// Per-card death times over `cards` cards (earliest kill wins).
+    pub fn deaths(&self, cards: usize) -> Vec<Option<f64>> {
+        let mut deaths: Vec<Option<f64>> = vec![None; cards];
+        for f in &self.faults {
+            if let Fault::Kill { card, seconds } = *f {
+                if card < cards {
+                    let d = &mut deaths[card];
+                    *d = Some(d.map_or(seconds, |t: f64| t.min(seconds)));
+                }
+            }
+        }
+        deaths
+    }
+}
+
+/// Knobs of one elastic run.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticConfig {
+    /// Spare cards wired into the topology but excluded from
+    /// placement; the topology must wire `active + hot_spares` cards.
+    pub hot_spares: usize,
+    /// Queue-depth watermark: when pending shards per live card exceed
+    /// it, the fabric grows by one card (None disables growth).
+    pub scale_watermark: Option<f64>,
+    /// Cards the controller may attach across the run.
+    pub max_growth: usize,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        Self { hot_spares: 1, scale_watermark: None, max_growth: 2 }
+    }
+}
+
+/// What the controller did, when (simulated seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FleetEvent {
+    /// `spare` left the pool to absorb dead card `replaces`.
+    SpareActivated { seconds: f64, spare: usize, replaces: usize },
+    /// The last of `shards` shards drained from `replaces` finished
+    /// re-executing. Fires before the final barrier by construction.
+    DrainCompleted { seconds: f64, spare: usize, replaces: usize, shards: usize },
+    /// The fabric grew by `card` because queue depth per live card hit
+    /// `queue_depth`.
+    FleetGrown { seconds: f64, card: usize, queue_depth: f64 },
+}
+
+impl FleetEvent {
+    /// When the event happened.
+    pub fn seconds(&self) -> f64 {
+        match *self {
+            FleetEvent::SpareActivated { seconds, .. }
+            | FleetEvent::DrainCompleted { seconds, .. }
+            | FleetEvent::FleetGrown { seconds, .. } => seconds,
+        }
+    }
+}
+
+/// Outcome of one elastic run: the plain schedule numbers plus the
+/// controller's event log and gauges.
+#[derive(Clone, Debug)]
+pub struct ElasticOutcome {
+    /// The usual schedule accounting over every card the run ended
+    /// with (actives, spares — activated or not — and grown cards).
+    pub schedule: ScheduleOutcome,
+    /// Controller events in simulation order.
+    pub events: Vec<FleetEvent>,
+    /// Spares that left the pool for a dead card.
+    pub spare_activations: usize,
+    /// Drains whose last shard re-executed (one per activation unless
+    /// the run ended first — asserted equal in the chaos suite).
+    pub drains_completed: usize,
+    /// Σ (drain-complete − spare-activation) spans.
+    pub drain_seconds: f64,
+    /// Contention-priced drain of the remaining reduction sends had
+    /// each death taken the first available spare.
+    pub drain_identity_cost_seconds: f64,
+    /// Same drain under the spare the search chose (≤ identity).
+    pub drain_placed_cost_seconds: f64,
+    /// Cards attached by watermark growth.
+    pub grown_cards: usize,
+    /// Remaining reduction hop-bytes just before each growth rebalance
+    /// (summed over growths).
+    pub post_grow_identity_hop_bytes: u64,
+    /// Same, just after the rebalance placed the queued shards.
+    pub post_grow_placed_hop_bytes: u64,
+    /// Cards the run ended with (active + spares + grown).
+    pub final_cards: usize,
+}
+
+impl ElasticOutcome {
+    /// identity/placed drain cost across all spare picks (1.0 when no
+    /// drain priced, > 1 when the search beat the first-spare policy).
+    pub fn drain_placement_gain(&self) -> f64 {
+        if self.drain_placed_cost_seconds <= 0.0 {
+            return 1.0;
+        }
+        self.drain_identity_cost_seconds / self.drain_placed_cost_seconds
+    }
+
+    /// Fraction of pre-growth reduction hop-bytes the rebalance
+    /// removed (negative when balancing depth cost hops).
+    pub fn post_grow_hop_saving(&self) -> f64 {
+        if self.post_grow_identity_hop_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.post_grow_placed_hop_bytes as f64 / self.post_grow_identity_hop_bytes as f64
+    }
+
+    /// Multi-line human-readable summary (CLI / examples).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "elastic run over {} card(s): makespan {:.4} s, {} retried, {} rerouted\n\
+             spares: {} activated, {} drain(s) completed in {:.4} s total \
+             (spare-pick gain {:.2}x)\n\
+             growth: {} card(s) attached, queued hop-bytes {:.1} -> {:.1} MB\n",
+            self.final_cards,
+            self.schedule.makespan_seconds,
+            self.schedule.retries,
+            self.schedule.reroutes,
+            self.spare_activations,
+            self.drains_completed,
+            self.drain_seconds,
+            self.drain_placement_gain(),
+            self.grown_cards,
+            self.post_grow_identity_hop_bytes as f64 / 1e6,
+            self.post_grow_placed_hop_bytes as f64 / 1e6,
+        );
+        for e in &self.events {
+            out.push_str(&match *e {
+                FleetEvent::SpareActivated { seconds, spare, replaces } => {
+                    format!(
+                        "  {seconds:>10.4} s  spare {spare} activated for dead card {replaces}\n"
+                    )
+                }
+                FleetEvent::DrainCompleted { seconds, spare, replaces, shards } => format!(
+                    "  {seconds:>10.4} s  drain of {shards} shard(s) {replaces} -> {spare} done\n"
+                ),
+                FleetEvent::FleetGrown { seconds, card, queue_depth } => format!(
+                    "  {seconds:>10.4} s  fabric grew card {card} (queue depth {queue_depth:.2})\n"
+                ),
+            });
+        }
+        out
+    }
+}
+
+/// A drain in flight: shards moved off `replaces` that have not yet
+/// re-executed.
+#[derive(Clone, Copy, Debug)]
+struct DrainState {
+    spare: usize,
+    replaces: usize,
+    started: f64,
+    remaining: usize,
+    shards: usize,
+}
+
+/// Per-tile reduction bookkeeping (the elastic twin of the scheduler's
+/// tile state).
+struct TileState {
+    remaining: usize,
+    home: usize,
+    ready: f64,
+    c_bytes: u64,
+}
+
+/// Run `plan` over `active` cards plus the config's hot spares, with
+/// `faults` injected; `topology` must wire `active + hot_spares` cards
+/// and `compute_seconds(card, shard)` prices a shard on a card (cards
+/// grown past the initial count are the caller's to map onto a
+/// design). Errors only when every card is dead with shards
+/// outstanding.
+pub fn run_elastic_schedule(
+    plan: &PartitionPlan,
+    active: usize,
+    host: &Link,
+    topology: &Topology,
+    faults: &FaultPlan,
+    config: ElasticConfig,
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> Result<ElasticOutcome, String> {
+    FleetController::new(plan, active, host, topology, faults, config, compute_seconds)?.run()
+}
+
+/// The elastic scheduler: the PR-2 work-stealing loop with a spare
+/// pool, drain-on-death, and watermark growth wrapped around it.
+pub struct FleetController<'a, F: Fn(usize, &Shard) -> f64> {
+    host: &'a Link,
+    compute_seconds: F,
+    config: ElasticConfig,
+    cards: usize,
+    fabric: FabricState,
+    enabled: Vec<bool>,
+    dead: Vec<bool>,
+    /// Activated spares: their queues hold drained work, pinned — not
+    /// steal targets while the spare lives (otherwise idle survivors
+    /// whose links freed earlier would steal the drain right back and
+    /// the recovery would degenerate to requeue-on-survivors). A dead
+    /// spare's leftover queue becomes stealable like any other.
+    sticky: Vec<bool>,
+    deaths: Vec<Option<f64>>,
+    spare_pool: VecDeque<usize>,
+    queues: Vec<VecDeque<Shard>>,
+    link_free: Vec<f64>,
+    out_free: Vec<f64>,
+    card_free: Vec<f64>,
+    compute_free: Vec<f64>,
+    compute_ends: Vec<Vec<f64>>,
+    traces: Vec<DeviceTrace>,
+    tiles: BTreeMap<(u64, u64), TileState>,
+    attempts: BTreeMap<(u64, u64, u64), usize>,
+    pending: usize,
+    steals: usize,
+    retries: usize,
+    compute_intervals: Vec<(f64, f64)>,
+    send_intervals: Vec<(f64, f64)>,
+    pending_faults: VecDeque<Fault>,
+    events: Vec<FleetEvent>,
+    drains: Vec<DrainState>,
+    drain_of: BTreeMap<(u64, u64, u64), Vec<usize>>,
+    drain_seconds: f64,
+    drain_identity_cost_seconds: f64,
+    drain_placed_cost_seconds: f64,
+    grown: usize,
+    post_grow_identity_hop_bytes: u64,
+    post_grow_placed_hop_bytes: u64,
+}
+
+impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
+    pub fn new(
+        plan: &'a PartitionPlan,
+        active: usize,
+        host: &'a Link,
+        topology: &Topology,
+        faults: &FaultPlan,
+        config: ElasticConfig,
+        compute_seconds: F,
+    ) -> Result<Self, String> {
+        if active == 0 {
+            return Err("empty active fleet".into());
+        }
+        let cards = active + config.hot_spares;
+        if topology.cards != cards {
+            return Err(format!(
+                "topology wires {} card(s) but active {active} + spares {} need {cards}",
+                topology.cards, config.hot_spares
+            ));
+        }
+        let mut queues: Vec<VecDeque<Shard>> = vec![VecDeque::new(); cards];
+        for s in &plan.shards {
+            queues[s.device % active].push_back(*s);
+        }
+        let homes = plan.tile_homes();
+        let mut tiles: BTreeMap<(u64, u64), TileState> = BTreeMap::new();
+        for s in &plan.shards {
+            let t = tiles.entry(s.tile()).or_insert_with(|| TileState {
+                remaining: 0,
+                home: homes[&s.tile()].1 % active,
+                ready: 0.0,
+                c_bytes: s.c_bytes(),
+            });
+            t.remaining += 1;
+        }
+        // Non-kill faults fire in (time, plan-order) sequence; kills
+        // become the per-card death schedule.
+        let mut timed: Vec<(usize, Fault)> = faults
+            .faults
+            .iter()
+            .filter(|f| !matches!(f, Fault::Kill { .. }))
+            .copied()
+            .enumerate()
+            .collect();
+        timed.sort_by(|(i, a), (j, b)| a.seconds().total_cmp(&b.seconds()).then(i.cmp(j)));
+        let mut enabled = vec![true; cards];
+        for e in enabled.iter_mut().take(cards).skip(active) {
+            *e = false;
+        }
+        Ok(Self {
+            host,
+            compute_seconds,
+            config,
+            cards,
+            fabric: FabricState::new(topology.clone()),
+            enabled,
+            dead: vec![false; cards],
+            sticky: vec![false; cards],
+            deaths: faults.deaths(cards),
+            spare_pool: (active..cards).collect(),
+            queues,
+            link_free: vec![0.0; cards],
+            out_free: vec![0.0; cards],
+            card_free: vec![0.0; cards],
+            compute_free: vec![0.0; cards],
+            compute_ends: vec![Vec::new(); cards],
+            traces: vec![DeviceTrace::default(); cards],
+            tiles,
+            attempts: BTreeMap::new(),
+            pending: plan.shards.len(),
+            steals: 0,
+            retries: 0,
+            compute_intervals: Vec::with_capacity(plan.shards.len()),
+            send_intervals: Vec::new(),
+            pending_faults: timed.into_iter().map(|(_, f)| f).collect(),
+            events: Vec::new(),
+            drains: Vec::new(),
+            drain_of: BTreeMap::new(),
+            drain_seconds: 0.0,
+            drain_identity_cost_seconds: 0.0,
+            drain_placed_cost_seconds: 0.0,
+            grown: 0,
+            post_grow_identity_hop_bytes: 0,
+            post_grow_placed_hop_bytes: 0,
+        })
+    }
+
+    fn death(&self, card: usize) -> Option<f64> {
+        self.deaths.get(card).copied().flatten()
+    }
+
+    /// Can `card` still start work at `now`?
+    fn live_at(&self, card: usize, now: f64) -> bool {
+        self.enabled[card]
+            && !self.dead[card]
+            && self.death(card).map_or(true, |td| td > now)
+    }
+
+    /// The next scheduling instant: the earliest link-free time over
+    /// cards that can still start a DMA.
+    fn observe_now(&self) -> f64 {
+        (0..self.cards)
+            .filter(|&c| {
+                self.enabled[c]
+                    && !self.dead[c]
+                    && self.death(c).map_or(true, |td| self.link_free[c] < td)
+            })
+            .map(|c| self.link_free[c])
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Fire every non-kill fault scheduled at or before `now`.
+    fn apply_faults(&mut self, now: f64) {
+        while self.pending_faults.front().map_or(false, |f| f.seconds() <= now) {
+            match self.pending_faults.pop_front().expect("front checked") {
+                Fault::SlowLink { a, b, factor, .. } => {
+                    self.fabric.slow_link(a, b, factor);
+                }
+                Fault::SpikeQueue { card, busy_seconds, seconds } => {
+                    if card < self.cards && self.enabled[card] && !self.dead[card] {
+                        self.compute_free[card] =
+                            self.compute_free[card].max(seconds) + busy_seconds;
+                    }
+                }
+                // Kills live in the death schedule, not the cursor.
+                Fault::Kill { .. } => {}
+            }
+        }
+    }
+
+    /// Mark cards whose death has passed their last possible DMA start
+    /// as dead, heal the fabric around them, and drain their queues —
+    /// heal-then-drain, in ascending card order, so the ordering is
+    /// deterministic even for simultaneous deaths.
+    fn sweep_dead(&mut self) {
+        for d in 0..self.cards {
+            if !self.enabled[d] || self.dead[d] {
+                continue;
+            }
+            let Some(td) = self.death(d) else { continue };
+            if td > self.link_free[d] {
+                continue;
+            }
+            self.dead[d] = true;
+            self.fabric.kill(d);
+            self.drain_to_spare(d, None, td);
+        }
+    }
+
+    /// The partial-C sends still owed by queued (and the just-lost)
+    /// shards, with every occurrence of `victim` — as sender or as
+    /// reduction home — substituted by `substitute`.
+    fn remaining_reduction_sends(
+        &self,
+        victim: usize,
+        substitute: usize,
+        lost: Option<&Shard>,
+    ) -> Vec<(usize, usize, u64)> {
+        let sub = |c: usize| if c == victim { substitute } else { c };
+        let mut sends = Vec::new();
+        for (card, q) in self.queues.iter().enumerate() {
+            for s in q {
+                let home = self.tiles[&s.tile()].home;
+                sends.push((sub(card), sub(home), s.c_bytes()));
+            }
+        }
+        if let Some(s) = lost {
+            let home = self.tiles[&s.tile()].home;
+            sends.push((substitute, sub(home), s.c_bytes()));
+        }
+        sends
+    }
+
+    /// Reduction hop-bytes still queued: Σ c_bytes · hops(queue card,
+    /// tile home) over shards that have not started.
+    fn queued_hop_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        for (card, q) in self.queues.iter().enumerate() {
+            for s in q {
+                let home = self.tiles[&s.tile()].home;
+                if card != home {
+                    total += s.c_bytes() * u64::from(self.fabric.hops(card, home).unwrap_or(0));
+                }
+            }
+        }
+        total
+    }
+
+    /// Drain dead card `victim`'s queued shards (plus `lost`, the
+    /// in-flight shard it just dropped) onto the best live spare:
+    /// candidates are scored by replaying the remaining reduction
+    /// sends under the link-contention model with the victim
+    /// substituted — the placement search over the amended device→card
+    /// map — and the victim's reduction homes move with the work.
+    /// Returns the activated spare, or None when there is nothing to
+    /// drain or no live spare remains (callers fall back to
+    /// requeue-on-survivors).
+    fn drain_to_spare(&mut self, victim: usize, lost: Option<Shard>, now: f64) -> Option<usize> {
+        if self.queues[victim].is_empty() && lost.is_none() {
+            return None;
+        }
+        let pool: Vec<usize> = self
+            .spare_pool
+            .iter()
+            .copied()
+            .filter(|&s| self.death(s).map_or(true, |td| td > now))
+            .collect();
+        if pool.is_empty() {
+            return None;
+        }
+        let mut scratch = FabricState::new(self.fabric.topology.clone());
+        for c in 0..self.cards {
+            if self.dead[c] {
+                scratch.kill(c);
+            }
+        }
+        scratch.kill(victim);
+        let mut first_cost = f64::INFINITY;
+        let mut best: Option<(f64, usize)> = None;
+        for (i, &s) in pool.iter().enumerate() {
+            scratch.reset_occupancy();
+            let mut last = 0.0f64;
+            let mut cost = f64::INFINITY;
+            let mut routable = true;
+            for (src, dst, bytes) in self.remaining_reduction_sends(victim, s, lost.as_ref()) {
+                if src == dst {
+                    continue;
+                }
+                match scratch.send(src, dst, bytes, 0.0) {
+                    Some((_, end)) => last = last.max(end),
+                    None => {
+                        routable = false;
+                        break;
+                    }
+                }
+            }
+            if routable {
+                cost = last;
+            }
+            if i == 0 {
+                first_cost = cost;
+            }
+            let better = match best {
+                None => true,
+                Some((bc, bs)) => cost < bc || (cost == bc && s < bs),
+            };
+            if better {
+                best = Some((cost, s));
+            }
+        }
+        let (best_cost, spare) = best.expect("pool is nonempty");
+        if first_cost.is_finite() && best_cost.is_finite() {
+            self.drain_identity_cost_seconds += first_cost;
+            self.drain_placed_cost_seconds += best_cost;
+        }
+        self.spare_pool.retain(|&s| s != spare);
+        self.enabled[spare] = true;
+        self.sticky[spare] = true;
+        self.link_free[spare] = self.link_free[spare].max(now);
+        self.events.push(FleetEvent::SpareActivated { seconds: now, spare, replaces: victim });
+        let idx = self.drains.len();
+        let moved: Vec<Shard> = self.queues[victim].drain(..).chain(lost).collect();
+        for s in &moved {
+            self.drain_of.entry((s.row0, s.col0, s.k0)).or_default().push(idx);
+        }
+        let count = moved.len();
+        for s in moved {
+            self.queues[spare].push_back(s);
+        }
+        self.drains.push(DrainState {
+            spare,
+            replaces: victim,
+            started: now,
+            remaining: count,
+            shards: count,
+        });
+        // The victim's reduction homes re-home onto the spare: its
+        // checkpointed partials replay there, so surviving senders
+        // target a live card again.
+        for t in self.tiles.values_mut() {
+            if t.home == victim {
+                t.home = spare;
+            }
+        }
+        Some(spare)
+    }
+
+    /// A drained shard finished (re-)executing at `seconds`: settle
+    /// every drain that was waiting on it and emit
+    /// [`FleetEvent::DrainCompleted`] for drains that just emptied.
+    fn settle_drains(&mut self, key: (u64, u64, u64), seconds: f64) {
+        let Some(idxs) = self.drain_of.remove(&key) else { return };
+        for i in idxs {
+            self.drains[i].remaining -= 1;
+            if self.drains[i].remaining == 0 {
+                let d = self.drains[i];
+                self.events.push(FleetEvent::DrainCompleted {
+                    seconds,
+                    spare: d.spare,
+                    replaces: d.replaces,
+                    shards: d.shards,
+                });
+                self.drain_seconds += seconds - d.started;
+            }
+        }
+    }
+
+    /// Attach cards while the queue-depth watermark is exceeded and
+    /// growth budget remains, rebalancing queued work after each.
+    fn maybe_grow(&mut self, now: f64) {
+        let Some(watermark) = self.config.scale_watermark else { return };
+        if !now.is_finite() {
+            return;
+        }
+        while self.grown < self.config.max_growth {
+            let live = (0..self.cards).filter(|&c| self.live_at(c, now)).count();
+            if live == 0 {
+                return;
+            }
+            let depth = self.pending as f64 / live as f64;
+            if depth <= watermark {
+                return;
+            }
+            let report = self.fabric.attach_card();
+            let card = report.card;
+            self.cards += 1;
+            self.enabled.push(true);
+            self.dead.push(false);
+            self.sticky.push(false);
+            self.deaths.push(None);
+            self.queues.push(VecDeque::new());
+            self.link_free.push(now.max(0.0));
+            self.out_free.push(0.0);
+            self.card_free.push(0.0);
+            self.compute_free.push(0.0);
+            self.compute_ends.push(Vec::new());
+            self.traces.push(DeviceTrace::default());
+            self.grown += 1;
+            self.events.push(FleetEvent::FleetGrown { seconds: now, card, queue_depth: depth });
+            self.rebalance_queues(now);
+        }
+    }
+
+    /// Re-carve the queued (not-yet-started) shards over the live
+    /// fleet: balance queue depth first, reduction hop-bytes to each
+    /// shard's tile home second, lowest card id last. In-flight shards
+    /// are untouched — this is the k-slice boundary — and so is work
+    /// pinned to a living spare: a drain is a commitment, and growth
+    /// redistributing it would silently degenerate the recovery into
+    /// requeue-on-survivors mid-drain.
+    fn rebalance_queues(&mut self, now: f64) {
+        let live: Vec<usize> = (0..self.cards).filter(|&c| self.live_at(c, now)).collect();
+        if live.is_empty() {
+            return;
+        }
+        let pre = self.queued_hop_bytes();
+        let mut all: Vec<Shard> = Vec::new();
+        for (c, q) in self.queues.iter_mut().enumerate() {
+            if !self.sticky[c] || self.dead[c] {
+                all.extend(q.drain(..));
+            }
+        }
+        for s in all {
+            let home = self.tiles[&s.tile()].home;
+            let best = live
+                .iter()
+                .copied()
+                .min_by_key(|&c| {
+                    let hop_bytes = if c == home {
+                        0
+                    } else {
+                        self.fabric
+                            .hops(c, home)
+                            .map_or(u64::MAX / 2, |h| s.c_bytes() * u64::from(h))
+                    };
+                    (self.queues[c].len(), hop_bytes, c)
+                })
+                .expect("live is nonempty");
+            self.queues[best].push_back(s);
+        }
+        self.post_grow_identity_hop_bytes += pre;
+        self.post_grow_placed_hop_bytes += self.queued_hop_bytes();
+    }
+
+    /// Run the schedule to completion.
+    pub fn run(mut self) -> Result<ElasticOutcome, String> {
+        while self.pending > 0 {
+            self.sweep_dead();
+            let now = self.observe_now();
+            if now.is_finite() {
+                self.apply_faults(now);
+                self.maybe_grow(now);
+            }
+            // The live card whose host link frees first starts the
+            // next DMA; every tie breaks on the card id. A card with
+            // an empty queue only qualifies when some queue is
+            // stealable — drained work pinned to a living spare is not
+            // (the spare itself qualifies through its own queue).
+            let stealable_exists = (0..self.cards)
+                .any(|v| !self.queues[v].is_empty() && (!self.sticky[v] || self.dead[v]));
+            let pick = (0..self.cards)
+                .filter(|&c| {
+                    self.enabled[c]
+                        && !self.dead[c]
+                        && self.death(c).map_or(true, |td| self.link_free[c] < td)
+                        && (!self.queues[c].is_empty() || stealable_exists)
+                })
+                .min_by(|&a, &b| {
+                    self.link_free[a].total_cmp(&self.link_free[b]).then(a.cmp(&b))
+                });
+            let Some(d) = pick else {
+                return Err(format!(
+                    "all {} card(s) dead with {} shard(s) outstanding",
+                    self.cards, self.pending
+                ));
+            };
+            // Own queue first; otherwise steal from the longest
+            // stealable queue (ties toward the lowest card id) — dead
+            // cards' leftover queues drain this way when no spare was
+            // available.
+            let (shard, stolen) = match self.queues[d].pop_front() {
+                Some(s) => (s, false),
+                None => {
+                    let victim = (0..self.cards)
+                        .filter(|&v| {
+                            !self.queues[v].is_empty() && (!self.sticky[v] || self.dead[v])
+                        })
+                        .max_by(|&a, &b| {
+                            self.queues[a].len().cmp(&self.queues[b].len()).then(b.cmp(&a))
+                        })
+                        .expect("the pick required a stealable queue");
+                    (self.queues[victim].pop_back().expect("victim queue nonempty"), true)
+                }
+            };
+            self.pending -= 1;
+            if stolen {
+                self.steals += 1;
+                self.traces[d].stolen += 1;
+            }
+
+            // Double-buffered staging: task i waits for task i-2's
+            // compute (same gate as the fixed-fleet scheduler).
+            let i = self.traces[d].shards;
+            let gate = if i >= 2 { self.compute_ends[d][i - 2] } else { 0.0 };
+            let xfer = self.host.seconds_for_bytes(shard.input_bytes());
+            let t_start = self.link_free[d].max(gate);
+            let t_end = t_start + xfer;
+            let comp = (self.compute_seconds)(d, &shard);
+            let c_start = self.compute_free[d].max(t_end);
+            let c_end = c_start + comp;
+
+            if let Some(td) = self.death(d) {
+                if c_end > td {
+                    // The card dies with this shard in flight: heal the
+                    // fabric, then drain queue + shard to a spare, or
+                    // fall back to the least-loaded survivor.
+                    self.dead[d] = true;
+                    self.fabric.kill(d);
+                    self.traces[d].lost += 1;
+                    self.traces[d].transfer_seconds += (td.min(t_end) - t_start).max(0.0);
+                    self.traces[d].compute_seconds += (td - c_start).clamp(0.0, comp);
+                    self.link_free[d] = td;
+                    self.compute_free[d] = self.compute_free[d].min(td);
+                    self.retries += 1;
+                    let key = (shard.row0, shard.col0, shard.k0);
+                    let tries = self.attempts.entry(key).or_insert(1);
+                    *tries += 1;
+                    if *tries > self.cards + 1 {
+                        return Err(format!("shard {key:?} failed {tries} times"));
+                    }
+                    // The queued shards are still counted in
+                    // `pending`; only the lost shard re-enters it.
+                    if self.drain_to_spare(d, Some(shard), td).is_some() {
+                        self.pending += 1;
+                        continue;
+                    }
+                    let survivor = (0..self.cards)
+                        .filter(|&v| {
+                            self.enabled[v]
+                                && !self.dead[v]
+                                && self.death(v).map_or(true, |tv| self.link_free[v] < tv)
+                        })
+                        .min_by_key(|&v| (self.queues[v].len(), v));
+                    match survivor {
+                        Some(v) => {
+                            self.queues[v].push_back(shard);
+                            self.pending += 1;
+                        }
+                        None => {
+                            return Err(format!(
+                                "all {} card(s) dead with {} shard(s) outstanding",
+                                self.cards,
+                                self.pending + 1
+                            ))
+                        }
+                    }
+                    continue;
+                }
+            }
+
+            self.link_free[d] = t_end;
+            self.traces[d].transfer_seconds += xfer;
+            self.compute_free[d] = c_end;
+            self.compute_ends[d].push(c_end);
+            self.traces[d].compute_seconds += comp;
+            self.traces[d].shards += 1;
+            self.compute_intervals.push((c_start, c_end));
+
+            // Tile bookkeeping: fabric reduction and final writeback.
+            let tkey = shard.tile();
+            let (home0, c_bytes) = {
+                let t = &self.tiles[&tkey];
+                (t.home, t.c_bytes)
+            };
+            let home_doomed =
+                self.dead[home0] || self.death(home0).map_or(false, |td| td <= c_end);
+            let home = if home_doomed && home0 != d { d } else { home0 };
+            if home != home0 {
+                self.tiles.get_mut(&tkey).expect("tile exists").home = home;
+            }
+            let mut ready = c_end;
+            if d != home {
+                match self.fabric.send_with_deaths(d, home, c_bytes, c_end, &self.deaths) {
+                    Some((s_start, s_end)) => {
+                        self.traces[d].card_seconds += s_end - s_start;
+                        self.card_free[d] = self.card_free[d].max(s_end);
+                        self.send_intervals.push((s_start, s_end));
+                        ready = ready.max(s_end);
+                    }
+                    None => {
+                        // Fabric partitioned: bounce via the host at
+                        // 2x PCIe, serialized with this card's other
+                        // reduction sends.
+                        let bounce = 2.0 * self.host.seconds_for_bytes(c_bytes);
+                        let s_start = self.card_free[d].max(c_end);
+                        let s_end = s_start + bounce;
+                        self.traces[d].card_seconds += bounce;
+                        self.card_free[d] = s_end;
+                        self.send_intervals.push((s_start, s_end));
+                        ready = ready.max(s_end);
+                    }
+                }
+            }
+            let (tile_done, tile_ready, tile_home) = {
+                let t = self.tiles.get_mut(&tkey).expect("tile exists");
+                t.remaining -= 1;
+                t.ready = t.ready.max(ready);
+                (t.remaining == 0, t.ready, t.home)
+            };
+            if tile_done {
+                let wb = self.host.seconds_for_bytes(c_bytes);
+                let mut wb_home = tile_home;
+                let doomed = self.dead[wb_home]
+                    || self
+                        .death(wb_home)
+                        .map_or(false, |td| self.out_free[wb_home].max(tile_ready) + wb > td);
+                if wb_home != d && doomed {
+                    wb_home = d;
+                }
+                let wb_start = self.out_free[wb_home].max(tile_ready);
+                self.out_free[wb_home] = wb_start + wb;
+                self.traces[wb_home].transfer_seconds += wb;
+            }
+            self.settle_drains((shard.row0, shard.col0, shard.k0), c_end);
+        }
+        Ok(self.finish())
+    }
+
+    fn finish(self) -> ElasticOutcome {
+        let mut traces = self.traces;
+        let mut makespan = 0.0f64;
+        for d in 0..self.cards {
+            let finish = self.link_free[d]
+                .max(self.out_free[d])
+                .max(self.compute_free[d])
+                .max(self.card_free[d]);
+            traces[d].finish_seconds = finish;
+            makespan = makespan.max(finish);
+        }
+        let reduction_seconds: f64 = self.send_intervals.iter().map(|&(s, e)| e - s).sum();
+        let reduction_overlap_seconds =
+            overlap_seconds(self.compute_intervals, &self.send_intervals);
+        let spare_activations = self
+            .events
+            .iter()
+            .filter(|e| matches!(e, FleetEvent::SpareActivated { .. }))
+            .count();
+        let drains_completed = self
+            .events
+            .iter()
+            .filter(|e| matches!(e, FleetEvent::DrainCompleted { .. }))
+            .count();
+        ElasticOutcome {
+            schedule: ScheduleOutcome {
+                per_device: traces,
+                makespan_seconds: makespan,
+                steals: self.steals,
+                retries: self.retries,
+                reroutes: self.fabric.reroutes,
+                reduction_seconds,
+                reduction_overlap_seconds,
+                link_busy_seconds: self.fabric.busy_seconds_total(),
+                max_link_busy_seconds: self.fabric.max_busy_seconds(),
+                directed_links: self.fabric.directed_links(),
+            },
+            events: self.events,
+            spare_activations,
+            drains_completed,
+            drain_seconds: self.drain_seconds,
+            drain_identity_cost_seconds: self.drain_identity_cost_seconds,
+            drain_placed_cost_seconds: self.drain_placed_cost_seconds,
+            grown_cards: self.grown,
+            post_grow_identity_hop_bytes: self.post_grow_identity_hop_bytes,
+            post_grow_placed_hop_bytes: self.post_grow_placed_hop_bytes,
+            final_cards: self.cards,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partition::PartitionStrategy;
+    use crate::cluster::scheduler::{run_schedule, run_schedule_with_failures};
+
+    fn plan(strategy: PartitionStrategy, d: u64) -> PartitionPlan {
+        PartitionPlan::new(strategy, d, d, d).unwrap()
+    }
+
+    fn host() -> Link {
+        Link::pcie_gen3_x8()
+    }
+
+    fn flat(_: usize, s: &Shard) -> f64 {
+        s.flops() as f64 / 3.0e12
+    }
+
+    fn spares(n: usize) -> ElasticConfig {
+        ElasticConfig { hot_spares: n, scale_watermark: None, max_growth: 0 }
+    }
+
+    /// A ring over `active` cards with `k` spares spliced in.
+    fn ring_with_spares(active: usize, k: usize) -> Topology {
+        let mut t = Topology::ring(active);
+        for _ in 0..k {
+            t.attach_card();
+        }
+        t
+    }
+
+    #[test]
+    fn healthy_run_matches_the_fixed_scheduler_bit_for_bit() {
+        let p = plan(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192);
+        let topo = Topology::ring(8);
+        let a = run_schedule(&p, 8, &host(), &topo, flat);
+        let b = run_elastic_schedule(&p, 8, &host(), &topo, &FaultPlan::none(), spares(0), flat)
+            .unwrap();
+        assert_eq!(a.makespan_seconds.to_bits(), b.schedule.makespan_seconds.to_bits());
+        assert_eq!(a.steals, b.schedule.steals);
+        assert_eq!(a.reduction_seconds.to_bits(), b.schedule.reduction_seconds.to_bits());
+        assert_eq!(a.link_busy_seconds.to_bits(), b.schedule.link_busy_seconds.to_bits());
+        for (x, y) in a.per_device.iter().zip(&b.schedule.per_device) {
+            assert_eq!(x.shards, y.shards);
+            assert_eq!(x.compute_seconds.to_bits(), y.compute_seconds.to_bits());
+            assert_eq!(x.finish_seconds.to_bits(), y.finish_seconds.to_bits());
+        }
+        assert!(b.events.is_empty());
+        assert_eq!(b.final_cards, 8);
+    }
+
+    #[test]
+    fn spares_stay_idle_on_a_healthy_fleet() {
+        let p = plan(PartitionStrategy::Row1D { devices: 2 }, 4096);
+        let topo = ring_with_spares(2, 1);
+        let out =
+            run_elastic_schedule(&p, 2, &host(), &topo, &FaultPlan::none(), spares(1), flat)
+                .unwrap();
+        assert_eq!(out.schedule.per_device[2].shards, 0, "spare must not be placed");
+        assert!(out.events.is_empty());
+        assert_eq!(out.spare_activations, 0);
+    }
+
+    #[test]
+    fn midflight_death_drains_to_the_spare_and_beats_requeue() {
+        let p = plan(PartitionStrategy::Row1D { devices: 2 }, 4096);
+        let dma = host().seconds_for_bytes(p.shards[0].input_bytes());
+        let faults = FaultPlan::kill(0, dma + 0.5);
+        let topo = ring_with_spares(2, 1);
+        let out =
+            run_elastic_schedule(&p, 2, &host(), &topo, &faults, spares(1), |_, _| 1.0).unwrap();
+        assert_eq!(out.spare_activations, 1);
+        assert_eq!(out.drains_completed, 1);
+        assert_eq!(out.schedule.retries, 1);
+        assert_eq!(out.schedule.per_device[0].lost, 1);
+        assert!(out.schedule.per_device[2].shards >= 1, "spare re-executed the loss");
+        assert!(out.drain_seconds > 0.0);
+        // Every event — drain completion included — precedes the barrier.
+        for e in &out.events {
+            assert!(e.seconds() <= out.schedule.makespan_seconds + 1e-12, "{e:?}");
+        }
+        // Drain-to-spare strictly beats requeue-on-survivors: the
+        // spare re-executes the loss while the survivor runs its own.
+        let requeue = run_schedule_with_failures(
+            &p,
+            2,
+            &host(),
+            &Topology::ring(2),
+            &[Some(dma + 0.5), None],
+            |_, _| 1.0,
+        )
+        .unwrap();
+        assert!(
+            out.schedule.makespan_seconds < requeue.makespan_seconds,
+            "drain {} vs requeue {}",
+            out.schedule.makespan_seconds,
+            requeue.makespan_seconds
+        );
+    }
+
+    #[test]
+    fn dead_from_start_drains_its_whole_queue() {
+        let p = plan(PartitionStrategy::Row1D { devices: 4 }, 4096);
+        let topo = ring_with_spares(2, 1);
+        let out = run_elastic_schedule(
+            &p,
+            2,
+            &host(),
+            &topo,
+            &FaultPlan::kill(0, 0.0),
+            spares(1),
+            flat,
+        )
+        .unwrap();
+        assert_eq!(out.schedule.retries, 0, "nothing was in flight at t=0");
+        assert_eq!(out.spare_activations, 1);
+        assert_eq!(out.drains_completed, 1);
+        assert_eq!(out.schedule.per_device[0].shards, 0);
+        assert!(out.schedule.per_device[2].shards >= 1);
+        let done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+        assert_eq!(done, p.shards.len());
+        // The drain event log names the victim and the spare.
+        assert!(matches!(
+            out.events[0],
+            FleetEvent::SpareActivated { spare: 2, replaces: 0, .. }
+        ));
+    }
+
+    #[test]
+    fn watermark_growth_attaches_cards_and_shortens_the_tail() {
+        let p = plan(PartitionStrategy::Row1D { devices: 8 }, 8192);
+        let topo = Topology::ring(2);
+        let config =
+            ElasticConfig { hot_spares: 0, scale_watermark: Some(1.5), max_growth: 2 };
+        let out =
+            run_elastic_schedule(&p, 2, &host(), &topo, &FaultPlan::none(), config, flat)
+                .unwrap();
+        assert_eq!(out.grown_cards, 2, "depth 4.0 > 1.5 twice under the budget");
+        assert_eq!(out.final_cards, 4);
+        let grown: Vec<_> = out
+            .events
+            .iter()
+            .filter(|e| matches!(e, FleetEvent::FleetGrown { .. }))
+            .collect();
+        assert_eq!(grown.len(), 2);
+        assert!(
+            out.schedule.per_device[2].shards + out.schedule.per_device[3].shards > 0,
+            "grown cards took work: {:?}",
+            out.schedule.per_device
+        );
+        let done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+        assert_eq!(done, p.shards.len());
+        let fixed = run_schedule(&p, 2, &host(), &topo, flat);
+        assert!(
+            out.schedule.makespan_seconds < fixed.makespan_seconds,
+            "grown {} vs fixed {}",
+            out.schedule.makespan_seconds,
+            fixed.makespan_seconds
+        );
+    }
+
+    #[test]
+    fn seeded_fault_plans_are_deterministic_and_bounded() {
+        let a = FaultPlan::seeded(3, 8, 10.0);
+        assert_eq!(a, FaultPlan::seeded(3, 8, 10.0));
+        assert_ne!(a, FaultPlan::seeded(4, 8, 10.0));
+        let kills: Vec<usize> = a
+            .faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::Kill { card, .. } => Some(*card),
+                _ => None,
+            })
+            .collect();
+        assert!((1..=2).contains(&kills.len()));
+        let mut distinct = kills.clone();
+        distinct.dedup();
+        assert_eq!(distinct.len(), kills.len(), "kills hit distinct cards");
+        for f in &a.faults {
+            assert!(f.seconds() > 0.0 && f.seconds() < 10.0, "{f:?}");
+        }
+        let deaths = a.deaths(8);
+        assert_eq!(deaths.iter().flatten().count(), kills.len());
+        // Two kills on one card keep the earliest.
+        let twice = FaultPlan {
+            faults: vec![
+                Fault::Kill { card: 1, seconds: 5.0 },
+                Fault::Kill { card: 1, seconds: 2.0 },
+            ],
+        };
+        assert_eq!(twice.deaths(4)[1], Some(2.0));
+    }
+
+    #[test]
+    fn chaotic_runs_replay_bit_identically() {
+        let p = plan(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 4096);
+        let topo = {
+            let mut t = Topology::torus2d(4, 2);
+            t.attach_card();
+            t
+        };
+        let faults = FaultPlan::seeded(7, 8, 2.0);
+        let config =
+            ElasticConfig { hot_spares: 1, scale_watermark: Some(4.0), max_growth: 1 };
+        let run = || {
+            run_elastic_schedule(&p, 8, &host(), &topo, &faults, config, |_, _| 0.5).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.events, b.events);
+        assert_eq!(
+            a.schedule.makespan_seconds.to_bits(),
+            b.schedule.makespan_seconds.to_bits()
+        );
+        assert_eq!(a.schedule.retries, b.schedule.retries);
+        assert_eq!(a.drain_seconds.to_bits(), b.drain_seconds.to_bits());
+        assert!(a.drain_placement_gain() >= 1.0);
+        let done: usize = a.schedule.per_device.iter().map(|t| t.shards).sum();
+        assert_eq!(done, p.shards.len(), "no shard lost under chaos");
+        assert!(a.render().contains("elastic run"));
+    }
+}

@@ -13,6 +13,7 @@
 //! fabric, and the resulting [`ClusterReport`] carries link-utilization
 //! and reduction-overlap gauges alongside the compute numbers.
 
+use super::elastic::{run_elastic_schedule, ElasticConfig, ElasticOutcome, Fault, FaultPlan};
 use super::interconnect::Link;
 use super::partition::{PartitionPlan, PartitionStrategy, Shard};
 use super::scheduler::{run_schedule, run_schedule_with_failures, ScheduleOutcome};
@@ -290,6 +291,14 @@ pub struct ClusterSim {
     /// simulating it; [`Self::simulate`] prices a plan exactly as
     /// given). Defaults to the seeded local search.
     pub placement: PlacementStrategy,
+    /// Trailing fleet cards held as hot spares: wired into the
+    /// topology but excluded from placement — plans carve over
+    /// [`Self::active_devices`] cards and [`Self::simulate_elastic`]
+    /// drains dead cards' work onto the spares.
+    pub hot_spares: usize,
+    /// Queue-depth watermark for elastic growth (pending shards per
+    /// live card; None disables growth).
+    pub scale_watermark: Option<f64>,
 }
 
 impl ClusterSim {
@@ -313,7 +322,40 @@ impl ClusterSim {
             host: Link::pcie_gen3_x8(),
             topology,
             placement: PlacementStrategy::default(),
+            hot_spares: 0,
+            scale_watermark: None,
         }
+    }
+
+    /// Fleet whose trailing `hot_spares` cards are spares: the default
+    /// fabric is built over the active cards and the spares are spliced
+    /// in with [`Topology::attach_card`], so they are wired (the 4-port
+    /// budget holds) but excluded from placement.
+    pub fn with_spares(fleet: Fleet, hot_spares: usize) -> Self {
+        assert!(hot_spares < fleet.len().max(1), "at least one card must stay active");
+        let active = fleet.len().max(1) - hot_spares;
+        Self::with_topology_and_spares(fleet, Topology::auto(active), hot_spares)
+    }
+
+    /// As [`Self::with_spares`] on an explicit fabric: `topology` wires
+    /// the active cards and each spare is attached to it.
+    pub fn with_topology_and_spares(
+        fleet: Fleet,
+        mut topology: Topology,
+        hot_spares: usize,
+    ) -> Self {
+        assert!(hot_spares < fleet.len().max(1), "at least one card must stay active");
+        assert_eq!(
+            topology.cards + hot_spares,
+            fleet.len().max(1),
+            "topology must wire the fleet's active cards"
+        );
+        for _ in 0..hot_spares {
+            topology.attach_card();
+        }
+        let mut sim = Self::with_topology(fleet, topology);
+        sim.hot_spares = hot_spares;
+        sim
     }
 
     /// Same sim with a different placement strategy (builder style).
@@ -322,15 +364,32 @@ impl ClusterSim {
         self
     }
 
+    /// Same sim with a growth watermark (builder style): pending
+    /// shards per live card above it grow the fabric during
+    /// [`Self::simulate_elastic`].
+    pub fn with_watermark(mut self, scale_watermark: Option<f64>) -> Self {
+        self.scale_watermark = scale_watermark;
+        self
+    }
+
+    /// Cards plans carve over (the fleet minus its hot spares).
+    pub fn active_devices(&self) -> usize {
+        self.fleet.len().saturating_sub(self.hot_spares).max(1)
+    }
+
     /// Optimize the device→card placement of `plan` for this sim's
     /// fabric under the sim's strategy. Returns the re-homed plan plus
     /// the search report — or the plan untouched and `None` when the
-    /// strategy is identity or the plan has no reduction traffic to
-    /// optimize. Card deaths during a later run re-home reductions
-    /// through the scheduler's existing path, placed or not.
+    /// strategy is identity, the plan has no reduction traffic to
+    /// optimize, or the sim holds hot spares (the bijective search
+    /// would move live work onto the spare cards; spared sims instead
+    /// re-place on drain, see [`Self::simulate_elastic`]). Card deaths
+    /// during a later run re-home reductions through the scheduler's
+    /// existing path, placed or not.
     pub fn place_plan(&self, plan: &PartitionPlan) -> (PartitionPlan, Option<PlacementReport>) {
         if matches!(self.placement, PlacementStrategy::Identity)
             || plan.device_to_device_bytes == 0
+            || self.hot_spares > 0
         {
             return (plan.clone(), None);
         }
@@ -361,10 +420,31 @@ impl ClusterSim {
         placement: Option<&PlacementReport>,
     ) -> ClusterReport {
         assert!(!self.fleet.is_empty(), "empty fleet");
-        let outcome =
+        let outcome = if self.hot_spares == 0 {
             run_schedule(plan, self.fleet.len(), &self.host, &self.topology, |d, s| {
                 self.shard_seconds(d, s)
-            });
+            })
+        } else {
+            // Spares are wired but must not take planned work: the
+            // elastic scheduler keeps them out of the queues (growth
+            // off for parity with the fixed schedule).
+            let config = ElasticConfig {
+                hot_spares: self.hot_spares,
+                scale_watermark: None,
+                max_growth: 0,
+            };
+            run_elastic_schedule(
+                plan,
+                self.active_devices(),
+                &self.host,
+                &self.topology,
+                &FaultPlan::none(),
+                config,
+                |d, s| self.shard_seconds(d % self.fleet.len(), s),
+            )
+            .expect("a healthy fleet cannot run out of cards")
+            .schedule
+        };
         self.report(plan, outcome, placement)
     }
 
@@ -382,16 +462,42 @@ impl ClusterSim {
     }
 
     /// Timing run with injected device deaths: `deaths[d]` is the time
-    /// at which fleet device `d` dies (missing / `None` = healthy). A
-    /// dying card's in-flight shard requeues on a survivor and its
-    /// queued shards drain via work-stealing; the run errors only when
-    /// every card is dead with shards outstanding.
+    /// at which fleet device `d` dies (missing / `None` = healthy).
+    /// Without hot spares, a dying card's in-flight shard requeues on
+    /// a survivor and its queued shards drain via work-stealing; with
+    /// spares, the victim's work drains onto a spare instead (the
+    /// elastic path). The run errors only when every card is dead with
+    /// shards outstanding.
     pub fn simulate_with_failures(
         &self,
         plan: &PartitionPlan,
         deaths: &[Option<f64>],
     ) -> Result<ClusterReport, String> {
         assert!(!self.fleet.is_empty(), "empty fleet");
+        if self.hot_spares > 0 {
+            let faults = FaultPlan {
+                faults: deaths
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(card, d)| d.map(|seconds| Fault::Kill { card, seconds }))
+                    .collect(),
+            };
+            let config = ElasticConfig {
+                hot_spares: self.hot_spares,
+                scale_watermark: None,
+                max_growth: 0,
+            };
+            let outcome = run_elastic_schedule(
+                plan,
+                self.active_devices(),
+                &self.host,
+                &self.topology,
+                &faults,
+                config,
+                |d, s| self.shard_seconds(d % self.fleet.len(), s),
+            )?;
+            return Ok(self.report(plan, outcome.schedule, None));
+        }
         let outcome = run_schedule_with_failures(
             plan,
             self.fleet.len(),
@@ -401,6 +507,34 @@ impl ClusterSim {
             |d, s| self.shard_seconds(d, s),
         )?;
         Ok(self.report(plan, outcome, None))
+    }
+
+    /// Replay a plan against an explicit [`FaultPlan`] with the sim's
+    /// hot spares and growth watermark: the fabric heals around dead
+    /// cards, their queued and in-flight shards drain onto the
+    /// contention-cheapest spare, and the fabric grows when the
+    /// queue-depth watermark is crossed. Cards grown past the fleet
+    /// reuse the fleet's designs cyclically (`card % fleet.len()`).
+    pub fn simulate_elastic(
+        &self,
+        plan: &PartitionPlan,
+        faults: &FaultPlan,
+    ) -> Result<ElasticOutcome, String> {
+        assert!(!self.fleet.is_empty(), "empty fleet");
+        let config = ElasticConfig {
+            hot_spares: self.hot_spares,
+            scale_watermark: self.scale_watermark,
+            ..ElasticConfig::default()
+        };
+        run_elastic_schedule(
+            plan,
+            self.active_devices(),
+            &self.host,
+            &self.topology,
+            faults,
+            config,
+            |d, s| self.shard_seconds(d % self.fleet.len(), s),
+        )
     }
 
     /// Timing + functional run (small sizes only).
@@ -415,11 +549,12 @@ impl ClusterSim {
         (report, c)
     }
 
-    /// Candidate plans for this fleet size, one per strategy family,
-    /// dropping candidates whose shard set duplicates an earlier one
-    /// (e.g. `Summa25D { c: 1 }` degenerates to the 2D grid).
+    /// Candidate plans for this fleet's **active** card count (spares
+    /// are excluded from placement), one per strategy family, dropping
+    /// candidates whose shard set duplicates an earlier one (e.g.
+    /// `Summa25D { c: 1 }` degenerates to the 2D grid).
     pub fn candidate_plans(&self, m: u64, k: u64, n: u64) -> Vec<PartitionPlan> {
-        let n_dev = self.fleet.len() as u64;
+        let n_dev = self.active_devices() as u64;
         let strategies = [
             PartitionStrategy::Row1D { devices: n_dev },
             PartitionStrategy::auto_grid2d(n_dev),
@@ -465,6 +600,19 @@ impl ClusterSim {
         self.plan_and_report(m, k, n).map(|(p, _)| p)
     }
 
+    /// Build a [`ClusterReport`] from an elastic outcome's schedule:
+    /// cards grown past the fleet are reported as `grownN` entries
+    /// reusing the fleet's designs cyclically (mirroring
+    /// [`Self::simulate_elastic`]'s timing closure). The
+    /// elastic-specific gauges stay on the [`ElasticOutcome`].
+    pub fn elastic_report(
+        &self,
+        plan: &PartitionPlan,
+        outcome: &ElasticOutcome,
+    ) -> ClusterReport {
+        self.report(plan, outcome.schedule.clone(), None)
+    }
+
     fn report(
         &self,
         plan: &PartitionPlan,
@@ -475,23 +623,35 @@ impl ClusterSim {
         let per_device: Vec<DeviceReport> = outcome
             .per_device
             .iter()
-            .zip(&self.fleet.devices)
-            .map(|(t, dev)| DeviceReport {
-                id: dev.id.clone(),
-                shards: t.shards,
-                stolen: t.stolen,
-                lost: t.lost,
-                transfer_seconds: t.transfer_seconds,
-                compute_seconds: t.compute_seconds,
-                card_seconds: t.card_seconds,
-                finish_seconds: t.finish_seconds,
-                utilization: if makespan > 0.0 { t.compute_seconds / makespan } else { 0.0 },
-                peak_gflops: dev.design.peak_gflops(),
+            .enumerate()
+            .map(|(i, t)| {
+                // Cards beyond the fleet were attached by watermark
+                // growth; they reuse the fleet's designs cyclically.
+                let dev = &self.fleet.devices[i % self.fleet.len()];
+                let id = if i < self.fleet.len() {
+                    dev.id.clone()
+                } else {
+                    format!("grown{i}")
+                };
+                DeviceReport {
+                    id,
+                    shards: t.shards,
+                    stolen: t.stolen,
+                    lost: t.lost,
+                    transfer_seconds: t.transfer_seconds,
+                    compute_seconds: t.compute_seconds,
+                    card_seconds: t.card_seconds,
+                    finish_seconds: t.finish_seconds,
+                    utilization: if makespan > 0.0 { t.compute_seconds / makespan } else { 0.0 },
+                    peak_gflops: dev.design.peak_gflops(),
+                }
             })
             .collect();
         let effective_gflops =
             flop_count(plan.m, plan.n, plan.k) as f64 / makespan.max(f64::MIN_POSITIVE) / 1e9;
-        let aggregate_peak_gflops = self.fleet.aggregate_peak_gflops();
+        let aggregate_peak_gflops: f64 = (0..per_device.len().max(1))
+            .map(|i| self.fleet.devices[i % self.fleet.len()].design.peak_gflops())
+            .sum();
         // Hop-pricing the simulated plan is the placed side of the
         // gauge pair; with no search the identity side equals it.
         let placed_hop_bytes = plan.reduction_hop_bytes(&self.topology);
@@ -509,7 +669,7 @@ impl ClusterSim {
         ClusterReport {
             strategy: plan.strategy.name(),
             topology: self.topology.name(),
-            devices: self.fleet.len(),
+            devices: per_device.len(),
             m: plan.m,
             k: plan.k,
             n: plan.n,
@@ -727,6 +887,51 @@ mod tests {
         assert!(r.overlapped_makespan_seconds <= r.barrier_makespan_seconds + 1e-9);
         assert!(r.reduction_seconds > 0.0);
         assert_eq!(r.timelines.len(), 8);
+    }
+
+    #[test]
+    fn spared_sim_excludes_spares_until_a_death() {
+        use crate::cluster::elastic::{FaultPlan, FleetEvent};
+        // 4 active design-G cards + 1 hot spare spliced into the fabric.
+        let sim = ClusterSim::with_spares(Fleet::homogeneous(5, "G").unwrap(), 1);
+        assert_eq!(sim.active_devices(), 4);
+        assert_eq!(sim.topology.cards, 5);
+        // Plans carve over the active cards only; the placement search
+        // steps aside (it would move live work onto the spare).
+        let plans = sim.candidate_plans(8192, 8192, 8192);
+        assert!(plans.iter().all(|p| p.devices <= 4), "{plans:?}");
+        // A k-split plan (real reduction traffic) still skips the
+        // bijective search while spares are wired.
+        let plan = PartitionPlan::new(
+            PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 },
+            8192,
+            8192,
+            8192,
+        )
+        .unwrap();
+        assert!(plan.device_to_device_bytes > 0);
+        assert!(sim.place_plan(&plan).1.is_none());
+        // Healthy: the spare idles through a plain simulate.
+        let healthy = sim.simulate(&plan);
+        assert_eq!(healthy.per_device[4].shards, 0);
+        assert_eq!(healthy.retries, 0);
+        // Death: the elastic path drains onto the spare.
+        let first = plan.shards.iter().find(|s| s.device == 0).unwrap();
+        let t_die = sim.host.seconds_for_bytes(first.input_bytes())
+            + 0.5 * sim.shard_seconds(0, first);
+        let out = sim.simulate_elastic(&plan, &FaultPlan::kill(0, t_die)).unwrap();
+        assert_eq!(out.spare_activations, 1);
+        assert_eq!(out.drains_completed, 1);
+        assert!(out.schedule.per_device[4].shards >= 1, "{:?}", out.schedule.per_device);
+        assert!(out
+            .events
+            .iter()
+            .any(|e| matches!(e, FleetEvent::SpareActivated { spare: 4, replaces: 0, .. })));
+        // simulate_with_failures routes through the same drain path
+        // and reports the spare's work in the ClusterReport.
+        let rep = sim.simulate_with_failures(&plan, &[Some(t_die)]).unwrap();
+        assert!(rep.per_device[4].shards >= 1);
+        assert_eq!(rep.retries, 1);
     }
 
     #[test]

@@ -25,6 +25,16 @@
 //!   a dead card's queue drains through the stealing path, and the
 //!   fabric heals around its downed links
 //!   ([`scheduler::run_schedule_with_failures`]).
+//! * [`elastic`] — the fleet is no longer fixed at service start:
+//!   [`FleetController`] keeps hot-spare cards wired into the topology
+//!   but out of placement, drains a dying card's queued and in-flight
+//!   shards onto the contention-cheapest spare (a placement search
+//!   over the amended device→card map, after the fabric heals), and
+//!   grows the fabric with [`crate::fabric::Topology::attach_card`]
+//!   when the queue-depth watermark is crossed — re-carving the
+//!   not-yet-started k-slices over the grown fleet. Faults (kill /
+//!   slow-link / spike-queue) are explicit, seedable [`FaultPlan`]
+//!   data, replayed deterministically by the chaos harness.
 //! * [`fleet`] — N (possibly heterogeneous Table-I) designs and the
 //!   [`ClusterSim`] front door producing a [`ClusterReport`]
 //!   (per-device utilization, critical path, effective TFLOPS vs.
@@ -38,11 +48,16 @@
 //! blocked accumulation in ascending-k order, so sharded results are
 //! bit-exact against [`crate::gemm::matmul_blocked`].
 
+pub mod elastic;
 pub mod fleet;
 pub mod interconnect;
 pub mod partition;
 pub mod scheduler;
 
+pub use elastic::{
+    run_elastic_schedule, ElasticConfig, ElasticOutcome, Fault, FaultPlan, FleetController,
+    FleetEvent,
+};
 pub use fleet::{ClusterDevice, ClusterReport, ClusterSim, DeviceReport, Fleet};
 pub use interconnect::{Interconnect, Link};
 pub use partition::{PartitionPlan, PartitionStrategy, Shard};

@@ -357,6 +357,27 @@ impl PartitionPlan {
         total
     }
 
+    /// Re-carve the same GEMM for a fleet that grew (or shrank) to
+    /// `devices` cards, staying in the plan's strategy family: a 1D
+    /// carve stays 1D, grids and 2.5D carves re-run their `auto_*`
+    /// factorization at the new count. The elastic-fleet controller
+    /// applies this at the next k-slice boundary after a
+    /// [`crate::fabric::Topology::attach_card`] growth — in-flight
+    /// shards finish under the old carve, subsequent work uses the new
+    /// one — and functional results stay bit-exact either way (every
+    /// carve reduces k-ascending per tile).
+    pub fn recarve(&self, devices: u64) -> Result<Self, String> {
+        if devices == 0 {
+            return Err("cannot recarve onto zero devices".into());
+        }
+        let strategy = match self.strategy {
+            PartitionStrategy::Row1D { .. } => PartitionStrategy::Row1D { devices },
+            PartitionStrategy::Grid2D { .. } => PartitionStrategy::auto_grid2d(devices),
+            PartitionStrategy::Summa25D { .. } => PartitionStrategy::auto_summa25d(devices),
+        };
+        Self::new(strategy, self.m, self.k, self.n)
+    }
+
     /// Check the shards tile the m × n × k iteration space exactly:
     /// every C tile's k ranges are contiguous [0, k), the tiles cover
     /// the C plane without overlap, and the FLOP total matches.
@@ -567,6 +588,24 @@ mod tests {
         let grid =
             PartitionPlan::new(PartitionStrategy::Grid2D { p: 2, q: 2 }, 64, 64, 64).unwrap();
         assert!(grid.reduction_sends(4).is_empty());
+    }
+
+    #[test]
+    fn recarve_scales_the_strategy_family() {
+        let plan =
+            PartitionPlan::new(PartitionStrategy::auto_summa25d(8), 128, 128, 128).unwrap();
+        let grown = plan.recarve(12).unwrap();
+        assert_eq!(grown.strategy, PartitionStrategy::auto_summa25d(12));
+        assert_eq!((grown.m, grown.k, grown.n), (plan.m, plan.k, plan.n));
+        grown.validate_cover().unwrap();
+        // Functional results agree bit-for-bit across the re-carve.
+        let a = Matrix::random(128, 128, 51);
+        let b = Matrix::random(128, 128, 52);
+        assert_eq!(plan.execute_functional(&a, &b).data, grown.execute_functional(&a, &b).data);
+        // 1D stays 1D; zero devices is a clean error.
+        let row = PartitionPlan::new(PartitionStrategy::Row1D { devices: 4 }, 64, 64, 64).unwrap();
+        assert_eq!(row.recarve(6).unwrap().strategy, PartitionStrategy::Row1D { devices: 6 });
+        assert!(row.recarve(0).is_err());
     }
 
     #[test]

@@ -131,8 +131,9 @@ struct TileState {
     c_bytes: u64,
 }
 
-/// Seconds of `sends` overlapping the union of `compute` intervals.
-fn overlap_seconds(mut compute: Vec<(f64, f64)>, sends: &[(f64, f64)]) -> f64 {
+/// Seconds of `sends` overlapping the union of `compute` intervals
+/// (shared with the elastic scheduler in [`super::elastic`]).
+pub(crate) fn overlap_seconds(mut compute: Vec<(f64, f64)>, sends: &[(f64, f64)]) -> f64 {
     compute.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut merged: Vec<(f64, f64)> = Vec::new();
     for (s, e) in compute {

@@ -47,6 +47,22 @@ pub struct Metrics {
     pub placement_placed_hop_bytes: AtomicU64,
     /// Host time spent searching placements, in microseconds.
     pub placement_search_us: AtomicU64,
+    /// Hot spares activated for dead cards across elastic runs.
+    pub elastic_spare_activations: AtomicU64,
+    /// Drains whose last shard re-executed (pairs with
+    /// `elastic_spare_activations`; a gap means a run ended mid-drain,
+    /// which the chaos suite asserts never happens).
+    pub elastic_drains_completed: AtomicU64,
+    /// Σ (drain-complete − spare-activation) spans, in microseconds.
+    pub elastic_drain_us: AtomicU64,
+    /// Cards attached by watermark growth across elastic runs.
+    pub elastic_grown_cards: AtomicU64,
+    /// Remaining reduction hop-bytes observed just before each growth
+    /// rebalance (gauge pair with `post_grow_placed_hop_bytes`: the
+    /// post-grow placement delta).
+    pub post_grow_identity_hop_bytes: AtomicU64,
+    /// Same, after the rebalance placed the queued shards.
+    pub post_grow_placed_hop_bytes: AtomicU64,
     /// Requests served by the Strassen route.
     pub strassen_jobs: AtomicU64,
     /// Histogram of chosen recursion depths: bucket i counts depth-i
@@ -100,6 +116,36 @@ impl Metrics {
             .fetch_add(report.placement_placed_hop_bytes, Ordering::Relaxed);
         self.placement_search_us
             .fetch_add((report.placement_search_seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Record one elastic run's controller gauges (spare activations,
+    /// drain spans, growth, the post-grow placement delta). The
+    /// schedule-level numbers travel through [`Self::record_cluster`]
+    /// when the caller builds a `ClusterReport` from the same run.
+    pub fn record_elastic(&self, outcome: &crate::cluster::ElasticOutcome) {
+        self.elastic_spare_activations
+            .fetch_add(outcome.spare_activations as u64, Ordering::Relaxed);
+        self.elastic_drains_completed
+            .fetch_add(outcome.drains_completed as u64, Ordering::Relaxed);
+        self.elastic_drain_us
+            .fetch_add((outcome.drain_seconds * 1e6) as u64, Ordering::Relaxed);
+        self.elastic_grown_cards.fetch_add(outcome.grown_cards as u64, Ordering::Relaxed);
+        self.post_grow_identity_hop_bytes
+            .fetch_add(outcome.post_grow_identity_hop_bytes, Ordering::Relaxed);
+        self.post_grow_placed_hop_bytes
+            .fetch_add(outcome.post_grow_placed_hop_bytes, Ordering::Relaxed);
+    }
+
+    /// Fraction of pre-growth reduction hop-bytes the elastic
+    /// rebalance removed across recorded runs (0.0 before the first
+    /// growth; negative when balancing queue depth cost hops).
+    pub fn post_grow_hop_saving(&self) -> f64 {
+        let identity = self.post_grow_identity_hop_bytes.load(Ordering::Relaxed) as f64;
+        let placed = self.post_grow_placed_hop_bytes.load(Ordering::Relaxed) as f64;
+        if identity == 0.0 {
+            return 0.0;
+        }
+        1.0 - placed / identity
     }
 
     /// Fraction of identity-placement hop-bytes the placement
@@ -197,6 +243,14 @@ impl Metrics {
                 .load(Ordering::Relaxed),
             placement_placed_hop_bytes: self.placement_placed_hop_bytes.load(Ordering::Relaxed),
             placement_search_us: self.placement_search_us.load(Ordering::Relaxed),
+            elastic_spare_activations: self.elastic_spare_activations.load(Ordering::Relaxed),
+            elastic_drains_completed: self.elastic_drains_completed.load(Ordering::Relaxed),
+            elastic_drain_us: self.elastic_drain_us.load(Ordering::Relaxed),
+            elastic_grown_cards: self.elastic_grown_cards.load(Ordering::Relaxed),
+            post_grow_identity_hop_bytes: self
+                .post_grow_identity_hop_bytes
+                .load(Ordering::Relaxed),
+            post_grow_placed_hop_bytes: self.post_grow_placed_hop_bytes.load(Ordering::Relaxed),
             strassen_jobs: self.strassen_jobs.load(Ordering::Relaxed),
             strassen_depths: std::array::from_fn(|i| {
                 self.strassen_depths[i].load(Ordering::Relaxed)
@@ -227,6 +281,12 @@ pub struct MetricsSnapshot {
     pub placement_identity_hop_bytes: u64,
     pub placement_placed_hop_bytes: u64,
     pub placement_search_us: u64,
+    pub elastic_spare_activations: u64,
+    pub elastic_drains_completed: u64,
+    pub elastic_drain_us: u64,
+    pub elastic_grown_cards: u64,
+    pub post_grow_identity_hop_bytes: u64,
+    pub post_grow_placed_hop_bytes: u64,
     pub strassen_jobs: u64,
     pub strassen_depths: [u64; 4],
     pub strassen_eff_vs_peak_ppm: u64,
@@ -325,6 +385,27 @@ mod tests {
         assert!(s.placement_placed_hop_bytes <= s.placement_identity_hop_bytes);
         let saving = m.placement_hop_saving();
         assert!(saving > 0.0 && saving < 1.0, "{saving}");
+    }
+
+    #[test]
+    fn elastic_gauges_accumulate_drains() {
+        use crate::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
+        let m = Metrics::new();
+        assert_eq!(m.post_grow_hop_saving(), 0.0);
+        let sim = ClusterSim::with_spares(Fleet::homogeneous(3, "G").unwrap(), 1);
+        let plan =
+            PartitionPlan::new(PartitionStrategy::Row1D { devices: 2 }, 4096, 4096, 4096)
+                .unwrap();
+        let first = &plan.shards[0];
+        let t_die =
+            sim.host.seconds_for_bytes(first.input_bytes()) + 0.5 * sim.shard_seconds(0, first);
+        let out = sim.simulate_elastic(&plan, &FaultPlan::kill(0, t_die)).unwrap();
+        m.record_elastic(&out);
+        let s = m.snapshot();
+        assert_eq!(s.elastic_spare_activations, 1);
+        assert_eq!(s.elastic_drains_completed, 1);
+        assert!(s.elastic_drain_us > 0);
+        assert_eq!(s.elastic_grown_cards, 0);
     }
 
     #[test]

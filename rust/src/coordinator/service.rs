@@ -9,7 +9,7 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::router::{Route, Router};
 use crate::blocked::{OffchipSim, SimReport};
-use crate::cluster::{ClusterReport, ClusterSim, Fleet};
+use crate::cluster::{ClusterReport, ClusterSim, FaultPlan, Fleet};
 use crate::fabric::Topology;
 use crate::gemm::{matmul_blocked, Matrix};
 use crate::perfmodel::flop_count;
@@ -74,13 +74,21 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Batching window: how long the ingress loop waits to fill a batch.
     pub batch_window: Duration,
-    /// Cards in the sharded route's simulated fleet (design G).
+    /// Active cards in the sharded route's simulated fleet (design G).
     pub cluster_devices: usize,
-    /// Card fabric of the fleet; None = [`Topology::auto`] (full mesh
-    /// while the 4-port budget lasts, then a near-square torus). A
-    /// topology whose card count disagrees with `cluster_devices` is
-    /// rejected at start.
+    /// Card fabric of the **active** fleet; None = [`Topology::auto`]
+    /// (full mesh while the 4-port budget lasts, then a near-square
+    /// torus). Hot spares are attached on top. A topology whose card
+    /// count disagrees with `cluster_devices` is rejected at start.
     pub cluster_topology: Option<Topology>,
+    /// Hot-spare cards wired into the fabric but excluded from
+    /// placement: a dying card's queued and in-flight shards drain
+    /// onto a spare instead of requeueing on survivors (see
+    /// [`crate::cluster::elastic`]).
+    pub hot_spares: usize,
+    /// Queue-depth watermark for elastic fabric growth (pending shards
+    /// per live card; None keeps the fleet fixed).
+    pub scale_watermark: Option<f64>,
     /// Device→card placement the sharded route's planner applies to
     /// reduction-carrying plans before simulating them (identity
     /// disables the optimizer; the default is the seeded local
@@ -102,6 +110,8 @@ impl Default for ServiceConfig {
             batch_window: Duration::from_millis(2),
             cluster_devices: 4,
             cluster_topology: None,
+            hot_spares: 0,
+            scale_watermark: None,
             placement: PlacementStrategy::default(),
             strassen: StrassenConfig::default(),
             bucket_shapes: false,
@@ -132,7 +142,7 @@ impl GemmService {
         if let Some(t) = &config.cluster_topology {
             anyhow::ensure!(
                 t.cards == cluster_devices,
-                "cluster_topology wires {} card(s) but cluster_devices is {}",
+                "cluster_topology wires {} card(s) but cluster_devices (active) is {}",
                 t.cards,
                 cluster_devices
             );
@@ -176,14 +186,17 @@ impl GemmService {
         let router =
             Router::new(engine.as_ref().map(|e| &e.manifest)).with_strassen(config.strassen);
         // The sharded route's fleet: design-G cards (design G is always
-        // fitted, so this cannot fail) on the configured fabric.
-        let fleet = Fleet::homogeneous(config.cluster_devices.max(1), "G")
-            .expect("design G in the fitted catalog");
+        // fitted, so this cannot fail) on the configured fabric, with
+        // the hot spares wired in on top of the active cards.
+        let fleet =
+            Fleet::homogeneous(config.cluster_devices.max(1) + config.hot_spares, "G")
+                .expect("design G in the fitted catalog");
         let cluster = match config.cluster_topology.clone() {
-            Some(t) => ClusterSim::with_topology(fleet, t),
-            None => ClusterSim::new(fleet),
+            Some(t) => ClusterSim::with_topology_and_spares(fleet, t, config.hot_spares),
+            None => ClusterSim::with_spares(fleet, config.hot_spares),
         }
-        .with_placement(config.placement);
+        .with_placement(config.placement)
+        .with_watermark(config.scale_watermark);
         let batcher = if config.bucket_shapes {
             // Bucket to the fleet design's blocking-padded extents.
             Batcher::with_bucketing(config.max_batch, cluster.fleet.devices[0].design.blocking)
@@ -312,7 +325,18 @@ impl GemmService {
         metrics: &Metrics,
     ) -> (Matrix, Option<ClusterReport>) {
         match cluster.plan_and_report(a.rows as u64, a.cols as u64, b.cols as u64) {
-            Some((plan, report)) => {
+            Some((plan, mut report)) => {
+                // Elastic fleets: replay the winning plan through the
+                // elastic scheduler — hot spares wired, growth
+                // watermark armed — so a backlog that crosses the
+                // watermark grows the fabric in the reported makespan
+                // and the elastic gauges accumulate.
+                if cluster.hot_spares > 0 || cluster.scale_watermark.is_some() {
+                    if let Ok(out) = cluster.simulate_elastic(&plan, &FaultPlan::none()) {
+                        metrics.record_elastic(&out);
+                        report = cluster.elastic_report(&plan, &out);
+                    }
+                }
                 let c = plan.execute_functional(a, b);
                 metrics.record_cluster(&report);
                 (c, Some(report))
@@ -563,6 +587,66 @@ mod tests {
             ..Default::default()
         });
         assert!(bad.is_err());
+    }
+
+    #[test]
+    fn spared_service_keeps_results_bit_exact() {
+        // Hot spares ride along in the fleet: plans still carve over
+        // the active cards, the spare idles while healthy, and the
+        // functional answer is untouched.
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            cluster_devices: 4,
+            hot_spares: 1,
+            scale_watermark: Some(64.0),
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(1025, 1025, 61);
+        let b = Matrix::random(1025, 1025, 62);
+        let want = matmul_blocked(&a, &b);
+        let resp = svc.submit_sync(GemmRequest { id: 11, a, b, chain: None, error_budget: None });
+        assert_eq!(resp.route, Route::Sharded);
+        let rep = &resp.cluster[0];
+        assert_eq!(rep.devices, 5, "4 active + 1 wired spare");
+        assert_eq!(rep.per_device[4].shards, 0, "spare idles while healthy");
+        assert_eq!(resp.result.unwrap().data, want.data);
+        // A fabric sized to active + spare (instead of active) is
+        // rejected at start, like any card-count mismatch.
+        let bad = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            cluster_devices: 4,
+            hot_spares: 1,
+            cluster_topology: Some(Topology::ring(5)),
+            ..Default::default()
+        });
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn watermark_grows_the_sharded_fleet() {
+        // 2 active cards against a 0.5 queue-depth watermark: the
+        // elastic replay attaches its growth budget, the response
+        // report covers the grown cards, and the gauges accumulate.
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            cluster_devices: 2,
+            scale_watermark: Some(0.5),
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(1025, 1025, 71);
+        let b = Matrix::random(1025, 1025, 72);
+        let want = matmul_blocked(&a, &b);
+        let resp = svc.submit_sync(GemmRequest { id: 12, a, b, chain: None, error_budget: None });
+        assert_eq!(resp.route, Route::Sharded);
+        let rep = &resp.cluster[0];
+        assert!(rep.devices > 2, "the watermark must grow the fleet: {}", rep.devices);
+        assert!(rep.per_device.iter().skip(2).any(|d| d.id.starts_with("grown")));
+        assert_eq!(resp.result.unwrap().data, want.data);
+        let snap = svc.metrics.snapshot();
+        assert!(snap.elastic_grown_cards > 0);
+        assert_eq!(snap.elastic_spare_activations, 0, "healthy run: growth only");
     }
 
     #[test]

@@ -43,6 +43,13 @@
 //! flat interconnect, and the `fabric` CLI subcommand plus
 //! `examples/fabric_topology_sweep.rs` sweep fleet sizes across
 //! topologies.
+//!
+//! Since the elastic-fleet layer ([`crate::cluster::elastic`]) the
+//! fabric also **grows**: [`Topology::attach_card`] splices a card
+//! into a built graph within the port budget (hot spares and
+//! watermark growth both use it), [`RouteTable::attach`] patches only
+//! the routes the splice invalidated, and [`FabricState::slow_link`]
+//! models degraded cables for the chaos harness.
 
 pub mod collective;
 pub mod overlap;
@@ -52,4 +59,4 @@ pub mod topology;
 pub use collective::{CollectiveSchedule, Flow, ReduceAlgo};
 pub use overlap::{pipeline_schedule, Activity, CardTimeline, OverlapReport, Segment};
 pub use routing::{FabricState, RouteTable, HOP_LATENCY_S};
-pub use topology::{FabricEdge, Topology, TopologyKind, CARD_PORTS};
+pub use topology::{AttachReport, FabricEdge, Topology, TopologyKind, CARD_PORTS};

@@ -19,11 +19,47 @@
 //! links proceed in parallel — exactly the congestion the 2.5D
 //! reduction traffic has to negotiate on narrow topologies.
 
-use super::topology::Topology;
+use super::topology::{AttachReport, Topology};
 use crate::cluster::interconnect::Link;
 
 /// Store-and-forward latency charged per link traversed.
 pub const HOP_LATENCY_S: f64 = 1.0e-6;
+
+/// One source's BFS predecessor row over the live fabric.
+fn bfs_row(topology: &Topology, dead: &[bool], src: usize) -> Vec<Option<usize>> {
+    let is_dead = |v: usize| dead.get(v).copied().unwrap_or(false);
+    let mut prev = vec![None; topology.nodes];
+    if is_dead(src) {
+        return prev;
+    }
+    let mut seen = vec![false; topology.nodes];
+    seen[src] = true;
+    let mut queue = std::collections::VecDeque::from([src]);
+    while let Some(v) = queue.pop_front() {
+        for &(w, _) in topology.neighbors(v) {
+            if !seen[w] && !is_dead(w) {
+                seen[w] = true;
+                prev[w] = Some(v);
+                queue.push_back(w);
+            }
+        }
+    }
+    prev
+}
+
+/// Hop count of `row`'s src→dst path (None when unreachable).
+fn row_hops(row: &[Option<usize>], src: usize, dst: usize) -> Option<u32> {
+    if src == dst {
+        return Some(0);
+    }
+    let mut hops = 0;
+    let mut v = dst;
+    while v != src {
+        v = (*row.get(v)?)?;
+        hops += 1;
+    }
+    Some(hops)
+}
 
 /// All-pairs shortest-path predecessors over the live fabric.
 #[derive(Clone, Debug)]
@@ -40,27 +76,63 @@ impl RouteTable {
     /// Routes that detour around dead cards (switches never die;
     /// `dead` may be shorter than the node count).
     pub fn avoiding(topology: &Topology, dead: &[bool]) -> Self {
+        let prev = (0..topology.nodes).map(|src| bfs_row(topology, dead, src)).collect();
+        Self { prev }
+    }
+
+    /// Patch the table for a fabric grown by a non-structural
+    /// [`Topology::attach_card`]: the new node sits at
+    /// `topology.nodes - 1` and `spliced` names the card cable it was
+    /// spliced into (None when the new card got fresh cables only).
+    /// Only rows whose shortest-path tree crossed the spliced cable are
+    /// re-run; every other row keeps its paths verbatim and just
+    /// learns how to reach the new node through its nearest live
+    /// neighbor. Returns how many existing rows were rebuilt.
+    pub fn attach(
+        &mut self,
+        topology: &Topology,
+        dead: &[bool],
+        spliced: Option<(usize, usize)>,
+    ) -> usize {
         let n = topology.nodes;
+        let new = n - 1;
         let is_dead = |v: usize| dead.get(v).copied().unwrap_or(false);
-        let mut prev = vec![vec![None; n]; n];
-        for src in 0..n {
+        let mut rebuilt = 0;
+        for src in 0..self.prev.len() {
+            let row = &mut self.prev[src];
+            // A tree contains undirected edge (a, b) iff one endpoint
+            // is the other's predecessor; only those rows lost a path.
+            // A row where exactly one splice endpoint was reachable
+            // gains paths (the new card bridges a dead-card partition)
+            // and is re-run too.
+            let used = spliced.is_some_and(|(a, b)| {
+                row[b] == Some(a)
+                    || row[a] == Some(b)
+                    || (row_hops(row, src, a).is_some() != row_hops(row, src, b).is_some())
+            });
+            if used {
+                *row = bfs_row(topology, dead, src);
+                rebuilt += 1;
+                continue;
+            }
+            row.resize(n, None);
             if is_dead(src) {
                 continue;
             }
-            let mut seen = vec![false; n];
-            seen[src] = true;
-            let mut queue = std::collections::VecDeque::from([src]);
-            while let Some(v) = queue.pop_front() {
-                for &(w, _) in topology.neighbors(v) {
-                    if !seen[w] && !is_dead(w) {
-                        seen[w] = true;
-                        prev[src][w] = Some(v);
-                        queue.push_back(w);
-                    }
-                }
-            }
+            // Splicing never shortens a surviving path (a detour via
+            // the new degree-2 node re-enters through its neighbors),
+            // so the old rows stay shortest; the new node hangs off
+            // its nearest live neighbor, ties toward the lowest id.
+            let best = topology
+                .neighbors(new)
+                .iter()
+                .filter(|&&(nb, _)| !is_dead(nb))
+                .filter_map(|&(nb, _)| row_hops(row, src, nb).map(|h| (h, nb)))
+                .min();
+            row[new] = best.map(|(_, nb)| nb);
         }
-        Self { prev }
+        self.prev.push(bfs_row(topology, dead, new));
+        rebuilt
     }
 
     /// Node sequence src..=dst of a shortest live path, None when
@@ -93,6 +165,14 @@ pub struct FabricState {
     /// Per undirected edge, free times for the a→b and b→a directions.
     free: Vec<[f64; 2]>,
     busy: Vec<[f64; 2]>,
+    /// Per undirected edge, a ≥ 1.0 slowdown factor (degraded cable —
+    /// the chaos harness's slow-link fault). Both directions slow.
+    slow: Vec<f64>,
+    /// Busy seconds carried over from edges retired by a structural
+    /// re-trunk ([`Self::attach_card`] on a fat tree), so the
+    /// utilization gauges survive fabric growth.
+    retired_busy_seconds: f64,
+    retired_max_busy_seconds: f64,
     lane: Link,
     /// Sends that aborted mid-flight on a dying transit card and took a
     /// detour.
@@ -109,8 +189,58 @@ impl FabricState {
             routes,
             free: vec![[0.0; 2]; edges],
             busy: vec![[0.0; 2]; edges],
+            slow: vec![1.0; edges],
+            retired_busy_seconds: 0.0,
+            retired_max_busy_seconds: 0.0,
             lane: Link::qsfp28_100g(),
             reroutes: 0,
+        }
+    }
+
+    /// Grow the fabric by one card (see [`Topology::attach_card`]).
+    /// Splices patch the route table incrementally — the spliced
+    /// cable's link state stays with its surviving half and only routes
+    /// that crossed it are rebuilt; a structural fat-tree re-trunk
+    /// rebuilds routes wholesale and retires the old edges' busy totals
+    /// into the aggregate gauges. Slow-link factors apply to cables, so
+    /// a re-trunk (which replaces every cable) clears them.
+    pub fn attach_card(&mut self) -> AttachReport {
+        let report = self.topology.attach_card();
+        self.dead.push(false);
+        let edges = self.topology.edges.len();
+        if report.structural {
+            self.retired_busy_seconds += self.busy.iter().map(|b| b[0] + b[1]).sum::<f64>();
+            self.retired_max_busy_seconds = self.max_busy_seconds();
+            self.free = vec![[0.0; 2]; edges];
+            self.busy = vec![[0.0; 2]; edges];
+            self.slow = vec![1.0; edges];
+            self.routes = RouteTable::avoiding(&self.topology, &self.dead);
+        } else {
+            self.free.resize(edges, [0.0; 2]);
+            self.busy.resize(edges, [0.0; 2]);
+            self.slow.resize(edges, 1.0);
+            self.routes.attach(&self.topology, &self.dead, report.spliced_edge);
+        }
+        report
+    }
+
+    /// Degrade the cable between `a` and `b` by `factor` (≥ 1.0 slows,
+    /// exactly like a flapping QSFP renegotiating a lower rate). Both
+    /// directions slow; factors compound multiplicatively. Returns
+    /// false when no such cable exists.
+    pub fn slow_link(&mut self, a: usize, b: usize, factor: f64) -> bool {
+        assert!(factor >= 1.0, "slow factor must be >= 1.0");
+        let found = self
+            .topology
+            .edges
+            .iter()
+            .position(|e| (e.a, e.b) == (a, b) || (e.a, e.b) == (b, a));
+        match found {
+            Some(e) => {
+                self.slow[e] *= factor;
+                true
+            }
+            None => false,
         }
     }
 
@@ -142,6 +272,8 @@ impl FabricState {
     /// state. Lets a caller replay many what-if schedules — the
     /// placement search prices thousands of candidate maps — on one
     /// instance instead of cloning the n² route table per replay.
+    /// Fault state — dead cards and slow-link factors — survives the
+    /// reset, exactly like the route tables.
     pub fn reset_occupancy(&mut self) {
         for f in &mut self.free {
             *f = [0.0; 2];
@@ -149,6 +281,8 @@ impl FabricState {
         for b in &mut self.busy {
             *b = [0.0; 2];
         }
+        self.retired_busy_seconds = 0.0;
+        self.retired_max_busy_seconds = 0.0;
         self.reroutes = 0;
     }
 
@@ -195,9 +329,11 @@ impl FabricState {
         loop {
             self.sweep_deaths(ready, deaths);
             let nodes = self.routes.node_path(src, dst)?;
-            // Directed links along the path, and the narrowest trunk.
+            // Directed links along the path, the narrowest trunk, and
+            // the slowest (degraded) cable.
             let mut links: Vec<(usize, usize)> = Vec::with_capacity(nodes.len() - 1);
             let mut w_min = u32::MAX;
+            let mut slow_max = 1.0f64;
             for pair in nodes.windows(2) {
                 let e = self
                     .topology
@@ -208,10 +344,11 @@ impl FabricState {
                     .expect("route table path follows edges");
                 let dir = usize::from(self.topology.edges[e].a != pair[0]);
                 w_min = w_min.min(self.topology.edges[e].width);
+                slow_max = slow_max.max(self.slow[e]);
                 links.push((e, dir));
             }
             let start = links.iter().fold(ready, |t, &(e, d)| t.max(self.free[e][d]));
-            let dur = self.transfer_seconds(bytes, (nodes.len() - 1) as u32, w_min);
+            let dur = slow_max * self.transfer_seconds(bytes, (nodes.len() - 1) as u32, w_min);
             let end = start + dur;
             // A transit card dying inside [ready, end) aborts the step.
             let transit_death = nodes[1..nodes.len() - 1]
@@ -245,14 +382,19 @@ impl FabricState {
         2 * self.topology.edges.len()
     }
 
-    /// Total busy seconds over all directed links.
+    /// Total busy seconds over all directed links (including links
+    /// retired by structural fabric growth).
     pub fn busy_seconds_total(&self) -> f64 {
-        self.busy.iter().map(|b| b[0] + b[1]).sum()
+        self.retired_busy_seconds + self.busy.iter().map(|b| b[0] + b[1]).sum::<f64>()
     }
 
-    /// Busy seconds of the hottest directed link.
+    /// Busy seconds of the hottest directed link (including links
+    /// retired by structural fabric growth).
     pub fn max_busy_seconds(&self) -> f64 {
-        self.busy.iter().flatten().fold(0.0f64, |m, &b| m.max(b))
+        self.busy
+            .iter()
+            .flatten()
+            .fold(self.retired_max_busy_seconds, |m, &b| m.max(b))
     }
 }
 
@@ -354,6 +496,72 @@ mod tests {
         // again over the detour.
         assert!((start - 0.5 * dur).abs() < 1e-12, "{start}");
         assert!((end - (0.5 * dur + dur)).abs() < 1e-9, "{end}");
+    }
+
+    #[test]
+    fn attach_rebuilds_only_rows_that_crossed_the_splice() {
+        let mut topo = Topology::ring(8);
+        let mut routes = RouteTable::new(&topo);
+        let rep = topo.attach_card();
+        let rebuilt = routes.attach(&topo, &[], rep.spliced_edge);
+        // Only some of the 8 old rows routed over the wrap cable.
+        assert!(rebuilt > 0 && rebuilt < 8, "rebuilt {rebuilt}");
+        // The patched table agrees hop-for-hop with a full rebuild.
+        let fresh = RouteTable::new(&topo);
+        for a in 0..topo.nodes {
+            for b in 0..topo.nodes {
+                assert_eq!(routes.hops(a, b), fresh.hops(a, b), "{a}->{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fabric_attach_keeps_occupancy_and_dead_state() {
+        let mut f = FabricState::new(Topology::ring(4));
+        let bytes = 100_000_000;
+        f.send(0, 1, bytes, 0.0).unwrap();
+        let busy_before = f.busy_seconds_total();
+        f.kill(2);
+        let rep = f.attach_card();
+        assert_eq!(rep.card, 4);
+        assert!(f.busy_seconds_total() >= busy_before);
+        assert!(f.is_dead(2));
+        // The new card is reachable and routes still avoid the corpse.
+        assert!(f.hops(0, 4).is_some());
+        let (_, end) = f.send(1, 4, bytes, 0.0).unwrap();
+        assert!(end > 0.0);
+    }
+
+    #[test]
+    fn structural_attach_retires_busy_into_the_gauges() {
+        let mut f = FabricState::new(Topology::fat_tree(8));
+        let bytes = 100_000_000;
+        f.send(0, 5, bytes, 0.0).unwrap();
+        let total = f.busy_seconds_total();
+        let peak = f.max_busy_seconds();
+        assert!(total > 0.0);
+        let rep = f.attach_card();
+        assert!(rep.structural);
+        assert_eq!(f.topology.cards, 9);
+        assert_eq!(f.busy_seconds_total(), total, "re-trunk must not drop busy time");
+        assert_eq!(f.max_busy_seconds(), peak);
+        assert!(f.send(0, 8, bytes, 0.0).is_some());
+    }
+
+    #[test]
+    fn slow_link_stretches_flows_by_the_worst_cable() {
+        let mut f = FabricState::new(Topology::ring(4));
+        let bytes = 200_000_000u64;
+        let (_, lone) = f.send(0, 2, bytes, 0.0).unwrap();
+        assert!(f.slow_link(1, 2, 3.0), "cable exists");
+        assert!(!f.slow_link(0, 2, 2.0), "no such cable on a 4-ring");
+        f.reset_occupancy();
+        // 0->1->2 crosses the degraded cable: the whole circuit holds 3x.
+        let (_, slowed) = f.send(0, 2, bytes, 0.0).unwrap();
+        assert!((slowed / lone - 3.0).abs() < 1e-6, "{slowed} vs {lone}");
+        // A path avoiding the cable is unaffected.
+        let (_, clean) = f.send(0, 3, bytes, 0.0).unwrap();
+        assert!(clean < slowed);
     }
 
     #[test]

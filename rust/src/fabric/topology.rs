@@ -22,6 +22,15 @@
 //! Queries: per-card port usage, hop counts (BFS), diameter, and
 //! bisection bandwidth (max-flow between the two index halves of the
 //! card set, in QSFP-lane units).
+//!
+//! Growth: [`Topology::attach_card`] adds one card to a built fabric
+//! without exceeding any card's port budget — the elastic-fleet layer
+//! uses it to wire hot spares and to grow the fabric when the queue
+//! watermark is crossed. Switchless families (ring / torus / mesh)
+//! splice the new card into an existing cable, so card ids never move
+//! and only routes that crossed the spliced cable are invalidated; the
+//! fat tree re-trunks its switch layer instead (a structural rebuild,
+//! flagged in the [`AttachReport`]).
 
 use crate::cluster::interconnect::Link;
 
@@ -46,6 +55,21 @@ impl TopologyKind {
             TopologyKind::FatTree { .. } => "fat-tree",
         }
     }
+}
+
+/// What [`Topology::attach_card`] did to the graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttachReport {
+    /// Id of the new card (always the old `cards` value — card ids
+    /// never shift).
+    pub card: usize,
+    /// The card↔card cable the new card was spliced into (its two
+    /// halves now meet at the new card). None for structural attaches.
+    pub spliced_edge: Option<(usize, usize)>,
+    /// True when the switch layer was rebuilt (fat tree): switch ids
+    /// and the edge list changed wholesale, so route tables and link
+    /// occupancy must be rebuilt rather than patched.
+    pub structural: bool,
 }
 
 /// One undirected fabric edge; `width` is the number of QSFP lanes
@@ -79,13 +103,63 @@ fn near_square(n: usize) -> (usize, usize) {
 }
 
 impl Topology {
-    fn finish(kind: TopologyKind, cards: usize, nodes: usize, edges: Vec<FabricEdge>) -> Self {
+    fn build_adj(nodes: usize, edges: &[FabricEdge]) -> Vec<Vec<(usize, usize)>> {
         let mut adj = vec![Vec::new(); nodes];
         for (i, e) in edges.iter().enumerate() {
             adj[e.a].push((e.b, i));
             adj[e.b].push((e.a, i));
         }
+        adj
+    }
+
+    fn finish(kind: TopologyKind, cards: usize, nodes: usize, edges: Vec<FabricEdge>) -> Self {
+        let adj = Self::build_adj(nodes, &edges);
         Self { kind, cards, nodes, edges, adj }
+    }
+
+    /// Attach one more card to a built fabric without exceeding any
+    /// card's [`CARD_PORTS`] budget. The new card's id is the old
+    /// `cards` value; existing card ids never move.
+    ///
+    /// * Switchless families (ring / torus / mesh) **splice** the new
+    ///   card into the highest-index card↔card cable: that cable's two
+    ///   halves now meet at the new card (2 ports), and no existing
+    ///   card's port count changes. For a ring the spliced cable is the
+    ///   wrap edge, so the grown fabric is again a true ring; a grown
+    ///   torus keeps every card within budget but is torus-derived
+    ///   rather than a perfect p × q grid. Fabrics of ≤ 2 cards gain
+    ///   direct cables to every existing card instead (nothing to
+    ///   splice). Because the spliced edge keeps its index and the new
+    ///   edge appends, per-edge link state stays aligned and only
+    ///   routes that crossed the spliced cable are invalidated.
+    /// * The **fat tree** re-trunks: the whole switch layer is rebuilt
+    ///   for the grown card count (switch ids shift), reported as
+    ///   `structural` so callers rebuild route tables and occupancy.
+    pub fn attach_card(&mut self) -> AttachReport {
+        let new = self.cards;
+        if let TopologyKind::FatTree { .. } = self.kind {
+            *self = Topology::fat_tree(new + 1);
+            return AttachReport { card: new, spliced_edge: None, structural: true };
+        }
+        let mut spliced = None;
+        if self.cards <= 2 {
+            for c in 0..self.cards {
+                self.edges.push(FabricEdge { a: c, b: new, width: 1 });
+            }
+        } else {
+            let e = (0..self.edges.len())
+                .rev()
+                .find(|&i| self.edges[i].a < self.cards && self.edges[i].b < self.cards)
+                .expect("a multi-card switchless fabric has a card cable");
+            let FabricEdge { a, b, width } = self.edges[e];
+            self.edges[e] = FabricEdge { a, b: new, width };
+            self.edges.push(FabricEdge { a: new, b, width });
+            spliced = Some((a, b));
+        }
+        self.cards += 1;
+        self.nodes += 1;
+        self.adj = Self::build_adj(self.nodes, &self.edges);
+        AttachReport { card: new, spliced_edge: spliced, structural: false }
     }
 
     /// Bidirectional ring: card i ↔ card i+1 (mod n), each cable's two
@@ -383,6 +457,64 @@ mod tests {
         assert_eq!(Topology::auto(4).kind, TopologyKind::FullMesh);
         assert_eq!(Topology::auto(16).kind, TopologyKind::Torus2D { p: 4, q: 4 });
         assert_eq!(Topology::auto(8).kind, TopologyKind::Torus2D { p: 4, q: 2 });
+    }
+
+    #[test]
+    fn attach_card_splices_a_ring_into_a_bigger_ring() {
+        let mut t = Topology::ring(8);
+        let rep = t.attach_card();
+        assert_eq!(rep.card, 8);
+        assert_eq!(rep.spliced_edge, Some((7, 0)), "the wrap cable splits");
+        assert!(!rep.structural);
+        assert_eq!(t.cards, 9);
+        assert_eq!(t.edges.len(), 9);
+        assert!(t.is_connected());
+        for c in 0..9 {
+            assert_eq!(t.card_ports(c), 2, "still a true ring");
+        }
+        assert_eq!(t.hops(7, 0), Some(2), "7-8-0 replaces the wrap hop");
+        assert_eq!(t.hops(8, 0), Some(1));
+    }
+
+    #[test]
+    fn attach_card_keeps_torus_and_mesh_in_budget() {
+        for mut t in [Topology::torus2d(4, 4), Topology::full_mesh(12)] {
+            let before: Vec<usize> = (0..t.cards).map(|c| t.card_ports(c)).collect();
+            let rep = t.attach_card();
+            assert!(!rep.structural);
+            assert!(t.is_connected());
+            assert_eq!(t.card_ports(rep.card), 2, "a spliced card spends 2 ports");
+            for c in 0..t.cards {
+                assert!(t.card_ports(c) <= CARD_PORTS, "card {c}");
+            }
+            // No existing card's port count changed.
+            for (c, &p) in before.iter().enumerate() {
+                assert_eq!(t.card_ports(c), p, "card {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn attach_card_retrunks_the_fat_tree() {
+        // 8 cards fill 2 leaves; the 9th forces a third leaf switch.
+        let mut t = Topology::fat_tree(8);
+        let rep = t.attach_card();
+        assert!(rep.structural);
+        assert_eq!(t.cards, 9);
+        assert_eq!(t.kind, TopologyKind::FatTree { leaves: 3 });
+        assert!(t.is_connected());
+        assert_eq!(t.card_ports(8), 1);
+    }
+
+    #[test]
+    fn attach_card_grows_tiny_fabrics() {
+        let mut t = Topology::ring(1);
+        t.attach_card();
+        assert_eq!((t.cards, t.edges.len()), (2, 1));
+        t.attach_card();
+        assert_eq!((t.cards, t.edges.len()), (3, 3), "2 -> 3 closes the triangle");
+        assert!(t.is_connected());
+        assert_eq!(t.diameter_hops(), 1);
     }
 
     #[test]

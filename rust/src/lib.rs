@@ -27,7 +27,13 @@
 //!   optimizer** ([`placement`]) maps plan devices onto physical cards
 //!   (greedy plane-packing plus a seeded local search, scored under
 //!   the link-contention model) so the planner's reduction traffic
-//!   pays as little for the fabric as the wiring allows. Requests that exceed a single card's
+//!   pays as little for the fabric as the wiring allows. The fleet is
+//!   **elastic** ([`cluster::elastic`]): hot spares sit wired into the
+//!   topology but out of placement, a dying card's queued and
+//!   in-flight shards drain onto the contention-cheapest spare, and
+//!   the fabric grows — `Topology::attach_card`, port budget intact —
+//!   when the queue-depth watermark is crossed, with seedable fault
+//!   plans replayed by a deterministic chaos harness. Requests that exceed a single card's
 //!   DDR capacity (or fit no Table-I blocking) route to the cluster
 //!   (`Route::Sharded`). A **Strassen recursion layer** ([`strassen`])
 //!   sits above both: a planner prices 7^d-leaf recursions against the

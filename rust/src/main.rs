@@ -62,10 +62,11 @@ fn print_usage() {
          ablate   [--d2 4096]                ablation studies (§III-C/§V claims)\n\
          codegen  [--design G]               emit the OpenCL HLS kernel source\n\
          cluster  [--devices 4] [--d2 21504] [--design G] [--strategy auto|1d|2d|2.5d|all]\n\
-                  [--mix] [--placement identity|plane|search]\n\
+                  [--mix] [--placement identity|plane|search] [--spares K] [--watermark X]\n\
                   \x20                         shard one GEMM over a simulated fleet\n\
          fabric   [--devices 8] [--d2 21504] [--design G] [--topology all|auto|ring|torus|\n\
                   full|fat-tree] [--overlap] [--placement identity|plane|search]\n\
+                  [--spares K] [--watermark X]\n\
                   \x20                         compare card fabrics: plan makespans,\n\
                   \x20                         link utilization, reduction overlap\n\
                   \x20 placement maps plan devices onto cards before pricing: identity\n\
@@ -73,6 +74,15 @@ fn print_usage() {
                   \x20 k-slice's grid onto fabric-adjacent cards, search (the default\n\
                   \x20 planner setting) polishes it with seeded swaps scored under the\n\
                   \x20 link-contention model\n\
+                  \x20 elastic fleets: --spares K wires K hot-spare cards into the fabric\n\
+                  \x20 (attached within the 4-port budget, excluded from placement); a\n\
+                  \x20 dying card's queued and in-flight shards drain onto the\n\
+                  \x20 contention-cheapest spare instead of requeueing on survivors.\n\
+                  \x20 --watermark X grows the fabric when pending shards per live card\n\
+                  \x20 exceed X, re-carving queued work over the new card. Example:\n\
+                  \x20   systo3d cluster --devices 16 --spares 1 --watermark 2.0\n\
+                  \x20 prints the kill-card-0 drain timeline and the makespan vs the\n\
+                  \x20 requeue-on-survivors baseline\n\
          strassen [--design G] [--d2 21504] [--depth auto|0..3] [--budget 1e-3]\n\
                   [--devices 1]              plan/price Strassen recursion vs classical\n\
          perfgate [--out BENCH.json] [--baseline rust/benches/baseline.json]\n\
@@ -118,6 +128,37 @@ fn cmd_ablate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse the shared elastic CLI knobs: `--spares K --watermark X`.
+fn elastic_args(args: &Args) -> anyhow::Result<(usize, Option<f64>)> {
+    let spares = args.get_usize("spares", 0).map_err(anyhow::Error::msg)?;
+    let watermark = match args.get("watermark") {
+        None => None,
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--watermark expects a float, got {v:?}"))?,
+        ),
+    };
+    Ok((spares, watermark))
+}
+
+/// Kill active card 0 mid-first-compute and replay the plan through
+/// the elastic scheduler — the worked example behind `--spares` /
+/// `--watermark` on the `cluster` and `fabric` subcommands.
+fn elastic_demo(
+    sim: &systo3d::cluster::ClusterSim,
+    plan: &systo3d::cluster::PartitionPlan,
+) -> anyhow::Result<systo3d::cluster::ElasticOutcome> {
+    use systo3d::cluster::FaultPlan;
+    let first = plan
+        .shards
+        .iter()
+        .find(|s| s.device % sim.active_devices() == 0)
+        .ok_or_else(|| anyhow::anyhow!("plan has no shard on card 0"))?;
+    let t_die =
+        sim.host.seconds_for_bytes(first.input_bytes()) + 0.5 * sim.shard_seconds(0, first);
+    sim.simulate_elastic(plan, &FaultPlan::kill(0, t_die)).map_err(anyhow::Error::msg)
+}
+
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
     use systo3d::placement::PlacementStrategy;
@@ -129,13 +170,16 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let strategy = args.get_str("strategy", "auto").to_lowercase();
     let placement = PlacementStrategy::parse(args.get_str("placement", "search"))
         .map_err(anyhow::Error::msg)?;
+    let (spares, watermark) = elastic_args(args)?;
 
     let fleet = if args.flag("mix") {
-        Fleet::mixed_table1(devices)
+        Fleet::mixed_table1(devices + spares)
     } else {
-        Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?
+        Fleet::homogeneous(devices + spares, &id).map_err(anyhow::Error::msg)?
     };
-    let sim = ClusterSim::new(fleet).with_placement(placement);
+    let sim = ClusterSim::with_spares(fleet, spares)
+        .with_placement(placement)
+        .with_watermark(watermark);
 
     let n = devices as u64;
     let runs: Vec<(PartitionPlan, systo3d::cluster::ClusterReport)> = if strategy == "auto" {
@@ -174,6 +218,42 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             plan.flops_per_byte()
         );
     }
+
+    if spares > 0 || watermark.is_some() {
+        let (plan, _) = &runs[0];
+        println!(
+            "--- elastic: kill card 0 mid-first-compute ({spares} spare(s), watermark {}) ---",
+            watermark.map_or("off".to_string(), |w| format!("{w:.1}")),
+        );
+        let out = elastic_demo(&sim, plan)?;
+        print!("{}", out.render());
+        if spares > 0 {
+            // Requeue-on-survivors baseline: the same actives with no
+            // spare wired, same death instant.
+            let base_fleet = if args.flag("mix") {
+                Fleet::mixed_table1(devices)
+            } else {
+                Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?
+            };
+            let base = ClusterSim::new(base_fleet).with_placement(PlacementStrategy::Identity);
+            let first = plan
+                .shards
+                .iter()
+                .find(|s| s.device % devices == 0)
+                .ok_or_else(|| anyhow::anyhow!("plan has no shard on card 0"))?;
+            let t_die = base.host.seconds_for_bytes(first.input_bytes())
+                + 0.5 * base.shard_seconds(0, first);
+            let requeue = base
+                .simulate_with_failures(plan, &[Some(t_die)])
+                .map_err(anyhow::Error::msg)?;
+            println!(
+                "drain-to-spare {:.4} s vs requeue-on-survivors {:.4} s ({:.2}x)",
+                out.schedule.makespan_seconds,
+                requeue.makespan_seconds,
+                requeue.makespan_seconds / out.schedule.makespan_seconds,
+            );
+        }
+    }
     Ok(())
 }
 
@@ -189,6 +269,7 @@ fn cmd_fabric(args: &Args) -> anyhow::Result<()> {
     let wanted = args.get_str("topology", "all").to_lowercase();
     let placement = PlacementStrategy::parse(args.get_str("placement", "search"))
         .map_err(anyhow::Error::msg)?;
+    let (spares, watermark) = elastic_args(args)?;
 
     let topologies: Vec<Topology> = match wanted.as_str() {
         "all" => vec![
@@ -220,8 +301,10 @@ fn cmd_fabric(args: &Args) -> anyhow::Result<()> {
             topology.diameter_hops(),
             topology.bisection_bytes_per_s(&lane) / 1e9,
         );
-        let fleet = Fleet::homogeneous(devices, &id).map_err(anyhow::Error::msg)?;
-        let sim = ClusterSim::with_topology(fleet, topology).with_placement(placement);
+        let fleet = Fleet::homogeneous(devices + spares, &id).map_err(anyhow::Error::msg)?;
+        let sim = ClusterSim::with_topology_and_spares(fleet, topology, spares)
+            .with_placement(placement)
+            .with_watermark(watermark);
         for plan in sim.candidate_plans(d2, d2, d2) {
             let (placed, rep) = sim.place_plan(&plan);
             let r = sim.simulate_placed(&placed, rep.as_ref());
@@ -269,6 +352,20 @@ fn cmd_fabric(args: &Args) -> anyhow::Result<()> {
                 if args.flag("overlap") {
                     print!("{}", rep.render());
                 }
+            }
+        }
+        if spares > 0 || watermark.is_some() {
+            if let Some(plan) = sim.candidate_plans(d2, d2, d2).into_iter().next() {
+                let out = elastic_demo(&sim, &plan)?;
+                println!(
+                    "  elastic: kill card 0 -> makespan {:.4} s, {} spare(s) activated, \
+                     {} drain(s) in {:.4} s, {} card(s) grown",
+                    out.schedule.makespan_seconds,
+                    out.spare_activations,
+                    out.drains_completed,
+                    out.drain_seconds,
+                    out.grown_cards,
+                );
             }
         }
         println!();

@@ -1,0 +1,143 @@
+//! Deterministic chaos-test harness for the elastic fleet.
+//!
+//! A seeded [`FaultPlan`] — kill / slow-link / spike-queue events at
+//! scheduled instants — is replayed against `simulate_elastic` for
+//! seeds `0..SYSTO3D_CHAOS_SEEDS` (default 64; CI pins 64 so wall time
+//! stays bounded) across ring, torus, and fat-tree fabrics, each with
+//! two hot spares and an aggressive growth watermark so drains,
+//! re-homing, and fabric growth all fire under fault pressure.
+//!
+//! Properties asserted for every (seed, topology):
+//! * **no shard lost** — every planned shard executes exactly once,
+//!   whatever dies;
+//! * **every drain completes before the final barrier** — each
+//!   `SpareActivated` is matched by a `DrainCompleted`, and no event
+//!   postdates the makespan;
+//! * **bit-identical replay** — the same seed re-runs to the same
+//!   event log and makespan bits;
+//! * **bit-exact results** — the carve's functional result matches the
+//!   single-card blocked reference (the timing chaos never touches the
+//!   reduction order), including across a growth re-carve.
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign};
+use systo3d::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
+use systo3d::gemm::{matmul_blocked, Matrix};
+use systo3d::systolic::ArraySize;
+
+/// A deliberately tiny design so hundreds of chaos replays stay cheap.
+fn mini_design() -> OffchipDesign {
+    OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(4, 4, 2, 2), 8, 8),
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    }
+}
+
+fn seeds() -> u64 {
+    std::env::var("SYSTO3D_CHAOS_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// 8 active cards on each fabric family, 2 hot spares attached.
+fn scenarios() -> Vec<ClusterSim> {
+    [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)]
+        .into_iter()
+        .map(|topology| {
+            ClusterSim::with_topology_and_spares(
+                Fleet::uniform(10, "mini", mini_design()),
+                topology,
+                2,
+            )
+            .with_watermark(Some(0.75))
+        })
+        .collect()
+}
+
+fn chaos_plan() -> PartitionPlan {
+    PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 96, 96, 96).unwrap()
+}
+
+#[test]
+fn chaos_loses_no_shard_and_completes_every_drain() {
+    let plan = chaos_plan();
+    for sim in scenarios() {
+        let name = sim.topology.name();
+        // Healthy makespan bounds the fault horizon, so kills land
+        // mid-run rather than after the barrier.
+        let horizon = sim.simulate(&plan).makespan_seconds;
+        assert!(horizon > 0.0, "{name}");
+        for seed in 0..seeds() {
+            let faults = FaultPlan::seeded(seed, 10, horizon);
+            let out = sim
+                .simulate_elastic(&plan, &faults)
+                .unwrap_or_else(|e| panic!("{name} seed {seed}: {e}"));
+            let done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+            assert_eq!(
+                done,
+                plan.shards.len(),
+                "{name} seed {seed}: shard lost ({} retried)\n{}",
+                out.schedule.retries,
+                out.render()
+            );
+            assert_eq!(
+                out.drains_completed, out.spare_activations,
+                "{name} seed {seed}: a drain never completed\n{}",
+                out.render()
+            );
+            for e in &out.events {
+                assert!(
+                    e.seconds() <= out.schedule.makespan_seconds + 1e-9,
+                    "{name} seed {seed}: event after the final barrier: {e:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_replays_bit_identically() {
+    let plan = chaos_plan();
+    for sim in scenarios() {
+        let name = sim.topology.name();
+        let horizon = sim.simulate(&plan).makespan_seconds;
+        for seed in 0..seeds() {
+            let faults = FaultPlan::seeded(seed, 10, horizon);
+            let a = sim.simulate_elastic(&plan, &faults).unwrap();
+            let b = sim.simulate_elastic(&plan, &faults).unwrap();
+            assert_eq!(a.events, b.events, "{name} seed {seed}");
+            assert_eq!(
+                a.schedule.makespan_seconds.to_bits(),
+                b.schedule.makespan_seconds.to_bits(),
+                "{name} seed {seed}"
+            );
+            assert_eq!(a.schedule.retries, b.schedule.retries, "{name} seed {seed}");
+            assert_eq!(a.grown_cards, b.grown_cards, "{name} seed {seed}");
+            for (x, y) in a.schedule.per_device.iter().zip(&b.schedule.per_device) {
+                assert_eq!(x.shards, y.shards, "{name} seed {seed}");
+                assert_eq!(
+                    x.finish_seconds.to_bits(),
+                    y.finish_seconds.to_bits(),
+                    "{name} seed {seed}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_results_stay_bit_exact_vs_single_card_reference() {
+    // The elastic scheduler is timing-only: the carve — which the
+    // service executes functionally — reduces k-ascending per tile, so
+    // the sharded result matches the single-card blocked GEMM bit for
+    // bit no matter which cards die or join, including across the
+    // growth re-carve to the grown card count.
+    let a = Matrix::random(96, 96, 7);
+    let b = Matrix::random(96, 96, 8);
+    let want = matmul_blocked(&a, &b);
+    let plan = chaos_plan();
+    assert_eq!(plan.execute_functional(&a, &b).data, want.data);
+    let grown = plan.recarve(10).unwrap();
+    assert_eq!(grown.execute_functional(&a, &b).data, want.data);
+    let shrunk = plan.recarve(6).unwrap();
+    assert_eq!(shrunk.execute_functional(&a, &b).data, want.data);
+}

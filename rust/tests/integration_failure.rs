@@ -192,6 +192,171 @@ fn kill_one_card_on_a_ring_heals_into_a_line() {
 }
 
 #[test]
+fn kill_reduction_home_mid_collective_no_spare() {
+    // The coverage gap the elastic PR closes: the card that *homes* a
+    // reduction tile dies while a partial is mid-flight **toward it**.
+    // Card 0 finishes its own (fast) shard and sits idle; card 2's
+    // 925 MB partial is in the air to home 0 (an ~82 ms circuit) when
+    // card 0 dies inside that window. Nothing was in flight *on* the
+    // victim — no retry — but the landed partial is checkpointed and
+    // the final writeback must re-home to a survivor.
+    use systo3d::cluster::{run_schedule_with_failures, PartitionPlan, PartitionStrategy, Shard};
+    use systo3d::fabric::Topology;
+
+    let d = 21504u64;
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 }, d, d, d).unwrap();
+    // Tile (0,0) homes on device 0 (its k-first shard).
+    assert_eq!(plan.tile_homes()[&(0, 0)].1, 0);
+    let host = systo3d::cluster::Link::pcie_gen3_x8();
+    let topo = Topology::ring(4);
+    // Card 0 computes its shard in 0.5 s, the others in 1.0 s: card
+    // 2's partial launches at dma + 1.0 and holds the circuit for
+    // ~82 ms; the death at dma + 1.04 lands inside that send.
+    let fast0 = |c: usize, _: &Shard| if c == 0 { 0.5 } else { 1.0 };
+    let dma = host.seconds_for_bytes(plan.shards[0].input_bytes());
+    let td = dma + 1.04;
+    let deaths = [Some(td), None, None, None];
+    let out = run_schedule_with_failures(&plan, 4, &host, &topo, &deaths, fast0).unwrap();
+    assert_eq!(out.retries, 0, "the home died idle: {out:?}");
+    assert_eq!(out.per_device[0].lost, 0);
+    assert_eq!(out.per_device[0].shards, 1, "its own shard completed before the death");
+    let done: usize = out.per_device.iter().map(|t| t.shards).sum();
+    assert_eq!(done, plan.shards.len(), "home death must not lose the tile");
+    // The tile still reached the host: some survivor paid tile (0,0)'s
+    // writeback, so the makespan extends past the in-flight send.
+    assert!(out.makespan_seconds.is_finite() && out.makespan_seconds > td);
+    // Deterministic replay, bit for bit.
+    let again = run_schedule_with_failures(&plan, 4, &host, &topo, &deaths, fast0).unwrap();
+    assert_eq!(out.makespan_seconds.to_bits(), again.makespan_seconds.to_bits());
+    for (x, y) in out.per_device.iter().zip(&again.per_device) {
+        assert_eq!(x.transfer_seconds.to_bits(), y.transfer_seconds.to_bits());
+    }
+}
+
+#[test]
+fn kill_reduction_home_mid_collective_with_spare_drains() {
+    // The spared variant: the home card dies with one of its tile's
+    // shards in flight and the tile's collective still outstanding.
+    // The lost shard drains onto the spare, the tile's reduction state
+    // re-homes there (surviving partials retarget the spare over the
+    // fabric), and the drain completes before the final barrier.
+    use systo3d::cluster::{
+        run_elastic_schedule, ElasticConfig, FaultPlan, FleetEvent, PartitionPlan,
+        PartitionStrategy, Shard,
+    };
+    use systo3d::fabric::Topology;
+
+    let d = 21504u64;
+    // c = 4 on 4 cards: card 0 runs devices 0 and 4 — both partials of
+    // tile (0,0), which it also homes; cards 2 computes the other two.
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 1, c: 4 }, d, d, d).unwrap();
+    assert_eq!(plan.tile_homes()[&(0, 0)].1, 0);
+    let host = systo3d::cluster::Link::pcie_gen3_x8();
+    let mut topo = Topology::ring(4);
+    topo.attach_card(); // the hot spare, spliced within the port budget
+    let fast0 = |c: usize, _: &Shard| if c == 0 { 0.5 } else { 1.0 };
+    let dma = host.seconds_for_bytes(plan.shards[0].input_bytes());
+    // Card 0's second shard computes in (dma + 0.5, dma + 1.0); the
+    // death at dma + 0.8 loses it mid-compute with tile (0,0)'s
+    // collective outstanding.
+    let td = dma + 0.8;
+    let config = ElasticConfig { hot_spares: 1, scale_watermark: None, max_growth: 0 };
+    let out = run_elastic_schedule(
+        &plan,
+        4,
+        &host,
+        &topo,
+        &FaultPlan::kill(0, td),
+        config,
+        fast0,
+    )
+    .unwrap();
+    assert_eq!(out.spare_activations, 1);
+    assert_eq!(out.drains_completed, 1);
+    assert_eq!(out.schedule.retries, 1);
+    assert_eq!(out.schedule.per_device[0].lost, 1);
+    assert_eq!(out.schedule.per_device[4].shards, 1, "the spare re-executed the loss");
+    // The surviving partial senders retarget the spare: their fabric
+    // sends show up against the re-homed tile.
+    assert!(out.schedule.per_device[2].card_seconds > 0.0, "{:?}", out.schedule.per_device);
+    assert!(out
+        .events
+        .iter()
+        .any(|e| matches!(e, FleetEvent::SpareActivated { spare: 4, replaces: 0, .. })));
+    for e in &out.events {
+        assert!(e.seconds() <= out.schedule.makespan_seconds + 1e-12, "{e:?}");
+    }
+    let done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+    assert_eq!(done, plan.shards.len());
+}
+
+#[test]
+fn two_simultaneous_deaths_heal_then_drain_deterministically() {
+    use systo3d::cluster::{
+        run_elastic_schedule, ElasticConfig, Fault, FaultPlan, FleetEvent, PartitionPlan,
+        PartitionStrategy, Shard,
+    };
+    use systo3d::fabric::Topology;
+
+    let d = 8192u64;
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 }, d, d, d).unwrap();
+    let host = systo3d::cluster::Link::pcie_gen3_x8();
+    let mut topo = Topology::ring(4);
+    topo.attach_card();
+    topo.attach_card(); // two spares
+    let flat = |_: usize, _: &Shard| 1.0;
+    let dma = host.seconds_for_bytes(plan.shards[0].input_bytes());
+    let td = dma + 0.5;
+    // Cards 0 and 1 die at the same instant, both mid-compute.
+    let faults = FaultPlan {
+        faults: vec![
+            Fault::Kill { card: 0, seconds: td },
+            Fault::Kill { card: 1, seconds: td },
+        ],
+    };
+    let config = ElasticConfig { hot_spares: 2, scale_watermark: None, max_growth: 0 };
+    let out = run_elastic_schedule(&plan, 4, &host, &topo, &faults, config, flat).unwrap();
+    assert_eq!(out.spare_activations, 2);
+    assert_eq!(out.drains_completed, 2);
+    assert_eq!(out.schedule.retries, 2);
+    // Heal-then-drain order is deterministic: ascending victim id, and
+    // the contention scoring hands victim 0 the nearer spare.
+    let activated: Vec<(usize, usize)> = out
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            FleetEvent::SpareActivated { spare, replaces, .. } => Some((*replaces, *spare)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(activated, vec![(0, 4), (1, 5)]);
+    let done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+    assert_eq!(done, plan.shards.len());
+    // Bit-identical replay.
+    let again = run_elastic_schedule(&plan, 4, &host, &topo, &faults, config, flat).unwrap();
+    assert_eq!(out.events, again.events);
+    assert_eq!(
+        out.schedule.makespan_seconds.to_bits(),
+        again.schedule.makespan_seconds.to_bits()
+    );
+
+    // With a single spare the first death drains and the second falls
+    // back to requeue-on-survivors — still deterministic, still no
+    // lost shard.
+    let mut topo1 = Topology::ring(4);
+    topo1.attach_card();
+    let config1 = ElasticConfig { hot_spares: 1, scale_watermark: None, max_growth: 0 };
+    let out1 = run_elastic_schedule(&plan, 4, &host, &topo1, &faults, config1, flat).unwrap();
+    assert_eq!(out1.spare_activations, 1);
+    assert_eq!(out1.schedule.retries, 2);
+    let done1: usize = out1.schedule.per_device.iter().map(|t| t.shards).sum();
+    assert_eq!(done1, plan.shards.len());
+}
+
+#[test]
 fn dead_card_from_start_never_works() {
     use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
     let sim = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
