@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = svc.metrics.snapshot();
-    let lat = svc.metrics.latency_summary();
+    let lat = svc.metrics.latency_report_line();
 
     println!("=== serve_matmul end-to-end report ===");
     println!("requests:           {n_requests} ({checked} verified against oracle)");
@@ -104,7 +104,7 @@ fn main() -> anyhow::Result<()> {
     );
     println!("batches:            {}", snap.batches);
     println!("host throughput:    {:.2} GFLOPS functional", snap.flops as f64 / wall / 1e9);
-    println!("latency:            {}", lat.report_line());
+    println!("latency:            {lat}");
     if sim_fpga_seconds > 0.0 {
         println!(
             "simulated FPGA:     {:.4} s for the conforming subset -> {:.0} GFLOPS \

@@ -47,6 +47,7 @@ use super::interconnect::Link;
 use super::partition::{PartitionPlan, Shard};
 use super::scheduler::{overlap_seconds, DeviceTrace, ScheduleOutcome};
 use crate::fabric::{FabricState, Topology};
+use crate::trace::{Category, Tracer, Track};
 use crate::util::rng::Xoshiro256;
 use std::collections::{BTreeMap, VecDeque};
 
@@ -320,6 +321,26 @@ pub fn run_elastic_schedule(
     FleetController::new(plan, active, host, topology, faults, config, compute_seconds)?.run()
 }
 
+/// As [`run_elastic_schedule`], recording spans into `tracer`: DMA /
+/// compute / reduction / writeback lanes per card, per-link circuit
+/// holds, drain spans on the control track, and death / spare /
+/// watermark instants.
+#[allow(clippy::too_many_arguments)]
+pub fn run_elastic_schedule_traced(
+    plan: &PartitionPlan,
+    active: usize,
+    host: &Link,
+    topology: &Topology,
+    faults: &FaultPlan,
+    config: ElasticConfig,
+    tracer: &Tracer,
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> Result<ElasticOutcome, String> {
+    FleetController::new(plan, active, host, topology, faults, config, compute_seconds)?
+        .with_trace(tracer.clone())
+        .run()
+}
+
 /// The elastic scheduler: the PR-2 work-stealing loop with a spare
 /// pool, drain-on-death, and watermark growth wrapped around it.
 pub struct FleetController<'a, F: Fn(usize, &Shard) -> f64> {
@@ -362,6 +383,7 @@ pub struct FleetController<'a, F: Fn(usize, &Shard) -> f64> {
     grown: usize,
     post_grow_identity_hop_bytes: u64,
     post_grow_placed_hop_bytes: u64,
+    tracer: Tracer,
 }
 
 impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
@@ -448,7 +470,15 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             grown: 0,
             post_grow_identity_hop_bytes: 0,
             post_grow_placed_hop_bytes: 0,
+            tracer: Tracer::off(),
         })
+    }
+
+    /// Record this run's spans and instants into `tracer` (the
+    /// default controller carries a no-op sink).
+    pub fn with_trace(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
+        self
     }
 
     fn death(&self, card: usize) -> Option<f64> {
@@ -509,6 +539,7 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             }
             self.dead[d] = true;
             self.fabric.kill(d);
+            self.tracer.instant(Track::Control, Category::Drain, || format!("death card {d}"), td);
             self.drain_to_spare(d, None, td);
         }
     }
@@ -624,6 +655,12 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
         self.sticky[spare] = true;
         self.link_free[spare] = self.link_free[spare].max(now);
         self.events.push(FleetEvent::SpareActivated { seconds: now, spare, replaces: victim });
+        self.tracer.instant(
+            Track::Control,
+            Category::Drain,
+            || format!("spare {spare} activated for card {victim}"),
+            now,
+        );
         let idx = self.drains.len();
         let moved: Vec<Shard> = self.queues[victim].drain(..).chain(lost).collect();
         for s in &moved {
@@ -667,6 +704,13 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
                     shards: d.shards,
                 });
                 self.drain_seconds += seconds - d.started;
+                self.tracer.span(
+                    Track::Control,
+                    Category::Drain,
+                    || format!("drain card{} -> card{}", d.replaces, d.spare),
+                    d.started,
+                    seconds,
+                );
             }
         }
     }
@@ -703,6 +747,12 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             self.traces.push(DeviceTrace::default());
             self.grown += 1;
             self.events.push(FleetEvent::FleetGrown { seconds: now, card, queue_depth: depth });
+            self.tracer.instant(
+                Track::Control,
+                Category::Drain,
+                || format!("watermark: fleet grew card {card}"),
+                now,
+            );
             self.rebalance_queues(now);
         }
     }
@@ -756,6 +806,7 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             if now.is_finite() {
                 self.apply_faults(now);
                 self.maybe_grow(now);
+                self.tracer.counter("queue_depth", now, self.pending as f64);
             }
             // The live card whose host link frees first starts the
             // next DMA; every tie breaks on the card id. A card with
@@ -784,8 +835,8 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             // stealable queue (ties toward the lowest card id) — dead
             // cards' leftover queues drain this way when no spare was
             // available.
-            let (shard, stolen) = match self.queues[d].pop_front() {
-                Some(s) => (s, false),
+            let (shard, stolen_from) = match self.queues[d].pop_front() {
+                Some(s) => (s, None),
                 None => {
                     let victim = (0..self.cards)
                         .filter(|&v| {
@@ -795,11 +846,11 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
                             self.queues[a].len().cmp(&self.queues[b].len()).then(b.cmp(&a))
                         })
                         .expect("the pick required a stealable queue");
-                    (self.queues[victim].pop_back().expect("victim queue nonempty"), true)
+                    (self.queues[victim].pop_back().expect("victim queue nonempty"), Some(victim))
                 }
             };
             self.pending -= 1;
-            if stolen {
+            if stolen_from.is_some() {
                 self.steals += 1;
                 self.traces[d].stolen += 1;
             }
@@ -815,6 +866,15 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             let c_start = self.compute_free[d].max(t_end);
             let c_end = c_start + comp;
 
+            if let Some(v) = stolen_from {
+                self.tracer.instant(
+                    Track::CardCompute(d),
+                    Category::Steal,
+                    || format!("steal r{} k{} <- card{v}", shard.row0, shard.k0),
+                    t_start,
+                );
+            }
+
             if let Some(td) = self.death(d) {
                 if c_end > td {
                     // The card dies with this shard in flight: heal the
@@ -825,6 +885,40 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
                     self.traces[d].lost += 1;
                     self.traces[d].transfer_seconds += (td.min(t_end) - t_start).max(0.0);
                     self.traces[d].compute_seconds += (td - c_start).clamp(0.0, comp);
+                    self.tracer.instant(
+                        Track::Control,
+                        Category::Drain,
+                        || format!("death card {d}"),
+                        td,
+                    );
+                    if td.min(t_end) > t_start {
+                        self.tracer.span(
+                            Track::CardDma(d),
+                            Category::Host,
+                            || {
+                                format!(
+                                    "dma r{} c{} k{} (lost)",
+                                    shard.row0, shard.col0, shard.k0
+                                )
+                            },
+                            t_start,
+                            td.min(t_end),
+                        );
+                    }
+                    if td > c_start {
+                        self.tracer.span(
+                            Track::CardCompute(d),
+                            Category::Compute,
+                            || {
+                                format!(
+                                    "shard r{} c{} k{} (lost)",
+                                    shard.row0, shard.col0, shard.k0
+                                )
+                            },
+                            c_start,
+                            td,
+                        );
+                    }
                     self.link_free[d] = td;
                     self.compute_free[d] = self.compute_free[d].min(td);
                     self.retries += 1;
@@ -871,6 +965,20 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             self.traces[d].compute_seconds += comp;
             self.traces[d].shards += 1;
             self.compute_intervals.push((c_start, c_end));
+            self.tracer.span(
+                Track::CardDma(d),
+                Category::Host,
+                || format!("dma r{} c{} k{}", shard.row0, shard.col0, shard.k0),
+                t_start,
+                t_end,
+            );
+            self.tracer.span(
+                Track::CardCompute(d),
+                Category::Compute,
+                || format!("shard r{} c{} k{}", shard.row0, shard.col0, shard.k0),
+                c_start,
+                c_end,
+            );
 
             // Tile bookkeeping: fabric reduction and final writeback.
             let tkey = shard.tile();
@@ -892,6 +1000,26 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
                         self.card_free[d] = self.card_free[d].max(s_end);
                         self.send_intervals.push((s_start, s_end));
                         ready = ready.max(s_end);
+                        self.tracer.span(
+                            Track::CardFabric(d),
+                            Category::Fabric,
+                            || format!("reduce r{} c{} -> card{home}", shard.row0, shard.col0),
+                            s_start,
+                            s_end,
+                        );
+                        if self.tracer.is_recording() {
+                            if let Some(path) = self.fabric.route_nodes(d, home) {
+                                for w in path.windows(2) {
+                                    self.tracer.span(
+                                        Track::Link(w[0], w[1]),
+                                        Category::Fabric,
+                                        || format!("circuit card{d} -> card{home}"),
+                                        s_start,
+                                        s_end,
+                                    );
+                                }
+                            }
+                        }
                     }
                     None => {
                         // Fabric partitioned: bounce via the host at
@@ -904,6 +1032,13 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
                         self.card_free[d] = s_end;
                         self.send_intervals.push((s_start, s_end));
                         ready = ready.max(s_end);
+                        self.tracer.span(
+                            Track::CardFabric(d),
+                            Category::Host,
+                            || format!("bounce r{} c{} via host", shard.row0, shard.col0),
+                            s_start,
+                            s_end,
+                        );
                     }
                 }
             }
@@ -926,6 +1061,13 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
                 let wb_start = self.out_free[wb_home].max(tile_ready);
                 self.out_free[wb_home] = wb_start + wb;
                 self.traces[wb_home].transfer_seconds += wb;
+                self.tracer.span(
+                    Track::CardWriteback(wb_home),
+                    Category::Host,
+                    || format!("writeback tile r{} c{}", shard.row0, shard.col0),
+                    wb_start,
+                    wb_start + wb,
+                );
             }
             self.settle_drains((shard.row0, shard.col0, shard.k0), c_end);
         }
@@ -1202,5 +1344,40 @@ mod tests {
         let done: usize = a.schedule.per_device.iter().map(|t| t.shards).sum();
         assert_eq!(done, p.shards.len(), "no shard lost under chaos");
         assert!(a.render().contains("elastic run"));
+    }
+
+    #[test]
+    fn traced_run_records_the_recovery_and_perturbs_nothing() {
+        let p = plan(PartitionStrategy::Row1D { devices: 2 }, 4096);
+        let dma = host().seconds_for_bytes(p.shards[0].input_bytes());
+        let faults = FaultPlan::kill(0, dma + 0.5);
+        let topo = ring_with_spares(2, 1);
+        let tracer = Tracer::recording();
+        let traced = run_elastic_schedule_traced(
+            &p,
+            2,
+            &host(),
+            &topo,
+            &faults,
+            spares(1),
+            &tracer,
+            |_, _| 1.0,
+        )
+        .unwrap();
+        let plain =
+            run_elastic_schedule(&p, 2, &host(), &topo, &faults, spares(1), |_, _| 1.0).unwrap();
+        assert_eq!(
+            traced.schedule.makespan_seconds.to_bits(),
+            plain.schedule.makespan_seconds.to_bits(),
+            "recording must not perturb the schedule"
+        );
+        let log = tracer.take();
+        assert_eq!(log.open_spans(), 0);
+        assert!(log.makespan() <= traced.schedule.makespan_seconds + 1e-12);
+        assert!(log.instants.iter().any(|i| i.name.starts_with("death card")));
+        assert!(log.instants.iter().any(|i| i.name.contains("spare")));
+        assert!(log.spans.iter().any(|s| s.name.starts_with("drain card")));
+        assert!(log.spans.iter().any(|s| s.name.ends_with("(lost)")));
+        assert!(!log.counters.is_empty(), "queue depth sampled");
     }
 }

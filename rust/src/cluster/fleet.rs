@@ -13,16 +13,17 @@
 //! fabric, and the resulting [`ClusterReport`] carries link-utilization
 //! and reduction-overlap gauges alongside the compute numbers.
 
-use super::elastic::{run_elastic_schedule, ElasticConfig, ElasticOutcome, Fault, FaultPlan};
+use super::elastic::{run_elastic_schedule_traced, ElasticConfig, ElasticOutcome, Fault, FaultPlan};
 use super::interconnect::Link;
 use super::partition::{PartitionPlan, PartitionStrategy, Shard};
-use super::scheduler::{run_schedule, run_schedule_with_failures, ScheduleOutcome};
+use super::scheduler::{run_schedule_traced, run_schedule_with_failures_traced, ScheduleOutcome};
 use crate::blocked::{OffchipDesign, OffchipSim};
 use crate::dse::configs::fitted_designs;
-use crate::fabric::{pipeline_schedule, OverlapReport, ReduceAlgo, Topology};
+use crate::fabric::{pipeline_schedule_traced, OverlapReport, ReduceAlgo, Topology};
 use crate::gemm::Matrix;
 use crate::perfmodel::flop_count;
-use crate::placement::{optimize, PlacementReport, PlacementStrategy};
+use crate::placement::{optimize_traced, PlacementReport, PlacementStrategy};
+use crate::trace::Tracer;
 
 /// One card of the fleet.
 #[derive(Clone, Debug)]
@@ -299,6 +300,11 @@ pub struct ClusterSim {
     /// Queue-depth watermark for elastic growth (pending shards per
     /// live card; None disables growth).
     pub scale_watermark: Option<f64>,
+    /// The flight recorder every simulate path threads through
+    /// ([`crate::trace`]). Defaults to the no-op sink; attach a
+    /// [`Tracer::recording`] with [`Self::with_trace`] to capture
+    /// spans. Cloning the sim shares the recording buffer.
+    pub trace: Tracer,
 }
 
 impl ClusterSim {
@@ -324,6 +330,7 @@ impl ClusterSim {
             placement: PlacementStrategy::default(),
             hot_spares: 0,
             scale_watermark: None,
+            trace: Tracer::off(),
         }
     }
 
@@ -372,6 +379,15 @@ impl ClusterSim {
         self
     }
 
+    /// Same sim recording every simulated run into `tracer` (builder
+    /// style): per-card DMA / compute / reduction / writeback spans,
+    /// per-link circuit holds, and elastic control events, all in
+    /// deterministic simulated time. See [`crate::trace`].
+    pub fn with_trace(mut self, tracer: Tracer) -> Self {
+        self.trace = tracer;
+        self
+    }
+
     /// Cards plans carve over (the fleet minus its hot spares).
     pub fn active_devices(&self) -> usize {
         self.fleet.len().saturating_sub(self.hot_spares).max(1)
@@ -393,7 +409,7 @@ impl ClusterSim {
         {
             return (plan.clone(), None);
         }
-        let report = optimize(plan, &self.topology, self.placement);
+        let report = optimize_traced(plan, &self.topology, self.placement, &self.trace);
         let placed = report.placement.apply_to(plan);
         (placed, Some(report))
     }
@@ -421,9 +437,14 @@ impl ClusterSim {
     ) -> ClusterReport {
         assert!(!self.fleet.is_empty(), "empty fleet");
         let outcome = if self.hot_spares == 0 {
-            run_schedule(plan, self.fleet.len(), &self.host, &self.topology, |d, s| {
-                self.shard_seconds(d, s)
-            })
+            run_schedule_traced(
+                plan,
+                self.fleet.len(),
+                &self.host,
+                &self.topology,
+                &self.trace,
+                |d, s| self.shard_seconds(d, s),
+            )
         } else {
             // Spares are wired but must not take planned work: the
             // elastic scheduler keeps them out of the queues (growth
@@ -433,13 +454,14 @@ impl ClusterSim {
                 scale_watermark: None,
                 max_growth: 0,
             };
-            run_elastic_schedule(
+            run_elastic_schedule_traced(
                 plan,
                 self.active_devices(),
                 &self.host,
                 &self.topology,
                 &FaultPlan::none(),
                 config,
+                &self.trace,
                 |d, s| self.shard_seconds(d % self.fleet.len(), s),
             )
             .expect("a healthy fleet cannot run out of cards")
@@ -458,7 +480,9 @@ impl ClusterSim {
         algo: Option<ReduceAlgo>,
     ) -> OverlapReport {
         assert!(!self.fleet.is_empty(), "empty fleet");
-        pipeline_schedule(plan, &self.topology, algo, |d, s| self.shard_seconds(d, s))
+        pipeline_schedule_traced(plan, &self.topology, algo, &self.trace, &Tracer::off(), |d, s| {
+            self.shard_seconds(d, s)
+        })
     }
 
     /// Timing run with injected device deaths: `deaths[d]` is the time
@@ -487,23 +511,25 @@ impl ClusterSim {
                 scale_watermark: None,
                 max_growth: 0,
             };
-            let outcome = run_elastic_schedule(
+            let outcome = run_elastic_schedule_traced(
                 plan,
                 self.active_devices(),
                 &self.host,
                 &self.topology,
                 &faults,
                 config,
+                &self.trace,
                 |d, s| self.shard_seconds(d % self.fleet.len(), s),
             )?;
             return Ok(self.report(plan, outcome.schedule, None));
         }
-        let outcome = run_schedule_with_failures(
+        let outcome = run_schedule_with_failures_traced(
             plan,
             self.fleet.len(),
             &self.host,
             &self.topology,
             deaths,
+            &self.trace,
             |d, s| self.shard_seconds(d, s),
         )?;
         Ok(self.report(plan, outcome, None))
@@ -526,13 +552,14 @@ impl ClusterSim {
             scale_watermark: self.scale_watermark,
             ..ElasticConfig::default()
         };
-        run_elastic_schedule(
+        run_elastic_schedule_traced(
             plan,
             self.active_devices(),
             &self.host,
             &self.topology,
             faults,
             config,
+            &self.trace,
             |d, s| self.shard_seconds(d % self.fleet.len(), s),
         )
     }

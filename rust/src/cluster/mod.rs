@@ -55,10 +55,13 @@ pub mod partition;
 pub mod scheduler;
 
 pub use elastic::{
-    run_elastic_schedule, ElasticConfig, ElasticOutcome, Fault, FaultPlan, FleetController,
-    FleetEvent,
+    run_elastic_schedule, run_elastic_schedule_traced, ElasticConfig, ElasticOutcome, Fault,
+    FaultPlan, FleetController, FleetEvent,
 };
 pub use fleet::{ClusterDevice, ClusterReport, ClusterSim, DeviceReport, Fleet};
 pub use interconnect::{Interconnect, Link};
 pub use partition::{PartitionPlan, PartitionStrategy, Shard};
-pub use scheduler::{run_schedule, run_schedule_with_failures, DeviceTrace, ScheduleOutcome};
+pub use scheduler::{
+    run_schedule, run_schedule_traced, run_schedule_with_failures,
+    run_schedule_with_failures_traced, DeviceTrace, ScheduleOutcome,
+};

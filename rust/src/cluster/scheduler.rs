@@ -50,9 +50,17 @@
 //! cost. Only when *every* device is dead with shards outstanding does
 //! the schedule fail.
 
+//!
+//! Observability: the `_traced` entry points thread a
+//! [`crate::trace::Tracer`] through the event loop — DMA, compute,
+//! reduction-circuit and writeback spans on per-card lanes, per-link
+//! circuit spans, steal and death instants — at zero cost when the
+//! sink is off (the plain entry points pass [`crate::trace::Tracer::off`]).
+
 use super::interconnect::Link;
 use super::partition::{PartitionPlan, Shard};
 use crate::fabric::{FabricState, Topology};
+use crate::trace::{Category, Tracer, Track};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Per-device accounting after a run.
@@ -160,7 +168,19 @@ pub fn run_schedule(
     topology: &Topology,
     compute_seconds: impl Fn(usize, &Shard) -> f64,
 ) -> ScheduleOutcome {
-    run_schedule_with_failures(plan, ndev, host, topology, &[], compute_seconds)
+    run_schedule_traced(plan, ndev, host, topology, &Tracer::off(), compute_seconds)
+}
+
+/// As [`run_schedule`], recording spans into `tracer`.
+pub fn run_schedule_traced(
+    plan: &PartitionPlan,
+    ndev: usize,
+    host: &Link,
+    topology: &Topology,
+    tracer: &Tracer,
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> ScheduleOutcome {
+    run_schedule_with_failures_traced(plan, ndev, host, topology, &[], tracer, compute_seconds)
         .expect("a healthy fleet cannot run out of devices")
 }
 
@@ -177,6 +197,27 @@ pub fn run_schedule_with_failures(
     host: &Link,
     topology: &Topology,
     deaths: &[Option<f64>],
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> Result<ScheduleOutcome, String> {
+    run_schedule_with_failures_traced(
+        plan,
+        ndev,
+        host,
+        topology,
+        deaths,
+        &Tracer::off(),
+        compute_seconds,
+    )
+}
+
+/// As [`run_schedule_with_failures`], recording spans into `tracer`.
+pub fn run_schedule_with_failures_traced(
+    plan: &PartitionPlan,
+    ndev: usize,
+    host: &Link,
+    topology: &Topology,
+    deaths: &[Option<f64>],
+    tracer: &Tracer,
     compute_seconds: impl Fn(usize, &Shard) -> f64,
 ) -> Result<ScheduleOutcome, String> {
     assert!(ndev > 0, "empty fleet");
@@ -235,18 +276,18 @@ pub fn run_schedule_with_failures(
         };
         // Own queue first; otherwise steal from the longest queue
         // (ties toward the lowest device id).
-        let (shard, stolen) = match queues[d].pop_front() {
-            Some(s) => (s, false),
+        let (shard, stolen_from) = match queues[d].pop_front() {
+            Some(s) => (s, None),
             None => {
                 let victim = (0..ndev)
                     .filter(|&v| !queues[v].is_empty())
                     .max_by(|&a, &b| queues[a].len().cmp(&queues[b].len()).then(b.cmp(&a)))
                     .expect("pending > 0 implies a nonempty queue");
-                (queues[victim].pop_back().unwrap(), true)
+                (queues[victim].pop_back().unwrap(), Some(victim))
             }
         };
         pending -= 1;
-        if stolen {
+        if stolen_from.is_some() {
             steals += 1;
             traces[d].stolen += 1;
         }
@@ -262,6 +303,15 @@ pub fn run_schedule_with_failures(
         let c_start = compute_free[d].max(t_end);
         let c_end = c_start + comp;
 
+        if let Some(v) = stolen_from {
+            tracer.instant(
+                Track::CardCompute(d),
+                Category::Steal,
+                || format!("steal r{} k{} <- card{v}", shard.row0, shard.k0),
+                t_start,
+            );
+        }
+
         if let Some(td) = death(d) {
             if c_end > td {
                 // The device dies with this shard in flight: charge the
@@ -273,6 +323,25 @@ pub fn run_schedule_with_failures(
                 traces[d].lost += 1;
                 traces[d].transfer_seconds += (td.min(t_end) - t_start).max(0.0);
                 traces[d].compute_seconds += (td - c_start).clamp(0.0, comp);
+                tracer.instant(Track::Control, Category::Drain, || format!("death card {d}"), td);
+                if td.min(t_end) > t_start {
+                    tracer.span(
+                        Track::CardDma(d),
+                        Category::Host,
+                        || format!("dma r{} c{} k{} (lost)", shard.row0, shard.col0, shard.k0),
+                        t_start,
+                        td.min(t_end),
+                    );
+                }
+                if td > c_start {
+                    tracer.span(
+                        Track::CardCompute(d),
+                        Category::Compute,
+                        || format!("shard r{} c{} k{} (lost)", shard.row0, shard.col0, shard.k0),
+                        c_start,
+                        td,
+                    );
+                }
                 link_free[d] = td;
                 compute_free[d] = compute_free[d].min(td);
                 retries += 1;
@@ -308,6 +377,20 @@ pub fn run_schedule_with_failures(
         traces[d].compute_seconds += comp;
         traces[d].shards += 1;
         compute_intervals.push((c_start, c_end));
+        tracer.span(
+            Track::CardDma(d),
+            Category::Host,
+            || format!("dma r{} c{} k{}", shard.row0, shard.col0, shard.k0),
+            t_start,
+            t_end,
+        );
+        tracer.span(
+            Track::CardCompute(d),
+            Category::Compute,
+            || format!("shard r{} c{} k{}", shard.row0, shard.col0, shard.k0),
+            c_start,
+            c_end,
+        );
 
         // Tile bookkeeping: fabric reductions and the final writeback.
         let tile = tiles.get_mut(&shard.tile()).unwrap();
@@ -323,12 +406,33 @@ pub fn run_schedule_with_failures(
         if d == tile.home {
             tile.ready = tile.ready.max(c_end);
         } else {
-            match fabric.send_with_deaths(d, tile.home, tile.c_bytes, c_end, deaths) {
+            let home = tile.home;
+            match fabric.send_with_deaths(d, home, tile.c_bytes, c_end, deaths) {
                 Some((s_start, s_end)) => {
                     traces[d].card_seconds += s_end - s_start;
                     card_free[d] = card_free[d].max(s_end);
                     send_intervals.push((s_start, s_end));
                     tile.ready = tile.ready.max(s_end);
+                    tracer.span(
+                        Track::CardFabric(d),
+                        Category::Fabric,
+                        || format!("reduce r{} c{} -> card{home}", shard.row0, shard.col0),
+                        s_start,
+                        s_end,
+                    );
+                    if tracer.is_recording() {
+                        if let Some(path) = fabric.route_nodes(d, home) {
+                            for w in path.windows(2) {
+                                tracer.span(
+                                    Track::Link(w[0], w[1]),
+                                    Category::Fabric,
+                                    || format!("circuit card{d} -> card{home}"),
+                                    s_start,
+                                    s_end,
+                                );
+                            }
+                        }
+                    }
                 }
                 None => {
                     // Fabric partitioned between sender and home: the
@@ -343,6 +447,13 @@ pub fn run_schedule_with_failures(
                     card_free[d] = s_end;
                     send_intervals.push((s_start, s_end));
                     tile.ready = tile.ready.max(s_end);
+                    tracer.span(
+                        Track::CardFabric(d),
+                        Category::Host,
+                        || format!("bounce r{} c{} via host", shard.row0, shard.col0),
+                        s_start,
+                        s_end,
+                    );
                 }
             }
         }
@@ -362,6 +473,13 @@ pub fn run_schedule_with_failures(
             let wb_start = out_free[home].max(tile.ready);
             out_free[home] = wb_start + wb;
             traces[home].transfer_seconds += wb;
+            tracer.span(
+                Track::CardWriteback(home),
+                Category::Host,
+                || format!("writeback tile r{} c{}", shard.row0, shard.col0),
+                wb_start,
+                wb_start + wb,
+            );
         }
     }
 

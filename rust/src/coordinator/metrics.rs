@@ -1,6 +1,7 @@
-//! Service metrics: lock-free counters + latency reservoir.
+//! Service metrics: lock-free counters + a bounded latency histogram.
 
-use crate::util::stats::Summary;
+use crate::trace::CriticalPath;
+use crate::util::stats::LogHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -72,7 +73,14 @@ pub struct Metrics {
     /// jobs, in parts-per-million (divide by `strassen_jobs · 1e6` for
     /// the mean; > 1.0 means the DSP-bound eq. 5 peak was beaten).
     pub strassen_eff_vs_peak_ppm: AtomicU64,
-    latencies: Mutex<Vec<f64>>,
+    /// Critical-path seconds per attribution bucket, in microseconds,
+    /// accumulated from every traced run fed to
+    /// [`Self::record_critical_path`] (indexed like
+    /// [`crate::trace::critical::BUCKETS`]).
+    pub critical_bucket_us: [AtomicU64; 5],
+    /// Request latencies, log-bucketed: fixed memory under sustained
+    /// traffic (the old reservoir was an unbounded `Vec<f64>`).
+    latencies: Mutex<LogHistogram>,
 }
 
 impl Metrics {
@@ -81,7 +89,32 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, seconds: f64) {
-        self.latencies.lock().unwrap().push(seconds);
+        self.latencies.lock().unwrap().record(seconds);
+    }
+
+    /// Fold one traced run's critical-path attribution into the
+    /// per-bucket gauges (microseconds; bucket order follows
+    /// [`crate::trace::critical::BUCKETS`]).
+    pub fn record_critical_path(&self, path: &CriticalPath) {
+        for (slot, bucket) in self.critical_bucket_us.iter().zip(crate::trace::critical::BUCKETS)
+        {
+            let secs = path.bucket_seconds.get(bucket).copied().unwrap_or(0.0);
+            slot.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Share of accumulated critical-path time attributed to `bucket`
+    /// (0.0 before the first traced run or for an unknown bucket).
+    pub fn critical_share(&self, bucket: &str) -> f64 {
+        let total: u64 =
+            self.critical_bucket_us.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        match crate::trace::critical::BUCKETS.iter().position(|b| *b == bucket) {
+            Some(i) => self.critical_bucket_us[i].load(Ordering::Relaxed) as f64 / total as f64,
+            None => 0.0,
+        }
     }
 
     pub fn inc(counter: &AtomicU64) {
@@ -215,11 +248,19 @@ impl Metrics {
         busy / (span * fleet_size as f64)
     }
 
-    pub fn latency_summary(&self) -> Summary {
-        Summary::from_samples("request latency", self.latencies.lock().unwrap().clone())
+    /// Point-in-time copy of the latency histogram (fixed size, so the
+    /// clone is cheap and the lock is held briefly).
+    pub fn latency_histogram(&self) -> LogHistogram {
+        self.latencies.lock().unwrap().clone()
+    }
+
+    /// `p50/p99/p999` one-liner for the serve CLI and examples.
+    pub fn latency_report_line(&self) -> String {
+        self.latencies.lock().unwrap().report_line("request latency")
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latency_histogram();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             artifact_hits: self.artifact_hits.load(Ordering::Relaxed),
@@ -256,6 +297,13 @@ impl Metrics {
                 self.strassen_depths[i].load(Ordering::Relaxed)
             }),
             strassen_eff_vs_peak_ppm: self.strassen_eff_vs_peak_ppm.load(Ordering::Relaxed),
+            latency_p50_us: (lat.quantile(0.50) * 1e6) as u64,
+            latency_p99_us: (lat.quantile(0.99) * 1e6) as u64,
+            latency_p999_us: (lat.quantile(0.999) * 1e6) as u64,
+            latency_count: lat.count(),
+            critical_bucket_us: std::array::from_fn(|i| {
+                self.critical_bucket_us[i].load(Ordering::Relaxed)
+            }),
         }
     }
 }
@@ -290,6 +338,15 @@ pub struct MetricsSnapshot {
     pub strassen_jobs: u64,
     pub strassen_depths: [u64; 4],
     pub strassen_eff_vs_peak_ppm: u64,
+    /// Request-latency quantiles from the log-bucketed histogram.
+    pub latency_p50_us: u64,
+    pub latency_p99_us: u64,
+    pub latency_p999_us: u64,
+    pub latency_count: u64,
+    /// Accumulated critical-path attribution, in microseconds, indexed
+    /// like [`crate::trace::critical::BUCKETS`]
+    /// (compute/fabric/host/drain/idle).
+    pub critical_bucket_us: [u64; 5],
 }
 
 #[cfg(test)]
@@ -434,13 +491,37 @@ mod tests {
     }
 
     #[test]
-    fn latency_summary() {
+    fn latency_quantiles_reach_the_snapshot() {
         let m = Metrics::new();
-        for v in [0.1, 0.2, 0.3] {
-            m.record_latency(v);
+        // 1..=1000 ms uniform: p50 ≈ 500 ms, p99 ≈ 990 ms, p999 ≈ 999 ms.
+        for i in 1..=1000 {
+            m.record_latency(i as f64 * 1e-3);
         }
-        let s = m.latency_summary();
-        assert_eq!(s.samples.len(), 3);
-        assert!((s.median() - 0.2).abs() < 1e-12);
+        let h = m.latency_histogram();
+        assert_eq!(h.count(), 1000);
+        assert!((h.quantile(0.5) - 0.5).abs() / 0.5 < 0.04);
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, 1000);
+        assert!((s.latency_p50_us as f64 - 500_000.0).abs() < 0.04 * 500_000.0);
+        assert!((s.latency_p99_us as f64 - 990_000.0).abs() < 0.04 * 990_000.0);
+        assert!((s.latency_p999_us as f64 - 999_000.0).abs() < 0.04 * 999_000.0);
+        assert!(s.latency_p50_us <= s.latency_p99_us && s.latency_p99_us <= s.latency_p999_us);
+        assert!(m.latency_report_line().contains("p999"));
+    }
+
+    #[test]
+    fn critical_path_shares_accumulate() {
+        use crate::trace::{Category, Tracer, Track};
+        let m = Metrics::new();
+        assert_eq!(m.critical_share("compute"), 0.0);
+        let t = Tracer::recording();
+        t.span(Track::CardCompute(0), Category::Compute, || "c".into(), 0.0, 3.0);
+        t.span(Track::CardFabric(0), Category::Fabric, || "f".into(), 3.0, 4.0);
+        m.record_critical_path(&crate::trace::critical_path(&t.take()));
+        let s = m.snapshot();
+        assert_eq!(s.critical_bucket_us[0], 3_000_000); // compute
+        assert_eq!(s.critical_bucket_us[1], 1_000_000); // fabric
+        assert!((m.critical_share("compute") - 0.75).abs() < 1e-9);
+        assert_eq!(m.critical_share("nonsense"), 0.0);
     }
 }

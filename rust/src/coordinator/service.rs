@@ -15,6 +15,7 @@ use crate::gemm::{matmul_blocked, Matrix};
 use crate::perfmodel::flop_count;
 use crate::placement::PlacementStrategy;
 use crate::strassen::{strassen_matmul, StrassenConfig, StrassenReport};
+use crate::trace::{critical_path, CriticalPath, Tracer};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -95,6 +96,11 @@ pub struct ServiceConfig {
     /// search). Functional results are placement-invariant — this only
     /// moves where partials live on the fabric.
     pub placement: PlacementStrategy,
+    /// Attach a flight recorder to the sharded route's fleet: every
+    /// simulated shard, DMA, fabric circuit, and elastic event lands in
+    /// the service's shared [`Tracer`] (see [`GemmService::trace`]).
+    /// Off by default — the no-op sink costs nothing.
+    pub trace: bool,
     /// Strassen planner knobs (mode, max depth, default error budget).
     pub strassen: StrassenConfig,
     /// Bucket fallback/Strassen batches by blocking-padded shape
@@ -113,6 +119,7 @@ impl Default for ServiceConfig {
             hot_spares: 0,
             scale_watermark: None,
             placement: PlacementStrategy::default(),
+            trace: false,
             strassen: StrassenConfig::default(),
             bucket_shapes: false,
         }
@@ -131,6 +138,10 @@ pub struct GemmService {
     /// Fleet size of the sharded route (pairs with
     /// [`Metrics::cluster_utilization`]).
     pub cluster_devices: usize,
+    /// The sharded route's flight recorder; shares its buffer with the
+    /// engine thread's cluster, so snapshot it any time. A no-op sink
+    /// unless [`ServiceConfig::trace`] was set.
+    pub trace: Tracer,
     worker: Option<JoinHandle<()>>,
 }
 
@@ -149,11 +160,29 @@ impl GemmService {
         }
         let (tx, rx) = mpsc::channel::<Ingress>();
         let m = Arc::clone(&metrics);
+        let trace = if config.trace { Tracer::recording() } else { Tracer::off() };
+        let t = trace.clone();
         let worker = std::thread::Builder::new()
             .name("gemm-engine".into())
-            .spawn(move || Self::engine_loop(config, rx, m))
+            .spawn(move || Self::engine_loop(config, rx, m, t))
             .expect("spawn engine thread");
-        Ok(Self { tx, metrics, cluster_devices, worker: Some(worker) })
+        Ok(Self { tx, metrics, cluster_devices, trace, worker: Some(worker) })
+    }
+
+    /// Fold the flight recorder's current critical path into the
+    /// service gauges ([`Metrics::critical_share`]) and return it.
+    /// `None` when tracing is off or nothing has been recorded yet.
+    pub fn record_trace_critical_path(&self) -> Option<CriticalPath> {
+        if !self.trace.is_recording() {
+            return None;
+        }
+        let log = self.trace.snapshot();
+        if log.spans.is_empty() {
+            return None;
+        }
+        let path = critical_path(&log);
+        self.metrics.record_critical_path(&path);
+        Some(path)
     }
 
     /// Submit a job; returns the receiver for its response.
@@ -171,7 +200,12 @@ impl GemmService {
         self.submit(req).recv().expect("engine thread alive")
     }
 
-    fn engine_loop(config: ServiceConfig, rx: mpsc::Receiver<Ingress>, metrics: Arc<Metrics>) {
+    fn engine_loop(
+        config: ServiceConfig,
+        rx: mpsc::Receiver<Ingress>,
+        metrics: Arc<Metrics>,
+        trace: Tracer,
+    ) {
         // The engine (and its PJRT client) lives on this thread only.
         let mut engine = config
             .artifact_dir
@@ -196,7 +230,8 @@ impl GemmService {
             None => ClusterSim::with_spares(fleet, config.hot_spares),
         }
         .with_placement(config.placement)
-        .with_watermark(config.scale_watermark);
+        .with_watermark(config.scale_watermark)
+        .with_trace(trace);
         let batcher = if config.bucket_shapes {
             // Bucket to the fleet design's blocking-padded extents.
             Batcher::with_bucketing(config.max_batch, cluster.fleet.devices[0].design.blocking)
@@ -672,6 +707,29 @@ mod tests {
             let snap = svc.metrics.snapshot();
             assert!(snap.placement_placed_hop_bytes <= snap.placement_identity_hop_bytes);
         }
+    }
+
+    #[test]
+    fn traced_service_records_the_sharded_legs() {
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            trace: true,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(svc.trace.is_recording());
+        let a = Matrix::random(1025, 1025, 81);
+        let b = Matrix::random(1025, 1025, 82);
+        let resp = svc.submit_sync(GemmRequest { id: 13, a, b, chain: None, error_budget: None });
+        assert_eq!(resp.route, Route::Sharded);
+        let log = svc.trace.snapshot();
+        assert!(log.spans.iter().any(|s| s.name.starts_with("shard r")), "compute spans");
+        assert_eq!(log.open_spans(), 0, "every begun span ended");
+        let path = svc.record_trace_critical_path().expect("critical path");
+        assert!(path.makespan > 0.0);
+        let snap = svc.metrics.snapshot();
+        assert!(snap.critical_bucket_us.iter().sum::<u64>() > 0);
+        assert!(snap.latency_count >= 1, "histogram saw the request");
     }
 
     #[test]

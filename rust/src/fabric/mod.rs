@@ -57,6 +57,9 @@ pub mod routing;
 pub mod topology;
 
 pub use collective::{CollectiveSchedule, Flow, ReduceAlgo};
-pub use overlap::{pipeline_schedule, Activity, CardTimeline, OverlapReport, Segment};
+pub use overlap::{
+    pipeline_schedule, pipeline_schedule_traced, timelines_from_trace, Activity, CardTimeline,
+    OverlapReport, Segment,
+};
 pub use routing::{FabricState, RouteTable, HOP_LATENCY_S};
 pub use topology::{AttachReport, FabricEdge, Topology, TopologyKind, CARD_PORTS};

@@ -18,11 +18,20 @@
 //! keeps landing on a distinct card group and tiles finish in waves —
 //! the stagger the overlap exploits. The report carries both makespans
 //! plus per-card busy/idle timelines of the overlapped run.
+//!
+//! Both replays emit flight-recorder spans ([`crate::trace`]):
+//! [`pipeline_schedule_traced`] records the overlapped run and the
+//! barrier counterfactual into separate sinks, and the ASCII timelines
+//! are built *from the event stream* ([`timelines_from_trace`]) — the
+//! trace is the single source of truth for what each card was doing
+//! when, which is what `examples/trace_critical_path.rs` exploits to
+//! show the overlap shrinking the critical path's fabric share.
 
 use super::collective::{CollectiveSchedule, ReduceAlgo};
 use super::routing::FabricState;
 use super::topology::Topology;
 use crate::cluster::partition::{PartitionPlan, Shard};
+use crate::trace::{Category, TraceLog, Tracer, Track};
 
 /// What a timeline segment spent its wall-clock on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -118,6 +127,29 @@ struct TileJob {
     bytes: u64,
 }
 
+/// Per-card busy timelines rebuilt from a recorded event stream:
+/// compute-lane spans become [`Activity::Compute`] segments, fabric
+/// (reduction) lane spans become [`Activity::Reduce`]. This is the
+/// single code path the ASCII strips render through.
+pub fn timelines_from_trace(log: &TraceLog, cards: usize) -> Vec<CardTimeline> {
+    let mut timelines: Vec<CardTimeline> =
+        (0..cards).map(|card| CardTimeline { card, segments: Vec::new() }).collect();
+    for s in &log.spans {
+        let (card, activity) = match s.track {
+            Track::CardCompute(c) => (c, Activity::Compute),
+            Track::CardFabric(c) => (c, Activity::Reduce),
+            _ => continue,
+        };
+        if card < cards {
+            timelines[card].segments.push(Segment { start: s.start, end: s.end, activity });
+        }
+    }
+    for t in &mut timelines {
+        t.segments.sort_by(|a, b| a.start.total_cmp(&b.start));
+    }
+    timelines
+}
+
 /// Replay `plan` on `topology` with per-shard compute times from
 /// `compute_seconds(card, shard)`, reducing each tile with `algo`
 /// (None = cheapest per tile). Host DMA is assumed double-buffered
@@ -128,10 +160,31 @@ pub fn pipeline_schedule(
     algo: Option<ReduceAlgo>,
     compute_seconds: impl Fn(usize, &Shard) -> f64,
 ) -> OverlapReport {
+    pipeline_schedule_traced(plan, topology, algo, &Tracer::off(), &Tracer::off(), compute_seconds)
+}
+
+/// As [`pipeline_schedule`], recording both replays: the overlapped
+/// run's compute and collective-flow spans go into `overlapped`, the
+/// phase-ordered counterfactual's into `barrier` (the compute spans
+/// are identical — only the reductions move). The report's timelines
+/// always render from the overlapped event stream, whether or not the
+/// caller's sinks record.
+pub fn pipeline_schedule_traced(
+    plan: &PartitionPlan,
+    topology: &Topology,
+    algo: Option<ReduceAlgo>,
+    overlapped: &Tracer,
+    barrier: &Tracer,
+    compute_seconds: impl Fn(usize, &Shard) -> f64,
+) -> OverlapReport {
     let cards = topology.cards;
     assert!(cards > 0, "empty fabric");
     let devices = plan.devices.max(1);
     let fold = |dev: usize| if devices <= cards { dev } else { dev * cards / devices };
+    // The overlapped replay records into a private sink so the
+    // timelines can render from the event stream even when the
+    // caller's tracer is off; the spans are copied out at the end.
+    let rec = Tracer::recording();
 
     // Per-tile reduction home: the k-first shard's planned device,
     // folded onto its card (same source of truth as the scheduler).
@@ -139,15 +192,26 @@ pub fn pipeline_schedule(
 
     // Serial per-card compute in plan order.
     let mut compute_free = vec![0.0f64; cards];
-    let mut timelines: Vec<CardTimeline> =
-        (0..cards).map(|card| CardTimeline { card, segments: Vec::new() }).collect();
     let mut tiles: std::collections::BTreeMap<(u64, u64), TileJob> = Default::default();
     for s in &plan.shards {
         let card = fold(s.device);
         let start = compute_free[card];
         let end = start + compute_seconds(card, s);
         compute_free[card] = end;
-        timelines[card].segments.push(Segment { start, end, activity: Activity::Compute });
+        rec.span(
+            Track::CardCompute(card),
+            Category::Compute,
+            || format!("shard r{} c{} k{}", s.row0, s.col0, s.k0),
+            start,
+            end,
+        );
+        barrier.span(
+            Track::CardCompute(card),
+            Category::Compute,
+            || format!("shard r{} c{} k{}", s.row0, s.col0, s.k0),
+            start,
+            end,
+        );
         let job = tiles.entry(s.tile()).or_insert_with(|| TileJob {
             home: fold(homes[&s.tile()].1),
             parts: Vec::new(),
@@ -160,11 +224,12 @@ pub fn pipeline_schedule(
     }
     let compute_end = compute_free.iter().fold(0.0f64, |m, &t| m.max(t));
 
-    // Tiles reduce in the order their last partial lands.
-    let mut jobs: Vec<TileJob> = tiles.into_values().collect();
+    // Tiles reduce in the order their last partial lands (stable sort
+    // over the key-ordered map keeps ties deterministic).
+    let mut jobs: Vec<((u64, u64), TileJob)> = tiles.into_iter().collect();
     jobs.sort_by(|a, b| {
-        let ra = a.parts.iter().fold(0.0f64, |m, &(_, t)| m.max(t));
-        let rb = b.parts.iter().fold(0.0f64, |m, &(_, t)| m.max(t));
+        let ra = a.1.parts.iter().fold(0.0f64, |m, &(_, t)| m.max(t));
+        let rb = b.1.parts.iter().fold(0.0f64, |m, &(_, t)| m.max(t));
         ra.total_cmp(&rb)
     });
 
@@ -172,7 +237,7 @@ pub fn pipeline_schedule(
     let mut fabric = FabricState::new(topology.clone());
     let mut overlapped_makespan = compute_end;
     let mut chosen: Vec<CollectiveSchedule> = Vec::with_capacity(jobs.len());
-    for job in &jobs {
+    for (tkey, job) in &jobs {
         let others: Vec<usize> =
             job.parts.iter().map(|&(c, _)| c).filter(|&c| c != job.home).collect();
         let mut ready = vec![0.0f64; cards];
@@ -185,8 +250,14 @@ pub fn pipeline_schedule(
         };
         let (finish, flows) =
             sched.run_traced(&mut fabric, &mut ready).expect("healthy fabric is connected");
-        for (src, start, end) in flows {
-            timelines[src].segments.push(Segment { start, end, activity: Activity::Reduce });
+        for (src, f_start, f_end) in flows {
+            rec.span(
+                Track::CardFabric(src),
+                Category::Collective,
+                || format!("collective r{} c{} -> card{}", tkey.0, tkey.1, job.home),
+                f_start,
+                f_end,
+            );
         }
         overlapped_makespan = overlapped_makespan.max(finish);
         chosen.push(sched);
@@ -203,17 +274,32 @@ pub fn pipeline_schedule(
     // last card finishes computing.
     let mut barrier_fabric = FabricState::new(topology.clone());
     let mut barrier_makespan = compute_end;
-    for sched in &chosen {
+    for (sched, (tkey, job)) in chosen.iter().zip(&jobs) {
         let mut ready = vec![compute_end; cards];
-        let finish = sched
-            .run(&mut barrier_fabric, &mut ready)
+        let (finish, flows) = sched
+            .run_traced(&mut barrier_fabric, &mut ready)
             .expect("healthy fabric is connected");
+        for (src, f_start, f_end) in flows {
+            barrier.span(
+                Track::CardFabric(src),
+                Category::Collective,
+                || format!("collective r{} c{} -> card{}", tkey.0, tkey.1, job.home),
+                f_start,
+                f_end,
+            );
+        }
         barrier_makespan = barrier_makespan.max(finish);
     }
 
-    for t in &mut timelines {
-        t.segments.sort_by(|a, b| a.start.total_cmp(&b.start));
+    // Hand the overlapped stream to the caller and build the report's
+    // timelines from it.
+    let log = rec.take();
+    if overlapped.is_recording() {
+        for s in &log.spans {
+            overlapped.span(s.track, s.category, || s.name.clone(), s.start, s.end);
+        }
     }
+    let timelines = timelines_from_trace(&log, cards);
     OverlapReport {
         algo: report_algo,
         overlapped_makespan_seconds: overlapped_makespan,
@@ -303,5 +389,44 @@ mod tests {
         assert_eq!(reduce, 2, "one direct send per non-home partial");
         let text = r.render();
         assert!(text.contains("overlapped"));
+    }
+
+    #[test]
+    fn traced_replays_feed_the_timelines_and_the_critical_path() {
+        use crate::trace::{critical_path, Tracer};
+        let plan =
+            PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 8 }, 8192, 8192, 8192)
+                .unwrap();
+        let topo = Topology::ring(8);
+        let over = Tracer::recording();
+        let barr = Tracer::recording();
+        let r = pipeline_schedule_traced(
+            &plan,
+            &topo,
+            Some(ReduceAlgo::Direct),
+            &over,
+            &barr,
+            flat_rate,
+        );
+        let olog = over.take();
+        let blog = barr.take();
+        // The report's timelines and the exported stream agree segment
+        // for segment: one code path.
+        let rebuilt = timelines_from_trace(&olog, topo.cards);
+        for (a, b) in r.timelines.iter().zip(&rebuilt) {
+            assert_eq!(a.segments.len(), b.segments.len());
+        }
+        // The traces cover the two makespans exactly...
+        let co = critical_path(&olog);
+        let cb = critical_path(&blog);
+        assert!((co.makespan - r.overlapped_makespan_seconds).abs() < 1e-9, "{co:?}");
+        assert!((cb.makespan - r.barrier_makespan_seconds).abs() < 1e-9, "{cb:?}");
+        // ...and the overlap hides fabric time from the critical path.
+        assert!(
+            co.share("fabric") < cb.share("fabric"),
+            "overlapped fabric share {:.3} vs barrier {:.3}",
+            co.share("fabric"),
+            cb.share("fabric")
+        );
     }
 }

@@ -267,6 +267,13 @@ impl FabricState {
         self.routes.hops(src, dst)
     }
 
+    /// Node path (cards and switches) a send between two cards takes
+    /// over the current route tables — what the flight recorder turns
+    /// into per-directed-link circuit spans.
+    pub fn route_nodes(&self, src: usize, dst: usize) -> Option<Vec<usize>> {
+        self.routes.node_path(src, dst)
+    }
+
     /// Forget all link occupancy (free times, busy accounting, reroute
     /// count) while keeping the topology, route tables, and dead-card
     /// state. Lets a caller replay many what-if schedules — the

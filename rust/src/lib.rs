@@ -40,7 +40,12 @@
 //!   classical schedule and an error budget, and winning shapes route
 //!   to `Route::Strassen`, pushing *effective* throughput past the
 //!   DSP-bound eq. 5 peak (the leaves also map onto the cluster's work
-//!   queues, so Strassen and sharding compose).
+//!   queues, so Strassen and sharding compose). A **flight recorder**
+//!   ([`trace`]) threads an opt-in span tracer through every one of
+//!   those layers — deterministic sim-time spans per card lane and
+//!   directed link, Chrome-trace/Perfetto export, and a critical-path
+//!   analyzer that attributes the makespan to compute / fabric / host
+//!   / drain buckets.
 //!
 //! The [`runtime`] engine has two builds: the real PJRT/XLA executor
 //! behind the `pjrt` feature, and a default interpreter that replays
@@ -71,6 +76,7 @@ pub mod runtime;
 pub mod solver;
 pub mod strassen;
 pub mod systolic;
+pub mod trace;
 pub mod util;
 
 pub mod cli;

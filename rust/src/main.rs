@@ -8,6 +8,8 @@
 //!   PJRT runtime and check it against the GEMM oracle.
 //! * `serve [--requests N] [--artifacts DIR]` — run the GEMM service on
 //!   a synthetic request stream and print throughput/latency metrics.
+//! * `trace [--devices 16] [--out trace.json]` — flight-record a seeded
+//!   elastic chaos run, write the Chrome trace, print the critical path.
 
 use systo3d::cli::Args;
 use systo3d::coordinator::{GemmRequest, GemmService, ServiceConfig};
@@ -37,6 +39,7 @@ fn main() {
         Some("cluster") => cmd_cluster(&args),
         Some("fabric") => cmd_fabric(&args),
         Some("strassen") => cmd_strassen(&args),
+        Some("trace") => cmd_trace(&args),
         Some("perfgate") => cmd_perfgate(&args),
         _ => {
             print_usage();
@@ -85,6 +88,21 @@ fn print_usage() {
                   \x20 requeue-on-survivors baseline\n\
          strassen [--design G] [--d2 21504] [--depth auto|0..3] [--budget 1e-3]\n\
                   [--devices 1]              plan/price Strassen recursion vs classical\n\
+         trace    [--devices 16] [--spares 2] [--d2 8192] [--design G] [--seed 0]\n\
+                  [--out trace.json] [--json METRICS.json]\n\
+                  \x20                         flight-record a seeded elastic chaos run\n\
+                  \x20                         on a torus fleet and analyze the trace\n\
+                  \x20 Reading a fleet trace: the run replays twice and the recorder\n\
+                  \x20 must serialize byte-identically (sim-time only, no wall clock);\n\
+                  \x20 --out gets Chrome trace-event JSON — load it in Perfetto or\n\
+                  \x20 chrome://tracing. Process \"fleet\" holds one row per card (dma,\n\
+                  \x20 compute, writeback, control events); process \"fabric\" holds one\n\
+                  \x20 row per directed link, where a span is a reserved circuit and\n\
+                  \x20 the active_circuits counter sums them. The printed critical path\n\
+                  \x20 walks latest-bounding spans backward from the makespan and\n\
+                  \x20 attributes every second to compute/fabric/host/drain/idle — the\n\
+                  \x20 buckets sum to the makespan by construction, so the shares say\n\
+                  \x20 where speedups will (and will not) pay off\n\
          perfgate [--out BENCH.json] [--baseline rust/benches/baseline.json]\n\
                   [--merge a.json,b.json] [--tolerance 0.10] [--d2 8192]\n\
                   \x20                         record headline metrics, write the bench\n\
@@ -584,6 +602,101 @@ fn cmd_verify(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Flight-record one seeded elastic chaos run (active torus fleet, hot
+/// spares, growth watermark, `FaultPlan::seeded`), prove the event
+/// stream deterministic by replaying it — the two Chrome serializations
+/// must match byte for byte — then write the trace and print the
+/// critical path with its per-category attribution. `--json` emits the
+/// gateable metrics for the CI perf gate.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+    use systo3d::cluster::{ClusterSim, ElasticOutcome, FaultPlan, Fleet};
+    use systo3d::cluster::{PartitionPlan, PartitionStrategy};
+    use systo3d::fabric::Topology;
+    use systo3d::trace::{chrome_trace_json, critical_path, TraceLog, Tracer};
+
+    let devices = args.get_usize("devices", 16).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(devices >= 2, "--devices must be at least 2");
+    let spares = args.get_usize("spares", 2).map_err(anyhow::Error::msg)?;
+    let d2 = args.get_u64("d2", 8192).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let id = args.get_str("design", "G").to_uppercase();
+    let out = args.get_str("out", "trace.json");
+
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(devices as u64), d2, d2, d2)
+        .map_err(anyhow::Error::msg)?;
+    let build = || -> anyhow::Result<ClusterSim> {
+        let fleet = Fleet::homogeneous(devices + spares, &id).map_err(anyhow::Error::msg)?;
+        Ok(ClusterSim::with_topology_and_spares(
+            fleet,
+            Topology::torus_near_square(devices),
+            spares,
+        )
+        .with_watermark(Some(2.0)))
+    };
+    // Fault horizon from an untraced healthy run (the chaos suite's
+    // convention), so the seeded kills land mid-schedule.
+    let horizon = build()?.simulate(&plan).makespan_seconds;
+    let faults = FaultPlan::seeded(seed, devices + spares, horizon);
+    let run = || -> anyhow::Result<(String, TraceLog, ElasticOutcome)> {
+        let sim = build()?.with_trace(Tracer::recording());
+        let outcome = sim.simulate_elastic(&plan, &faults).map_err(anyhow::Error::msg)?;
+        let log = sim.trace.snapshot();
+        Ok((chrome_trace_json(&log), log, outcome))
+    };
+    let (json, log, outcome) = run()?;
+    let (replay, _, _) = run()?;
+    anyhow::ensure!(
+        json == replay,
+        "flight recorder drifted: two replays of seed {seed} serialized differently"
+    );
+    std::fs::write(out, &json).map_err(|e| anyhow::anyhow!("write {out}: {e}"))?;
+
+    println!(
+        "seed {seed} on a {}-card torus (+{spares} spare(s)): {} span(s), {} instant(s), \
+         {} counter sample(s) across {} track(s)",
+        devices,
+        log.spans.len(),
+        log.instants.len(),
+        log.counters.len(),
+        log.tracks().len(),
+    );
+    println!(
+        "chaos outcome: {} spare activation(s), {} drain(s) in {:.4} s, {} card(s) grown, \
+         makespan {:.4} s",
+        outcome.spare_activations,
+        outcome.drains_completed,
+        outcome.drain_seconds,
+        outcome.grown_cards,
+        outcome.schedule.makespan_seconds,
+    );
+    println!("replay check passed: both runs serialized to identical {}-byte JSON", json.len());
+    println!("wrote Chrome trace to {out} — load it in Perfetto or chrome://tracing\n");
+
+    let path = critical_path(&log);
+    let drift = (path.total_seconds() - path.makespan).abs();
+    anyhow::ensure!(
+        drift <= 1e-6,
+        "critical-path buckets drift {drift} s from the {} s makespan",
+        path.makespan
+    );
+    print!("{}", path.render(12));
+    for (name, (count, secs)) in &log.host_profile {
+        println!("  host-profile {name}: {count} event(s), {secs:.6} s wall");
+    }
+
+    if let Some(p) = args.get("json") {
+        let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+        metrics.insert("trace_critical_coverage".into(), path.total_seconds() / path.makespan);
+        metrics.insert("trace_span_count".into(), log.spans.len() as f64);
+        metrics.insert("trace_compute_share".into(), path.share("compute"));
+        metrics.insert("trace_fabric_share".into(), path.share("fabric"));
+        systo3d::util::json::write_metrics(p, &metrics)?;
+        println!("wrote {} metric(s) to {p}", metrics.len());
+    }
+    Ok(())
+}
+
 /// Record the headline simulated metrics, merge the example-emitted
 /// JSON files, write the bench-trajectory artifact, and gate against
 /// the checked-in baseline: a "higher" metric fails below
@@ -737,7 +850,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let snap = svc.metrics.snapshot();
-    let lat = svc.metrics.latency_summary();
+    let lat = svc.metrics.latency_report_line();
     println!(
         "served {} requests in {:.3} s ({:.1} req/s)\n\
          routes: {} artifact, {} fallback; {} batches; {} errors\n\
@@ -753,7 +866,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         snap.errors,
         snap.flops as f64 / wall / 1e9,
         sim_seconds,
-        lat.report_line()
+        lat
     );
     Ok(())
 }

@@ -49,4 +49,4 @@ pub mod map;
 pub mod search;
 
 pub use map::Placement;
-pub use search::{optimize, PlacementReport, PlacementStrategy, DEFAULT_SEED};
+pub use search::{optimize, optimize_traced, PlacementReport, PlacementStrategy, DEFAULT_SEED};

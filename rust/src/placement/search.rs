@@ -5,6 +5,7 @@
 use super::map::Placement;
 use crate::cluster::partition::PartitionPlan;
 use crate::fabric::{FabricState, Topology};
+use crate::trace::Tracer;
 use crate::util::rng::Xoshiro256;
 
 /// Default local-search seed (any fixed value works — determinism is
@@ -272,6 +273,24 @@ pub fn optimize(
         evaluations,
         search_seconds: t0.elapsed().as_secs_f64(),
     }
+}
+
+/// As [`optimize`], folding the search's host wall-clock and candidate
+/// count into the tracer's host-profile side channel
+/// ([`crate::trace::TraceLog::host_profile`]). Host time never enters
+/// the deterministic sim-time event stream — `trace.json` stays
+/// bit-identical across replays — but the `systo3d trace` summary can
+/// still report what the search cost.
+pub fn optimize_traced(
+    plan: &PartitionPlan,
+    topology: &Topology,
+    strategy: PlacementStrategy,
+    tracer: &Tracer,
+) -> PlacementReport {
+    let report = optimize(plan, topology, strategy);
+    tracer.profile("placement.search", 1, report.search_seconds);
+    tracer.profile("placement.candidates", report.evaluations as u64, report.search_seconds);
+    report
 }
 
 #[cfg(test)]

@@ -24,6 +24,7 @@
 use crate::blocked::{OffchipDesign, OffchipSim};
 use crate::cluster::{ClusterReport, ClusterSim, PartitionPlan, PartitionStrategy};
 use crate::memory::GlobalMemory;
+use crate::trace::{Category, Track};
 use crate::util::div_ceil;
 
 /// One leaf sub-multiplication of the recursion tree.
@@ -133,12 +134,55 @@ impl TaskDag {
     /// cards), add passes serialized host-side after the reduction.
     /// Returns the cluster report for the leaf plan and the end-to-end
     /// seconds including the adds.
+    ///
+    /// When the cluster's flight recorder is on, every leaf's compute
+    /// span is mirrored onto the control track as a
+    /// [`Category::Strassen`] span named by the leaf's M1..M7 path, so
+    /// a trace of a Strassen run reads as the task DAG, not as
+    /// anonymous row bands.
     pub fn fleet_seconds(&self, cluster: &ClusterSim) -> Option<(ClusterReport, f64)> {
         let plan = self.leaf_plan()?;
+        let seen = if cluster.trace.is_recording() {
+            cluster.trace.snapshot().spans.len()
+        } else {
+            0
+        };
         let report = cluster.simulate(&plan);
+        if cluster.trace.is_recording() {
+            self.relabel_leaf_spans(cluster, seen);
+        }
         let e = cluster.fleet.devices.first().map_or(0.97, |d| d.design.controller_efficiency);
         let total = report.makespan_seconds + self.add_seconds(e);
         Some((report, total))
+    }
+
+    /// Mirror the compute spans the leaf plan just recorded (indices
+    /// `≥ seen` in the shared buffer) as Strassen task spans. A leaf
+    /// plan shard's `row0` is `leaf_index · leaf_m`, so the span name
+    /// `"shard r{row0} …"` identifies the leaf; truncated `"(lost)"`
+    /// attempts are skipped — the retry carries the task.
+    fn relabel_leaf_spans(&self, cluster: &ClusterSim, seen: usize) {
+        let log = cluster.trace.snapshot();
+        for s in log.spans.iter().skip(seen) {
+            if !matches!(s.track, Track::CardCompute(_)) || s.name.ends_with("(lost)") {
+                continue;
+            }
+            let Some(rest) = s.name.strip_prefix("shard r") else { continue };
+            let Some(row0) = rest.split_whitespace().next().and_then(|v| v.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            let leaf = (row0 / self.leaf_m.max(1)) as usize;
+            if let Some(task) = self.leaves.get(leaf) {
+                cluster.trace.span(
+                    Track::Control,
+                    Category::Strassen,
+                    || format!("strassen {}", task.id),
+                    s.start,
+                    s.end,
+                );
+            }
+        }
     }
 }
 
@@ -217,6 +261,40 @@ mod tests {
         for s in &plan.shards {
             assert_eq!((s.rows, s.cols, s.ks), (32, 32, 32));
         }
+    }
+
+    #[test]
+    fn traced_fleet_run_labels_the_m_tasks() {
+        use crate::trace::Tracer;
+        let mini = OffchipDesign {
+            blocking: Level1Blocking::new(ArraySize::new(4, 4, 2, 2), 8, 8),
+            fmax_mhz: 400.0,
+            controller_efficiency: 0.97,
+        };
+        let dag = TaskDag::build(64, 64, 64, 1);
+        let plain = ClusterSim::new(Fleet::uniform(7, "mini", mini));
+        let (r0, t0) = dag.fleet_seconds(&plain).unwrap();
+        let traced =
+            ClusterSim::new(Fleet::uniform(7, "mini", mini)).with_trace(Tracer::recording());
+        let (r1, t1) = dag.fleet_seconds(&traced).unwrap();
+        // The recorder is an observer: bit-identical result.
+        assert_eq!(r0.makespan_seconds.to_bits(), r1.makespan_seconds.to_bits());
+        assert_eq!(t0.to_bits(), t1.to_bits());
+        let log = traced.trace.snapshot();
+        for m in 1..=7 {
+            let name = format!("strassen M{m}");
+            assert!(
+                log.spans.iter().any(|s| s.track == Track::Control && s.name == name),
+                "missing task span {name}"
+            );
+        }
+        // Task spans mirror compute spans: none outlives the makespan.
+        let strassen_end = log
+            .spans
+            .iter()
+            .filter(|s| matches!(s.category, Category::Strassen))
+            .fold(0.0f64, |acc, s| acc.max(s.end));
+        assert!(strassen_end <= r1.makespan_seconds + 1e-12);
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Chrome trace-event JSON export (`chrome://tracing` / Perfetto).
+//!
+//! # File format
+//!
+//! [`chrome_trace_json`] serializes a [`TraceLog`] as one JSON object
+//! `{"traceEvents": [...], "displayTimeUnit": "ms"}` using the trace
+//! event kinds Perfetto's importer understands:
+//!
+//! * `"M"` metadata events name the processes and threads,
+//! * `"X"` complete events carry every span (`ts`/`dur` in
+//!   microseconds of **simulated** time, `cat` = span category),
+//! * `"i"` instant events mark deaths, spare activations and
+//!   watermark triggers,
+//! * `"C"` counter events carry the queue-depth samples plus an
+//!   `active_circuits` track derived here from the link spans.
+//!
+//! The process/thread layout is one *process* per card (its DMA,
+//! compute, fabric-send and writeback lanes as threads), one `fabric`
+//! process with a thread per directed link, and a `fleet` process for
+//! the control plane. Tracks whose spans overlap (a card launching
+//! reduction circuits over disjoint routes) are fanned out onto
+//! deterministic sub-lanes (`card3/fabric.1`, ...) by a greedy interval
+//! partition, so every exported thread is well-nested and renders
+//! without Perfetto dropping slices.
+//!
+//! Everything about the output is deterministic — event order, lane
+//! assignment, and number formatting (shortest-round-trip `f64`
+//! display) — so byte-comparing two exports is a valid replay check,
+//! which the chaos suite does. The host wall-clock side channel
+//! ([`TraceLog::host_profile`]) is intentionally **not** exported: it
+//! would differ between bit-identical simulations.
+
+use super::{Track, TraceLog};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+const PID_FLEET: u64 = 1;
+const PID_FABRIC: u64 = 2;
+const PID_CARD0: u64 = 10;
+
+/// (pid, base tid) for a track; link tracks index into `links`.
+fn placement(track: Track, links: &[(usize, usize)]) -> (u64, u64) {
+    match track {
+        Track::Control => (PID_FLEET, 0),
+        Track::CardDma(c) => (PID_CARD0 + c as u64, 0),
+        Track::CardCompute(c) => (PID_CARD0 + c as u64, 100),
+        Track::CardFabric(c) => (PID_CARD0 + c as u64, 200),
+        Track::CardWriteback(c) => (PID_CARD0 + c as u64, 300),
+        Track::Link(a, b) => {
+            let i = links.binary_search(&(a, b)).expect("link track indexed") as u64;
+            (PID_FABRIC, i * 8)
+        }
+    }
+}
+
+fn process_name(pid: u64) -> String {
+    match pid {
+        PID_FLEET => "fleet".into(),
+        PID_FABRIC => "fabric".into(),
+        p => format!("card {}", p - PID_CARD0),
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn meta(name: &str, pid: u64, tid: Option<u64>, value: &str) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::Str("M".into())),
+        ("name", Json::Str(name.into())),
+        ("pid", Json::Num(pid as f64)),
+        ("args", obj(vec![("name", Json::Str(value.into()))])),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", Json::Num(t as f64)));
+    }
+    obj(pairs)
+}
+
+/// Serialize `log` to Chrome trace-event JSON (see the module docs).
+pub fn chrome_trace_json(log: &TraceLog) -> String {
+    let mut links: Vec<(usize, usize)> = log
+        .spans
+        .iter()
+        .map(|s| s.track)
+        .chain(log.instants.iter().map(|i| i.track))
+        .filter_map(|t| match t {
+            Track::Link(a, b) => Some((a, b)),
+            _ => None,
+        })
+        .collect();
+    links.sort_unstable();
+    links.dedup();
+
+    // Greedy interval partition: lane per span so exported threads
+    // never hold overlapping slices. Spans are scanned in
+    // (start, end, name) order; each takes the first lane that is free
+    // at its start.
+    let mut lane_of: Vec<(usize, u64)> = Vec::new(); // span index -> lane
+    let mut lanes_used: BTreeMap<(u64, u64), Vec<u64>> = BTreeMap::new(); // (pid, base) -> names
+    {
+        let mut order: Vec<usize> = (0..log.spans.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (x, y) = (&log.spans[a], &log.spans[b]);
+            x.track
+                .cmp(&y.track)
+                .then(x.start.total_cmp(&y.start))
+                .then(x.end.total_cmp(&y.end))
+                .then(x.name.cmp(&y.name))
+        });
+        let mut free_at: Vec<f64> = Vec::new();
+        let mut current: Option<Track> = None;
+        for idx in order {
+            let s = &log.spans[idx];
+            if current != Some(s.track) {
+                current = Some(s.track);
+                free_at.clear();
+            }
+            let lane = match free_at.iter().position(|&f| f <= s.start) {
+                Some(l) => l,
+                None => {
+                    free_at.push(f64::NEG_INFINITY);
+                    free_at.len() - 1
+                }
+            };
+            free_at[lane] = s.end;
+            lane_of.push((idx, lane as u64));
+            let (pid, base) = placement(s.track, &links);
+            let used = lanes_used.entry((pid, base)).or_default();
+            if !used.contains(&(lane as u64)) {
+                used.push(lane as u64);
+            }
+        }
+        lane_of.sort_unstable_by_key(|&(i, _)| i);
+    }
+
+    let mut events: Vec<Json> = Vec::with_capacity(
+        log.spans.len() + log.instants.len() + log.counters.len() + 64,
+    );
+
+    // Metadata: process names, then thread (lane) names.
+    let mut pids: Vec<u64> = Vec::new();
+    let mut track_of_base: BTreeMap<(u64, u64), Track> = BTreeMap::new();
+    for t in log
+        .spans
+        .iter()
+        .map(|s| s.track)
+        .chain(log.instants.iter().map(|i| i.track))
+    {
+        let (pid, base) = placement(t, &links);
+        if !pids.contains(&pid) {
+            pids.push(pid);
+        }
+        track_of_base.entry((pid, base)).or_insert(t);
+        lanes_used.entry((pid, base)).or_default();
+    }
+    pids.sort_unstable();
+    for &pid in &pids {
+        events.push(meta("process_name", pid, None, &process_name(pid)));
+    }
+    for (&(pid, base), &track) in &track_of_base {
+        let mut lanes = lanes_used[&(pid, base)].clone();
+        if lanes.is_empty() {
+            lanes.push(0); // instant-only track
+        }
+        lanes.sort_unstable();
+        for lane in lanes {
+            let label = if lane == 0 {
+                track.label()
+            } else {
+                format!("{}.{lane}", track.label())
+            };
+            events.push(meta("thread_name", pid, Some(base + lane), &label));
+        }
+    }
+
+    // Spans as "X" complete events, in recording order.
+    for &(idx, lane) in &lane_of {
+        let s = &log.spans[idx];
+        let (pid, base) = placement(s.track, &links);
+        events.push(obj(vec![
+            ("ph", Json::Str("X".into())),
+            ("name", Json::Str(s.name.clone())),
+            ("cat", Json::Str(s.category.name().into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num((base + lane) as f64)),
+            ("ts", Json::Num(s.start * 1e6)),
+            ("dur", Json::Num((s.end - s.start) * 1e6)),
+        ]));
+    }
+
+    // Instants.
+    for i in &log.instants {
+        let (pid, base) = placement(i.track, &links);
+        events.push(obj(vec![
+            ("ph", Json::Str("i".into())),
+            ("name", Json::Str(i.name.clone())),
+            ("cat", Json::Str(i.category.name().into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(base as f64)),
+            ("ts", Json::Num(i.at * 1e6)),
+            ("s", Json::Str("t".into())),
+        ]));
+    }
+
+    // Recorded counters (queue depth) on the fleet process.
+    for c in &log.counters {
+        events.push(obj(vec![
+            ("ph", Json::Str("C".into())),
+            ("name", Json::Str(c.name.clone())),
+            ("pid", Json::Num(PID_FLEET as f64)),
+            ("tid", Json::Num(0.0)),
+            ("ts", Json::Num(c.at * 1e6)),
+            ("args", obj(vec![("value", Json::Num(c.value))])),
+        ]));
+    }
+
+    // Derived link-occupancy counter: sweep the link-circuit spans.
+    let mut edges: Vec<(f64, i64)> = log
+        .spans
+        .iter()
+        .filter(|s| matches!(s.track, Track::Link(..)) && s.end > s.start)
+        .flat_map(|s| [(s.start, 1i64), (s.end, -1i64)])
+        .collect();
+    // Ends sort before starts at equal times: a circuit releasing a
+    // link at t frees it for one starting at t.
+    edges.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut active = 0i64;
+    let mut i = 0;
+    while i < edges.len() {
+        let t = edges[i].0;
+        while i < edges.len() && edges[i].0 == t {
+            active += edges[i].1;
+            i += 1;
+        }
+        events.push(obj(vec![
+            ("ph", Json::Str("C".into())),
+            ("name", Json::Str("active_circuits".into())),
+            ("pid", Json::Num(PID_FABRIC as f64)),
+            ("tid", Json::Num(0.0)),
+            ("ts", Json::Num(t * 1e6)),
+            ("args", obj(vec![("value", Json::Num(active as f64))])),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ]);
+    format!("{doc}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Category, Tracer};
+
+    fn demo_log() -> TraceLog {
+        let t = Tracer::recording();
+        t.span(Track::CardDma(0), Category::Host, || "dma".into(), 0.0, 1.0);
+        t.span(Track::CardCompute(0), Category::Compute, || "shard".into(), 1.0, 3.0);
+        t.span(Track::CardFabric(0), Category::Fabric, || "reduce a".into(), 3.0, 5.0);
+        // Overlapping fabric sends from one card: must fan onto lanes.
+        t.span(Track::CardFabric(0), Category::Fabric, || "reduce b".into(), 3.5, 4.5);
+        t.span(Track::Link(0, 1), Category::Fabric, || "circuit".into(), 3.0, 5.0);
+        t.span(Track::Link(1, 0), Category::Fabric, || "circuit".into(), 3.5, 4.5);
+        t.instant(Track::Control, Category::Drain, || "death card 1".into(), 2.0);
+        t.counter("queue_depth", 0.0, 4.0);
+        t.take()
+    }
+
+    #[test]
+    fn export_parses_and_counts_events() {
+        let log = demo_log();
+        let json = chrome_trace_json(&log);
+        let doc = Json::parse(&json).expect("exporter must emit valid JSON");
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let count = |ph: &str| {
+            events
+                .iter()
+                .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph))
+                .count()
+        };
+        assert_eq!(count("X"), log.spans.len());
+        assert_eq!(count("i"), log.instants.len());
+        // 1 recorded counter + 3 sweep points (starts at 3.0/3.5 merge
+        // per distinct time: 3.0, 3.5, 4.5, 5.0).
+        assert_eq!(count("C"), 1 + 4);
+        assert!(count("M") >= 3, "process + thread names expected");
+    }
+
+    #[test]
+    fn timestamps_are_microseconds() {
+        let json = chrome_trace_json(&demo_log());
+        let doc = Json::parse(&json).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let shard = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("shard"))
+            .unwrap();
+        assert_eq!(shard.get("ts").unwrap().as_f64(), Some(1e6));
+        assert_eq!(shard.get("dur").unwrap().as_f64(), Some(2e6));
+        assert_eq!(shard.get("cat").unwrap().as_str(), Some("compute"));
+    }
+
+    #[test]
+    fn overlapping_spans_get_distinct_lanes() {
+        let json = chrome_trace_json(&demo_log());
+        let doc = Json::parse(&json).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let tids: Vec<f64> = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|p| p.as_str()) == Some("X")
+                    && e.get("name")
+                        .and_then(|n| n.as_str())
+                        .is_some_and(|n| n.starts_with("reduce"))
+            })
+            .map(|e| e.get("tid").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 2);
+        assert_ne!(tids[0], tids[1], "overlapping sends must not share a tid");
+    }
+
+    #[test]
+    fn occupancy_sweep_returns_to_zero() {
+        let json = chrome_trace_json(&demo_log());
+        let doc = Json::parse(&json).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let samples: Vec<(f64, f64)> = events
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("active_circuits"))
+            .map(|e| {
+                (
+                    e.get("ts").unwrap().as_f64().unwrap(),
+                    e.get("args").unwrap().get("value").unwrap().as_f64().unwrap(),
+                )
+            })
+            .collect();
+        assert!(samples.iter().any(|&(_, v)| v >= 2.0), "two circuits overlap");
+        assert_eq!(samples.last().unwrap().1, 0.0, "all circuits release");
+        assert!(samples.windows(2).all(|w| w[0].0 < w[1].0), "strictly increasing ts");
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let a = chrome_trace_json(&demo_log());
+        let b = chrome_trace_json(&demo_log());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn host_profile_is_not_exported() {
+        let t = Tracer::recording();
+        t.span(Track::Control, Category::Compute, || "x".into(), 0.0, 1.0);
+        t.profile("placement.search", 1, 0.123);
+        let json = chrome_trace_json(&t.take());
+        assert!(!json.contains("placement.search"));
+    }
+}

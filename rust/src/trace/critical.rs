@@ -1,0 +1,231 @@
+//! Critical-path analysis over a recorded [`TraceLog`].
+//!
+//! # Semantics
+//!
+//! The event-driven schedulers couple every span to its predecessors
+//! through `max()` gates over resource free-times, so at any simulated
+//! instant `t` the span with the **latest end ≤ t** is exactly the
+//! work whose completion last bounded progress. The analyzer exploits
+//! that: starting from the makespan it repeatedly picks the
+//! latest-ending span at or before the cursor, attributes that span's
+//! duration to its category bucket, and jumps the cursor to the span's
+//! start. Any gap between the cursor and the chosen span's end is
+//! attributed to the synthetic `idle` bucket, as is whatever remains
+//! before the first span. Ties break deterministically on
+//! (end, start, track, name).
+//!
+//! Because every step moves the cursor from `t` to `span.start` while
+//! attributing exactly `t − span.start` seconds (gap + duration), the
+//! per-bucket totals **sum to the makespan by construction** — the
+//! invariant the acceptance gate checks to ±1 µs after JSON rounding.
+//!
+//! The chain is reported most-recent-first in [`CriticalPath::steps`];
+//! [`CriticalPath::share`] turns a bucket into its fraction of the
+//! makespan (e.g. the fabric share shrinking when reduction overlap is
+//! enabled — see `examples/trace_critical_path.rs`).
+
+use super::{Span, TraceLog};
+use std::collections::BTreeMap;
+
+/// The four attribution buckets plus synthetic idle, fixed order.
+pub const BUCKETS: [&str; 5] = ["compute", "fabric", "host", "drain", "idle"];
+
+/// One hop of the critical chain (walked backward from the makespan).
+#[derive(Clone, Debug)]
+pub struct CriticalStep {
+    pub name: String,
+    pub bucket: &'static str,
+    pub start: f64,
+    pub end: f64,
+    /// Idle seconds between this span's end and the previous cursor.
+    pub gap_after: f64,
+}
+
+/// The longest chain bounding the makespan, with per-bucket totals.
+#[derive(Clone, Debug, Default)]
+pub struct CriticalPath {
+    pub makespan: f64,
+    /// Chain hops, latest first.
+    pub steps: Vec<CriticalStep>,
+    /// Seconds per bucket (always including every [`BUCKETS`] key).
+    pub bucket_seconds: BTreeMap<&'static str, f64>,
+}
+
+impl CriticalPath {
+    /// Sum over all buckets — equals [`CriticalPath::makespan`] up to
+    /// floating-point rounding.
+    pub fn total_seconds(&self) -> f64 {
+        self.bucket_seconds.values().sum()
+    }
+
+    /// Fraction of the makespan attributed to `bucket` (0 when the
+    /// makespan is zero).
+    pub fn share(&self, bucket: &str) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.bucket_seconds.get(bucket).copied().unwrap_or(0.0) / self.makespan
+    }
+
+    /// Multi-line human summary (category table + the first chain hops).
+    pub fn render(&self, max_steps: usize) -> String {
+        use crate::util::stats::fmt_duration;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "critical path: makespan {} over {} hops\n",
+            fmt_duration(self.makespan),
+            self.steps.len()
+        ));
+        for b in BUCKETS {
+            let secs = self.bucket_seconds.get(b).copied().unwrap_or(0.0);
+            out.push_str(&format!(
+                "  {:<8} {:>12}  {:>6.1}%\n",
+                b,
+                fmt_duration(secs),
+                100.0 * self.share(b)
+            ));
+        }
+        for s in self.steps.iter().take(max_steps) {
+            out.push_str(&format!(
+                "  <- [{:<7}] {:<40} {} .. {}\n",
+                s.bucket,
+                s.name,
+                fmt_duration(s.start),
+                fmt_duration(s.end)
+            ));
+        }
+        if self.steps.len() > max_steps {
+            out.push_str(&format!("  <- ... {} earlier hops\n", self.steps.len() - max_steps));
+        }
+        out
+    }
+}
+
+/// Walk the log's spans backward from the makespan (module docs give
+/// the exact rules). Zero-duration spans are skipped — they cannot
+/// bound progress and would stall the walk.
+pub fn critical_path(log: &TraceLog) -> CriticalPath {
+    let mut spans: Vec<&Span> = log.spans.iter().filter(|s| s.end > s.start).collect();
+    // Deterministic scan order: latest end first, then latest start
+    // (prefer the shorter, more specific span), then track, then name.
+    spans.sort_by(|a, b| {
+        b.end
+            .total_cmp(&a.end)
+            .then(b.start.total_cmp(&a.start))
+            .then(a.track.cmp(&b.track))
+            .then(a.name.cmp(&b.name))
+    });
+
+    let makespan = spans.first().map_or(0.0, |s| s.end);
+    let mut buckets: BTreeMap<&'static str, f64> = BUCKETS.iter().map(|b| (*b, 0.0)).collect();
+    let mut steps = Vec::new();
+    let mut cursor = makespan;
+    let mut i = 0;
+    while i < spans.len() {
+        let s = spans[i];
+        i += 1;
+        // Skip spans that end after the cursor or start at/after it:
+        // they cannot be the work that last bounded progress.
+        if s.end > cursor || s.start >= cursor {
+            continue;
+        }
+        // The guard above gives s.end <= cursor, so the gap is >= 0.
+        let gap = cursor - s.end;
+        *buckets.get_mut("idle").unwrap() += gap;
+        *buckets.get_mut(s.category.bucket()).unwrap() += s.end - s.start;
+        steps.push(CriticalStep {
+            name: s.name.clone(),
+            bucket: s.category.bucket(),
+            start: s.start,
+            end: s.end,
+            gap_after: gap,
+        });
+        cursor = s.start;
+        if cursor <= 0.0 {
+            break;
+        }
+    }
+    if cursor > 0.0 {
+        *buckets.get_mut("idle").unwrap() += cursor;
+    }
+    CriticalPath { makespan, steps, bucket_seconds: buckets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Category, Tracer, Track};
+
+    #[test]
+    fn empty_log_is_empty_path() {
+        let p = critical_path(&TraceLog::default());
+        assert_eq!(p.makespan, 0.0);
+        assert!(p.steps.is_empty());
+        assert_eq!(p.total_seconds(), 0.0);
+    }
+
+    #[test]
+    fn chain_covers_the_makespan_exactly() {
+        let t = Tracer::recording();
+        // DMA [0,1] -> compute [1,4] -> fabric circuit [4,6], with an
+        // unrelated shorter compute [0,2] that must not be chosen.
+        t.span(Track::CardDma(0), Category::Host, || "dma".into(), 0.0, 1.0);
+        t.span(Track::CardCompute(0), Category::Compute, || "shard".into(), 1.0, 4.0);
+        t.span(Track::CardCompute(1), Category::Compute, || "other".into(), 0.0, 2.0);
+        t.span(Track::CardFabric(0), Category::Fabric, || "reduce".into(), 4.0, 6.0);
+        let p = critical_path(&t.take());
+        assert_eq!(p.makespan, 6.0);
+        assert!((p.total_seconds() - 6.0).abs() < 1e-12);
+        assert_eq!(p.steps.len(), 3);
+        assert_eq!(p.steps[0].name, "reduce");
+        assert_eq!(p.steps[1].name, "shard");
+        assert_eq!(p.steps[2].name, "dma");
+        assert_eq!(p.bucket_seconds["fabric"], 2.0);
+        assert_eq!(p.bucket_seconds["compute"], 3.0);
+        assert_eq!(p.bucket_seconds["host"], 1.0);
+        assert_eq!(p.bucket_seconds["idle"], 0.0);
+        assert!((p.share("compute") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gaps_attribute_to_idle() {
+        let t = Tracer::recording();
+        t.span(Track::CardCompute(0), Category::Compute, || "a".into(), 1.0, 2.0);
+        t.span(Track::CardCompute(0), Category::Compute, || "b".into(), 3.0, 5.0);
+        let p = critical_path(&t.take());
+        assert_eq!(p.makespan, 5.0);
+        // [2,3] gap + [0,1] lead-in = 2 idle seconds.
+        assert!((p.bucket_seconds["idle"] - 2.0).abs() < 1e-12);
+        assert!((p.total_seconds() - 5.0).abs() < 1e-12);
+        assert_eq!(p.steps[0].gap_after, 0.0);
+        assert_eq!(p.steps[1].gap_after, 1.0);
+    }
+
+    #[test]
+    fn unfinished_overlappers_are_not_credited() {
+        let t = Tracer::recording();
+        // Fabric span [1,6] walks the cursor back to 1. Compute [0,4]
+        // straddles that cursor but had not *completed* by it, so its
+        // completion cannot be what gated the fabric start — the
+        // lead-in attributes to idle, not compute (the rule the module
+        // docs pin: pick the latest **end** at or before the cursor).
+        t.span(Track::CardFabric(0), Category::Fabric, || "circ".into(), 1.0, 6.0);
+        t.span(Track::CardCompute(0), Category::Compute, || "c".into(), 0.0, 4.0);
+        let p = critical_path(&t.take());
+        assert!((p.bucket_seconds["fabric"] - 5.0).abs() < 1e-12);
+        assert_eq!(p.bucket_seconds["compute"], 0.0);
+        assert!((p.bucket_seconds["idle"] - 1.0).abs() < 1e-12);
+        assert!((p.total_seconds() - 6.0).abs() < 1e-12);
+        assert_eq!(p.steps.len(), 1);
+    }
+
+    #[test]
+    fn render_mentions_every_bucket() {
+        let t = Tracer::recording();
+        t.span(Track::CardCompute(0), Category::Compute, || "c".into(), 0.0, 1.0);
+        let r = critical_path(&t.take()).render(4);
+        for b in BUCKETS {
+            assert!(r.contains(b), "missing {b} in:\n{r}");
+        }
+    }
+}

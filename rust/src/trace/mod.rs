@@ -1,0 +1,416 @@
+//! The fleet flight recorder: sim-time span tracing with Chrome-trace
+//! export and critical-path analysis.
+//!
+//! Every simulation layer threads a [`Tracer`] — a zero-dependency
+//! sink that records **spans** (an interval of simulated seconds on
+//! one [`Track`]), **instant events** (deaths, spare activations,
+//! watermark triggers), and **counter samples** (queue depth). The
+//! recorder is opt-in: the default [`Tracer::off`] sink is a single
+//! `Option` branch per emit call and allocates nothing, so the plain
+//! schedulers pay near-zero cost (guarded by
+//! `rust/benches/trace_overhead.rs`); [`Tracer::recording`] buffers
+//! everything into a [`TraceLog`].
+//!
+//! # Tracks and categories
+//!
+//! A [`Track`] is one serialized resource of the simulation, mirroring
+//! the scheduler's free-time vectors — so spans on one track never
+//! overlap and render as a clean Perfetto lane:
+//!
+//! * [`Track::CardDma`] — a card's inbound host-DMA engine (shard
+//!   staging; the `link_free` resource),
+//! * [`Track::CardCompute`] — a card's compute engine (`compute_free`),
+//! * [`Track::CardFabric`] — a card's reduction-send engine: one span
+//!   per partial-C circuit or host bounce (sends over disjoint routes
+//!   may overlap here — that overlap *is* the hidden reduction time),
+//! * [`Track::CardWriteback`] — a card's outbound writeback lane
+//!   (`out_free`),
+//! * [`Track::Link`] — one directed fabric link: a span per circuit
+//!   window that reserved it,
+//! * [`Track::Control`] — the fleet control plane (drain windows,
+//!   growth, collective rounds, Strassen task labels).
+//!
+//! Every span carries a [`Category`] which folds into the four
+//! reporting buckets of the critical-path analyzer — `compute`,
+//! `fabric`, `host`, `drain` (plus the synthetic `idle`); see
+//! [`critical`] for the walk semantics and [`chrome`] for the on-disk
+//! trace-event format.
+//!
+//! # Determinism
+//!
+//! All span times are **simulated seconds**. The same plan + seed +
+//! fault plan replays to a bit-identical event stream (the chaos suite
+//! asserts the serialized Chrome JSON of two runs is byte-equal), so
+//! the recorder doubles as a regression oracle. Host wall-clock
+//! measurements (placement-search timing) never enter the event
+//! stream: they aggregate into the [`TraceLog::host_profile`] side
+//! channel, which the exporter leaves out of `trace.json`.
+
+pub mod chrome;
+pub mod critical;
+
+pub use chrome::chrome_trace_json;
+pub use critical::{critical_path, CriticalPath, CriticalStep};
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// One serialized resource of the simulation (see the module docs for
+/// the full catalog). Tracks order deterministically so exports and
+/// analyses are stable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    /// The fleet control plane (drains, growth, collective rounds).
+    Control,
+    /// Card `0`'s inbound host-DMA engine.
+    CardDma(usize),
+    /// Card `0`'s compute engine.
+    CardCompute(usize),
+    /// Card `0`'s reduction-send engine.
+    CardFabric(usize),
+    /// Card `0`'s outbound writeback lane.
+    CardWriteback(usize),
+    /// The directed fabric link `a → b` (node ids; switches included).
+    Link(usize, usize),
+}
+
+impl Track {
+    /// Human-readable lane name (Perfetto thread names).
+    pub fn label(&self) -> String {
+        match *self {
+            Track::Control => "control".into(),
+            Track::CardDma(c) => format!("card{c}/dma"),
+            Track::CardCompute(c) => format!("card{c}/compute"),
+            Track::CardFabric(c) => format!("card{c}/fabric"),
+            Track::CardWriteback(c) => format!("card{c}/writeback"),
+            Track::Link(a, b) => format!("link {a}->{b}"),
+        }
+    }
+}
+
+/// What kind of work a span (or instant) represents. Categories fold
+/// into the critical-path reporting buckets via [`Category::bucket`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    /// Shard kernel time on a card.
+    Compute,
+    /// Partial-C reduction circuits over the card fabric.
+    Fabric,
+    /// One round of a collective reduction schedule.
+    Collective,
+    /// Host-link traffic: shard DMA, C writeback, host bounces.
+    Host,
+    /// Work-steal attempts.
+    Steal,
+    /// Elastic control plane: deaths, drains, spare activity, growth.
+    Drain,
+    /// Placement-search activity (host-time side channel).
+    Placement,
+    /// Strassen M1..M7 task labels.
+    Strassen,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Compute => "compute",
+            Category::Fabric => "fabric",
+            Category::Collective => "collective",
+            Category::Host => "host",
+            Category::Steal => "steal",
+            Category::Drain => "drain",
+            Category::Placement => "placement",
+            Category::Strassen => "strassen",
+        }
+    }
+
+    /// The critical-path reporting bucket this category attributes to:
+    /// `compute`, `fabric`, `host`, or `drain`.
+    pub fn bucket(&self) -> &'static str {
+        match self {
+            Category::Compute | Category::Strassen => "compute",
+            Category::Fabric | Category::Collective => "fabric",
+            Category::Host | Category::Steal | Category::Placement => "host",
+            Category::Drain => "drain",
+        }
+    }
+}
+
+/// A closed interval of simulated seconds on one track.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub track: Track,
+    pub category: Category,
+    pub name: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A zero-duration event (death, spare activation, watermark trigger).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstantEvent {
+    pub track: Track,
+    pub category: Category,
+    pub name: String,
+    pub at: f64,
+}
+
+/// One sample of a counter track (queue depth per live card).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterSample {
+    pub name: String,
+    pub at: f64,
+    pub value: f64,
+}
+
+/// Everything one run recorded.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    pub spans: Vec<Span>,
+    pub instants: Vec<InstantEvent>,
+    pub counters: Vec<CounterSample>,
+    /// Host **wall-clock** aggregates, `name → (count, total seconds)`
+    /// — search/profiling measurements that must not perturb the
+    /// deterministic sim-time stream (and are excluded from the Chrome
+    /// export for exactly that reason).
+    pub host_profile: BTreeMap<String, (u64, f64)>,
+    /// Spans begun via [`Tracer::begin`] that have not ended yet, one
+    /// stack per track (the run barrier asserts this drains to empty).
+    open: Vec<(Track, Category, String, f64)>,
+}
+
+impl TraceLog {
+    /// Latest span end (0 when empty) — the recorded makespan.
+    pub fn makespan(&self) -> f64 {
+        self.spans.iter().fold(0.0, |m, s| m.max(s.end))
+    }
+
+    /// Spans begun but not yet ended.
+    pub fn open_spans(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Spans on `track`, sorted by (start, end, name).
+    pub fn spans_on(&self, track: Track) -> Vec<&Span> {
+        let mut v: Vec<&Span> = self.spans.iter().filter(|s| s.track == track).collect();
+        v.sort_by(|a, b| {
+            a.start.total_cmp(&b.start).then(a.end.total_cmp(&b.end)).then(a.name.cmp(&b.name))
+        });
+        v
+    }
+
+    /// Every distinct track with at least one span, in track order.
+    pub fn tracks(&self) -> Vec<Track> {
+        let mut t: Vec<Track> = self.spans.iter().map(|s| s.track).collect();
+        t.sort();
+        t.dedup();
+        t
+    }
+}
+
+/// The recorder handle the simulators thread through. Cloning shares
+/// the underlying buffer (it is an `Arc`), so a `ClusterSim` clone and
+/// its original record into the same log; tests wanting isolated logs
+/// attach a fresh [`Tracer::recording`] per run.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    inner: Option<Arc<Mutex<TraceLog>>>,
+}
+
+impl Tracer {
+    /// The no-op sink: every emit call is a single branch, nothing is
+    /// retained. This is the default everywhere.
+    pub fn off() -> Self {
+        Self { inner: None }
+    }
+
+    /// A buffering sink.
+    pub fn recording() -> Self {
+        Self { inner: Some(Arc::new(Mutex::new(TraceLog::default()))) }
+    }
+
+    /// Whether emits are retained. Call sites use this to skip name
+    /// formatting entirely when tracing is off.
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn with_log(&self, f: impl FnOnce(&mut TraceLog)) {
+        if let Some(m) = &self.inner {
+            f(&mut m.lock().expect("trace buffer poisoned"));
+        }
+    }
+
+    /// Record a complete span. The name closure only runs when
+    /// recording, so formatting costs nothing with the no-op sink.
+    pub fn span(
+        &self,
+        track: Track,
+        category: Category,
+        name: impl FnOnce() -> String,
+        start: f64,
+        end: f64,
+    ) {
+        self.with_log(|log| {
+            log.spans.push(Span { track, category, name: name(), start, end });
+        });
+    }
+
+    /// Open a span on `track`. Spans opened this way nest per track:
+    /// [`Tracer::end`] always closes the innermost open span.
+    pub fn begin(&self, track: Track, category: Category, name: impl FnOnce() -> String, at: f64) {
+        self.with_log(|log| log.open.push((track, category, name(), at)));
+    }
+
+    /// Close the innermost open span on `track` (no-op when none is
+    /// open — a begun span must end exactly once).
+    pub fn end(&self, track: Track, at: f64) {
+        self.with_log(|log| {
+            if let Some(i) = log.open.iter().rposition(|(t, ..)| *t == track) {
+                let (track, category, name, start) = log.open.remove(i);
+                log.spans.push(Span { track, category, name, start, end: at });
+            }
+        });
+    }
+
+    /// Record an instant event.
+    pub fn instant(
+        &self,
+        track: Track,
+        category: Category,
+        name: impl FnOnce() -> String,
+        at: f64,
+    ) {
+        self.with_log(|log| {
+            log.instants.push(InstantEvent { track, category, name: name(), at });
+        });
+    }
+
+    /// Record one counter sample.
+    pub fn counter(&self, name: &str, at: f64, value: f64) {
+        self.with_log(|log| {
+            log.counters.push(CounterSample { name: name.into(), at, value });
+        });
+    }
+
+    /// Accumulate a host wall-clock measurement into the side channel
+    /// (`count` occurrences totalling `seconds`). Never enters the
+    /// deterministic event stream.
+    pub fn profile(&self, name: &str, count: u64, seconds: f64) {
+        self.with_log(|log| {
+            let e = log.host_profile.entry(name.into()).or_insert((0, 0.0));
+            e.0 += count;
+            e.1 += seconds;
+        });
+    }
+
+    /// Snapshot the log so far (empty when the sink is off).
+    pub fn snapshot(&self) -> TraceLog {
+        match &self.inner {
+            Some(m) => m.lock().expect("trace buffer poisoned").clone(),
+            None => TraceLog::default(),
+        }
+    }
+
+    /// Drain the log, leaving the buffer empty for the next run.
+    pub fn take(&self) -> TraceLog {
+        match &self.inner {
+            Some(m) => std::mem::take(&mut *m.lock().expect("trace buffer poisoned")),
+            None => TraceLog::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_sink_retains_nothing() {
+        let t = Tracer::off();
+        assert!(!t.is_recording());
+        t.span(Track::Control, Category::Compute, || unreachable!("must not format"), 0.0, 1.0);
+        t.counter("q", 0.0, 1.0);
+        assert!(t.snapshot().spans.is_empty());
+        assert!(t.snapshot().counters.is_empty());
+    }
+
+    #[test]
+    fn recording_sink_buffers_and_drains() {
+        let t = Tracer::recording();
+        t.span(Track::CardCompute(1), Category::Compute, || "shard".into(), 1.0, 3.0);
+        t.instant(Track::Control, Category::Drain, || "death".into(), 2.0);
+        t.counter("queue_depth", 0.5, 4.0);
+        t.profile("search", 2, 0.25);
+        let log = t.take();
+        assert_eq!(log.spans.len(), 1);
+        assert_eq!(log.instants.len(), 1);
+        assert_eq!(log.counters.len(), 1);
+        assert_eq!(log.host_profile["search"], (2, 0.25));
+        assert_eq!(log.makespan(), 3.0);
+        assert!(t.take().spans.is_empty(), "take drains the buffer");
+    }
+
+    #[test]
+    fn clones_share_the_buffer() {
+        let t = Tracer::recording();
+        let u = t.clone();
+        u.span(Track::Control, Category::Host, || "x".into(), 0.0, 1.0);
+        assert_eq!(t.snapshot().spans.len(), 1);
+    }
+
+    #[test]
+    fn begin_end_nests_per_track() {
+        let t = Tracer::recording();
+        let tr = Track::CardCompute(0);
+        t.begin(tr, Category::Compute, || "outer".into(), 0.0);
+        t.begin(tr, Category::Compute, || "inner".into(), 1.0);
+        t.begin(Track::Control, Category::Drain, || "drain".into(), 1.5);
+        assert_eq!(t.snapshot().open_spans(), 3);
+        t.end(tr, 2.0); // closes "inner"
+        t.end(Track::Control, 2.5);
+        t.end(tr, 3.0); // closes "outer"
+        let log = t.take();
+        assert_eq!(log.open_spans(), 0);
+        let on = log.spans_on(tr);
+        assert_eq!(on[0].name, "outer");
+        assert_eq!((on[0].start, on[0].end), (0.0, 3.0));
+        assert_eq!(on[1].name, "inner");
+        // The inner span is contained in the outer: well-nested.
+        assert!(on[1].start >= on[0].start && on[1].end <= on[0].end);
+    }
+
+    #[test]
+    fn category_buckets_cover_the_four_reports() {
+        for c in [
+            Category::Compute,
+            Category::Fabric,
+            Category::Collective,
+            Category::Host,
+            Category::Steal,
+            Category::Drain,
+            Category::Placement,
+            Category::Strassen,
+        ] {
+            assert!(["compute", "fabric", "host", "drain"].contains(&c.bucket()), "{c:?}");
+            assert!(!c.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn track_labels_are_distinct() {
+        let tracks = [
+            Track::Control,
+            Track::CardDma(2),
+            Track::CardCompute(2),
+            Track::CardFabric(2),
+            Track::CardWriteback(2),
+            Track::Link(0, 1),
+            Track::Link(1, 0),
+        ];
+        let mut labels: Vec<String> = tracks.iter().map(|t| t.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), tracks.len());
+    }
+}

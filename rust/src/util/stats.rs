@@ -2,9 +2,153 @@
 //!
 //! Stand-in for `criterion` (absent offline): the bench binaries under
 //! `rust/benches/` use [`Bench`] for warmup + repeated timed runs and
-//! report median / mean / p95 like criterion's summary line.
+//! report median / mean / p95 like criterion's summary line. The
+//! serving metrics use [`LogHistogram`], an HdrHistogram-style
+//! log-bucketed quantile sketch with fixed memory.
 
 use std::time::{Duration, Instant};
+
+/// Sub-bucket resolution of [`LogHistogram`]: 2^5 = 32 linear
+/// sub-buckets per octave, bounding relative quantile error to ~3%.
+const HIST_SUB_BITS: u32 = 5;
+const HIST_SUB: u64 = 1 << HIST_SUB_BITS;
+/// Bucket count covering the full `u64` nanosecond range (the largest
+/// index `bucket_of` can produce, for `u64::MAX`, is 1919).
+const HIST_BUCKETS: usize = 1920;
+
+/// HdrHistogram-style log-bucketed histogram of durations in seconds.
+///
+/// Values are recorded as integer nanoseconds into log-linear buckets
+/// (32 linear sub-buckets per power of two), so memory is a fixed
+/// ~15 KiB however many samples arrive — the bounded replacement for
+/// the service's old grow-forever latency reservoir — and any quantile
+/// is read back with ≤ `1/32` relative error.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Log-linear bucket index of a nanosecond value.
+fn bucket_of(nanos: u64) -> usize {
+    if nanos < HIST_SUB {
+        return nanos as usize;
+    }
+    let msb = 63 - nanos.leading_zeros() as u64;
+    let shift = msb - HIST_SUB_BITS as u64;
+    ((shift + 1) * HIST_SUB + (nanos >> shift) - HIST_SUB) as usize
+}
+
+/// Inclusive lower edge of bucket `i`, in nanoseconds (saturating:
+/// the edge one past the last bucket exceeds `u64::MAX`).
+fn bucket_floor(i: usize) -> u64 {
+    let i = i as u64;
+    if i < HIST_SUB {
+        return i;
+    }
+    let shift = i / HIST_SUB - 1;
+    let v = ((i % HIST_SUB + HIST_SUB) as u128) << shift;
+    v.min(u64::MAX as u128) as u64
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    /// Record one duration (negative / non-finite values clamp to 0).
+    pub fn record(&mut self, seconds: f64) {
+        let s = if seconds.is_finite() { seconds.max(0.0) } else { 0.0 };
+        let nanos = if s * 1e9 >= u64::MAX as f64 { u64::MAX } else { (s * 1e9).round() as u64 };
+        self.counts[bucket_of(nanos)] += 1;
+        self.count += 1;
+        self.sum += s;
+        self.min = self.min.min(s);
+        self.max = self.max.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded value (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile, `q` in `[0, 1]`; returns the midpoint of
+    /// the bucket holding that rank, clamped to the observed range
+    /// (0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let lo = bucket_floor(i);
+                let hi = bucket_floor(i + 1);
+                let mid = (lo as f64 + hi as f64) / 2.0 * 1e-9;
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// `serve`-style one-liner: p50/p99/p999 plus count.
+    pub fn report_line(&self, name: &str) -> String {
+        format!(
+            "{:<44} lat:  [p50 {:>10} p99 {:>10} p999 {:>10}]  n={}",
+            name,
+            fmt_duration(self.quantile(0.50)),
+            fmt_duration(self.quantile(0.99)),
+            fmt_duration(self.quantile(0.999)),
+            self.count
+        )
+    }
+}
 
 /// Welford running mean/variance plus min/max.
 #[derive(Clone, Debug, Default)]
@@ -190,6 +334,67 @@ mod tests {
         assert!(fmt_duration(3e-6).ends_with("µs"));
         assert!(fmt_duration(3e-3).ends_with("ms"));
         assert!(fmt_duration(3.0).ends_with("s"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_contiguous_and_monotone() {
+        let mut prev_floor = 0;
+        for n in (0..4096u64).chain((13..63).flat_map(|k| {
+            let p = 1u64 << k;
+            [p - 1, p, p + 1, p + p / 3]
+        })) {
+            let b = bucket_of(n);
+            assert!(b < HIST_BUCKETS);
+            assert!(bucket_floor(b) <= n && n < bucket_floor(b + 1), "n={n} b={b}");
+        }
+        for i in 1..HIST_BUCKETS {
+            let f = bucket_floor(i);
+            assert!(f > prev_floor || i == 1, "floors must strictly increase at {i}");
+            prev_floor = f;
+        }
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_track_a_known_distribution() {
+        let mut h = LogHistogram::new();
+        // 1..=1000 ms, uniform: p50 ≈ 500 ms, p99 ≈ 990 ms.
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.quantile(0.50) - 0.500).abs() / 0.500 < 0.04, "{}", h.quantile(0.50));
+        assert!((h.quantile(0.99) - 0.990).abs() / 0.990 < 0.04, "{}", h.quantile(0.99));
+        assert!((h.quantile(0.999) - 0.999).abs() / 0.999 < 0.04, "{}", h.quantile(0.999));
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 1.0);
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+        // Quantiles never leave the observed range.
+        assert!(h.quantile(0.0) >= h.min() && h.quantile(1.0) <= h.max());
+    }
+
+    #[test]
+    fn histogram_memory_is_bounded() {
+        let mut h = LogHistogram::new();
+        for i in 0..100_000u64 {
+            h.record(i as f64 * 1e-6);
+        }
+        assert_eq!(h.counts.len(), HIST_BUCKETS, "no growth under sustained traffic");
+        assert_eq!(h.count(), 100_000);
+        let line = h.report_line("svc");
+        assert!(line.contains("p999") && line.contains("n=100000"), "{line}");
+    }
+
+    #[test]
+    fn histogram_handles_empty_and_degenerate_input() {
+        let mut h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!((h.min(), h.max(), h.mean()), (0.0, 0.0, 0.0));
+        h.record(f64::NAN);
+        h.record(-1.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 0.0);
     }
 
     #[test]

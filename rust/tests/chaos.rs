@@ -17,7 +17,11 @@
 //!   event log and makespan bits;
 //! * **bit-exact results** — the carve's functional result matches the
 //!   single-card blocked reference (the timing chaos never touches the
-//!   reduction order), including across a growth re-carve.
+//!   reduction order), including across a growth re-carve;
+//! * **bit-identical traces** — with the flight recorder attached, two
+//!   runs of the same seed serialize to byte-identical Chrome trace
+//!   JSON on every fabric family (a subset of the seed sweep, since
+//!   each replay records and serializes the full event stream).
 
 use systo3d::blocked::{Level1Blocking, OffchipDesign};
 use systo3d::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
@@ -120,6 +124,41 @@ fn chaos_replays_bit_identically() {
                     "{name} seed {seed}"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn chaos_traces_replay_bit_identically() {
+    use systo3d::trace::{chrome_trace_json, Tracer};
+    let plan = chaos_plan();
+    for topology in [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)] {
+        let name = topology.name();
+        let horizon = ClusterSim::with_topology_and_spares(
+            Fleet::uniform(10, "mini", mini_design()),
+            topology.clone(),
+            2,
+        )
+        .with_watermark(Some(0.75))
+        .simulate(&plan)
+        .makespan_seconds;
+        for seed in 0..seeds().min(8) {
+            let faults = FaultPlan::seeded(seed, 10, horizon);
+            let run = || {
+                let sim = ClusterSim::with_topology_and_spares(
+                    Fleet::uniform(10, "mini", mini_design()),
+                    topology.clone(),
+                    2,
+                )
+                .with_watermark(Some(0.75))
+                .with_trace(Tracer::recording());
+                let out = sim.simulate_elastic(&plan, &faults).unwrap();
+                (chrome_trace_json(&sim.trace.snapshot()), out.schedule.makespan_seconds)
+            };
+            let (ja, ma) = run();
+            let (jb, mb) = run();
+            assert_eq!(ma.to_bits(), mb.to_bits(), "{name} seed {seed}: makespan drifted");
+            assert_eq!(ja, jb, "{name} seed {seed}: trace streams diverged");
         }
     }
 }

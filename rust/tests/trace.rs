@@ -1,0 +1,137 @@
+//! Flight-recorder integration suite.
+//!
+//! Runs seeded chaos scenarios (hot spares, watermark growth, mid-run
+//! kills) with the recorder attached and checks the properties the
+//! trace format promises:
+//!
+//! * **serialized lanes hold disjoint spans** — a card's DMA, compute
+//!   and writeback engines and every directed fabric link execute one
+//!   thing at a time, so their recorded spans must not overlap (fabric
+//!   *sends* from one card and control-plane drains may overlap by
+//!   design and are fanned onto sub-lanes at export time);
+//! * **every begun span ends before the final barrier** — no open
+//!   spans survive the run, nothing outlives the makespan;
+//! * **the Chrome export round-trips** through the crate's own minimal
+//!   JSON parser with one `"X"` event per span and microsecond
+//!   timestamps that reconstruct the makespan;
+//! * **the critical path covers the makespan** — the analyzer's bucket
+//!   totals sum to the traced makespan to fp rounding.
+//!
+//! Replay bit-identity across runs is asserted per-topology in the
+//! chaos suite (`rust/tests/chaos.rs`), which owns the seed sweep.
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign};
+use systo3d::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
+use systo3d::systolic::ArraySize;
+use systo3d::trace::{chrome_trace_json, critical_path, TraceLog, Tracer, Track};
+use systo3d::util::json::Json;
+
+fn mini_design() -> OffchipDesign {
+    OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(4, 4, 2, 2), 8, 8),
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    }
+}
+
+/// The chaos scenario shape: 8 active cards, 2 hot spares, aggressive
+/// growth watermark.
+fn sim(topology: Topology, tracer: Tracer) -> ClusterSim {
+    ClusterSim::with_topology_and_spares(Fleet::uniform(10, "mini", mini_design()), topology, 2)
+        .with_watermark(Some(0.75))
+        .with_trace(tracer)
+}
+
+fn plan96() -> PartitionPlan {
+    PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 96, 96, 96).unwrap()
+}
+
+/// One traced chaos run: the recorded log and the schedule makespan.
+fn traced_run(topology: Topology, seed: u64) -> (TraceLog, f64) {
+    let plan = plan96();
+    let horizon = sim(topology.clone(), Tracer::off()).simulate(&plan).makespan_seconds;
+    let faults = FaultPlan::seeded(seed, 10, horizon);
+    let s = sim(topology, Tracer::recording());
+    let out = s.simulate_elastic(&plan, &faults).unwrap();
+    (s.trace.snapshot(), out.schedule.makespan_seconds)
+}
+
+#[test]
+fn serialized_lanes_hold_disjoint_spans_and_none_outlives_the_barrier() {
+    let (log, makespan) = traced_run(Topology::ring(8), 5);
+    assert!(!log.spans.is_empty());
+    assert_eq!(log.open_spans(), 0, "a span was begun but never ended");
+    for s in &log.spans {
+        assert!(s.end >= s.start, "negative span {s:?}");
+        assert!(s.end <= makespan + 1e-9, "span outlives the barrier: {s:?}");
+    }
+    for i in &log.instants {
+        assert!(i.at <= makespan + 1e-9, "instant after the barrier: {i:?}");
+    }
+    for track in log.tracks() {
+        let serialized = matches!(
+            track,
+            Track::CardDma(_) | Track::CardCompute(_) | Track::CardWriteback(_) | Track::Link(..)
+        );
+        if !serialized {
+            continue;
+        }
+        let spans = log.spans_on(track);
+        for w in spans.windows(2) {
+            assert!(
+                w[0].end <= w[1].start + 1e-9,
+                "overlap on serialized track {track:?}: {:?} vs {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn chrome_export_round_trips_through_the_json_parser() {
+    let (log, _) = traced_run(Topology::torus2d(4, 2), 2);
+    let json = chrome_trace_json(&log);
+    let doc = Json::parse(&json).expect("exporter must emit valid JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let count = |ph: &str| {
+        events.iter().filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph)).count()
+    };
+    assert_eq!(count("X"), log.spans.len(), "one complete event per span");
+    assert_eq!(count("i"), log.instants.len(), "one instant event per instant");
+    assert!(count("C") >= log.counters.len(), "recorded + derived counters");
+    assert!(count("M") > 0, "process/thread metadata present");
+    // µs timestamps reconstruct the sim-time makespan.
+    let end_us = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .map(|e| {
+            e.get("ts").unwrap().as_f64().unwrap() + e.get("dur").unwrap().as_f64().unwrap()
+        })
+        .fold(0.0f64, f64::max);
+    assert!(
+        (end_us / 1e6 - log.makespan()).abs() < 1e-6,
+        "parsed events end at {} µs but the log makespan is {} s",
+        end_us,
+        log.makespan()
+    );
+}
+
+#[test]
+fn critical_path_buckets_cover_the_traced_makespan() {
+    let (log, makespan) = traced_run(Topology::fat_tree(8), 1);
+    let path = critical_path(&log);
+    assert!(path.makespan > 0.0);
+    assert!(path.makespan <= makespan + 1e-9, "critical path exceeds the schedule");
+    assert!(
+        (path.total_seconds() - path.makespan).abs() < 1e-6,
+        "buckets sum to {} but the makespan is {}",
+        path.total_seconds(),
+        path.makespan
+    );
+    let explained: f64 =
+        ["compute", "fabric", "host", "drain"].into_iter().map(|b| path.share(b)).sum();
+    assert!(explained > 0.0, "nothing attributed outside idle");
+}
