@@ -1,0 +1,202 @@
+//! Fleet observatory acceptance sweep: chaos-validated anomaly
+//! localization and SLO burn-rate growth versus a sleeping watermark.
+//!
+//! Two sections, mirroring the `observe` test suite but sized for CI:
+//!
+//! * **localization** — seeded slow-link / queue-spike fault plans are
+//!   injected into a fixed 8-card fleet across ring, torus and
+//!   fat-tree fabrics; the anomaly localizer must name the offending
+//!   cable or card from the trace alone. Recall and precision are
+//!   computed against the injected plan and **hard-asserted at 1.0**
+//!   (the perf-gate floors exist so a regression shows up as a metric,
+//!   not just a red example).
+//! * **SLO burn vs watermark** — an overload trace (a 3 s background
+//!   tenant on card 0) on which pending depth never crosses the armed
+//!   watermark, so queue-depth elasticity does nothing; the p99
+//!   burn-rate monitor alerts, grows the fleet, and must strictly
+//!   shorten the makespan. The gain is emitted as `observe_slo_gain`.
+//!
+//! ```sh
+//! cargo run --release --example fleet_observatory [-- --seeds 8 --json OUT.json]
+//! ```
+//!
+//! `--json FILE` writes the detector scores and the SLO gain as a flat
+//! JSON object for the CI perf gate.
+
+use std::collections::{BTreeMap, BTreeSet};
+use systo3d::cli::Args;
+use systo3d::cluster::{
+    run_elastic_schedule_traced, ElasticConfig, Fault, FaultPlan, FleetEvent, Link,
+    PartitionPlan, PartitionStrategy, Shard, SloPolicy,
+};
+use systo3d::fabric::Topology;
+use systo3d::observe::{anomaly, Observatory};
+use systo3d::trace::Tracer;
+
+const HORIZON: f64 = 10.0;
+const CARDS: usize = 8;
+
+/// Ground truth from the injected plan: slow links whose cable exists
+/// on this fabric (normalized a <= b), and spiked cards.
+fn injected(faults: &FaultPlan, topo: &Topology) -> (BTreeSet<(usize, usize)>, BTreeSet<usize>) {
+    let mut links = BTreeSet::new();
+    let mut cards = BTreeSet::new();
+    for f in &faults.faults {
+        match *f {
+            Fault::SlowLink { a, b, .. } => {
+                if topo.edges.iter().any(|e| (e.a, e.b) == (a, b) || (e.a, e.b) == (b, a)) {
+                    links.insert(if a <= b { (a, b) } else { (b, a) });
+                }
+            }
+            Fault::SpikeQueue { card, .. } => {
+                cards.insert(card);
+            }
+            Fault::Kill { .. } => {}
+        }
+    }
+    (links, cards)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let fast = std::env::var("SYSTO3D_BENCH_FAST").as_deref() == Ok("1");
+    let default_seeds = if fast { 8 } else { 16 };
+    let seeds = args.get_u64("seeds", default_seeds).map_err(anyhow::Error::msg)?;
+    let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+
+    println!("=== fleet observatory: chaos-validated anomaly localization ===\n");
+    // 256 row-shards over 8 cards at 0.5 s flat compute: every lane is
+    // busy wall to wall, so a stall has nowhere to hide and a healthy
+    // lane's interior gaps are ~one DMA.
+    let plan = PartitionPlan::new(PartitionStrategy::Row1D { devices: 256 }, 4096, 4096, 4096)
+        .map_err(anyhow::Error::msg)?;
+    let host = Link::pcie_gen3_x8();
+    let fixed = ElasticConfig { hot_spares: 0, scale_watermark: None, max_growth: 0, slo: None };
+    let gap_threshold = 0.1 * HORIZON;
+    // tp: anomalies both injected and flagged; fn_: injected but
+    // missed; fp: flagged but never injected.
+    let (mut tp, mut fn_, mut fp) = (0usize, 0usize, 0usize);
+    for topo in [Topology::ring(CARDS), Topology::torus2d(4, 2), Topology::fat_tree(CARDS)] {
+        for seed in 0..seeds {
+            // Keep the slow-link / spike faults, drop the kills: deaths
+            // are chaos.rs territory and a healed fabric removes the
+            // very cable a slow-link fault would have degraded.
+            let seeded = FaultPlan::seeded(seed, CARDS, HORIZON);
+            let faults = FaultPlan {
+                faults: seeded
+                    .faults
+                    .into_iter()
+                    .filter(|f| !matches!(f, Fault::Kill { .. }))
+                    .collect(),
+            };
+            let (want_links, want_cards) = injected(&faults, &topo);
+            let tracer = Tracer::recording();
+            run_elastic_schedule_traced(
+                &plan,
+                CARDS,
+                &host,
+                &topo,
+                &faults,
+                fixed,
+                &tracer,
+                |_: usize, _: &Shard| 0.5,
+            )
+            .map_err(anyhow::Error::msg)?;
+            let found = anomaly::localize(&tracer.take(), gap_threshold);
+            let found_links: BTreeSet<(usize, usize)> =
+                found.slow_links.iter().map(|l| (l.a, l.b)).collect();
+            let found_cards: BTreeSet<usize> =
+                found.stalled_cards.iter().map(|c| c.card).collect();
+            tp += found_links.intersection(&want_links).count()
+                + found_cards.intersection(&want_cards).count();
+            fn_ += want_links.difference(&found_links).count()
+                + want_cards.difference(&found_cards).count();
+            fp += found_links.difference(&want_links).count()
+                + found_cards.difference(&want_cards).count();
+        }
+        println!(
+            "  {:<8} {seeds} seed(s): cumulative tp {tp}, missed {fn_}, spurious {fp}",
+            topo.name()
+        );
+    }
+    anyhow::ensure!(tp > 0, "the sweep never injected an observable fault");
+    let recall = tp as f64 / (tp + fn_) as f64;
+    let precision = tp as f64 / (tp + fp) as f64;
+    println!("\n  detector recall {recall:.3}, precision {precision:.3} over {tp} anomaly(ies)");
+    anyhow::ensure!(recall == 1.0, "localizer missed {fn_} injected fault(s)");
+    anyhow::ensure!(precision == 1.0, "localizer flagged {fp} spurious anomaly(ies)");
+    metrics.insert("observe_detector_recall".into(), recall);
+    metrics.insert("observe_detector_precision".into(), precision);
+
+    println!("\n=== fleet observatory: SLO burn-rate growth vs a sleeping watermark ===\n");
+    // 32 row-shards at 1 s flat compute over 2 cards: steady shard
+    // latency is ~2 s, so the 2.5 s p99 target is healthy until a 3 s
+    // background tenant lands on card 0 — a latency burn that never
+    // pushes pending depth past the watermark.
+    let load = PartitionPlan::new(PartitionStrategy::Row1D { devices: 32 }, 1024, 1024, 1024)
+        .map_err(anyhow::Error::msg)?;
+    let topo = Topology::ring(2);
+    let faults =
+        FaultPlan { faults: vec![Fault::SpikeQueue { card: 0, busy_seconds: 3.0, seconds: 0.01 }] };
+    let policy = SloPolicy {
+        p99_latency_s: 2.5,
+        window_s: 2.0,
+        long_windows: 2,
+        burn_threshold: 0.25,
+        max_growth: 2,
+    };
+    let control_cfg =
+        ElasticConfig { hot_spares: 0, scale_watermark: Some(20.0), max_growth: 2, slo: None };
+    let flat = |_: usize, _: &Shard| 1.0;
+    let control = run_elastic_schedule_traced(
+        &load,
+        2,
+        &host,
+        &topo,
+        &faults,
+        control_cfg,
+        &Tracer::off(),
+        flat,
+    )
+    .map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(control.grown_cards == 0, "the watermark must sleep through this trace");
+
+    let slo_cfg = ElasticConfig { slo: Some(policy), ..control_cfg };
+    let slo_trace = Tracer::recording();
+    let slo = run_elastic_schedule_traced(&load, 2, &host, &topo, &faults, slo_cfg, &slo_trace, flat)
+        .map_err(anyhow::Error::msg)?;
+    let gain = control.schedule.makespan_seconds / slo.schedule.makespan_seconds;
+    println!(
+        "  watermark-only makespan {:.4} s (grew {})\n\
+         \x20 SLO-armed      makespan {:.4} s (burn grew {}, {} alert(s))  gain {gain:.3}x",
+        control.schedule.makespan_seconds,
+        control.grown_cards,
+        slo.schedule.makespan_seconds,
+        slo.slo_grown_cards,
+        slo.slo_alerts.len(),
+    );
+    for e in slo.events.iter().filter(|e| matches!(e, FleetEvent::SloGrown { .. })) {
+        println!("    event: {e:?}");
+    }
+    anyhow::ensure!(slo.slo_grown_cards >= 1, "the burn must grow the fleet");
+    anyhow::ensure!(
+        slo.schedule.makespan_seconds < control.schedule.makespan_seconds,
+        "SLO growth must strictly beat queue-depth-only elasticity: {} vs {}",
+        slo.schedule.makespan_seconds,
+        control.schedule.makespan_seconds
+    );
+    metrics.insert("observe_slo_gain".into(), gain);
+    metrics.insert("observe_slo_alerts".into(), slo.slo_alerts.len() as f64);
+
+    let log = slo_trace.take();
+    let obs = Observatory::from_trace(&log, 1.0);
+    println!("\n{}", obs.render_dashboard(48));
+
+    if let Some(path) = args.get("json") {
+        systo3d::util::json::write_metrics(path, &metrics)?;
+        println!("wrote {} metric(s) to {path}", metrics.len());
+    }
+
+    println!("\nfleet_observatory OK");
+    Ok(())
+}

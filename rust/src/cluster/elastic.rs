@@ -47,6 +47,7 @@ use super::interconnect::Link;
 use super::partition::{PartitionPlan, Shard};
 use super::scheduler::{overlap_seconds, DeviceTrace, ScheduleOutcome};
 use crate::fabric::{FabricState, Topology};
+use crate::observe::slo::{BurnMonitor, SloPolicy};
 use crate::trace::{Category, Tracer, Track};
 use crate::util::rng::Xoshiro256;
 use std::collections::{BTreeMap, VecDeque};
@@ -162,11 +163,17 @@ pub struct ElasticConfig {
     pub scale_watermark: Option<f64>,
     /// Cards the controller may attach across the run.
     pub max_growth: usize,
+    /// Latency SLO whose burn rate drives growth independently of the
+    /// queue-depth watermark (None disables SLO-driven growth). Burn
+    /// is evaluated at every scheduling instant over a short and a
+    /// long sliding window; sustained burn in both activates a pooled
+    /// spare or attaches a card even when raw depth looks healthy.
+    pub slo: Option<SloPolicy>,
 }
 
 impl Default for ElasticConfig {
     fn default() -> Self {
-        Self { hot_spares: 1, scale_watermark: None, max_growth: 2 }
+        Self { hot_spares: 1, scale_watermark: None, max_growth: 2, slo: None }
     }
 }
 
@@ -181,6 +188,11 @@ pub enum FleetEvent {
     /// The fabric grew by `card` because queue depth per live card hit
     /// `queue_depth`.
     FleetGrown { seconds: f64, card: usize, queue_depth: f64 },
+    /// The fleet gained `card` (a pooled spare or a fresh attach)
+    /// because the latency SLO burned at `short_burn` / `long_burn`
+    /// over the short / long window — queue depth alone did not
+    /// justify it.
+    SloGrown { seconds: f64, card: usize, short_burn: f64, long_burn: f64 },
 }
 
 impl FleetEvent {
@@ -189,7 +201,8 @@ impl FleetEvent {
         match *self {
             FleetEvent::SpareActivated { seconds, .. }
             | FleetEvent::DrainCompleted { seconds, .. }
-            | FleetEvent::FleetGrown { seconds, .. } => seconds,
+            | FleetEvent::FleetGrown { seconds, .. }
+            | FleetEvent::SloGrown { seconds, .. } => seconds,
         }
     }
 }
@@ -217,6 +230,15 @@ pub struct ElasticOutcome {
     pub drain_placed_cost_seconds: f64,
     /// Cards attached by watermark growth.
     pub grown_cards: usize,
+    /// Cards gained through SLO burn-rate alerts (spares activated or
+    /// cards attached — disjoint from `grown_cards`).
+    pub slo_grown_cards: usize,
+    /// Instants at which the SLO burn monitor raised an alert (both
+    /// windows over threshold), in simulation order.
+    pub slo_alerts: Vec<f64>,
+    /// (short, long) window burn fractions at the end of the run —
+    /// (0, 0) when no SLO policy was configured or the burn cleared.
+    pub slo_final_burn: (f64, f64),
     /// Remaining reduction hop-bytes just before each growth rebalance
     /// (summed over growths).
     pub post_grow_identity_hop_bytes: u64,
@@ -251,7 +273,9 @@ impl ElasticOutcome {
             "elastic run over {} card(s): makespan {:.4} s, {} retried, {} rerouted\n\
              spares: {} activated, {} drain(s) completed in {:.4} s total \
              (spare-pick gain {:.2}x)\n\
-             growth: {} card(s) attached, queued hop-bytes {:.1} -> {:.1} MB\n",
+             growth: {} card(s) attached, queued hop-bytes {:.1} -> {:.1} MB\n\
+             slo: {} card(s) via burn alerts, {} alert instant(s), \
+             final burn {:.2}/{:.2}\n",
             self.final_cards,
             self.schedule.makespan_seconds,
             self.schedule.retries,
@@ -263,6 +287,10 @@ impl ElasticOutcome {
             self.grown_cards,
             self.post_grow_identity_hop_bytes as f64 / 1e6,
             self.post_grow_placed_hop_bytes as f64 / 1e6,
+            self.slo_grown_cards,
+            self.slo_alerts.len(),
+            self.slo_final_burn.0,
+            self.slo_final_burn.1,
         );
         for e in &self.events {
             out.push_str(&match *e {
@@ -276,6 +304,10 @@ impl ElasticOutcome {
                 ),
                 FleetEvent::FleetGrown { seconds, card, queue_depth } => format!(
                     "  {seconds:>10.4} s  fabric grew card {card} (queue depth {queue_depth:.2})\n"
+                ),
+                FleetEvent::SloGrown { seconds, card, short_burn, long_burn } => format!(
+                    "  {seconds:>10.4} s  slo burn grew card {card} \
+                     (burn {short_burn:.2}/{long_burn:.2})\n"
                 ),
             });
         }
@@ -383,6 +415,10 @@ pub struct FleetController<'a, F: Fn(usize, &Shard) -> f64> {
     grown: usize,
     post_grow_identity_hop_bytes: u64,
     post_grow_placed_hop_bytes: u64,
+    slo_monitor: Option<BurnMonitor>,
+    slo_grown: usize,
+    slo_last_grow: f64,
+    slo_alerts: Vec<f64>,
     tracer: Tracer,
 }
 
@@ -470,6 +506,10 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             grown: 0,
             post_grow_identity_hop_bytes: 0,
             post_grow_placed_hop_bytes: 0,
+            slo_monitor: config.slo.map(BurnMonitor::new),
+            slo_grown: 0,
+            slo_last_grow: f64::NEG_INFINITY,
+            slo_alerts: Vec::new(),
             tracer: Tracer::off(),
         })
     }
@@ -509,8 +549,13 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
     fn apply_faults(&mut self, now: f64) {
         while self.pending_faults.front().map_or(false, |f| f.seconds() <= now) {
             match self.pending_faults.pop_front().expect("front checked") {
-                Fault::SlowLink { a, b, factor, .. } => {
-                    self.fabric.slow_link(a, b, factor);
+                Fault::SlowLink { a, b, factor, seconds } => {
+                    if self.fabric.slow_link(a, b, factor) && self.tracer.is_recording() {
+                        // Sample the degraded cable's relative rate so
+                        // the anomaly localizer can name the link.
+                        let rate = 1.0 / self.fabric.cable_slow(a, b).unwrap_or(1.0);
+                        self.tracer.counter(&format!("link_rate {a}<->{b}"), seconds, rate);
+                    }
                 }
                 Fault::SpikeQueue { card, busy_seconds, seconds } => {
                     if card < self.cards && self.enabled[card] && !self.dead[card] {
@@ -715,6 +760,78 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
         }
     }
 
+    /// Splice one fresh card into the fabric and extend every per-card
+    /// vector for it; returns the new card id. Shared by watermark and
+    /// SLO-burn growth.
+    fn grow_one(&mut self, now: f64) -> usize {
+        let report = self.fabric.attach_card();
+        let card = report.card;
+        self.cards += 1;
+        self.enabled.push(true);
+        self.dead.push(false);
+        self.sticky.push(false);
+        self.deaths.push(None);
+        self.queues.push(VecDeque::new());
+        self.link_free.push(now.max(0.0));
+        self.out_free.push(0.0);
+        self.card_free.push(0.0);
+        self.compute_free.push(0.0);
+        self.compute_ends.push(Vec::new());
+        self.traces.push(DeviceTrace::default());
+        card
+    }
+
+    /// SLO burn-rate growth: when the p99 latency objective burns over
+    /// threshold in both the short and the long window, add capacity —
+    /// activating the lowest-id live pooled spare when one exists (it
+    /// is already wired), attaching a fresh card otherwise. This fires
+    /// even when raw queue depth sits below the watermark: sustained
+    /// burn, not backlog, is the trigger. One action per cooldown
+    /// window so the added capacity has a window to land before the
+    /// monitor re-evaluates.
+    fn maybe_grow_slo(&mut self, now: f64) {
+        let Some(monitor) = self.slo_monitor.as_mut() else { return };
+        if !now.is_finite() {
+            return;
+        }
+        let policy = monitor.policy();
+        let Some((short_burn, long_burn)) = monitor.evaluate(now) else { return };
+        if self.slo_alerts.last() != Some(&now) {
+            self.slo_alerts.push(now);
+        }
+        if self.slo_grown >= policy.max_growth || now < self.slo_last_grow + policy.window_s {
+            return;
+        }
+        let pooled = self
+            .spare_pool
+            .iter()
+            .copied()
+            .filter(|&s| !self.dead[s] && self.death(s).map_or(true, |td| td > now))
+            .min();
+        let card = match pooled {
+            Some(s) => {
+                // An SLO activation is ordinary capacity, not a drain
+                // target: the spare stays non-sticky so rebalance and
+                // stealing treat it like any live card.
+                self.spare_pool.retain(|&x| x != s);
+                self.enabled[s] = true;
+                self.link_free[s] = self.link_free[s].max(now);
+                s
+            }
+            None => self.grow_one(now),
+        };
+        self.slo_grown += 1;
+        self.slo_last_grow = now;
+        self.events.push(FleetEvent::SloGrown { seconds: now, card, short_burn, long_burn });
+        self.tracer.instant(
+            Track::Control,
+            Category::Drain,
+            || format!("slo burn: fleet grew card {card}"),
+            now,
+        );
+        self.rebalance_queues(now);
+    }
+
     /// Attach cards while the queue-depth watermark is exceeded and
     /// growth budget remains, rebalancing queued work after each.
     fn maybe_grow(&mut self, now: f64) {
@@ -731,20 +848,7 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             if depth <= watermark {
                 return;
             }
-            let report = self.fabric.attach_card();
-            let card = report.card;
-            self.cards += 1;
-            self.enabled.push(true);
-            self.dead.push(false);
-            self.sticky.push(false);
-            self.deaths.push(None);
-            self.queues.push(VecDeque::new());
-            self.link_free.push(now.max(0.0));
-            self.out_free.push(0.0);
-            self.card_free.push(0.0);
-            self.compute_free.push(0.0);
-            self.compute_ends.push(Vec::new());
-            self.traces.push(DeviceTrace::default());
+            let card = self.grow_one(now);
             self.grown += 1;
             self.events.push(FleetEvent::FleetGrown { seconds: now, card, queue_depth: depth });
             self.tracer.instant(
@@ -806,6 +910,7 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             if now.is_finite() {
                 self.apply_faults(now);
                 self.maybe_grow(now);
+                self.maybe_grow_slo(now);
                 self.tracer.counter("queue_depth", now, self.pending as f64);
             }
             // The live card whose host link frees first starts the
@@ -965,6 +1070,12 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             self.traces[d].compute_seconds += comp;
             self.traces[d].shards += 1;
             self.compute_intervals.push((c_start, c_end));
+            // Shard latency = DMA start to compute end: the window the
+            // SLO monitor burns against and the dashboards quantile.
+            if let Some(m) = self.slo_monitor.as_mut() {
+                m.record(c_end, c_end - t_start);
+            }
+            self.tracer.counter("shard_latency_s", c_end, c_end - t_start);
             self.tracer.span(
                 Track::CardDma(d),
                 Category::Host,
@@ -1098,6 +1209,8 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             .iter()
             .filter(|e| matches!(e, FleetEvent::DrainCompleted { .. }))
             .count();
+        let slo_final_burn =
+            self.slo_monitor.as_ref().map_or((0.0, 0.0), |m| m.burn_at(makespan));
         ElasticOutcome {
             schedule: ScheduleOutcome {
                 per_device: traces,
@@ -1118,6 +1231,9 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
             drain_identity_cost_seconds: self.drain_identity_cost_seconds,
             drain_placed_cost_seconds: self.drain_placed_cost_seconds,
             grown_cards: self.grown,
+            slo_grown_cards: self.slo_grown,
+            slo_alerts: self.slo_alerts,
+            slo_final_burn,
             post_grow_identity_hop_bytes: self.post_grow_identity_hop_bytes,
             post_grow_placed_hop_bytes: self.post_grow_placed_hop_bytes,
             final_cards: self.cards,
@@ -1144,7 +1260,7 @@ mod tests {
     }
 
     fn spares(n: usize) -> ElasticConfig {
-        ElasticConfig { hot_spares: n, scale_watermark: None, max_growth: 0 }
+        ElasticConfig { hot_spares: n, scale_watermark: None, max_growth: 0, slo: None }
     }
 
     /// A ring over `active` cards with `k` spares spliced in.
@@ -1258,7 +1374,7 @@ mod tests {
         let p = plan(PartitionStrategy::Row1D { devices: 8 }, 8192);
         let topo = Topology::ring(2);
         let config =
-            ElasticConfig { hot_spares: 0, scale_watermark: Some(1.5), max_growth: 2 };
+            ElasticConfig { hot_spares: 0, scale_watermark: Some(1.5), max_growth: 2, slo: None };
         let out =
             run_elastic_schedule(&p, 2, &host(), &topo, &FaultPlan::none(), config, flat)
                 .unwrap();
@@ -1328,7 +1444,7 @@ mod tests {
         };
         let faults = FaultPlan::seeded(7, 8, 2.0);
         let config =
-            ElasticConfig { hot_spares: 1, scale_watermark: Some(4.0), max_growth: 1 };
+            ElasticConfig { hot_spares: 1, scale_watermark: Some(4.0), max_growth: 1, slo: None };
         let run = || {
             run_elastic_schedule(&p, 8, &host(), &topo, &faults, config, |_, _| 0.5).unwrap()
         };

@@ -14,6 +14,7 @@
 //! and reduction-overlap gauges alongside the compute numbers.
 
 use super::elastic::{run_elastic_schedule_traced, ElasticConfig, ElasticOutcome, Fault, FaultPlan};
+use crate::observe::slo::SloPolicy;
 use super::interconnect::Link;
 use super::partition::{PartitionPlan, PartitionStrategy, Shard};
 use super::scheduler::{run_schedule_traced, run_schedule_with_failures_traced, ScheduleOutcome};
@@ -300,6 +301,11 @@ pub struct ClusterSim {
     /// Queue-depth watermark for elastic growth (pending shards per
     /// live card; None disables growth).
     pub scale_watermark: Option<f64>,
+    /// Latency SLO for burn-rate-driven growth during
+    /// [`Self::simulate_elastic`]: sustained p99 burn activates a
+    /// spare or attaches a card even below the queue-depth watermark
+    /// (None disables it).
+    pub slo: Option<SloPolicy>,
     /// The flight recorder every simulate path threads through
     /// ([`crate::trace`]). Defaults to the no-op sink; attach a
     /// [`Tracer::recording`] with [`Self::with_trace`] to capture
@@ -330,6 +336,7 @@ impl ClusterSim {
             placement: PlacementStrategy::default(),
             hot_spares: 0,
             scale_watermark: None,
+            slo: None,
             trace: Tracer::off(),
         }
     }
@@ -376,6 +383,14 @@ impl ClusterSim {
     /// [`Self::simulate_elastic`].
     pub fn with_watermark(mut self, scale_watermark: Option<f64>) -> Self {
         self.scale_watermark = scale_watermark;
+        self
+    }
+
+    /// Same sim with a latency SLO (builder style): sustained burn
+    /// grows the fleet during [`Self::simulate_elastic`] even when
+    /// queue depth sits below the watermark.
+    pub fn with_slo(mut self, slo: Option<SloPolicy>) -> Self {
+        self.slo = slo;
         self
     }
 
@@ -453,6 +468,7 @@ impl ClusterSim {
                 hot_spares: self.hot_spares,
                 scale_watermark: None,
                 max_growth: 0,
+                slo: None,
             };
             run_elastic_schedule_traced(
                 plan,
@@ -510,6 +526,7 @@ impl ClusterSim {
                 hot_spares: self.hot_spares,
                 scale_watermark: None,
                 max_growth: 0,
+                slo: None,
             };
             let outcome = run_elastic_schedule_traced(
                 plan,
@@ -550,6 +567,7 @@ impl ClusterSim {
         let config = ElasticConfig {
             hot_spares: self.hot_spares,
             scale_watermark: self.scale_watermark,
+            slo: self.slo,
             ..ElasticConfig::default()
         };
         run_elastic_schedule_traced(

@@ -58,6 +58,7 @@ pub use elastic::{
     run_elastic_schedule, run_elastic_schedule_traced, ElasticConfig, ElasticOutcome, Fault,
     FaultPlan, FleetController, FleetEvent,
 };
+pub use crate::observe::slo::SloPolicy;
 pub use fleet::{ClusterDevice, ClusterReport, ClusterSim, DeviceReport, Fleet};
 pub use interconnect::{Interconnect, Link};
 pub use partition::{PartitionPlan, PartitionStrategy, Shard};

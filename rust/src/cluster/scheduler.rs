@@ -391,6 +391,9 @@ pub fn run_schedule_with_failures_traced(
             c_start,
             c_end,
         );
+        // Shard latency (DMA start to compute end): the same gauge the
+        // elastic path feeds the observatory's sliding windows.
+        tracer.counter("shard_latency_s", c_end, c_end - t_start);
 
         // Tile bookkeeping: fabric reductions and the final writeback.
         let tile = tiles.get_mut(&shard.tile()).unwrap();

@@ -5,6 +5,25 @@ use crate::util::stats::LogHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Saturating seconds→microseconds conversion for the `u64` gauges.
+/// A plain `(x * 1e6) as u64` is UB-adjacent on non-finite input and
+/// silently clamps huge values architecture-dependently; this pins the
+/// edge cases: NaN / negative → 0, +∞ / overflow → `u64::MAX`.
+pub(crate) fn saturating_us(seconds: f64) -> u64 {
+    let us = seconds * 1e6;
+    if !us.is_finite() || us <= 0.0 {
+        if us == f64::INFINITY {
+            u64::MAX
+        } else {
+            0
+        }
+    } else if us >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        us as u64
+    }
+}
+
 /// Shared metrics handle (cheap to clone via Arc at the service level).
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -99,7 +118,7 @@ impl Metrics {
         for (slot, bucket) in self.critical_bucket_us.iter().zip(crate::trace::critical::BUCKETS)
         {
             let secs = path.bucket_seconds.get(bucket).copied().unwrap_or(0.0);
-            slot.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+            slot.fetch_add(saturating_us(secs), Ordering::Relaxed);
         }
     }
 
@@ -132,23 +151,23 @@ impl Metrics {
         self.shards_executed.fetch_add(report.shards as u64, Ordering::Relaxed);
         self.cluster_steals.fetch_add(report.steals as u64, Ordering::Relaxed);
         let busy: f64 = report.per_device.iter().map(|d| d.compute_seconds).sum();
-        self.cluster_busy_us.fetch_add((busy * 1e6) as u64, Ordering::Relaxed);
+        self.cluster_busy_us.fetch_add(saturating_us(busy), Ordering::Relaxed);
         self.cluster_makespan_us
-            .fetch_add((report.makespan_seconds * 1e6) as u64, Ordering::Relaxed);
+            .fetch_add(saturating_us(report.makespan_seconds), Ordering::Relaxed);
         self.fabric_reduction_us
-            .fetch_add((report.reduction_seconds * 1e6) as u64, Ordering::Relaxed);
+            .fetch_add(saturating_us(report.reduction_seconds), Ordering::Relaxed);
         self.fabric_reduction_overlap_us
-            .fetch_add((report.reduction_overlap_seconds * 1e6) as u64, Ordering::Relaxed);
+            .fetch_add(saturating_us(report.reduction_overlap_seconds), Ordering::Relaxed);
         self.fabric_link_busy_us
-            .fetch_add((report.link_busy_seconds * 1e6) as u64, Ordering::Relaxed);
+            .fetch_add(saturating_us(report.link_busy_seconds), Ordering::Relaxed);
         let capacity = report.makespan_seconds * report.directed_links as f64;
-        self.fabric_link_capacity_us.fetch_add((capacity * 1e6) as u64, Ordering::Relaxed);
+        self.fabric_link_capacity_us.fetch_add(saturating_us(capacity), Ordering::Relaxed);
         self.placement_identity_hop_bytes
             .fetch_add(report.placement_identity_hop_bytes, Ordering::Relaxed);
         self.placement_placed_hop_bytes
             .fetch_add(report.placement_placed_hop_bytes, Ordering::Relaxed);
         self.placement_search_us
-            .fetch_add((report.placement_search_seconds * 1e6) as u64, Ordering::Relaxed);
+            .fetch_add(saturating_us(report.placement_search_seconds), Ordering::Relaxed);
     }
 
     /// Record one elastic run's controller gauges (spare activations,
@@ -161,8 +180,13 @@ impl Metrics {
         self.elastic_drains_completed
             .fetch_add(outcome.drains_completed as u64, Ordering::Relaxed);
         self.elastic_drain_us
-            .fetch_add((outcome.drain_seconds * 1e6) as u64, Ordering::Relaxed);
-        self.elastic_grown_cards.fetch_add(outcome.grown_cards as u64, Ordering::Relaxed);
+            .fetch_add(saturating_us(outcome.drain_seconds), Ordering::Relaxed);
+        // Watermark- and SLO-burn-grown cards land in the same gauge:
+        // both attach a card the plan did not start with.
+        self.elastic_grown_cards.fetch_add(
+            (outcome.grown_cards + outcome.slo_grown_cards) as u64,
+            Ordering::Relaxed,
+        );
         self.post_grow_identity_hop_bytes
             .fetch_add(outcome.post_grow_identity_hop_bytes, Ordering::Relaxed);
         self.post_grow_placed_hop_bytes
@@ -223,7 +247,7 @@ impl Metrics {
         let bucket = (report.depth as usize).min(self.strassen_depths.len() - 1);
         Self::inc(&self.strassen_depths[bucket]);
         self.strassen_eff_vs_peak_ppm
-            .fetch_add((report.effective_vs_peak() * 1e6) as u64, Ordering::Relaxed);
+            .fetch_add(saturating_us(report.effective_vs_peak()), Ordering::Relaxed);
     }
 
     /// Mean effective-vs-peak ratio over all Strassen jobs (0.0 before
@@ -297,9 +321,16 @@ impl Metrics {
                 self.strassen_depths[i].load(Ordering::Relaxed)
             }),
             strassen_eff_vs_peak_ppm: self.strassen_eff_vs_peak_ppm.load(Ordering::Relaxed),
-            latency_p50_us: (lat.quantile(0.50) * 1e6) as u64,
-            latency_p99_us: (lat.quantile(0.99) * 1e6) as u64,
-            latency_p999_us: (lat.quantile(0.999) * 1e6) as u64,
+            // Explicitly zero when no sample has been recorded — the
+            // quantile of an empty histogram must never surface as a
+            // garbage reading — and saturating otherwise.
+            latency_p50_us: if lat.is_empty() { 0 } else { saturating_us(lat.quantile(0.50)) },
+            latency_p99_us: if lat.is_empty() { 0 } else { saturating_us(lat.quantile(0.99)) },
+            latency_p999_us: if lat.is_empty() {
+                0
+            } else {
+                saturating_us(lat.quantile(0.999))
+            },
             latency_count: lat.count(),
             critical_bucket_us: std::array::from_fn(|i| {
                 self.critical_bucket_us[i].load(Ordering::Relaxed)
@@ -507,6 +538,37 @@ mod tests {
         assert!((s.latency_p999_us as f64 - 999_000.0).abs() < 0.04 * 999_000.0);
         assert!(s.latency_p50_us <= s.latency_p99_us && s.latency_p99_us <= s.latency_p999_us);
         assert!(m.latency_report_line().contains("p999"));
+    }
+
+    #[test]
+    fn saturating_us_pins_the_edge_cases() {
+        assert_eq!(saturating_us(0.0), 0);
+        assert_eq!(saturating_us(-1.0), 0);
+        assert_eq!(saturating_us(f64::NAN), 0);
+        assert_eq!(saturating_us(f64::NEG_INFINITY), 0);
+        assert_eq!(saturating_us(f64::INFINITY), u64::MAX);
+        assert_eq!(saturating_us(1e300), u64::MAX, "overflow saturates, never wraps");
+        assert_eq!(saturating_us(1.5), 1_500_000);
+        assert_eq!(saturating_us(2.5e-6), 2);
+    }
+
+    #[test]
+    fn empty_latency_snapshot_reports_zero_not_garbage() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, 0);
+        assert_eq!((s.latency_p50_us, s.latency_p99_us, s.latency_p999_us), (0, 0, 0));
+        // One sample: all quantiles collapse onto it.
+        m.record_latency(0.002);
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, 1);
+        assert_eq!(s.latency_p50_us, 2_000);
+        assert_eq!(s.latency_p99_us, 2_000);
+        // A non-finite latency cannot poison the gauges.
+        m.record_latency(f64::INFINITY);
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, 2);
+        assert!(s.latency_p999_us < u64::MAX);
     }
 
     #[test]

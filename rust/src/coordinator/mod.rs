@@ -34,7 +34,7 @@ pub mod service;
 pub mod workload;
 
 pub use batcher::{Batch, Batcher};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Route, Router};
 pub use service::{GemmRequest, GemmResponse, GemmService, ServiceConfig};
 pub use workload::{TraceEntry, WorkloadGen};

@@ -9,7 +9,7 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::router::{Route, Router};
 use crate::blocked::{OffchipSim, SimReport};
-use crate::cluster::{ClusterReport, ClusterSim, FaultPlan, Fleet};
+use crate::cluster::{ClusterReport, ClusterSim, FaultPlan, Fleet, SloPolicy};
 use crate::fabric::Topology;
 use crate::gemm::{matmul_blocked, Matrix};
 use crate::perfmodel::flop_count;
@@ -90,6 +90,11 @@ pub struct ServiceConfig {
     /// Queue-depth watermark for elastic fabric growth (pending shards
     /// per live card; None keeps the fleet fixed).
     pub scale_watermark: Option<f64>,
+    /// Latency SLO for the sharded route's fleet: sustained p99
+    /// burn-rate alerts grow the fabric even when raw queue depth
+    /// never crosses the watermark (see [`crate::observe::slo`]).
+    /// None disables burn-driven growth.
+    pub slo: Option<SloPolicy>,
     /// Device→card placement the sharded route's planner applies to
     /// reduction-carrying plans before simulating them (identity
     /// disables the optimizer; the default is the seeded local
@@ -118,6 +123,7 @@ impl Default for ServiceConfig {
             cluster_topology: None,
             hot_spares: 0,
             scale_watermark: None,
+            slo: None,
             placement: PlacementStrategy::default(),
             trace: false,
             strassen: StrassenConfig::default(),
@@ -185,6 +191,18 @@ impl GemmService {
         Some(path)
     }
 
+    /// Scrape the service gauges in the Prometheus text exposition
+    /// format (see [`crate::observe::prometheus_text`]).
+    pub fn prometheus_text(&self) -> String {
+        crate::observe::prometheus_text(&self.metrics.snapshot())
+    }
+
+    /// The same gauges as one stable JSON object (see
+    /// [`crate::observe::json_snapshot`]).
+    pub fn json_snapshot(&self) -> String {
+        crate::observe::json_snapshot(&self.metrics.snapshot())
+    }
+
     /// Submit a job; returns the receiver for its response.
     pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
         let (rtx, rrx) = mpsc::channel();
@@ -231,6 +249,7 @@ impl GemmService {
         }
         .with_placement(config.placement)
         .with_watermark(config.scale_watermark)
+        .with_slo(config.slo)
         .with_trace(trace);
         let batcher = if config.bucket_shapes {
             // Bucket to the fleet design's blocking-padded extents.
@@ -366,7 +385,10 @@ impl GemmService {
                 // watermark armed — so a backlog that crosses the
                 // watermark grows the fabric in the reported makespan
                 // and the elastic gauges accumulate.
-                if cluster.hot_spares > 0 || cluster.scale_watermark.is_some() {
+                if cluster.hot_spares > 0
+                    || cluster.scale_watermark.is_some()
+                    || cluster.slo.is_some()
+                {
                     if let Ok(out) = cluster.simulate_elastic(&plan, &FaultPlan::none()) {
                         metrics.record_elastic(&out);
                         report = cluster.elastic_report(&plan, &out);
@@ -730,6 +752,42 @@ mod tests {
         let snap = svc.metrics.snapshot();
         assert!(snap.critical_bucket_us.iter().sum::<u64>() > 0);
         assert!(snap.latency_count >= 1, "histogram saw the request");
+    }
+
+    #[test]
+    fn service_exposes_prometheus_and_json_scrapes() {
+        let svc = GemmService::start(no_artifact_config()).unwrap();
+        let a = Matrix::random(32, 16, 31);
+        let b = Matrix::random(16, 24, 32);
+        svc.submit_sync(GemmRequest { id: 20, a, b, chain: None, error_budget: None })
+            .result
+            .unwrap();
+        let text = svc.prometheus_text();
+        assert!(text.contains("systo3d_requests_total 1\n"));
+        assert!(text.contains("systo3d_fallbacks_total 1\n"));
+        assert!(text.contains("# TYPE systo3d_latency_p99_us gauge"));
+        let json = svc.json_snapshot();
+        assert!(json.contains("\"requests\":1"));
+        assert!(json.contains("\"latency_count\":1"));
+    }
+
+    #[test]
+    fn slo_configured_service_stays_bit_exact() {
+        // The burn monitor only moves where shards run; the functional
+        // answer is untouched and the elastic gauges accumulate.
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            cluster_devices: 2,
+            slo: Some(SloPolicy::default()),
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(1025, 1025, 91);
+        let b = Matrix::random(1025, 1025, 92);
+        let want = matmul_blocked(&a, &b);
+        let resp = svc.submit_sync(GemmRequest { id: 14, a, b, chain: None, error_budget: None });
+        assert_eq!(resp.route, Route::Sharded);
+        assert_eq!(resp.result.unwrap().data, want.data);
     }
 
     #[test]

@@ -244,6 +244,18 @@ impl FabricState {
         }
     }
 
+    /// Accumulated slowdown factor of the cable between `a` and `b`
+    /// (1.0 for a healthy cable, None when no such cable exists). The
+    /// observatory's link telemetry reports `1 / cable_slow` as the
+    /// cable's negotiated line-rate fraction.
+    pub fn cable_slow(&self, a: usize, b: usize) -> Option<f64> {
+        self.topology
+            .edges
+            .iter()
+            .position(|e| (e.a, e.b) == (a, b) || (e.a, e.b) == (b, a))
+            .map(|e| self.slow[e])
+    }
+
     /// One QSFP28 lane (the unit every edge width multiplies).
     pub fn lane(&self) -> Link {
         self.lane
@@ -560,8 +572,12 @@ mod tests {
         let mut f = FabricState::new(Topology::ring(4));
         let bytes = 200_000_000u64;
         let (_, lone) = f.send(0, 2, bytes, 0.0).unwrap();
+        assert_eq!(f.cable_slow(1, 2), Some(1.0), "healthy cable reads 1.0");
         assert!(f.slow_link(1, 2, 3.0), "cable exists");
         assert!(!f.slow_link(0, 2, 2.0), "no such cable on a 4-ring");
+        assert_eq!(f.cable_slow(1, 2), Some(3.0));
+        assert_eq!(f.cable_slow(2, 1), Some(3.0), "order-insensitive lookup");
+        assert_eq!(f.cable_slow(0, 2), None);
         f.reset_occupancy();
         // 0->1->2 crosses the degraded cable: the whole circuit holds 3x.
         let (_, slowed) = f.send(0, 2, bytes, 0.0).unwrap();

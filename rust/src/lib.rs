@@ -70,6 +70,7 @@ pub mod fpga;
 pub mod gemm;
 pub mod hls;
 pub mod memory;
+pub mod observe;
 pub mod perfmodel;
 pub mod placement;
 pub mod runtime;

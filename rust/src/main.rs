@@ -10,6 +10,9 @@
 //!   a synthetic request stream and print throughput/latency metrics.
 //! * `trace [--devices 16] [--out trace.json]` — flight-record a seeded
 //!   elastic chaos run, write the Chrome trace, print the critical path.
+//! * `top [--devices 8] [--seed 0]` — the live fleet observatory:
+//!   sliding-window sparklines, SLO burn-rate alerts, and the anomaly
+//!   localizer's verdict for one seeded chaos run.
 
 use systo3d::cli::Args;
 use systo3d::coordinator::{GemmRequest, GemmService, ServiceConfig};
@@ -40,6 +43,7 @@ fn main() {
         Some("fabric") => cmd_fabric(&args),
         Some("strassen") => cmd_strassen(&args),
         Some("trace") => cmd_trace(&args),
+        Some("top") => cmd_top(&args),
         Some("perfgate") => cmd_perfgate(&args),
         _ => {
             print_usage();
@@ -103,6 +107,24 @@ fn print_usage() {
                   \x20 attributes every second to compute/fabric/host/drain/idle — the\n\
                   \x20 buckets sum to the makespan by construction, so the shares say\n\
                   \x20 where speedups will (and will not) pay off\n\
+         top      [--devices 8] [--spares 1] [--d2 8192] [--design G] [--seed 0]\n\
+                  [--width 48]               live fleet observatory for one seeded\n\
+                  \x20                         elastic chaos run\n\
+                  \x20 Watching a live fleet: `systo3d top` derives the whole dashboard\n\
+                  \x20 from the flight recorder's trace — one sparkline per gauge, in\n\
+                  \x20 simulated time: per-card compute-busy fraction, per-link circuit\n\
+                  \x20 utilization, the controller's queue-depth counter, windowed\n\
+                  \x20 goodput (shards/s), and the sliding-window p99 shard latency\n\
+                  \x20 (trailing 4 windows merged). Below the sparklines the anomaly\n\
+                  \x20 localizer names what the chaos plan degraded (slow cable, stalled\n\
+                  \x20 card) from the trace alone, and the SLO line reports burn-rate\n\
+                  \x20 alerts: the p99 target is pinned at 2x the healthy run's p99, a\n\
+                  \x20 window burns when >25% of its shard latencies violate the target,\n\
+                  \x20 and a sustained burn (short AND long window hot) grows the fleet\n\
+                  \x20 even when raw queue depth never crosses the watermark. The same\n\
+                  \x20 gauges are scrapeable in-process: GemmService::prometheus_text()\n\
+                  \x20 emits the Prometheus text format, ::json_snapshot() one JSON\n\
+                  \x20 object per scrape\n\
          perfgate [--out BENCH.json] [--baseline rust/benches/baseline.json]\n\
                   [--merge a.json,b.json] [--tolerance 0.10] [--d2 8192]\n\
                   \x20                         record headline metrics, write the bench\n\
@@ -694,6 +716,103 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         systo3d::util::json::write_metrics(p, &metrics)?;
         println!("wrote {} metric(s) to {p}", metrics.len());
     }
+    Ok(())
+}
+
+/// The live fleet observatory for one seeded elastic chaos run:
+/// sliding-window sparklines derived from the flight recorder's trace,
+/// the anomaly localizer's verdict on what the chaos plan degraded,
+/// and the SLO burn-rate alerts that drove growth. The p99 target is
+/// pinned at 2x the healthy run's p99 so the dashboard is meaningful
+/// at any problem size.
+fn cmd_top(args: &Args) -> anyhow::Result<()> {
+    use systo3d::cluster::{ClusterSim, FaultPlan, Fleet, SloPolicy};
+    use systo3d::cluster::{PartitionPlan, PartitionStrategy};
+    use systo3d::fabric::Topology;
+    use systo3d::observe::{anomaly, Observatory};
+    use systo3d::trace::Tracer;
+
+    let devices = args.get_usize("devices", 8).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(devices >= 2, "--devices must be at least 2");
+    let spares = args.get_usize("spares", 1).map_err(anyhow::Error::msg)?;
+    let d2 = args.get_u64("d2", 8192).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let id = args.get_str("design", "G").to_uppercase();
+    let width = args.get_usize("width", 48).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(width >= 8, "--width must be at least 8");
+
+    let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(devices as u64), d2, d2, d2)
+        .map_err(anyhow::Error::msg)?;
+    let build = |slo: Option<SloPolicy>| -> anyhow::Result<ClusterSim> {
+        let fleet = Fleet::homogeneous(devices + spares, &id).map_err(anyhow::Error::msg)?;
+        Ok(ClusterSim::with_topology_and_spares(
+            fleet,
+            Topology::torus_near_square(devices),
+            spares,
+        )
+        .with_watermark(Some(2.0))
+        .with_slo(slo)
+        .with_trace(Tracer::recording()))
+    };
+
+    // Healthy run first: the horizon the fault plan is seeded against
+    // and the baseline p99 the SLO target is pinned to.
+    let healthy = build(None)?;
+    let healthy_out =
+        healthy.simulate_elastic(&plan, &FaultPlan::none()).map_err(anyhow::Error::msg)?;
+    let horizon = healthy_out.schedule.makespan_seconds;
+    let healthy_obs =
+        Observatory::from_trace(&healthy.trace.snapshot(), (horizon / 24.0).max(1e-6));
+    let healthy_p99 = healthy_obs.latency_p99.max().unwrap_or(horizon);
+    let policy = SloPolicy {
+        p99_latency_s: 2.0 * healthy_p99,
+        window_s: (horizon / 12.0).max(1e-6),
+        long_windows: 4,
+        burn_threshold: 0.25,
+        max_growth: 2,
+    };
+
+    let faults = FaultPlan::seeded(seed, devices + spares, horizon);
+    let sim = build(Some(policy))?;
+    let outcome = sim.simulate_elastic(&plan, &faults).map_err(anyhow::Error::msg)?;
+    let log = sim.trace.snapshot();
+    let obs =
+        Observatory::from_trace(&log, (outcome.schedule.makespan_seconds / 24.0).max(1e-6));
+
+    println!(
+        "seed {seed} on a {devices}-card torus (+{spares} spare(s)); SLO: p99 <= {:.4} s \
+         (2x healthy), burn windows {:.4} s / {:.4} s, threshold 25%",
+        policy.p99_latency_s,
+        policy.window_s,
+        policy.window_s * policy.long_windows as f64,
+    );
+    print!("{}", obs.render_dashboard(width));
+    print!("{}", anomaly::localize(&log, 0.1 * horizon).render());
+    if outcome.slo_alerts.is_empty() {
+        println!(
+            "slo: no sustained burn (final burn {:.2}/{:.2})",
+            outcome.slo_final_burn.0, outcome.slo_final_burn.1
+        );
+    } else {
+        println!(
+            "slo: {} sustained-burn instant(s), first at {:.4} s; grew {} card(s); \
+             final burn {:.2}/{:.2}",
+            outcome.slo_alerts.len(),
+            outcome.slo_alerts[0],
+            outcome.slo_grown_cards,
+            outcome.slo_final_burn.0,
+            outcome.slo_final_burn.1,
+        );
+    }
+    println!(
+        "chaos outcome: {} spare activation(s), {} drain(s), {} watermark-grown card(s), \
+         makespan {:.4} s (healthy {:.4} s)",
+        outcome.spare_activations,
+        outcome.drains_completed,
+        outcome.grown_cards,
+        outcome.schedule.makespan_seconds,
+        horizon,
+    );
     Ok(())
 }
 

@@ -1,0 +1,171 @@
+//! Fixed-capacity time series: the ring buffers behind the fleet
+//! observatory.
+//!
+//! A [`Series`] holds the most recent `cap` (time, value) samples of
+//! one gauge — per-card busy fraction, per-link utilization, queue
+//! depth, windowed goodput. Memory is bounded by construction: when
+//! the ring is full the oldest sample falls off and a drop counter
+//! ticks, so a dashboard can say "showing the last N windows" rather
+//! than silently truncating. Rendering is deliberately dumb ASCII —
+//! [`Series::sparkline`] maps the series onto a fixed character ramp
+//! so `systo3d top` works on any terminal.
+
+use std::collections::VecDeque;
+
+/// Density ramp for sparklines, lightest to darkest.
+const RAMP: &[u8] = b" .:-=+*#%@";
+
+/// One bounded gauge history.
+#[derive(Clone, Debug)]
+pub struct Series {
+    name: String,
+    cap: usize,
+    samples: VecDeque<(f64, f64)>,
+    dropped: usize,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, cap: usize) -> Self {
+        assert!(cap > 0, "a series needs capacity for at least one sample");
+        Self { name: name.into(), cap, samples: VecDeque::with_capacity(cap), dropped: 0 }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Samples the ring has forgotten.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Append a sample, evicting the oldest when full.
+    pub fn push(&mut self, at: f64, value: f64) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+            self.dropped += 1;
+        }
+        self.samples.push_back((at, value));
+    }
+
+    /// Oldest-to-newest iteration.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.samples.iter().copied()
+    }
+
+    pub fn latest(&self) -> Option<(f64, f64)> {
+        self.samples.back().copied()
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.samples.iter().map(|&(_, v)| v).reduce(f64::min)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        self.samples.iter().map(|&(_, v)| v).reduce(f64::max)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let sum: f64 = self.samples.iter().map(|&(_, v)| v).sum();
+        Some(sum / self.samples.len() as f64)
+    }
+
+    /// Render the series as `width` ramp characters: each cell is the
+    /// mean of the samples that fall into its share of the ring (by
+    /// position, not wall time — the observatory samples on a fixed
+    /// cadence, so position is time). A flat series renders as the
+    /// middle ramp character; an empty one as spaces.
+    pub fn sparkline(&self, width: usize) -> String {
+        if width == 0 {
+            return String::new();
+        }
+        if self.samples.is_empty() {
+            return " ".repeat(width);
+        }
+        let (lo, hi) = (self.min().expect("nonempty"), self.max().expect("nonempty"));
+        let n = self.samples.len();
+        let mut out = String::with_capacity(width);
+        for cell in 0..width {
+            let a = cell * n / width;
+            let b = ((cell + 1) * n / width).max(a + 1).min(n);
+            let mean: f64 =
+                self.samples.range(a..b).map(|&(_, v)| v).sum::<f64>() / (b - a) as f64;
+            let idx = if hi > lo {
+                let norm = ((mean - lo) / (hi - lo)).clamp(0.0, 1.0);
+                (norm * (RAMP.len() - 1) as f64).round() as usize
+            } else {
+                RAMP.len() / 2
+            };
+            out.push(RAMP[idx] as char);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let mut s = Series::new("g", 3);
+        for i in 0..5 {
+            s.push(i as f64, i as f64 * 10.0);
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.dropped(), 2);
+        let kept: Vec<f64> = s.iter().map(|(at, _)| at).collect();
+        assert_eq!(kept, vec![2.0, 3.0, 4.0]);
+        assert_eq!(s.latest(), Some((4.0, 40.0)));
+        assert_eq!(s.min(), Some(20.0));
+        assert_eq!(s.max(), Some(40.0));
+        assert_eq!(s.mean(), Some(30.0));
+        assert_eq!(s.name(), "g");
+    }
+
+    #[test]
+    fn empty_series_reads_as_absent_not_zero() {
+        let s = Series::new("empty", 4);
+        assert!(s.is_empty());
+        assert_eq!(s.latest(), None);
+        assert_eq!(s.min(), None);
+        assert_eq!(s.max(), None);
+        assert_eq!(s.mean(), None);
+        assert_eq!(s.sparkline(5), "     ");
+    }
+
+    #[test]
+    fn sparkline_ramps_with_the_data() {
+        let mut s = Series::new("ramp", 16);
+        for i in 0..16 {
+            s.push(i as f64, i as f64);
+        }
+        let line = s.sparkline(8);
+        assert_eq!(line.len(), 8);
+        assert!(line.starts_with(' '), "lowest cell uses the lightest glyph: {line:?}");
+        assert!(line.ends_with('@'), "highest cell uses the darkest glyph: {line:?}");
+        let ramp = |c: char| RAMP.iter().position(|&r| r as char == c).unwrap();
+        let idxs: Vec<usize> = line.chars().map(ramp).collect();
+        assert!(idxs.windows(2).all(|w| w[0] <= w[1]), "monotone data renders monotone: {line:?}");
+        // Flat data renders flat at the middle of the ramp.
+        let mut flat = Series::new("flat", 4);
+        for i in 0..4 {
+            flat.push(i as f64, 7.0);
+        }
+        let mid = RAMP[RAMP.len() / 2] as char;
+        assert_eq!(flat.sparkline(4), mid.to_string().repeat(4));
+        // Width larger than the sample count still fills every cell.
+        assert_eq!(flat.sparkline(9).len(), 9);
+    }
+}

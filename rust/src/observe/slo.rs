@@ -1,0 +1,299 @@
+//! Declarative service-level objectives evaluated as multi-window
+//! burn rates.
+//!
+//! Two consumers share the same arithmetic:
+//!
+//! * **Online** — [`BurnMonitor`] rides inside the elastic controller:
+//!   the scheduler records every shard's latency at commit time and
+//!   the monitor answers "is the p99 objective burning in both the
+//!   short and the long window right now?" at each scheduling
+//!   instant. A sustained burn (both windows over threshold) is the
+//!   alert that drives spare activation or fabric growth — the point
+//!   of the two-window rule is the classic one: the short window
+//!   catches the onset fast, the long window stops a single straggler
+//!   from paging the fleet.
+//! * **Offline** — [`SloSpec::alerts`] replays the same rule over any
+//!   recorded [`Series`] (latency, goodput, queue depth), so the
+//!   observatory can grade a finished trace against the objectives it
+//!   would have alerted on live.
+//!
+//! Burn here is the *fraction of samples violating the objective*
+//! inside a window — for a p99 objective a window is burning when
+//! more than `burn_threshold` of its samples exceed the target, i.e.
+//! the error budget (1% for p99) is being spent `burn_threshold/1%`
+//! times too fast.
+
+use super::series::Series;
+
+/// The latency SLO the elastic controller grows against.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// Per-shard latency target (DMA start to compute end) the p99
+    /// objective holds.
+    pub p99_latency_s: f64,
+    /// Short evaluation window; also the cooldown between two growth
+    /// actions.
+    pub window_s: f64,
+    /// The long window spans `long_windows` short windows.
+    pub long_windows: usize,
+    /// A window burns when the violating fraction reaches this.
+    pub burn_threshold: f64,
+    /// Cards the controller may add on SLO alerts across the run
+    /// (spares activated and cards attached both count).
+    pub max_growth: usize,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        Self {
+            p99_latency_s: 1.0,
+            window_s: 1.0,
+            long_windows: 4,
+            burn_threshold: 0.25,
+            max_growth: 2,
+        }
+    }
+}
+
+/// Sliding-window burn evaluator over (time, latency) samples.
+#[derive(Clone, Debug)]
+pub struct BurnMonitor {
+    policy: SloPolicy,
+    samples: Vec<(f64, f64)>,
+    high_water: f64,
+}
+
+impl BurnMonitor {
+    pub fn new(policy: SloPolicy) -> Self {
+        Self { policy, samples: Vec::new(), high_water: f64::NEG_INFINITY }
+    }
+
+    pub fn policy(&self) -> SloPolicy {
+        self.policy
+    }
+
+    /// Span of the long window in seconds.
+    pub fn long_span_s(&self) -> f64 {
+        self.policy.window_s * self.policy.long_windows.max(1) as f64
+    }
+
+    /// Record one sample: the shard finished at `at` after
+    /// `latency_s`.
+    pub fn record(&mut self, at: f64, latency_s: f64) {
+        self.samples.push((at, latency_s));
+    }
+
+    /// Violating fraction over samples in `(from, to]`, None when the
+    /// window holds no samples.
+    fn window_burn(&self, from: f64, to: f64) -> Option<f64> {
+        let mut total = 0u64;
+        let mut bad = 0u64;
+        for &(at, latency) in &self.samples {
+            if at > from && at <= to {
+                total += 1;
+                if latency > self.policy.p99_latency_s {
+                    bad += 1;
+                }
+            }
+        }
+        if total == 0 {
+            None
+        } else {
+            Some(bad as f64 / total as f64)
+        }
+    }
+
+    /// (short, long) burn at `now` without pruning — missing windows
+    /// read 0.0. Used for the end-of-run gauge.
+    pub fn burn_at(&self, now: f64) -> (f64, f64) {
+        let short = self.window_burn(now - self.policy.window_s, now).unwrap_or(0.0);
+        let long = self.window_burn(now - self.long_span_s(), now).unwrap_or(0.0);
+        (short, long)
+    }
+
+    /// Evaluate at `now`, aging out samples the long window can never
+    /// see again. Some((short, long)) when both windows hold samples
+    /// and both burn fractions reach the threshold.
+    pub fn evaluate(&mut self, now: f64) -> Option<(f64, f64)> {
+        self.high_water = self.high_water.max(now);
+        let horizon = self.high_water - self.long_span_s();
+        self.samples.retain(|&(at, _)| at > horizon);
+        let short = self.window_burn(now - self.policy.window_s, now)?;
+        let long = self.window_burn(now - self.long_span_s(), now)?;
+        if short >= self.policy.burn_threshold && long >= self.policy.burn_threshold {
+            Some((short, long))
+        } else {
+            None
+        }
+    }
+}
+
+/// What an offline objective holds a series to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// Sample values (latencies) must stay at or below `seconds`.
+    P99LatencyBelow { seconds: f64 },
+    /// Sample values (a throughput gauge) must stay at or above
+    /// `gflops`.
+    MinGflops { gflops: f64 },
+    /// Sample values (a depth gauge) must stay at or below `depth`.
+    MaxQueueDepth { depth: f64 },
+}
+
+impl Objective {
+    /// Does `value` violate the objective?
+    pub fn violated_by(&self, value: f64) -> bool {
+        match *self {
+            Objective::P99LatencyBelow { seconds } => value > seconds,
+            Objective::MinGflops { gflops } => value < gflops,
+            Objective::MaxQueueDepth { depth } => value > depth,
+        }
+    }
+}
+
+/// A named objective plus its burn windows.
+#[derive(Clone, Debug)]
+pub struct SloSpec {
+    pub name: String,
+    pub objective: Objective,
+    pub window_s: f64,
+    pub long_windows: usize,
+    pub burn_threshold: f64,
+}
+
+/// One sustained-burn instant: both windows over threshold at `at`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alert {
+    pub slo: String,
+    pub at: f64,
+    pub short_burn: f64,
+    pub long_burn: f64,
+}
+
+impl SloSpec {
+    fn burn(&self, series: &Series, from: f64, to: f64) -> Option<f64> {
+        let mut total = 0u64;
+        let mut bad = 0u64;
+        for (at, value) in series.iter() {
+            if at > from && at <= to {
+                total += 1;
+                if self.objective.violated_by(value) {
+                    bad += 1;
+                }
+            }
+        }
+        if total == 0 {
+            None
+        } else {
+            Some(bad as f64 / total as f64)
+        }
+    }
+
+    /// Replay the burn rule over a recorded series: one alert per
+    /// sample instant at which both windows burn.
+    pub fn alerts(&self, series: &Series) -> Vec<Alert> {
+        let long_span = self.window_s * self.long_windows.max(1) as f64;
+        let mut out = Vec::new();
+        for (at, _) in series.iter() {
+            let Some(short) = self.burn(series, at - self.window_s, at) else { continue };
+            let Some(long) = self.burn(series, at - long_span, at) else { continue };
+            if short >= self.burn_threshold && long >= self.burn_threshold {
+                out.push(Alert { slo: self.name.clone(), at, short_burn: short, long_burn: long });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> SloPolicy {
+        SloPolicy {
+            p99_latency_s: 1.0,
+            window_s: 2.0,
+            long_windows: 2,
+            burn_threshold: 0.5,
+            max_growth: 2,
+        }
+    }
+
+    #[test]
+    fn monitor_stays_quiet_with_no_samples_or_healthy_ones() {
+        let mut m = BurnMonitor::new(policy());
+        assert_eq!(m.evaluate(1.0), None, "empty windows never alert");
+        for i in 0..10 {
+            m.record(i as f64 * 0.5, 0.3);
+        }
+        assert_eq!(m.evaluate(5.0), None);
+        assert_eq!(m.burn_at(5.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn monitor_needs_both_windows_burning() {
+        // Long window healthy, short window hot: a fresh spike alone
+        // must not alert under a 0.5 threshold on the long window.
+        let mut m = BurnMonitor::new(policy());
+        for i in 0..8 {
+            m.record(i as f64 * 0.5, 0.3); // 0.0..3.5 healthy
+        }
+        m.record(3.8, 5.0);
+        m.record(3.9, 5.0);
+        // short (1.9, 3.9]: samples 2.0..3.5 healthy (4) + 2 hot = 2/6
+        // < 0.5; long also diluted.
+        assert_eq!(m.evaluate(3.9), None);
+        // Sustained burn: hot samples dominate both windows.
+        let mut m = BurnMonitor::new(policy());
+        for i in 0..8 {
+            m.record(i as f64 * 0.5, 5.0);
+        }
+        let (short, long) = m.evaluate(3.5).expect("sustained burn alerts");
+        assert_eq!(short, 1.0);
+        assert_eq!(long, 1.0);
+    }
+
+    #[test]
+    fn monitor_prunes_only_what_the_long_window_left_behind() {
+        let mut m = BurnMonitor::new(policy());
+        for i in 0..100 {
+            m.record(i as f64 * 0.1, 2.0); // 0.0..9.9, all violating
+        }
+        m.evaluate(9.9);
+        // Samples at or before 9.9 - 4.0 = 5.9 are gone; the rest burn.
+        assert_eq!(m.burn_at(9.9), (1.0, 1.0));
+        assert_eq!(m.evaluate(9.9), Some((1.0, 1.0)));
+        // Evaluating earlier than the high-water mark must not panic
+        // or resurrect pruned data.
+        assert_eq!(m.evaluate(3.0), None, "window older than retained data is empty");
+    }
+
+    #[test]
+    fn offline_spec_replays_the_same_rule_over_a_series() {
+        let mut s = Series::new("latency", 64);
+        for i in 0..8 {
+            s.push(i as f64 * 0.5, 0.3);
+        }
+        for i in 8..16 {
+            s.push(i as f64 * 0.5, 3.0);
+        }
+        let spec = SloSpec {
+            name: "p99-latency".into(),
+            objective: Objective::P99LatencyBelow { seconds: 1.0 },
+            window_s: 2.0,
+            long_windows: 2,
+            burn_threshold: 0.5,
+        };
+        let alerts = spec.alerts(&s);
+        assert!(!alerts.is_empty(), "the sustained tail burns");
+        // Alerts only fire once the long window is at least half hot
+        // (earliest at t = 5.5: 4 hot of 8 in the long window).
+        assert!(alerts.iter().all(|a| a.at >= 5.5), "{alerts:?}");
+        assert!(alerts.iter().all(|a| a.short_burn >= 0.5 && a.long_burn >= 0.5));
+        // Gauge objectives invert the comparison.
+        assert!(Objective::MinGflops { gflops: 10.0 }.violated_by(5.0));
+        assert!(!Objective::MinGflops { gflops: 10.0 }.violated_by(15.0));
+        assert!(Objective::MaxQueueDepth { depth: 4.0 }.violated_by(5.0));
+        assert!(!Objective::MaxQueueDepth { depth: 4.0 }.violated_by(3.0));
+    }
+}

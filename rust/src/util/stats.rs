@@ -137,6 +137,23 @@ impl LogHistogram {
         self.max
     }
 
+    /// Fold `other` into `self` bucket-by-bucket. Merging preserves
+    /// every quantile the two histograms could answer separately (same
+    /// bucket resolution on both sides), so per-window sketches can be
+    /// combined into wider windows without re-recording samples. The
+    /// empty histogram is the identity in either operand position.
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        // Raw fields, not the accessors: the +INFINITY empty sentinel
+        // is the identity for `min`, and 0.0 for `max`.
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     /// `serve`-style one-liner: p50/p99/p999 plus count.
     pub fn report_line(&self, name: &str) -> String {
         format!(
@@ -395,6 +412,116 @@ mod tests {
         h.record(-1.0);
         assert_eq!(h.count(), 2);
         assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact_at_every_quantile() {
+        let mut h = LogHistogram::new();
+        h.record(0.125);
+        assert_eq!(h.count(), 1);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            // Bucket midpoints clamp to the observed range, so a lone
+            // sample reads back exactly at any rank.
+            assert_eq!(h.quantile(q), 0.125, "q={q}");
+        }
+        assert_eq!((h.min(), h.max()), (0.125, 0.125));
+        assert!((h.mean() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_extreme_durations_stay_in_range() {
+        // Sub-microsecond samples land in the fine linear buckets …
+        let mut fast = LogHistogram::new();
+        for i in 1..=100u64 {
+            fast.record(i as f64 * 1e-9); // 1..100 ns
+        }
+        let p50 = fast.quantile(0.5);
+        assert!(p50 >= fast.min() && p50 <= fast.max());
+        assert!((p50 - 50e-9).abs() < 5e-9, "{p50}");
+
+        // … and >1h samples stay bounded with ≤~3% relative error.
+        let mut slow = LogHistogram::new();
+        slow.record(3600.0);
+        slow.record(7200.0);
+        assert_eq!(slow.max(), 7200.0);
+        let p99 = slow.quantile(0.99);
+        assert!(p99 >= 3600.0 && p99 <= 7200.0, "{p99}");
+        // A preposterous duration saturates the nanosecond cast instead
+        // of wrapping: the reading stays finite and inside the
+        // observed range.
+        slow.record(1e18);
+        let top = slow.quantile(1.0);
+        assert!(top.is_finite() && top >= 7200.0 && top <= slow.max(), "{top}");
+    }
+
+    #[test]
+    fn histogram_merge_of_empty_is_commutative_identity() {
+        let mut populated = LogHistogram::new();
+        for i in 1..=100 {
+            populated.record(i as f64 * 1e-3);
+        }
+        let before = (
+            populated.count(),
+            populated.min(),
+            populated.max(),
+            populated.quantile(0.5),
+            populated.quantile(0.99),
+        );
+
+        // populated ∪ empty: nothing changes.
+        populated.merge(&LogHistogram::new());
+        assert_eq!(
+            (
+                populated.count(),
+                populated.min(),
+                populated.max(),
+                populated.quantile(0.5),
+                populated.quantile(0.99)
+            ),
+            before
+        );
+
+        // empty ∪ populated: identical readings from the other side.
+        let mut empty = LogHistogram::new();
+        empty.merge(&populated);
+        assert_eq!(empty.count(), populated.count());
+        assert_eq!(empty.min(), populated.min());
+        assert_eq!(empty.max(), populated.max());
+        assert_eq!(empty.quantile(0.5), populated.quantile(0.5));
+        assert_eq!(empty.quantile(0.999), populated.quantile(0.999));
+
+        // empty ∪ empty stays empty (the +INF min sentinel survives).
+        let mut e1 = LogHistogram::new();
+        e1.merge(&LogHistogram::new());
+        assert!(e1.is_empty());
+        assert_eq!((e1.min(), e1.max(), e1.quantile(0.5)), (0.0, 0.0, 0.0));
+        e1.record(2.0);
+        assert_eq!(e1.min(), 2.0, "sentinel must still track the first real sample");
+    }
+
+    #[test]
+    fn histogram_merge_combines_disjoint_windows() {
+        // Two per-window sketches merged must answer whole-run
+        // quantiles as if recorded into one histogram.
+        let mut w1 = LogHistogram::new();
+        let mut w2 = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for i in 1..=500 {
+            w1.record(i as f64 * 1e-3);
+            whole.record(i as f64 * 1e-3);
+        }
+        for i in 501..=1000 {
+            w2.record(i as f64 * 1e-3);
+            whole.record(i as f64 * 1e-3);
+        }
+        let mut merged = w1.clone();
+        merged.merge(&w2);
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.sum() - whole.sum()).abs() < 1e-9);
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(merged.quantile(q), whole.quantile(q), "q={q}");
+        }
+        assert_eq!((merged.min(), merged.max()), (whole.min(), whole.max()));
     }
 
     #[test]

@@ -262,7 +262,7 @@ fn kill_reduction_home_mid_collective_with_spare_drains() {
     // death at dma + 0.8 loses it mid-compute with tile (0,0)'s
     // collective outstanding.
     let td = dma + 0.8;
-    let config = ElasticConfig { hot_spares: 1, scale_watermark: None, max_growth: 0 };
+    let config = ElasticConfig { hot_spares: 1, scale_watermark: None, max_growth: 0, slo: None };
     let out = run_elastic_schedule(
         &plan,
         4,
@@ -317,7 +317,7 @@ fn two_simultaneous_deaths_heal_then_drain_deterministically() {
             Fault::Kill { card: 1, seconds: td },
         ],
     };
-    let config = ElasticConfig { hot_spares: 2, scale_watermark: None, max_growth: 0 };
+    let config = ElasticConfig { hot_spares: 2, scale_watermark: None, max_growth: 0, slo: None };
     let out = run_elastic_schedule(&plan, 4, &host, &topo, &faults, config, flat).unwrap();
     assert_eq!(out.spare_activations, 2);
     assert_eq!(out.drains_completed, 2);
@@ -348,7 +348,7 @@ fn two_simultaneous_deaths_heal_then_drain_deterministically() {
     // lost shard.
     let mut topo1 = Topology::ring(4);
     topo1.attach_card();
-    let config1 = ElasticConfig { hot_spares: 1, scale_watermark: None, max_growth: 0 };
+    let config1 = ElasticConfig { hot_spares: 1, scale_watermark: None, max_growth: 0, slo: None };
     let out1 = run_elastic_schedule(&plan, 4, &host, &topo1, &faults, config1, flat).unwrap();
     assert_eq!(out1.spare_activations, 1);
     assert_eq!(out1.schedule.retries, 2);

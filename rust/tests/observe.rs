@@ -1,0 +1,370 @@
+//! Chaos validation for the fleet observatory.
+//!
+//! The anomaly localizer claims it can *name* the degraded cable or
+//! stalled card from the trace alone. This suite holds that claim to
+//! exact set equality against the injected [`FaultPlan`] — 100%
+//! recall AND 100% precision — for seeds `0..SYSTO3D_OBSERVE_SEEDS`
+//! (default 32) across ring, torus, and fat-tree fabrics, plus the
+//! zero-false-positive check on fault-free runs.
+//!
+//! The second half validates the SLO burn-rate growth path: an
+//! overload trace on which raw queue depth never crosses the armed
+//! watermark (so queue-depth-only elasticity does nothing) but the
+//! sustained p99 burn alerts, grows the fleet, and strictly beats the
+//! watermark-only makespan — activating a wired hot spare first when
+//! one is available.
+
+use std::collections::BTreeSet;
+
+use systo3d::cluster::{
+    run_elastic_schedule_traced, ElasticConfig, Fault, FaultPlan, FleetEvent, Link,
+    PartitionPlan, PartitionStrategy, Shard, SloPolicy,
+};
+use systo3d::fabric::Topology;
+use systo3d::observe::anomaly;
+use systo3d::observe::series::Series;
+use systo3d::observe::slo::{Objective, SloSpec};
+use systo3d::observe::Observatory;
+use systo3d::trace::Tracer;
+
+/// Seeded fault horizon: all non-kill faults land at or before
+/// `0.8 * HORIZON = 8 s`, well inside the ~15 s of scheduling
+/// instants the localizer workload produces, so every seeded fault is
+/// guaranteed to apply (a fault that never fires would poison the
+/// recall ground truth).
+const HORIZON: f64 = 10.0;
+/// Flat per-shard compute time of the localizer workload.
+const COMP: f64 = 0.5;
+/// Active cards in the localizer sweep (no spares: the detectors are
+/// validated on a fixed fleet so the fault plan is the only variable).
+const CARDS: usize = 8;
+
+fn seeds() -> u64 {
+    std::env::var("SYSTO3D_OBSERVE_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(32)
+}
+
+/// 256 row-shards over 8 cards: 32 shards per card, each 0.5 s, so
+/// the double-buffer gate stretches DMA commits to ~15 s and every
+/// card's compute lane is busy wall to wall — a stall has nowhere to
+/// hide and a healthy lane's interior gaps are ~one DMA (~9 ms).
+fn localizer_plan() -> PartitionPlan {
+    PartitionPlan::new(PartitionStrategy::Row1D { devices: 256 }, 4096, 4096, 4096).unwrap()
+}
+
+fn fixed_fleet() -> ElasticConfig {
+    ElasticConfig { hot_spares: 0, scale_watermark: None, max_growth: 0, slo: None }
+}
+
+fn families() -> Vec<Topology> {
+    vec![Topology::ring(CARDS), Topology::torus2d(4, 2), Topology::fat_tree(CARDS)]
+}
+
+/// Ground truth from the injected plan: slow links whose cable exists
+/// on this fabric (normalized a <= b, deduped), and spiked cards.
+fn injected(faults: &FaultPlan, topo: &Topology) -> (BTreeSet<(usize, usize)>, BTreeSet<usize>) {
+    let mut links = BTreeSet::new();
+    let mut cards = BTreeSet::new();
+    for f in &faults.faults {
+        match *f {
+            Fault::SlowLink { a, b, .. } => {
+                let cabled =
+                    topo.edges.iter().any(|e| (e.a, e.b) == (a, b) || (e.a, e.b) == (b, a));
+                if cabled {
+                    links.insert(if a <= b { (a, b) } else { (b, a) });
+                }
+            }
+            Fault::SpikeQueue { card, .. } => {
+                cards.insert(card);
+            }
+            Fault::Kill { .. } => {}
+        }
+    }
+    (links, cards)
+}
+
+#[test]
+fn localizer_has_perfect_recall_and_precision_across_seeds_and_fabrics() {
+    let plan = localizer_plan();
+    let host = Link::pcie_gen3_x8();
+    let gap_threshold = 0.1 * HORIZON; // seeded spikes stall >= 0.2 * HORIZON
+    let mut total_links = 0usize;
+    let mut total_spikes = 0usize;
+    for topo in families() {
+        let name = topo.name();
+        for seed in 0..seeds() {
+            // Keep the slow-link / spike-queue faults; drop the kills.
+            // Deaths are drained by the elastic machinery (validated in
+            // chaos.rs) and a healed fabric removes the very cable a
+            // slow-link fault would have degraded, which would make the
+            // ground truth ambiguous.
+            let seeded = FaultPlan::seeded(seed, CARDS, HORIZON);
+            let faults = FaultPlan {
+                faults: seeded
+                    .faults
+                    .into_iter()
+                    .filter(|f| !matches!(f, Fault::Kill { .. }))
+                    .collect(),
+            };
+            let (want_links, want_cards) = injected(&faults, &topo);
+            total_links += want_links.len();
+            total_spikes += want_cards.len();
+
+            let tracer = Tracer::recording();
+            let out = run_elastic_schedule_traced(
+                &plan,
+                CARDS,
+                &host,
+                &topo,
+                &faults,
+                fixed_fleet(),
+                &tracer,
+                |_, _| COMP,
+            )
+            .unwrap_or_else(|e| panic!("{name} seed {seed}: {e}"));
+            let done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+            assert_eq!(done, plan.shards.len(), "{name} seed {seed}: shard lost");
+
+            let found = anomaly::localize(&tracer.take(), gap_threshold);
+            let found_links: BTreeSet<(usize, usize)> =
+                found.slow_links.iter().map(|l| (l.a, l.b)).collect();
+            let found_cards: BTreeSet<usize> =
+                found.stalled_cards.iter().map(|c| c.card).collect();
+            assert_eq!(
+                found_links, want_links,
+                "{name} seed {seed}: slow-link recall/precision broken\n{}",
+                found.render()
+            );
+            assert_eq!(
+                found_cards, want_cards,
+                "{name} seed {seed}: stalled-card recall/precision broken\n{}",
+                found.render()
+            );
+            for l in &found.slow_links {
+                assert!(l.rate < anomaly::SLOW_LINK_RATE_THRESHOLD, "{name} seed {seed}");
+            }
+            for c in &found.stalled_cards {
+                assert!(c.gap_seconds >= gap_threshold, "{name} seed {seed}");
+            }
+        }
+    }
+    // The sweep must actually exercise both detectors.
+    assert!(total_links > 0, "no seed injected a cabled slow link");
+    assert!(total_spikes > 0, "no seed injected a queue spike");
+}
+
+#[test]
+fn localizer_flags_nothing_on_fault_free_runs() {
+    let plan = localizer_plan();
+    let host = Link::pcie_gen3_x8();
+    for topo in families() {
+        let name = topo.name();
+        let tracer = Tracer::recording();
+        run_elastic_schedule_traced(
+            &plan,
+            CARDS,
+            &host,
+            &topo,
+            &FaultPlan::none(),
+            fixed_fleet(),
+            &tracer,
+            |_, _| COMP,
+        )
+        .unwrap();
+        let found = anomaly::localize(&tracer.take(), 0.1 * HORIZON);
+        assert!(found.is_clean(), "{name}: false positive(s)\n{}", found.render());
+    }
+}
+
+// ---------------------------------------------------------------------
+// SLO burn-rate growth
+// ---------------------------------------------------------------------
+
+/// The overload workload: 32 row-shards at 1 s flat compute over 2
+/// cards. Steady-state shard latency (DMA start to compute end) is
+/// ~2 s from the double-buffer gate, so a 2.5 s p99 target is healthy
+/// by construction; a 3 s background tenant on card 0 pushes two
+/// shards to ~5 s — a sustained burn, but never more pending shards
+/// per card than the run started with.
+fn overload_plan() -> PartitionPlan {
+    PartitionPlan::new(PartitionStrategy::Row1D { devices: 32 }, 1024, 1024, 1024).unwrap()
+}
+
+fn overload_faults() -> FaultPlan {
+    FaultPlan {
+        faults: vec![Fault::SpikeQueue { card: 0, busy_seconds: 3.0, seconds: 0.01 }],
+    }
+}
+
+fn overload_policy() -> SloPolicy {
+    SloPolicy {
+        p99_latency_s: 2.5,
+        window_s: 2.0,
+        long_windows: 2,
+        burn_threshold: 0.25,
+        max_growth: 2,
+    }
+}
+
+/// Pending shards per live card never exceeds the initial 16, so this
+/// watermark is provably uncrossable on the overload trace.
+const SLEEPY_WATERMARK: f64 = 20.0;
+
+#[test]
+fn slo_burn_grows_where_the_queue_watermark_sleeps() {
+    let plan = overload_plan();
+    let host = Link::pcie_gen3_x8();
+    let topo = Topology::ring(2);
+    let faults = overload_faults();
+    let flat = |_: usize, _: &Shard| 1.0;
+
+    // Control: watermark armed, no SLO. Queue depth alone must not
+    // grow anything — the overload is latency, not backlog.
+    let control_cfg = ElasticConfig {
+        hot_spares: 0,
+        scale_watermark: Some(SLEEPY_WATERMARK),
+        max_growth: 2,
+        slo: None,
+    };
+    let control_trace = Tracer::recording();
+    let control = run_elastic_schedule_traced(
+        &plan, 2, &host, &topo, &faults, control_cfg, &control_trace, flat,
+    )
+    .unwrap();
+    assert_eq!(control.grown_cards, 0, "the watermark must sleep through this trace");
+    assert_eq!(control.slo_grown_cards, 0);
+    assert!(control.slo_alerts.is_empty());
+    let control_log = control_trace.take();
+    let max_depth = control_log
+        .counters
+        .iter()
+        .filter(|c| c.name == "queue_depth")
+        .map(|c| c.value)
+        .fold(0.0f64, f64::max);
+    assert!(
+        max_depth < SLEEPY_WATERMARK * 2.0,
+        "queue depth {max_depth} would have crossed the watermark on its own"
+    );
+
+    // Same trace with the SLO armed: the sustained p99 burn alerts and
+    // grows the fleet even though queue depth never moved the needle.
+    let slo_cfg = ElasticConfig { slo: Some(overload_policy()), ..control_cfg };
+    let slo_trace = Tracer::recording();
+    let out =
+        run_elastic_schedule_traced(&plan, 2, &host, &topo, &faults, slo_cfg, &slo_trace, flat)
+            .unwrap();
+    assert_eq!(out.grown_cards, 0, "the watermark still sleeps");
+    assert!(out.slo_grown_cards >= 1, "the burn must grow the fleet\n{}", out.render());
+    assert!(!out.slo_alerts.is_empty());
+    assert!(out.events.iter().any(|e| matches!(e, FleetEvent::SloGrown { .. })));
+    assert!(
+        out.schedule.makespan_seconds < control.schedule.makespan_seconds,
+        "SLO growth must strictly beat queue-depth-only elasticity: {} vs {}",
+        out.schedule.makespan_seconds,
+        control.schedule.makespan_seconds,
+    );
+    // The grown fleet clears the burn: both end-of-run windows are
+    // back under the threshold.
+    let policy = overload_policy();
+    assert!(out.slo_final_burn.0 < policy.burn_threshold, "{:?}", out.slo_final_burn);
+    assert!(out.slo_final_burn.1 < policy.burn_threshold, "{:?}", out.slo_final_burn);
+    // No shard lost on either arm.
+    let control_done: usize = control.schedule.per_device.iter().map(|t| t.shards).sum();
+    let slo_done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+    assert_eq!(control_done, plan.shards.len());
+    assert_eq!(slo_done, plan.shards.len());
+
+    // The observatory sees the same story offline: the sliding p99
+    // crosses the target during the burn, and replaying the policy as
+    // an offline SloSpec over the raw latency series re-raises alerts.
+    let log = slo_trace.take();
+    let obs = Observatory::from_trace(&log, 1.0);
+    assert!(obs.latency_p99.max().expect("latency sampled") > policy.p99_latency_s);
+    let mut latencies = Series::new("shard_latency_s", 4096);
+    for c in log.counters.iter().filter(|c| c.name == "shard_latency_s") {
+        latencies.push(c.at, c.value);
+    }
+    let spec = SloSpec {
+        name: "p99-shard-latency".into(),
+        objective: Objective::P99LatencyBelow { seconds: policy.p99_latency_s },
+        window_s: policy.window_s,
+        long_windows: policy.long_windows,
+        burn_threshold: policy.burn_threshold,
+    };
+    assert!(!spec.alerts(&latencies).is_empty(), "offline replay must re-raise the burn");
+}
+
+#[test]
+fn slo_growth_activates_a_wired_spare_before_attaching_a_card() {
+    let plan = overload_plan();
+    let host = Link::pcie_gen3_x8();
+    let mut topo = Topology::ring(2);
+    topo.attach_card(); // the hot spare, wired within the port budget
+    let config = ElasticConfig {
+        hot_spares: 1,
+        scale_watermark: Some(SLEEPY_WATERMARK),
+        max_growth: 2,
+        slo: Some(SloPolicy { max_growth: 1, ..overload_policy() }),
+    };
+    let out = run_elastic_schedule_traced(
+        &plan,
+        2,
+        &host,
+        &topo,
+        &overload_faults(),
+        config,
+        &Tracer::off(),
+        |_: usize, _: &Shard| 1.0,
+    )
+    .unwrap();
+    assert_eq!(out.slo_grown_cards, 1);
+    assert!(
+        out.events.iter().any(|e| matches!(e, FleetEvent::SloGrown { card: 2, .. })),
+        "the wired spare (card 2) is the cheapest capacity: {:?}",
+        out.events
+    );
+    // Activating the spare is growth, not a death-drain: the chaos
+    // invariant (drains == activations) must hold untouched.
+    assert_eq!(out.spare_activations, 0);
+    assert_eq!(out.drains_completed, 0);
+    assert_eq!(out.schedule.per_device.len(), 3, "no fourth card was attached");
+    assert!(out.schedule.per_device[2].shards > 0, "the spare took rebalanced work");
+    let done: usize = out.schedule.per_device.iter().map(|t| t.shards).sum();
+    assert_eq!(done, plan.shards.len());
+}
+
+#[test]
+fn slo_runs_replay_bit_identically() {
+    // The burn monitor rides inside the deterministic scheduler; with
+    // the SLO armed the whole loop must still replay bit for bit.
+    let plan = overload_plan();
+    let host = Link::pcie_gen3_x8();
+    let topo = Topology::ring(2);
+    let config = ElasticConfig {
+        hot_spares: 0,
+        scale_watermark: Some(SLEEPY_WATERMARK),
+        max_growth: 2,
+        slo: Some(overload_policy()),
+    };
+    let run = || {
+        run_elastic_schedule_traced(
+            &plan,
+            2,
+            &host,
+            &topo,
+            &overload_faults(),
+            config,
+            &Tracer::off(),
+            |_: usize, _: &Shard| 1.0,
+        )
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.events, b.events);
+    assert_eq!(
+        a.schedule.makespan_seconds.to_bits(),
+        b.schedule.makespan_seconds.to_bits()
+    );
+    assert_eq!(a.slo_alerts, b.slo_alerts);
+    assert_eq!(a.slo_grown_cards, b.slo_grown_cards);
+}
