@@ -1,0 +1,192 @@
+//! DIFFERENTIAL-OBSERVABILITY DRIVER — blame a regression, then name
+//! the hot loop.
+//!
+//! Three acts, each an acceptance claim of PR 8:
+//!
+//! 1. **Determinism floor.** Two same-seed chaos replays produce
+//!    byte-identical Chrome traces and an *empty* diff — the differ
+//!    reports no noise on no change.
+//! 2. **Regression attribution.** A clean run against the same run
+//!    with its busiest cable degraded 16x: the diff must charge ≥90%
+//!    of the makespan delta to fabric spans, name grown circuits on
+//!    exactly that cable, and flag the `link_rate` counter track —
+//!    with both attribution partitions (bucket and track) summing to
+//!    the delta by construction.
+//! 3. **Host profiler.** An armed placement search must rank the
+//!    candidate-pricing inner loop as self-time top-1 and export it in
+//!    the folded-stack format speedscope/inferno read.
+//!
+//! ```sh
+//! cargo run --release --example trace_diff [-- --d2 8192 --factor 16 --json OUT.json]
+//! ```
+//!
+//! Side artifacts for the CI failure path: `trace_baseline.json`,
+//! `trace_candidate.json` (Chrome traces), `diff_blame.txt` (the blame
+//! report), `profile_folded.txt` (folded stacks).
+
+use std::collections::BTreeMap;
+use systo3d::cli::Args;
+use systo3d::cluster::{ClusterSim, Fault, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
+use systo3d::placement::{optimize, PlacementStrategy};
+use systo3d::trace::{
+    chrome_trace_json, diff, profile, BlameEntry, DeltaKind, TraceLog, Tracer, Track,
+};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let d2 = args.get_u64("d2", 8192).map_err(anyhow::Error::msg)?;
+    let factor = args.get_str("factor", "16").parse::<f64>().unwrap_or(16.0);
+
+    // Big shards keep the reduction sends visible on the wire: at
+    // d2 = 8192 each partial is ~67 MB, so a slowed cable cannot hide
+    // in scheduling slack.
+    let plan = PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, d2, d2, d2)
+        .map_err(anyhow::Error::msg)?;
+    let run = |faults: &FaultPlan| -> anyhow::Result<TraceLog> {
+        let fleet = Fleet::homogeneous(8, "G").map_err(anyhow::Error::msg)?;
+        let sim = ClusterSim::with_topology(fleet, Topology::ring(8))
+            .with_trace(Tracer::recording());
+        sim.simulate_elastic(&plan, faults).map_err(anyhow::Error::msg)?;
+        Ok(sim.trace.snapshot())
+    };
+
+    println!("=== trace_diff report (d2 = {d2}, ring of 8, design G) ===\n");
+
+    // --- Act 1: same-seed replays diff empty -------------------------
+    let clean = run(&FaultPlan::none())?;
+    let replay = run(&FaultPlan::none())?;
+    let d0 = diff(&clean, &replay);
+    anyhow::ensure!(
+        d0.is_empty(),
+        "same-seed replays must diff empty: delta {} s, {} blame entries",
+        d0.makespan_delta(),
+        d0.blame.len()
+    );
+    anyhow::ensure!(
+        chrome_trace_json(&clean) == chrome_trace_json(&replay),
+        "same-seed replays must serialize byte-identically"
+    );
+    println!(
+        "act 1: replay determinism — {} spans matched, zero delta, byte-identical traces",
+        d0.matched_spans
+    );
+
+    // --- Act 2: degrade the busiest cable, attribute the delta -------
+    let mut cable_busy: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for s in &clean.spans {
+        if let Track::Link(a, b) = s.track {
+            *cable_busy.entry((a.min(b), a.max(b))).or_insert(0.0) += s.end - s.start;
+        }
+    }
+    let mut cable = (0, 0);
+    let mut busiest = -1.0;
+    for (&c, &busy) in &cable_busy {
+        if busy > busiest {
+            cable = c;
+            busiest = busy;
+        }
+    }
+    anyhow::ensure!(busiest > 0.0, "the clean replay must carry fabric traffic");
+    let (la, lb) = cable;
+    let degraded = run(&FaultPlan {
+        faults: vec![Fault::SlowLink { a: la, b: lb, factor, seconds: 0.0 }],
+    })?;
+
+    let d = diff(&clean, &degraded);
+    println!("\nact 2: cable {la}<->{lb} degraded {factor}x");
+    print!("{}", d.render(10));
+    anyhow::ensure!(d.makespan_delta() > 0.0, "a slowed cable must cost makespan");
+    anyhow::ensure!(
+        d.attribution_residual() < 1e-6 && d.track_attribution_residual() < 1e-6,
+        "attribution must sum to the delta (residuals {} / {})",
+        d.attribution_residual(),
+        d.track_attribution_residual()
+    );
+    let fabric_share = d.attribution_share("fabric");
+    anyhow::ensure!(
+        fabric_share >= 0.9,
+        "fabric must explain >=90% of the delta, got {:.1}%",
+        fabric_share * 100.0
+    );
+    anyhow::ensure!(
+        d.blame[0].category.bucket() == "fabric",
+        "top blame entry must be fabric work, got {}",
+        d.blame[0].name
+    );
+    let grown_on_cable = |e: &BlameEntry| {
+        e.kind == DeltaKind::Grew
+            && matches!(e.track, Track::Link(x, y) if (x.min(y), x.max(y)) == (la, lb))
+    };
+    anyhow::ensure!(
+        d.blame.iter().any(grown_on_cable),
+        "the blame list must name a grown circuit on cable {la}<->{lb}"
+    );
+    anyhow::ensure!(
+        d.changed_counters.contains(&format!("link_rate {la}<->{lb}")),
+        "the link_rate counter track must be flagged as changed"
+    );
+    println!(
+        "fabric explains {:.1}% of the {:.4} s delta; top blame: {}",
+        fabric_share * 100.0,
+        d.makespan_delta(),
+        d.blame[0].name
+    );
+
+    // CI's failure-path artifacts: the two traces and the blame report.
+    std::fs::write("trace_baseline.json", chrome_trace_json(&clean))?;
+    std::fs::write("trace_candidate.json", chrome_trace_json(&degraded))?;
+    std::fs::write("diff_blame.txt", d.render(12))?;
+    println!("wrote trace_baseline.json, trace_candidate.json, diff_blame.txt");
+
+    // --- Act 3: the host profiler names the placement inner loop -----
+    // A 64-device carve folded onto a 16-card ring gives each candidate
+    // 48 reduction sends to price — a realistic inner-loop workload.
+    let search_plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 4, q: 4, c: 4 }, d2, d2, d2)
+            .map_err(anyhow::Error::msg)?;
+    let _ = profile::take_report(); // clean slate for this thread
+    profile::arm();
+    let placed = optimize(&search_plan, &Topology::ring(16), PlacementStrategy::default());
+    profile::disarm();
+    let report = profile::take_report();
+
+    println!("\nact 3: host profiler over the placement search");
+    print!("{}", report.render(5));
+    let top = report.top_self(1);
+    anyhow::ensure!(!top.is_empty(), "the armed search must record scopes");
+    anyhow::ensure!(
+        top[0].path == "placement.optimize;placement.candidate",
+        "self-time top-1 must be the candidate replay loop, got {}",
+        top[0].path
+    );
+    let folded = report.folded();
+    anyhow::ensure!(
+        folded.contains("placement.optimize;placement.candidate "),
+        "the folded-stack export must carry the inner-loop path"
+    );
+    std::fs::write("profile_folded.txt", &folded)?;
+    println!(
+        "top self-time: {} ({} calls across {} evaluations); wrote profile_folded.txt",
+        top[0].path,
+        top[0].calls,
+        placed.evaluations
+    );
+
+    if let Some(path) = args.get("json") {
+        let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+        metrics.insert("diff_zero_same_seed".into(), f64::from(u8::from(d0.is_empty())));
+        metrics.insert("diff_fabric_attribution".into(), fabric_share);
+        metrics.insert("diff_attribution_residual".into(), d.attribution_residual());
+        metrics.insert("diff_makespan_delta_s".into(), d.makespan_delta());
+        metrics.insert(
+            "profiler_top1_is_placement_candidate".into(),
+            f64::from(u8::from(top[0].path == "placement.optimize;placement.candidate")),
+        );
+        systo3d::util::json::write_metrics(path, &metrics)?;
+        println!("\nwrote {} metric(s) to {path}", metrics.len());
+    }
+
+    println!("\ntrace_diff OK");
+    Ok(())
+}

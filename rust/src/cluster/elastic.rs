@@ -641,6 +641,9 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
         if self.queues[victim].is_empty() && lost.is_none() {
             return None;
         }
+        // Spare scoring replays routes on a scratch fabric per
+        // candidate — one of the host profiler's watched loops.
+        let _scope = crate::trace::profile::scope("elastic.drain_to_spare");
         let pool: Vec<usize> = self
             .spare_pool
             .iter()
@@ -869,6 +872,7 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
     /// redistributing it would silently degenerate the recovery into
     /// requeue-on-survivors mid-drain.
     fn rebalance_queues(&mut self, now: f64) {
+        let _scope = crate::trace::profile::scope("elastic.rebalance");
         let live: Vec<usize> = (0..self.cards).filter(|&c| self.live_at(c, now)).collect();
         if live.is_empty() {
             return;
@@ -904,6 +908,10 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
 
     /// Run the schedule to completion.
     pub fn run(mut self) -> Result<ElasticOutcome, String> {
+        // One scope per seed execution: chaos sweeps replaying many
+        // seeds show up as call count here, with the drain / heal /
+        // rebalance children attributing the self time.
+        let _scope = crate::trace::profile::scope("elastic.run");
         while self.pending > 0 {
             self.sweep_dead();
             let now = self.observe_now();

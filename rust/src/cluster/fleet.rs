@@ -564,6 +564,7 @@ impl ClusterSim {
         faults: &FaultPlan,
     ) -> Result<ElasticOutcome, String> {
         assert!(!self.fleet.is_empty(), "empty fleet");
+        let _scope = crate::trace::profile::scope("cluster.simulate_elastic");
         let config = ElasticConfig {
             hot_spares: self.hot_spares,
             scale_watermark: self.scale_watermark,

@@ -163,6 +163,9 @@ impl CollectiveSchedule {
     /// Price the schedule on a clone of the fabric occupancy (the real
     /// links are left untouched).
     pub fn price(&self, fabric: &FabricState, ready: &[f64]) -> Option<f64> {
+        // Collective pricing clones the fabric (route table included)
+        // per candidate schedule — a profiler-watched hot loop.
+        let _scope = crate::trace::profile::scope("collective.price");
         let mut fc = fabric.clone();
         let mut r = ready.to_vec();
         self.run(&mut fc, &mut r)
@@ -177,6 +180,7 @@ impl CollectiveSchedule {
         bytes: u64,
         ready: &[f64],
     ) -> CollectiveSchedule {
+        let _scope = crate::trace::profile::scope("collective.cheapest");
         let candidates = [
             Self::direct(home, others, bytes),
             Self::tree(home, others, bytes),

@@ -205,6 +205,7 @@ impl FabricState {
     /// into the aggregate gauges. Slow-link factors apply to cables, so
     /// a re-trunk (which replaces every cable) clears them.
     pub fn attach_card(&mut self) -> AttachReport {
+        let _scope = crate::trace::profile::scope("fabric.attach");
         let report = self.topology.attach_card();
         self.dead.push(false);
         let edges = self.topology.edges.len();
@@ -269,6 +270,9 @@ impl FabricState {
     /// crossed it is rebuilt over the survivors.
     pub fn kill(&mut self, card: usize) {
         if card < self.dead.len() && !self.dead[card] {
+            // The n² route rebuild is the fleet-scale healing hot spot
+            // the host profiler watches.
+            let _scope = crate::trace::profile::scope("fabric.heal");
             self.dead[card] = true;
             self.routes = RouteTable::avoiding(&self.topology, &self.dead);
         }

@@ -45,7 +45,14 @@
 //!   those layers — deterministic sim-time spans per card lane and
 //!   directed link, Chrome-trace/Perfetto export, and a critical-path
 //!   analyzer that attributes the makespan to compute / fabric / host
-//!   / drain buckets.
+//!   / drain buckets. **Differential observability** rides on top:
+//!   [`trace::diff`] aligns two recorded runs and attributes the
+//!   makespan delta to the spans, cards, and cables that moved (the
+//!   attribution sums to the delta by construction), and
+//!   [`trace::profile`] is a scoped host-side profiler threaded
+//!   through the planner's hot loops with self/total time and a
+//!   folded-stack export (`systo3d diff` / `systo3d trend` /
+//!   `systo3d perfgate --explain` are the CLI faces).
 //!
 //! The [`runtime`] engine has two builds: the real PJRT/XLA executor
 //! behind the `pjrt` feature, and a default interpreter that replays

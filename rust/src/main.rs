@@ -13,6 +13,10 @@
 //! * `top [--devices 8] [--seed 0]` — the live fleet observatory:
 //!   sliding-window sparklines, SLO burn-rate alerts, and the anomaly
 //!   localizer's verdict for one seeded chaos run.
+//! * `diff A.json B.json` — align two flight-recorder traces and print
+//!   the makespan-delta attribution and ranked blame report.
+//! * `trend` — walk the accumulated `BENCH_pr<N>.json` artifacts and
+//!   name the PR where each gated metric last moved.
 
 use systo3d::cli::Args;
 use systo3d::coordinator::{GemmRequest, GemmService, ServiceConfig};
@@ -45,6 +49,8 @@ fn main() {
         Some("trace") => cmd_trace(&args),
         Some("top") => cmd_top(&args),
         Some("perfgate") => cmd_perfgate(&args),
+        Some("diff") => cmd_diff(&args),
+        Some("trend") => cmd_trend(&args),
         _ => {
             print_usage();
             Ok(())
@@ -127,8 +133,41 @@ fn print_usage() {
                   \x20 object per scrape\n\
          perfgate [--out BENCH.json] [--baseline rust/benches/baseline.json]\n\
                   [--merge a.json,b.json] [--tolerance 0.10] [--d2 8192]\n\
+                  [--explain] [--baseline-trace A.json] [--candidate-trace B.json]\n\
                   \x20                         record headline metrics, write the bench\n\
-                  \x20                         trajectory, gate vs the checked-in baseline"
+                  \x20                         trajectory, gate vs the checked-in baseline;\n\
+                  \x20                         every violation prints its signed % delta and\n\
+                  \x20                         --explain diffs the two traces on failure\n\
+         diff     A.json B.json [--top 12] [--json METRICS.json] [--expect-empty]\n\
+                  \x20                         align two Chrome traces (as written by\n\
+                  \x20                         `systo3d trace --out`), attribute the\n\
+                  \x20                         makespan delta, print the blame report\n\
+         trend    [--dir .] [--threshold 0.05] [--json METRICS.json]\n\
+                  \x20                         walk BENCH_pr<N>.json artifacts and name the\n\
+                  \x20                         PR where each metric last moved >threshold\n\
+         \n\
+         Diagnosing a regression (worked example):\n\
+         \x20 1. Reproduce both sides deterministically. The same seed must replay\n\
+         \x20    byte-identically, so the diff of a clean pair is empty:\n\
+         \x20      systo3d trace --seed 0 --out clean.json\n\
+         \x20      systo3d trace --seed 0 --out replay.json\n\
+         \x20      systo3d diff clean.json replay.json --expect-empty\n\
+         \x20 2. Record the suspect run (a seeded chaos replay with a slow cable,\n\
+         \x20    a different PR's binary, ...) to slow.json, then:\n\
+         \x20      systo3d diff clean.json slow.json\n\
+         \x20    The bucket table splits the makespan delta across compute/fabric/\n\
+         \x20    host/drain/idle (it sums to the delta by construction); the track\n\
+         \x20    rows localize it to a card or cable; the blame lines rank the\n\
+         \x20    span-duration changes — a degraded link reads like\n\
+         \x20      +0.8000 s grew [fabric] link 2->3 reduce 96x96 (x14)\n\
+         \x20 3. If the delta sits in the host bucket, profile the host loops:\n\
+         \x20    examples/trace_diff writes a folded-stack profile (one\n\
+         \x20    'path;to;scope weight' line per call path — load it in speedscope\n\
+         \x20    or inferno) whose top self-time entry names the hottest inner\n\
+         \x20    loop, e.g. placement.optimize;placement.candidate.\n\
+         \x20 4. To find when it started, point trend at the CI artifacts:\n\
+         \x20      systo3d trend --dir bench-history\n\
+         \x20    which names the PR where each gated metric last moved >5%."
     );
 }
 
@@ -822,14 +861,18 @@ fn cmd_top(args: &Args) -> anyhow::Result<()> {
 /// `value · (1 − tolerance)`, a "lower" metric above
 /// `value · (1 + tolerance)`. Every metric lands in the output file;
 /// only keys present in the baseline are gated, so the artifact is the
-/// trajectory future PRs ratchet the baseline from.
+/// trajectory future PRs ratchet the baseline from. The gate collects
+/// every violation (name, baseline, candidate, signed % delta) before
+/// failing, and `--explain` additionally diffs `--baseline-trace`
+/// against `--candidate-trace` on failure so the regression report
+/// names the spans that moved, not just the metric that tripped.
 fn cmd_perfgate(args: &Args) -> anyhow::Result<()> {
     use std::collections::BTreeMap;
     use systo3d::blocked::{OffchipDesign, OffchipSim};
     use systo3d::dse::configs::fitted_designs;
     use systo3d::util::json::{write_metrics, Json};
 
-    let out = args.get_str("out", "BENCH_pr4.json");
+    let out = args.get_str("out", "BENCH_pr8.json");
     let baseline_path = args.get_str("baseline", "rust/benches/baseline.json");
     let d2 = args.get_u64("d2", 8192).map_err(anyhow::Error::msg)?;
     let tolerance: f64 = match args.get("tolerance") {
@@ -916,27 +959,189 @@ fn cmd_perfgate(args: &Args) -> anyhow::Result<()> {
                 } else {
                     (cur <= value * (1.0 + tolerance), value * (1.0 + tolerance))
                 };
+                let delta_pct = if value.abs() > f64::EPSILON {
+                    (cur - value) / value.abs() * 100.0
+                } else if cur.abs() > f64::EPSILON {
+                    f64::INFINITY
+                } else {
+                    0.0
+                };
                 println!(
-                    "{} {key}: {cur:.4} vs baseline {value:.4} ({} bound {bound:.4})",
+                    "{} {key}: {cur:.4} vs baseline {value:.4} ({delta_pct:+.1}%, {} bound \
+                     {bound:.4})",
                     if ok { "PASS" } else { "FAIL" },
                     if higher { "lower" } else { "upper" },
                 );
                 if !ok {
                     failures.push(format!(
-                        "{key}: {cur:.4} regressed past the {:.0}% band around {value:.4}",
+                        "{key}: baseline {value:.4}, candidate {cur:.4} ({delta_pct:+.1}%) \
+                         past the {:.0}% band",
                         tolerance * 100.0
                     ));
                 }
             }
         }
     }
-    anyhow::ensure!(
-        failures.is_empty(),
-        "perf gate: {} regression(s):\n  {}",
-        failures.len(),
-        failures.join("\n  ")
-    );
+    if !failures.is_empty() {
+        // One pass collects every failing metric — a regression report
+        // that names half the problem forces a second CI round trip.
+        if args.flag("explain") {
+            explain_failures(args, &failures)?;
+        }
+        anyhow::bail!(
+            "perf gate: {} regression(s):\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        );
+    }
     println!("perf gate passed: {gated} gated of {} recorded metric(s)", metrics.len());
+    Ok(())
+}
+
+/// The `perfgate --explain` path: on a floor violation, load the
+/// baseline and candidate flight-recorder traces, run the trace diff,
+/// print the attribution, and leave the blame report in
+/// `perfgate_blame.txt` for the CI failure artifact.
+fn explain_failures(args: &Args, failures: &[String]) -> anyhow::Result<()> {
+    use systo3d::trace::{diff, parse_chrome_trace};
+
+    let base_path = args.get_str("baseline-trace", "trace_baseline.json");
+    let cand_path = args.get_str("candidate-trace", "trace_candidate.json");
+    let load = |path: &str| -> anyhow::Result<systo3d::trace::TraceLog> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--explain: read trace {path}: {e}"))?;
+        parse_chrome_trace(&text).map_err(|e| anyhow::anyhow!("--explain: {path}: {e}"))
+    };
+    match (load(base_path), load(cand_path)) {
+        (Ok(base), Ok(cand)) => {
+            let d = diff(&base, &cand);
+            let mut report = format!(
+                "perf gate failed; trace attribution {base_path} -> {cand_path}:\n\n{}",
+                d.render(12)
+            );
+            report.push_str("\nfailing metrics:\n");
+            for f in failures {
+                report.push_str(&format!("  {f}\n"));
+            }
+            print!("{report}");
+            std::fs::write("perfgate_blame.txt", &report)
+                .map_err(|e| anyhow::anyhow!("write perfgate_blame.txt: {e}"))?;
+            println!("wrote blame report to perfgate_blame.txt");
+        }
+        (base, cand) => {
+            // Traces are best-effort context: their absence must not
+            // mask the underlying metric regression.
+            for r in [base, cand] {
+                if let Err(e) = r {
+                    eprintln!("warning: {e:#}");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Align two flight-recorder traces (Chrome trace-event JSON as
+/// written by `systo3d trace --out`) and print the differential
+/// report: makespan delta, critical-path bucket and track attribution
+/// (each summing to the delta by construction), and the ranked
+/// span-level blame. `--expect-empty` turns any non-empty diff into an
+/// error — the CI determinism gate diffs two same-seed replays with
+/// it.
+fn cmd_diff(args: &Args) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+    use systo3d::trace::{diff, parse_chrome_trace, TraceLog};
+
+    anyhow::ensure!(
+        args.positional.len() == 2,
+        "usage: systo3d diff BASELINE.json CANDIDATE.json [--top K] [--json METRICS.json] \
+         [--expect-empty]"
+    );
+    let top = args.get_usize("top", 12).map_err(anyhow::Error::msg)?;
+    let load = |path: &str| -> anyhow::Result<TraceLog> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("read trace {path}: {e}"))?;
+        parse_chrome_trace(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    };
+    let base = load(&args.positional[0])?;
+    let cand = load(&args.positional[1])?;
+    let d = diff(&base, &cand);
+    print!("{}", d.render(top));
+    anyhow::ensure!(
+        d.attribution_residual() <= 1e-6,
+        "bucket attribution drifted {} s from the makespan delta",
+        d.attribution_residual()
+    );
+    if args.flag("expect-empty") {
+        anyhow::ensure!(
+            d.is_empty(),
+            "traces differ: makespan delta {:+.6} s, {} blame entr{} ({} appeared, {} vanished)",
+            d.makespan_delta(),
+            d.blame.len(),
+            if d.blame.len() == 1 { "y" } else { "ies" },
+            d.appeared_spans,
+            d.vanished_spans,
+        );
+        println!("expect-empty check passed: traces are equivalent");
+    }
+    if let Some(p) = args.get("json") {
+        let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+        metrics.insert("diff_makespan_delta_s".into(), d.makespan_delta());
+        for bucket in systo3d::trace::critical::BUCKETS {
+            metrics.insert(format!("diff_bucket_{bucket}_delta_s"), d.bucket_delta(bucket));
+        }
+        metrics.insert("diff_blame_entries".into(), d.blame.len() as f64);
+        metrics.insert("diff_matched_spans".into(), d.matched_spans as f64);
+        metrics.insert("diff_appeared_spans".into(), d.appeared_spans as f64);
+        metrics.insert("diff_vanished_spans".into(), d.vanished_spans as f64);
+        systo3d::util::json::write_metrics(p, &metrics)?;
+        println!("wrote {} metric(s) to {p}", metrics.len());
+    }
+    Ok(())
+}
+
+/// Walk the accumulated `BENCH_pr<N>.json` perf-gate artifacts in a
+/// directory and print each metric's trajectory, naming the PR where
+/// it last moved by more than the threshold — the "when did this
+/// start?" half of a regression hunt, answered without opening a
+/// single trace.
+fn cmd_trend(args: &Args) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+    use systo3d::observe::trend::{analyze, collect_bench_files, parse_metrics, render};
+
+    let dir = args.get_str("dir", ".");
+    let threshold: f64 = match args.get("threshold") {
+        None => 0.05,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threshold expects a float, got {v:?}"))?,
+    };
+    let files = collect_bench_files(std::path::Path::new(dir))
+        .map_err(|e| anyhow::anyhow!("scan {dir}: {e}"))?;
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no BENCH_pr<N>.json artifacts under {dir} — download the CI bench artifacts there \
+         first, or record one locally with `systo3d perfgate`"
+    );
+    let mut runs = Vec::with_capacity(files.len());
+    for (pr, path) in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let metrics =
+            parse_metrics(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        runs.push((*pr, metrics));
+    }
+    let trends = analyze(&runs);
+    print!("{}", render(&trends, threshold));
+    if let Some(p) = args.get("json") {
+        let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+        metrics.insert("trend_artifacts".into(), files.len() as f64);
+        metrics.insert("trend_metrics".into(), trends.len() as f64);
+        let moved = trends.iter().filter(|t| t.last_move(threshold).is_some()).count();
+        metrics.insert("trend_moved_metrics".into(), moved as f64);
+        systo3d::util::json::write_metrics(p, &metrics)?;
+        println!("wrote {} metric(s) to {p}", metrics.len());
+    }
     Ok(())
 }
 

@@ -24,11 +24,15 @@
 //!
 //! Exposition rounds it out: [`prometheus_text`] and [`json_snapshot`]
 //! render a [`MetricsSnapshot`] in Prometheus text format / JSON for
-//! scraping, and `systo3d top` draws the ASCII dashboard.
+//! scraping, and `systo3d top` draws the ASCII dashboard. Across
+//! runs, [`trend`] reads the `BENCH_pr<N>.json` artifacts CI uploads
+//! and reports each gated metric's per-PR trajectory (`systo3d
+//! trend`).
 
 pub mod anomaly;
 pub mod series;
 pub mod slo;
+pub mod trend;
 
 use crate::coordinator::metrics::MetricsSnapshot;
 use crate::trace::{Track, TraceLog};
@@ -222,14 +226,21 @@ fn binned_overlap(log: &TraceLog, track: Track, window_s: f64, windows: usize) -
 }
 
 /// Render a metrics snapshot in the Prometheus text exposition
-/// format: `# HELP` / `# TYPE` preamble per family, stable order, no
-/// timestamps (the scraper stamps).
+/// format: `# HELP` / `# TYPE` preamble per family, no timestamps
+/// (the scraper stamps).
+///
+/// The exposition is **deterministic by construction**: families are
+/// collected first, then emitted in sorted family-name order with the
+/// samples of each labeled family sorted by label string — so two
+/// renders of the same [`MetricsSnapshot`] are byte-identical (the
+/// test below compares the bytes), and exposition diffs in scrape
+/// archives always mean the metrics moved, never the iteration order.
 pub fn prometheus_text(s: &MetricsSnapshot) -> String {
-    let mut out = String::with_capacity(4096);
-    let mut counter = |name: &str, help: &str, value: u64| {
-        out.push_str(&format!(
-            "# HELP systo3d_{name} {help}\n# TYPE systo3d_{name} counter\nsysto3d_{name} {value}\n"
-        ));
+    // (family name, type, help, samples as (label-suffix, value)).
+    let mut families: Vec<(&'static str, &'static str, &'static str, Vec<(String, u64)>)> =
+        Vec::new();
+    let mut counter = |name: &'static str, help: &'static str, value: u64| {
+        families.push((name, "counter", help, vec![(String::new(), value)]));
     };
     counter("requests_total", "GEMM requests served", s.requests);
     counter("artifact_hits_total", "requests served by an AOT artifact", s.artifact_hits);
@@ -289,29 +300,45 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
         "accumulated effective-vs-peak ratio (ppm)",
         s.strassen_eff_vs_peak_ppm,
     );
-    out.push_str(
-        "# HELP systo3d_strassen_depth_jobs Strassen jobs by recursion depth\n\
-         # TYPE systo3d_strassen_depth_jobs counter\n",
-    );
-    for (d, n) in s.strassen_depths.iter().enumerate() {
-        out.push_str(&format!("systo3d_strassen_depth_jobs{{depth=\"{d}\"}} {n}\n"));
-    }
-    out.push_str(
-        "# HELP systo3d_critical_path_us Critical-path attribution by bucket (us)\n\
-         # TYPE systo3d_critical_path_us counter\n",
-    );
-    for (bucket, us) in crate::trace::critical::BUCKETS.iter().zip(s.critical_bucket_us) {
-        out.push_str(&format!("systo3d_critical_path_us{{bucket=\"{bucket}\"}} {us}\n"));
-    }
-    let mut gauge = |name: &str, help: &str, value: u64| {
-        out.push_str(&format!(
-            "# HELP systo3d_{name} {help}\n# TYPE systo3d_{name} gauge\nsysto3d_{name} {value}\n"
-        ));
+    families.push((
+        "strassen_depth_jobs",
+        "counter",
+        "Strassen jobs by recursion depth",
+        s.strassen_depths
+            .iter()
+            .enumerate()
+            .map(|(d, &n)| (format!("{{depth=\"{d}\"}}"), n))
+            .collect(),
+    ));
+    families.push((
+        "critical_path_us",
+        "counter",
+        "Critical-path attribution by bucket (us)",
+        crate::trace::critical::BUCKETS
+            .iter()
+            .zip(s.critical_bucket_us)
+            .map(|(bucket, us)| (format!("{{bucket=\"{bucket}\"}}"), us))
+            .collect(),
+    ));
+    let mut gauge = |name: &'static str, help: &'static str, value: u64| {
+        families.push((name, "gauge", help, vec![(String::new(), value)]));
     };
     gauge("latency_p50_us", "request latency p50 (us, 0 when unsampled)", s.latency_p50_us);
     gauge("latency_p99_us", "request latency p99 (us, 0 when unsampled)", s.latency_p99_us);
     gauge("latency_p999_us", "request latency p99.9 (us, 0 when unsampled)", s.latency_p999_us);
     gauge("latency_count", "latency samples recorded", s.latency_count);
+
+    families.sort_by(|a, b| a.0.cmp(b.0));
+    let mut out = String::with_capacity(4096);
+    for (name, kind, help, mut samples) in families {
+        out.push_str(&format!(
+            "# HELP systo3d_{name} {help}\n# TYPE systo3d_{name} {kind}\n"
+        ));
+        samples.sort_by(|a, b| a.0.cmp(&b.0));
+        for (labels, value) in samples {
+            out.push_str(&format!("systo3d_{name}{labels} {value}\n"));
+        }
+    }
     out
 }
 
@@ -447,5 +474,30 @@ mod tests {
         assert!(json.contains("\"strassen_depths\":[0,0,0,0]"));
         assert!(json.contains("\"latency_count\":1"));
         assert_eq!(json.matches("\"latency_p99_us\":").count(), 1);
+    }
+
+    #[test]
+    fn exposition_is_byte_identical_and_sorted() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests);
+        m.add_flops(999);
+        m.record_latency(0.004);
+        let s = m.snapshot();
+        // Two renders of the same snapshot are byte-identical.
+        assert_eq!(prometheus_text(&s).into_bytes(), prometheus_text(&s).into_bytes());
+        // Families are emitted in sorted name order…
+        let text = prometheus_text(&s);
+        let names: Vec<&str> = text
+            .lines()
+            .filter_map(|l| l.strip_prefix("# TYPE systo3d_"))
+            .map(|l| l.split_whitespace().next().unwrap())
+            .collect();
+        assert!(!names.is_empty());
+        assert!(names.windows(2).all(|w| w[0] < w[1]), "unsorted families: {names:?}");
+        // …and labeled samples in sorted label order within a family.
+        let buckets: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("systo3d_critical_path_us{")).collect();
+        assert_eq!(buckets.len(), 5);
+        assert!(buckets.windows(2).all(|w| w[0] < w[1]), "unsorted labels: {buckets:?}");
     }
 }

@@ -1,0 +1,219 @@
+//! Bench-trajectory analysis over `BENCH_pr<N>.json` artifacts.
+//!
+//! Every CI run folds its gated metrics into one flat
+//! `BENCH_pr<N>.json` object (see `systo3d perfgate --merge`), and the
+//! artifacts accumulate one per PR. This module turns that pile into a
+//! per-metric history: [`collect_bench_files`] finds and orders the
+//! artifacts by PR number, [`analyze`] pivots them into
+//! [`MetricTrend`]s, and [`MetricTrend::last_move`] names the PR where
+//! a metric last moved by more than a threshold fraction — the first
+//! question a regression hunt asks ("when did this start?") answered
+//! without opening a single trace. `systo3d trend` is the CLI face.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One metric's value at one PR.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrendPoint {
+    pub pr: u64,
+    pub value: f64,
+}
+
+/// One metric's history across the collected artifacts, PR-ascending.
+#[derive(Clone, Debug)]
+pub struct MetricTrend {
+    pub name: String,
+    pub points: Vec<TrendPoint>,
+}
+
+impl MetricTrend {
+    /// The latest PR whose value moved more than `threshold`
+    /// (fractional, e.g. 0.05 = 5%) relative to the previous point,
+    /// with the signed fractional change. `None` when the metric never
+    /// moved that much (or has fewer than two points).
+    pub fn last_move(&self, threshold: f64) -> Option<(u64, f64)> {
+        self.points
+            .windows(2)
+            .rev()
+            .find_map(|w| {
+                let (prev, cur) = (w[0].value, w[1].value);
+                let change = if prev.abs() > f64::EPSILON {
+                    (cur - prev) / prev.abs()
+                } else if cur.abs() > f64::EPSILON {
+                    f64::INFINITY
+                } else {
+                    0.0
+                };
+                (change.abs() > threshold).then_some((w[1].pr, change))
+            })
+    }
+
+    /// Latest recorded value.
+    pub fn latest(&self) -> Option<TrendPoint> {
+        self.points.last().copied()
+    }
+}
+
+/// Find `BENCH_pr<N>.json` files directly under `dir`, sorted by PR
+/// number. Files that match the name pattern but carry no parseable
+/// number are skipped (they cannot be ordered).
+pub fn collect_bench_files(dir: &Path) -> std::io::Result<Vec<(u64, PathBuf)>> {
+    let mut found = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if let Some(pr) = name
+            .strip_prefix("BENCH_pr")
+            .and_then(|r| r.strip_suffix(".json"))
+            .and_then(|n| n.parse::<u64>().ok())
+        {
+            found.push((pr, path));
+        }
+    }
+    found.sort();
+    Ok(found)
+}
+
+/// Parse one artifact's top-level numeric fields (non-numeric fields
+/// are ignored — the artifacts are flat metric objects by contract).
+pub fn parse_metrics(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let doc = Json::parse(text).map_err(|e| format!("bench artifact: {e}"))?;
+    let obj = doc.as_obj().ok_or("bench artifact: not a JSON object")?;
+    Ok(obj.iter().filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f))).collect())
+}
+
+/// Pivot per-PR metric maps into per-metric histories, name-sorted.
+pub fn analyze(runs: &[(u64, BTreeMap<String, f64>)]) -> Vec<MetricTrend> {
+    let mut trends: BTreeMap<&str, Vec<TrendPoint>> = BTreeMap::new();
+    for (pr, metrics) in runs {
+        for (name, &value) in metrics {
+            trends.entry(name).or_default().push(TrendPoint { pr: *pr, value });
+        }
+    }
+    trends
+        .into_iter()
+        .map(|(name, mut points)| {
+            points.sort_by_key(|p| p.pr);
+            MetricTrend { name: name.to_string(), points }
+        })
+        .collect()
+}
+
+/// The `systo3d trend` report: one line per metric with its value
+/// history and the PR of its last >`threshold` move.
+pub fn render(trends: &[MetricTrend], threshold: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "bench trajectory: {} metric(s), move threshold {:.0}%\n",
+        trends.len(),
+        threshold * 100.0
+    ));
+    for t in trends {
+        let history: Vec<String> =
+            t.points.iter().map(|p| format!("{:.4} (pr{})", p.value, p.pr)).collect();
+        let moved = match t.last_move(threshold) {
+            Some((pr, change)) if change.is_finite() => {
+                format!("last move: PR {pr} ({:+.1}%)", change * 100.0)
+            }
+            Some((pr, _)) => format!("last move: PR {pr} (from zero)"),
+            None => "steady".to_string(),
+        };
+        out.push_str(&format!("  {:<40} {}  | {moved}\n", t.name, history.join(" -> ")));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(pr: u64, pairs: &[(&str, f64)]) -> (u64, BTreeMap<String, f64>) {
+        (pr, pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect())
+    }
+
+    #[test]
+    fn analyze_pivots_and_orders_by_pr() {
+        // Deliberately unordered input: analyze must sort by PR.
+        let runs = vec![
+            run(7, &[("a", 1.2), ("b", 3.0)]),
+            run(4, &[("a", 1.0)]),
+            run(6, &[("a", 1.1), ("b", 3.0)]),
+        ];
+        let trends = analyze(&runs);
+        assert_eq!(trends.len(), 2);
+        assert_eq!(trends[0].name, "a");
+        let prs: Vec<u64> = trends[0].points.iter().map(|p| p.pr).collect();
+        assert_eq!(prs, vec![4, 6, 7]);
+        // Metric "b" only appears from PR 6 on.
+        assert_eq!(trends[1].points.len(), 2);
+        assert_eq!(trends[1].latest(), Some(TrendPoint { pr: 7, value: 3.0 }));
+    }
+
+    #[test]
+    fn last_move_names_the_latest_big_change() {
+        let runs = vec![
+            run(4, &[("m", 1.0)]),
+            run(5, &[("m", 2.0)]),  // +100%
+            run(6, &[("m", 2.02)]), // +1%: below threshold
+            run(7, &[("m", 2.04)]), // +1%: below threshold
+        ];
+        let t = &analyze(&runs)[0];
+        let (pr, change) = t.last_move(0.05).expect("PR 5 doubled the metric");
+        assert_eq!(pr, 5);
+        assert!((change - 1.0).abs() < 1e-9);
+        // A tighter threshold blames the most recent wiggle instead.
+        assert_eq!(t.last_move(0.005).unwrap().0, 7);
+        // A huge threshold finds nothing.
+        assert!(t.last_move(2.0).is_none());
+    }
+
+    #[test]
+    fn last_move_handles_zero_baselines() {
+        let runs = vec![run(1, &[("z", 0.0)]), run(2, &[("z", 0.0)]), run(3, &[("z", 0.5)])];
+        let t = &analyze(&runs)[0];
+        let (pr, change) = t.last_move(0.05).unwrap();
+        assert_eq!(pr, 3);
+        assert!(change.is_infinite());
+        // A single point can never move.
+        let single = &analyze(&[run(1, &[("s", 9.0)])])[0];
+        assert!(single.last_move(0.0).is_none());
+    }
+
+    #[test]
+    fn parse_metrics_keeps_only_numbers() {
+        let m = parse_metrics(r#"{"a": 1.5, "note": "text", "b": 2}"#).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["a"], 1.5);
+        assert_eq!(m["b"], 2.0);
+        assert!(parse_metrics("[1,2]").is_err());
+        assert!(parse_metrics("nonsense").is_err());
+    }
+
+    #[test]
+    fn collect_orders_artifacts_by_pr_number() {
+        let dir = std::env::temp_dir()
+            .join(format!("systo3d_trend_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["BENCH_pr10.json", "BENCH_pr4.json", "BENCH_pr8.json", "other.json"] {
+            std::fs::write(dir.join(name), "{}").unwrap();
+        }
+        std::fs::write(dir.join("BENCH_prX.json"), "{}").unwrap(); // unordered: skipped
+        let files = collect_bench_files(&dir).unwrap();
+        let prs: Vec<u64> = files.iter().map(|(pr, _)| *pr).collect();
+        assert_eq!(prs, vec![4, 8, 10]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn render_reports_history_and_moves() {
+        let runs = vec![run(4, &[("placement_gain", 1.0)]), run(5, &[("placement_gain", 1.5)])];
+        let text = render(&analyze(&runs), 0.05);
+        assert!(text.contains("placement_gain"));
+        assert!(text.contains("last move: PR 5 (+50.0%)"));
+        assert!(text.contains("1.0000 (pr4) -> 1.5000 (pr5)"));
+    }
+}

@@ -5,7 +5,7 @@
 use super::map::Placement;
 use crate::cluster::partition::PartitionPlan;
 use crate::fabric::{FabricState, Topology};
-use crate::trace::Tracer;
+use crate::trace::{profile, Tracer};
 use crate::util::rng::Xoshiro256;
 
 /// Default local-search seed (any fixed value works — determinism is
@@ -116,6 +116,10 @@ fn contention_cost(
     sends: &[(usize, usize, u64)],
     placement: &Placement,
 ) -> f64 {
+    // The placement-search inner loop: every candidate map replays all
+    // reduction sends through the circuit model. This is where the
+    // host profiler expects the search's self time to land.
+    let _scope = profile::scope("placement.candidate");
     fabric.reset_occupancy();
     let mut last = 0.0f64;
     for &(src, dst, bytes) in sends {
@@ -150,6 +154,7 @@ fn hop_bytes(hops: &[Vec<u32>], sends: &[(usize, usize, u64)], placement: &Place
 /// 2.5D plans the dominant demands are the cross-plane tile columns,
 /// so each k-slice's p × q plane lands on fabric-adjacent cards.
 fn plane_packed(cards: usize, sends: &[(usize, usize, u64)], hops: &[Vec<u32>]) -> Placement {
+    let _scope = profile::scope("placement.plane_pack");
     let mut demand = vec![vec![0u64; cards]; cards];
     let mut total = vec![0u64; cards];
     for &(src, dst, bytes) in sends {
@@ -204,6 +209,7 @@ pub fn optimize(
     topology: &Topology,
     strategy: PlacementStrategy,
 ) -> PlacementReport {
+    let _scope = profile::scope("placement.optimize");
     let t0 = std::time::Instant::now();
     let cards = topology.cards.max(1);
     let sends = plan.reduction_sends(cards);

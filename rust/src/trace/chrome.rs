@@ -29,8 +29,17 @@
 //! which the chaos suite does. The host wall-clock side channel
 //! ([`TraceLog::host_profile`]) is intentionally **not** exported: it
 //! would differ between bit-identical simulations.
+//!
+//! [`parse_chrome_trace`] inverts the export: it rebuilds a
+//! [`TraceLog`] from the JSON (tracks from the `"M"` thread names with
+//! lane suffixes stripped, categories from `cat`, µs back to simulated
+//! seconds) so `systo3d diff` can compare two `trace.json` artifacts
+//! directly. The derived `active_circuits` sweep is skipped on import
+//! — it is recomputed from the link spans on the next export. Two
+//! byte-identical files parse to exactly equal logs, which is what
+//! makes a same-seed replay diff empty by construction.
 
-use super::{Track, TraceLog};
+use super::{Category, CounterSample, InstantEvent, Span, Track, TraceLog};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
@@ -251,6 +260,100 @@ pub fn chrome_trace_json(log: &TraceLog) -> String {
     format!("{doc}\n")
 }
 
+/// Rebuild a [`TraceLog`] from exported Chrome trace-event JSON (the
+/// inverse of [`chrome_trace_json`]; see the module docs for what is
+/// and is not preserved). Strict: unknown thread labels, missing
+/// fields, or an unparseable category are errors, so a diff never
+/// silently drops events.
+pub fn parse_chrome_trace(text: &str) -> Result<TraceLog, String> {
+    let doc = Json::parse(text).map_err(|e| format!("trace JSON: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or("trace JSON: missing traceEvents array")?;
+
+    let str_field = |e: &Json, k: &str| -> Result<String, String> {
+        e.get(k)
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| format!("trace event missing string field {k:?}"))
+    };
+    let num_field = |e: &Json, k: &str| -> Result<f64, String> {
+        e.get(k)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("trace event missing numeric field {k:?}"))
+    };
+
+    // First pass: thread names -> tracks. Fan-out lanes export as
+    // "<label>.<lane>"; strip the numeric suffix to recover the track.
+    let mut track_of: std::collections::BTreeMap<(u64, u64), Track> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("M")
+            || e.get("name").and_then(|n| n.as_str()) != Some("thread_name")
+        {
+            continue;
+        }
+        let pid = num_field(e, "pid")? as u64;
+        let tid = num_field(e, "tid")? as u64;
+        let label = e
+            .get("args")
+            .and_then(|a| a.get("name"))
+            .and_then(|n| n.as_str())
+            .ok_or("thread_name event missing args.name")?;
+        let base = match label.rsplit_once('.') {
+            Some((head, lane)) if lane.chars().all(|c| c.is_ascii_digit()) => head,
+            _ => label,
+        };
+        let track = Track::parse_label(base)
+            .ok_or_else(|| format!("unknown thread label {label:?}"))?;
+        track_of.insert((pid, tid), track);
+    }
+
+    let mut log = TraceLog::default();
+    for e in events {
+        let ph = str_field(e, "ph")?;
+        match ph.as_str() {
+            "M" => {}
+            "X" | "i" => {
+                let pid = num_field(e, "pid")? as u64;
+                let tid = num_field(e, "tid")? as u64;
+                let track = *track_of
+                    .get(&(pid, tid))
+                    .ok_or_else(|| format!("event on unnamed thread {pid}/{tid}"))?;
+                let cat = str_field(e, "cat")?;
+                let category = Category::parse(&cat)
+                    .ok_or_else(|| format!("unknown span category {cat:?}"))?;
+                let name = str_field(e, "name")?;
+                let at = num_field(e, "ts")? / 1e6;
+                if ph == "X" {
+                    let end = at + num_field(e, "dur")? / 1e6;
+                    log.spans.push(Span { track, category, name, start: at, end });
+                } else {
+                    log.instants.push(InstantEvent { track, category, name, at });
+                }
+            }
+            "C" => {
+                let name = str_field(e, "name")?;
+                if name == "active_circuits" {
+                    continue; // derived from link spans at export time
+                }
+                log.counters.push(CounterSample {
+                    name,
+                    at: num_field(e, "ts")? / 1e6,
+                    value: e
+                        .get("args")
+                        .and_then(|a| a.get("value"))
+                        .and_then(|v| v.as_f64())
+                        .ok_or("counter event missing args.value")?,
+                });
+            }
+            other => return Err(format!("unknown trace event phase {other:?}")),
+        }
+    }
+    Ok(log)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,6 +451,39 @@ mod tests {
         let a = chrome_trace_json(&demo_log());
         let b = chrome_trace_json(&demo_log());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn import_round_trips_the_export() {
+        let log = demo_log();
+        let json = chrome_trace_json(&log);
+        let parsed = parse_chrome_trace(&json).expect("exported JSON must re-import");
+        assert_eq!(parsed.spans.len(), log.spans.len());
+        assert_eq!(parsed.instants.len(), log.instants.len());
+        // The derived active_circuits sweep is skipped on import.
+        assert_eq!(parsed.counters.len(), log.counters.len());
+        for (a, b) in log.spans.iter().zip(&parsed.spans) {
+            assert_eq!((a.track, a.category, &a.name), (b.track, b.category, &b.name));
+            assert!((a.start - b.start).abs() < 1e-9 && (a.end - b.end).abs() < 1e-9);
+        }
+        assert_eq!(parsed.counters[0].name, "queue_depth");
+        // Two parses of the same bytes are exactly equal: the diff of
+        // a same-seed replay pair is empty by construction.
+        let again = parse_chrome_trace(&json).unwrap();
+        assert!(crate::trace::diff(&parsed, &again).is_empty());
+    }
+
+    #[test]
+    fn import_rejects_malformed_traces() {
+        assert!(parse_chrome_trace("not json").is_err());
+        assert!(parse_chrome_trace("{\"displayTimeUnit\": \"ms\"}").is_err());
+        // An event on a thread that was never named must not be
+        // silently dropped.
+        let orphan = r#"{"traceEvents": [
+            {"ph": "X", "name": "x", "cat": "compute",
+             "pid": 10, "tid": 0, "ts": 0, "dur": 1}
+        ]}"#;
+        assert!(parse_chrome_trace(orphan).unwrap_err().contains("unnamed thread"));
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! makespan (e.g. the fabric share shrinking when reduction overlap is
 //! enabled — see `examples/trace_critical_path.rs`).
 
-use super::{Span, TraceLog};
+use super::{Span, TraceLog, Track};
 use std::collections::BTreeMap;
 
 /// The four attribution buckets plus synthetic idle, fixed order.
@@ -35,6 +35,9 @@ pub const BUCKETS: [&str; 5] = ["compute", "fabric", "host", "drain", "idle"];
 pub struct CriticalStep {
     pub name: String,
     pub bucket: &'static str,
+    /// The resource lane the bounding span ran on — the per-card /
+    /// per-link key the trace differ attributes deltas to.
+    pub track: Track,
     pub start: f64,
     pub end: f64,
     /// Idle seconds between this span's end and the previous cursor.
@@ -136,6 +139,7 @@ pub fn critical_path(log: &TraceLog) -> CriticalPath {
         steps.push(CriticalStep {
             name: s.name.clone(),
             bucket: s.category.bucket(),
+            track: s.track,
             start: s.start,
             end: s.end,
             gap_after: gap,
@@ -180,6 +184,8 @@ mod tests {
         assert_eq!(p.steps[0].name, "reduce");
         assert_eq!(p.steps[1].name, "shard");
         assert_eq!(p.steps[2].name, "dma");
+        assert_eq!(p.steps[0].track, Track::CardFabric(0));
+        assert_eq!(p.steps[2].track, Track::CardDma(0));
         assert_eq!(p.bucket_seconds["fabric"], 2.0);
         assert_eq!(p.bucket_seconds["compute"], 3.0);
         assert_eq!(p.bucket_seconds["host"], 1.0);

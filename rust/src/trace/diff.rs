@@ -1,0 +1,552 @@
+//! Differential trace analysis: align two [`TraceLog`]s and attribute
+//! the makespan delta to named spans, buckets, cards, and links.
+//!
+//! # Alignment
+//!
+//! Spans align across logs by **(track, category, name, occurrence
+//! index)**, where the occurrence index is a span's position among the
+//! spans sharing its (track, category, name) key, ordered by (start,
+//! duration). Two same-seed chaos replays serialize byte-identically
+//! (the flight recorder's determinism invariant), so their diff is
+//! empty by construction; any non-empty diff names real change.
+//!
+//! # Attribution that sums by construction
+//!
+//! Rather than comparing raw busy time (which double-counts overlapped
+//! work), the differ runs the PR 6 critical-path walker
+//! ([`critical_path`]) over both logs. Each walk partitions its
+//! makespan exactly into the five buckets (`compute`/`fabric`/`host`/
+//! `drain`/`idle`) and, via [`CriticalStep::track`], into per-card and
+//! per-link lanes — so the **difference** of the two partitions sums
+//! to the total makespan delta by construction (asserted to float
+//! rounding by [`TraceDiff::attribution_residual`]). A slow cable
+//! therefore shows up as fabric-bucket seconds on the `link a->b` lane
+//! growing by (almost exactly) the regression, instead of an opaque
+//! end-to-end delta.
+//!
+//! # Blame report
+//!
+//! [`TraceDiff::render`] ranks aligned span groups by absolute
+//! duration delta and labels each `grew`/`shrank`/`appeared`/
+//! `vanished`, followed by the counter tracks whose sample sequences
+//! changed (e.g. the `link_rate a<->b` samples a slow-link fault
+//! emits). See `systo3d diff` and the "Diagnosing a regression"
+//! section of `systo3d help`.
+
+use super::critical::{critical_path, BUCKETS};
+use super::{Category, TraceLog, Track};
+use std::collections::BTreeMap;
+
+/// Duration changes below this (1 ns, three decades under the µs JSON
+/// resolution) are float noise, not blame.
+pub const EPSILON_S: f64 = 1e-9;
+
+/// How an aligned span group changed from baseline to candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaKind {
+    /// Present in both; total duration grew.
+    Grew,
+    /// Present in both; total duration shrank.
+    Shrank,
+    /// No occurrence in the baseline log.
+    Appeared,
+    /// No occurrence in the candidate log.
+    Vanished,
+}
+
+impl DeltaKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeltaKind::Grew => "grew",
+            DeltaKind::Shrank => "shrank",
+            DeltaKind::Appeared => "appeared",
+            DeltaKind::Vanished => "vanished",
+        }
+    }
+}
+
+/// One ranked blame entry: all occurrences of a (track, category,
+/// name) span key, aggregated.
+#[derive(Clone, Debug)]
+pub struct BlameEntry {
+    pub track: Track,
+    pub category: Category,
+    pub name: String,
+    pub kind: DeltaKind,
+    pub baseline_seconds: f64,
+    pub candidate_seconds: f64,
+    pub baseline_count: usize,
+    pub candidate_count: usize,
+}
+
+impl BlameEntry {
+    /// Signed total-duration change (candidate − baseline).
+    pub fn delta(&self) -> f64 {
+        self.candidate_seconds - self.baseline_seconds
+    }
+}
+
+/// Critical-path seconds one side vs. the other, for one bucket or one
+/// track lane.
+#[derive(Clone, Debug)]
+pub struct AttributionRow {
+    /// Bucket name, or a [`Track::label`] (plus the synthetic
+    /// `(idle)` lane for track attribution).
+    pub label: String,
+    pub baseline_seconds: f64,
+    pub candidate_seconds: f64,
+}
+
+impl AttributionRow {
+    pub fn delta(&self) -> f64 {
+        self.candidate_seconds - self.baseline_seconds
+    }
+}
+
+/// The full differential report of two trace logs.
+#[derive(Clone, Debug, Default)]
+pub struct TraceDiff {
+    pub baseline_makespan: f64,
+    pub candidate_makespan: f64,
+    /// Per-bucket critical-path attribution (every [`BUCKETS`] key,
+    /// fixed order). Deltas sum to the makespan delta by construction.
+    pub buckets: Vec<AttributionRow>,
+    /// Per-track critical-path attribution (label order), including a
+    /// `(idle)` row. Deltas also sum to the makespan delta.
+    pub tracks: Vec<AttributionRow>,
+    /// Span groups that changed, ranked by |delta| descending.
+    pub blame: Vec<BlameEntry>,
+    /// Aligned occurrences present in both logs.
+    pub matched_spans: usize,
+    /// Occurrences only in the candidate log.
+    pub appeared_spans: usize,
+    /// Occurrences only in the baseline log.
+    pub vanished_spans: usize,
+    /// Counter tracks whose sample sequences differ.
+    pub changed_counters: Vec<String>,
+}
+
+impl TraceDiff {
+    /// Signed makespan change (candidate − baseline).
+    pub fn makespan_delta(&self) -> f64 {
+        self.candidate_makespan - self.baseline_makespan
+    }
+
+    /// Signed critical-path delta of one bucket.
+    pub fn bucket_delta(&self, bucket: &str) -> f64 {
+        self.buckets.iter().find(|r| r.label == bucket).map_or(0.0, |r| r.delta())
+    }
+
+    /// |Σ bucket deltas − makespan delta| — zero up to float rounding,
+    /// the "sums by construction" invariant the tests assert.
+    pub fn attribution_residual(&self) -> f64 {
+        let sum: f64 = self.buckets.iter().map(|r| r.delta()).sum();
+        (sum - self.makespan_delta()).abs()
+    }
+
+    /// Same invariant over the per-track partition.
+    pub fn track_attribution_residual(&self) -> f64 {
+        let sum: f64 = self.tracks.iter().map(|r| r.delta()).sum();
+        (sum - self.makespan_delta()).abs()
+    }
+
+    /// Fraction of the makespan delta the named bucket explains
+    /// (0 when the total delta is negligible).
+    pub fn attribution_share(&self, bucket: &str) -> f64 {
+        let total = self.makespan_delta();
+        if total.abs() < EPSILON_S {
+            return 0.0;
+        }
+        self.bucket_delta(bucket) / total
+    }
+
+    /// True when nothing changed: equal makespans, no blame entries,
+    /// no one-sided spans, no counter changes. Byte-identical traces
+    /// (same-seed replays) always land here.
+    pub fn is_empty(&self) -> bool {
+        self.makespan_delta().abs() < EPSILON_S
+            && self.blame.is_empty()
+            && self.appeared_spans == 0
+            && self.vanished_spans == 0
+            && self.changed_counters.is_empty()
+    }
+
+    /// Multi-line blame report: makespan movement, both attribution
+    /// partitions, the top-`top_k` span groups, changed counters.
+    pub fn render(&self, top_k: usize) -> String {
+        use crate::util::stats::fmt_duration;
+        let fmt_signed = |d: f64| {
+            let sign = if d < 0.0 { "-" } else { "+" };
+            format!("{sign}{}", fmt_duration(d.abs()))
+        };
+        let mut out = String::new();
+        if self.is_empty() {
+            out.push_str(&format!(
+                "traces are identical: makespan {} on both sides, {} aligned spans, empty blame report\n",
+                fmt_duration(self.baseline_makespan),
+                self.matched_spans
+            ));
+            return out;
+        }
+        let delta = self.makespan_delta();
+        let pct = if self.baseline_makespan > 0.0 {
+            format!(", {:+.1}%", 100.0 * delta / self.baseline_makespan)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!(
+            "trace diff: baseline {} -> candidate {} (delta {}{pct})\n",
+            fmt_duration(self.baseline_makespan),
+            fmt_duration(self.candidate_makespan),
+            fmt_signed(delta),
+        ));
+        out.push_str("critical-path attribution by bucket (sums to the delta by construction):\n");
+        for r in &self.buckets {
+            if r.delta().abs() < EPSILON_S && r.baseline_seconds == 0.0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  {:<10} {:>12}   ({} -> {})\n",
+                r.label,
+                fmt_signed(r.delta()),
+                fmt_duration(r.baseline_seconds),
+                fmt_duration(r.candidate_seconds)
+            ));
+        }
+        out.push_str("critical-path attribution by track (top movers):\n");
+        let mut movers: Vec<&AttributionRow> = self.tracks.iter().collect();
+        movers.sort_by(|a, b| {
+            b.delta().abs().total_cmp(&a.delta().abs()).then(a.label.cmp(&b.label))
+        });
+        for r in movers.iter().take(top_k).filter(|r| r.delta().abs() >= EPSILON_S) {
+            out.push_str(&format!("  {:<18} {:>12}\n", r.label, fmt_signed(r.delta())));
+        }
+        out.push_str(&format!(
+            "blame (span-duration changes, top {} of {} by |delta|):\n",
+            top_k.min(self.blame.len()),
+            self.blame.len()
+        ));
+        for e in self.blame.iter().take(top_k) {
+            let counts = if e.baseline_count == e.candidate_count {
+                format!("x{}", e.candidate_count)
+            } else {
+                format!("x{} -> x{}", e.baseline_count, e.candidate_count)
+            };
+            out.push_str(&format!(
+                "  {:>12}  {:<8} [{:<7}] {:<18} {} ({counts})\n",
+                fmt_signed(e.delta()),
+                e.kind.label(),
+                e.category.bucket(),
+                e.track.label(),
+                e.name,
+            ));
+        }
+        if !self.changed_counters.is_empty() {
+            out.push_str(&format!("counters changed: {}\n", self.changed_counters.join(", ")));
+        }
+        out
+    }
+}
+
+type SpanKey = (Track, Category, String);
+
+/// Group a log's spans by alignment key; durations per key ordered by
+/// (start, duration) so occurrence indices are deterministic.
+fn span_groups(log: &TraceLog) -> BTreeMap<SpanKey, Vec<f64>> {
+    let mut groups: BTreeMap<SpanKey, Vec<(f64, f64)>> = BTreeMap::new();
+    for s in &log.spans {
+        groups
+            .entry((s.track, s.category, s.name.clone()))
+            .or_default()
+            .push((s.start, s.end - s.start));
+    }
+    groups
+        .into_iter()
+        .map(|(k, mut v)| {
+            v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+            (k, v.into_iter().map(|(_, d)| d).collect())
+        })
+        .collect()
+}
+
+fn counter_groups(log: &TraceLog) -> BTreeMap<String, Vec<(f64, f64)>> {
+    let mut groups: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for c in &log.counters {
+        groups.entry(c.name.clone()).or_default().push((c.at, c.value));
+    }
+    groups
+}
+
+/// Diff `candidate` against `baseline` (module docs give the exact
+/// alignment and attribution semantics).
+pub fn diff(baseline: &TraceLog, candidate: &TraceLog) -> TraceDiff {
+    let base_cp = critical_path(baseline);
+    let cand_cp = critical_path(candidate);
+
+    // Bucket partition: both walks cover their makespan exactly, so
+    // the row deltas sum to the makespan delta by construction.
+    let buckets = BUCKETS
+        .iter()
+        .map(|&b| AttributionRow {
+            label: b.to_string(),
+            baseline_seconds: base_cp.bucket_seconds.get(b).copied().unwrap_or(0.0),
+            candidate_seconds: cand_cp.bucket_seconds.get(b).copied().unwrap_or(0.0),
+        })
+        .collect();
+
+    // Track partition: step durations keyed by lane label, the walk's
+    // idle seconds on a synthetic "(idle)" lane. Same sum invariant.
+    let mut lanes: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    for (cp, side) in [(&base_cp, 0), (&cand_cp, 1)] {
+        for step in &cp.steps {
+            let e = lanes.entry(step.track.label()).or_insert((0.0, 0.0));
+            let d = step.end - step.start;
+            if side == 0 {
+                e.0 += d;
+            } else {
+                e.1 += d;
+            }
+        }
+        let idle = cp.bucket_seconds.get("idle").copied().unwrap_or(0.0);
+        let e = lanes.entry("(idle)".into()).or_insert((0.0, 0.0));
+        if side == 0 {
+            e.0 += idle;
+        } else {
+            e.1 += idle;
+        }
+    }
+    let tracks = lanes
+        .into_iter()
+        .map(|(label, (b, c))| AttributionRow {
+            label,
+            baseline_seconds: b,
+            candidate_seconds: c,
+        })
+        .collect();
+
+    // Span alignment and the ranked blame list.
+    let base_groups = span_groups(baseline);
+    let cand_groups = span_groups(candidate);
+    let mut keys: Vec<&SpanKey> = base_groups.keys().chain(cand_groups.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    let empty: Vec<f64> = Vec::new();
+    let (mut matched, mut appeared, mut vanished) = (0usize, 0usize, 0usize);
+    let mut blame: Vec<BlameEntry> = Vec::new();
+    for key in keys {
+        let b = base_groups.get(key).unwrap_or(&empty);
+        let c = cand_groups.get(key).unwrap_or(&empty);
+        matched += b.len().min(c.len());
+        appeared += c.len().saturating_sub(b.len());
+        vanished += b.len().saturating_sub(c.len());
+        let (bs, cs): (f64, f64) = (b.iter().sum(), c.iter().sum());
+        let delta = cs - bs;
+        if delta.abs() < EPSILON_S && b.len() == c.len() {
+            continue;
+        }
+        let kind = if b.is_empty() {
+            DeltaKind::Appeared
+        } else if c.is_empty() {
+            DeltaKind::Vanished
+        } else if delta >= 0.0 {
+            DeltaKind::Grew
+        } else {
+            DeltaKind::Shrank
+        };
+        blame.push(BlameEntry {
+            track: key.0,
+            category: key.1,
+            name: key.2.clone(),
+            kind,
+            baseline_seconds: bs,
+            candidate_seconds: cs,
+            baseline_count: b.len(),
+            candidate_count: c.len(),
+        });
+    }
+    blame.sort_by(|a, b| {
+        b.delta()
+            .abs()
+            .total_cmp(&a.delta().abs())
+            .then(a.track.cmp(&b.track))
+            .then(a.name.cmp(&b.name))
+    });
+
+    // Counter tracks: any sample-sequence change is named.
+    let base_counters = counter_groups(baseline);
+    let cand_counters = counter_groups(candidate);
+    let mut counter_names: Vec<&String> =
+        base_counters.keys().chain(cand_counters.keys()).collect();
+    counter_names.sort();
+    counter_names.dedup();
+    let changed_counters = counter_names
+        .into_iter()
+        .filter(|n| base_counters.get(*n) != cand_counters.get(*n))
+        .cloned()
+        .collect();
+
+    TraceDiff {
+        baseline_makespan: base_cp.makespan,
+        candidate_makespan: cand_cp.makespan,
+        buckets,
+        tracks,
+        blame,
+        matched_spans: matched,
+        appeared_spans: appeared,
+        vanished_spans: vanished,
+        changed_counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Tracer;
+
+    fn log(spans: &[(Track, Category, &str, f64, f64)]) -> TraceLog {
+        let t = Tracer::recording();
+        for (tr, cat, name, s, e) in spans {
+            t.span(*tr, *cat, || name.to_string(), *s, *e);
+        }
+        t.take()
+    }
+
+    #[test]
+    fn identical_logs_diff_empty() {
+        let a = log(&[
+            (Track::CardCompute(0), Category::Compute, "shard", 0.0, 2.0),
+            (Track::CardFabric(0), Category::Fabric, "reduce", 2.0, 3.0),
+        ]);
+        let d = diff(&a, &a.clone());
+        assert!(d.is_empty());
+        assert_eq!(d.matched_spans, 2);
+        assert_eq!(d.blame.len(), 0);
+        assert!(d.render(8).contains("traces are identical"));
+        assert!(d.render(8).contains("empty blame report"));
+    }
+
+    #[test]
+    fn grown_span_is_blamed_and_attribution_sums() {
+        let a = log(&[
+            (Track::CardCompute(0), Category::Compute, "shard", 0.0, 2.0),
+            (Track::CardFabric(0), Category::Fabric, "reduce", 2.0, 3.0),
+        ]);
+        let b = log(&[
+            (Track::CardCompute(0), Category::Compute, "shard", 0.0, 2.0),
+            (Track::CardFabric(0), Category::Fabric, "reduce", 2.0, 5.0),
+        ]);
+        let d = diff(&a, &b);
+        assert!((d.makespan_delta() - 2.0).abs() < 1e-12);
+        assert!(d.attribution_residual() < 1e-9);
+        assert!(d.track_attribution_residual() < 1e-9);
+        assert!((d.bucket_delta("fabric") - 2.0).abs() < 1e-12);
+        assert_eq!(d.blame.len(), 1);
+        assert_eq!(d.blame[0].kind, DeltaKind::Grew);
+        assert_eq!(d.blame[0].name, "reduce");
+        let r = d.render(8);
+        assert!(r.contains("grew"), "{r}");
+        assert!(r.contains("card0/fabric"), "{r}");
+    }
+
+    #[test]
+    fn one_sided_spans_appear_and_vanish() {
+        let a = log(&[
+            (Track::CardCompute(0), Category::Compute, "shard", 0.0, 2.0),
+            (Track::Control, Category::Drain, "drain", 0.5, 1.0),
+        ]);
+        let b = log(&[
+            (Track::CardCompute(0), Category::Compute, "shard", 0.0, 2.0),
+            (Track::Link(0, 1), Category::Fabric, "circuit", 1.0, 1.5),
+        ]);
+        let d = diff(&a, &b);
+        assert_eq!(d.matched_spans, 1);
+        assert_eq!(d.appeared_spans, 1);
+        assert_eq!(d.vanished_spans, 1);
+        let kinds: Vec<DeltaKind> = d.blame.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&DeltaKind::Appeared));
+        assert!(kinds.contains(&DeltaKind::Vanished));
+        assert!(d.attribution_residual() < 1e-9);
+        let r = d.render(8);
+        assert!(r.contains("appeared") && r.contains("vanished"), "{r}");
+        assert!(r.contains("link 0->1"), "{r}");
+    }
+
+    #[test]
+    fn zero_duration_spans_align_without_noise() {
+        // Matched zero-duration spans produce no blame; a one-sided
+        // zero-duration span still registers as appeared (count
+        // change) even though its duration delta is zero.
+        let a = log(&[
+            (Track::CardCompute(0), Category::Compute, "tick", 1.0, 1.0),
+            (Track::CardCompute(0), Category::Compute, "work", 0.0, 2.0),
+        ]);
+        let b = log(&[
+            (Track::CardCompute(0), Category::Compute, "tick", 1.0, 1.0),
+            (Track::CardCompute(0), Category::Compute, "tick", 1.5, 1.5),
+            (Track::CardCompute(0), Category::Compute, "work", 0.0, 2.0),
+        ]);
+        let d = diff(&a, &b);
+        assert_eq!(d.appeared_spans, 1);
+        assert_eq!(d.blame.len(), 1);
+        assert_eq!(d.blame[0].kind, DeltaKind::Grew); // both sides present
+        assert_eq!(d.blame[0].baseline_count, 1);
+        assert_eq!(d.blame[0].candidate_count, 2);
+        assert!(d.blame[0].delta().abs() < 1e-12);
+        assert!(d.makespan_delta().abs() < 1e-12);
+    }
+
+    #[test]
+    fn occurrence_indices_align_repeated_names() {
+        // Three same-named spans vs two: exactly one occurrence is
+        // one-sided, and the duration delta aggregates across the key.
+        let a = log(&[
+            (Track::CardFabric(1), Category::Fabric, "circ", 0.0, 1.0),
+            (Track::CardFabric(1), Category::Fabric, "circ", 1.0, 2.0),
+            (Track::CardFabric(1), Category::Fabric, "circ", 2.0, 3.0),
+        ]);
+        let b = log(&[
+            (Track::CardFabric(1), Category::Fabric, "circ", 0.0, 1.0),
+            (Track::CardFabric(1), Category::Fabric, "circ", 1.0, 2.5),
+        ]);
+        let d = diff(&a, &b);
+        assert_eq!(d.matched_spans, 2);
+        assert_eq!(d.vanished_spans, 1);
+        assert_eq!(d.blame.len(), 1);
+        assert!((d.blame[0].delta() - (2.5 - 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn changed_counter_tracks_are_named() {
+        let t = Tracer::recording();
+        t.counter("queue_depth", 0.0, 4.0);
+        let a = t.take();
+        let t = Tracer::recording();
+        t.counter("queue_depth", 0.0, 4.0);
+        t.counter("link_rate 2<->3", 1.0, 12.5);
+        let b = t.take();
+        let d = diff(&a, &b);
+        assert_eq!(d.changed_counters, vec!["link_rate 2<->3".to_string()]);
+        assert!(!d.is_empty());
+        assert!(d.render(4).contains("link_rate 2<->3"));
+        // Identical counters on both sides stay unnamed.
+        assert!(diff(&a, &a.clone()).changed_counters.is_empty());
+    }
+
+    #[test]
+    fn track_rows_partition_both_makespans() {
+        let a = log(&[
+            (Track::CardDma(0), Category::Host, "dma", 0.0, 1.0),
+            (Track::CardCompute(0), Category::Compute, "shard", 1.0, 4.0),
+        ]);
+        let b = log(&[
+            (Track::CardDma(0), Category::Host, "dma", 0.0, 1.5),
+            (Track::CardCompute(0), Category::Compute, "shard", 1.5, 5.0),
+        ]);
+        let d = diff(&a, &b);
+        let base_sum: f64 = d.tracks.iter().map(|r| r.baseline_seconds).sum();
+        let cand_sum: f64 = d.tracks.iter().map(|r| r.candidate_seconds).sum();
+        assert!((base_sum - d.baseline_makespan).abs() < 1e-9);
+        assert!((cand_sum - d.candidate_makespan).abs() < 1e-9);
+        assert!(d.tracks.iter().any(|r| r.label == "(idle)"));
+    }
+}

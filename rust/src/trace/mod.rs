@@ -45,12 +45,29 @@
 //! measurements (placement-search timing) never enter the event
 //! stream: they aggregate into the [`TraceLog::host_profile`] side
 //! channel, which the exporter leaves out of `trace.json`.
+//!
+//! # Differential observability
+//!
+//! Two layers answer "what changed?" rather than "what happened?":
+//! [`diff`] aligns a baseline and a candidate log and attributes the
+//! makespan delta to named spans, buckets, cards, and links (the
+//! `systo3d diff` subcommand and `perfgate --explain`), while
+//! [`profile`] is the scoped host wall-clock profiler — parent
+//! attribution, self vs. total time, folded-stack export — that the
+//! known hot loops (placement candidate replay, fabric route healing,
+//! chaos seed execution, collective pricing) thread their guards
+//! through. [`parse_chrome_trace`] re-imports an exported
+//! `trace.json` so both sides of a diff can come straight from CI
+//! artifacts.
 
 pub mod chrome;
 pub mod critical;
+pub mod diff;
+pub mod profile;
 
-pub use chrome::chrome_trace_json;
+pub use chrome::{chrome_trace_json, parse_chrome_trace};
 pub use critical::{critical_path, CriticalPath, CriticalStep};
+pub use diff::{diff, BlameEntry, DeltaKind, TraceDiff};
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -84,6 +101,27 @@ impl Track {
             Track::CardFabric(c) => format!("card{c}/fabric"),
             Track::CardWriteback(c) => format!("card{c}/writeback"),
             Track::Link(a, b) => format!("link {a}->{b}"),
+        }
+    }
+
+    /// Inverse of [`Track::label`] — the Chrome-trace importer rebuilds
+    /// tracks from exported thread names.
+    pub fn parse_label(label: &str) -> Option<Track> {
+        if label == "control" {
+            return Some(Track::Control);
+        }
+        if let Some(rest) = label.strip_prefix("link ") {
+            let (a, b) = rest.split_once("->")?;
+            return Some(Track::Link(a.parse().ok()?, b.parse().ok()?));
+        }
+        let (card, lane) = label.strip_prefix("card")?.split_once('/')?;
+        let c: usize = card.parse().ok()?;
+        match lane {
+            "dma" => Some(Track::CardDma(c)),
+            "compute" => Some(Track::CardCompute(c)),
+            "fabric" => Some(Track::CardFabric(c)),
+            "writeback" => Some(Track::CardWriteback(c)),
+            _ => None,
         }
     }
 }
@@ -121,6 +159,21 @@ impl Category {
             Category::Drain => "drain",
             Category::Placement => "placement",
             Category::Strassen => "strassen",
+        }
+    }
+
+    /// Inverse of [`Category::name`], for the Chrome-trace importer.
+    pub fn parse(name: &str) -> Option<Category> {
+        match name {
+            "compute" => Some(Category::Compute),
+            "fabric" => Some(Category::Fabric),
+            "collective" => Some(Category::Collective),
+            "host" => Some(Category::Host),
+            "steal" => Some(Category::Steal),
+            "drain" => Some(Category::Drain),
+            "placement" => Some(Category::Placement),
+            "strassen" => Some(Category::Strassen),
+            _ => None,
         }
     }
 
@@ -412,5 +465,28 @@ mod tests {
         labels.sort();
         labels.dedup();
         assert_eq!(labels.len(), tracks.len());
+        // Labels round-trip through the importer's parser.
+        for t in tracks {
+            assert_eq!(Track::parse_label(&t.label()), Some(t));
+        }
+        assert_eq!(Track::parse_label("card3/mystery"), None);
+        assert_eq!(Track::parse_label("linkage"), None);
+    }
+
+    #[test]
+    fn category_names_round_trip() {
+        for c in [
+            Category::Compute,
+            Category::Fabric,
+            Category::Collective,
+            Category::Host,
+            Category::Steal,
+            Category::Drain,
+            Category::Placement,
+            Category::Strassen,
+        ] {
+            assert_eq!(Category::parse(c.name()), Some(c));
+        }
+        assert_eq!(Category::parse("idle"), None);
     }
 }

@@ -1,0 +1,394 @@
+//! Scoped host wall-clock profiler for the simulator's hot loops.
+//!
+//! The flight recorder's [`Tracer::profile`](super::Tracer::profile)
+//! side channel records flat `name → (count, seconds)` aggregates;
+//! this module grows it into a structured profiler: RAII enter/exit
+//! guards ([`scope`]) that build a per-thread call tree with **parent
+//! attribution**, call counts, and **self vs. total** time, plus a
+//! top-k report and a folded-stack export loadable by speedscope or
+//! inferno (`flamegraph.pl --flamechart` style `a;b;c weight` lines).
+//!
+//! # Arming
+//!
+//! The profiler is process-global and **disarmed by default**: a
+//! disarmed [`scope`] call is a single relaxed atomic load and a no-op
+//! guard, so the instrumented hot loops (placement candidate replay,
+//! `FabricState` route healing, chaos seed execution, collective
+//! pricing) pay nothing in normal runs. [`arm`] turns recording on;
+//! the armed overhead is gated < 3% median by `rust/benches/hotpath.rs`
+//! and the `profiler_overhead` floor in `rust/benches/baseline.json`.
+//!
+//! Measurements are **host wall-clock** and accumulate only into
+//! thread-local state — they never touch the deterministic sim-time
+//! event stream, so traced replays stay byte-identical whether or not
+//! the profiler is armed. [`ProfileReport::fold_into`] bridges a
+//! drained report back into a tracer's `host_profile` side channel
+//! (one entry per call path) for the `systo3d trace` summary.
+//!
+//! ```
+//! use systo3d::trace::profile;
+//! profile::arm();
+//! {
+//!     let _outer = profile::scope("search");
+//!     for _ in 0..4 {
+//!         let _inner = profile::scope("candidate");
+//!     }
+//! }
+//! let report = profile::take_report();
+//! profile::disarm();
+//! assert_eq!(report.entries.len(), 2);
+//! assert!(report.folded().contains("search;candidate"));
+//! ```
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Start recording scopes on every thread (cheap: one atomic store).
+pub fn arm() {
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Stop recording. Already-open scopes still pop correctly on drop.
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Whether [`scope`] guards currently record.
+pub fn is_armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+struct Node {
+    name: &'static str,
+    parent: usize,
+    children: Vec<usize>,
+    calls: u64,
+    total_s: f64,
+}
+
+struct ProfState {
+    nodes: Vec<Node>,
+    /// Index of the innermost open scope's node (0 = synthetic root).
+    current: usize,
+}
+
+impl ProfState {
+    fn new() -> Self {
+        ProfState {
+            nodes: vec![Node {
+                name: "",
+                parent: usize::MAX,
+                children: Vec::new(),
+                calls: 0,
+                total_s: 0.0,
+            }],
+            current: 0,
+        }
+    }
+
+    /// Find-or-create the child of `current` named `name`. Children
+    /// per node stay in the single digits, so a linear scan beats any
+    /// hashing here.
+    fn enter(&mut self, name: &'static str) -> usize {
+        let cur = self.current;
+        if let Some(&c) = self.nodes[cur].children.iter().find(|&&c| self.nodes[c].name == name) {
+            return c;
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node { name, parent: cur, children: Vec::new(), calls: 0, total_s: 0.0 });
+        self.nodes[cur].children.push(id);
+        id
+    }
+}
+
+thread_local! {
+    static STATE: RefCell<ProfState> = RefCell::new(ProfState::new());
+}
+
+/// RAII guard returned by [`scope`]; accumulates elapsed wall-clock
+/// into the profiler tree on drop. Guards must drop in LIFO order per
+/// thread (the natural shape of lexical scopes).
+#[must_use = "the scope measures until the guard drops"]
+pub struct Scope {
+    start: Option<Instant>,
+}
+
+/// Open a named scope. Disarmed: a relaxed load and a no-op guard.
+/// Armed: descends the calling thread's call tree (creating the child
+/// node on first visit) and stamps the clock.
+pub fn scope(name: &'static str) -> Scope {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Scope { start: None };
+    }
+    STATE.with(|s| {
+        let mut st = s.borrow_mut();
+        let node = st.enter(name);
+        st.current = node;
+    });
+    Scope { start: Some(Instant::now()) }
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let elapsed = start.elapsed().as_secs_f64();
+            STATE.with(|s| {
+                let mut st = s.borrow_mut();
+                let cur = st.current;
+                if cur != 0 {
+                    st.nodes[cur].calls += 1;
+                    st.nodes[cur].total_s += elapsed;
+                    st.current = st.nodes[cur].parent;
+                }
+            });
+        }
+    }
+}
+
+/// One call path of the drained tree.
+#[derive(Clone, Debug)]
+pub struct ProfileEntry {
+    /// Semicolon-joined path from the outermost scope, e.g.
+    /// `placement.optimize;placement.candidate` — the folded-stack key.
+    pub path: String,
+    /// Leaf scope name (last path component).
+    pub name: &'static str,
+    /// Nesting depth (outermost scope = 1).
+    pub depth: usize,
+    pub calls: u64,
+    /// Wall-clock seconds inside this scope, children included.
+    pub total_s: f64,
+    /// Wall-clock seconds minus time attributed to child scopes.
+    pub self_s: f64,
+}
+
+/// The drained call tree of one thread, flattened to paths.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileReport {
+    /// All paths, sorted by path for determinism.
+    pub entries: Vec<ProfileEntry>,
+}
+
+/// Drain the calling thread's call tree into a report and reset it.
+/// Call with every scope closed (open scopes would lose their counts).
+pub fn take_report() -> ProfileReport {
+    let state = STATE.with(|s| s.replace(ProfState::new()));
+    let mut entries = Vec::new();
+    // Depth-first from the synthetic root, threading the path prefix.
+    let mut stack: Vec<(usize, String, usize)> =
+        state.nodes[0].children.iter().rev().map(|&c| (c, String::new(), 1)).collect();
+    while let Some((id, prefix, depth)) = stack.pop() {
+        let n = &state.nodes[id];
+        let path =
+            if prefix.is_empty() { n.name.to_string() } else { format!("{prefix};{}", n.name) };
+        let child_total: f64 = n.children.iter().map(|&c| state.nodes[c].total_s).sum();
+        entries.push(ProfileEntry {
+            path: path.clone(),
+            name: n.name,
+            depth,
+            calls: n.calls,
+            total_s: n.total_s,
+            self_s: (n.total_s - child_total).max(0.0),
+        });
+        for &c in n.children.iter().rev() {
+            stack.push((c, path.clone(), depth + 1));
+        }
+    }
+    entries.sort_by(|a, b| a.path.cmp(&b.path));
+    ProfileReport { entries }
+}
+
+impl ProfileReport {
+    /// Entries ranked by self time (descending, path-tiebroken) — the
+    /// "where does the host time actually go" view.
+    pub fn top_self(&self, k: usize) -> Vec<&ProfileEntry> {
+        let mut v: Vec<&ProfileEntry> = self.entries.iter().collect();
+        v.sort_by(|a, b| b.self_s.total_cmp(&a.self_s).then(a.path.cmp(&b.path)));
+        v.truncate(k);
+        v
+    }
+
+    /// Total wall-clock across the outermost scopes.
+    pub fn total_seconds(&self) -> f64 {
+        self.entries.iter().filter(|e| e.depth == 1).map(|e| e.total_s).sum()
+    }
+
+    /// Folded-stack export: one `path self_µs` line per path with
+    /// non-zero self time, sorted by path. Loadable by speedscope
+    /// ("import") and inferno/flamegraph.pl as a collapsed stack file.
+    pub fn folded(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            let us = (e.self_s * 1e6).round() as u64;
+            if us > 0 {
+                out.push_str(&format!("{} {}\n", e.path, us));
+            }
+        }
+        out
+    }
+
+    /// Human top-k table: path, calls, total, self.
+    pub fn render(&self, k: usize) -> String {
+        use crate::util::stats::fmt_duration;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "host profile: {} paths, {} across top-level scopes\n",
+            self.entries.len(),
+            fmt_duration(self.total_seconds())
+        ));
+        out.push_str(&format!(
+            "  {:<52} {:>9} {:>12} {:>12}\n",
+            "path (self-time ranked)", "calls", "total", "self"
+        ));
+        for e in self.top_self(k) {
+            out.push_str(&format!(
+                "  {:<52} {:>9} {:>12} {:>12}\n",
+                e.path,
+                e.calls,
+                fmt_duration(e.total_s),
+                fmt_duration(e.self_s)
+            ));
+        }
+        out
+    }
+
+    /// Fold every path into a tracer's `host_profile` side channel —
+    /// the bridge from the structured profiler back to the flat
+    /// [`Tracer::profile`](super::Tracer::profile) aggregates the
+    /// `systo3d trace` summary prints.
+    pub fn fold_into(&self, tracer: &super::Tracer) {
+        for e in &self.entries {
+            tracer.profile(&e.path, e.calls, e.total_s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // ARMED is process-global; serialize tests that toggle it so a
+    // concurrently running armed test never sees a surprise disarm.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn spin(iters: u64) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..iters {
+            acc += (i as f64).sqrt();
+        }
+        acc
+    }
+
+    #[test]
+    fn disarmed_scopes_record_nothing() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        disarm();
+        {
+            let _s = scope("ghost");
+        }
+        assert!(take_report().entries.is_empty());
+    }
+
+    #[test]
+    fn nested_scopes_attribute_parents_and_self_time() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        arm();
+        let mut sink = 0.0;
+        {
+            let _outer = scope("outer");
+            sink += spin(20_000);
+            for _ in 0..3 {
+                let _inner = scope("inner");
+                sink += spin(20_000);
+            }
+        }
+        disarm();
+        let report = take_report();
+        assert!(sink != 0.0);
+        assert_eq!(report.entries.len(), 2);
+        let outer = report.entries.iter().find(|e| e.path == "outer").unwrap();
+        let inner = report.entries.iter().find(|e| e.path == "outer;inner").unwrap();
+        assert_eq!(outer.calls, 1);
+        assert_eq!(inner.calls, 3);
+        assert_eq!((outer.depth, inner.depth), (1, 2));
+        // Parent attribution: outer's total covers inner's total, and
+        // outer's self excludes it.
+        assert!(outer.total_s >= inner.total_s);
+        assert!(outer.self_s <= outer.total_s - inner.total_s + 1e-9);
+        assert!(inner.self_s > 0.0);
+        assert!((report.total_seconds() - outer.total_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn folded_export_has_full_paths_with_positive_weights() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        arm();
+        {
+            let _a = scope("a");
+            let _b = scope("b");
+            spin(200_000);
+        }
+        disarm();
+        let report = take_report();
+        let folded = report.folded();
+        assert!(folded.contains("a;b "), "missing stack line in:\n{folded}");
+        for line in folded.lines() {
+            let (path, weight) = line.rsplit_once(' ').unwrap();
+            assert!(!path.is_empty());
+            assert!(weight.parse::<u64>().unwrap() > 0);
+        }
+    }
+
+    #[test]
+    fn take_report_resets_the_tree() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        arm();
+        {
+            let _s = scope("once");
+        }
+        disarm();
+        assert_eq!(take_report().entries.len(), 1);
+        assert!(take_report().entries.is_empty());
+    }
+
+    #[test]
+    fn fold_into_bridges_to_the_tracer_side_channel() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        arm();
+        {
+            let _a = scope("bridge");
+            spin(10_000);
+        }
+        disarm();
+        let report = take_report();
+        let tracer = crate::trace::Tracer::recording();
+        report.fold_into(&tracer);
+        let log = tracer.take();
+        assert_eq!(log.host_profile["bridge"].0, 1);
+        assert!(log.host_profile["bridge"].1 > 0.0);
+    }
+
+    #[test]
+    fn render_ranks_by_self_time() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        arm();
+        {
+            let _fast = scope("cheap");
+        }
+        {
+            let _slow = scope("expensive");
+            spin(400_000);
+        }
+        disarm();
+        let report = take_report();
+        let top = report.top_self(1);
+        assert_eq!(top[0].path, "expensive");
+        let rendered = report.render(2);
+        assert!(rendered.contains("expensive"));
+        assert!(rendered.contains("calls"));
+    }
+}

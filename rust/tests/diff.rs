@@ -1,0 +1,201 @@
+//! Differential-observability integration suite.
+//!
+//! The trace differ promises attribution that **sums to the makespan
+//! delta by construction** (both partitions: buckets and track lanes),
+//! an **empty diff for same-seed replays** (the flight recorder's
+//! determinism invariant carried one level up), and a blame report
+//! that names the *resource* a regression lives on — the degraded
+//! cable for a slow-link fault, the hottest inner loop for host time.
+//! This suite checks all three on real scheduler traces rather than
+//! hand-built logs (the unit tests in `trace/diff.rs` own the
+//! alignment edge cases: one-sided spans, zero-duration spans, counter
+//! tracks).
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign};
+use systo3d::cluster::{ClusterSim, Fault, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::Topology;
+use systo3d::systolic::ArraySize;
+use systo3d::trace::{diff, DeltaKind, TraceLog, Tracer, Track};
+
+fn mini_design() -> OffchipDesign {
+    OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(4, 4, 2, 2), 8, 8),
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    }
+}
+
+/// The chaos scenario shape the trace suite uses: 8 active cards, 2
+/// hot spares, aggressive growth watermark.
+fn sim(topology: Topology, tracer: Tracer) -> ClusterSim {
+    ClusterSim::with_topology_and_spares(Fleet::uniform(10, "mini", mini_design()), topology, 2)
+        .with_watermark(Some(0.75))
+        .with_trace(tracer)
+}
+
+fn plan96() -> PartitionPlan {
+    PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 96, 96, 96).unwrap()
+}
+
+/// One traced chaos run of the shared scenario.
+fn traced_run(topology: Topology, seed: u64) -> TraceLog {
+    let plan = plan96();
+    let horizon = sim(topology.clone(), Tracer::off()).simulate(&plan).makespan_seconds;
+    let faults = FaultPlan::seeded(seed, 10, horizon);
+    let s = sim(topology, Tracer::recording());
+    s.simulate_elastic(&plan, &faults).unwrap();
+    s.trace.snapshot()
+}
+
+/// Property: across ring/torus/fat-tree chaos pairs, both attribution
+/// partitions sum exactly to the makespan delta, and a same-seed
+/// replay pair diffs empty.
+#[test]
+fn attribution_sums_on_seeded_chaos_pairs_across_fabrics() {
+    for topology in [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)] {
+        let logs: Vec<TraceLog> = (0..3).map(|seed| traced_run(topology.clone(), seed)).collect();
+
+        // Same-seed replay ⇒ byte-identical trace ⇒ empty blame report.
+        let replay = traced_run(topology.clone(), 0);
+        let d0 = diff(&logs[0], &replay);
+        assert!(
+            d0.is_empty(),
+            "same-seed replay must diff empty on {topology:?}: delta {}, {} blame entries",
+            d0.makespan_delta(),
+            d0.blame.len()
+        );
+        assert_eq!(d0.matched_spans, logs[0].spans.len());
+
+        // Cross-seed pairs: real change, attribution still exact.
+        for w in logs.windows(2) {
+            let d = diff(&w[0], &w[1]);
+            assert!(
+                d.attribution_residual() < 1e-9,
+                "bucket attribution drifted {} s from the delta on {topology:?}",
+                d.attribution_residual()
+            );
+            assert!(
+                d.track_attribution_residual() < 1e-9,
+                "track attribution drifted {} s from the delta on {topology:?}",
+                d.track_attribution_residual()
+            );
+            // Each partition also covers each side's own makespan.
+            let base: f64 = d.buckets.iter().map(|r| r.baseline_seconds).sum();
+            let cand: f64 = d.buckets.iter().map(|r| r.candidate_seconds).sum();
+            assert!((base - d.baseline_makespan).abs() < 1e-6);
+            assert!((cand - d.candidate_makespan).abs() < 1e-6);
+            assert!(!d.is_empty(), "different chaos seeds must not diff empty");
+        }
+    }
+}
+
+/// A clean run against the same run with one degraded cable: the diff
+/// blames the fabric bucket for ≥90% of the makespan delta, the blame
+/// list names circuits on the slowed cable, and the `link_rate`
+/// counter track is reported as changed.
+#[test]
+fn slow_link_regression_is_blamed_on_the_degraded_cable() {
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192, 8192, 8192)
+            .unwrap();
+    let run = |faults: &FaultPlan| -> TraceLog {
+        let s = ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), Topology::ring(8))
+            .with_trace(Tracer::recording());
+        s.simulate_elastic(&plan, faults).unwrap();
+        s.trace.snapshot()
+    };
+    let clean = run(&FaultPlan::none());
+
+    // Degrade the cable carrying the most circuit time in the clean
+    // trace (first in cable order on ties — deterministic).
+    let mut cable_busy: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+    for s in &clean.spans {
+        if let Track::Link(a, b) = s.track {
+            *cable_busy.entry((a.min(b), a.max(b))).or_insert(0.0) += s.end - s.start;
+        }
+    }
+    let mut slow_cable = (0, 0);
+    let mut busiest = -1.0;
+    for (&cable, &busy) in &cable_busy {
+        if busy > busiest {
+            slow_cable = cable;
+            busiest = busy;
+        }
+    }
+    assert!(busiest > 0.0, "the clean replay must carry fabric traffic");
+    let (a, b) = slow_cable;
+    let degraded = run(&FaultPlan {
+        faults: vec![Fault::SlowLink { a, b, factor: 16.0, seconds: 0.0 }],
+    });
+
+    let d = diff(&clean, &degraded);
+    assert!(d.makespan_delta() > 0.0, "a 16x slower cable must cost makespan");
+    assert!(d.attribution_residual() < 1e-9);
+    assert!(d.track_attribution_residual() < 1e-9);
+    let share = d.attribution_share("fabric");
+    assert!(
+        share >= 0.9,
+        "fabric must explain >=90% of the delta, got {:.1}% ({})",
+        share * 100.0,
+        d.render(8)
+    );
+    // The blame list names grown circuits on exactly the slowed cable.
+    let on_cable = |t: Track| matches!(t, Track::Link(x, y) if (x.min(y), x.max(y)) == (a, b));
+    assert!(
+        d.blame.iter().any(|e| on_cable(e.track) && e.kind == DeltaKind::Grew),
+        "no grown circuit on cable {a}<->{b} in:\n{}",
+        d.render(12)
+    );
+    assert_eq!(d.blame[0].category.bucket(), "fabric", "top blame must be fabric work");
+    assert!(
+        d.changed_counters.contains(&format!("link_rate {a}<->{b}")),
+        "the slow-link counter track must be reported: {:?}",
+        d.changed_counters
+    );
+    // Only fabric work changes duration under a slow link — compute
+    // and DMA spans shift their starts but keep their lengths, so
+    // every grown/shrunk blame entry must be fabric work.
+    for e in &d.blame {
+        if matches!(e.kind, DeltaKind::Grew | DeltaKind::Shrank) {
+            assert_eq!(e.category.bucket(), "fabric", "non-fabric blame: {}", e.name);
+        }
+    }
+}
+
+/// The structured host profiler, pointed at the placement search:
+/// top-1 self time must be the candidate-replay inner loop, with call
+/// counts matching the search's own evaluation counter and the full
+/// path present in the folded-stack export.
+#[test]
+fn host_profiler_names_the_placement_inner_loop() {
+    use systo3d::placement::{optimize, PlacementStrategy};
+    use systo3d::trace::profile;
+
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 4, q: 2, c: 2 }, 8192, 8192, 8192)
+            .unwrap();
+    let topology = Topology::ring(16);
+    let _ = profile::take_report(); // clean slate for this thread
+    profile::arm();
+    let rep = optimize(&plan, &topology, PlacementStrategy::default());
+    profile::disarm();
+    let report = profile::take_report();
+
+    assert!(rep.evaluations > 2, "the local search must price candidates");
+    let inner = "placement.optimize;placement.candidate";
+    let top = report.top_self(1);
+    assert_eq!(
+        top[0].path,
+        inner,
+        "self-time top-1 must be the candidate replay loop:\n{}",
+        report.render(6)
+    );
+    assert!(report.folded().contains("placement.optimize;placement.candidate "));
+
+    let cand = report.entries.iter().find(|e| e.path == inner).unwrap();
+    assert_eq!(cand.calls as usize, rep.evaluations, "one scope per priced candidate");
+    let opt = report.entries.iter().find(|e| e.path == "placement.optimize").unwrap();
+    assert_eq!(opt.calls, 1);
+    assert!(opt.total_s >= cand.total_s, "parent total covers the child");
+    assert!(opt.self_s <= opt.total_s - cand.total_s + 1e-9, "self excludes children");
+}
