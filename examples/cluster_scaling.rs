@@ -38,7 +38,8 @@ fn main() -> anyhow::Result<()> {
     let mut t1 = None;
     let mut n2_speedup = None;
     for n in 1..=8usize {
-        let sim = ClusterSim::new(Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?);
+        let sim = ClusterSim::builder(Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?)
+            .build();
         let (plan, r) = sim
             .plan_and_report(d2, d2, d2)
             .ok_or_else(|| anyhow::anyhow!("no plan for {d2} on {n} device(s)"))?;
@@ -115,10 +116,9 @@ fn main() -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
     let mut ring_vs_torus = Vec::new();
     for topo in [Topology::ring(8), Topology::torus_near_square(8)] {
-        let sim = ClusterSim::with_topology(
-            Fleet::homogeneous(8, &id).map_err(anyhow::Error::msg)?,
-            topo,
-        );
+        let sim = ClusterSim::builder(Fleet::homogeneous(8, &id).map_err(anyhow::Error::msg)?)
+            .topology(topo)
+            .build();
         let r = sim.simulate(&summa);
         println!(
             "{:>6}: makespan {:.4} s, link util {:.1}% mean / {:.1}% peak, \
@@ -141,7 +141,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- heterogeneous rack: work-stealing in action --------------------
     println!("\n=== mixed Table-I fleet (N=4, work-stealing) ===");
-    let sim = ClusterSim::new(Fleet::mixed_table1(4));
+    let sim = ClusterSim::builder(Fleet::mixed_table1(4)).build();
     let (_, report) = sim
         .plan_and_report(d2, d2, d2)
         .ok_or_else(|| anyhow::anyhow!("no plan for the mixed fleet"))?;

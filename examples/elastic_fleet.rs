@@ -49,11 +49,10 @@ fn main() -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
 
     // 16 actives on a 4x4 torus, one hot spare spliced in.
-    let spared = ClusterSim::with_topology_and_spares(
-        Fleet::homogeneous(n + 1, &id).map_err(anyhow::Error::msg)?,
-        Topology::torus2d(4, 4),
-        1,
-    );
+    let spared = ClusterSim::builder(Fleet::homogeneous(n + 1, &id).map_err(anyhow::Error::msg)?)
+        .topology(Topology::torus2d(4, 4))
+        .spares(1)
+        .build();
     let first = plan
         .shards
         .iter()
@@ -66,11 +65,10 @@ fn main() -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
 
     // The PR-2 baseline: same torus, same death, no spare.
-    let fixed = ClusterSim::with_topology(
-        Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?,
-        Topology::torus2d(4, 4),
-    )
-    .with_placement(PlacementStrategy::Identity);
+    let fixed = ClusterSim::builder(Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?)
+        .topology(Topology::torus2d(4, 4))
+        .placement(PlacementStrategy::Identity)
+        .build();
     let requeue = fixed
         .simulate_with_failures(&plan, &[Some(t_die)])
         .map_err(anyhow::Error::msg)?;
@@ -119,10 +117,12 @@ fn main() -> anyhow::Result<()> {
     // 2.0 watermark — the controller attaches its growth budget.
     let load = PartitionPlan::new(PartitionStrategy::Row1D { devices: 32 }, d2, d2, d2)
         .map_err(anyhow::Error::msg)?;
-    let small = ClusterSim::new(Fleet::homogeneous(4, &id).map_err(anyhow::Error::msg)?)
-        .with_watermark(Some(2.0));
+    let small = ClusterSim::builder(Fleet::homogeneous(4, &id).map_err(anyhow::Error::msg)?)
+        .watermark(Some(2.0))
+        .build();
     let grown = small.simulate_elastic(&load, &FaultPlan::none()).map_err(anyhow::Error::msg)?;
-    let fixed4 = ClusterSim::new(Fleet::homogeneous(4, &id).map_err(anyhow::Error::msg)?)
+    let fixed4 = ClusterSim::builder(Fleet::homogeneous(4, &id).map_err(anyhow::Error::msg)?)
+        .build()
         .simulate(&load);
     let grow_gain = fixed4.makespan_seconds / grown.schedule.makespan_seconds;
     println!(

@@ -53,10 +53,9 @@ fn main() -> anyhow::Result<()> {
             let bisect = topology
                 .bisection_bytes_per_s(&systo3d::cluster::Link::qsfp28_100g())
                 / 1e9;
-            let sim = ClusterSim::with_topology(
-                Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?,
-                topology,
-            );
+            let sim = ClusterSim::builder(Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?)
+                .topology(topology)
+                .build();
             let (_, r) = sim
                 .plan_and_report(d2, d2, d2)
                 .ok_or_else(|| anyhow::anyhow!("no plan for {d2} on {n} card(s)"))?;
@@ -108,9 +107,15 @@ fn main() -> anyhow::Result<()> {
         )
         .map_err(anyhow::Error::msg)?;
         let fleet = Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?;
-        let ring = ClusterSim::with_topology(fleet.clone(), Topology::ring(n)).simulate(&plan);
+        let ring = ClusterSim::builder(fleet.clone())
+            .topology(Topology::ring(n))
+            .build()
+            .simulate(&plan);
         let torus =
-            ClusterSim::with_topology(fleet, Topology::torus_near_square(n)).simulate(&plan);
+            ClusterSim::builder(fleet)
+                .topology(Topology::torus_near_square(n))
+                .build()
+                .simulate(&plan);
         println!(
             "N={n:>2} {}: ring {:.4} s (hot link {:.0}%), torus {:.4} s (hot link {:.0}%), \
              torus wins by {:.1}%",
@@ -147,10 +152,9 @@ fn main() -> anyhow::Result<()> {
                 8192,
             )
             .map_err(anyhow::Error::msg)?;
-            let sim = ClusterSim::with_topology(
-                Fleet::homogeneous(8, &id).map_err(anyhow::Error::msg)?,
-                topology.clone(),
-            );
+            let sim = ClusterSim::builder(Fleet::homogeneous(8, &id).map_err(anyhow::Error::msg)?)
+                .topology(topology.clone())
+                .build();
             let rep = sim.overlap_report(&plan, Some(ReduceAlgo::Direct));
             println!(
                 "{:>6} c={c}: overlapped {:.4} s vs barrier {:.4} s -> {:.1}% saved \

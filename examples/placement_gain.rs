@@ -57,8 +57,10 @@ fn main() -> anyhow::Result<()> {
 
             // End-to-end makespans: same fleet, identity vs placed plan.
             let fleet = Fleet::homogeneous(n, &id).map_err(anyhow::Error::msg)?;
-            let sim = ClusterSim::with_topology(fleet, topology)
-                .with_placement(PlacementStrategy::Identity);
+            let sim = ClusterSim::builder(fleet)
+                .topology(topology)
+                .placement(PlacementStrategy::Identity)
+                .build();
             let identity_span = sim.simulate(&plan).makespan_seconds;
             let placed_plan = rep.placement.apply_to(&plan);
             let placed_span = sim.simulate(&placed_plan).makespan_seconds;

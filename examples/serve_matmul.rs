@@ -57,7 +57,9 @@ fn main() -> anyhow::Result<()> {
         let c = e.chained.then(|| Matrix::random(e.n, e.n, id * 3 + 3));
         // Keep copies for verification.
         let (va, vb, vc) = (a.clone(), b.clone(), c.clone());
-        let rx = svc.submit(GemmRequest { id, a, b, chain: c, error_budget: None });
+        let mut req = GemmRequest::new(a, b).id(id);
+        req.chain = c;
+        let rx = svc.submit(req);
         inflight.push((id, rx, va, vb, vc));
     }
 

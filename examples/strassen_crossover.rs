@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     let d = 21504u64;
     let plan = strassen::plan(design, d, d, d, &config);
     let dag = TaskDag::build(d, d, d, plan.depth);
-    let sim = ClusterSim::new(Fleet::homogeneous(7, &id).map_err(anyhow::Error::msg)?);
+    let sim = ClusterSim::builder(Fleet::homogeneous(7, &id).map_err(anyhow::Error::msg)?).build();
     let (report, total) = dag
         .fleet_seconds(&sim)
         .ok_or_else(|| anyhow::anyhow!("no leaf plan for d={d}"))?;

@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let plan = PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 8 }, d2, d2, d2)
         .map_err(anyhow::Error::msg)?;
     let fleet = Fleet::homogeneous(8, &id).map_err(anyhow::Error::msg)?;
-    let sim = ClusterSim::with_topology(fleet, Topology::ring(8));
+    let sim = ClusterSim::builder(fleet).topology(Topology::ring(8)).build();
 
     let over = Tracer::recording();
     let barr = Tracer::recording();

@@ -45,8 +45,10 @@ fn main() -> anyhow::Result<()> {
         .map_err(anyhow::Error::msg)?;
     let run = |faults: &FaultPlan| -> anyhow::Result<TraceLog> {
         let fleet = Fleet::homogeneous(8, "G").map_err(anyhow::Error::msg)?;
-        let sim = ClusterSim::with_topology(fleet, Topology::ring(8))
-            .with_trace(Tracer::recording());
+        let sim = ClusterSim::builder(fleet)
+            .topology(Topology::ring(8))
+            .trace(Tracer::recording())
+            .build();
         sim.simulate_elastic(&plan, faults).map_err(anyhow::Error::msg)?;
         Ok(sim.trace.snapshot())
     };

@@ -21,7 +21,7 @@ fn main() {
 
     common::section("cluster: planner + event simulation host cost");
     for n in [1usize, 2, 4, 8] {
-        let sim = ClusterSim::new(Fleet::homogeneous(n, "G").expect("design G"));
+        let sim = ClusterSim::builder(Fleet::homogeneous(n, "G").expect("design G")).build();
         let s = b.run(&format!("plan_and_report n={n} d2={d2}"), || {
             sim.plan_and_report(d2, d2, d2).expect("plan").1.makespan_seconds
         });
@@ -31,7 +31,7 @@ fn main() {
     common::section("cluster: simulated TFLOPS and scaling efficiency");
     let mut t1 = None;
     for n in [1usize, 2, 4, 8] {
-        let sim = ClusterSim::new(Fleet::homogeneous(n, "G").expect("design G"));
+        let sim = ClusterSim::builder(Fleet::homogeneous(n, "G").expect("design G")).build();
         let (_, r) = sim.plan_and_report(d2, d2, d2).expect("plan");
         let t1_s = *t1.get_or_insert(r.makespan_seconds);
         println!(

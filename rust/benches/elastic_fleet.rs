@@ -25,11 +25,10 @@ fn main() {
     common::section("elastic: drain-to-spare on a 4x4 torus + 1 spare (n=16)");
     let plan =
         PartitionPlan::new(PartitionStrategy::auto_summa25d(16), d2, d2, d2).expect("plan");
-    let sim = ClusterSim::with_topology_and_spares(
-        Fleet::homogeneous(17, "G").expect("design G"),
-        Topology::torus2d(4, 4),
-        1,
-    );
+    let sim = ClusterSim::builder(Fleet::homogeneous(17, "G").expect("design G"))
+        .topology(Topology::torus2d(4, 4))
+        .spares(1)
+        .build();
     let first = plan.shards.iter().find(|s| s.device == 0).expect("shard on card 0");
     let t_die =
         sim.host.seconds_for_bytes(first.input_bytes()) + 0.5 * sim.shard_seconds(0, first);
@@ -53,15 +52,16 @@ fn main() {
     common::section("elastic: watermark growth under backlog (4 cards, watermark 2.0)");
     let load = PartitionPlan::new(PartitionStrategy::Row1D { devices: 32 }, d2, d2, d2)
         .expect("plan");
-    let small = ClusterSim::new(Fleet::homogeneous(4, "G").expect("design G"))
-        .with_watermark(Some(2.0));
+    let small = ClusterSim::builder(Fleet::homogeneous(4, "G").expect("design G"))
+        .watermark(Some(2.0))
+        .build();
     let s = b.run("simulate_elastic grow n=4", || {
         small.simulate_elastic(&load, &FaultPlan::none()).expect("healthy").grown_cards
     });
     common::report(&s);
     let grown = small.simulate_elastic(&load, &FaultPlan::none()).expect("healthy");
     let fixed =
-        ClusterSim::new(Fleet::homogeneous(4, "G").expect("design G")).simulate(&load);
+        ClusterSim::builder(Fleet::homogeneous(4, "G").expect("design G")).build().simulate(&load);
     println!(
         "  grew {} card(s): post-grow makespan {:.4} s vs fixed {:.4} s",
         grown.grown_cards,

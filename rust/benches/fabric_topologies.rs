@@ -50,7 +50,9 @@ fn main() {
         Topology::fat_tree(16),
     ] {
         let name = topo.name();
-        let sim = ClusterSim::with_topology(Fleet::homogeneous(16, "G").expect("design G"), topo);
+        let sim = ClusterSim::builder(Fleet::homogeneous(16, "G").expect("design G"))
+            .topology(topo)
+            .build();
         let s = b.run(&format!("simulate {} {} n=16", plan.strategy.name(), name), || {
             sim.simulate(&plan).makespan_seconds
         });
@@ -76,7 +78,9 @@ fn main() {
     )
     .expect("plan");
     let sim =
-        ClusterSim::with_topology(Fleet::homogeneous(8, "G").expect("design G"), Topology::ring(8));
+        ClusterSim::builder(Fleet::homogeneous(8, "G").expect("design G"))
+            .topology(Topology::ring(8))
+            .build();
     let s = b.run("overlap_report ring n=8", || {
         sim.overlap_report(&plan, Some(ReduceAlgo::Direct)).saving_fraction()
     });

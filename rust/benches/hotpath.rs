@@ -104,7 +104,7 @@ fn main() {
     let s = b.run("submit_sync 64³", || {
         let a = Matrix::random(64, 64, 9);
         let b = Matrix::random(64, 64, 10);
-        svc.submit_sync(GemmRequest { id: 0, a, b, chain: None, error_budget: None })
+        svc.submit_sync(GemmRequest::new(a, b).id(0))
     });
     common::report(&s);
     let snap = svc.metrics.snapshot();

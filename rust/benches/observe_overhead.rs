@@ -42,12 +42,11 @@ fn main() {
         max_growth: 2,
     };
     let build = |slo: Option<SloPolicy>| {
-        ClusterSim::with_topology(
-            Fleet::homogeneous(16, "G").expect("design G"),
-            Topology::torus2d(4, 4),
-        )
-        .with_slo(slo)
-        .with_trace(Tracer::off())
+        ClusterSim::builder(Fleet::homogeneous(16, "G").expect("design G"))
+            .topology(Topology::torus2d(4, 4))
+            .slo(slo)
+            .trace(Tracer::off())
+            .build()
     };
     let unsampled = build(None);
     let sampled = build(Some(quiet));

@@ -51,8 +51,10 @@ fn main() {
     let topo = Topology::ring(16);
     let rep = optimize(&plan, &topo, PlacementStrategy::default());
     let placed = rep.placement.apply_to(&plan);
-    let sim = ClusterSim::with_topology(Fleet::homogeneous(16, "G").expect("design G"), topo)
-        .with_placement(PlacementStrategy::Identity);
+    let sim = ClusterSim::builder(Fleet::homogeneous(16, "G").expect("design G"))
+        .topology(topo)
+        .placement(PlacementStrategy::Identity)
+        .build();
     let s = b.run("simulate placed 2.5d ring n=16", || {
         sim.simulate(&placed).makespan_seconds
     });

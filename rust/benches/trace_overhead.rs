@@ -30,14 +30,14 @@ fn main() {
     let plan =
         PartitionPlan::new(PartitionStrategy::auto_summa25d(16), d2, d2, d2).expect("plan");
     let build = || {
-        ClusterSim::with_topology_and_spares(
-            Fleet::homogeneous(17, "G").expect("design G"),
-            Topology::torus2d(4, 4),
-            1,
-        )
+        ClusterSim::builder(Fleet::homogeneous(17, "G").expect("design G"))
+            .topology(Topology::torus2d(4, 4))
+            .spares(1)
+            .build()
     };
     let default_sim = build();
-    let noop_sim = build().with_trace(Tracer::off());
+    let mut noop_sim = build();
+    noop_sim.trace = Tracer::off();
     let first = plan.shards.iter().find(|s| s.device == 0).expect("shard on card 0");
     let t_die = default_sim.host.seconds_for_bytes(first.input_bytes())
         + 0.5 * default_sim.shard_seconds(0, first);
@@ -85,7 +85,8 @@ fn main() {
     println!("  PASS: no-op sink overhead {:.2}% < 2%", (ratio - 1.0) * 100.0);
 
     common::section("trace: recording sink, for scale (not gated)");
-    let rec_sim = build().with_trace(Tracer::recording());
+    let mut rec_sim = build();
+    rec_sim.trace = Tracer::recording();
     let t_rec = time_one(&rec_sim);
     let spans = rec_sim.trace.snapshot().spans.len();
     let t_off = time_one(&default_sim);

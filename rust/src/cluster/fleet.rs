@@ -8,8 +8,8 @@
 //! is timed as its zero-padded block, like the HLS kernel would run it).
 //!
 //! The fleet's card↔card wiring is an explicit
-//! [`crate::fabric::Topology`]: [`ClusterSim::new`] defaults to
-//! [`Topology::auto`], [`ClusterSim::with_topology`] pins a specific
+//! [`crate::fabric::Topology`]: [`ClusterSim::builder`] defaults to
+//! [`Topology::auto`], `ClusterSimBuilder::topology` pins a specific
 //! fabric, and the resulting [`ClusterReport`] carries link-utilization
 //! and reduction-overlap gauges alongside the compute numbers.
 
@@ -313,94 +313,112 @@ pub struct ClusterSim {
     pub trace: Tracer,
 }
 
-impl ClusterSim {
-    /// Fleet on the default fabric ([`Topology::auto`]): a full mesh
-    /// while the 4-port budget lasts, a near-square torus beyond.
-    pub fn new(fleet: Fleet) -> Self {
-        let topology = Topology::auto(fleet.len().max(1));
-        Self::with_topology(fleet, topology)
+/// Builder for [`ClusterSim`] — the one construction path
+/// (`ClusterSim::builder(fleet).topology(..).spares(..).build()`
+/// replaced the old `new`/`with_topology`/`with_spares`/
+/// `with_topology_and_spares` constructor family and their chained
+/// setters).
+#[derive(Clone, Debug)]
+pub struct ClusterSimBuilder {
+    fleet: Fleet,
+    topology: Option<Topology>,
+    hot_spares: usize,
+    placement: PlacementStrategy,
+    scale_watermark: Option<f64>,
+    slo: Option<SloPolicy>,
+    trace: Tracer,
+}
+
+impl ClusterSimBuilder {
+    /// Fabric of the **active** cards (the fleet minus spares); each
+    /// spare is spliced in on top with [`Topology::attach_card`].
+    /// Default: [`Topology::auto`] over the active cards.
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = Some(topology);
+        self
     }
 
-    /// Fleet on an explicit fabric; the topology must wire exactly the
-    /// fleet's cards.
-    pub fn with_topology(fleet: Fleet, topology: Topology) -> Self {
-        assert_eq!(
-            topology.cards,
-            fleet.len().max(1),
-            "topology must wire exactly the fleet's cards"
-        );
-        Self {
-            fleet,
-            host: Link::pcie_gen3_x8(),
-            topology,
-            placement: PlacementStrategy::default(),
-            hot_spares: 0,
-            scale_watermark: None,
-            slo: None,
-            trace: Tracer::off(),
-        }
+    /// Trailing fleet cards held as hot spares: wired into the fabric
+    /// but excluded from placement.
+    pub fn spares(mut self, hot_spares: usize) -> Self {
+        self.hot_spares = hot_spares;
+        self
     }
 
-    /// Fleet whose trailing `hot_spares` cards are spares: the default
-    /// fabric is built over the active cards and the spares are spliced
-    /// in with [`Topology::attach_card`], so they are wired (the 4-port
-    /// budget holds) but excluded from placement.
-    pub fn with_spares(fleet: Fleet, hot_spares: usize) -> Self {
-        assert!(hot_spares < fleet.len().max(1), "at least one card must stay active");
-        let active = fleet.len().max(1) - hot_spares;
-        Self::with_topology_and_spares(fleet, Topology::auto(active), hot_spares)
-    }
-
-    /// As [`Self::with_spares`] on an explicit fabric: `topology` wires
-    /// the active cards and each spare is attached to it.
-    pub fn with_topology_and_spares(
-        fleet: Fleet,
-        mut topology: Topology,
-        hot_spares: usize,
-    ) -> Self {
-        assert!(hot_spares < fleet.len().max(1), "at least one card must stay active");
-        assert_eq!(
-            topology.cards + hot_spares,
-            fleet.len().max(1),
-            "topology must wire the fleet's active cards"
-        );
-        for _ in 0..hot_spares {
-            topology.attach_card();
-        }
-        let mut sim = Self::with_topology(fleet, topology);
-        sim.hot_spares = hot_spares;
-        sim
-    }
-
-    /// Same sim with a different placement strategy (builder style).
-    pub fn with_placement(mut self, placement: PlacementStrategy) -> Self {
+    /// Device→card placement strategy (default: seeded local search).
+    pub fn placement(mut self, placement: PlacementStrategy) -> Self {
         self.placement = placement;
         self
     }
 
-    /// Same sim with a growth watermark (builder style): pending
-    /// shards per live card above it grow the fabric during
-    /// [`Self::simulate_elastic`].
-    pub fn with_watermark(mut self, scale_watermark: Option<f64>) -> Self {
-        self.scale_watermark = scale_watermark;
+    /// Queue-depth watermark for elastic growth (pending shards per
+    /// live card above it grow the fabric during
+    /// [`ClusterSim::simulate_elastic`]).
+    pub fn watermark(mut self, scale_watermark: impl Into<Option<f64>>) -> Self {
+        self.scale_watermark = scale_watermark.into();
         self
     }
 
-    /// Same sim with a latency SLO (builder style): sustained burn
-    /// grows the fleet during [`Self::simulate_elastic`] even when
-    /// queue depth sits below the watermark.
-    pub fn with_slo(mut self, slo: Option<SloPolicy>) -> Self {
-        self.slo = slo;
+    /// Latency SLO for burn-rate-driven growth: sustained burn grows
+    /// the fleet even when queue depth sits below the watermark.
+    pub fn slo(mut self, slo: impl Into<Option<SloPolicy>>) -> Self {
+        self.slo = slo.into();
         self
     }
 
-    /// Same sim recording every simulated run into `tracer` (builder
-    /// style): per-card DMA / compute / reduction / writeback spans,
-    /// per-link circuit holds, and elastic control events, all in
-    /// deterministic simulated time. See [`crate::trace`].
-    pub fn with_trace(mut self, tracer: Tracer) -> Self {
+    /// Record every simulated run into `tracer`: per-card DMA /
+    /// compute / reduction / writeback spans, per-link circuit holds,
+    /// and elastic control events, all in deterministic simulated
+    /// time. See [`crate::trace`].
+    pub fn trace(mut self, tracer: Tracer) -> Self {
         self.trace = tracer;
         self
+    }
+
+    /// Assemble the sim. Panics when the spare count leaves no active
+    /// card, or when an explicit topology does not wire exactly the
+    /// fleet's active cards.
+    pub fn build(self) -> ClusterSim {
+        let cards = self.fleet.len().max(1);
+        assert!(self.hot_spares < cards, "at least one card must stay active");
+        let active = cards - self.hot_spares;
+        let mut topology = self.topology.unwrap_or_else(|| Topology::auto(active));
+        assert_eq!(
+            topology.cards, active,
+            "topology must wire exactly the fleet's active cards"
+        );
+        for _ in 0..self.hot_spares {
+            topology.attach_card();
+        }
+        ClusterSim {
+            fleet: self.fleet,
+            host: Link::pcie_gen3_x8(),
+            topology,
+            placement: self.placement,
+            hot_spares: self.hot_spares,
+            scale_watermark: self.scale_watermark,
+            slo: self.slo,
+            trace: self.trace,
+        }
+    }
+}
+
+impl ClusterSim {
+    /// Start building a sim over `fleet`. With no other calls,
+    /// `build()` gives the default fabric ([`Topology::auto`]: a full
+    /// mesh while the 4-port budget lasts, a near-square torus
+    /// beyond), no spares, the seeded-local-search placement, no
+    /// growth, and the no-op trace sink.
+    pub fn builder(fleet: Fleet) -> ClusterSimBuilder {
+        ClusterSimBuilder {
+            fleet,
+            topology: None,
+            hot_spares: 0,
+            placement: PlacementStrategy::default(),
+            scale_watermark: None,
+            slo: None,
+            trace: Tracer::off(),
+        }
     }
 
     /// Cards plans carve over (the fleet minus its hot spares).
@@ -777,7 +795,7 @@ mod tests {
     fn single_device_matches_offchip_sim_magnitude() {
         // One card, one shard: makespan = transfer + compute + writeback,
         // so effective GFLOPS sits below but near the single-card sim.
-        let sim = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+        let sim = ClusterSim::builder(Fleet::homogeneous(1, "G").unwrap()).build();
         let d = 8192;
         let plan = PartitionPlan::new(PartitionStrategy::Row1D { devices: 1 }, d, d, d).unwrap();
         let report = sim.simulate(&plan);
@@ -791,19 +809,19 @@ mod tests {
     fn two_cards_scale_past_1_8x() {
         let d = 21504;
         let t1 = {
-            let sim = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+            let sim = ClusterSim::builder(Fleet::homogeneous(1, "G").unwrap()).build();
             let plan =
                 PartitionPlan::new(PartitionStrategy::Row1D { devices: 1 }, d, d, d).unwrap();
             sim.simulate(&plan).makespan_seconds
         };
-        let sim = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+        let sim = ClusterSim::builder(Fleet::homogeneous(2, "G").unwrap()).build();
         let t2 = sim.plan_and_report(d, d, d).unwrap().1.makespan_seconds;
         assert!(t1 / t2 > 1.8, "2-card speedup {:.2}", t1 / t2);
     }
 
     #[test]
     fn utilization_and_critical_path_reported() {
-        let sim = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+        let sim = ClusterSim::builder(Fleet::homogeneous(4, "G").unwrap()).build();
         let (_, r) = sim.plan_and_report(21504, 21504, 21504).unwrap();
         assert_eq!(r.per_device.len(), 4);
         assert!(r.critical_device < 4);
@@ -819,19 +837,19 @@ mod tests {
     fn candidate_plans_dedupe_degenerate_strategies() {
         // 2 devices: Row1D{2}, Grid2D{2,1} and Summa{2,1,1} all carve
         // the same two row bands -> one candidate survives.
-        let sim2 = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+        let sim2 = ClusterSim::builder(Fleet::homogeneous(2, "G").unwrap()).build();
         assert_eq!(sim2.candidate_plans(4096, 4096, 4096).len(), 1);
         // 4 devices: Summa{2,2,1} duplicates Grid2D{2,2} -> two.
-        let sim4 = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+        let sim4 = ClusterSim::builder(Fleet::homogeneous(4, "G").unwrap()).build();
         assert_eq!(sim4.candidate_plans(4096, 4096, 4096).len(), 2);
         // 8 devices: all three families are genuinely distinct.
-        let sim8 = ClusterSim::new(Fleet::homogeneous(8, "G").unwrap());
+        let sim8 = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap()).build();
         assert_eq!(sim8.candidate_plans(4096, 4096, 4096).len(), 3);
     }
 
     #[test]
     fn plan_and_report_returns_winning_report() {
-        let sim = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+        let sim = ClusterSim::builder(Fleet::homogeneous(4, "G").unwrap()).build();
         let (plan, report) = sim.plan_and_report(21504, 21504, 21504).unwrap();
         let direct = sim.simulate(&plan);
         assert_eq!(report.makespan_seconds, direct.makespan_seconds);
@@ -849,7 +867,7 @@ mod tests {
             fmax_mhz: 400.0,
             controller_efficiency: 0.97,
         };
-        let sim = ClusterSim::new(Fleet::uniform(3, "mini", design));
+        let sim = ClusterSim::builder(Fleet::uniform(3, "mini", design)).build();
         let a = Matrix::random(19, 23, 1);
         let b = Matrix::random(23, 17, 2);
         let plan = sim.auto_plan(19, 23, 17).unwrap();
@@ -865,11 +883,12 @@ mod tests {
         let d = 21504u64;
         let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
         let ring =
-            ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), Topology::ring(8));
-        let torus = ClusterSim::with_topology(
-            Fleet::homogeneous(8, "G").unwrap(),
-            Topology::torus2d(4, 2),
-        );
+            ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap())
+                .topology(Topology::ring(8))
+                .build();
+        let torus = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap())
+            .topology(Topology::torus2d(4, 2))
+            .build();
         let rr = ring.simulate(&plan);
         let rt = torus.simulate(&plan);
         assert_eq!(rr.topology, "ring");
@@ -887,7 +906,9 @@ mod tests {
         let d = 8192u64;
         let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(8), d, d, d).unwrap();
         let sim =
-            ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), Topology::ring(8));
+            ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap())
+                .topology(Topology::ring(8))
+                .build();
         // place_plan optimizes reduction-heavy plans strictly on a ring.
         let (placed, rep) = sim.place_plan(&plan);
         let rep = rep.expect("2.5d plan has reduction traffic");
@@ -906,7 +927,8 @@ mod tests {
         assert!(r.placement_gain() > 1.0);
         assert!(r.render().contains("placement local-search"));
         // Identity strategy and reduction-free plans skip the search.
-        let id_sim = sim.clone().with_placement(PlacementStrategy::Identity);
+        let mut id_sim = sim.clone();
+        id_sim.placement = PlacementStrategy::Identity;
         assert!(id_sim.place_plan(&plan).1.is_none());
         let grid = PartitionPlan::new(PartitionStrategy::auto_grid2d(8), d, d, d).unwrap();
         assert!(sim.place_plan(&grid).1.is_none());
@@ -918,10 +940,9 @@ mod tests {
 
     #[test]
     fn overlap_report_from_the_sim() {
-        let sim = ClusterSim::with_topology(
-            Fleet::homogeneous(8, "G").unwrap(),
-            Topology::ring(8),
-        );
+        let sim = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap())
+            .topology(Topology::ring(8))
+            .build();
         let plan = PartitionPlan::new(
             PartitionStrategy::Summa25D { p: 2, q: 2, c: 8 },
             8192,
@@ -939,7 +960,7 @@ mod tests {
     fn spared_sim_excludes_spares_until_a_death() {
         use crate::cluster::elastic::{FaultPlan, FleetEvent};
         // 4 active design-G cards + 1 hot spare spliced into the fabric.
-        let sim = ClusterSim::with_spares(Fleet::homogeneous(5, "G").unwrap(), 1);
+        let sim = ClusterSim::builder(Fleet::homogeneous(5, "G").unwrap()).spares(1).build();
         assert_eq!(sim.active_devices(), 4);
         assert_eq!(sim.topology.cards, 5);
         // Plans carve over the active cards only; the placement search
@@ -982,7 +1003,7 @@ mod tests {
 
     #[test]
     fn shard_padding_times_irregular_extents() {
-        let sim = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+        let sim = ClusterSim::builder(Fleet::homogeneous(1, "G").unwrap()).build();
         let shard = Shard { device: 0, row0: 0, rows: 700, col0: 0, cols: 900, k0: 0, ks: 333 };
         // Pads to (1024, 1024, 334) for design G's (512, 512, 2) grid.
         let t = sim.shard_seconds(0, &shard);

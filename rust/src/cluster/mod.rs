@@ -59,7 +59,7 @@ pub use elastic::{
     FaultPlan, FleetController, FleetEvent,
 };
 pub use crate::observe::slo::SloPolicy;
-pub use fleet::{ClusterDevice, ClusterReport, ClusterSim, DeviceReport, Fleet};
+pub use fleet::{ClusterDevice, ClusterReport, ClusterSim, ClusterSimBuilder, DeviceReport, Fleet};
 pub use interconnect::{Interconnect, Link};
 pub use partition::{PartitionPlan, PartitionStrategy, Shard};
 pub use scheduler::{

@@ -1,0 +1,633 @@
+//! Admission control for the serving front end: bounded ingress with
+//! load-shedding, priority lanes, and per-tenant weighted fair share.
+//!
+//! The paper's designs peak above 3 TFLOPS, but a serving stack at
+//! production scale is decided earlier in the pipe: *which* requests
+//! reach the accelerator, in *what order*, and which are turned away
+//! while the answer can still be "try elsewhere" instead of a blown
+//! deadline. This module is that front door, shared by the threaded
+//! [`crate::coordinator::GemmService`] (bounded ingress + shed
+//! responses) and the open-loop virtual-time harness in
+//! [`crate::coordinator::serve`] (the full pipeline):
+//!
+//! * **Bounded ingress** — [`IngressQueue`] holds at most
+//!   `queue_capacity` jobs; beyond that, arrivals are shed with
+//!   [`ShedReason::QueueFull`] unless a strictly lower-priority victim
+//!   can be evicted in their place (the priority lanes' point).
+//! * **Doomed shedding** — with [`AdmissionPolicy::shed_doomed`], a
+//!   request whose *predicted* queue wait already exceeds its deadline
+//!   slack is shed at the door ([`ShedReason::Doomed`]): serving it
+//!   late would burn fleet time for zero goodput and push every later
+//!   request past its own deadline. The prediction is lane-aware —
+//!   only backlog in the request's own lane and above counts, because
+//!   lower-priority work behind it cannot delay it. This is the lever
+//!   that lets the deadline-aware pipeline beat FIFO on goodput under
+//!   overload.
+//! * **Weighted fair share** — classic deficit round-robin over
+//!   per-tenant queues: each visit funds a tenant's deficit counter in
+//!   proportion to its weight, and a tenant dispatches only while its
+//!   deficit covers the work. Backlogged tenants converge to service
+//!   shares proportional to their weights regardless of arrival order.
+//! * **Priority lanes** — [`Priority::High`] lanes drain strictly
+//!   before [`Priority::Normal`] before [`Priority::Low`]; DRR applies
+//!   within a lane.
+
+use std::collections::VecDeque;
+
+/// Number of priority lanes ([`Priority`] variants).
+pub const LANES: usize = 3;
+
+/// Request priority: a strict lane ordering (High drains first), not a
+/// weight. Within a lane, tenants share via deficit round-robin.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Lane index (0 drains first).
+    pub fn lane(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn from_lane(lane: usize) -> Self {
+        match lane {
+            0 => Priority::High,
+            1 => Priority::Normal,
+            _ => Priority::Low,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+/// Why a request was turned away at admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShedReason {
+    /// Ingress queue at capacity with no lower-priority victim.
+    QueueFull,
+    /// Predicted queue wait already exceeds the request's deadline
+    /// slack — serving it would deliver zero goodput.
+    Doomed,
+    /// Evicted from the queue by an arriving higher-priority request.
+    Evicted,
+}
+
+impl ShedReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::Doomed => "doomed",
+            ShedReason::Evicted => "evicted",
+        }
+    }
+}
+
+/// Admission knobs, grouped so [`crate::coordinator::ServiceConfig`]
+/// carries one sub-struct instead of a growing pile of loose fields.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionPolicy {
+    /// Bounded ingress capacity: jobs queued (or in flight on the
+    /// engine) beyond this are shed, never silently enqueued.
+    pub queue_capacity: usize,
+    /// Shed requests whose predicted wait already exceeds their
+    /// deadline slack (off: FIFO semantics — everything admitted runs,
+    /// however late).
+    pub shed_doomed: bool,
+    /// Deadline applied to requests that carry none (seconds from
+    /// arrival); None leaves them deadline-free.
+    pub default_deadline_s: Option<f64>,
+    /// Latency target handed to the batcher: a forming batch closes
+    /// when the oldest member's slack runs out instead of waiting out
+    /// the fixed window (see [`crate::coordinator::Batcher::close_by`]).
+    pub latency_target_s: Option<f64>,
+    /// Per-tenant DRR weights; tenants not listed here weigh 1.
+    pub tenant_weights: Vec<(String, u32)>,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 4096,
+            shed_doomed: false,
+            default_deadline_s: None,
+            latency_target_s: None,
+            tenant_weights: Vec::new(),
+        }
+    }
+}
+
+impl AdmissionPolicy {
+    /// DRR weight for a tenant (1 when unlisted).
+    pub fn weight_for(&self, tenant: &str) -> u32 {
+        self.tenant_weights
+            .iter()
+            .find(|(name, _)| name == tenant)
+            .map_or(1, |(_, w)| (*w).max(1))
+    }
+
+    /// The deadline-aware profile the overload demos run: doomed
+    /// shedding on, batches close against the target.
+    pub fn deadline_aware(latency_target_s: f64) -> Self {
+        Self {
+            shed_doomed: true,
+            latency_target_s: Some(latency_target_s),
+            ..Self::default()
+        }
+    }
+}
+
+/// Per-request admission verdict, attached to every
+/// [`crate::coordinator::GemmResponse`] and to the harness records.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionReport {
+    pub tenant: String,
+    /// Queue class the request rode (its priority lane).
+    pub lane: Priority,
+    /// None = admitted; Some = turned away and why.
+    pub shed: Option<ShedReason>,
+    /// Ingress depth observed at the admission decision.
+    pub queue_depth: usize,
+    /// `deadline − (queue + host)` seconds at completion — negative
+    /// means the deadline was missed; None when the request carried no
+    /// deadline (or was shed before execution).
+    pub deadline_slack_s: Option<f64>,
+}
+
+impl AdmissionReport {
+    pub fn admitted(tenant: impl Into<String>, lane: Priority, queue_depth: usize) -> Self {
+        Self { tenant: tenant.into(), lane, shed: None, queue_depth, deadline_slack_s: None }
+    }
+
+    pub fn rejected(
+        tenant: impl Into<String>,
+        lane: Priority,
+        reason: ShedReason,
+        queue_depth: usize,
+    ) -> Self {
+        Self {
+            tenant: tenant.into(),
+            lane,
+            shed: Some(reason),
+            queue_depth,
+            deadline_slack_s: None,
+        }
+    }
+
+    pub fn is_admitted(&self) -> bool {
+        self.shed.is_none()
+    }
+}
+
+/// One queued job in the virtual-time pipeline (the open-loop harness
+/// prices work in estimated service seconds; the threaded service uses
+/// wall clocks instead).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueuedJob {
+    pub id: u64,
+    /// Index into the tenant table the queue was built with.
+    pub tenant: usize,
+    /// Priority lane index (see [`Priority::lane`]).
+    pub lane: usize,
+    /// Arrival instant, seconds.
+    pub arrival_s: f64,
+    /// Absolute deadline instant; None = no deadline.
+    pub deadline_s: Option<f64>,
+    /// Estimated cost in seconds of one card's time — compute plus
+    /// whatever share of dispatch overhead the caller amortizes in.
+    pub service_s: f64,
+    /// FLOPs the job carries (goodput accounting).
+    pub flops: u64,
+    /// Shape key for batching: same-shape neighbours share a dispatch.
+    pub shape: (usize, usize, usize),
+}
+
+/// Outcome of offering a job to the bounded queue.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Offer {
+    /// Job queued; a lower-priority victim may have been evicted to
+    /// make room (the caller records it as shed).
+    Admitted { evicted: Option<QueuedJob> },
+    Shed(ShedReason),
+}
+
+/// Bounded multi-tenant ingress: `LANES` priority lanes × one FIFO per
+/// tenant, drained by deficit round-robin within the highest non-empty
+/// lane.
+#[derive(Clone, Debug)]
+pub struct IngressQueue {
+    capacity: usize,
+    shed_doomed: bool,
+    weights: Vec<u32>,
+    /// `lanes[lane][tenant]` — arrival order within each queue.
+    lanes: Vec<Vec<VecDeque<QueuedJob>>>,
+    /// Queued service seconds per lane (doomed prediction is
+    /// lane-aware: only same-or-higher-priority backlog delays a job).
+    lane_service: [f64; LANES],
+    /// DRR deficit per tenant, in service seconds.
+    deficit: Vec<f64>,
+    cursor: usize,
+    depth: usize,
+    queued_service_s: f64,
+}
+
+impl IngressQueue {
+    pub fn new(weights: &[u32], capacity: usize, shed_doomed: bool) -> Self {
+        assert!(!weights.is_empty(), "at least one tenant");
+        assert!(weights.iter().all(|&w| w > 0), "weights must be positive");
+        let tenants = weights.len();
+        Self {
+            capacity,
+            shed_doomed,
+            weights: weights.to_vec(),
+            lanes: (0..LANES).map(|_| vec![VecDeque::new(); tenants]).collect(),
+            lane_service: [0.0; LANES],
+            deficit: vec![0.0; tenants],
+            cursor: 0,
+            depth: 0,
+            queued_service_s: 0.0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Total estimated service seconds queued.
+    pub fn queued_service_s(&self) -> f64 {
+        self.queued_service_s
+    }
+
+    /// Queue pressure: seconds of backlog per active card — the sample
+    /// the serving harness feeds the burn monitor.
+    pub fn pressure(&self, servers: usize) -> f64 {
+        self.queued_service_s / servers.max(1) as f64
+    }
+
+    /// Predicted queue wait for a job entering `lane`: backlog in its
+    /// own and higher-priority lanes, per active card. Work in lower
+    /// lanes drains after it and cannot delay it.
+    pub fn lane_wait_s(&self, lane: usize, servers: usize) -> f64 {
+        self.lane_service[..=lane.min(LANES - 1)].iter().sum::<f64>() / servers.max(1) as f64
+    }
+
+    /// Offer one job. Sheds when doomed (predicted wait past the
+    /// deadline slack) or when the queue is full and no strictly
+    /// lower-priority victim exists.
+    pub fn offer(&mut self, job: QueuedJob, now: f64, servers: usize) -> Offer {
+        assert!(job.tenant < self.weights.len(), "unknown tenant index");
+        assert!(job.lane < LANES, "lane out of range");
+        if self.shed_doomed {
+            if let Some(d) = job.deadline_s {
+                let predicted = now + self.lane_wait_s(job.lane, servers) + job.service_s;
+                if predicted > d {
+                    return Offer::Shed(ShedReason::Doomed);
+                }
+            }
+        }
+        let mut evicted = None;
+        if self.depth >= self.capacity {
+            match self.evict_below(job.lane) {
+                Some(victim) => evicted = Some(victim),
+                None => return Offer::Shed(ShedReason::QueueFull),
+            }
+        }
+        self.depth += 1;
+        self.queued_service_s += job.service_s;
+        self.lane_service[job.lane] += job.service_s;
+        self.lanes[job.lane][job.tenant].push_back(job);
+        Offer::Admitted { evicted }
+    }
+
+    /// Evict the youngest job from the lowest-priority non-empty lane
+    /// strictly below `lane` (i.e. a *higher* lane index), longest
+    /// tenant queue first. None when no such victim exists.
+    fn evict_below(&mut self, lane: usize) -> Option<QueuedJob> {
+        for l in (lane + 1..LANES).rev() {
+            if let Some(t) = (0..self.weights.len())
+                .filter(|&t| !self.lanes[l][t].is_empty())
+                .max_by_key(|&t| self.lanes[l][t].len())
+            {
+                let victim = self.lanes[l][t].pop_back().expect("non-empty");
+                self.depth -= 1;
+                self.queued_service_s -= victim.service_s;
+                self.lane_service[l] -= victim.service_s;
+                return Some(victim);
+            }
+        }
+        None
+    }
+
+    /// The oldest queued job (by arrival), across all lanes and
+    /// tenants — the member whose slack decides when a forming batch
+    /// must close.
+    pub fn oldest(&self) -> Option<&QueuedJob> {
+        self.lanes
+            .iter()
+            .flatten()
+            .filter_map(|q| q.front())
+            .min_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s))
+    }
+
+    /// Does any tenant queue hold a full same-shape batch at its head?
+    /// (If so there is nothing to wait for — dispatch immediately.)
+    pub fn has_full_batch(&self, max_batch: usize) -> bool {
+        self.lanes.iter().flatten().any(|q| {
+            match q.front() {
+                Some(head) => {
+                    q.iter().take(max_batch).take_while(|j| j.shape == head.shape).count()
+                        >= max_batch
+                }
+                None => false,
+            }
+        })
+    }
+
+    /// Pop the next batch under deficit round-robin: the highest
+    /// non-empty lane is scanned round-robin; each visit funds the
+    /// tenant's deficit by `quantum × weight`, and the first tenant
+    /// whose deficit covers its head job dispatches its same-shape
+    /// head run (up to `max_batch`, while the deficit lasts). Empty
+    /// result only when the queue is empty.
+    pub fn next_batch(&mut self, max_batch: usize) -> Vec<QueuedJob> {
+        assert!(max_batch >= 1);
+        if self.depth == 0 {
+            return Vec::new();
+        }
+        let tenants = self.weights.len();
+        for lane in 0..LANES {
+            if self.lanes[lane].iter().all(|q| q.is_empty()) {
+                continue;
+            }
+            // Quantum = the cheapest head job in the lane: one full
+            // round always funds at least that queue, so the scan
+            // terminates, and shares stay weight-proportional because
+            // every tenant is funded the same number of rounds.
+            let quantum = self.lanes[lane]
+                .iter()
+                .filter_map(|q| q.front())
+                .map(|j| j.service_s)
+                .fold(f64::INFINITY, f64::min)
+                .max(1e-9);
+            loop {
+                for _ in 0..tenants {
+                    let t = self.cursor % tenants;
+                    self.cursor += 1;
+                    if self.lanes[lane][t].is_empty() {
+                        // Classic DRR: an idle tenant's credit resets —
+                        // fairness applies to backlogged tenants only.
+                        self.deficit[t] = 0.0;
+                        continue;
+                    }
+                    self.deficit[t] += quantum * self.weights[t] as f64;
+                    let head_cost = self.lanes[lane][t].front().expect("non-empty").service_s;
+                    if self.deficit[t] + 1e-12 < head_cost {
+                        continue;
+                    }
+                    let shape = self.lanes[lane][t].front().expect("non-empty").shape;
+                    let mut batch = Vec::new();
+                    while batch.len() < max_batch {
+                        match self.lanes[lane][t].front() {
+                            Some(j)
+                                if j.shape == shape
+                                    && (batch.is_empty()
+                                        || self.deficit[t] + 1e-12 >= j.service_s) =>
+                            {
+                                let j = self.lanes[lane][t].pop_front().expect("non-empty");
+                                self.deficit[t] -= j.service_s;
+                                self.depth -= 1;
+                                self.queued_service_s -= j.service_s;
+                                self.lane_service[lane] -= j.service_s;
+                                batch.push(j);
+                            }
+                            _ => break,
+                        }
+                    }
+                    if self.lanes[lane][t].is_empty() {
+                        self.deficit[t] = 0.0;
+                    }
+                    return batch;
+                }
+            }
+        }
+        unreachable!("depth > 0 implies a non-empty lane");
+    }
+
+    /// Put a killed server's in-flight batch back at the front of its
+    /// queues (order preserved) — the chaos path's no-job-lost
+    /// guarantee.
+    pub fn requeue_front(&mut self, jobs: Vec<QueuedJob>) {
+        for job in jobs.into_iter().rev() {
+            self.depth += 1;
+            self.queued_service_s += job.service_s;
+            self.lane_service[job.lane] += job.service_s;
+            self.lanes[job.lane][job.tenant].push_front(job);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, tenant: usize, lane: usize, arrival: f64) -> QueuedJob {
+        QueuedJob {
+            id,
+            tenant,
+            lane,
+            arrival_s: arrival,
+            deadline_s: None,
+            service_s: 0.01,
+            flops: 1000,
+            shape: (64, 64, 64),
+        }
+    }
+
+    #[test]
+    fn bounded_queue_sheds_at_capacity() {
+        let mut q = IngressQueue::new(&[1], 2, false);
+        assert!(matches!(q.offer(job(0, 0, 1, 0.0), 0.0, 1), Offer::Admitted { evicted: None }));
+        assert!(matches!(q.offer(job(1, 0, 1, 0.1), 0.1, 1), Offer::Admitted { evicted: None }));
+        assert_eq!(q.offer(job(2, 0, 1, 0.2), 0.2, 1), Offer::Shed(ShedReason::QueueFull));
+        assert_eq!(q.depth(), 2);
+    }
+
+    #[test]
+    fn high_priority_evicts_low_when_full() {
+        let mut q = IngressQueue::new(&[1], 2, false);
+        q.offer(job(0, 0, 2, 0.0), 0.0, 1);
+        q.offer(job(1, 0, 2, 0.1), 0.1, 1);
+        // A High arrival evicts the youngest Low job instead of being
+        // shed itself.
+        match q.offer(job(2, 0, 0, 0.2), 0.2, 1) {
+            Offer::Admitted { evicted: Some(v) } => assert_eq!(v.id, 1),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2);
+        // But a Low arrival cannot evict anything at its own level.
+        assert_eq!(q.offer(job(3, 0, 2, 0.3), 0.3, 1), Offer::Shed(ShedReason::QueueFull));
+    }
+
+    #[test]
+    fn doomed_requests_are_shed_at_the_door() {
+        let mut q = IngressQueue::new(&[1], 64, true);
+        // 10 jobs × 10 ms backlog on one server = 100 ms wait.
+        for i in 0..10 {
+            q.offer(job(i, 0, 1, 0.0), 0.0, 1);
+        }
+        let mut doomed = job(10, 0, 1, 0.0);
+        doomed.deadline_s = Some(0.05); // 50 ms deadline < 100 ms wait
+        assert_eq!(q.offer(doomed, 0.0, 1), Offer::Shed(ShedReason::Doomed));
+        let mut viable = job(11, 0, 1, 0.0);
+        viable.deadline_s = Some(0.5);
+        assert!(matches!(q.offer(viable, 0.0, 1), Offer::Admitted { .. }));
+        // More servers shrink the predicted wait: the same deadline
+        // admits on a 4-card fleet.
+        let mut q4 = IngressQueue::new(&[1], 64, true);
+        for i in 0..10 {
+            q4.offer(job(i, 0, 1, 0.0), 0.0, 4);
+        }
+        let mut tight = job(10, 0, 1, 0.0);
+        tight.deadline_s = Some(0.05);
+        assert!(matches!(q4.offer(tight, 0.0, 4), Offer::Admitted { .. }));
+    }
+
+    #[test]
+    fn doomed_prediction_is_lane_aware() {
+        let mut q = IngressQueue::new(&[1], 256, true);
+        // 20 Low jobs: 0.2 s of backlog, all of it behind the High lane.
+        for i in 0..20 {
+            q.offer(job(i, 0, 2, 0.0), 0.0, 1);
+        }
+        // A High arrival with a tight deadline ignores Low backlog...
+        let mut hi = job(20, 0, 0, 0.0);
+        hi.deadline_s = Some(0.02);
+        assert!(matches!(q.offer(hi, 0.0, 1), Offer::Admitted { .. }));
+        assert!((q.lane_wait_s(0, 1) - 0.01).abs() < 1e-12);
+        // ...while a Low arrival with the same deadline drowns in it.
+        let mut lo = job(21, 0, 2, 0.0);
+        lo.deadline_s = Some(0.02);
+        assert_eq!(q.offer(lo, 0.0, 1), Offer::Shed(ShedReason::Doomed));
+    }
+
+    #[test]
+    fn priority_lanes_drain_strictly_in_order() {
+        let mut q = IngressQueue::new(&[1], 64, false);
+        q.offer(job(0, 0, 2, 0.0), 0.0, 1);
+        q.offer(job(1, 0, 1, 0.1), 0.1, 1);
+        q.offer(job(2, 0, 0, 0.2), 0.2, 1);
+        assert_eq!(q.next_batch(1)[0].id, 2, "High first");
+        assert_eq!(q.next_batch(1)[0].id, 1, "then Normal");
+        assert_eq!(q.next_batch(1)[0].id, 0, "then Low");
+        assert!(q.next_batch(1).is_empty());
+    }
+
+    #[test]
+    fn drr_serves_weight_proportional_shares() {
+        // Tenants weighted 3:2:1, all saturated with identical jobs:
+        // served service seconds must track the weights closely.
+        let weights = [3u32, 2, 1];
+        let mut q = IngressQueue::new(&weights, 10_000, false);
+        for i in 0..900 {
+            q.offer(job(i, (i % 3) as usize, 1, 0.0), 0.0, 1);
+        }
+        let mut served = [0.0f64; 3];
+        let mut dispatched = 0;
+        while dispatched < 600 {
+            let batch = q.next_batch(4);
+            assert!(!batch.is_empty());
+            for j in &batch {
+                served[j.tenant] += j.service_s;
+                dispatched += 1;
+            }
+        }
+        let total: f64 = served.iter().sum();
+        for (t, &w) in weights.iter().enumerate() {
+            let share = served[t] / total;
+            let fair = w as f64 / 6.0;
+            assert!(
+                (share - fair).abs() / fair < 0.15,
+                "tenant {t}: share {share:.3} vs fair {fair:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn batches_group_same_shape_head_runs() {
+        let mut q = IngressQueue::new(&[1], 64, false);
+        for i in 0..3 {
+            q.offer(job(i, 0, 1, i as f64), 0.0, 1);
+        }
+        let mut odd = job(3, 0, 1, 3.0);
+        odd.shape = (128, 128, 128);
+        q.offer(odd, 0.0, 1);
+        assert!(q.has_full_batch(3));
+        assert!(!q.has_full_batch(4), "shape break caps the head run");
+        let b = q.next_batch(8);
+        assert_eq!(b.len(), 3, "same-shape head run only");
+        assert_eq!(q.next_batch(8)[0].id, 3);
+    }
+
+    #[test]
+    fn requeue_front_restores_order_and_accounting() {
+        let mut q = IngressQueue::new(&[1], 64, false);
+        for i in 0..4 {
+            q.offer(job(i, 0, 1, i as f64), 0.0, 1);
+        }
+        let depth_before = q.depth();
+        let service_before = q.queued_service_s();
+        let batch = q.next_batch(2);
+        assert_eq!(batch.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1]);
+        q.requeue_front(batch);
+        assert_eq!(q.depth(), depth_before);
+        assert!((q.queued_service_s() - service_before).abs() < 1e-12);
+        let again = q.next_batch(4);
+        assert_eq!(again.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn oldest_tracks_the_batch_close_driver() {
+        let mut q = IngressQueue::new(&[2, 1], 64, false);
+        q.offer(job(0, 1, 1, 5.0), 5.0, 1);
+        q.offer(job(1, 0, 0, 3.0), 5.0, 1);
+        assert_eq!(q.oldest().expect("non-empty").id, 1);
+    }
+
+    #[test]
+    fn policy_weight_lookup_defaults_to_one() {
+        let p = AdmissionPolicy {
+            tenant_weights: vec![("gold".into(), 3), ("silver".into(), 2)],
+            ..Default::default()
+        };
+        assert_eq!(p.weight_for("gold"), 3);
+        assert_eq!(p.weight_for("walk-in"), 1);
+        let aware = AdmissionPolicy::deadline_aware(0.05);
+        assert!(aware.shed_doomed);
+        assert_eq!(aware.latency_target_s, Some(0.05));
+    }
+
+    #[test]
+    fn report_constructors_round_trip() {
+        let ok = AdmissionReport::admitted("t0", Priority::High, 3);
+        assert!(ok.is_admitted());
+        assert_eq!(ok.lane, Priority::High);
+        let no = AdmissionReport::rejected("t1", Priority::Low, ShedReason::QueueFull, 9);
+        assert!(!no.is_admitted());
+        assert_eq!(no.shed, Some(ShedReason::QueueFull));
+        assert_eq!(Priority::from_lane(Priority::Low.lane()), Priority::Low);
+        assert_eq!(ShedReason::Doomed.name(), "doomed");
+    }
+}

@@ -32,18 +32,54 @@ pub struct Batcher {
     /// When set, [`Self::shape_key`] buckets shapes to this blocking's
     /// padded extents instead of exact extents.
     pub bucket: Option<Level1Blocking>,
+    /// Latency target, seconds: a forming batch closes when the oldest
+    /// member's slack against this target (or its own deadline) runs
+    /// out, instead of waiting out the fixed window — see
+    /// [`Self::close_by`]. None keeps the fixed-window rule.
+    pub latency_target: Option<f64>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize) -> Self {
         assert!(max_batch >= 1);
-        Self { max_batch, bucket: None }
+        Self { max_batch, bucket: None, latency_target: None }
     }
 
     /// Exact-shape grouping replaced by padded-extent bucketing.
     pub fn with_bucketing(max_batch: usize, blocking: Level1Blocking) -> Self {
         assert!(max_batch >= 1);
-        Self { max_batch, bucket: Some(blocking) }
+        Self { max_batch, bucket: Some(blocking), latency_target: None }
+    }
+
+    /// Same batcher closing batches against a latency target (builder
+    /// style).
+    pub fn with_latency_target(mut self, target_s: f64) -> Self {
+        assert!(target_s > 0.0, "latency target must be positive");
+        self.latency_target = Some(target_s);
+        self
+    }
+
+    /// The instant a forming batch must close, given its oldest
+    /// member: the fixed window end, pulled earlier by the latency
+    /// target and by the member's own absolute deadline (both leave
+    /// `est_exec_s` of execution slack). Never before the member's
+    /// enqueue instant — a batch already out of slack closes
+    /// immediately rather than in the past.
+    pub fn close_by(
+        &self,
+        oldest_enqueue_s: f64,
+        window_s: f64,
+        est_exec_s: f64,
+        deadline_s: Option<f64>,
+    ) -> f64 {
+        let mut close = oldest_enqueue_s + window_s;
+        if let Some(target) = self.latency_target {
+            close = close.min(oldest_enqueue_s + (target - est_exec_s).max(0.0));
+        }
+        if let Some(d) = deadline_s {
+            close = close.min(d - est_exec_s);
+        }
+        close.max(oldest_enqueue_s)
     }
 
     /// Shape component of a route key for an (m × k)·(k × n) job:
@@ -141,6 +177,36 @@ mod tests {
         let b = Batcher::new(4);
         assert_eq!(b.shape_key(100, 200, 300), "100x200x300");
         assert_ne!(b.shape_key(100, 200, 300), b.shape_key(101, 200, 300));
+    }
+
+    #[test]
+    fn fixed_window_close_without_a_target() {
+        let b = Batcher::new(4);
+        // No target, no deadline: the fixed window rules.
+        assert_eq!(b.close_by(10.0, 0.002, 0.001, None), 10.002);
+        // A deadline pulls the close earlier, leaving execution slack.
+        assert_eq!(b.close_by(10.0, 0.002, 0.0005, Some(10.001)), 10.0005);
+    }
+
+    #[test]
+    fn latency_target_closes_on_the_oldest_members_slack() {
+        let b = Batcher::new(4).with_latency_target(0.010);
+        // Target 10 ms, est exec 4 ms: close 6 ms after enqueue even
+        // though the fixed window would wait 50 ms.
+        let close = b.close_by(1.0, 0.050, 0.004, None);
+        assert!((close - 1.006).abs() < 1e-12, "{close}");
+        // The tighter of target and deadline wins.
+        let close = b.close_by(1.0, 0.050, 0.004, Some(1.007));
+        assert!((close - 1.003).abs() < 1e-12, "{close}");
+        // Slack already gone: close immediately, never in the past.
+        assert_eq!(b.close_by(1.0, 0.050, 0.020, None), 1.0);
+        assert_eq!(b.close_by(1.0, 0.050, 0.004, Some(0.5)), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "latency target must be positive")]
+    fn zero_latency_target_rejected() {
+        Batcher::new(1).with_latency_target(0.0);
     }
 
     #[test]

@@ -97,10 +97,31 @@ pub struct Metrics {
     /// [`Self::record_critical_path`] (indexed like
     /// [`crate::trace::critical::BUCKETS`]).
     pub critical_bucket_us: [AtomicU64; 5],
+    /// Requests accepted by admission control into the ingress queue.
+    pub admitted: AtomicU64,
+    /// Requests turned away (queue full, doomed, or evicted).
+    pub shed: AtomicU64,
+    /// Served requests that met their deadline (deadline-free requests
+    /// count as met — an answer in time is an answer in time).
+    pub deadline_met: AtomicU64,
+    /// Served requests that blew their deadline.
+    pub deadline_missed: AtomicU64,
+    /// FLOPs of deadline-met work — the goodput numerator; divide by
+    /// wall time for deadline-met FLOP/s.
+    pub goodput_flops: AtomicU64,
     /// Request latencies, log-bucketed: fixed memory under sustained
     /// traffic (the old reservoir was an unbounded `Vec<f64>`).
     latencies: Mutex<LogHistogram>,
+    /// Per-tenant latency histograms, first-come slotted: the first
+    /// [`TENANT_GAUGE_SLOTS`] distinct tenant names each get a slot,
+    /// later names fold into the last slot so memory stays fixed no
+    /// matter how many tenants traffic claims.
+    tenant_latencies: Mutex<Vec<(String, LogHistogram)>>,
 }
+
+/// Fixed number of per-tenant latency gauges exported by the scrape
+/// path (the snapshot is `Copy`, so the arrays are fixed-size).
+pub const TENANT_GAUGE_SLOTS: usize = 4;
 
 impl Metrics {
     pub fn new() -> Self {
@@ -138,6 +159,45 @@ impl Metrics {
 
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one request latency against its tenant's histogram slot.
+    /// The first [`TENANT_GAUGE_SLOTS`] distinct names get their own
+    /// slot; anything later lands in the last slot ("overflow"), so a
+    /// tenant-name cardinality explosion cannot grow the gauge set.
+    pub fn record_tenant_latency(&self, tenant: &str, seconds: f64) {
+        let mut slots = self.tenant_latencies.lock().unwrap();
+        if let Some((_, h)) = slots.iter_mut().find(|(name, _)| name == tenant) {
+            h.record(seconds);
+            return;
+        }
+        if slots.len() < TENANT_GAUGE_SLOTS {
+            let mut h = LogHistogram::new();
+            h.record(seconds);
+            slots.push((tenant.to_string(), h));
+        } else {
+            slots.last_mut().expect("slots full").1.record(seconds);
+        }
+    }
+
+    /// Tenant names currently holding gauge slots, in claim order.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenant_latencies.lock().unwrap().iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// Fraction of offered requests shed (0.0 before any admission
+    /// decision).
+    pub fn shed_rate(&self) -> f64 {
+        let shed = self.shed.load(Ordering::Relaxed) as f64;
+        let admitted = self.admitted.load(Ordering::Relaxed) as f64;
+        if shed + admitted == 0.0 {
+            return 0.0;
+        }
+        shed / (shed + admitted)
     }
 
     pub fn add_flops(&self, f: u64) {
@@ -285,6 +345,16 @@ impl Metrics {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latency_histogram();
+        let (tenant_requests, tenant_p99_us) = {
+            let slots = self.tenant_latencies.lock().unwrap();
+            let mut counts = [0u64; TENANT_GAUGE_SLOTS];
+            let mut p99s = [0u64; TENANT_GAUGE_SLOTS];
+            for (i, (_, h)) in slots.iter().take(TENANT_GAUGE_SLOTS).enumerate() {
+                counts[i] = h.count();
+                p99s[i] = if h.is_empty() { 0 } else { saturating_us(h.quantile(0.99)) };
+            }
+            (counts, p99s)
+        };
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             artifact_hits: self.artifact_hits.load(Ordering::Relaxed),
@@ -335,6 +405,13 @@ impl Metrics {
             critical_bucket_us: std::array::from_fn(|i| {
                 self.critical_bucket_us[i].load(Ordering::Relaxed)
             }),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_met: self.deadline_met.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
+            goodput_flops: self.goodput_flops.load(Ordering::Relaxed),
+            tenant_requests,
+            tenant_p99_us,
         }
     }
 }
@@ -378,6 +455,19 @@ pub struct MetricsSnapshot {
     /// like [`crate::trace::critical::BUCKETS`]
     /// (compute/fabric/host/drain/idle).
     pub critical_bucket_us: [u64; 5],
+    /// Admission-control outcomes.
+    pub admitted: u64,
+    pub shed: u64,
+    /// Deadline outcomes over served requests.
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+    /// FLOPs of deadline-met work (goodput numerator).
+    pub goodput_flops: u64,
+    /// Per-tenant-slot request counts (slot order = claim order; slot
+    /// names via [`Metrics::tenant_names`]).
+    pub tenant_requests: [u64; TENANT_GAUGE_SLOTS],
+    /// Per-tenant-slot p99 latency, microseconds.
+    pub tenant_p99_us: [u64; TENANT_GAUGE_SLOTS],
 }
 
 #[cfg(test)]
@@ -402,7 +492,7 @@ mod tests {
     fn cluster_gauges() {
         use crate::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
         let m = Metrics::new();
-        let sim = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+        let sim = ClusterSim::builder(Fleet::homogeneous(2, "G").unwrap()).build();
         let plan =
             PartitionPlan::new(PartitionStrategy::Row1D { devices: 2 }, 4096, 4096, 4096)
                 .unwrap();
@@ -428,10 +518,9 @@ mod tests {
         use crate::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
         use crate::fabric::Topology;
         let m = Metrics::new();
-        let sim = ClusterSim::with_topology(
-            Fleet::homogeneous(4, "G").unwrap(),
-            Topology::ring(4),
-        );
+        let sim = ClusterSim::builder(Fleet::homogeneous(4, "G").unwrap())
+            .topology(Topology::ring(4))
+            .build();
         let plan = PartitionPlan::new(
             PartitionStrategy::Summa25D { p: 2, q: 1, c: 2 },
             8192,
@@ -454,10 +543,9 @@ mod tests {
         use crate::fabric::Topology;
         let m = Metrics::new();
         assert_eq!(m.placement_hop_saving(), 0.0);
-        let sim = ClusterSim::with_topology(
-            Fleet::homogeneous(8, "G").unwrap(),
-            Topology::ring(8),
-        );
+        let sim = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap())
+            .topology(Topology::ring(8))
+            .build();
         let plan = PartitionPlan::new(
             PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 },
             8192,
@@ -480,7 +568,7 @@ mod tests {
         use crate::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
         let m = Metrics::new();
         assert_eq!(m.post_grow_hop_saving(), 0.0);
-        let sim = ClusterSim::with_spares(Fleet::homogeneous(3, "G").unwrap(), 1);
+        let sim = ClusterSim::builder(Fleet::homogeneous(3, "G").unwrap()).spares(1).build();
         let plan =
             PartitionPlan::new(PartitionStrategy::Row1D { devices: 2 }, 4096, 4096, 4096)
                 .unwrap();
@@ -538,6 +626,34 @@ mod tests {
         assert!((s.latency_p999_us as f64 - 999_000.0).abs() < 0.04 * 999_000.0);
         assert!(s.latency_p50_us <= s.latency_p99_us && s.latency_p99_us <= s.latency_p999_us);
         assert!(m.latency_report_line().contains("p999"));
+    }
+
+    #[test]
+    fn admission_and_tenant_gauges() {
+        let m = Metrics::new();
+        assert_eq!(m.shed_rate(), 0.0);
+        Metrics::add(&m.admitted, 8);
+        Metrics::add(&m.shed, 2);
+        Metrics::add(&m.deadline_met, 7);
+        Metrics::inc(&m.deadline_missed);
+        Metrics::add(&m.goodput_flops, 1_000_000);
+        assert!((m.shed_rate() - 0.2).abs() < 1e-12);
+        // First four distinct tenants claim slots; the fifth folds into
+        // the last slot instead of growing the gauge set.
+        for name in ["gold", "silver", "bronze", "free", "overflow"] {
+            m.record_tenant_latency(name, 0.010);
+        }
+        m.record_tenant_latency("gold", 0.020);
+        assert_eq!(m.tenant_names(), ["gold", "silver", "bronze", "free"]);
+        let s = m.snapshot();
+        assert_eq!(s.admitted, 8);
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_met, 7);
+        assert_eq!(s.deadline_missed, 1);
+        assert_eq!(s.goodput_flops, 1_000_000);
+        assert_eq!(s.tenant_requests, [2, 1, 1, 2], "overflow folds into the last slot");
+        assert!(s.tenant_p99_us[0] >= 19_000, "gold p99 sees the 20 ms sample");
+        assert!(s.tenant_p99_us[1] > 0 && s.tenant_p99_us[3] > 0);
     }
 
     #[test]

@@ -27,14 +27,18 @@
 //! execution report (cycles/seconds/e_D on the selected Table-I design),
 //! so the serving path exercises the whole stack on every request.
 
+pub mod admission;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod serve;
 pub mod service;
 pub mod workload;
 
+pub use admission::{AdmissionPolicy, AdmissionReport, IngressQueue, Priority, ShedReason};
 pub use batcher::{Batch, Batcher};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use router::{Route, Router};
+pub use serve::{simulate_serve, simulate_serve_trace, ServeConfig, ServeOutcome};
 pub use service::{GemmRequest, GemmResponse, GemmService, ServiceConfig};
-pub use workload::{TraceEntry, WorkloadGen};
+pub use workload::{ArrivalModel, TenantSpec, TraceEntry, WorkloadGen};

@@ -1,0 +1,800 @@
+//! Open-loop serving harness: virtual-time replay of a workload trace
+//! through the admission pipeline onto a simulated card fleet.
+//!
+//! Closed-loop benchmarks (submit, wait, submit) can never overload
+//! anything — the client self-throttles. This harness is open-loop:
+//! arrivals come from a [`WorkloadGen`] trace at their own rate
+//! (Poisson / bursty / diurnal), regardless of whether the fleet keeps
+//! up, which is what "heavy traffic from millions of users" actually
+//! looks like at the front door. Time is simulated seconds, so a 2×
+//! overload minute replays in milliseconds and every run is
+//! bit-reproducible from the workload seed.
+//!
+//! The pipeline per arrival: bounded-ingress admission (shed or admit,
+//! possibly evicting lower priority; [`IngressQueue`]), deficit
+//! round-robin batch formation with deadline-aware close
+//! ([`Batcher::close_by`]), execution on the earliest-free card under
+//! a flops/throughput + dispatch-overhead cost model, and queue-
+//! pressure samples into a [`BurnMonitor`] whose sustained burn
+//! activates a hot spare or grows the fleet — the same
+//! watermark-style elastic loop the cluster layer runs, now driven by
+//! user traffic. Chaos kills requeue in-flight batches; no admitted
+//! request is ever lost.
+
+use super::admission::{AdmissionPolicy, IngressQueue, Offer, QueuedJob, ShedReason};
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::workload::{TenantSpec, TraceEntry, WorkloadGen};
+use crate::observe::slo::{BurnMonitor, SloPolicy};
+use crate::perfmodel::flop_count;
+use crate::util::stats::LogHistogram;
+
+/// Serving-harness configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Cards serving at trace start.
+    pub servers: usize,
+    /// Hot spares: pressure growth (and emergency replacement of dead
+    /// cards) activates these before attaching brand-new cards.
+    pub hot_spares: usize,
+    /// Effective per-card throughput of the cost model, GFLOP/s
+    /// (design G sustains ~85% of its 3260 GFLOP/s eq. 5 peak).
+    pub card_gflops: f64,
+    /// Fixed per-dispatch overhead, seconds — the launch/DMA cost a
+    /// batch amortizes over its members.
+    pub dispatch_overhead_s: f64,
+    pub max_batch: usize,
+    /// Fixed batching window, seconds (the baseline close rule).
+    pub batch_window_s: f64,
+    /// Full pipeline (priority lanes + DRR + doomed shedding +
+    /// deadline-aware close) vs the FIFO/fixed-window baseline.
+    pub deadline_aware: bool,
+    pub policy: AdmissionPolicy,
+    /// Queue-pressure watermark, seconds of backlog per active card:
+    /// sustained pressure above it (both burn windows of `slo`) grows
+    /// the fleet. None disables pressure growth.
+    pub pressure_watermark: Option<f64>,
+    /// Burn windows / threshold / growth budget for pressure growth
+    /// (`p99_latency_s` is overridden by the watermark).
+    pub slo: SloPolicy,
+    /// Chaos kills: (time, server index at trace start).
+    pub kills: Vec<(f64, usize)>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            servers: 4,
+            hot_spares: 0,
+            card_gflops: 2770.0,
+            dispatch_overhead_s: 5e-4,
+            max_batch: 8,
+            batch_window_s: 2e-3,
+            deadline_aware: true,
+            policy: AdmissionPolicy::default(),
+            pressure_watermark: None,
+            slo: SloPolicy::default(),
+            kills: Vec::new(),
+        }
+    }
+}
+
+/// One completed request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServedRequest {
+    pub id: u64,
+    /// Tenant index in the workload's tenant table.
+    pub tenant: usize,
+    pub flops: u64,
+    pub latency_s: f64,
+    /// Deadline met (true when the request carried none).
+    pub met: bool,
+    pub finish_s: f64,
+}
+
+/// One shed request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub tenant: usize,
+    pub reason: ShedReason,
+    pub at_s: f64,
+}
+
+/// Per-tenant rollup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantStat {
+    pub name: String,
+    pub weight: u32,
+    pub completed: u64,
+    pub shed: u64,
+    pub deadline_met: u64,
+    /// Service seconds delivered (the DRR fair-share currency).
+    pub served_service_s: f64,
+    pub p99_s: f64,
+}
+
+/// What one open-loop run delivered.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeOutcome {
+    pub offered: usize,
+    pub served: Vec<ServedRequest>,
+    pub shed: Vec<ShedRecord>,
+    pub tenants: Vec<TenantStat>,
+    pub batches: u64,
+    pub spare_activations: usize,
+    pub grown_cards: usize,
+    pub deadline_met: u64,
+    pub deadline_missed: u64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub makespan_s: f64,
+    /// Goodput: FLOP/s of deadline-met requests over the makespan.
+    pub goodput_flops_per_s: f64,
+    /// All served FLOP/s (late answers included).
+    pub served_flops_per_s: f64,
+    pub offered_flops_per_s: f64,
+    /// Peak queue pressure observed (seconds of backlog per card).
+    pub pressure_peak: f64,
+    /// Kill / growth narrative, deterministic.
+    pub events: Vec<String>,
+}
+
+impl ServeOutcome {
+    /// Fraction of offered requests turned away.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.shed.len() as f64 / self.offered as f64
+    }
+
+    /// Weighted fair-share deviation: max over tenants of the relative
+    /// gap between the tenant's served-service share and its weight
+    /// share. 0.0 with fewer than two tenants or no service.
+    pub fn fairness_bound(&self) -> f64 {
+        if self.tenants.len() < 2 {
+            return 0.0;
+        }
+        let total_service: f64 = self.tenants.iter().map(|t| t.served_service_s).sum();
+        let total_weight: f64 = self.tenants.iter().map(|t| t.weight.max(1) as f64).sum();
+        if total_service <= 0.0 {
+            return 0.0;
+        }
+        self.tenants
+            .iter()
+            .map(|t| {
+                let share = t.served_service_s / total_service;
+                let fair = t.weight.max(1) as f64 / total_weight;
+                (share - fair).abs() / fair
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Fold the run into the service gauges: admitted/shed/goodput
+    /// counters, the latency histogram, and the per-tenant latency
+    /// gauges — so a harness run scrapes exactly like live traffic.
+    pub fn record_into(&self, m: &Metrics) {
+        Metrics::add(&m.admitted, self.served.len() as u64);
+        Metrics::add(&m.shed, self.shed.len() as u64);
+        Metrics::add(&m.deadline_met, self.deadline_met);
+        Metrics::add(&m.deadline_missed, self.deadline_missed);
+        for r in &self.served {
+            m.record_latency(r.latency_s);
+            if let Some(t) = self.tenants.get(r.tenant) {
+                m.record_tenant_latency(&t.name, r.latency_s);
+            }
+            if r.met {
+                Metrics::add(&m.goodput_flops, r.flops);
+            }
+            m.add_flops(r.flops);
+        }
+    }
+
+    /// Human summary for the CLI and examples.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "served {}/{} ({} shed, {:.1}%), {} batches over {:.3} s\n\
+             goodput {:.1} GFLOP/s of {:.1} offered ({:.1} served); \
+             deadlines {} met / {} missed\n\
+             latency p50 {:.2} ms, p99 {:.2} ms; peak pressure {:.3} s/card; \
+             +{} spare(s), +{} grown card(s)\n",
+            self.served.len(),
+            self.offered,
+            self.shed.len(),
+            100.0 * self.shed_rate(),
+            self.batches,
+            self.makespan_s,
+            self.goodput_flops_per_s / 1e9,
+            self.offered_flops_per_s / 1e9,
+            self.served_flops_per_s / 1e9,
+            self.deadline_met,
+            self.deadline_missed,
+            self.p50_s * 1e3,
+            self.p99_s * 1e3,
+            self.pressure_peak,
+            self.spare_activations,
+            self.grown_cards,
+        );
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "  tenant {:<8} w{} — {} served / {} shed, {} met, p99 {:.2} ms\n",
+                t.name,
+                t.weight,
+                t.completed,
+                t.shed,
+                t.deadline_met,
+                t.p99_s * 1e3
+            ));
+        }
+        for e in &self.events {
+            out.push_str(&format!("  {e}\n"));
+        }
+        out
+    }
+}
+
+struct Card {
+    free_at: f64,
+    kill_at: Option<f64>,
+    dead: bool,
+}
+
+/// Replay `count` requests from `gen` through the admission pipeline.
+/// Deterministic from the workload seed and the config.
+pub fn simulate_serve(gen: &WorkloadGen, count: u64, cfg: &ServeConfig) -> ServeOutcome {
+    let trace = gen.trace(count);
+    simulate_serve_trace(&trace, &gen.tenants, cfg)
+}
+
+/// Replay an explicit trace (the lower-level entry the property tests
+/// drive directly). `tenants` may be empty: one anonymous tenant.
+pub fn simulate_serve_trace(
+    trace: &[TraceEntry],
+    tenants: &[TenantSpec],
+    cfg: &ServeConfig,
+) -> ServeOutcome {
+    let table: Vec<TenantSpec> = if tenants.is_empty() {
+        vec![TenantSpec::new("default", 1, super::admission::Priority::Normal, None)]
+    } else {
+        tenants.to_vec()
+    };
+    let aware = cfg.deadline_aware;
+    // The FIFO baseline folds every tenant into one strict
+    // arrival-order queue on the Normal lane: no lanes, no fair share,
+    // no doomed shedding, fixed-window close.
+    let weights: Vec<u32> =
+        if aware { table.iter().map(|t| t.weight.max(1)).collect() } else { vec![1] };
+    let mut queue = IngressQueue::new(
+        &weights,
+        cfg.policy.queue_capacity,
+        aware && cfg.policy.shed_doomed,
+    );
+    let mut batcher = Batcher::new(cfg.max_batch.max(1));
+    if aware {
+        if let Some(t) = cfg.policy.latency_target_s {
+            batcher = batcher.with_latency_target(t);
+        }
+    }
+
+    let mut cards: Vec<Card> = (0..cfg.servers.max(1))
+        .map(|i| Card {
+            free_at: 0.0,
+            kill_at: cfg.kills.iter().find(|(_, s)| *s == i).map(|(t, _)| *t),
+            dead: false,
+        })
+        .collect();
+    let mut spares_left = cfg.hot_spares;
+    let mut spare_activations = 0usize;
+    let mut grown_cards = 0usize;
+    let mut pressure_grown = 0usize;
+    let mut monitor = cfg
+        .pressure_watermark
+        .map(|w| BurnMonitor::new(SloPolicy { p99_latency_s: w, ..cfg.slo }));
+    let mut last_growth = f64::NEG_INFINITY;
+
+    let mut served: Vec<ServedRequest> = Vec::new();
+    let mut shed: Vec<ShedRecord> = Vec::new();
+    let mut events: Vec<String> = Vec::new();
+    let mut batches = 0u64;
+    let mut pressure_peak = 0.0f64;
+
+    let job_of = |e: &TraceEntry| -> QueuedJob {
+        let mut flops = flop_count(e.m as u64, e.n as u64, e.k as u64);
+        if e.chained {
+            flops *= 2;
+        }
+        // Price the job at its amortized cost of one card's time —
+        // compute plus a full-batch share of dispatch overhead — so
+        // queued service seconds predict wall waits accurately.
+        let service_s = flops as f64 / (cfg.card_gflops.max(1e-9) * 1e9)
+            + cfg.dispatch_overhead_s / cfg.max_batch.max(1) as f64;
+        let deadline_s = e
+            .deadline_s
+            .or(cfg.policy.default_deadline_s)
+            .map(|d| e.arrival_s + d);
+        QueuedJob {
+            id: e.id,
+            tenant: if aware { e.tenant.min(weights.len() - 1) } else { 0 },
+            lane: if aware { e.priority.lane() } else { 1 },
+            arrival_s: e.arrival_s,
+            deadline_s,
+            service_s,
+            flops,
+            shape: (e.m, e.k, e.n),
+        }
+    };
+
+    let mut i = 0usize;
+    let mut now = 0.0f64;
+    loop {
+        let next_arrival = trace.get(i).map(|e| e.arrival_s);
+        if queue.depth() == 0 {
+            match next_arrival {
+                Some(_) => {
+                    let e = &trace[i];
+                    i += 1;
+                    now = now.max(e.arrival_s);
+                    arrive(
+                        e,
+                        &job_of(e),
+                        trace,
+                        &mut queue,
+                        &cards,
+                        &mut shed,
+                        &mut pressure_peak,
+                    );
+                    grow_on_pressure(
+                        e.arrival_s,
+                        &queue,
+                        &mut monitor,
+                        cfg,
+                        &mut last_growth,
+                        &mut pressure_grown,
+                        &mut cards,
+                        &mut spares_left,
+                        &mut spare_activations,
+                        &mut grown_cards,
+                        &mut events,
+                    );
+                    continue;
+                }
+                None => break,
+            }
+        }
+        // Earliest-free living card; if the whole fleet is dead, the
+        // controller replaces capacity on the spot (spare first) — the
+        // queue must drain, chaos or not.
+        let Some((cidx, cfree)) = cards
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| !c.dead)
+            .map(|(idx, c)| (idx, c.free_at))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+        else {
+            add_card(
+                now,
+                "fleet dead; emergency replacement",
+                &mut cards,
+                &mut spares_left,
+                &mut spare_activations,
+                &mut grown_cards,
+                &mut events,
+            );
+            continue;
+        };
+        let ready = cfree.max(now);
+        // Batch close: a full same-shape batch (or a saturated queue)
+        // dispatches immediately; otherwise hold for the window,
+        // clipped by the latency target / oldest member's deadline
+        // slack when deadline-aware.
+        let close = if queue.has_full_batch(cfg.max_batch) || queue.depth() >= cfg.max_batch {
+            ready
+        } else {
+            let oldest = queue.oldest().expect("depth > 0");
+            batcher.close_by(
+                oldest.arrival_s,
+                cfg.batch_window_s,
+                oldest.service_s + cfg.dispatch_overhead_s,
+                if aware { oldest.deadline_s } else { None },
+            )
+        };
+        let start = ready.max(close);
+        if let Some(t) = next_arrival {
+            if t < start {
+                let e = &trace[i];
+                i += 1;
+                now = now.max(t);
+                arrive(
+                    e,
+                    &job_of(e),
+                    trace,
+                    &mut queue,
+                    &cards,
+                    &mut shed,
+                    &mut pressure_peak,
+                );
+                grow_on_pressure(
+                    e.arrival_s,
+                    &queue,
+                    &mut monitor,
+                    cfg,
+                    &mut last_growth,
+                    &mut pressure_grown,
+                    &mut cards,
+                    &mut spares_left,
+                    &mut spare_activations,
+                    &mut grown_cards,
+                    &mut events,
+                );
+                continue;
+            }
+        }
+        now = start;
+        let mut batch = queue.next_batch(cfg.max_batch);
+        if aware && cfg.policy.shed_doomed {
+            // A job whose deadline passed while it queued can no
+            // longer produce goodput: drop it at dispatch instead of
+            // spending card time confirming the miss.
+            batch.retain(|j| {
+                let live = j.deadline_s.is_none_or(|d| start <= d + 1e-12);
+                if !live {
+                    shed.push(ShedRecord {
+                        id: j.id,
+                        tenant: trace[j.id as usize].tenant,
+                        reason: ShedReason::Doomed,
+                        at_s: start,
+                    });
+                }
+                live
+            });
+            if batch.is_empty() {
+                continue;
+            }
+        }
+        // Each member's service_s carries overhead/max_batch already;
+        // the remainder charges an underfull batch its real share.
+        let exec = cfg.dispatch_overhead_s
+            * (1.0 - batch.len() as f64 / cfg.max_batch.max(1) as f64)
+            + batch.iter().map(|j| j.service_s).sum::<f64>();
+        if let Some(kt) = cards[cidx].kill_at.filter(|&kt| kt < start + exec) {
+            // The card dies before this batch completes: nothing is
+            // lost — the batch goes back to the front of its queues.
+            cards[cidx].dead = true;
+            cards[cidx].kill_at = None;
+            events.push(format!(
+                "t={kt:.4}s card {cidx} killed; {} in-flight job(s) requeued",
+                batch.len()
+            ));
+            queue.requeue_front(batch);
+            continue;
+        }
+        let finish = start + exec;
+        cards[cidx].free_at = finish;
+        batches += 1;
+        for j in batch {
+            let met = j.deadline_s.is_none_or(|d| finish <= d + 1e-12);
+            served.push(ServedRequest {
+                id: j.id,
+                tenant: trace[j.id as usize].tenant,
+                flops: j.flops,
+                latency_s: finish - j.arrival_s,
+                met,
+                finish_s: finish,
+            });
+        }
+    }
+
+    // Rollups.
+    let makespan_s = served
+        .iter()
+        .map(|r| r.finish_s)
+        .fold(trace.last().map_or(0.0, |e| e.arrival_s), f64::max)
+        .max(1e-9);
+    let mut hist = LogHistogram::new();
+    let mut tenant_hists: Vec<LogHistogram> = vec![LogHistogram::new(); table.len()];
+    let mut stats: Vec<TenantStat> = table
+        .iter()
+        .map(|t| TenantStat {
+            name: t.name.clone(),
+            weight: t.weight.max(1),
+            completed: 0,
+            shed: 0,
+            deadline_met: 0,
+            served_service_s: 0.0,
+            p99_s: 0.0,
+        })
+        .collect();
+    let mut met_flops = 0u64;
+    let mut all_flops = 0u64;
+    let (mut deadline_met, mut deadline_missed) = (0u64, 0u64);
+    for r in &served {
+        hist.record(r.latency_s);
+        all_flops += r.flops;
+        if r.met {
+            deadline_met += 1;
+            met_flops += r.flops;
+        } else {
+            deadline_missed += 1;
+        }
+        if let Some(s) = stats.get_mut(r.tenant) {
+            s.completed += 1;
+            if r.met {
+                s.deadline_met += 1;
+            }
+            s.served_service_s += r.flops as f64 / (cfg.card_gflops.max(1e-9) * 1e9);
+            tenant_hists[r.tenant].record(r.latency_s);
+        }
+    }
+    for rec in &shed {
+        if let Some(s) = stats.get_mut(rec.tenant) {
+            s.shed += 1;
+        }
+    }
+    for (s, h) in stats.iter_mut().zip(&tenant_hists) {
+        s.p99_s = if h.is_empty() { 0.0 } else { h.quantile(0.99) };
+    }
+    ServeOutcome {
+        offered: trace.len(),
+        deadline_met,
+        deadline_missed,
+        p50_s: if hist.is_empty() { 0.0 } else { hist.quantile(0.50) },
+        p99_s: if hist.is_empty() { 0.0 } else { hist.quantile(0.99) },
+        makespan_s,
+        goodput_flops_per_s: met_flops as f64 / makespan_s,
+        served_flops_per_s: all_flops as f64 / makespan_s,
+        offered_flops_per_s: WorkloadGen::offered_flops(trace),
+        pressure_peak,
+        served,
+        shed,
+        tenants: stats,
+        batches,
+        spare_activations,
+        grown_cards,
+        events,
+    }
+}
+
+/// Offer one arrival to the queue, recording sheds and evictions.
+fn arrive(
+    e: &TraceEntry,
+    job: &QueuedJob,
+    trace: &[TraceEntry],
+    queue: &mut IngressQueue,
+    cards: &[Card],
+    shed: &mut Vec<ShedRecord>,
+    pressure_peak: &mut f64,
+) {
+    let alive = cards.iter().filter(|c| !c.dead).count();
+    match queue.offer(job.clone(), e.arrival_s, alive) {
+        Offer::Admitted { evicted } => {
+            if let Some(v) = evicted {
+                shed.push(ShedRecord {
+                    id: v.id,
+                    tenant: trace[v.id as usize].tenant,
+                    reason: ShedReason::Evicted,
+                    at_s: e.arrival_s,
+                });
+            }
+        }
+        Offer::Shed(reason) => {
+            shed.push(ShedRecord { id: e.id, tenant: e.tenant, reason, at_s: e.arrival_s });
+        }
+    }
+    *pressure_peak = pressure_peak.max(queue.pressure(alive));
+}
+
+/// Feed the queue-pressure sample to the burn monitor and grow the
+/// fleet on sustained burn (spares first), under cooldown and budget.
+#[allow(clippy::too_many_arguments)]
+fn grow_on_pressure(
+    at: f64,
+    queue: &IngressQueue,
+    monitor: &mut Option<BurnMonitor>,
+    cfg: &ServeConfig,
+    last_growth: &mut f64,
+    pressure_grown: &mut usize,
+    cards: &mut Vec<Card>,
+    spares_left: &mut usize,
+    spare_activations: &mut usize,
+    grown_cards: &mut usize,
+    events: &mut Vec<String>,
+) {
+    let Some(mon) = monitor.as_mut() else { return };
+    let alive = cards.iter().filter(|c| !c.dead).count();
+    mon.record(at, queue.pressure(alive));
+    if *pressure_grown >= cfg.slo.max_growth || at - *last_growth < cfg.slo.window_s {
+        return;
+    }
+    if let Some((short, long)) = mon.evaluate(at) {
+        *pressure_grown += 1;
+        *last_growth = at;
+        add_card(
+            at,
+            &format!("queue pressure burning (short {short:.2}, long {long:.2})"),
+            cards,
+            spares_left,
+            spare_activations,
+            grown_cards,
+            events,
+        );
+    }
+}
+
+/// Add serving capacity at `at`: activate a hot spare when one
+/// remains, otherwise attach a new card.
+fn add_card(
+    at: f64,
+    why: &str,
+    cards: &mut Vec<Card>,
+    spares_left: &mut usize,
+    spare_activations: &mut usize,
+    grown_cards: &mut usize,
+    events: &mut Vec<String>,
+) {
+    let what = if *spares_left > 0 {
+        *spares_left -= 1;
+        *spare_activations += 1;
+        "spare activated"
+    } else {
+        *grown_cards += 1;
+        "card grown"
+    };
+    events.push(format!("t={at:.4}s {why} -> {what} (card {})", cards.len()));
+    cards.push(Card { free_at: at, kill_at: None, dead: false });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload::ArrivalModel;
+
+    /// Overload knob: offered FLOP/s ≈ `factor` × fleet capacity.
+    fn overload_gen(seed: u64, cfg: &ServeConfig, factor: f64) -> WorkloadGen {
+        // multi_tenant serves 256³ jobs: flops per request is fixed.
+        let flops = flop_count(256, 256, 256) as f64;
+        // Per-batch overhead caps per-card job rate at full batches.
+        let per_job_s =
+            flops / (cfg.card_gflops * 1e9) + cfg.dispatch_overhead_s / cfg.max_batch as f64;
+        let capacity_hz = cfg.servers as f64 / per_job_s;
+        WorkloadGen::multi_tenant(seed, factor * capacity_hz)
+    }
+
+    #[test]
+    fn underload_serves_everything_on_time() {
+        let cfg = ServeConfig::default();
+        let gen = overload_gen(1, &cfg, 0.3);
+        let out = simulate_serve(&gen, 500, &cfg);
+        assert_eq!(out.served.len(), 500);
+        assert!(out.shed.is_empty());
+        assert_eq!(out.deadline_missed, 0, "30% load must meet every deadline");
+        assert!(out.p99_s < 0.05, "p99 {:.4}", out.p99_s);
+        assert!(out.goodput_flops_per_s > 0.0);
+        assert!(out.fairness_bound() >= 0.0);
+        assert!(out.render().contains("tenant gold"));
+    }
+
+    #[test]
+    fn deadline_aware_beats_fifo_on_goodput_under_overload() {
+        let mut aware = ServeConfig {
+            policy: AdmissionPolicy {
+                shed_doomed: true,
+                latency_target_s: Some(0.05),
+                // Deep enough that FIFO's backlog is never clipped by
+                // drop-tail: its collapse must come from bufferbloat,
+                // not from an accidental admission bound.
+                queue_capacity: 65_536,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        // 40k requests at 2x capacity: the trace spans ~0.37 s, so
+        // FIFO queueing delay grows far past every deadline tier.
+        let gen = overload_gen(7, &aware, 2.0);
+        let out_aware = simulate_serve(&gen, 40_000, &aware);
+        aware.deadline_aware = false;
+        let out_fifo = simulate_serve(&gen, 40_000, &aware);
+        assert!(
+            out_aware.goodput_flops_per_s > out_fifo.goodput_flops_per_s,
+            "aware {:.2e} must beat fifo {:.2e}",
+            out_aware.goodput_flops_per_s,
+            out_fifo.goodput_flops_per_s
+        );
+        assert!(!out_aware.shed.is_empty(), "overload must shed");
+        assert!(
+            out_aware.p99_s < out_fifo.p99_s,
+            "shedding holds p99: {:.3} vs {:.3}",
+            out_aware.p99_s,
+            out_fifo.p99_s
+        );
+    }
+
+    #[test]
+    fn sustained_pressure_grows_the_fleet() {
+        let cfg = ServeConfig {
+            servers: 2,
+            hot_spares: 1,
+            pressure_watermark: Some(0.002),
+            slo: SloPolicy {
+                window_s: 0.005,
+                long_windows: 4,
+                burn_threshold: 0.5,
+                max_growth: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let gen = overload_gen(3, &cfg, 3.0);
+        let out = simulate_serve(&gen, 3000, &cfg);
+        assert!(
+            out.spare_activations + out.grown_cards > 0,
+            "sustained overload must grow: {:?}",
+            out.events
+        );
+        assert_eq!(out.spare_activations, 1, "the hot spare goes first");
+        assert!(out.events.iter().any(|e| e.contains("spare activated")), "{:?}", out.events);
+    }
+
+    #[test]
+    fn kills_requeue_without_losing_admitted_jobs() {
+        let cfg = ServeConfig {
+            servers: 2,
+            kills: vec![(0.005, 0)],
+            ..Default::default()
+        };
+        let gen = overload_gen(5, &cfg, 0.8);
+        let out = simulate_serve(&gen, 800, &cfg);
+        assert_eq!(
+            out.served.len() + out.shed.len(),
+            800,
+            "every request accounted for"
+        );
+        assert!(out.events.iter().any(|e| e.contains("killed")), "{:?}", out.events);
+        // All admitted requests completed despite the kill.
+        assert_eq!(out.served.len(), 800 - out.shed.len());
+    }
+
+    #[test]
+    fn whole_fleet_death_triggers_emergency_replacement() {
+        let cfg = ServeConfig {
+            servers: 1,
+            hot_spares: 1,
+            kills: vec![(0.001, 0)],
+            ..Default::default()
+        };
+        let gen = overload_gen(9, &cfg, 0.5);
+        let out = simulate_serve(&gen, 300, &cfg);
+        assert_eq!(out.served.len() + out.shed.len(), 300);
+        assert_eq!(out.spare_activations, 1, "the spare replaces the dead fleet");
+    }
+
+    #[test]
+    fn replay_is_deterministic_from_the_seed() {
+        let cfg = ServeConfig {
+            pressure_watermark: Some(0.001),
+            kills: vec![(0.01, 1)],
+            ..Default::default()
+        };
+        let gen = overload_gen(11, &cfg, 1.5)
+            .with_arrival(ArrivalModel::Bursty { factor: 4.0, on_s: 0.01, off_s: 0.03 });
+        let a = simulate_serve(&gen, 1200, &cfg);
+        let b = simulate_serve(&gen, 1200, &cfg);
+        assert_eq!(a, b, "same seed, same config -> identical outcome");
+    }
+
+    #[test]
+    fn outcome_records_into_metrics() {
+        let cfg = ServeConfig::default();
+        let gen = overload_gen(13, &cfg, 0.5);
+        let out = simulate_serve(&gen, 200, &cfg);
+        let m = Metrics::new();
+        out.record_into(&m);
+        let s = m.snapshot();
+        assert_eq!(s.admitted, out.served.len() as u64);
+        assert_eq!(s.shed, out.shed.len() as u64);
+        assert_eq!(s.deadline_met, out.deadline_met);
+        assert_eq!(s.latency_count, out.served.len() as u64);
+        assert!(s.goodput_flops > 0);
+        assert!(s.tenant_requests.iter().sum::<u64>() >= out.served.len() as u64);
+    }
+}

@@ -5,6 +5,7 @@
 //! GEMM fallback; an **ingress thread** runs the batching loop. Clients
 //! submit over an mpsc sender and receive on a per-request channel.
 
+use super::admission::{AdmissionPolicy, AdmissionReport, Priority, ShedReason};
 use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::router::{Route, Router};
@@ -17,6 +18,7 @@ use crate::placement::PlacementStrategy;
 use crate::strassen::{strassen_matmul, StrassenConfig, StrassenReport};
 use crate::trace::{critical_path, CriticalPath, Tracer};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -28,7 +30,23 @@ use std::time::{Duration, Instant};
 /// would double their functional cost).
 const STRASSEN_VERIFY_MACS: u64 = 1 << 26;
 
-/// A matrix-multiplication job.
+/// A matrix-multiplication job, built fluently:
+///
+/// ```
+/// # use systo3d::coordinator::{GemmRequest, Priority};
+/// # use systo3d::gemm::Matrix;
+/// # use std::time::Duration;
+/// let req = GemmRequest::new(Matrix::random(8, 8, 1), Matrix::random(8, 8, 2))
+///     .id(7)
+///     .tenant("gold")
+///     .priority(Priority::High)
+///     .deadline(Duration::from_millis(50));
+/// assert_eq!(req.tenant.as_deref(), Some("gold"));
+/// ```
+///
+/// Every knob defaults off: a bare `new(a, b)` is the anonymous,
+/// best-effort, Normal-lane request the earlier struct-literal API
+/// produced.
 #[derive(Clone, Debug)]
 pub struct GemmRequest {
     pub id: u64,
@@ -43,6 +61,63 @@ pub struct GemmRequest {
     /// no depth satisfies downgrades the request to the exact
     /// classical path.
     pub error_budget: Option<f64>,
+    /// Tenant the request bills to (fair-share accounting and the
+    /// per-tenant latency gauges). None = anonymous.
+    pub tenant: Option<String>,
+    /// Admission lane.
+    pub priority: Priority,
+    /// Deadline from submission; a response later than this counts
+    /// against the deadline-missed gauge (and under a deadline-aware
+    /// batcher pulls the batch close earlier). None falls back to
+    /// [`AdmissionPolicy::default_deadline_s`], or best-effort.
+    pub deadline: Option<Duration>,
+}
+
+impl GemmRequest {
+    /// A · B with every serving knob at its default.
+    pub fn new(a: Matrix, b: Matrix) -> Self {
+        Self {
+            id: 0,
+            a,
+            b,
+            chain: None,
+            error_budget: None,
+            tenant: None,
+            priority: Priority::default(),
+            deadline: None,
+        }
+    }
+
+    pub fn id(mut self, id: u64) -> Self {
+        self.id = id;
+        self
+    }
+
+    /// Chain a third operand: (A·B)·C.
+    pub fn chain(mut self, c: Matrix) -> Self {
+        self.chain = Some(c);
+        self
+    }
+
+    pub fn error_budget(mut self, budget: f64) -> Self {
+        self.error_budget = Some(budget);
+        self
+    }
+
+    pub fn tenant(mut self, tenant: &str) -> Self {
+        self.tenant = Some(tenant.to_string());
+        self
+    }
+
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// The service's answer.
@@ -65,6 +140,29 @@ pub struct GemmResponse {
     /// Strassen execution report (depth, effective-vs-peak throughput,
     /// numerics); Some exactly when the route is Strassen.
     pub strassen: Option<StrassenReport>,
+    /// What admission control decided: queue class, shed/admitted, and
+    /// (for served deadline-carrying requests) the remaining slack.
+    pub admission: AdmissionReport,
+}
+
+impl GemmResponse {
+    /// The answer a shed request gets: an error result carrying the
+    /// admission verdict, no execution artifacts.
+    pub fn shed(id: u64, admission: AdmissionReport) -> Self {
+        let reason =
+            admission.shed.map_or("shed", |r| r.name());
+        Self {
+            id,
+            result: Err(format!("shed by admission control ({reason})")),
+            route: Route::Fallback,
+            host_seconds: 0.0,
+            queue_seconds: 0.0,
+            fpga_sim: None,
+            cluster: Vec::new(),
+            strassen: None,
+            admission,
+        }
+    }
 }
 
 /// Service configuration.
@@ -111,6 +209,10 @@ pub struct ServiceConfig {
     /// Bucket fallback/Strassen batches by blocking-padded shape
     /// instead of exact shape (see [`Batcher::with_bucketing`]).
     pub bucket_shapes: bool,
+    /// Admission control: ingress bound (shed instead of queueing
+    /// without limit), default deadline, and the latency target that
+    /// pulls batch closes earlier than the fixed window.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -128,12 +230,14 @@ impl Default for ServiceConfig {
             trace: false,
             strassen: StrassenConfig::default(),
             bucket_shapes: false,
+            admission: AdmissionPolicy::default(),
         }
     }
 }
 
 enum Ingress {
-    Job(Box<GemmRequest>, mpsc::Sender<GemmResponse>, Instant),
+    /// (request, reply channel, enqueue instant, queue depth at admit).
+    Job(Box<GemmRequest>, mpsc::Sender<GemmResponse>, Instant, usize),
     Shutdown,
 }
 
@@ -141,6 +245,10 @@ enum Ingress {
 pub struct GemmService {
     tx: mpsc::Sender<Ingress>,
     pub metrics: Arc<Metrics>,
+    /// Jobs admitted but not yet answered — the ingress bound
+    /// admission control sheds against.
+    inflight: Arc<AtomicU64>,
+    admission: AdmissionPolicy,
     /// Fleet size of the sharded route (pairs with
     /// [`Metrics::cluster_utilization`]).
     pub cluster_devices: usize,
@@ -168,11 +276,14 @@ impl GemmService {
         let m = Arc::clone(&metrics);
         let trace = if config.trace { Tracer::recording() } else { Tracer::off() };
         let t = trace.clone();
+        let inflight = Arc::new(AtomicU64::new(0));
+        let inf = Arc::clone(&inflight);
+        let admission = config.admission.clone();
         let worker = std::thread::Builder::new()
             .name("gemm-engine".into())
-            .spawn(move || Self::engine_loop(config, rx, m, t))
+            .spawn(move || Self::engine_loop(config, rx, m, t, inf))
             .expect("spawn engine thread");
-        Ok(Self { tx, metrics, cluster_devices, trace, worker: Some(worker) })
+        Ok(Self { tx, metrics, inflight, admission, cluster_devices, trace, worker: Some(worker) })
     }
 
     /// Fold the flight recorder's current critical path into the
@@ -204,16 +315,37 @@ impl GemmService {
     }
 
     /// Submit a job; returns the receiver for its response.
-    pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
+    ///
+    /// Admission happens here, at the door: when the in-flight count
+    /// sits at [`AdmissionPolicy::queue_capacity`], the request is
+    /// **shed** — a [`GemmResponse::shed`] answer lands on the
+    /// receiver immediately instead of the job queueing without bound.
+    pub fn submit(&self, mut req: GemmRequest) -> mpsc::Receiver<GemmResponse> {
         let (rtx, rrx) = mpsc::channel();
         Metrics::inc(&self.metrics.requests);
+        let depth = self.inflight.load(Ordering::Acquire) as usize;
+        if depth >= self.admission.queue_capacity {
+            Metrics::inc(&self.metrics.shed);
+            let tenant = req.tenant.as_deref().unwrap_or("default");
+            let report =
+                AdmissionReport::rejected(tenant, req.priority, ShedReason::QueueFull, depth);
+            let _ = rtx.send(GemmResponse::shed(req.id, report));
+            return rrx;
+        }
+        if req.deadline.is_none() {
+            req.deadline = self.admission.default_deadline_s.map(Duration::from_secs_f64);
+        }
+        Metrics::inc(&self.metrics.admitted);
+        self.inflight.fetch_add(1, Ordering::AcqRel);
         self.tx
-            .send(Ingress::Job(Box::new(req), rtx, Instant::now()))
+            .send(Ingress::Job(Box::new(req), rtx, Instant::now(), depth))
             .expect("engine thread alive");
         rrx
     }
 
-    /// Submit and wait.
+    /// Submit and wait. Under a saturated ingress this observes the
+    /// shed response like any other answer — it never blocks on a
+    /// request admission control already turned away.
     pub fn submit_sync(&self, req: GemmRequest) -> GemmResponse {
         self.submit(req).recv().expect("engine thread alive")
     }
@@ -223,6 +355,7 @@ impl GemmService {
         rx: mpsc::Receiver<Ingress>,
         metrics: Arc<Metrics>,
         trace: Tracer,
+        inflight: Arc<AtomicU64>,
     ) {
         // The engine (and its PJRT client) lives on this thread only.
         let mut engine = config
@@ -243,25 +376,30 @@ impl GemmService {
         let fleet =
             Fleet::homogeneous(config.cluster_devices.max(1) + config.hot_spares, "G")
                 .expect("design G in the fitted catalog");
-        let cluster = match config.cluster_topology.clone() {
-            Some(t) => ClusterSim::with_topology_and_spares(fleet, t, config.hot_spares),
-            None => ClusterSim::with_spares(fleet, config.hot_spares),
+        let mut builder = ClusterSim::builder(fleet)
+            .spares(config.hot_spares)
+            .placement(config.placement)
+            .watermark(config.scale_watermark)
+            .slo(config.slo)
+            .trace(trace);
+        if let Some(t) = config.cluster_topology.clone() {
+            builder = builder.topology(t);
         }
-        .with_placement(config.placement)
-        .with_watermark(config.scale_watermark)
-        .with_slo(config.slo)
-        .with_trace(trace);
-        let batcher = if config.bucket_shapes {
+        let cluster = builder.build();
+        let mut batcher = if config.bucket_shapes {
             // Bucket to the fleet design's blocking-padded extents.
             Batcher::with_bucketing(config.max_batch, cluster.fleet.devices[0].design.blocking)
         } else {
             Batcher::new(config.max_batch)
         };
+        if let Some(target) = config.admission.latency_target_s {
+            batcher = batcher.with_latency_target(target);
+        }
 
         loop {
             // Block for the first job, then drain the window.
             let first = match rx.recv() {
-                Ok(Ingress::Job(r, tx, t)) => (r, tx, t),
+                Ok(Ingress::Job(r, tx, t, d)) => (r, tx, t, d),
                 Ok(Ingress::Shutdown) | Err(_) => return,
             };
             let mut pending = vec![first];
@@ -271,31 +409,49 @@ impl GemmService {
             // pay zero window latency, loaded streams still coalesce.
             while pending.len() < config.max_batch {
                 match rx.try_recv() {
-                    Ok(Ingress::Job(r, tx, t)) => pending.push((r, tx, t)),
+                    Ok(Ingress::Job(r, tx, t, d)) => pending.push((r, tx, t, d)),
                     Ok(Ingress::Shutdown) | Err(mpsc::TryRecvError::Disconnected) => break,
                     Err(mpsc::TryRecvError::Empty) => break,
                 }
             }
             if pending.len() >= 2 {
-                let window_end = Instant::now() + config.batch_window;
+                // Deadline-aware close: the fixed window shrinks to
+                // whatever slack the oldest member has left against the
+                // latency target / its own deadline (Batcher::close_by
+                // on the oldest member's timeline).
+                let oldest = pending
+                    .iter()
+                    .min_by_key(|(_, _, t, _)| *t)
+                    .map(|(r, _, t, _)| (*t, r.deadline.map(|d| d.as_secs_f64())))
+                    .expect("pending non-empty");
+                let close_rel = batcher.close_by(
+                    0.0,
+                    config.batch_window.as_secs_f64(),
+                    0.0,
+                    oldest.1,
+                );
+                let window_end = oldest.0 + Duration::from_secs_f64(close_rel.max(0.0));
                 while pending.len() < config.max_batch {
                     let now = Instant::now();
                     if now >= window_end {
                         break;
                     }
                     match rx.recv_timeout(window_end - now) {
-                        Ok(Ingress::Job(r, tx, t)) => pending.push((r, tx, t)),
+                        Ok(Ingress::Job(r, tx, t, d)) => pending.push((r, tx, t, d)),
                         Ok(Ingress::Shutdown) => break,
                         Err(mpsc::RecvTimeoutError::Timeout) => break,
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
                 }
             }
+            // Priority lanes drain first within the cohort (stable, so
+            // arrival order holds inside a lane).
+            pending.sort_by_key(|(r, _, _, _)| r.priority.lane());
 
             // Group by route key and execute.
             let keyed: Vec<(String, _)> = pending
                 .into_iter()
-                .map(|(req, tx, t)| {
+                .map(|(req, tx, t, d)| {
                     // Key by the same routing decision execute_one makes.
                     let route = match &req.chain {
                         Some(c) => {
@@ -323,14 +479,16 @@ impl GemmService {
                             batcher.shape_key(req.a.rows, req.a.cols, req.b.cols)
                         ),
                     };
-                    (key, (req, tx, t))
+                    (key, (req, tx, t, d))
                 })
                 .collect();
             for batch in batcher.group(keyed) {
                 Metrics::inc(&metrics.batches);
-                for (req, tx, enqueued) in batch.items {
+                for (req, tx, enqueued, depth) in batch.items {
                     let queue_seconds = enqueued.elapsed().as_secs_f64();
                     let id = req.id;
+                    let tenant = req.tenant.clone();
+                    let lane = req.priority;
                     // One malformed job must not take the engine down:
                     // contain panics (e.g. shape assertions in the GEMM
                     // fallback) and answer with an error instead.
@@ -341,6 +499,7 @@ impl GemmService {
                             &cluster,
                             *req,
                             queue_seconds,
+                            depth,
                             &metrics,
                         )
                     }))
@@ -360,9 +519,15 @@ impl GemmService {
                             fpga_sim: None,
                             cluster: Vec::new(),
                             strassen: None,
+                            admission: AdmissionReport::admitted(
+                                tenant.as_deref().unwrap_or("default"),
+                                lane,
+                                depth,
+                            ),
                         }
                     });
                     let _ = tx.send(resp);
+                    inflight.fetch_sub(1, Ordering::AcqRel);
                 }
             }
         }
@@ -402,12 +567,14 @@ impl GemmService {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn execute_one(
         router: &Router,
         mut engine: Option<&mut crate::runtime::Engine>,
         cluster: &ClusterSim,
         req: GemmRequest,
         queue_seconds: f64,
+        admit_depth: usize,
         metrics: &Metrics,
     ) -> GemmResponse {
         let t0 = Instant::now();
@@ -507,11 +674,12 @@ impl GemmService {
         if result.is_err() {
             Metrics::inc(&metrics.errors);
         }
-        metrics.add_flops(flop_count(m as u64, n as u64, k as u64));
+        let mut req_flops = flop_count(m as u64, n as u64, k as u64);
         if let Some(chain_c) = &req.chain {
             // Second leg of the chain: (m × n)·(n × p).
-            metrics.add_flops(flop_count(m as u64, chain_c.cols as u64, n as u64));
+            req_flops += flop_count(m as u64, chain_c.cols as u64, n as u64);
         }
+        metrics.add_flops(req_flops);
 
         // FPGA timing on the routed design (chain = two passes). Sharded
         // requests carry the cluster report instead — a single-card
@@ -529,6 +697,23 @@ impl GemmService {
 
         let host_seconds = t0.elapsed().as_secs_f64();
         metrics.record_latency(host_seconds);
+        let tenant = req.tenant.as_deref().unwrap_or("default");
+        metrics.record_tenant_latency(tenant, host_seconds);
+        // Deadline accounting on the full queue+execute span. Goodput
+        // counts the FLOPs of answers that arrived in time (errors are
+        // not good work, whatever the clock says).
+        let slack = req.deadline.map(|d| d.as_secs_f64() - (queue_seconds + host_seconds));
+        let met = slack.is_none_or(|s| s >= 0.0);
+        if met {
+            Metrics::inc(&metrics.deadline_met);
+            if result.is_ok() {
+                Metrics::add(&metrics.goodput_flops, req_flops);
+            }
+        } else {
+            Metrics::inc(&metrics.deadline_missed);
+        }
+        let mut admission = AdmissionReport::admitted(tenant, req.priority, admit_depth);
+        admission.deadline_slack_s = slack;
         GemmResponse {
             id: req.id,
             result,
@@ -538,6 +723,7 @@ impl GemmService {
             fpga_sim,
             cluster: cluster_reports,
             strassen: strassen_report,
+            admission,
         }
     }
 }
@@ -570,7 +756,7 @@ mod tests {
         let a = Matrix::random(32, 16, 1);
         let b = Matrix::random(16, 24, 2);
         let want = crate::gemm::matmul(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 7, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(7));
         assert_eq!(resp.id, 7);
         assert_eq!(resp.route, Route::Fallback);
         let got = resp.result.unwrap();
@@ -584,7 +770,7 @@ mod tests {
         let b = Matrix::random(16, 16, 4);
         let c = Matrix::random(16, 16, 5);
         let want = crate::gemm::matmul(&crate::gemm::matmul(&a, &b), &c);
-        let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: Some(c), error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(1).chain(c));
         assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-4);
     }
 
@@ -593,7 +779,7 @@ mod tests {
         let svc = GemmService::start(no_artifact_config()).unwrap();
         let a = Matrix::random(512, 512, 6);
         let b = Matrix::random(512, 512, 7);
-        let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(2));
         let sim = resp.fpga_sim.expect("512-cube matches design H blocking");
         assert!(sim.gflops > 1000.0);
         assert!(sim.e_d > 0.3 && sim.e_d < 1.0);
@@ -607,7 +793,7 @@ mod tests {
         let a = Matrix::random(1025, 1025, 8);
         let b = Matrix::random(1025, 1025, 9);
         let want = matmul_blocked(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 3, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(3));
         assert_eq!(resp.route, Route::Sharded);
         assert_eq!(resp.cluster.len(), 1, "one report per sharded leg");
         let rep = &resp.cluster[0];
@@ -633,7 +819,7 @@ mod tests {
         let a = Matrix::random(1025, 1025, 21);
         let b = Matrix::random(1025, 1025, 22);
         let want = matmul_blocked(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 9, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(9));
         assert_eq!(resp.route, Route::Sharded);
         assert_eq!(resp.cluster[0].topology, "ring");
         assert_eq!(resp.result.unwrap().data, want.data);
@@ -662,7 +848,7 @@ mod tests {
         let a = Matrix::random(1025, 1025, 61);
         let b = Matrix::random(1025, 1025, 62);
         let want = matmul_blocked(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 11, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(11));
         assert_eq!(resp.route, Route::Sharded);
         let rep = &resp.cluster[0];
         assert_eq!(rep.devices, 5, "4 active + 1 wired spare");
@@ -695,7 +881,7 @@ mod tests {
         let a = Matrix::random(1025, 1025, 71);
         let b = Matrix::random(1025, 1025, 72);
         let want = matmul_blocked(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 12, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(12));
         assert_eq!(resp.route, Route::Sharded);
         let rep = &resp.cluster[0];
         assert!(rep.devices > 2, "the watermark must grow the fleet: {}", rep.devices);
@@ -722,8 +908,7 @@ mod tests {
             let a = Matrix::random(1025, 1025, 41);
             let b = Matrix::random(1025, 1025, 42);
             let want = matmul_blocked(&a, &b);
-            let resp =
-                svc.submit_sync(GemmRequest { id: 6, a, b, chain: None, error_budget: None });
+            let resp = svc.submit_sync(GemmRequest::new(a, b).id(6));
             assert_eq!(resp.route, Route::Sharded);
             assert_eq!(resp.result.unwrap().data, want.data);
             let snap = svc.metrics.snapshot();
@@ -742,7 +927,7 @@ mod tests {
         assert!(svc.trace.is_recording());
         let a = Matrix::random(1025, 1025, 81);
         let b = Matrix::random(1025, 1025, 82);
-        let resp = svc.submit_sync(GemmRequest { id: 13, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(13));
         assert_eq!(resp.route, Route::Sharded);
         let log = svc.trace.snapshot();
         assert!(log.spans.iter().any(|s| s.name.starts_with("shard r")), "compute spans");
@@ -759,9 +944,7 @@ mod tests {
         let svc = GemmService::start(no_artifact_config()).unwrap();
         let a = Matrix::random(32, 16, 31);
         let b = Matrix::random(16, 24, 32);
-        svc.submit_sync(GemmRequest { id: 20, a, b, chain: None, error_budget: None })
-            .result
-            .unwrap();
+        svc.submit_sync(GemmRequest::new(a, b).id(20)).result.unwrap();
         let text = svc.prometheus_text();
         assert!(text.contains("systo3d_requests_total 1\n"));
         assert!(text.contains("systo3d_fallbacks_total 1\n"));
@@ -785,7 +968,7 @@ mod tests {
         let a = Matrix::random(1025, 1025, 91);
         let b = Matrix::random(1025, 1025, 92);
         let want = matmul_blocked(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 14, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(14));
         assert_eq!(resp.route, Route::Sharded);
         assert_eq!(resp.result.unwrap().data, want.data);
     }
@@ -803,7 +986,7 @@ mod tests {
         let a = Matrix::random(96, 64, 11);
         let b = Matrix::random(64, 80, 12);
         let want = matmul_blocked(&a, &b);
-        let resp = svc.submit_sync(GemmRequest { id: 4, a, b, chain: None, error_budget: None });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(4));
         assert_eq!(resp.route, Route::Strassen);
         assert!(resp.fpga_sim.is_none(), "Strassen carries its own report");
         let rep = resp.strassen.expect("Strassen report");
@@ -832,13 +1015,7 @@ mod tests {
         let b = Matrix::random(64, 64, 14);
         let want = matmul_blocked(&a, &b);
         // A budget no recursion depth can promise: exact classical path.
-        let resp = svc.submit_sync(GemmRequest {
-            id: 5,
-            a,
-            b,
-            chain: None,
-            error_budget: Some(1e-12),
-        });
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(5).error_budget(1e-12));
         assert_eq!(resp.route, Route::Fallback);
         assert!(resp.strassen.is_none());
         // Bit-exact: the downgrade ran the dense blocked GEMM.
@@ -860,13 +1037,7 @@ mod tests {
             let a = Matrix::random(*m, *k, i as u64);
             let b = Matrix::random(*k, *n, 100 + i as u64);
             let want = matmul_blocked(&a, &b);
-            rxs.push((want, svc.submit(GemmRequest {
-                id: i as u64,
-                a,
-                b,
-                chain: None,
-                error_budget: None,
-            })));
+            rxs.push((want, svc.submit(GemmRequest::new(a, b).id(i as u64))));
         }
         for (want, rx) in rxs {
             let resp = rx.recv().unwrap();
@@ -882,7 +1053,7 @@ mod tests {
         for i in 0..20 {
             let a = Matrix::random(16, 16, i);
             let b = Matrix::random(16, 16, i + 100);
-            rxs.push((i, svc.submit(GemmRequest { id: i, a, b, chain: None, error_budget: None })));
+            rxs.push((i, svc.submit(GemmRequest::new(a, b).id(i))));
         }
         for (i, rx) in rxs {
             let resp = rx.recv().unwrap();
@@ -893,5 +1064,69 @@ mod tests {
         assert_eq!(snap.requests, 20);
         assert!(snap.batches >= 1);
         assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn saturated_ingress_sheds_instead_of_blocking() {
+        // Regression: submit_sync on a saturated ingress used to block
+        // forever waiting for capacity that never came. With the bound
+        // at 0 every request sheds, and the call must return.
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            admission: AdmissionPolicy { queue_capacity: 0, ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(16, 16, 1);
+        let b = Matrix::random(16, 16, 2);
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(41).tenant("gold"));
+        assert!(resp.result.is_err());
+        assert_eq!(resp.admission.shed, Some(ShedReason::QueueFull));
+        assert!(!resp.admission.is_admitted());
+        assert_eq!(resp.admission.tenant, "gold");
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.admitted, 0);
+    }
+
+    #[test]
+    fn admission_report_rides_served_responses() {
+        let svc = GemmService::start(no_artifact_config()).unwrap();
+        let a = Matrix::random(16, 16, 6);
+        let b = Matrix::random(16, 16, 7);
+        let resp = svc.submit_sync(
+            GemmRequest::new(a, b)
+                .id(42)
+                .tenant("gold")
+                .priority(Priority::High)
+                .deadline(Duration::from_secs(30)),
+        );
+        assert!(resp.result.is_ok());
+        assert!(resp.admission.is_admitted());
+        assert_eq!(resp.admission.tenant, "gold");
+        assert_eq!(resp.admission.lane, Priority::High);
+        let slack = resp.admission.deadline_slack_s.expect("deadline was set");
+        assert!(slack > 0.0, "a 30 s deadline on a 16-cube cannot miss: {slack}");
+        let snap = svc.metrics.snapshot();
+        assert_eq!(snap.admitted, 1);
+        assert_eq!(snap.deadline_met, 1);
+        assert_eq!(snap.deadline_missed, 0);
+        assert!(snap.goodput_flops > 0);
+        assert_eq!(snap.tenant_requests[0], 1, "tenant gold claimed the first gauge slot");
+    }
+
+    #[test]
+    fn policy_default_deadline_applies_when_unset() {
+        let svc = GemmService::start(ServiceConfig {
+            artifact_dir: None,
+            admission: AdmissionPolicy { default_deadline_s: Some(30.0), ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap();
+        let a = Matrix::random(16, 16, 8);
+        let b = Matrix::random(16, 16, 9);
+        let resp = svc.submit_sync(GemmRequest::new(a, b).id(43));
+        assert!(resp.result.is_ok());
+        assert!(resp.admission.deadline_slack_s.is_some(), "policy default deadline applied");
     }
 }

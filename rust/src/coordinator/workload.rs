@@ -1,10 +1,14 @@
 //! Synthetic serving workloads: deterministic request traces with
-//! Poisson-ish arrivals and a configurable shape mix — the
+//! Poisson / bursty / diurnal arrivals, a configurable shape mix, and
+//! a multi-tenant overlay (weights, priorities, deadlines) — the
 //! inference-style GEMM streams the paper's introduction motivates.
 //!
-//! Used by the end-to-end example, the serve bench and the backpressure
-//! tests; deterministic from the seed so every run is reproducible.
+//! Used by the end-to-end example, the serve bench, the open-loop
+//! admission harness ([`crate::coordinator::serve`]) and the
+//! backpressure tests; deterministic from the seed so every run is
+//! reproducible.
 
+use crate::coordinator::admission::Priority;
 use crate::util::rng::Xoshiro256;
 
 /// One entry of a request trace.
@@ -19,6 +23,12 @@ pub struct TraceEntry {
     pub n: usize,
     /// Chained (A·B)·C request.
     pub chained: bool,
+    /// Index into the generator's tenant table (0 when single-tenant).
+    pub tenant: usize,
+    /// Priority lane the issuing tenant rides.
+    pub priority: Priority,
+    /// Deadline, seconds *from arrival*; None = no deadline.
+    pub deadline_s: Option<f64>,
 }
 
 /// Shape mix entry: (m, k, n, weight, chained).
@@ -31,6 +41,60 @@ pub struct ShapeMix {
     pub chained: bool,
 }
 
+/// One tenant of the serving mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// DRR fair-share weight.
+    pub weight: u32,
+    pub priority: Priority,
+    /// Deadline stamped on this tenant's requests, seconds from
+    /// arrival; None = best-effort.
+    pub deadline_s: Option<f64>,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, weight: u32, priority: Priority, deadline_s: Option<f64>) -> Self {
+        Self { name: name.into(), weight, priority, deadline_s }
+    }
+}
+
+/// Arrival process shaping the instantaneous rate around the mean.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalModel {
+    /// Memoryless exponential gaps at the base rate.
+    Poisson,
+    /// On/off modulated Poisson: `factor`× the base rate for `on_s`
+    /// seconds, then base/`factor` for `off_s` — the flash-crowd shape
+    /// that stresses admission control hardest.
+    Bursty { factor: f64, on_s: f64, off_s: f64 },
+    /// Sinusoidal day-cycle: rate(t) = base · (1 + depth·sin(2πt/T)).
+    /// `depth` in [0, 1); the trough keeps the rate positive.
+    Diurnal { period_s: f64, depth: f64 },
+}
+
+impl ArrivalModel {
+    /// Instantaneous rate at `t` for a base rate.
+    pub fn rate_at(&self, base_hz: f64, t: f64) -> f64 {
+        match *self {
+            ArrivalModel::Poisson => base_hz,
+            ArrivalModel::Bursty { factor, on_s, off_s } => {
+                assert!(factor >= 1.0 && on_s > 0.0 && off_s > 0.0, "bursty params");
+                let phase = t % (on_s + off_s);
+                if phase < on_s {
+                    base_hz * factor
+                } else {
+                    base_hz / factor
+                }
+            }
+            ArrivalModel::Diurnal { period_s, depth } => {
+                assert!(period_s > 0.0 && (0.0..1.0).contains(&depth), "diurnal params");
+                base_hz * (1.0 + depth * (std::f64::consts::TAU * t / period_s).sin())
+            }
+        }
+    }
+}
+
 /// Trace generator.
 #[derive(Clone, Debug)]
 pub struct WorkloadGen {
@@ -38,6 +102,9 @@ pub struct WorkloadGen {
     /// Mean arrival rate (requests/second).
     pub rate_hz: f64,
     pub mix: Vec<ShapeMix>,
+    pub arrival: ArrivalModel,
+    /// Tenant table; empty = one anonymous best-effort tenant.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl WorkloadGen {
@@ -54,21 +121,52 @@ impl WorkloadGen {
                 ShapeMix { m: 256, k: 256, n: 256, weight: 1, chained: true },
                 ShapeMix { m: 96, k: 96, n: 96, weight: 1, chained: false },
             ],
+            arrival: ArrivalModel::Poisson,
+            tenants: Vec::new(),
         }
     }
 
-    /// Generate `count` requests with exponential inter-arrival gaps.
+    /// The multi-tenant overload mix the serving demos run: three
+    /// tenants weighted 3:2:1 with tiered priorities and deadlines,
+    /// over a single batched shape so the fair-share arithmetic is
+    /// legible.
+    pub fn multi_tenant(seed: u64, rate_hz: f64) -> Self {
+        Self {
+            seed,
+            rate_hz,
+            mix: vec![ShapeMix { m: 256, k: 256, n: 256, weight: 1, chained: false }],
+            arrival: ArrivalModel::Poisson,
+            tenants: vec![
+                TenantSpec::new("gold", 3, Priority::High, Some(0.05)),
+                TenantSpec::new("silver", 2, Priority::Normal, Some(0.10)),
+                TenantSpec::new("bronze", 1, Priority::Low, Some(0.20)),
+            ],
+        }
+    }
+
+    /// Same generator with a different arrival process.
+    pub fn with_arrival(mut self, arrival: ArrivalModel) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Generate `count` requests with (rate-modulated) exponential
+    /// inter-arrival gaps.
     pub fn trace(&self, count: u64) -> Vec<TraceEntry> {
         assert!(self.rate_hz > 0.0, "rate must be positive");
         let total_weight: u32 = self.mix.iter().map(|m| m.weight).sum();
         assert!(total_weight > 0, "mix must have weight");
+        let tenant_weight: u32 = self.tenants.iter().map(|t| t.weight.max(1)).sum();
         let mut rng = Xoshiro256::seed_from_u64(self.seed);
         let mut t = 0.0f64;
         let mut out = Vec::with_capacity(count as usize);
         for id in 0..count {
-            // Exponential inter-arrival: -ln(U)/rate.
+            // Exponential inter-arrival: -ln(U)/rate(t), the thinning-
+            // free piecewise approximation (rate sampled at the gap's
+            // start — exact for Poisson, faithful at workload scales
+            // for the modulated processes).
             let u = rng.next_f64().max(1e-12);
-            t += -u.ln() / self.rate_hz;
+            t += -u.ln() / self.arrival.rate_at(self.rate_hz, t);
             // Weighted shape draw.
             let mut pick = rng.next_below(total_weight as u64) as u32;
             let mut chosen = self.mix[0];
@@ -79,6 +177,26 @@ impl WorkloadGen {
                 }
                 pick -= m.weight;
             }
+            // Weighted tenant draw (no RNG spent when single-tenant,
+            // so single-tenant traces are stable across this change).
+            let tenant = if self.tenants.len() > 1 {
+                let mut pick = rng.next_below(tenant_weight as u64) as u32;
+                let mut idx = 0;
+                for (i, spec) in self.tenants.iter().enumerate() {
+                    if pick < spec.weight.max(1) {
+                        idx = i;
+                        break;
+                    }
+                    pick -= spec.weight.max(1);
+                }
+                idx
+            } else {
+                0
+            };
+            let (priority, deadline_s) = self
+                .tenants
+                .get(tenant)
+                .map_or((Priority::Normal, None), |s| (s.priority, s.deadline_s));
             out.push(TraceEntry {
                 id,
                 arrival_s: t,
@@ -86,6 +204,9 @@ impl WorkloadGen {
                 k: chosen.k,
                 n: chosen.n,
                 chained: chosen.chained,
+                tenant,
+                priority,
+                deadline_s,
             });
         }
         out
@@ -163,6 +284,69 @@ mod tests {
     #[test]
     #[should_panic(expected = "rate must be positive")]
     fn zero_rate_rejected() {
-        WorkloadGen { seed: 1, rate_hz: 0.0, mix: vec![] }.trace(1);
+        WorkloadGen {
+            seed: 1,
+            rate_hz: 0.0,
+            mix: vec![],
+            arrival: ArrivalModel::Poisson,
+            tenants: vec![],
+        }
+        .trace(1);
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster() {
+        let base = WorkloadGen::serving_default(11, 100.0);
+        let bursty = base
+            .clone()
+            .with_arrival(ArrivalModel::Bursty { factor: 8.0, on_s: 0.5, off_s: 2.0 });
+        let trace = bursty.trace(2000);
+        assert_eq!(trace, bursty.trace(2000), "deterministic");
+        // Coefficient of variation of the gaps must exceed the Poisson
+        // baseline's (CV ≈ 1): bursts pack tiny gaps, off-phases huge.
+        let cv = |t: &[TraceEntry]| {
+            let gaps: Vec<f64> = t.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / mean
+        };
+        let cv_poisson = cv(&base.trace(2000));
+        let cv_bursty = cv(&trace);
+        assert!(
+            cv_bursty > cv_poisson * 1.5,
+            "bursty CV {cv_bursty:.2} vs poisson {cv_poisson:.2}"
+        );
+    }
+
+    #[test]
+    fn diurnal_rate_swings_through_the_cycle() {
+        let m = ArrivalModel::Diurnal { period_s: 100.0, depth: 0.8 };
+        assert!((m.rate_at(10.0, 25.0) - 18.0).abs() < 1e-9, "peak at T/4");
+        assert!((m.rate_at(10.0, 75.0) - 2.0).abs() < 1e-9, "trough at 3T/4");
+        let g = WorkloadGen::serving_default(5, 50.0).with_arrival(m);
+        let trace = g.trace(3000);
+        // Peak half-cycles must hold more arrivals than troughs.
+        let period = 100.0;
+        let peak = trace.iter().filter(|e| (e.arrival_s % period) < period / 2.0).count();
+        let trough = trace.len() - peak;
+        assert!(peak as f64 > 1.5 * trough as f64, "peak {peak} trough {trough}");
+    }
+
+    #[test]
+    fn tenants_draw_by_weight_with_tiered_deadlines() {
+        let g = WorkloadGen::multi_tenant(17, 500.0);
+        let trace = g.trace(6000);
+        assert_eq!(trace, g.trace(6000), "deterministic");
+        let count = |t: usize| trace.iter().filter(|e| e.tenant == t).count() as f64;
+        let (gold, silver, bronze) = (count(0), count(1), count(2));
+        assert!((gold / bronze - 3.0).abs() < 0.5, "3:1 ratio, got {}", gold / bronze);
+        assert!((silver / bronze - 2.0).abs() < 0.4, "2:1 ratio, got {}", silver / bronze);
+        let first_gold = trace.iter().find(|e| e.tenant == 0).unwrap();
+        assert_eq!(first_gold.priority, Priority::High);
+        assert_eq!(first_gold.deadline_s, Some(0.05));
+        // Single-tenant traces stay anonymous / best-effort.
+        let single = WorkloadGen::serving_default(17, 500.0).trace(10);
+        assert!(single.iter().all(|e| e.tenant == 0 && e.deadline_s.is_none()));
     }
 }

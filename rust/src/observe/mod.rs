@@ -295,6 +295,11 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
         s.post_grow_placed_hop_bytes,
     );
     counter("strassen_jobs_total", "requests served by the Strassen route", s.strassen_jobs);
+    counter("admitted_total", "requests admitted by admission control", s.admitted);
+    counter("shed_total", "requests shed by admission control", s.shed);
+    counter("deadline_met_total", "served requests that met their deadline", s.deadline_met);
+    counter("deadline_missed_total", "served requests past their deadline", s.deadline_missed);
+    counter("goodput_flops_total", "FLOPs of deadline-met work", s.goodput_flops);
     counter(
         "strassen_eff_vs_peak_ppm_total",
         "accumulated effective-vs-peak ratio (ppm)",
@@ -318,6 +323,26 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
             .iter()
             .zip(s.critical_bucket_us)
             .map(|(bucket, us)| (format!("{{bucket=\"{bucket}\"}}"), us))
+            .collect(),
+    ));
+    families.push((
+        "tenant_requests_total",
+        "counter",
+        "requests per tenant gauge slot",
+        s.tenant_requests
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| (format!("{{slot=\"{i}\"}}"), n))
+            .collect(),
+    ));
+    families.push((
+        "tenant_p99_us",
+        "gauge",
+        "per-tenant-slot latency p99 (us, 0 when unsampled)",
+        s.tenant_p99_us
+            .iter()
+            .enumerate()
+            .map(|(i, &us)| (format!("{{slot=\"{i}\"}}"), us))
             .collect(),
     ));
     let mut gauge = |name: &'static str, help: &'static str, value: u64| {
@@ -382,6 +407,13 @@ pub fn json_snapshot(s: &MetricsSnapshot) -> String {
         ("latency_p999_us", s.latency_p999_us.to_string()),
         ("latency_count", s.latency_count.to_string()),
         ("critical_bucket_us", arr(&s.critical_bucket_us)),
+        ("admitted", s.admitted.to_string()),
+        ("shed", s.shed.to_string()),
+        ("deadline_met", s.deadline_met.to_string()),
+        ("deadline_missed", s.deadline_missed.to_string()),
+        ("goodput_flops", s.goodput_flops.to_string()),
+        ("tenant_requests", arr(&s.tenant_requests)),
+        ("tenant_p99_us", arr(&s.tenant_p99_us)),
     ];
     let inner: Vec<String> =
         fields.into_iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
@@ -474,6 +506,33 @@ mod tests {
         assert!(json.contains("\"strassen_depths\":[0,0,0,0]"));
         assert!(json.contains("\"latency_count\":1"));
         assert_eq!(json.matches("\"latency_p99_us\":").count(), 1);
+    }
+
+    #[test]
+    fn exposition_carries_the_serving_gauges() {
+        let m = Metrics::new();
+        Metrics::add(&m.admitted, 9);
+        Metrics::add(&m.shed, 1);
+        Metrics::add(&m.deadline_met, 8);
+        Metrics::inc(&m.deadline_missed);
+        Metrics::add(&m.goodput_flops, 777);
+        m.record_tenant_latency("gold", 0.003);
+        m.record_tenant_latency("bronze", 0.030);
+        let s = m.snapshot();
+        let text = prometheus_text(&s);
+        assert!(text.contains("systo3d_admitted_total 9\n"));
+        assert!(text.contains("systo3d_shed_total 1\n"));
+        assert!(text.contains("systo3d_deadline_met_total 8\n"));
+        assert!(text.contains("systo3d_deadline_missed_total 1\n"));
+        assert!(text.contains("systo3d_goodput_flops_total 777\n"));
+        assert!(text.contains("systo3d_tenant_requests_total{slot=\"0\"} 1\n"));
+        assert!(text.contains("systo3d_tenant_requests_total{slot=\"2\"} 0\n"));
+        assert!(text.contains("systo3d_tenant_p99_us{slot=\"1\"}"));
+        let json = json_snapshot(&s);
+        assert!(json.contains("\"admitted\":9"));
+        assert!(json.contains("\"shed\":1"));
+        assert!(json.contains("\"goodput_flops\":777"));
+        assert!(json.contains("\"tenant_requests\":[1,1,0,0]"));
     }
 
     #[test]

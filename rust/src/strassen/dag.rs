@@ -272,10 +272,10 @@ mod tests {
             controller_efficiency: 0.97,
         };
         let dag = TaskDag::build(64, 64, 64, 1);
-        let plain = ClusterSim::new(Fleet::uniform(7, "mini", mini));
+        let plain = ClusterSim::builder(Fleet::uniform(7, "mini", mini)).build();
         let (r0, t0) = dag.fleet_seconds(&plain).unwrap();
         let traced =
-            ClusterSim::new(Fleet::uniform(7, "mini", mini)).with_trace(Tracer::recording());
+            ClusterSim::builder(Fleet::uniform(7, "mini", mini)).trace(Tracer::recording()).build();
         let (r1, t1) = dag.fleet_seconds(&traced).unwrap();
         // The recorder is an observer: bit-identical result.
         assert_eq!(r0.makespan_seconds.to_bits(), r1.makespan_seconds.to_bits());
@@ -306,7 +306,7 @@ mod tests {
         };
         let dag = TaskDag::build(64, 64, 64, 1);
         let serial = dag.serial_seconds(&mini);
-        let sim = ClusterSim::new(Fleet::uniform(7, "mini", mini));
+        let sim = ClusterSim::builder(Fleet::uniform(7, "mini", mini)).build();
         let (report, total) = dag.fleet_seconds(&sim).unwrap();
         assert_eq!(report.shards, 7);
         assert!(total > 0.0);

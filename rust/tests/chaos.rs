@@ -47,12 +47,11 @@ fn scenarios() -> Vec<ClusterSim> {
     [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)]
         .into_iter()
         .map(|topology| {
-            ClusterSim::with_topology_and_spares(
-                Fleet::uniform(10, "mini", mini_design()),
-                topology,
-                2,
-            )
-            .with_watermark(Some(0.75))
+            ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
+                .topology(topology)
+                .spares(2)
+                .watermark(Some(0.75))
+                .build()
         })
         .collect()
 }
@@ -134,24 +133,22 @@ fn chaos_traces_replay_bit_identically() {
     let plan = chaos_plan();
     for topology in [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)] {
         let name = topology.name();
-        let horizon = ClusterSim::with_topology_and_spares(
-            Fleet::uniform(10, "mini", mini_design()),
-            topology.clone(),
-            2,
-        )
-        .with_watermark(Some(0.75))
-        .simulate(&plan)
-        .makespan_seconds;
+        let horizon = ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
+            .topology(topology.clone())
+            .spares(2)
+            .watermark(Some(0.75))
+            .build()
+            .simulate(&plan)
+            .makespan_seconds;
         for seed in 0..seeds().min(8) {
             let faults = FaultPlan::seeded(seed, 10, horizon);
             let run = || {
-                let sim = ClusterSim::with_topology_and_spares(
-                    Fleet::uniform(10, "mini", mini_design()),
-                    topology.clone(),
-                    2,
-                )
-                .with_watermark(Some(0.75))
-                .with_trace(Tracer::recording());
+                let sim = ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
+                    .topology(topology.clone())
+                    .spares(2)
+                    .watermark(Some(0.75))
+                    .trace(Tracer::recording())
+                    .build();
                 let out = sim.simulate_elastic(&plan, &faults).unwrap();
                 (chrome_trace_json(&sim.trace.snapshot()), out.schedule.makespan_seconds)
             };

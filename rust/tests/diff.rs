@@ -28,9 +28,12 @@ fn mini_design() -> OffchipDesign {
 /// The chaos scenario shape the trace suite uses: 8 active cards, 2
 /// hot spares, aggressive growth watermark.
 fn sim(topology: Topology, tracer: Tracer) -> ClusterSim {
-    ClusterSim::with_topology_and_spares(Fleet::uniform(10, "mini", mini_design()), topology, 2)
-        .with_watermark(Some(0.75))
-        .with_trace(tracer)
+    ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
+        .topology(topology)
+        .spares(2)
+        .watermark(Some(0.75))
+        .trace(tracer)
+        .build()
 }
 
 fn plan96() -> PartitionPlan {
@@ -99,8 +102,10 @@ fn slow_link_regression_is_blamed_on_the_degraded_cable() {
         PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 8192, 8192, 8192)
             .unwrap();
     let run = |faults: &FaultPlan| -> TraceLog {
-        let s = ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), Topology::ring(8))
-            .with_trace(Tracer::recording());
+        let s = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap())
+            .topology(Topology::ring(8))
+            .trace(Tracer::recording())
+            .build();
         s.simulate_elastic(&plan, faults).unwrap();
         s.trace.snapshot()
     };

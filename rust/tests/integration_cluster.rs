@@ -60,7 +60,7 @@ fn cluster_functional_bit_exact_over_random_fleets() {
         let seed = g.u64(0, u64::MAX / 2);
         let a = Matrix::random(m as usize, k as usize, seed);
         let b = Matrix::random(k as usize, n as usize, seed + 1);
-        let sim = ClusterSim::new(Fleet::uniform(fleet_n, "mini", design));
+        let sim = ClusterSim::builder(Fleet::uniform(fleet_n, "mini", design)).build();
         let plan = sim.auto_plan(m, k, n).expect("plan");
         let (report, c) = sim.simulate_functional(&plan, &a, &b);
         assert!(report.makespan_seconds > 0.0);
@@ -73,10 +73,10 @@ fn cluster_functional_bit_exact_over_random_fleets() {
 #[test]
 fn n2_speedup_and_utilization() {
     let d = 21504u64;
-    let sim1 = ClusterSim::new(Fleet::homogeneous(1, "G").unwrap());
+    let sim1 = ClusterSim::builder(Fleet::homogeneous(1, "G").unwrap()).build();
     let t1 = sim1.plan_and_report(d, d, d).unwrap().1.makespan_seconds;
 
-    let sim2 = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+    let sim2 = ClusterSim::builder(Fleet::homogeneous(2, "G").unwrap()).build();
     let (_, r2) = sim2.plan_and_report(d, d, d).unwrap();
     let speedup = t1 / r2.makespan_seconds;
     assert!(speedup > 1.8, "N=2 speedup {speedup:.2}");
@@ -95,7 +95,7 @@ fn throughput_monotone_to_n8() {
     let d = 21504u64;
     let mut last = 0.0;
     for n in [1usize, 2, 4, 8] {
-        let sim = ClusterSim::new(Fleet::homogeneous(n, "G").unwrap());
+        let sim = ClusterSim::builder(Fleet::homogeneous(n, "G").unwrap()).build();
         let (_, r) = sim.plan_and_report(d, d, d).unwrap();
         assert!(
             r.effective_gflops > last,
@@ -122,7 +122,7 @@ fn summa25d_communication_advantage() {
         row.total_bytes_moved()
     );
     // And it pays off end to end: lower makespan on the same fleet.
-    let sim = ClusterSim::new(Fleet::homogeneous(8, "G").unwrap());
+    let sim = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap()).build();
     let t_row = sim.simulate(&row).makespan_seconds;
     let t_summa = sim.simulate(&summa).makespan_seconds;
     assert!(t_summa < t_row, "2.5D {t_summa} vs 1D {t_row}");
@@ -133,7 +133,7 @@ fn summa25d_communication_advantage() {
 #[test]
 fn mixed_fleet_work_stealing() {
     let d = 21504u64;
-    let sim = ClusterSim::new(Fleet::mixed_table1(4));
+    let sim = ClusterSim::builder(Fleet::mixed_table1(4)).build();
     // Force many more shards than devices so stealing has material.
     let plan = PartitionPlan::new(PartitionStrategy::Summa25D { p: 4, q: 2, c: 2 }, d, d, d)
         .unwrap();

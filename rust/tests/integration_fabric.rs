@@ -111,9 +111,12 @@ fn torus_beats_ring_for_25d_at_n16() {
     let d = 21504u64;
     let plan = PartitionPlan::new(PartitionStrategy::auto_summa25d(16), d, d, d).unwrap();
     let fleet = Fleet::homogeneous(16, "G").unwrap();
-    let ring = ClusterSim::with_topology(fleet.clone(), Topology::ring(16)).simulate(&plan);
+    let ring = ClusterSim::builder(fleet.clone())
+        .topology(Topology::ring(16))
+        .build()
+        .simulate(&plan);
     let torus =
-        ClusterSim::with_topology(fleet, Topology::torus2d(4, 4)).simulate(&plan);
+        ClusterSim::builder(fleet).topology(Topology::torus2d(4, 4)).build().simulate(&plan);
     assert!(
         torus.makespan_seconds < ring.makespan_seconds,
         "torus {} vs ring {}",
@@ -141,7 +144,7 @@ fn schedules_deterministic_under_placement_permutations() {
     assert_eq!(s1.evaluations, s2.evaluations);
 
     let placed = s1.placement.apply_to(&plan);
-    let sim = ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), topology);
+    let sim = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap()).topology(topology).build();
     let a = sim.simulate(&placed);
     let b = sim.simulate(&placed);
     assert_eq!(a.makespan_seconds.to_bits(), b.makespan_seconds.to_bits());
@@ -181,7 +184,7 @@ fn functional_results_independent_of_topology() {
     let b = Matrix::random(k, n, 8);
     let dense = matmul_blocked(&a, &b);
     for topology in [Topology::ring(6), Topology::fat_tree(6), Topology::full_mesh(6)] {
-        let sim = ClusterSim::with_topology(Fleet::uniform(6, "mini", design), topology);
+        let sim = ClusterSim::builder(Fleet::uniform(6, "mini", design)).topology(topology).build();
         let plan = sim.auto_plan(m as u64, k as u64, n as u64).expect("plan");
         let (report, c) = sim.simulate_functional(&plan, &a, &b);
         assert!(report.makespan_seconds > 0.0);

@@ -72,7 +72,7 @@ fn service_survives_bad_artifact_dir() {
     .unwrap();
     let a = Matrix::random(8, 8, 1);
     let b = Matrix::random(8, 8, 2);
-    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
+    let resp = svc.submit_sync(GemmRequest::new(a, b).id(1));
     assert_eq!(resp.route, Route::Fallback);
     assert!(resp.result.is_ok());
 }
@@ -88,7 +88,7 @@ fn service_shutdown_on_drop_is_clean() {
     .unwrap();
     let a = Matrix::random(4, 4, 1);
     let b = Matrix::random(4, 4, 2);
-    let _ = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
+    let _ = svc.submit_sync(GemmRequest::new(a, b).id(1));
     drop(svc); // must join the engine thread without hanging
 }
 
@@ -105,14 +105,14 @@ fn mismatched_request_shapes_contained() {
     .unwrap();
     let a = Matrix::random(8, 4, 1);
     let b = Matrix::random(8, 8, 2); // 4 != 8: invalid
-    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
+    let resp = svc.submit_sync(GemmRequest::new(a, b).id(1));
     assert!(resp.result.is_err(), "{resp:?}");
 
     // The service is still alive and correct.
     let a = Matrix::random(8, 8, 3);
     let b = Matrix::random(8, 8, 4);
     let want = systo3d::gemm::matmul(&a, &b);
-    let resp = svc.submit_sync(GemmRequest { id: 2, a, b, chain: None, error_budget: None });
+    let resp = svc.submit_sync(GemmRequest::new(a, b).id(2));
     assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-5);
     assert_eq!(svc.metrics.snapshot().errors, 1);
 }
@@ -125,7 +125,7 @@ fn mismatched_request_shapes_contained() {
 fn kill_one_card_shards_requeue_on_survivors() {
     use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
     let d = 21504u64;
-    let sim = ClusterSim::new(Fleet::homogeneous(4, "G").unwrap());
+    let sim = ClusterSim::builder(Fleet::homogeneous(4, "G").unwrap()).build();
     let plan =
         PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, d, d, d).unwrap();
     let healthy = sim.simulate(&plan);
@@ -359,7 +359,7 @@ fn two_simultaneous_deaths_heal_then_drain_deterministically() {
 #[test]
 fn dead_card_from_start_never_works() {
     use systo3d::cluster::{ClusterSim, Fleet, PartitionPlan, PartitionStrategy};
-    let sim = ClusterSim::new(Fleet::homogeneous(2, "G").unwrap());
+    let sim = ClusterSim::builder(Fleet::homogeneous(2, "G").unwrap()).build();
     let plan =
         PartitionPlan::new(PartitionStrategy::Row1D { devices: 2 }, 8192, 8192, 8192).unwrap();
     let r = sim.simulate_with_failures(&plan, &[Some(0.0), None]).unwrap();

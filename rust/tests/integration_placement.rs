@@ -153,7 +153,7 @@ fn placed_plan_survives_card_death() {
     let topology = Topology::ring(8);
     let rep = optimize(&plan, &topology, PlacementStrategy::default());
     let placed = rep.placement.apply_to(&plan);
-    let sim = ClusterSim::with_topology(Fleet::homogeneous(8, "G").unwrap(), topology);
+    let sim = ClusterSim::builder(Fleet::homogeneous(8, "G").unwrap()).topology(topology).build();
     let healthy = sim.simulate(&placed);
     // Kill one card just after its first DMA launches, so its shard is
     // guaranteed in flight and must retry on a survivor.

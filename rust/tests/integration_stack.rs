@@ -128,20 +128,14 @@ fn coordinator_fallback_end_to_end() {
     let b = Matrix::random(32, 32, 2);
     let c = Matrix::random(32, 32, 3);
     let want = matmul(&matmul(&a, &b), &c);
-    let resp = svc.submit_sync(GemmRequest {
-        id: 9,
-        a: a.clone(),
-        b: b.clone(),
-        chain: Some(c),
-        error_budget: None,
-    });
+    let resp = svc.submit_sync(GemmRequest::new(a.clone(), b.clone()).id(9).chain(c));
     assert_eq!(resp.route, Route::Fallback);
     assert!(resp.result.unwrap().rel_fro_error(&want) < 1e-4);
 
     // A conforming 512³ job carries an FPGA sim report.
     let a = Matrix::random(512, 512, 4);
     let b = Matrix::random(512, 512, 5);
-    let resp = svc.submit_sync(GemmRequest { id: 10, a, b, chain: None, error_budget: None });
+    let resp = svc.submit_sync(GemmRequest::new(a, b).id(10));
     let sim = resp.fpga_sim.expect("512³ conforms to the d1=512 designs");
     // Paper Table V at d2=512: ~1500 GFLOPS, e_D ~0.46.
     assert!(sim.gflops > 1200.0 && sim.gflops < 2000.0, "{}", sim.gflops);

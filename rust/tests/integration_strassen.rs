@@ -118,7 +118,7 @@ fn strassen_composes_with_the_cluster_scheduler() {
     let dag = TaskDag::build(21504, 21504, 21504, 1);
     assert_eq!(dag.leaves.len(), 7);
     let serial = dag.serial_seconds(&design_g());
-    let sim = ClusterSim::new(Fleet::homogeneous(7, "G").unwrap());
+    let sim = ClusterSim::builder(Fleet::homogeneous(7, "G").unwrap()).build();
     let (report, total) = dag.fleet_seconds(&sim).unwrap();
     assert_eq!(report.shards, 7);
     assert!(report.steals == 0, "one leaf per card needs no stealing");
@@ -143,7 +143,7 @@ fn service_strassen_numerics_within_budget() {
     let a = Matrix::random(120, 88, 21);
     let b = Matrix::random(88, 72, 22);
     let want = matmul_blocked(&a, &b);
-    let resp = svc.submit_sync(GemmRequest { id: 1, a, b, chain: None, error_budget: None });
+    let resp = svc.submit_sync(GemmRequest::new(a, b).id(1));
     assert_eq!(resp.route, Route::Strassen);
     let rep = resp.strassen.expect("report");
     assert_eq!(rep.depth, 3);

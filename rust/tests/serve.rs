@@ -1,0 +1,168 @@
+//! Property tests for the serving front end: conservation under
+//! chaos, weighted fair share, deadline-pulled batch closes, and
+//! deterministic replay.
+//!
+//! These drive [`systo3d::coordinator::simulate_serve`] — the
+//! open-loop virtual-time harness — rather than the threaded service,
+//! so every property is checked deterministically from a seed.
+
+use systo3d::coordinator::{
+    simulate_serve, simulate_serve_trace, AdmissionPolicy, ArrivalModel, Priority, ServeConfig,
+    TenantSpec, WorkloadGen,
+};
+use systo3d::observe::slo::SloPolicy;
+use systo3d::perfmodel::flop_count;
+
+/// Offered FLOP/s ≈ `factor` × fleet capacity (the multi-tenant mix
+/// serves fixed 256³ jobs, so capacity is closed-form).
+fn overload_gen(seed: u64, cfg: &ServeConfig, factor: f64) -> WorkloadGen {
+    let flops = flop_count(256, 256, 256) as f64;
+    let per_job_s =
+        flops / (cfg.card_gflops * 1e9) + cfg.dispatch_overhead_s / cfg.max_batch as f64;
+    WorkloadGen::multi_tenant(seed, factor * cfg.servers as f64 / per_job_s)
+}
+
+/// Chaos kills mid-batch, bounded ingress, doomed shedding: whatever
+/// the combination, every request is accounted for exactly once —
+/// served, or shed with a reason. Nothing admitted is lost.
+#[test]
+fn no_admitted_request_is_lost_under_chaos_kills() {
+    for seed in 1u64..=5 {
+        let cfg = ServeConfig {
+            servers: 3,
+            hot_spares: 1,
+            kills: vec![(0.004, 0), (0.009, 2)],
+            policy: AdmissionPolicy {
+                queue_capacity: 256,
+                shed_doomed: true,
+                latency_target_s: Some(0.05),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let gen = overload_gen(seed, &cfg, 1.5);
+        let out = simulate_serve(&gen, 2000, &cfg);
+        assert_eq!(out.served.len() + out.shed.len(), 2000, "seed {seed}: requests leaked");
+        let mut seen = vec![0u32; 2000];
+        for r in &out.served {
+            seen[r.id as usize] += 1;
+        }
+        for s in &out.shed {
+            seen[s.id as usize] += 1;
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "seed {seed}: some request was lost or double-counted"
+        );
+        assert!(
+            out.events.iter().any(|e| e.contains("killed")),
+            "seed {seed}: the kills must land mid-batch: {:?}",
+            out.events
+        );
+    }
+}
+
+/// Three same-priority tenants weighted 3:2:1, all permanently
+/// backlogged at 3x capacity: while the queue is saturated, deficit
+/// round-robin must hold served service shares to the weights.
+#[test]
+fn drr_holds_weighted_fair_share_under_overload() {
+    let cfg = ServeConfig {
+        servers: 2,
+        policy: AdmissionPolicy { queue_capacity: 65_536, ..Default::default() },
+        ..Default::default()
+    };
+    let mut gen = overload_gen(21, &cfg, 3.0);
+    gen.tenants = vec![
+        TenantSpec::new("w3", 3, Priority::Normal, None),
+        TenantSpec::new("w2", 2, Priority::Normal, None),
+        TenantSpec::new("w1", 1, Priority::Normal, None),
+    ];
+    let trace = gen.trace(20_000);
+    let cutoff = trace.last().expect("non-empty").arrival_s;
+    let out = simulate_serve_trace(&trace, &gen.tenants, &cfg);
+    // Shares among requests finishing before the last arrival — the
+    // window in which every tenant is still backlogged.
+    let mut service = [0.0f64; 3];
+    for r in out.served.iter().filter(|r| r.finish_s <= cutoff) {
+        service[r.tenant] += r.flops as f64;
+    }
+    let total: f64 = service.iter().sum();
+    assert!(total > 0.0, "the saturated window must serve work");
+    for (t, w) in [(0usize, 3.0f64), (1, 2.0), (2, 1.0)] {
+        let share = service[t] / total;
+        let fair = w / 6.0;
+        assert!(
+            (share - fair).abs() / fair < 0.2,
+            "tenant {t}: saturated share {share:.3} strays from fair {fair:.3}"
+        );
+    }
+    assert!(out.tenants.iter().all(|t| t.completed > 0), "no tenant starves outright");
+}
+
+/// A 3 ms deadline against a 4 ms fixed window at light load (batches
+/// never fill): the fixed window blows the oldest member's deadline
+/// on every batch, the deadline-pulled close dispatches in time.
+#[test]
+fn deadline_pulled_close_beats_fixed_window_on_goodput() {
+    let mk = |aware: bool| ServeConfig {
+        servers: 2,
+        batch_window_s: 0.004,
+        deadline_aware: aware,
+        ..Default::default()
+    };
+    let mut gen = overload_gen(31, &mk(true), 0.05);
+    gen.tenants = vec![TenantSpec::new("edge", 1, Priority::Normal, Some(0.003))];
+    let trace = gen.trace(2000);
+    let pulled = simulate_serve_trace(&trace, &gen.tenants, &mk(true));
+    let fixed = simulate_serve_trace(&trace, &gen.tenants, &mk(false));
+    assert_eq!(pulled.served.len() + pulled.shed.len(), 2000);
+    assert!(
+        pulled.deadline_met > fixed.deadline_met,
+        "pulled closes must meet more deadlines: {} vs {}",
+        pulled.deadline_met,
+        fixed.deadline_met
+    );
+    assert!(
+        pulled.goodput_flops_per_s > fixed.goodput_flops_per_s,
+        "deadline-pulled close must strictly beat the fixed window: {:.3e} vs {:.3e}",
+        pulled.goodput_flops_per_s,
+        fixed.goodput_flops_per_s
+    );
+}
+
+/// The full pipeline — bursty arrivals, doomed shedding, a chaos kill,
+/// pressure growth — replays bit-identically from the seed, and a
+/// different seed produces a different outcome.
+#[test]
+fn replay_is_deterministic_from_the_seed() {
+    let cfg = ServeConfig {
+        servers: 2,
+        hot_spares: 1,
+        kills: vec![(0.006, 1)],
+        pressure_watermark: Some(0.002),
+        slo: SloPolicy {
+            window_s: 0.005,
+            long_windows: 4,
+            burn_threshold: 0.5,
+            max_growth: 2,
+            ..Default::default()
+        },
+        policy: AdmissionPolicy {
+            queue_capacity: 4096,
+            shed_doomed: true,
+            latency_target_s: Some(0.05),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let bursty = ArrivalModel::Bursty { factor: 4.0, on_s: 0.01, off_s: 0.03 };
+    let gen = overload_gen(17, &cfg, 2.0).with_arrival(bursty);
+    let a = simulate_serve(&gen, 4000, &cfg);
+    let b = simulate_serve(&gen, 4000, &cfg);
+    assert_eq!(a, b, "same seed, same config -> identical outcome");
+    assert_eq!(a.served.len() + a.shed.len(), 4000);
+    let other = overload_gen(18, &cfg, 2.0).with_arrival(bursty);
+    let c = simulate_serve(&other, 4000, &cfg);
+    assert!(c != a, "a different seed must change the outcome");
+}

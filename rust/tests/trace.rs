@@ -38,9 +38,12 @@ fn mini_design() -> OffchipDesign {
 /// The chaos scenario shape: 8 active cards, 2 hot spares, aggressive
 /// growth watermark.
 fn sim(topology: Topology, tracer: Tracer) -> ClusterSim {
-    ClusterSim::with_topology_and_spares(Fleet::uniform(10, "mini", mini_design()), topology, 2)
-        .with_watermark(Some(0.75))
-        .with_trace(tracer)
+    ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
+        .topology(topology)
+        .spares(2)
+        .watermark(Some(0.75))
+        .trace(tracer)
+        .build()
 }
 
 fn plan96() -> PartitionPlan {
