@@ -28,9 +28,12 @@ fn main() -> anyhow::Result<()> {
     let fitted = points.iter().filter(|p| p.outcome.fits()).count();
     println!("swept {} candidates; {} fit", points.len(), fitted);
 
-    let mut ranked: Vec<_> = points.iter().filter(|p| p.sustained_gflops.is_some()).collect();
+    let mut ranked: Vec<_> = points
+        .iter()
+        .filter(|p| p.sustained_gflops.is_some_and(|g| g.is_finite()))
+        .collect();
     ranked.sort_by(|a, b| {
-        b.sustained_gflops.partial_cmp(&a.sustained_gflops).unwrap()
+        b.sustained_gflops.unwrap().total_cmp(&a.sustained_gflops.unwrap())
     });
     println!("top 10 by sustained GFLOPS at d2={eval_d2}:");
     println!(

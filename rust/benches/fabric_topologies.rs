@@ -31,12 +31,12 @@ fn main() {
     }
 
     common::section("fabric: collective pricing on a congested ring (host cost)");
-    let ring = FabricState::new(Topology::ring(16));
+    let mut ring = FabricState::new(Topology::ring(16));
     let others: Vec<usize> = (1..16).collect();
     for algo in [ReduceAlgo::Direct, ReduceAlgo::Tree, ReduceAlgo::Ring] {
         let sched = CollectiveSchedule::build(algo, 0, &others, 256 << 20);
         let s = b.run(&format!("price {} c=16", algo.name()), || {
-            sched.price(&ring, &[0.0; 16]).unwrap()
+            sched.price(&mut ring, &[0.0; 16]).unwrap()
         });
         common::report(&s);
     }

@@ -663,7 +663,10 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
         let mut first_cost = f64::INFINITY;
         let mut best: Option<(f64, usize)> = None;
         for (i, &s) in pool.iter().enumerate() {
-            scratch.reset_occupancy();
+            // Each candidate replays from the clean scratch occupancy;
+            // the O(1) checkpoint + O(links touched) rollback replaces
+            // the old per-candidate O(edges) reset.
+            let cp = scratch.checkpoint();
             let mut last = 0.0f64;
             let mut cost = f64::INFINITY;
             let mut routable = true;
@@ -679,6 +682,7 @@ impl<'a, F: Fn(usize, &Shard) -> f64> FleetController<'a, F> {
                     }
                 }
             }
+            scratch.rollback(cp);
             if routable {
                 cost = last;
             }

@@ -76,7 +76,9 @@ impl Fleet {
                 Some((d.id, design))
             })
             .collect();
-        specs.sort_by(|a, b| b.1.peak_gflops().partial_cmp(&a.1.peak_gflops()).unwrap());
+        // Catalog peaks are finite today; total_cmp keeps a future
+        // degenerate entry from panicking the whole fleet build.
+        specs.sort_by(|a, b| b.1.peak_gflops().total_cmp(&a.1.peak_gflops()));
         let devices = (0..n)
             .map(|i| {
                 let (id, design) = specs[i % specs.len()];

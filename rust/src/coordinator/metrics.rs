@@ -3,7 +3,17 @@
 use crate::trace::CriticalPath;
 use crate::util::stats::LogHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// A poisoned metrics mutex means some recorder thread panicked while
+/// holding the lock. The guarded values are append-only bucket
+/// counters (a `LogHistogram` is never left half-merged by `record`),
+/// so the worst case is one lost sample — recover the guard and keep
+/// the scrape path alive instead of cascading the panic into every
+/// caller that ever reads a latency gauge.
+fn unpoisoned<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Saturating seconds→microseconds conversion for the `u64` gauges.
 /// A plain `(x * 1e6) as u64` is UB-adjacent on non-finite input and
@@ -129,7 +139,7 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, seconds: f64) {
-        self.latencies.lock().unwrap().record(seconds);
+        unpoisoned(&self.latencies).record(seconds);
     }
 
     /// Fold one traced run's critical-path attribution into the
@@ -170,7 +180,7 @@ impl Metrics {
     /// slot; anything later lands in the last slot ("overflow"), so a
     /// tenant-name cardinality explosion cannot grow the gauge set.
     pub fn record_tenant_latency(&self, tenant: &str, seconds: f64) {
-        let mut slots = self.tenant_latencies.lock().unwrap();
+        let mut slots = unpoisoned(&self.tenant_latencies);
         if let Some((_, h)) = slots.iter_mut().find(|(name, _)| name == tenant) {
             h.record(seconds);
             return;
@@ -186,7 +196,7 @@ impl Metrics {
 
     /// Tenant names currently holding gauge slots, in claim order.
     pub fn tenant_names(&self) -> Vec<String> {
-        self.tenant_latencies.lock().unwrap().iter().map(|(n, _)| n.clone()).collect()
+        unpoisoned(&self.tenant_latencies).iter().map(|(n, _)| n.clone()).collect()
     }
 
     /// Fraction of offered requests shed (0.0 before any admission
@@ -335,18 +345,18 @@ impl Metrics {
     /// Point-in-time copy of the latency histogram (fixed size, so the
     /// clone is cheap and the lock is held briefly).
     pub fn latency_histogram(&self) -> LogHistogram {
-        self.latencies.lock().unwrap().clone()
+        unpoisoned(&self.latencies).clone()
     }
 
     /// `p50/p99/p999` one-liner for the serve CLI and examples.
     pub fn latency_report_line(&self) -> String {
-        self.latencies.lock().unwrap().report_line("request latency")
+        unpoisoned(&self.latencies).report_line("request latency")
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latency_histogram();
         let (tenant_requests, tenant_p99_us) = {
-            let slots = self.tenant_latencies.lock().unwrap();
+            let slots = unpoisoned(&self.tenant_latencies);
             let mut counts = [0u64; TENANT_GAUGE_SLOTS];
             let mut p99s = [0u64; TENANT_GAUGE_SLOTS];
             for (i, (_, h)) in slots.iter().take(TENANT_GAUGE_SLOTS).enumerate() {
@@ -685,6 +695,33 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.latency_count, 2);
         assert!(s.latency_p999_us < u64::MAX);
+    }
+
+    #[test]
+    fn poisoned_locks_recover_and_scrapes_keep_working() {
+        let m = Metrics::new();
+        m.record_latency(0.001);
+        m.record_tenant_latency("gold", 0.002);
+        // Panic while holding both guards — exactly what a panicking
+        // recorder thread does to the mutexes.
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _lat = m.latencies.lock().unwrap();
+            let _ten = m.tenant_latencies.lock().unwrap();
+            panic!("recorder died mid-scrape");
+        }));
+        assert!(poisoned.is_err());
+        assert!(m.latencies.lock().is_err(), "the mutex really is poisoned");
+        // Every lock path must shrug the poison off: record, histogram
+        // copy, report line, tenant names, and the full snapshot.
+        m.record_latency(0.003);
+        m.record_tenant_latency("gold", 0.004);
+        assert_eq!(m.latency_histogram().count(), 2);
+        assert!(m.latency_report_line().contains("p999"));
+        assert_eq!(m.tenant_names(), ["gold"]);
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, 2);
+        assert_eq!(s.tenant_requests[0], 2);
+        assert!(s.tenant_p99_us[0] > 0);
     }
 
     #[test]

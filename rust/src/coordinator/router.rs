@@ -89,6 +89,14 @@ impl Router {
         self
     }
 
+    /// Replace the design catalog — a test hook for injecting
+    /// degenerate entries (NaN f_max) the selection must survive.
+    #[cfg(test)]
+    fn with_designs(mut self, designs: Vec<DesignSpec>) -> Self {
+        self.designs = designs;
+        self
+    }
+
     /// Functional route for an (m, k, n) problem. Capacity overflow
     /// wins (the cluster is the only place the problem fits); then the
     /// Strassen planner gets a look; classical fallback last.
@@ -142,16 +150,18 @@ impl Router {
     /// exactly: Strassen pads its leaves up to the blocking anyway, so
     /// the planner just needs *a* calibrated design to price against.
     fn best_padded_design(&self) -> Option<OffchipDesign> {
+        // A corrupt catalog entry (NaN f_max) must lose, not panic or —
+        // `total_cmp` ranks NaN above every finite peak — win the max.
         self.designs
             .iter()
             .filter_map(|d| {
                 Some(OffchipDesign {
                     blocking: d.level1()?,
-                    fmax_mhz: d.fmax_mhz?,
+                    fmax_mhz: d.fmax_mhz.filter(|f| f.is_finite())?,
                     controller_efficiency: 0.97,
                 })
             })
-            .max_by(|a, b| a.peak_gflops().partial_cmp(&b.peak_gflops()).unwrap())
+            .max_by(|a, b| a.peak_gflops().total_cmp(&b.peak_gflops()))
     }
 
     /// Functional route for a chained (A·B)·C problem with shapes
@@ -192,18 +202,22 @@ impl Router {
     /// satisfies, preferring highest peak throughput (F > G > …); the
     /// request is timed on that design's simulator.
     pub fn timing_design(&self, m: u64, k: u64, n: u64) -> Option<OffchipDesign> {
+        // Non-finite f_max entries are screened out before the sort:
+        // `total_cmp` never panics, but it orders NaN above every
+        // finite peak, so a NaN entry left in would win the catalog.
         let mut candidates: Vec<(&DesignSpec, Level1Blocking)> = self
             .designs
             .iter()
             .filter_map(|d| d.level1().map(|b| (d, b)))
             .filter(|(d, b)| {
-                b.validate_offchip(m, n, k).is_ok() && d.fmax_mhz.is_some()
+                b.validate_offchip(m, n, k).is_ok()
+                    && d.fmax_mhz.is_some_and(|f| f.is_finite())
             })
             .collect();
         candidates.sort_by(|(da, a), (db, b)| {
             let pa = 2.0 * a.array.dsps() as f64 * da.fmax_mhz.unwrap();
             let pb = 2.0 * b.array.dsps() as f64 * db.fmax_mhz.unwrap();
-            pb.partial_cmp(&pa).unwrap()
+            pb.total_cmp(&pa)
         });
         candidates.first().map(|(d, b)| OffchipDesign {
             blocking: *b,
@@ -342,5 +356,40 @@ mod tests {
     fn timing_design_none_for_odd_shapes() {
         let r = Router::new(None);
         assert!(r.timing_design(100, 100, 100).is_none());
+    }
+
+    #[test]
+    fn degenerate_fmax_entries_are_screened_not_sorted() {
+        use crate::dse::configs::fitted_designs;
+        use crate::systolic::ArraySize;
+        let mut designs = fitted_designs();
+        // Corrupt entries with more DSPs than any real design. Under
+        // the old `partial_cmp(..).unwrap()` sort the NaN panicked;
+        // under a bare `total_cmp` sort NaN (and +inf) would rank
+        // above every finite peak and win the whole catalog.
+        for fmax in [f64::NAN, f64::INFINITY] {
+            designs.push(DesignSpec {
+                id: "corrupt",
+                array: ArraySize::new(64, 64, 8, 8),
+                fmax_mhz: Some(fmax),
+                blocking: Some((512, 512)),
+                sweep: &[],
+            });
+        }
+        let r = Router::new(None).with_designs(designs);
+        // 512-cube: the corrupt entries accept the shape but must be
+        // screened out; the finite winner stays design H (408 MHz).
+        let d = r.timing_design(512, 512, 512).expect("finite design");
+        assert_eq!((d.blocking.array.di0, d.blocking.array.dj0), (32, 32));
+        assert_eq!(d.fmax_mhz, 408.0);
+        // The padded-design fallback (nothing fits 96 exactly) screens
+        // the same way instead of panicking in its max_by.
+        let force = r.with_strassen(StrassenConfig {
+            mode: StrassenMode::Force(1),
+            ..Default::default()
+        });
+        let p = force.strassen_plan(96, 96, 96, None).expect("padded plan");
+        assert!(p.depth >= 1);
+        assert!(p.design.fmax_mhz.is_finite(), "picked {:?}", p.design);
     }
 }

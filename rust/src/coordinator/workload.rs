@@ -213,11 +213,19 @@ impl WorkloadGen {
     }
 
     /// Offered load in FLOP/s for a trace (paper FLOP convention).
+    ///
+    /// The span is measured from the trace origin (t = 0) to the last
+    /// arrival — the same clock the serve sim charges utilization
+    /// against — not from the first arrival. (The old `last − first`
+    /// span overstated load whenever the first arrival landed late,
+    /// and disagreed with every consumer that divides by
+    /// `last.arrival_s`.) Empty and singleton traces offer 0.0 rather
+    /// than panicking or dividing by a zero span.
     pub fn offered_flops(trace: &[TraceEntry]) -> f64 {
         if trace.len() < 2 {
             return 0.0;
         }
-        let span = trace.last().unwrap().arrival_s - trace[0].arrival_s;
+        let span = trace.last().unwrap().arrival_s;
         let flops: f64 = trace
             .iter()
             .map(|e| {
@@ -279,6 +287,31 @@ mod tests {
         assert!(f > 0.0);
         // ~50 req/s of ~33 MFLOP avg -> order 1e9; sanity band.
         assert!(f > 1e8 && f < 1e12, "{f}");
+    }
+
+    #[test]
+    fn offered_load_spans_from_origin_and_survives_tiny_traces() {
+        let entry = |id: u64, arrival_s: f64| TraceEntry {
+            id,
+            arrival_s,
+            m: 256,
+            k: 256,
+            n: 256,
+            chained: false,
+            tenant: 0,
+            priority: Priority::Normal,
+            deadline_s: None,
+        };
+        // Degenerate traces offer nothing — no panic, no 0/0.
+        assert_eq!(WorkloadGen::offered_flops(&[]), 0.0);
+        assert_eq!(WorkloadGen::offered_flops(&[entry(0, 3.0)]), 0.0);
+        // Two arrivals with a late start: the span runs from t = 0 to
+        // the last arrival (4 s), matching the serve sim's clock — not
+        // the 2 s first-to-last gap, which would double the load.
+        let trace = [entry(0, 2.0), entry(1, 4.0)];
+        let per = crate::perfmodel::flop_count(256, 256, 256) as f64;
+        let got = WorkloadGen::offered_flops(&trace);
+        assert_eq!(got, 2.0 * per / 4.0, "span must be origin-to-last");
     }
 
     #[test]

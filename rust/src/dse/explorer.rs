@@ -143,9 +143,15 @@ impl Explorer {
             .iter()
             .filter(|p| p.outcome.fits())
             .max_by(|a, b| {
-                let ka = a.sustained_gflops.or(a.tpeak_gflops).unwrap_or(0.0);
-                let kb = b.sustained_gflops.or(b.tpeak_gflops).unwrap_or(0.0);
-                ka.partial_cmp(&kb).unwrap()
+                // NaN throughput (degenerate model input) must lose the
+                // max, so screen it to 0.0 before the total order.
+                let key = |p: &DesignPoint| {
+                    p.sustained_gflops
+                        .or(p.tpeak_gflops)
+                        .filter(|g| g.is_finite())
+                        .unwrap_or(0.0)
+                };
+                key(a).total_cmp(&key(b))
             })
     }
 }

@@ -18,9 +18,10 @@
 //!   ([`crate::perfmodel::ring_reduce_seconds`] is the closed form the
 //!   tests check against).
 //!
-//! [`CollectiveSchedule::cheapest`] prices all three on a clone of the
-//! fabric occupancy and picks the winner — on a congested ring the
-//! slice-sized flows win, on a roomy mesh direct sends do.
+//! [`CollectiveSchedule::cheapest`] prices all three under an O(1)
+//! occupancy checkpoint (rolled back after each candidate, so the real
+//! links are left untouched) and picks the winner — on a congested
+//! ring the slice-sized flows win, on a roomy mesh direct sends do.
 
 use super::routing::FabricState;
 
@@ -160,21 +161,24 @@ impl CollectiveSchedule {
         Some((ready[self.home], trace))
     }
 
-    /// Price the schedule on a clone of the fabric occupancy (the real
-    /// links are left untouched).
-    pub fn price(&self, fabric: &FabricState, ready: &[f64]) -> Option<f64> {
-        // Collective pricing clones the fabric (route table included)
-        // per candidate schedule — a profiler-watched hot loop.
+    /// Price the schedule without changing the fabric's observable
+    /// occupancy: the rounds run under an O(1)
+    /// [`FabricState::checkpoint`] and roll back afterwards — same
+    /// numbers a clone-and-run would produce, minus the per-candidate
+    /// O(n²) route-table clone the profiler used to watch here.
+    pub fn price(&self, fabric: &mut FabricState, ready: &[f64]) -> Option<f64> {
         let _scope = crate::trace::profile::scope("collective.price");
-        let mut fc = fabric.clone();
+        let cp = fabric.checkpoint();
         let mut r = ready.to_vec();
-        self.run(&mut fc, &mut r)
+        let t = self.run(fabric, &mut r);
+        fabric.rollback(cp);
+        t
     }
 
     /// Build all three schedules, price each on the current occupancy,
     /// and return the cheapest (ties break direct < tree < ring).
     pub fn cheapest(
-        fabric: &FabricState,
+        fabric: &mut FabricState,
         home: usize,
         others: &[usize],
         bytes: u64,
@@ -231,10 +235,11 @@ mod tests {
         // the rounds pipeline with no contention, so the priced time
         // matches the perfmodel closed form up to hop latency and the
         // slice rounding.
-        let fabric = FabricState::new(Topology::ring(4));
+        let mut fabric = FabricState::new(Topology::ring(4));
         let bytes = 400_000_000u64;
         let sched = CollectiveSchedule::ring(0, &[1, 2, 3], bytes);
-        let t = sched.price(&fabric, &[0.0; 4]).unwrap();
+        let t = sched.price(&mut fabric, &[0.0; 4]).unwrap();
+        assert_eq!(fabric.busy_seconds_total(), 0.0, "pricing must roll back");
         let bw = fabric.lane().effective_bytes_per_s();
         let want = crate::perfmodel::ring_reduce_seconds(4, bytes, bw);
         // The closed form serializes the gather through one home
@@ -250,14 +255,15 @@ mod tests {
         // 8 partials converging on one home over a ring: the home's two
         // ingress links serialize the direct sends, while the
         // reduce-scatter slices pipeline around the ring.
-        let fabric = FabricState::new(Topology::ring(8));
+        let mut fabric = FabricState::new(Topology::ring(8));
         let others: Vec<usize> = (1..8).collect();
         let bytes = 100_000_000u64;
         let ready = [0.0; 8];
-        let direct = CollectiveSchedule::direct(0, &others, bytes).price(&fabric, &ready).unwrap();
-        let ring = CollectiveSchedule::ring(0, &others, bytes).price(&fabric, &ready).unwrap();
+        let direct =
+            CollectiveSchedule::direct(0, &others, bytes).price(&mut fabric, &ready).unwrap();
+        let ring = CollectiveSchedule::ring(0, &others, bytes).price(&mut fabric, &ready).unwrap();
         assert!(ring < direct, "ring {ring} vs direct {direct}");
-        let best = CollectiveSchedule::cheapest(&fabric, 0, &others, bytes, &ready);
+        let best = CollectiveSchedule::cheapest(&mut fabric, 0, &others, bytes, &ready);
         assert_eq!(best.algo, ReduceAlgo::Ring);
     }
 
@@ -265,8 +271,8 @@ mod tests {
     fn direct_wins_on_a_full_mesh_pair() {
         // Two participants: direct is one send; tree is identical; ring
         // pays two rounds of slices. Cheapest must not pick ring.
-        let fabric = FabricState::new(Topology::full_mesh(4));
-        let best = CollectiveSchedule::cheapest(&fabric, 0, &[1], 100_000_000, &[0.0; 4]);
+        let mut fabric = FabricState::new(Topology::full_mesh(4));
+        let best = CollectiveSchedule::cheapest(&mut fabric, 0, &[1], 100_000_000, &[0.0; 4]);
         assert_eq!(best.algo, ReduceAlgo::Direct);
     }
 

@@ -18,7 +18,11 @@
 //!   every directed link on its path for `B/(w·bw) + h·λ` seconds, so
 //!   concurrent flows on one link serialize while flows on disjoint
 //!   links proceed in parallel. Card deaths invalidate routes and
-//!   in-flight steps re-route around the gap.
+//!   in-flight steps re-route around the gap. What-if replays —
+//!   placement candidates, collective pricing, drain-target selection —
+//!   snapshot occupancy in O(1) via [`FabricState::checkpoint`] /
+//!   [`FabricState::rollback`] and replay over [`PathCache`]-compiled
+//!   routes instead of resetting and re-walking the route table.
 //! * [`collective`] — schedules for the 2.5D partial-C combine.
 //!   **The reduce-scatter cost formula**: a ring reduce over `c`
 //!   participants moves `c−1` rounds of `B/c`-byte slices, then
@@ -61,5 +65,5 @@ pub use overlap::{
     pipeline_schedule, pipeline_schedule_traced, timelines_from_trace, Activity, CardTimeline,
     OverlapReport, Segment,
 };
-pub use routing::{FabricState, RouteTable, HOP_LATENCY_S};
+pub use routing::{CachedPath, FabricCheckpoint, FabricState, PathCache, RouteTable, HOP_LATENCY_S};
 pub use topology::{AttachReport, FabricEdge, Topology, TopologyKind, CARD_PORTS};

@@ -246,7 +246,9 @@ pub fn pipeline_schedule_traced(
         }
         let sched = match algo {
             Some(a) => CollectiveSchedule::build(a, job.home, &others, job.bytes),
-            None => CollectiveSchedule::cheapest(&fabric, job.home, &others, job.bytes, &ready),
+            None => {
+                CollectiveSchedule::cheapest(&mut fabric, job.home, &others, job.bytes, &ready)
+            }
         };
         let (finish, flows) =
             sched.run_traced(&mut fabric, &mut ready).expect("healthy fabric is connected");

@@ -177,6 +177,96 @@ pub struct FabricState {
     /// Sends that aborted mid-flight on a dying transit card and took a
     /// detour.
     pub reroutes: usize,
+    /// Undo journal: prior `(free, busy)` of each directed link a send
+    /// touched while a checkpoint was outstanding. Empty (and free)
+    /// whenever no checkpoint is open.
+    journal: Vec<(u32, u8, f64, f64)>,
+    open_checkpoints: usize,
+}
+
+/// O(1) occupancy snapshot of a [`FabricState`].
+///
+/// [`FabricState::checkpoint`] hands one out after recording only a
+/// journal mark and the scalar gauges; [`FabricState::rollback`] then
+/// unwinds the per-link undo journal back to that mark. What-if
+/// replays — placement candidates, collective pricing, drain-target
+/// selection — pay O(links touched) to undo instead of the O(edges)
+/// sweep of [`FabricState::reset_occupancy`] or an O(n²) route-table
+/// clone.
+///
+/// The snapshot covers occupancy only (free/busy times, reroute count,
+/// retired-busy gauges). Structural mutations — [`FabricState::kill`],
+/// [`FabricState::attach_card`], [`FabricState::slow_link`] — are not
+/// journaled and must not happen while a checkpoint is open.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricCheckpoint {
+    mark: usize,
+    reroutes: usize,
+    retired_busy_seconds: f64,
+    retired_max_busy_seconds: f64,
+}
+
+/// One compiled route: the directed links, narrowest trunk, slowest
+/// cable, and hop count of a card pair's shortest path, precomputed so
+/// replay-heavy callers skip the per-send BFS backtrack and neighbor
+/// scans. Valid until the fabric changes structurally (kill / attach /
+/// slow-link); see [`PathCache`].
+#[derive(Clone, Debug)]
+pub struct CachedPath {
+    /// Directed links `(edge, direction)` in path order.
+    links: Vec<(u32, u8)>,
+    w_min: u32,
+    slow_max: f64,
+    hops: u32,
+}
+
+impl CachedPath {
+    pub fn hops(&self) -> u32 {
+        self.hops
+    }
+
+    /// Directed links `(edge, direction)` the path reserves, in order.
+    pub fn directed_links(&self) -> &[(u32, u8)] {
+        &self.links
+    }
+
+    /// Uncontended circuit-holding time of `bytes` over this path —
+    /// bit-identical to the duration [`FabricState::send`] computes.
+    pub fn duration(&self, fabric: &FabricState, bytes: u64) -> f64 {
+        self.slow_max * fabric.transfer_seconds(bytes, self.hops, self.w_min)
+    }
+}
+
+/// All-pairs compiled routes over a frozen fabric.
+///
+/// Built once per search (placement optimization replays thousands of
+/// candidate maps over an immutable topology); [`FabricState::send_cached`]
+/// then reproduces [`FabricState::send`]'s contention arithmetic — same
+/// float operations in the same order — without re-walking the route
+/// table. The cache goes stale if the fabric is killed, grown, or
+/// slowed after construction; callers own that invariant.
+#[derive(Clone, Debug)]
+pub struct PathCache {
+    cards: usize,
+    paths: Vec<Option<CachedPath>>,
+}
+
+impl PathCache {
+    pub fn new(fabric: &FabricState) -> Self {
+        let cards = fabric.topology.cards;
+        let mut paths = Vec::with_capacity(cards * cards);
+        for src in 0..cards {
+            for dst in 0..cards {
+                paths.push(fabric.compile_path(src, dst));
+            }
+        }
+        Self { cards, paths }
+    }
+
+    /// Compiled src→dst path (None when unroutable or `src == dst`).
+    pub fn get(&self, src: usize, dst: usize) -> Option<&CachedPath> {
+        self.paths[src * self.cards + dst].as_ref()
+    }
 }
 
 impl FabricState {
@@ -194,6 +284,49 @@ impl FabricState {
             retired_max_busy_seconds: 0.0,
             lane: Link::qsfp28_100g(),
             reroutes: 0,
+            journal: Vec::new(),
+            open_checkpoints: 0,
+        }
+    }
+
+    /// Open an O(1) occupancy snapshot. Sends made while the
+    /// checkpoint is outstanding journal the prior state of every
+    /// directed link they touch; [`Self::rollback`] unwinds them.
+    /// Checkpoints nest — roll back in LIFO order.
+    pub fn checkpoint(&mut self) -> FabricCheckpoint {
+        self.open_checkpoints += 1;
+        FabricCheckpoint {
+            mark: self.journal.len(),
+            reroutes: self.reroutes,
+            retired_busy_seconds: self.retired_busy_seconds,
+            retired_max_busy_seconds: self.retired_max_busy_seconds,
+        }
+    }
+
+    /// Unwind the undo journal back to `cp`, restoring every touched
+    /// link's `(free, busy)` bit-exactly, and close the checkpoint.
+    /// Cost is O(links touched since the checkpoint), not O(edges).
+    pub fn rollback(&mut self, cp: FabricCheckpoint) {
+        assert!(self.open_checkpoints > 0, "rollback without an open checkpoint");
+        while self.journal.len() > cp.mark {
+            let (e, d, free, busy) = self.journal.pop().expect("journal shorter than mark");
+            self.free[e as usize][d as usize] = free;
+            self.busy[e as usize][d as usize] = busy;
+        }
+        self.reroutes = cp.reroutes;
+        self.retired_busy_seconds = cp.retired_busy_seconds;
+        self.retired_max_busy_seconds = cp.retired_max_busy_seconds;
+        self.open_checkpoints -= 1;
+    }
+
+    /// Journal the pre-write state of a send's links while any
+    /// checkpoint is open (no-op — one branch — otherwise).
+    #[inline]
+    fn journal_links(&mut self, links: &[(usize, usize)]) {
+        if self.open_checkpoints > 0 {
+            for &(e, d) in links {
+                self.journal.push((e as u32, d as u8, self.free[e][d], self.busy[e][d]));
+            }
         }
     }
 
@@ -298,6 +431,7 @@ impl FabricState {
     /// Fault state — dead cards and slow-link factors — survives the
     /// reset, exactly like the route tables.
     pub fn reset_occupancy(&mut self) {
+        debug_assert_eq!(self.open_checkpoints, 0, "reset_occupancy under an open checkpoint");
         for f in &mut self.free {
             *f = [0.0; 2];
         }
@@ -307,6 +441,8 @@ impl FabricState {
         self.retired_busy_seconds = 0.0;
         self.retired_max_busy_seconds = 0.0;
         self.reroutes = 0;
+        self.journal.clear();
+        self.open_checkpoints = 0;
     }
 
     /// Price of an uncontended h-hop transfer at trunk width `w_min`.
@@ -383,6 +519,7 @@ impl FabricState {
             if transit_death.is_finite() {
                 if transit_death > start {
                     // Charge the progress lost with the dying card.
+                    self.journal_links(&links);
                     for &(e, d) in &links {
                         self.free[e][d] = self.free[e][d].max(transit_death);
                         self.busy[e][d] += transit_death - start;
@@ -392,12 +529,65 @@ impl FabricState {
                 ready = ready.max(transit_death);
                 continue;
             }
+            self.journal_links(&links);
             for &(e, d) in &links {
                 self.free[e][d] = end;
                 self.busy[e][d] += dur;
             }
             return Some((start, end));
         }
+    }
+
+    /// Compile the current src→dst shortest path into a [`CachedPath`]
+    /// (the same link walk [`Self::send`] performs, done once).
+    fn compile_path(&self, src: usize, dst: usize) -> Option<CachedPath> {
+        if src == dst {
+            return None;
+        }
+        let nodes = self.routes.node_path(src, dst)?;
+        let mut links = Vec::with_capacity(nodes.len() - 1);
+        let mut w_min = u32::MAX;
+        let mut slow_max = 1.0f64;
+        for pair in nodes.windows(2) {
+            let e = self
+                .topology
+                .neighbors(pair[0])
+                .iter()
+                .find(|&&(w, _)| w == pair[1])
+                .map(|&(_, e)| e)
+                .expect("route table path follows edges");
+            let dir = u8::from(self.topology.edges[e].a != pair[0]);
+            w_min = w_min.min(self.topology.edges[e].width);
+            slow_max = slow_max.max(self.slow[e]);
+            links.push((e as u32, dir));
+        }
+        Some(CachedPath { links, w_min, slow_max, hops: (nodes.len() - 1) as u32 })
+    }
+
+    /// Route `bytes` over a precompiled path — bit-identical contention
+    /// arithmetic to [`Self::send`] (same float operations in the same
+    /// order) without the per-send route-table backtrack. The caller
+    /// guarantees the [`PathCache`] was built against this fabric's
+    /// current structural state.
+    pub fn send_cached(&mut self, path: &CachedPath, bytes: u64, ready: f64) -> (f64, f64) {
+        let start = path
+            .links
+            .iter()
+            .fold(ready, |t, &(e, d)| t.max(self.free[e as usize][d as usize]));
+        let dur = path.slow_max * self.transfer_seconds(bytes, path.hops, path.w_min);
+        let end = start + dur;
+        if self.open_checkpoints > 0 {
+            for &(e, d) in &path.links {
+                let (e, d) = (e as usize, d as usize);
+                self.journal.push((e as u32, d as u8, self.free[e][d], self.busy[e][d]));
+            }
+        }
+        for &(e, d) in &path.links {
+            let (e, d) = (e as usize, d as usize);
+            self.free[e][d] = end;
+            self.busy[e][d] += dur;
+        }
+        (start, end)
     }
 
     /// Directed links in the fabric (two per undirected edge).
@@ -488,6 +678,71 @@ mod tests {
         f.reset_occupancy();
         assert!(f.is_dead(1));
         assert_eq!(f.hops(0, 1), None);
+    }
+
+    #[test]
+    fn checkpoint_rollback_restores_occupancy_bit_exact() {
+        let mut f = FabricState::new(Topology::ring(8));
+        let bytes = 50_000_000;
+        f.send(0, 2, bytes, 0.0).unwrap();
+        f.send(1, 2, bytes, 0.0).unwrap();
+        let busy = f.busy_seconds_total();
+        let peak = f.max_busy_seconds();
+        // What a 3→5 send would report from exactly this state.
+        let probe = {
+            let mut clone = f.clone();
+            clone.send(3, 5, bytes, 0.25).unwrap()
+        };
+        let cp = f.checkpoint();
+        f.send(3, 5, bytes, 0.25).unwrap();
+        f.send(0, 2, bytes, 0.0).unwrap();
+        f.send(7, 1, bytes, 1.0).unwrap();
+        assert!(f.busy_seconds_total() > busy);
+        f.rollback(cp);
+        assert_eq!(f.busy_seconds_total(), busy, "busy totals round-trip exactly");
+        assert_eq!(f.max_busy_seconds(), peak);
+        // A replay after rollback sees exactly the pre-checkpoint state.
+        assert_eq!(f.send(3, 5, bytes, 0.25).unwrap(), probe);
+    }
+
+    #[test]
+    fn nested_checkpoints_unwind_in_lifo_order() {
+        let mut f = FabricState::new(Topology::ring(4));
+        let bytes = 100_000_000;
+        f.send(0, 1, bytes, 0.0).unwrap();
+        let after_one = f.busy_seconds_total();
+        let outer = f.checkpoint();
+        f.send(1, 2, bytes, 0.0).unwrap();
+        let after_two = f.busy_seconds_total();
+        let inner = f.checkpoint();
+        f.send(2, 3, bytes, 0.0).unwrap();
+        f.send(1, 2, bytes, 0.5).unwrap();
+        f.rollback(inner);
+        assert_eq!(f.busy_seconds_total(), after_two);
+        f.rollback(outer);
+        assert_eq!(f.busy_seconds_total(), after_one);
+    }
+
+    #[test]
+    fn cached_sends_match_routed_sends_bit_for_bit() {
+        for topology in [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)] {
+            let mut routed = FabricState::new(topology);
+            let mut cached = routed.clone();
+            let cache = PathCache::new(&routed);
+            for (s, d, bytes, ready) in [
+                (0usize, 5usize, 100_000_000u64, 0.0f64),
+                (1, 5, 50_000_000, 0.1),
+                (0, 3, 75_000_000, 0.0),
+                (5, 0, 100_000_000, 0.05),
+                (0, 5, 25_000_000, 0.0),
+            ] {
+                let want = routed.send(s, d, bytes, ready).unwrap();
+                let got = cached.send_cached(cache.get(s, d).unwrap(), bytes, ready);
+                assert_eq!(want, got, "{s}->{d}");
+            }
+            assert_eq!(routed.busy_seconds_total(), cached.busy_seconds_total());
+            assert_eq!(routed.max_busy_seconds(), cached.max_busy_seconds());
+        }
     }
 
     #[test]

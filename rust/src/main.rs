@@ -200,7 +200,32 @@ fn print_usage() {
          \x20       .deadline(Duration::from_millis(50))\n\
          \x20 and read the verdict from response.admission (lane, shed reason,\n\
          \x20 queue depth, deadline slack); goodput, shed rate, and per-tenant\n\
-         \x20 p99 land in the Prometheus/JSON scrape like every other gauge."
+         \x20 p99 land in the Prometheus/JSON scrape like every other gauge.\n\
+         \n\
+         Scaling the simulator (worked example):\n\
+         \x20 The fleet sim is fast enough that CI property-sweeps a 256-card\n\
+         \x20 fabric. Three mechanisms, all bit-identical to the slow paths they\n\
+         \x20 replaced (tests/fastsim.rs is the proof):\n\
+         \x20 1. Speculative pricing uses occupancy checkpoints instead of full\n\
+         \x20    replays. To price a what-if without paying O(edges) resets:\n\
+         \x20      let cp = fabric.checkpoint();\n\
+         \x20      fabric.send(src, dst, bytes, ready);   // speculate freely\n\
+         \x20      fabric.rollback(cp);                   // O(touched links)\n\
+         \x20    Collective pricing, elastic drain-target selection, and the\n\
+         \x20    placement search all ride this (structural mutations — kill,\n\
+         \x20    attach, slow_link — are not journaled; keep them outside).\n\
+         \x20 2. The placement local search prices swap candidates incrementally:\n\
+         \x20    exact hop-byte deltas and per-link duration lower bounds refute\n\
+         \x20    most candidates without touching the fabric, and survivors replay\n\
+         \x20    over compiled route caches with an early exit at the incumbent\n\
+         \x20    cost. Same maps, same bits, ~10x+ less host time at n=256:\n\
+         \x20      systo3d fabric --devices 256 --topology torus --placement search\n\
+         \x20 3. Seeded property sweeps fan across threads. SYSTO3D_TEST_THREADS\n\
+         \x20    caps the workers (default: all cores); results merge in seed\n\
+         \x20    order, so a parallel run is byte-identical to a single-threaded one:\n\
+         \x20      SYSTO3D_CHAOS_SEEDS=128 SYSTO3D_TEST_THREADS=8 cargo test\n\
+         \x20 The speedups are gated in CI (sim_speedup_placement_n256 >= 10x,\n\
+         \x20 chaos_suite_speedup >= 4x; benches/fast_sim.rs)."
     );
 }
 

@@ -31,7 +31,12 @@
 //! under the PR-3 contention model** ([`crate::fabric::FabricState`]):
 //! every flow reserves each directed link on its path, so shared links
 //! serialize and disjoint links parallelize — the score is the instant
-//! the last partial drains, not a hop count. Plain hop-bytes
+//! the last partial drains, not a hop count. The replay itself is no
+//! longer the inner loop: [`optimize`] prices swap candidates
+//! incrementally (exact hop-byte deltas + a per-link occupancy lower
+//! bound over [`crate::fabric::PathCache`]-compiled routes) and proves
+//! each decision identical to the full replay, which survives as
+//! [`optimize_reference`], the equivalence oracle. Plain hop-bytes
 //! ([`crate::cluster::PartitionPlan::reduction_hop_bytes`]) is the
 //! tie-break, and the optimizer never returns a map whose hop-bytes
 //! exceed identity's (the dominance property the integration tests
@@ -49,4 +54,7 @@ pub mod map;
 pub mod search;
 
 pub use map::Placement;
-pub use search::{optimize, optimize_traced, PlacementReport, PlacementStrategy, DEFAULT_SEED};
+pub use search::{
+    optimize, optimize_reference, optimize_traced, PlacementReport, PlacementStrategy,
+    DEFAULT_SEED,
+};

@@ -1,12 +1,31 @@
 //! Strategy selection: identity, the greedy plane-packer, and the
 //! seeded local search, all scored by replaying the plan's reduction
 //! sends under the link-contention model.
+//!
+//! The local search no longer replays every send per candidate.
+//! [`optimize`] prices a swap incrementally — exact hop-byte deltas
+//! over the two touched cards' send index, plus a per-directed-link
+//! occupancy lower bound that refutes most candidates outright — and
+//! falls back to an exact replay (over [`PathCache`]-compiled routes,
+//! undone by [`FabricState::rollback`]) only when the bound cannot
+//! decide. Every accept/reject decision is provably identical to the
+//! full-replay scorer, so the returned `Placement` and costs are
+//! bit-for-bit those of [`optimize_reference`] — the property tests in
+//! `tests/fastsim.rs` pin that equivalence across seeds, topologies,
+//! and fleet sizes.
 
 use super::map::Placement;
 use crate::cluster::partition::PartitionPlan;
-use crate::fabric::{FabricState, Topology};
+use crate::fabric::{FabricState, PathCache, Topology};
 use crate::trace::{profile, Tracer};
 use crate::util::rng::Xoshiro256;
+
+/// Relative safety margin on the occupancy lower bound. The bound and
+/// the replay makespan are sums/maxes of the same f64 durations, so
+/// their relative disagreement is ~n·ε ≈ 1e-12; pruning only when the
+/// bound clears the incumbent by 1e-9 keeps every prune decision
+/// identical to what the exact replay would have concluded.
+const LB_MARGIN: f64 = 1e-9;
 
 /// Default local-search seed (any fixed value works — determinism is
 /// the point, not the number).
@@ -147,6 +166,214 @@ fn hop_bytes(hops: &[Vec<u32>], sends: &[(usize, usize, u64)], placement: &Place
     total
 }
 
+/// Incremental swap pricer, decision-equivalent to the full replay.
+///
+/// Three layers, cheapest first:
+/// 1. **Exact hop-byte delta** — only the sends touching the two
+///    swapped devices change, so the candidate's Σ bytes·hops is exact
+///    u64 arithmetic over the per-device send index. A candidate above
+///    the identity ceiling is rejected without touching the fabric.
+/// 2. **Occupancy lower bound** — flows sharing a directed link
+///    serialize, so each link's summed circuit durations lower-bounds
+///    the replay makespan. The sums are maintained per candidate by
+///    delta (and rebuilt exactly on every accepted swap, capping float
+///    drift); a bound above the incumbent (with [`LB_MARGIN`] safety)
+///    proves the exact replay would reject too.
+/// 3. **Exact bounded replay** — survivors replay all sends over
+///    [`PathCache`]-compiled routes (bit-identical arithmetic to
+///    [`FabricState::send`]), undone via checkpoint/rollback. The
+///    makespan is a running max, so the replay exits early the moment
+///    it provably exceeds the incumbent.
+struct SwapScorer<'a> {
+    fabric: FabricState,
+    cache: PathCache,
+    sends: &'a [(usize, usize, u64)],
+    hops: &'a [Vec<u32>],
+    /// Send indices touching each device (as src or dst; same-device
+    /// sends never contribute and are omitted).
+    touch: Vec<Vec<u32>>,
+    /// Σ circuit durations per directed link under the current map.
+    link_sum: Vec<[f64; 2]>,
+    /// Hottest link sum and its identity, for the global bound.
+    max_sum: f64,
+    max_link: (u32, u8),
+    /// Revert journal for candidate link-sum deltas.
+    scratch: Vec<(u32, u8, f64)>,
+}
+
+impl<'a> SwapScorer<'a> {
+    fn new(topology: &Topology, sends: &'a [(usize, usize, u64)], hops: &'a [Vec<u32>]) -> Self {
+        let fabric = FabricState::new(topology.clone());
+        let cache = PathCache::new(&fabric);
+        let cards = topology.cards.max(1);
+        let mut touch = vec![Vec::new(); cards];
+        for (i, &(s, d, _)) in sends.iter().enumerate() {
+            if s == d {
+                continue;
+            }
+            touch[s].push(i as u32);
+            touch[d].push(i as u32);
+        }
+        let edges = fabric.topology.edges.len();
+        Self {
+            fabric,
+            cache,
+            sends,
+            hops,
+            touch,
+            link_sum: vec![[0.0; 2]; edges],
+            max_sum: 0.0,
+            max_link: (0, 0),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Exact replay of every send under `card_of`, launched at t = 0 in
+    /// plan order — bit-identical to the reference scorer — rolled back
+    /// afterwards. Returns +∞ the moment the running makespan exceeds
+    /// `cutoff` (the makespan is a running max, so a prefix already
+    /// above the incumbent rejects the candidate exactly as the full
+    /// replay would) or when any pair is unroutable.
+    fn replay(&mut self, card_of: &dyn Fn(usize) -> usize, cutoff: f64) -> f64 {
+        let cp = self.fabric.checkpoint();
+        let mut last = 0.0f64;
+        for &(src, dst, bytes) in self.sends {
+            let (s, d) = (card_of(src), card_of(dst));
+            if s == d {
+                continue;
+            }
+            match self.cache.get(s, d) {
+                Some(path) => {
+                    let (_, end) = self.fabric.send_cached(path, bytes, 0.0);
+                    last = last.max(end);
+                    if last > cutoff {
+                        self.fabric.rollback(cp);
+                        return f64::INFINITY;
+                    }
+                }
+                None => {
+                    self.fabric.rollback(cp);
+                    return f64::INFINITY;
+                }
+            }
+        }
+        self.fabric.rollback(cp);
+        last
+    }
+
+    /// Recompute the per-link duration sums and hottest link for
+    /// `card_of` from scratch — exact, run at every accepted swap so
+    /// candidate deltas never accumulate float drift.
+    fn rebuild_sums(&mut self, card_of: &dyn Fn(usize) -> usize) {
+        for s in &mut self.link_sum {
+            *s = [0.0; 2];
+        }
+        for &(src, dst, bytes) in self.sends {
+            let (s, d) = (card_of(src), card_of(dst));
+            if s == d {
+                continue;
+            }
+            if let Some(path) = self.cache.get(s, d) {
+                let dur = path.duration(&self.fabric, bytes);
+                for &(e, dir) in path.directed_links() {
+                    self.link_sum[e as usize][dir as usize] += dur;
+                }
+            }
+        }
+        self.max_sum = 0.0;
+        self.max_link = (0, 0);
+        for (e, sums) in self.link_sum.iter().enumerate() {
+            for (dir, &s) in sums.iter().enumerate() {
+                if s > self.max_sum {
+                    self.max_sum = s;
+                    self.max_link = (e as u32, dir as u8);
+                }
+            }
+        }
+    }
+
+    /// Price the swap `(a, b)` against the current map without a
+    /// replay: the exact hop-byte total of the candidate, and an
+    /// occupancy lower bound on its replay makespan (`None` when some
+    /// affected pair is unroutable — the caller must fall back to the
+    /// exact replay, which prices it +∞ in send order).
+    fn swap_delta(
+        &mut self,
+        cur: &Placement,
+        a: usize,
+        b: usize,
+        cur_hop: u64,
+    ) -> (u64, Option<f64>) {
+        debug_assert!(self.scratch.is_empty());
+        let mut hop = cur_hop as i128;
+        let mut routable = true;
+        // Affected sends: touch[a] ∪ touch[b]; sends touching both are
+        // visited once (skipped in b's pass).
+        for side in 0..2 {
+            let dev = if side == 0 { a } else { b };
+            // Index loop: the body mutates `link_sum`/`scratch`, so an
+            // iterator over `touch[dev]` would hold `self` borrowed.
+            let mut k = 0;
+            while k < self.touch[dev].len() {
+                let i = self.touch[dev][k] as usize;
+                k += 1;
+                let (src, dst, bytes) = self.sends[i];
+                if side == 1 && (src == a || dst == a) {
+                    continue;
+                }
+                let swapped = |v: usize| if v == a { b } else if v == b { a } else { v };
+                let (os, od) = (cur.card(src), cur.card(dst));
+                let (ns, nd) = (cur.card(swapped(src)), cur.card(swapped(dst)));
+                hop -= bytes as i128 * self.hops[os][od] as i128;
+                hop += bytes as i128 * self.hops[ns][nd] as i128;
+                match self.cache.get(os, od) {
+                    Some(path) => {
+                        let dur = path.duration(&self.fabric, bytes);
+                        for &(e, dir) in path.directed_links() {
+                            let (ei, di) = (e as usize, dir as usize);
+                            self.scratch.push((e, dir, self.link_sum[ei][di]));
+                            self.link_sum[ei][di] -= dur;
+                        }
+                    }
+                    None => routable = false,
+                }
+                match self.cache.get(ns, nd) {
+                    Some(path) => {
+                        let dur = path.duration(&self.fabric, bytes);
+                        for &(e, dir) in path.directed_links() {
+                            let (ei, di) = (e as usize, dir as usize);
+                            self.scratch.push((e, dir, self.link_sum[ei][di]));
+                            self.link_sum[ei][di] += dur;
+                        }
+                    }
+                    None => routable = false,
+                }
+            }
+        }
+        // The bound: hottest touched link after the deltas, plus the
+        // global maximum whenever the deltas left it untouched (if
+        // they did touch it, its post-delta value is already read
+        // through the journal).
+        let mut lb = 0.0f64;
+        let mut max_untouched = true;
+        for &(e, dir, _) in &self.scratch {
+            if (e, dir) == self.max_link {
+                max_untouched = false;
+            }
+            lb = lb.max(self.link_sum[e as usize][dir as usize]);
+        }
+        if max_untouched {
+            lb = lb.max(self.max_sum);
+        }
+        // Revert the deltas bit-exactly (journaled pre-values, LIFO).
+        while let Some((e, dir, prev)) = self.scratch.pop() {
+            self.link_sum[e as usize][dir as usize] = prev;
+        }
+        debug_assert!(hop >= 0);
+        (hop as u64, if routable { Some(lb) } else { None })
+    }
+}
+
 /// Greedy packer: treat the folded reduction sends as a demand graph
 /// and place devices one at a time, each onto the free card minimizing
 /// demand-weighted hops to the devices already placed (ties toward the
@@ -204,7 +431,130 @@ fn plane_packed(cards: usize, sends: &[(usize, usize, u64)], hops: &[Vec<u32>]) 
 ///
 /// Plans with no reduction traffic (1D/2D carves) return the identity
 /// map untouched.
+///
+/// Scoring is incremental (see [`SwapScorer`]) but every decision —
+/// and therefore the returned map, costs, and evaluation count — is
+/// bit-for-bit identical to [`optimize_reference`], which replays all
+/// sends per candidate.
 pub fn optimize(
+    plan: &PartitionPlan,
+    topology: &Topology,
+    strategy: PlacementStrategy,
+) -> PlacementReport {
+    let _scope = profile::scope("placement.optimize");
+    let t0 = std::time::Instant::now();
+    let cards = topology.cards.max(1);
+    let sends = plan.reduction_sends(cards);
+    let identity = Placement::identity(cards);
+    let hops = hop_matrix(topology);
+    let mut scorer = SwapScorer::new(topology, &sends, &hops);
+    let id_cost = {
+        let _scope = profile::scope("placement.candidate");
+        scorer.replay(&|dev| identity.card(dev), f64::INFINITY)
+    };
+    let id_hop = hop_bytes(&hops, &sends, &identity);
+    let mut evaluations = 1usize;
+
+    let mut best = identity;
+    let mut best_cost = id_cost;
+    let mut best_hop = id_hop;
+    // Strict lexicographic improvement under the identity hop-byte
+    // ceiling.
+    let better = |cost: f64, hop: u64, ref_cost: f64, ref_hop: u64| {
+        hop <= id_hop && (cost < ref_cost || (cost == ref_cost && hop < ref_hop))
+    };
+
+    if !sends.is_empty() && cards > 1 && !matches!(strategy, PlacementStrategy::Identity) {
+        let packed = plane_packed(cards, &sends, &hops);
+        let p_cost = {
+            let _scope = profile::scope("placement.candidate");
+            scorer.replay(&|dev| packed.card(dev), f64::INFINITY)
+        };
+        let p_hop = hop_bytes(&hops, &sends, &packed);
+        evaluations += 1;
+        if better(p_cost, p_hop, best_cost, best_hop) {
+            best = packed;
+            best_cost = p_cost;
+            best_hop = p_hop;
+        }
+        if let PlacementStrategy::LocalSearch { seed } = strategy {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let iters = (cards * cards * 4).clamp(128, 4096);
+            let mut cur = best.clone();
+            let (mut cur_cost, mut cur_hop) = (best_cost, best_hop);
+            // One span for the whole candidate loop: a pruned
+            // candidate is ~100 ns of delta work now, so per-candidate
+            // spans would dominate the armed cost the profiler-overhead
+            // gate bounds.
+            let _scope = profile::scope("placement.candidate");
+            scorer.rebuild_sums(&|dev| cur.card(dev));
+            for _ in 0..iters {
+                let a = rng.next_below(cards as u64) as usize;
+                let b = rng.next_below(cards as u64) as usize;
+                if a == b {
+                    continue;
+                }
+                evaluations += 1;
+                let (c_hop, bound) = scorer.swap_delta(&cur, a, b, cur_hop);
+                // Reference-identical rejections, no replay needed:
+                // above the identity hop ceiling `better` is false for
+                // any cost; a bound beyond the incumbent proves the
+                // replay would land beyond it too.
+                if c_hop > id_hop {
+                    continue;
+                }
+                if let Some(lb) = bound {
+                    if lb > cur_cost * (1.0 + LB_MARGIN) {
+                        continue;
+                    }
+                }
+                let c_cost = scorer.replay(
+                    &|dev| {
+                        let dev = if dev == a {
+                            b
+                        } else if dev == b {
+                            a
+                        } else {
+                            dev
+                        };
+                        cur.card(dev)
+                    },
+                    cur_cost,
+                );
+                if better(c_cost, c_hop, cur_cost, cur_hop) {
+                    cur.swap(a, b);
+                    cur_cost = c_cost;
+                    cur_hop = c_hop;
+                    scorer.rebuild_sums(&|dev| cur.card(dev));
+                }
+            }
+            if better(cur_cost, cur_hop, best_cost, best_hop) {
+                best = cur;
+                best_cost = cur_cost;
+                best_hop = cur_hop;
+            }
+        }
+    }
+
+    PlacementReport {
+        strategy: strategy.name(),
+        placement: best,
+        identity_cost_seconds: id_cost,
+        placed_cost_seconds: best_cost,
+        identity_hop_bytes: id_hop,
+        placed_hop_bytes: best_hop,
+        evaluations,
+        search_seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// The full-replay scorer [`optimize`] is proven against: every
+/// candidate map replays all reduction sends through
+/// [`FabricState::send`] after an occupancy reset. Kept as the
+/// equivalence oracle for the `tests/fastsim.rs` property tests and
+/// the denominator of the `sim_speedup_placement_n256` perfgate floor
+/// (`benches/fast_sim.rs`).
+pub fn optimize_reference(
     plan: &PartitionPlan,
     topology: &Topology,
     strategy: PlacementStrategy,
@@ -223,8 +573,6 @@ pub fn optimize(
     let mut best = identity;
     let mut best_cost = id_cost;
     let mut best_hop = id_hop;
-    // Strict lexicographic improvement under the identity hop-byte
-    // ceiling.
     let better = |cost: f64, hop: u64, ref_cost: f64, ref_hop: u64| {
         hop <= id_hop && (cost < ref_cost || (cost == ref_cost && hop < ref_hop))
     };
@@ -372,6 +720,27 @@ mod tests {
         assert_eq!(a.placement, b.placement);
         assert_eq!(a.placed_cost_seconds.to_bits(), b.placed_cost_seconds.to_bits());
         assert_eq!(a.evaluations, b.evaluations);
+    }
+
+    #[test]
+    fn incremental_scorer_matches_reference_bit_for_bit() {
+        let plan = summa_plan(4, 2, 2, 8192);
+        for topology in [Topology::ring(16), Topology::torus_near_square(16)] {
+            for seed in [7u64, 42] {
+                let strat = PlacementStrategy::LocalSearch { seed };
+                let inc = optimize(&plan, &topology, strat);
+                let full = optimize_reference(&plan, &topology, strat);
+                assert_eq!(inc.placement, full.placement);
+                assert_eq!(inc.placed_cost_seconds.to_bits(), full.placed_cost_seconds.to_bits());
+                assert_eq!(
+                    inc.identity_cost_seconds.to_bits(),
+                    full.identity_cost_seconds.to_bits()
+                );
+                assert_eq!(inc.placed_hop_bytes, full.placed_hop_bytes);
+                assert_eq!(inc.identity_hop_bytes, full.identity_hop_bytes);
+                assert_eq!(inc.evaluations, full.evaluations);
+            }
+        }
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! The offline crate set of this environment has no `rand`, `proptest` or
 //! `criterion`, so this module provides the minimal replacements the rest
 //! of the crate needs: a fast deterministic PRNG ([`rng`]), running
-//! statistics and timing helpers ([`stats`]), and a tiny property-testing
-//! harness with shrinking ([`proptest`]).
+//! statistics and timing helpers ([`stats`]), a tiny property-testing
+//! harness with shrinking ([`proptest`]), and a deterministic parallel
+//! seed runner for the property suites ([`par`]).
 
 pub mod json;
+pub mod par;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

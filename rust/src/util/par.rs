@@ -1,0 +1,138 @@
+//! Deterministic fan-out of independent per-seed work across threads.
+//!
+//! The chaos, serve, and observe property suites replay dozens of
+//! seeded simulations that share nothing — each seed builds its own
+//! sim, fabric, and tracer. [`run_seeds`] (and the generic
+//! [`map_indexed`]) runs them on a scoped thread pool and merges the
+//! results **in input order**, so the output is byte-identical to the
+//! serial loop: every closure performs exactly the same float
+//! operations on the same isolated state regardless of which worker
+//! runs it, and the merge order is the item order, not completion
+//! order. The `tests/fastsim.rs` property suite pins that equivalence
+//! (serial trace JSON == parallel trace JSON, byte for byte).
+//!
+//! Thread count comes from `SYSTO3D_TEST_THREADS` (the parallel-seed
+//! env knob; ≥ 1) and defaults to the machine's available parallelism.
+//! Panics inside a worker — failed assertions included — propagate to
+//! the caller with their original payload.
+
+/// Worker count: `SYSTO3D_TEST_THREADS` when set (≥ 1), else the
+/// machine's available parallelism, else 1.
+pub fn test_threads() -> usize {
+    std::env::var("SYSTO3D_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+}
+
+/// Map `f` over `items` on up to [`test_threads`] scoped workers,
+/// returning results in item order. Workers pull the next index from a
+/// shared atomic counter (no pre-chunking, so an expensive seed cannot
+/// strand a whole chunk behind it); a worker panic is re-raised on the
+/// caller's thread with the original payload.
+pub fn map_indexed<I, T>(items: &[I], f: impl Fn(usize, &I) -> T + Sync) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+{
+    let threads = test_threads().min(items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut done: Vec<(usize, T)> = Vec::with_capacity(items.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let Some(item) = items.get(i) else { break };
+                        local.push((i, f(i, item)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(mut l) => done.append(&mut l),
+                // Re-raise the worker's panic (an assertion failure in
+                // a parallelized property test) as our own.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    done.sort_by_key(|&(i, _)| i);
+    done.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Run `f` for every seed in `seeds`, fanned across threads, results
+/// merged in seed order — the drop-in replacement for the property
+/// suites' `for seed in 0..n` loops. Each closure call must build its
+/// own isolated state (sim, fabric, tracer); nothing is shared between
+/// seeds.
+pub fn run_seeds<T: Send>(
+    seeds: std::ops::Range<u64>,
+    f: impl Fn(u64) -> T + Sync,
+) -> Vec<T> {
+    let list: Vec<u64> = seeds.collect();
+    map_indexed(&list, |_, &seed| f(seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_merge_in_seed_order() {
+        // Uneven per-seed work so completion order differs from seed
+        // order on any multi-core box.
+        let got = run_seeds(0..64, |seed| {
+            let spin = (64 - seed) * 1000;
+            let mut acc = seed;
+            for i in 0..spin {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            (seed, acc & 1)
+        });
+        assert_eq!(got.len(), 64);
+        for (i, &(seed, _)) in got.iter().enumerate() {
+            assert_eq!(seed, i as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_exactly() {
+        let work = |seed: u64| {
+            // Deterministic float mix — the same ops any worker runs.
+            let mut x = seed as f64 + 0.5;
+            for _ in 0..100 {
+                x = (x * 1.000001).sqrt() + seed as f64 * 1e-9;
+            }
+            x.to_bits()
+        };
+        let serial: Vec<u64> = (0..32).map(work).collect();
+        let parallel = run_seeds(0..32, work);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn worker_panics_propagate() {
+        let r = std::panic::catch_unwind(|| {
+            run_seeds(0..16, |seed| {
+                assert!(seed != 7, "seed 7 fails");
+                seed
+            })
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_and_single_inputs_work() {
+        assert!(run_seeds(0..0, |s| s).is_empty());
+        assert_eq!(run_seeds(3..4, |s| s * 2), vec![6]);
+    }
+}

@@ -229,7 +229,9 @@ pub struct Summary {
 
 impl Summary {
     pub fn from_samples(name: &str, mut samples: Vec<f64>) -> Self {
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (failed probe) sorts to the top end
+        // instead of panicking the whole summary.
+        samples.sort_by(f64::total_cmp);
         Self { name: name.to_string(), samples }
     }
 

@@ -2,10 +2,16 @@
 //!
 //! A seeded [`FaultPlan`] — kill / slow-link / spike-queue events at
 //! scheduled instants — is replayed against `simulate_elastic` for
-//! seeds `0..SYSTO3D_CHAOS_SEEDS` (default 64; CI pins 64 so wall time
-//! stays bounded) across ring, torus, and fat-tree fabrics, each with
-//! two hot spares and an aggressive growth watermark so drains,
-//! re-homing, and fabric growth all fire under fault pressure.
+//! seeds `0..SYSTO3D_CHAOS_SEEDS` (default 64; CI pins 128 now that
+//! seeds run in parallel) across ring, torus, and fat-tree fabrics,
+//! each with two hot spares and an aggressive growth watermark so
+//! drains, re-homing, and fabric growth all fire under fault pressure.
+//!
+//! Seeds fan out across threads via `systo3d::util::par::run_seeds`:
+//! every seed builds its own isolated sim, and results merge in seed
+//! order, so the sweep is byte-identical to the serial loop it
+//! replaced (`tests/fastsim.rs` pins serial-vs-parallel trace-JSON
+//! equality). `SYSTO3D_TEST_THREADS` bounds the worker count.
 //!
 //! Properties asserted for every (seed, topology):
 //! * **no shard lost** — every planned shard executes exactly once,
@@ -28,6 +34,7 @@ use systo3d::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStr
 use systo3d::fabric::Topology;
 use systo3d::gemm::{matmul_blocked, Matrix};
 use systo3d::systolic::ArraySize;
+use systo3d::util::par::run_seeds;
 
 /// A deliberately tiny design so hundreds of chaos replays stay cheap.
 fn mini_design() -> OffchipDesign {
@@ -42,18 +49,18 @@ fn seeds() -> u64 {
     std::env::var("SYSTO3D_CHAOS_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
 }
 
-/// 8 active cards on each fabric family, 2 hot spares attached.
-fn scenarios() -> Vec<ClusterSim> {
+fn families() -> [Topology; 3] {
     [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)]
-        .into_iter()
-        .map(|topology| {
-            ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
-                .topology(topology)
-                .spares(2)
-                .watermark(Some(0.75))
-                .build()
-        })
-        .collect()
+}
+
+/// 8 active cards on the given fabric family, 2 hot spares attached.
+/// Each parallel seed builds its own instance — sims share nothing.
+fn scenario(topology: Topology) -> ClusterSim {
+    ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
+        .topology(topology)
+        .spares(2)
+        .watermark(Some(0.75))
+        .build()
 }
 
 fn chaos_plan() -> PartitionPlan {
@@ -63,13 +70,14 @@ fn chaos_plan() -> PartitionPlan {
 #[test]
 fn chaos_loses_no_shard_and_completes_every_drain() {
     let plan = chaos_plan();
-    for sim in scenarios() {
-        let name = sim.topology.name();
+    for topology in families() {
+        let name = topology.name();
         // Healthy makespan bounds the fault horizon, so kills land
         // mid-run rather than after the barrier.
-        let horizon = sim.simulate(&plan).makespan_seconds;
+        let horizon = scenario(topology.clone()).simulate(&plan).makespan_seconds;
         assert!(horizon > 0.0, "{name}");
-        for seed in 0..seeds() {
+        run_seeds(0..seeds(), |seed| {
+            let sim = scenario(topology.clone());
             let faults = FaultPlan::seeded(seed, 10, horizon);
             let out = sim
                 .simulate_elastic(&plan, &faults)
@@ -93,17 +101,18 @@ fn chaos_loses_no_shard_and_completes_every_drain() {
                     "{name} seed {seed}: event after the final barrier: {e:?}"
                 );
             }
-        }
+        });
     }
 }
 
 #[test]
 fn chaos_replays_bit_identically() {
     let plan = chaos_plan();
-    for sim in scenarios() {
-        let name = sim.topology.name();
-        let horizon = sim.simulate(&plan).makespan_seconds;
-        for seed in 0..seeds() {
+    for topology in families() {
+        let name = topology.name();
+        let horizon = scenario(topology.clone()).simulate(&plan).makespan_seconds;
+        run_seeds(0..seeds(), |seed| {
+            let sim = scenario(topology.clone());
             let faults = FaultPlan::seeded(seed, 10, horizon);
             let a = sim.simulate_elastic(&plan, &faults).unwrap();
             let b = sim.simulate_elastic(&plan, &faults).unwrap();
@@ -123,7 +132,7 @@ fn chaos_replays_bit_identically() {
                     "{name} seed {seed}"
                 );
             }
-        }
+        });
     }
 }
 
@@ -131,16 +140,10 @@ fn chaos_replays_bit_identically() {
 fn chaos_traces_replay_bit_identically() {
     use systo3d::trace::{chrome_trace_json, Tracer};
     let plan = chaos_plan();
-    for topology in [Topology::ring(8), Topology::torus2d(4, 2), Topology::fat_tree(8)] {
+    for topology in families() {
         let name = topology.name();
-        let horizon = ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
-            .topology(topology.clone())
-            .spares(2)
-            .watermark(Some(0.75))
-            .build()
-            .simulate(&plan)
-            .makespan_seconds;
-        for seed in 0..seeds().min(8) {
+        let horizon = scenario(topology.clone()).simulate(&plan).makespan_seconds;
+        run_seeds(0..seeds().min(8), |seed| {
             let faults = FaultPlan::seeded(seed, 10, horizon);
             let run = || {
                 let sim = ClusterSim::builder(Fleet::uniform(10, "mini", mini_design()))
@@ -156,7 +159,7 @@ fn chaos_traces_replay_bit_identically() {
             let (jb, mb) = run();
             assert_eq!(ma.to_bits(), mb.to_bits(), "{name} seed {seed}: makespan drifted");
             assert_eq!(ja, jb, "{name} seed {seed}: trace streams diverged");
-        }
+        });
     }
 }
 

@@ -1,0 +1,201 @@
+//! Equivalence proofs for the fast-sim core.
+//!
+//! The PR that introduced incremental placement scoring, O(1)
+//! occupancy checkpoints, and parallel seed execution promised one
+//! thing above all: **no observable result changes**. This suite holds
+//! each rebuilt loop to its slow predecessor bit for bit:
+//!
+//! * [`optimize`] (incremental `SwapScorer`: hop deltas, link-sum
+//!   lower bounds, early-exit cached replays) against
+//!   [`optimize_reference`] (full send replay per candidate) — same
+//!   placement map, same cost bits, same hop-bytes, same evaluation
+//!   count — across seeds × fabric families × fleet sizes up to 256
+//!   cards;
+//! * `FabricState::checkpoint`/`rollback` against the state that never
+//!   speculated: occupancy totals, peaks, and subsequent send timings
+//!   all match exactly under randomized traffic;
+//! * a parallel chaos-seed sweep (`util::par::run_seeds`) against the
+//!   serial loop it replaced: byte-identical Chrome trace JSON and
+//!   makespan bits per seed.
+//!
+//! `benches/fast_sim.rs` measures the speedups these rewrites exist
+//! for; this file is the license to believe them.
+
+use systo3d::blocked::{Level1Blocking, OffchipDesign};
+use systo3d::cluster::{ClusterSim, FaultPlan, Fleet, PartitionPlan, PartitionStrategy};
+use systo3d::fabric::{FabricState, Topology};
+use systo3d::placement::{optimize, optimize_reference, PlacementStrategy};
+use systo3d::systolic::ArraySize;
+use systo3d::trace::{chrome_trace_json, Tracer};
+use systo3d::util::par::run_seeds;
+use systo3d::util::rng::Xoshiro256;
+
+/// A 2.5D plan whose device count matches `cards` (p · q · c), sized
+/// so every extent divides the Table-I blockings.
+fn plan_for(cards: usize) -> PartitionPlan {
+    let (p, q, c) = match cards {
+        16 => (2, 2, 4),
+        64 => (4, 4, 4),
+        256 => (8, 8, 4),
+        other => panic!("no plan shape for {other} cards"),
+    };
+    PartitionPlan::new(PartitionStrategy::Summa25D { p, q, c }, 4096, 4096, 4096).unwrap()
+}
+
+fn assert_reports_match(
+    plan: &PartitionPlan,
+    topology: &Topology,
+    strategy: PlacementStrategy,
+    label: &str,
+) {
+    let fast = optimize(plan, topology, strategy);
+    let slow = optimize_reference(plan, topology, strategy);
+    assert_eq!(fast.placement, slow.placement, "{label}: maps diverged");
+    assert_eq!(
+        fast.placed_cost_seconds.to_bits(),
+        slow.placed_cost_seconds.to_bits(),
+        "{label}: placed cost bits diverged"
+    );
+    assert_eq!(
+        fast.identity_cost_seconds.to_bits(),
+        slow.identity_cost_seconds.to_bits(),
+        "{label}: identity cost bits diverged"
+    );
+    assert_eq!(fast.placed_hop_bytes, slow.placed_hop_bytes, "{label}: hop-bytes diverged");
+    assert_eq!(fast.identity_hop_bytes, slow.identity_hop_bytes, "{label}");
+    assert_eq!(fast.evaluations, slow.evaluations, "{label}: evaluation counts diverged");
+}
+
+/// The tentpole equivalence: every decision the incremental scorer
+/// makes — prune, replay, accept — lands exactly where the full-replay
+/// oracle lands, so the two searches return identical reports.
+#[test]
+fn incremental_optimize_matches_full_replay_oracle() {
+    for cards in [16usize, 64] {
+        let plan = plan_for(cards);
+        for topology in [
+            Topology::ring(cards),
+            Topology::torus_near_square(cards),
+            Topology::fat_tree(cards),
+        ] {
+            for seed in [7u64, 42] {
+                let label = format!("{} n={cards} seed={seed}", topology.name());
+                let strategy = PlacementStrategy::LocalSearch { seed };
+                assert_reports_match(&plan, &topology, strategy, &label);
+            }
+        }
+        // The non-search strategies ride the same scorer for their
+        // identity / packed pricing.
+        let torus = Topology::torus_near_square(cards);
+        assert_reports_match(&plan, &torus, PlacementStrategy::Identity, "identity");
+        assert_reports_match(&plan, &torus, PlacementStrategy::PlanePacked, "packed");
+    }
+}
+
+/// The full 256-card fleet the perfgate floor is measured on. One
+/// seed, one fabric: the oracle replays every send for each of its
+/// 4096 candidates, so this is by far the most expensive equivalence
+/// in the suite — the breadth lives in the 16/64-card sweep above.
+#[test]
+fn incremental_optimize_matches_oracle_at_256_cards() {
+    let plan = plan_for(256);
+    let topology = Topology::torus_near_square(256);
+    let strategy = PlacementStrategy::LocalSearch { seed: 7 };
+    assert_reports_match(&plan, &topology, strategy, "torus n=256 seed=7");
+}
+
+/// Randomized traffic, speculative traffic, rollback: the fabric must
+/// be indistinguishable — occupancy totals, peak, and the timing of
+/// every subsequent send — from a fabric that never speculated.
+#[test]
+fn checkpoint_rollback_is_invisible_under_random_traffic() {
+    for topology in
+        [Topology::ring(12), Topology::torus2d(4, 3), Topology::fat_tree(8)]
+    {
+        let cards = topology.cards;
+        run_seeds(0..16, |seed| {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let mut speculated = FabricState::new(topology.clone());
+            let mut witness = FabricState::new(topology.clone());
+            let draw = |rng: &mut Xoshiro256| {
+                let src = rng.next_below(cards as u64) as usize;
+                let dst = rng.next_below(cards as u64) as usize;
+                let bytes = (rng.next_below(64) + 1) << 16;
+                (src, dst, bytes)
+            };
+            for round in 0..8 {
+                // Committed traffic lands on both fabrics.
+                let (src, dst, bytes) = draw(&mut rng);
+                if src != dst {
+                    let a = speculated.send(src, dst, bytes, round as f64);
+                    let b = witness.send(src, dst, bytes, round as f64);
+                    assert_eq!(a, b, "seed {seed} round {round}: committed send");
+                }
+                // Speculative traffic lands on one and rolls back.
+                let cp = speculated.checkpoint();
+                for _ in 0..4 {
+                    let (src, dst, bytes) = draw(&mut rng);
+                    if src != dst {
+                        speculated.send(src, dst, bytes, 0.0);
+                    }
+                }
+                speculated.rollback(cp);
+                assert_eq!(
+                    speculated.busy_seconds_total().to_bits(),
+                    witness.busy_seconds_total().to_bits(),
+                    "seed {seed} round {round}: busy total drifted"
+                );
+                assert_eq!(
+                    speculated.max_busy_seconds().to_bits(),
+                    witness.max_busy_seconds().to_bits(),
+                    "seed {seed} round {round}: peak drifted"
+                );
+            }
+            // Final probe: a fresh send prices identically, so the
+            // free-time tables match too, not just the gauges.
+            let probe = speculated.send(0, cards - 1, 1 << 20, 100.0);
+            assert_eq!(probe, witness.send(0, cards - 1, 1 << 20, 100.0), "seed {seed}");
+        });
+    }
+}
+
+fn chaos_sim(topology: &Topology) -> ClusterSim {
+    let design = OffchipDesign {
+        blocking: Level1Blocking::new(ArraySize::new(4, 4, 2, 2), 8, 8),
+        fmax_mhz: 400.0,
+        controller_efficiency: 0.97,
+    };
+    ClusterSim::builder(Fleet::uniform(10, "mini", design))
+        .topology(topology.clone())
+        .spares(2)
+        .watermark(Some(0.75))
+        .trace(Tracer::recording())
+        .build()
+}
+
+/// The parallel seed runner must be a pure reordering of work: the
+/// per-seed trace JSON and makespan bits match a plain serial loop
+/// byte for byte, whatever thread count the box offers.
+#[test]
+fn parallel_chaos_seeds_match_serial_byte_for_byte() {
+    let topology = Topology::torus2d(4, 2);
+    let plan =
+        PartitionPlan::new(PartitionStrategy::Summa25D { p: 2, q: 2, c: 2 }, 96, 96, 96)
+            .unwrap();
+    let horizon = chaos_sim(&topology).simulate(&plan).makespan_seconds;
+    let one = |seed: u64| {
+        let sim = chaos_sim(&topology);
+        let out = sim.simulate_elastic(&plan, &FaultPlan::seeded(seed, 10, horizon)).unwrap();
+        (
+            chrome_trace_json(&sim.trace.snapshot()),
+            out.schedule.makespan_seconds.to_bits(),
+        )
+    };
+    let serial: Vec<(String, u64)> = (0..8).map(one).collect();
+    let parallel = run_seeds(0..8, one);
+    assert_eq!(serial.len(), parallel.len());
+    for (seed, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(s.1, p.1, "seed {seed}: makespan bits diverged");
+        assert_eq!(s.0, p.0, "seed {seed}: trace JSON diverged");
+    }
+}

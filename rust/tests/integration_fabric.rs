@@ -93,8 +93,8 @@ fn collectives_price_lower_on_wider_fabrics() {
     let ready = [0.0; 12];
     for algo in [ReduceAlgo::Direct, ReduceAlgo::Tree, ReduceAlgo::Ring] {
         let sched = CollectiveSchedule::build(algo, 0, &others, bytes);
-        let ring = sched.price(&FabricState::new(Topology::ring(12)), &ready).unwrap();
-        let mesh = sched.price(&FabricState::new(Topology::full_mesh(12)), &ready).unwrap();
+        let ring = sched.price(&mut FabricState::new(Topology::ring(12)), &ready).unwrap();
+        let mesh = sched.price(&mut FabricState::new(Topology::full_mesh(12)), &ready).unwrap();
         assert!(
             mesh <= ring + 1e-12,
             "{}: mesh {mesh} vs ring {ring}",

@@ -5,7 +5,10 @@
 //! exact set equality against the injected [`FaultPlan`] — 100%
 //! recall AND 100% precision — for seeds `0..SYSTO3D_OBSERVE_SEEDS`
 //! (default 32) across ring, torus, and fat-tree fabrics, plus the
-//! zero-false-positive check on fault-free runs.
+//! zero-false-positive check on fault-free runs. Seeds fan across
+//! threads via `systo3d::util::par::run_seeds` with per-seed isolated
+//! tracers, merged in seed order (`SYSTO3D_TEST_THREADS` bounds the
+//! workers).
 //!
 //! The second half validates the SLO burn-rate growth path: an
 //! overload trace on which raw queue depth never crosses the armed
@@ -91,7 +94,10 @@ fn localizer_has_perfect_recall_and_precision_across_seeds_and_fabrics() {
     let mut total_spikes = 0usize;
     for topo in families() {
         let name = topo.name();
-        for seed in 0..seeds() {
+        // Fan seeds across threads: each closure builds its own fault
+        // plan and tracer, asserts in place, and returns its injected
+        // counts, merged in seed order below.
+        let counts = systo3d::util::par::run_seeds(0..seeds(), |seed| {
             // Keep the slow-link / spike-queue faults; drop the kills.
             // Deaths are drained by the elastic machinery (validated in
             // chaos.rs) and a healed fabric removes the very cable a
@@ -106,8 +112,6 @@ fn localizer_has_perfect_recall_and_precision_across_seeds_and_fabrics() {
                     .collect(),
             };
             let (want_links, want_cards) = injected(&faults, &topo);
-            total_links += want_links.len();
-            total_spikes += want_cards.len();
 
             let tracer = Tracer::recording();
             let out = run_elastic_schedule_traced(
@@ -145,6 +149,11 @@ fn localizer_has_perfect_recall_and_precision_across_seeds_and_fabrics() {
             for c in &found.stalled_cards {
                 assert!(c.gap_seconds >= gap_threshold, "{name} seed {seed}");
             }
+            (want_links.len(), want_cards.len())
+        });
+        for (links, spikes) in counts {
+            total_links += links;
+            total_spikes += spikes;
         }
     }
     // The sweep must actually exercise both detectors.

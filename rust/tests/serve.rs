@@ -27,7 +27,9 @@ fn overload_gen(seed: u64, cfg: &ServeConfig, factor: f64) -> WorkloadGen {
 /// served, or shed with a reason. Nothing admitted is lost.
 #[test]
 fn no_admitted_request_is_lost_under_chaos_kills() {
-    for seed in 1u64..=5 {
+    // Seeds fan across threads; each closure builds its own config,
+    // generator, and sim, so results match the serial loop exactly.
+    systo3d::util::par::run_seeds(1..6, |seed| {
         let cfg = ServeConfig {
             servers: 3,
             hot_spares: 1,
@@ -59,7 +61,7 @@ fn no_admitted_request_is_lost_under_chaos_kills() {
             "seed {seed}: the kills must land mid-batch: {:?}",
             out.events
         );
-    }
+    });
 }
 
 /// Three same-priority tenants weighted 3:2:1, all permanently
